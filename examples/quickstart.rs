@@ -1,0 +1,44 @@
+//! Quickstart: bring up AMP4EC on the default 3-node heterogeneous edge
+//! cluster, run one inference, and print where everything went.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use amp4ec::config::AmpConfig;
+use amp4ec::server::{single_request, EdgeServer};
+use amp4ec::workload::InputPool;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = AmpConfig::paper_cluster(&amp4ec::artifacts_dir());
+    println!("starting AMP4EC edge cluster:");
+    for n in &cfg.nodes {
+        println!("  {:<10} cpu={:<4} mem={} MB", n.name, n.cpu, n.mem_mb);
+    }
+
+    let server = EdgeServer::start(cfg)?;
+    println!("\nmodel    : {} ({} params)", server.manifest.model,
+             server.manifest.total_params);
+    println!("plan     : {:?} layers per partition", server.plan().layer_sizes());
+    println!("placement: partitions on nodes {:?}",
+             server.service().deployment_nodes());
+
+    // One synthetic 96x96x3 image.
+    let pool = InputPool::new(&server.request_shape(), 1, 42);
+    let (logits, ms) = single_request(&server, pool.get(0))?;
+
+    let top1 = logits
+        .data
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, v)| (i, *v))
+        .unwrap();
+    println!("\ninference: {ms:.1} ms end-to-end across the pipeline");
+    println!("top-1    : class {} (logit {:.3})", top1.0, top1.1);
+
+    // Parity against the AOT-recorded golden output.
+    let diff = server.golden_check()?;
+    println!("golden   : max abs diff {diff:.2e} (PASS)");
+    Ok(())
+}

@@ -1,0 +1,57 @@
+//! Resource-profile sweep (paper Table II): average inference time under
+//! the High (1.0 CPU / 1 GB), Medium (0.6 / 512 MB) and Low (0.4 / 512 MB)
+//! profiles. The paper reports 234.56 / 389.27 / 583.91 ms — ratios
+//! 1 : 1.66 : 2.49, i.e. inverse CPU shares; the same ordering and ratios
+//! emerge from the cluster's cgroup-style time dilation here.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example resource_profiles
+//! ```
+
+use amp4ec::cluster::Profile;
+use amp4ec::config::AmpConfig;
+use amp4ec::server::{single_request, EdgeServer};
+use amp4ec::util::stats::Summary;
+use amp4ec::workload::InputPool;
+
+const ITERATIONS: usize = 20;
+
+fn main() -> anyhow::Result<()> {
+    println!(
+        "{:<8} {:>5} {:>8} {:>12} {:>12} {:>12}",
+        "profile", "cpu", "memMB", "mean ms", "p50 ms", "p95 ms"
+    );
+    let mut means = Vec::new();
+    for profile in [Profile::High, Profile::Medium, Profile::Low] {
+        let spec = profile.spec();
+        // A 3-node cluster of identical nodes at this profile.
+        let cfg = AmpConfig::profile_cluster(&amp4ec::artifacts_dir(), profile, 3);
+        let server = EdgeServer::start(cfg)?;
+        let pool = InputPool::new(&server.request_shape(), 4, 21);
+        let mut lat = Summary::new();
+        // Warm-up, then timed sequential inferences (the paper's "average
+        // inference time" is per-request service latency).
+        single_request(&server, pool.get(0))?;
+        for i in 0..ITERATIONS {
+            let (_, ms) = single_request(&server, pool.get(i))?;
+            lat.record(ms);
+        }
+        println!(
+            "{:<8} {:>5} {:>8} {:>12.2} {:>12.2} {:>12.2}",
+            profile.name(),
+            spec.cpu_fraction,
+            spec.mem_limit_mb,
+            lat.mean(),
+            lat.p50(),
+            lat.p95()
+        );
+        means.push((profile.name(), lat.mean()));
+    }
+
+    let high = means[0].1;
+    println!("\nratios vs High (paper: 1.00 / 1.66 / 2.49):");
+    for (name, m) in &means {
+        println!("  {name:<8} {:.2}", m / high);
+    }
+    Ok(())
+}

@@ -1,0 +1,185 @@
+"""AOT export: lower every model block (and the monolithic model) to HLO
+*text* and write the artifacts the rust runtime consumes.
+
+Why text and not ``.serialize()``: jax >= 0.5 emits HloModuleProto with
+64-bit instruction ids which the xla crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly.  See /opt/xla-example/README.md.
+
+Outputs (``artifacts/`` by default):
+  block_NN_bB.hlo.txt   -- per-block HLO, signature (w_vec f32[P], x) -> (y,)
+  block_NN.weights.bin  -- the block's flattened f32 (little-endian) weights
+  model_bB.hlo.txt      -- monolithic whole model (the paper's baseline)
+  model.weights.bin     -- all weights concatenated in block order
+  golden_input_b1.bin / golden_output_b1.bin -- runtime parity check pair
+  manifest.json         -- blocks, 141-layer module list, shapes, files
+
+Weights ship as a runtime *argument* (sidecar .bin), not as HLO constants:
+it keeps HLO small/fast to parse and makes the model-transfer bytes explicit
+-- that payload is exactly what AMP4EC's deployer accounts as network
+bandwidth in Table I.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import math
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as model_lib
+
+
+def to_hlo_text(lowered) -> str:
+    """jax lowering -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_block(block: model_lib.BlockDef, batch: int) -> str:
+    """Lower one block to HLO text with shapes fixed at ``batch``."""
+    fn = model_lib.make_block_callable(block)
+    w_spec = jax.ShapeDtypeStruct((block.param_count,), jnp.float32)
+    h, w, c = block.in_shape
+    if block.name == "classifier":
+        x_spec = jax.ShapeDtypeStruct((batch, h, w, c), jnp.float32)
+    else:
+        x_spec = jax.ShapeDtypeStruct((batch, h, w, c), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(w_spec, x_spec))
+
+
+def lower_monolithic(blocks: list[model_lib.BlockDef], batch: int,
+                     input_hw: int) -> str:
+    fn = model_lib.make_monolithic_callable(blocks)
+    total = sum(b.param_count for b in blocks)
+    w_spec = jax.ShapeDtypeStruct((total,), jnp.float32)
+    x_spec = jax.ShapeDtypeStruct((batch, input_hw, input_hw, 3), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(w_spec, x_spec))
+
+
+def write_f32(path: pathlib.Path, arr: jax.Array) -> int:
+    data = np.asarray(arr, dtype="<f4").tobytes()
+    path.write_bytes(data)
+    return len(data)
+
+
+def sha256(path: pathlib.Path) -> str:
+    return hashlib.sha256(path.read_bytes()).hexdigest()
+
+
+def export(out_dir: pathlib.Path, *, input_hw: int, batch_sizes: list[int],
+           seed: int, skip_monolithic: bool = False,
+           verbose: bool = True) -> dict:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    t0 = time.time()
+    blocks = model_lib.build_blocks(input_hw)
+    params = model_lib.init_params(blocks, seed)
+
+    manifest: dict = {
+        "model": "mobilenet_v2",
+        "version": 1,
+        "input_hw": input_hw,
+        "input_channels": 3,
+        "num_classes": model_lib.NUM_CLASSES,
+        "batch_sizes": batch_sizes,
+        "seed": seed,
+        "total_params": int(sum(b.param_count for b in blocks)),
+        "blocks": [],
+    }
+
+    for b in blocks:
+        w_vec = model_lib.flatten_block_params(params, b)
+        wfile = out_dir / f"block_{b.index:02d}.weights.bin"
+        nbytes = write_f32(wfile, w_vec)
+        artifacts = {}
+        for batch in batch_sizes:
+            hlo = lower_block(b, batch)
+            afile = out_dir / f"block_{b.index:02d}_b{batch}.hlo.txt"
+            afile.write_text(hlo)
+            artifacts[str(batch)] = afile.name
+            if verbose:
+                print(f"  block {b.index:02d} ({b.name}) b{batch}: "
+                      f"{len(hlo)//1024} KiB hlo", flush=True)
+        manifest["blocks"].append({
+            "index": b.index,
+            "name": b.name,
+            "in_shape": list(b.in_shape),
+            "out_shape": list(b.out_shape),
+            "param_count": int(b.param_count),
+            "weights_file": wfile.name,
+            "weights_bytes": nbytes,
+            "weights_sha256": sha256(wfile),
+            "artifacts": artifacts,
+            "layers": [l.to_json() for l in b.layers],
+        })
+
+    # Monolithic baseline artifact.
+    if not skip_monolithic:
+        w_full = jnp.concatenate(
+            [model_lib.flatten_block_params(params, b) for b in blocks]
+        )
+        wfile = out_dir / "model.weights.bin"
+        write_f32(wfile, w_full)
+        mono_artifacts = {}
+        for batch in batch_sizes:
+            hlo = lower_monolithic(blocks, batch, input_hw)
+            afile = out_dir / f"model_b{batch}.hlo.txt"
+            afile.write_text(hlo)
+            mono_artifacts[str(batch)] = afile.name
+            if verbose:
+                print(f"  monolithic b{batch}: {len(hlo)//1024} KiB hlo",
+                      flush=True)
+        manifest["monolithic"] = {
+            "weights_file": wfile.name,
+            "weights_bytes": int(w_full.size * 4),
+            "artifacts": mono_artifacts,
+        }
+
+    # Golden parity pair (batch 1): rust executes the chain / the monolith
+    # and must match this output to tolerance.
+    key = jax.random.PRNGKey(seed + 1)
+    x = jax.random.normal(key, (1, input_hw, input_hw, 3), jnp.float32)
+    y = model_lib.forward_full(params, x, blocks)
+    write_f32(out_dir / "golden_input_b1.bin", x)
+    write_f32(out_dir / "golden_output_b1.bin", y)
+    manifest["golden"] = {
+        "input": "golden_input_b1.bin",
+        "output": "golden_output_b1.bin",
+        "batch": 1,
+        "in_shape": [1, input_hw, input_hw, 3],
+        "out_shape": [1, model_lib.NUM_CLASSES],
+        "tolerance": 1e-3,
+    }
+
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    if verbose:
+        print(f"export done in {time.time() - t0:.1f}s -> {out_dir}")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--input-hw", type=int, default=model_lib.INPUT_HW)
+    ap.add_argument("--batch-sizes", type=int, nargs="+",
+                    default=list(model_lib.BATCH_SIZES))
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--skip-monolithic", action="store_true")
+    args = ap.parse_args()
+    export(pathlib.Path(args.out_dir), input_hw=args.input_hw,
+           batch_sizes=args.batch_sizes, seed=args.seed,
+           skip_monolithic=args.skip_monolithic)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""L1 Pallas kernels for AMP4EC's MobileNetV2 workload.
+
+``matmul``     -- tiled matmul + bias + activation (pointwise convs, im2col
+                  convs, classifier).
+``depthwise``  -- depthwise 3x3 conv (inverted-residual spatial stage).
+``ref``        -- pure-jnp oracles used by the pytest correctness suite.
+"""
+
+from . import depthwise, matmul, ref  # noqa: F401
+
+__all__ = ["depthwise", "matmul", "ref"]

@@ -1,0 +1,130 @@
+"""L1 Pallas kernel: depthwise 3x3 convolution (stride 1 or 2, SAME pad).
+
+MobileNetV2's inverted-residual blocks interleave the pointwise matmuls
+(see :mod:`matmul`) with depthwise 3x3 convs.  Depthwise convs are
+memory-bound (9 MACs per element loaded), so the kernel is structured for
+bandwidth, not the MXU:
+
+  * grid = (batch, channel-blocks); each step owns a full padded spatial
+    plane for a slab of channels -- ``(1, Hp, Wp, bc)`` -- which at every
+    MobileNetV2 stage on a 96x96 input is <= 98*98*128*4B = 4.7 MiB, well
+    inside VMEM;
+  * the 3x3 taps unroll into 9 shifted multiply-adds over the VPU (fully
+    vectorized over W and C); there is no matmul to feed the MXU, which is
+    the correct TPU mapping for depthwise (channels stay in lanes);
+  * bias + activation are fused, output written once.
+
+Spatial SAME-padding happens in the wrapper (outside the kernel) so the
+BlockSpec sees a static padded shape; channel padding rounds C up to the
+channel-block size.  ``interpret=True`` as everywhere (see matmul.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BC = 128
+
+
+def same_pad(size: int, kernel: int, stride: int) -> tuple[int, int]:
+    """TensorFlow-style SAME padding amounts (lo, hi) for one dimension."""
+    out = -(-size // stride)  # ceil div
+    total = max((out - 1) * stride + kernel - size, 0)
+    lo = total // 2
+    return lo, total - lo
+
+
+def _dw_kernel(x_ref, w_ref, b_ref, o_ref, *, stride: int, out_h: int,
+               out_w: int, activation: str):
+    """One (batch, channel-block) step: 9 shifted MACs over the plane."""
+    x = x_ref[0]  # [Hp, Wp, bc]
+    acc = jnp.zeros((out_h, out_w, x.shape[-1]), jnp.float32)
+    for dy in range(3):
+        for dx in range(3):
+            window = jax.lax.slice(
+                x,
+                (dy, dx, 0),
+                (dy + (out_h - 1) * stride + 1, dx + (out_w - 1) * stride + 1,
+                 x.shape[-1]),
+                (stride, stride, 1),
+            )
+            acc += window * w_ref[dy, dx]
+    out = acc + b_ref[0]
+    if activation == "relu6":
+        out = jnp.minimum(jnp.maximum(out, 0.0), 6.0)
+    elif activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    o_ref[0] = out
+
+
+def depthwise_conv3x3(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    stride: int = 1,
+    activation: str = "relu6",
+    bc: int = DEFAULT_BC,
+) -> jax.Array:
+    """Depthwise 3x3 conv, NHWC, SAME padding.
+
+    Args:
+      x: ``[B, H, W, C]`` f32.
+      w: ``[3, 3, C]`` f32 per-channel taps.
+      b: ``[C]`` f32 bias.
+      stride: 1 or 2.
+      activation: "none" | "relu" | "relu6" (fused).
+      bc: channel-block size for the grid.
+    """
+    if x.ndim != 4:
+        raise ValueError(f"x must be NHWC rank 4, got {x.shape}")
+    if w.shape[:2] != (3, 3) or w.shape[2] != x.shape[3]:
+        raise ValueError(f"w must be [3,3,C={x.shape[3]}], got {w.shape}")
+    if stride not in (1, 2):
+        raise ValueError(f"stride must be 1 or 2, got {stride}")
+    B, H, W, C = x.shape
+    ph = same_pad(H, 3, stride)
+    pw = same_pad(W, 3, stride)
+    out_h = -(-H // stride)
+    out_w = -(-W // stride)
+
+    bc_ = min(bc, C)
+    Cp = (C + bc_ - 1) // bc_ * bc_
+    xp = jnp.pad(x, ((0, 0), ph, pw, (0, Cp - C)))
+    wp = jnp.pad(w, ((0, 0), (0, 0), (0, Cp - C)))
+    bp = jnp.pad(b.reshape(1, -1), ((0, 0), (0, Cp - C)))
+    Hp, Wp = xp.shape[1], xp.shape[2]
+
+    grid = (B, Cp // bc_)
+    out = pl.pallas_call(
+        functools.partial(
+            _dw_kernel, stride=stride, out_h=out_h, out_w=out_w,
+            activation=activation,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Hp, Wp, bc_), lambda n, c: (n, 0, 0, c)),
+            pl.BlockSpec((3, 3, bc_), lambda n, c: (0, 0, c)),
+            pl.BlockSpec((1, bc_), lambda n, c: (0, c)),
+        ],
+        out_specs=pl.BlockSpec((1, out_h, out_w, bc_), lambda n, c: (n, 0, 0, c)),
+        out_shape=jax.ShapeDtypeStruct((B, out_h, out_w, Cp), jnp.float32),
+        interpret=True,
+    )(xp, wp, bp)
+    if Cp != C:
+        out = out[..., :C]
+    return out
+
+
+def vmem_footprint_bytes(h: int, w: int, stride: int, bc: int = DEFAULT_BC) -> int:
+    """Estimated VMEM working set of one grid step, for DESIGN §Perf."""
+    ph = sum(same_pad(h, 3, stride))
+    pw = sum(same_pad(w, 3, stride))
+    in_plane = (h + ph) * (w + pw) * bc * 4
+    out_plane = (-(-h // stride)) * (-(-w // stride)) * bc * 4
+    taps = 9 * bc * 4 + bc * 4
+    return in_plane + out_plane + taps

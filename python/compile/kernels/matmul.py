@@ -1,0 +1,188 @@
+"""L1 Pallas kernel: tiled matmul with fused bias + activation epilogue.
+
+This is the compute hot-spot of AMP4EC's MobileNetV2 workload: every 1x1
+(pointwise) convolution, every im2col'd full convolution, and the classifier
+head lower to this kernel.  MobileNetV2's FLOPs are ~90% pointwise convs, so
+this single kernel covers the model's roofline-relevant work.
+
+TPU-idiomatic structure (see DESIGN.md "Hardware adaptation"):
+  * the (M, N, K) iteration space is tiled into VMEM-sized blocks via
+    BlockSpec -- default 128x128x128 f32 tiles keep the working set
+    (x + w + acc + out = 4 * 128*128*4B = 256 KiB) far under the ~16 MiB
+    VMEM budget and match the 128x128 MXU systolic array;
+  * partial products accumulate in an f32 VMEM scratch across the K grid
+    dimension (K innermost -> the scratch is live for one (i, j) tile);
+  * the bias add + activation epilogue is fused into the last K step, so
+    the output tile is written to HBM exactly once.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; interpret mode lowers the kernel to plain HLO, which is what
+the rust runtime executes.  Real-TPU perf is estimated in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Activation tags understood by the fused epilogue.
+ACTIVATIONS = ("none", "relu6", "relu")
+
+# Default tile-size caps. The M cap is MXU-shaped; the N/K caps are larger
+# so small-M layers (the classifier head sees M = batch) don't shatter into
+# long grid loops: a [1, 1280] @ [1280, 1000] matmul under 128^3 tiles is an
+# 80-step serial grid, under 128x256x1024 it is 2 steps -- 6.5x faster
+# end-to-end on the CPU interpret path and the same VMEM budget class on
+# TPU (128*1024*4B x-tile + 1024*256*4B w-tile + acc/out ~= 1.9 MiB << 16
+# MiB). See EXPERIMENTS.md §Perf iteration 1.
+DEFAULT_BM = 128
+DEFAULT_BN = 256
+DEFAULT_BK = 1024
+
+
+def _epilogue(acc, bias, activation: str):
+    out = acc + bias
+    if activation == "relu6":
+        out = jnp.minimum(jnp.maximum(out, 0.0), 6.0)
+    elif activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation!r}")
+    return out
+
+
+def _matmul_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, n_k: int, activation: str):
+    """One (i, j, k) grid step: acc += x_tile @ w_tile, epilogue on last k."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _finish():
+        o_ref[...] = _epilogue(acc_ref[...], b_ref[...], activation)
+
+
+def _round_up(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+def matmul_bias_act(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    activation: str = "none",
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+) -> jax.Array:
+    """Compute ``act(x @ w + b)`` with the tiled Pallas kernel.
+
+    Args:
+      x: ``[M, K]`` f32.
+      w: ``[K, N]`` f32.
+      b: ``[N]`` or ``[1, N]`` f32 bias.
+      activation: one of :data:`ACTIVATIONS`.
+      bm/bn/bk: tile sizes; clamped to the (padded) problem size.
+
+    Shapes that do not divide the tile sizes are zero-padded on the way in
+    and sliced on the way out -- zero padding is exact for matmul + bias
+    (padded K contributes 0; padded M/N rows/cols are discarded).
+    """
+    if activation not in ACTIVATIONS:
+        raise ValueError(f"unknown activation {activation!r}")
+    if x.ndim != 2 or w.ndim != 2:
+        raise ValueError(f"x and w must be rank 2, got {x.shape} @ {w.shape}")
+    M, K = x.shape
+    K2, N = w.shape
+    if K != K2:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {w.shape}")
+    b = b.reshape(1, -1)
+    if b.shape[1] != N:
+        raise ValueError(f"bias shape {b.shape} does not match N={N}")
+
+    # Balanced tiling (§Perf iteration 2): pick the smallest tile that
+    # still covers the dimension in ceil(dim/cap) steps, so padding never
+    # exceeds one 8-lane round-up per step. Naive clamping (`min(cap,
+    # dim)`) pads e.g. K=1280 up to 2048 under a 1024 cap — a 60% wasted
+    # MACs + an 8 MB weight pad-copy per call; balanced tiling picks
+    # bk=640 and pads nothing.
+    def _tile(dim: int, cap: int) -> int:
+        steps = -(-dim // cap)
+        return _round_up(-(-dim // steps), 8)
+
+    bn_ = _tile(N, bn)
+    bk_ = _tile(K, bk)
+    # §Perf iteration 3: grow the M tile into the remaining VMEM budget.
+    # Interpret-mode grids pay a whole-buffer copy per step (the lowered
+    # while loop dynamic-update-slices the output), so conv matmuls with
+    # huge M and tiny K/N (stem at batch 8: M=18432, K=27, N=32) must not
+    # shatter into 144 M-steps. Budget ~3M f32 (~12 MiB) across
+    # x(bm*bk) + w(bk*bn) + acc/out(2*bm*bn), floor 128, cap 4096.
+    budget_floats = 3 * 1024 * 1024
+    bm_cap = max(bm, min(4096, (budget_floats - bk_ * bn_) // (bk_ + 2 * bn_)))
+    bm_ = _tile(M, max(bm_cap, 8))
+    Mp, Kp, Np = _round_up(M, bm_), _round_up(K, bk_), _round_up(N, bn_)
+    xp = jnp.pad(x, ((0, Mp - M), (0, Kp - K))) if (Mp, Kp) != (M, K) else x
+    wp = jnp.pad(w, ((0, Kp - K), (0, Np - N))) if (Kp, Np) != (K, N) else w
+    bp = jnp.pad(b, ((0, 0), (0, Np - N))) if Np != N else b
+
+    grid = (Mp // bm_, Np // bn_, Kp // bk_)
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=grid[2], activation=activation),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bn_), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.float32)],
+        interpret=True,
+    )(xp, wp, bp)
+    if (Mp, Np) != (M, N):
+        out = out[:M, :N]
+    return out
+
+
+def vmem_footprint_bytes(bm: int, bn: int, bk: int) -> int:
+    """Estimated VMEM working set of one grid step (f32), for DESIGN §Perf."""
+    x_tile = bm * bk * 4
+    w_tile = bk * bn * 4
+    b_tile = bn * 4
+    acc = bm * bn * 4
+    out = bm * bn * 4
+    return x_tile + w_tile + b_tile + acc + out
+
+
+def mxu_utilization_estimate(m: int, n: int, k: int, bm: int = DEFAULT_BM,
+                             bn: int = DEFAULT_BN, bk: int = DEFAULT_BK) -> float:
+    """Fraction of MXU work that is useful (vs padding), for DESIGN §Perf.
+
+    Mirrors the *balanced* tiling `matmul_bias_act` actually performs, so
+    the estimate reflects the shipped BlockSpec schedule.
+    """
+
+    def _tile(dim: int, cap: int) -> int:
+        steps = -(-dim // cap)
+        return _round_up(-(-dim // steps), 8)
+
+    bn_ = _tile(n, bn)
+    bk_ = _tile(k, bk)
+    budget_floats = 3 * 1024 * 1024
+    bm_cap = max(bm, min(4096, (budget_floats - bk_ * bn_) // (bk_ + 2 * bn_)))
+    bm_ = _tile(m, max(bm_cap, 8))
+    mp, np_, kp = _round_up(m, bm_), _round_up(n, bn_), _round_up(k, bk_)
+    useful = m * n * k
+    issued = mp * np_ * kp
+    return useful / issued if issued else 0.0

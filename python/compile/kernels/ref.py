@@ -1,0 +1,59 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+These are the ground truth the pytest suite compares the kernels against
+(``assert_allclose``).  They are deliberately written with stock
+``jnp`` / ``lax`` ops and no Pallas machinery.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def apply_activation(x: jax.Array, activation: str) -> jax.Array:
+    if activation == "none":
+        return x
+    if activation == "relu":
+        return jnp.maximum(x, 0.0)
+    if activation == "relu6":
+        return jnp.clip(x, 0.0, 6.0)
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+def matmul_bias_act(x: jax.Array, w: jax.Array, b: jax.Array,
+                    *, activation: str = "none") -> jax.Array:
+    """Oracle for kernels.matmul.matmul_bias_act."""
+    return apply_activation(x @ w + b.reshape(1, -1), activation)
+
+
+def depthwise_conv3x3(x: jax.Array, w: jax.Array, b: jax.Array,
+                      *, stride: int = 1,
+                      activation: str = "relu6") -> jax.Array:
+    """Oracle for kernels.depthwise.depthwise_conv3x3 (NHWC, SAME)."""
+    C = x.shape[3]
+    # lax conv wants [H, W, in/groups=1, C] filters for depthwise.
+    filt = w.reshape(3, 3, 1, C)
+    out = jax.lax.conv_general_dilated(
+        x, filt,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=C,
+    )
+    return apply_activation(out + b.reshape(1, 1, 1, -1), activation)
+
+
+def conv2d(x: jax.Array, w: jax.Array, b: jax.Array, *, stride: int = 1,
+           activation: str = "none") -> jax.Array:
+    """Oracle for a full NHWC conv (used for the im2col path), SAME pad.
+
+    w: [kh, kw, Cin, Cout].
+    """
+    out = jax.lax.conv_general_dilated(
+        x, w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return apply_activation(out + b.reshape(1, 1, 1, -1), activation)

@@ -1,0 +1,96 @@
+"""L2 layer builders: NHWC conv / pool / linear on top of the L1 kernels.
+
+Every FLOP-carrying op routes through the Pallas kernels in
+:mod:`compile.kernels`:
+
+  * 1x1 (pointwise) convs  -> ``matmul.matmul_bias_act`` on ``[B*H*W, C]``;
+  * full KxK convs         -> im2col (9 shifted strided slices, pure data
+                              movement XLA fuses away) + the same matmul
+                              kernel;
+  * depthwise 3x3 convs    -> ``depthwise.depthwise_conv3x3``;
+  * the classifier Linear  -> the matmul kernel again.
+
+Only reductions/reshapes (global average pool, flatten) stay plain jnp.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import depthwise as dw_kernel
+from .kernels import matmul as mm_kernel
+from .kernels.depthwise import same_pad
+
+
+def conv1x1(x: jax.Array, w: jax.Array, b: jax.Array, *,
+            activation: str = "none") -> jax.Array:
+    """Pointwise conv, NHWC.  ``w``: [Cin, Cout]; ``b``: [Cout]."""
+    B, H, W, C = x.shape
+    out = mm_kernel.matmul_bias_act(
+        x.reshape(B * H * W, C), w, b, activation=activation
+    )
+    return out.reshape(B, H, W, -1)
+
+
+def im2col(x: jax.Array, kernel: int, stride: int) -> jax.Array:
+    """SAME-padded im2col: NHWC -> [B, Ho, Wo, k*k*C], patch order (dy,dx,c)."""
+    B, H, W, C = x.shape
+    ph = same_pad(H, kernel, stride)
+    pw = same_pad(W, kernel, stride)
+    xp = jnp.pad(x, ((0, 0), ph, pw, (0, 0)))
+    out_h = -(-H // stride)
+    out_w = -(-W // stride)
+    patches = []
+    for dy in range(kernel):
+        for dx in range(kernel):
+            patches.append(
+                jax.lax.slice(
+                    xp,
+                    (0, dy, dx, 0),
+                    (B, dy + (out_h - 1) * stride + 1,
+                     dx + (out_w - 1) * stride + 1, C),
+                    (1, stride, stride, 1),
+                )
+            )
+    return jnp.concatenate(patches, axis=-1)
+
+
+def conv2d(x: jax.Array, w: jax.Array, b: jax.Array, *, stride: int = 1,
+           activation: str = "none") -> jax.Array:
+    """Full conv via im2col + the Pallas matmul kernel.
+
+    ``w``: [kh, kw, Cin, Cout] (HWIO); ``b``: [Cout].  SAME padding.
+    """
+    kh, kw, cin, cout = w.shape
+    assert kh == kw, "square kernels only"
+    B, H, W, C = x.shape
+    assert C == cin, (x.shape, w.shape)
+    cols = im2col(x, kh, stride)  # [B, Ho, Wo, kh*kw*C]
+    Bo, Ho, Wo, K = cols.shape
+    out = mm_kernel.matmul_bias_act(
+        cols.reshape(Bo * Ho * Wo, K),
+        w.reshape(kh * kw * cin, cout),
+        b,
+        activation=activation,
+    )
+    return out.reshape(Bo, Ho, Wo, cout)
+
+
+def depthwise3x3(x: jax.Array, w: jax.Array, b: jax.Array, *,
+                 stride: int = 1, activation: str = "relu6") -> jax.Array:
+    """Depthwise 3x3 conv via the Pallas kernel. ``w``: [3, 3, C]."""
+    return dw_kernel.depthwise_conv3x3(
+        x, w, b, stride=stride, activation=activation
+    )
+
+
+def global_avg_pool(x: jax.Array) -> jax.Array:
+    """NHWC -> [B, C]."""
+    return jnp.mean(x, axis=(1, 2))
+
+
+def linear(x: jax.Array, w: jax.Array, b: jax.Array, *,
+           activation: str = "none") -> jax.Array:
+    """Dense layer via the Pallas matmul kernel. ``w``: [Nin, Nout]."""
+    return mm_kernel.matmul_bias_act(x, w, b, activation=activation)

@@ -1,0 +1,361 @@
+"""L2 model: MobileNetV2 (inference, BN folded) built from the L1 kernels.
+
+The model mirrors torchvision's ``mobilenet_v2`` exactly at the *module
+list* level: the manifest this file generates has the same 141 flat module
+entries (52 Conv2d + 52 BatchNorm2d + 35 ReLU6 + Dropout + Linear) the paper
+partitioned -- its reported partition sizes [116, 25] and [108, 16, 17] sum
+to 141.  The rust partitioner consumes these entries and re-derives the
+paper's Eq. 1/2/9 costs from the recorded module attributes.
+
+For *compute* we fold BN into the preceding conv (inference-time identity
+transformation), so each block function is conv+bias chains routed through
+the Pallas kernels.  Weights are deterministic (seeded); the paper's
+evaluation is latency/throughput only, never accuracy, so weight values are
+irrelevant (see DESIGN.md "Substitutions").
+
+Artifact granularity is the *block*: stem, 17 inverted residuals, head
+conv, pool+classifier -- 20 blocks.  Each block is lowered separately by
+``aot.py``; a partition at runtime is a contiguous range of blocks, so the
+rust side can realize any boundary the partitioning algorithm chooses.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+
+# ---------------------------------------------------------------------------
+# Architecture description (torchvision mobilenet_v2, width_mult=1.0)
+# ---------------------------------------------------------------------------
+
+# (expansion t, output channels c, repeats n, first stride s)
+IR_SETTINGS = [
+    (1, 16, 1, 1),
+    (6, 24, 2, 2),
+    (6, 32, 3, 2),
+    (6, 64, 4, 2),
+    (6, 96, 3, 1),
+    (6, 160, 3, 2),
+    (6, 320, 1, 1),
+]
+STEM_CHANNELS = 32
+HEAD_CHANNELS = 1280
+NUM_CLASSES = 1000
+
+# Default AOT input resolution (paper used 224; we use 96 -- see DESIGN.md).
+INPUT_HW = 96
+BATCH_SIZES = (1, 8)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerEntry:
+    """One flat module entry, as the paper's partitioner saw them."""
+
+    name: str          # torchvision-style dotted path, e.g. "features.2.conv.1.0"
+    type: str          # Conv2d | BatchNorm2d | ReLU6 | Dropout | Linear
+    params: int        # trainable parameter count of the module
+    # Conv2d attrs (paper Eq. 1/9); 0 when not applicable.
+    k_h: int = 0
+    k_w: int = 0
+    c_in: int = 0
+    c_out: int = 0
+    groups: int = 1
+    stride: int = 1
+    # Linear attrs (paper Eq. 2/9); 0 when not applicable.
+    n_in: int = 0
+    n_out: int = 0
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class BlockDef:
+    """One AOT unit: a contiguous run of layers with a single jax function."""
+
+    index: int
+    name: str
+    layers: list[LayerEntry]
+    # (key, shape) in flattening order; key indexes the params dict.
+    param_spec: list[tuple[str, tuple[int, ...]]]
+    in_shape: tuple[int, int, int]   # (H, W, C); classifier uses (1, 1, C)
+    out_shape: tuple[int, int, int]
+    fn: Callable  # fn(params: dict, x) -> y
+
+    @property
+    def param_count(self) -> int:
+        return sum(math.prod(s) for _, s in self.param_spec)
+
+    def flat_len(self) -> int:
+        return self.param_count
+
+
+def _conv_entry(name: str, k: int, cin: int, cout: int, *, groups: int = 1,
+                stride: int = 1) -> LayerEntry:
+    return LayerEntry(
+        name=name, type="Conv2d",
+        params=k * k * (cin // groups) * cout,
+        k_h=k, k_w=k, c_in=cin, c_out=cout, groups=groups, stride=stride,
+    )
+
+
+def _bn_entry(name: str, c: int) -> LayerEntry:
+    return LayerEntry(name=name, type="BatchNorm2d", params=2 * c)
+
+
+def _relu6_entry(name: str) -> LayerEntry:
+    return LayerEntry(name=name, type="ReLU6", params=0)
+
+
+# ---------------------------------------------------------------------------
+# Block builders
+# ---------------------------------------------------------------------------
+
+
+def _stem_block(hw: int) -> BlockDef:
+    c = STEM_CHANNELS
+
+    def fn(p: dict, x: jax.Array) -> jax.Array:
+        return layers.conv2d(x, p["stem.w"], p["stem.b"], stride=2,
+                             activation="relu6")
+
+    return BlockDef(
+        index=0,
+        name="stem",
+        layers=[
+            _conv_entry("features.0.0", 3, 3, c, stride=2),
+            _bn_entry("features.0.1", c),
+            _relu6_entry("features.0.2"),
+        ],
+        param_spec=[("stem.w", (3, 3, 3, c)), ("stem.b", (c,))],
+        in_shape=(hw, hw, 3),
+        out_shape=(hw // 2, hw // 2, c),
+        fn=fn,
+    )
+
+
+def _ir_block(index: int, feat_idx: int, cin: int, cout: int, t: int,
+              stride: int, hw_in: int) -> BlockDef:
+    """Inverted residual: [expand 1x1] -> dw 3x3 -> project 1x1 (+res)."""
+    hidden = cin * t
+    hw_out = -(-hw_in // stride)
+    use_res = stride == 1 and cin == cout
+    prefix = f"features.{feat_idx}.conv"
+    tag = f"b{index:02d}"
+
+    entries: list[LayerEntry] = []
+    spec: list[tuple[str, tuple[int, ...]]] = []
+    if t != 1:
+        entries += [
+            _conv_entry(f"{prefix}.0.0", 1, cin, hidden),
+            _bn_entry(f"{prefix}.0.1", hidden),
+            _relu6_entry(f"{prefix}.0.2"),
+        ]
+        spec += [(f"{tag}.expand.w", (cin, hidden)),
+                 (f"{tag}.expand.b", (hidden,))]
+        dw_prefix = f"{prefix}.1"
+        proj_name, proj_bn = f"{prefix}.2", f"{prefix}.3"
+    else:
+        dw_prefix = f"{prefix}.0"
+        proj_name, proj_bn = f"{prefix}.1", f"{prefix}.2"
+    entries += [
+        _conv_entry(f"{dw_prefix}.0", 3, hidden, hidden, groups=hidden,
+                    stride=stride),
+        _bn_entry(f"{dw_prefix}.1", hidden),
+        _relu6_entry(f"{dw_prefix}.2"),
+        _conv_entry(proj_name, 1, hidden, cout),
+        _bn_entry(proj_bn, cout),
+    ]
+    spec += [
+        (f"{tag}.dw.w", (3, 3, hidden)),
+        (f"{tag}.dw.b", (hidden,)),
+        (f"{tag}.project.w", (hidden, cout)),
+        (f"{tag}.project.b", (cout,)),
+    ]
+
+    def fn(p: dict, x: jax.Array) -> jax.Array:
+        h = x
+        if t != 1:
+            h = layers.conv1x1(h, p[f"{tag}.expand.w"], p[f"{tag}.expand.b"],
+                               activation="relu6")
+        h = layers.depthwise3x3(h, p[f"{tag}.dw.w"], p[f"{tag}.dw.b"],
+                                stride=stride, activation="relu6")
+        h = layers.conv1x1(h, p[f"{tag}.project.w"], p[f"{tag}.project.b"],
+                           activation="none")
+        if use_res:
+            h = h + x
+        return h
+
+    return BlockDef(
+        index=index,
+        name=f"ir{index}_t{t}_c{cout}_s{stride}",
+        layers=entries,
+        param_spec=spec,
+        in_shape=(hw_in, hw_in, cin),
+        out_shape=(hw_out, hw_out, cout),
+        fn=fn,
+    )
+
+
+def _head_block(index: int, feat_idx: int, cin: int, hw: int) -> BlockDef:
+    c = HEAD_CHANNELS
+
+    def fn(p: dict, x: jax.Array) -> jax.Array:
+        return layers.conv1x1(x, p["head.w"], p["head.b"], activation="relu6")
+
+    return BlockDef(
+        index=index,
+        name="head",
+        layers=[
+            _conv_entry(f"features.{feat_idx}.0", 1, cin, c),
+            _bn_entry(f"features.{feat_idx}.1", c),
+            _relu6_entry(f"features.{feat_idx}.2"),
+        ],
+        param_spec=[("head.w", (cin, c)), ("head.b", (c,))],
+        in_shape=(hw, hw, cin),
+        out_shape=(hw, hw, c),
+        fn=fn,
+    )
+
+
+def _classifier_block(index: int, hw: int) -> BlockDef:
+    def fn(p: dict, x: jax.Array) -> jax.Array:
+        pooled = layers.global_avg_pool(x)  # [B, HEAD_CHANNELS]
+        # Dropout is identity at inference.
+        return layers.linear(pooled, p["classifier.w"], p["classifier.b"])
+
+    return BlockDef(
+        index=index,
+        name="classifier",
+        layers=[
+            LayerEntry(name="classifier.0", type="Dropout", params=0),
+            LayerEntry(
+                name="classifier.1", type="Linear",
+                params=HEAD_CHANNELS * NUM_CLASSES + NUM_CLASSES,
+                n_in=HEAD_CHANNELS, n_out=NUM_CLASSES,
+            ),
+        ],
+        param_spec=[
+            ("classifier.w", (HEAD_CHANNELS, NUM_CLASSES)),
+            ("classifier.b", (NUM_CLASSES,)),
+        ],
+        in_shape=(hw, hw, HEAD_CHANNELS),
+        out_shape=(1, 1, NUM_CLASSES),
+        fn=fn,
+    )
+
+
+def build_blocks(input_hw: int = INPUT_HW) -> list[BlockDef]:
+    """The 20 AOT blocks of MobileNetV2 at the given input resolution."""
+    blocks = [_stem_block(input_hw)]
+    hw = input_hw // 2
+    cin = STEM_CHANNELS
+    index = 1
+    feat_idx = 1
+    for t, c, n, s in IR_SETTINGS:
+        for rep in range(n):
+            stride = s if rep == 0 else 1
+            blocks.append(_ir_block(index, feat_idx, cin, c, t, stride, hw))
+            hw = -(-hw // stride)
+            cin = c
+            index += 1
+            feat_idx += 1
+    blocks.append(_head_block(index, feat_idx, cin, hw))
+    blocks.append(_classifier_block(index + 1, hw))
+    return blocks
+
+
+def all_layers(blocks: list[BlockDef]) -> list[LayerEntry]:
+    """The flat 141-entry module list, in execution order."""
+    out: list[LayerEntry] = []
+    for b in blocks:
+        out.extend(b.layers)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def init_params(blocks: list[BlockDef], seed: int = 0) -> dict[str, jax.Array]:
+    """Deterministic He-normal init; biases get small noise so ReLU6 paths
+    are numerically non-trivial."""
+    params: dict[str, jax.Array] = {}
+    key = jax.random.PRNGKey(seed)
+    for b in blocks:
+        for name, shape in b.param_spec:
+            key, k1 = jax.random.split(key)
+            if len(shape) == 1:  # bias
+                params[name] = 0.01 * jax.random.normal(k1, shape, jnp.float32)
+            else:
+                fan_in = math.prod(shape[:-1])
+                std = math.sqrt(2.0 / fan_in)
+                params[name] = std * jax.random.normal(k1, shape, jnp.float32)
+    return params
+
+
+def flatten_block_params(params: dict[str, jax.Array],
+                         block: BlockDef) -> jax.Array:
+    """Concatenate a block's params into the single f32 vector the HLO takes."""
+    return jnp.concatenate(
+        [params[name].reshape(-1) for name, _ in block.param_spec]
+    )
+
+
+def unflatten_block_params(vec: jax.Array,
+                           block: BlockDef) -> dict[str, jax.Array]:
+    """Inverse of :func:`flatten_block_params` (static slices, trace-safe)."""
+    out: dict[str, jax.Array] = {}
+    off = 0
+    for name, shape in block.param_spec:
+        n = math.prod(shape)
+        out[name] = jax.lax.slice(vec, (off,), (off + n,)).reshape(shape)
+        off += n
+    return out
+
+
+def make_block_callable(block: BlockDef) -> Callable:
+    """``fn(w_vec, x)`` -- the exact signature the rust runtime executes."""
+
+    def fn(w_vec: jax.Array, x: jax.Array) -> tuple[jax.Array]:
+        p = unflatten_block_params(w_vec, block)
+        y = block.fn(p, x)
+        if block.name == "classifier":
+            return (y,)
+        return (y,)
+
+    return fn
+
+
+def forward_full(params: dict[str, jax.Array], x: jax.Array,
+                 blocks: list[BlockDef] | None = None) -> jax.Array:
+    """Whole-model forward (used for the monolithic artifact + goldens)."""
+    blocks = blocks or build_blocks(x.shape[1])
+    h = x
+    for b in blocks:
+        h = b.fn(params, h)
+    return h
+
+
+def make_monolithic_callable(blocks: list[BlockDef]) -> Callable:
+    """``fn(w_vec_full, x)`` over the concatenation of all block vectors."""
+
+    def fn(w_vec: jax.Array, x: jax.Array) -> tuple[jax.Array]:
+        off = 0
+        h = x
+        for b in blocks:
+            n = b.param_count
+            sub = jax.lax.slice(w_vec, (off,), (off + n,))
+            p = unflatten_block_params(sub, b)
+            h = b.fn(p, h)
+            off += n
+        return (h,)
+
+    return fn

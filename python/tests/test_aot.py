@@ -1,0 +1,100 @@
+"""AOT export checks: HLO text artifacts, weight sidecars, manifest schema,
+golden parity pair.  Uses a tiny input resolution so the test stays fast."""
+
+import json
+import math
+import pathlib
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+HW = 16
+
+
+@pytest.fixture(scope="module")
+def export_dir(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    aot.export(out, input_hw=HW, batch_sizes=[1], seed=3,
+               skip_monolithic=False, verbose=False)
+    return out
+
+
+@pytest.fixture(scope="module")
+def manifest(export_dir):
+    return json.loads((export_dir / "manifest.json").read_text())
+
+
+def test_manifest_schema(manifest):
+    assert manifest["model"] == "mobilenet_v2"
+    assert manifest["input_hw"] == HW
+    assert manifest["num_classes"] == 1000
+    assert len(manifest["blocks"]) == 20
+    assert sum(len(b["layers"]) for b in manifest["blocks"]) == 141
+    assert manifest["total_params"] > 3_000_000
+
+
+def test_block_artifacts_exist_and_are_hlo(export_dir, manifest):
+    for b in manifest["blocks"]:
+        for fname in b["artifacts"].values():
+            text = (export_dir / fname).read_text()
+            assert text.startswith("HloModule"), fname
+            # Signature: weight vector + activation input.
+            assert "f32" in text
+
+
+def test_weights_sidecar_sizes(export_dir, manifest):
+    for b in manifest["blocks"]:
+        size = (export_dir / b["weights_file"]).stat().st_size
+        assert size == b["param_count"] * 4 == b["weights_bytes"]
+
+
+def test_block_shapes_chain_in_manifest(manifest):
+    bs = manifest["blocks"]
+    for prev, nxt in zip(bs[:-2], bs[1:-1]):
+        assert prev["out_shape"] == nxt["in_shape"]
+
+
+def test_monolithic_artifact(export_dir, manifest):
+    mono = manifest["monolithic"]
+    text = (export_dir / mono["artifacts"]["1"]).read_text()
+    assert text.startswith("HloModule")
+    size = (export_dir / mono["weights_file"]).stat().st_size
+    assert size == manifest["total_params"] * 4
+
+
+def test_golden_pair(export_dir, manifest):
+    g = manifest["golden"]
+    x_bytes = (export_dir / g["input"]).read_bytes()
+    y_bytes = (export_dir / g["output"]).read_bytes()
+    assert len(x_bytes) == math.prod(g["in_shape"]) * 4
+    assert len(y_bytes) == math.prod(g["out_shape"]) * 4
+    y = np.frombuffer(y_bytes, dtype="<f4")
+    assert np.all(np.isfinite(y))
+
+
+def test_golden_matches_recomputed_forward(export_dir, manifest):
+    """Re-running the model at the manifest's seed reproduces the golden."""
+    g = manifest["golden"]
+    blocks = M.build_blocks(HW)
+    params = M.init_params(blocks, seed=manifest["seed"])
+    x = np.frombuffer((export_dir / g["input"]).read_bytes(),
+                      dtype="<f4").reshape(g["in_shape"])
+    y = M.forward_full(params, jnp.asarray(x), blocks)
+    want = np.frombuffer((export_dir / g["output"]).read_bytes(),
+                         dtype="<f4").reshape(g["out_shape"])
+    np.testing.assert_allclose(np.asarray(y), want, rtol=1e-5, atol=1e-5)
+
+
+def test_weights_sha256_recorded(export_dir, manifest):
+    import hashlib
+    b0 = manifest["blocks"][0]
+    digest = hashlib.sha256(
+        (export_dir / b0["weights_file"]).read_bytes()).hexdigest()
+    assert digest == b0["weights_sha256"]

@@ -1,0 +1,94 @@
+"""L1 correctness: Pallas depthwise 3x3 kernel vs the lax.conv oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import depthwise, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+@pytest.mark.parametrize("stride", [1, 2])
+@pytest.mark.parametrize("activation", ["none", "relu", "relu6"])
+@pytest.mark.parametrize("b,h,w,c", [(1, 8, 8, 4), (2, 12, 12, 32),
+                                     (1, 48, 48, 96), (8, 6, 6, 384)])
+def test_depthwise_matches_ref(b, h, w, c, stride, activation):
+    x = _rand(0, (b, h, w, c))
+    wk = _rand(1, (3, 3, c))
+    bias = _rand(2, (c,))
+    got = depthwise.depthwise_conv3x3(x, wk, bias, stride=stride,
+                                      activation=activation)
+    want = ref.depthwise_conv3x3(x, wk, bias, stride=stride,
+                                 activation=activation)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(3, 20),
+    w=st.integers(3, 20),
+    c=st.integers(1, 40),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_depthwise_hypothesis(b, h, w, c, stride, seed):
+    kx, kw, kb = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(kx, (b, h, w, c), jnp.float32)
+    wk = jax.random.normal(kw, (3, 3, c), jnp.float32)
+    bias = jax.random.normal(kb, (c,), jnp.float32)
+    got = depthwise.depthwise_conv3x3(x, wk, bias, stride=stride)
+    want = ref.depthwise_conv3x3(x, wk, bias, stride=stride)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(bc=st.sampled_from([1, 4, 16, 128]))
+def test_depthwise_channel_block_invariance(bc):
+    x = _rand(0, (2, 10, 10, 24))
+    wk = _rand(1, (3, 3, 24))
+    bias = _rand(2, (24,))
+    got = depthwise.depthwise_conv3x3(x, wk, bias, stride=2, bc=bc)
+    want = ref.depthwise_conv3x3(x, wk, bias, stride=2)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_same_pad():
+    # k=3 s=1: out = in, total pad 2.
+    assert depthwise.same_pad(96, 3, 1) == (1, 1)
+    # k=3 s=2, even in: total pad 1 (TF SAME: lo 0, hi 1).
+    assert depthwise.same_pad(96, 3, 2) == (0, 1)
+    assert depthwise.same_pad(7, 3, 2) == (1, 1)
+
+
+def test_output_shapes():
+    x = _rand(0, (1, 13, 13, 5))
+    wk = _rand(1, (3, 3, 5))
+    bias = _rand(2, (5,))
+    assert depthwise.depthwise_conv3x3(x, wk, bias, stride=1).shape == (1, 13, 13, 5)
+    assert depthwise.depthwise_conv3x3(x, wk, bias, stride=2).shape == (1, 7, 7, 5)
+
+
+def test_depthwise_rejects_bad_inputs():
+    x = _rand(0, (1, 8, 8, 4))
+    with pytest.raises(ValueError):
+        depthwise.depthwise_conv3x3(x, _rand(1, (3, 3, 5)), _rand(2, (4,)))
+    with pytest.raises(ValueError):
+        depthwise.depthwise_conv3x3(x, _rand(1, (3, 3, 4)), _rand(2, (4,)),
+                                    stride=3)
+    with pytest.raises(ValueError):
+        depthwise.depthwise_conv3x3(x[0], _rand(1, (3, 3, 4)), _rand(2, (4,)))
+
+
+def test_vmem_footprint_largest_stage_within_budget():
+    """Largest MobileNetV2 stage plane at 96x96 input fits VMEM."""
+    # Stage with largest plane*channels product: 48x48, bc=128.
+    fp = depthwise.vmem_footprint_bytes(48, 48, 1, bc=128)
+    assert fp < 16 * 1024 * 1024

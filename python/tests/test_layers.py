@@ -1,0 +1,79 @@
+"""L2 layer builders vs pure-lax oracles (conv via im2col path etc.)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import layers
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+@pytest.mark.parametrize("stride", [1, 2])
+@pytest.mark.parametrize("activation", ["none", "relu6"])
+def test_conv2d_3x3_matches_lax(stride, activation):
+    x = _rand(0, (2, 12, 12, 3))
+    w = _rand(1, (3, 3, 3, 8))
+    b = _rand(2, (8,))
+    got = layers.conv2d(x, w, b, stride=stride, activation=activation)
+    want = ref.conv2d(x, w, b, stride=stride, activation=activation)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_conv1x1_matches_lax():
+    x = _rand(0, (2, 6, 6, 16))
+    w = _rand(1, (16, 24))
+    b = _rand(2, (24,))
+    got = layers.conv1x1(x, w, b, activation="relu6")
+    want = ref.conv2d(x, w.reshape(1, 1, 16, 24), b, stride=1,
+                      activation="relu6")
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    h=st.integers(4, 16),
+    cin=st.integers(1, 8),
+    cout=st.integers(1, 8),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv2d_hypothesis(h, cin, cout, stride, seed):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(k1, (1, h, h, cin), jnp.float32)
+    w = jax.random.normal(k2, (3, 3, cin, cout), jnp.float32)
+    b = jax.random.normal(k3, (cout,), jnp.float32)
+    got = layers.conv2d(x, w, b, stride=stride)
+    want = ref.conv2d(x, w, b, stride=stride)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=2e-4)
+
+
+def test_im2col_shape_and_content():
+    x = jnp.arange(1 * 4 * 4 * 2, dtype=jnp.float32).reshape(1, 4, 4, 2)
+    cols = layers.im2col(x, 3, 1)
+    assert cols.shape == (1, 4, 4, 18)
+    # Center patch of the interior pixel (1,1) equals the raw 3x3 window.
+    win = x[0, 0:3, 0:3, :].transpose(0, 1, 2).reshape(-1)
+    np.testing.assert_allclose(cols[0, 1, 1], win)
+
+
+def test_global_avg_pool():
+    x = _rand(0, (3, 5, 5, 7))
+    np.testing.assert_allclose(layers.global_avg_pool(x),
+                               jnp.mean(x, axis=(1, 2)), rtol=1e-6)
+
+
+def test_linear_matches_ref():
+    x = _rand(0, (4, 32))
+    w = _rand(1, (32, 10))
+    b = _rand(2, (10,))
+    np.testing.assert_allclose(layers.linear(x, w, b),
+                               ref.matmul_bias_act(x, w, b),
+                               rtol=1e-4, atol=1e-4)

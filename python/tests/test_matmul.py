@@ -1,0 +1,112 @@
+"""L1 correctness: Pallas matmul+bias+act kernel vs the pure-jnp oracle.
+
+This is the CORE correctness signal for the kernel every 1x1 conv, im2col
+conv, and the classifier lower to.  Hypothesis sweeps shapes (including
+tile-unaligned ones), activations, and tile sizes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+@pytest.mark.parametrize("activation", matmul.ACTIVATIONS)
+@pytest.mark.parametrize(
+    "m,k,n",
+    [(8, 8, 8), (16, 24, 32), (1, 1280, 1000), (64, 27, 32), (9216, 32, 16)],
+)
+def test_matmul_matches_ref(m, k, n, activation):
+    x = _rand(0, (m, k))
+    w = _rand(1, (k, n))
+    b = _rand(2, (n,))
+    got = matmul.matmul_bias_act(x, w, b, activation=activation)
+    want = ref.matmul_bias_act(x, w, b, activation=activation)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 70),
+    n=st.integers(1, 70),
+    activation=st.sampled_from(matmul.ACTIVATIONS),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_hypothesis_shapes(m, k, n, activation, seed):
+    kx, kw, kb = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(kx, (m, k), jnp.float32)
+    w = jax.random.normal(kw, (k, n), jnp.float32)
+    b = jax.random.normal(kb, (n,), jnp.float32)
+    got = matmul.matmul_bias_act(x, w, b, activation=activation)
+    want = ref.matmul_bias_act(x, w, b, activation=activation)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    bm=st.sampled_from([8, 16, 32, 128]),
+    bn=st.sampled_from([8, 16, 32, 128]),
+    bk=st.sampled_from([8, 16, 32, 128]),
+)
+def test_matmul_tile_size_invariance(bm, bn, bk):
+    """The result must not depend on the chosen tiling."""
+    x = _rand(3, (50, 37))
+    w = _rand(4, (37, 41))
+    b = _rand(5, (41,))
+    got = matmul.matmul_bias_act(x, w, b, activation="relu6",
+                                 bm=bm, bn=bn, bk=bk)
+    want = ref.matmul_bias_act(x, w, b, activation="relu6")
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_jit_compatible():
+    f = jax.jit(lambda x, w, b: matmul.matmul_bias_act(x, w, b,
+                                                       activation="relu6"))
+    x, w, b = _rand(0, (16, 16)), _rand(1, (16, 16)), _rand(2, (16,))
+    np.testing.assert_allclose(
+        f(x, w, b), ref.matmul_bias_act(x, w, b, activation="relu6"),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+def test_matmul_bias_broadcasting_2d():
+    x, w = _rand(0, (8, 8)), _rand(1, (8, 8))
+    b = _rand(2, (1, 8))
+    got = matmul.matmul_bias_act(x, w, b)
+    np.testing.assert_allclose(got, ref.matmul_bias_act(x, w, b),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_rejects_bad_shapes():
+    x, w, b = _rand(0, (4, 5)), _rand(1, (6, 7)), _rand(2, (7,))
+    with pytest.raises(ValueError):
+        matmul.matmul_bias_act(x, w, b)
+    with pytest.raises(ValueError):
+        matmul.matmul_bias_act(_rand(0, (4, 6)), w, _rand(2, (3,)))
+    with pytest.raises(ValueError):
+        matmul.matmul_bias_act(_rand(0, (4, 6)), w, b, activation="gelu")
+
+
+def test_vmem_footprint_default_tiles_within_budget():
+    """Default tiles must fit the ~16 MiB VMEM budget (DESIGN §Perf)."""
+    fp = matmul.vmem_footprint_bytes(matmul.DEFAULT_BM, matmul.DEFAULT_BN,
+                                     matmul.DEFAULT_BK)
+    assert fp < 16 * 1024 * 1024
+    # 128x1024 x-tile + 1024x256 w-tile + bias + 2x 128x256 acc/out.
+    assert fp == pytest.approx(1_835_008 + 1024, abs=4096)
+
+
+def test_mxu_utilization_estimate_bounds():
+    assert matmul.mxu_utilization_estimate(128, 128, 128) == 1.0
+    u = matmul.mxu_utilization_estimate(1, 1280, 1000)
+    assert 0.0 < u <= 1.0

@@ -1,0 +1,126 @@
+"""L2 model structure + numerics: block graph, manifest layer list, param
+flattening, block-chain == monolithic == forward_full."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+HW = 32  # small resolution keeps interpret-mode tests fast
+
+
+@pytest.fixture(scope="module")
+def blocks():
+    return M.build_blocks(HW)
+
+
+@pytest.fixture(scope="module")
+def params(blocks):
+    return M.init_params(blocks, seed=0)
+
+
+def test_block_count(blocks):
+    assert len(blocks) == 20
+    assert blocks[0].name == "stem"
+    assert blocks[-2].name == "head"
+    assert blocks[-1].name == "classifier"
+
+
+def test_flat_module_list_matches_torchvision(blocks):
+    """The paper partitioned torchvision's 141-entry flat module list."""
+    layers = M.all_layers(blocks)
+    assert len(layers) == 141
+    by_type = {}
+    for l in layers:
+        by_type[l.type] = by_type.get(l.type, 0) + 1
+    assert by_type == {"Conv2d": 52, "BatchNorm2d": 52, "ReLU6": 35,
+                       "Dropout": 1, "Linear": 1}
+
+
+def test_total_params_close_to_torchvision(blocks):
+    """MobileNetV2 has ~3.5M params (3504872 in torchvision, incl. BN)."""
+    manifest_params = sum(l.params for l in M.all_layers(blocks))
+    assert manifest_params == 3504872
+
+
+def test_block_shapes_chain(blocks):
+    for prev, nxt in zip(blocks[:-2], blocks[1:-1]):
+        assert prev.out_shape == nxt.in_shape, (prev.name, nxt.name)
+    # classifier input = head output
+    assert blocks[-1].in_shape == blocks[-2].out_shape
+
+
+def test_stem_halves_resolution(blocks):
+    assert blocks[0].in_shape == (HW, HW, 3)
+    assert blocks[0].out_shape == (HW // 2, HW // 2, 32)
+
+
+def test_param_specs_unique_and_counted(blocks):
+    seen = set()
+    for b in blocks:
+        for name, shape in b.param_spec:
+            assert name not in seen
+            seen.add(name)
+            assert all(d > 0 for d in shape)
+        assert b.param_count == sum(math.prod(s) for _, s in b.param_spec)
+
+
+def test_flatten_unflatten_roundtrip(blocks, params):
+    b = blocks[3]
+    vec = M.flatten_block_params(params, b)
+    assert vec.shape == (b.param_count,)
+    back = M.unflatten_block_params(vec, b)
+    for name, _ in b.param_spec:
+        np.testing.assert_array_equal(back[name], params[name])
+
+
+def test_forward_shapes(blocks, params):
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, HW, HW, 3), jnp.float32)
+    y = M.forward_full(params, x, blocks)
+    assert y.shape == (2, M.NUM_CLASSES)
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+def test_block_chain_equals_forward_full(blocks, params):
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, HW, HW, 3), jnp.float32)
+    h = x
+    for b in blocks:
+        fn = M.make_block_callable(b)
+        vec = M.flatten_block_params(params, b)
+        (h,) = fn(vec, h)
+    want = M.forward_full(params, x, blocks)
+    np.testing.assert_allclose(h, want, rtol=1e-4, atol=1e-4)
+
+
+def test_monolithic_equals_forward_full(blocks, params):
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, HW, HW, 3), jnp.float32)
+    w_full = jnp.concatenate(
+        [M.flatten_block_params(params, b) for b in blocks])
+    (got,) = M.make_monolithic_callable(blocks)(w_full, x)
+    want = M.forward_full(params, x, blocks)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_residual_blocks_marked_by_shape(blocks):
+    """Blocks with stride 1 and cin==cout must keep shape (residual adds)."""
+    for b in blocks[1:-2]:
+        if b.in_shape == b.out_shape:
+            # residual-capable; function must accept and preserve shape
+            assert b.in_shape[2] == b.out_shape[2]
+
+
+def test_init_params_deterministic(blocks):
+    p1 = M.init_params(blocks, seed=7)
+    p2 = M.init_params(blocks, seed=7)
+    for k in p1:
+        np.testing.assert_array_equal(p1[k], p2[k])
+    p3 = M.init_params(blocks, seed=8)
+    assert any(
+        not np.array_equal(p1[k], p3[k]) for k in p1
+    )

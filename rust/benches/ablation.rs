@@ -1,0 +1,174 @@
+//! Ablation studies for the design choices DESIGN.md calls out:
+//!
+//!  * batch size (1 vs 8) on end-to-end throughput;
+//!  * result-cache capacity sweep (hit rate vs pool size);
+//!  * partitioning strategy: paper Eq. 9 vs CPU-weighted vs
+//!    profile-guided, on the heterogeneous cluster;
+//!  * energy-aware node selection vs latency-optimal (joules per task).
+//!
+//! `cargo bench --bench ablation`.
+
+use std::sync::Arc;
+
+use amp4ec::cluster::{NodeSpec, PowerModel, SimParams, VirtualNode};
+use amp4ec::config::AmpConfig;
+use amp4ec::metrics::markdown_table;
+use amp4ec::scheduler::{Scheduler, ScoringWeights, TaskRequirements};
+use amp4ec::server::EdgeServer;
+use amp4ec::workload::Arrival;
+
+const REQUESTS: usize = 24;
+
+fn serve(cfg: AmpConfig, warm: bool, pool: usize) -> (f64, f64, u64) {
+    let server = EdgeServer::start(cfg).unwrap();
+    if warm {
+        server
+            .serve_workload(pool, pool, Arrival::Closed, 77)
+            .unwrap();
+    }
+    let r = server
+        .serve_workload(REQUESTS, pool, Arrival::Closed, 77)
+        .unwrap();
+    (
+        r.metrics.mean_latency_ms(),
+        r.metrics.throughput_rps(),
+        r.metrics.cache_hits,
+    )
+}
+
+fn main() {
+    let artifacts = amp4ec::artifacts_dir();
+
+    // ---- batch size ------------------------------------------------------
+    let mut rows = Vec::new();
+    for batch in [1usize, 8] {
+        let mut cfg = AmpConfig::paper_cluster(&artifacts);
+        cfg.batch = batch;
+        cfg.profiled_partitioning = true;
+        let (lat, tput, _) = serve(cfg, false, REQUESTS);
+        rows.push(vec![
+            format!("batch {batch}"),
+            format!("{lat:.1}"),
+            format!("{tput:.2}"),
+        ]);
+    }
+    println!(
+        "{}",
+        markdown_table(
+            "Ablation — dynamic batch size (heterogeneous cluster)",
+            &["Config", "Mean latency (ms)", "Throughput (req/s)"],
+            &rows,
+        )
+    );
+
+    // ---- cache capacity ---------------------------------------------------
+    let mut rows = Vec::new();
+    for (entries, pool) in [(0usize, 8usize), (4, 8), (64, 8), (64, 24)] {
+        let mut cfg = AmpConfig::paper_cluster(&artifacts);
+        cfg.batch = 8;
+        cfg.profiled_partitioning = true;
+        cfg.cache_entries = if entries == 0 { None } else { Some(entries) };
+        let (lat, tput, hits) = serve(cfg, entries > 0, pool);
+        rows.push(vec![
+            format!("{entries} entries / pool {pool}"),
+            format!("{hits}/{REQUESTS}"),
+            format!("{lat:.1}"),
+            format!("{tput:.2}"),
+        ]);
+    }
+    println!(
+        "{}",
+        markdown_table(
+            "Ablation — result-cache capacity vs input pool",
+            &["Cache / pool", "Hits", "Mean latency (ms)", "Throughput (req/s)"],
+            &rows,
+        )
+    );
+
+    // ---- partitioning strategy -------------------------------------------
+    let mut rows = Vec::new();
+    for (name, weighted, profiled) in [
+        ("paper Eq. 9 equal-cost", false, false),
+        ("CPU-weighted Eq. 9", true, false),
+        ("profile-guided + CPU-weighted", false, true),
+    ] {
+        let mut cfg = AmpConfig::paper_cluster(&artifacts);
+        cfg.batch = 8;
+        cfg.weighted_partitioning = weighted;
+        cfg.profiled_partitioning = profiled;
+        let (lat, tput, _) = serve(cfg, false, REQUESTS);
+        rows.push(vec![
+            name.to_string(),
+            format!("{lat:.1}"),
+            format!("{tput:.2}"),
+        ]);
+    }
+    println!(
+        "{}",
+        markdown_table(
+            "Ablation — partitioning strategy (3-node heterogeneous cluster, batch 8)",
+            &["Strategy", "Mean latency (ms)", "Throughput (req/s)"],
+            &rows,
+        )
+    );
+
+    // ---- energy-aware selection (synthetic, no artifacts needed) ----------
+    let params = SimParams { runtime_overhead_mb: 0.0, ..SimParams::default() };
+    let hungry = Arc::new(VirtualNode::new(
+        0,
+        NodeSpec::new("hungry", 1.0, 1024.0).with_power(PowerModel {
+            idle_watts: 3.0,
+            busy_watts: 15.0,
+            net_joules_per_byte: 0.0,
+        }),
+        params.clone(),
+    ));
+    let frugal = Arc::new(VirtualNode::new(
+        1,
+        NodeSpec::new("frugal", 1.0, 1024.0).with_power(PowerModel {
+            idle_watts: 2.0,
+            busy_watts: 4.0,
+            net_joules_per_byte: 0.0,
+        }),
+        params,
+    ));
+    let nodes = vec![hungry, frugal];
+    let req = TaskRequirements::default();
+    let tasks = 200;
+    let est_ms = 50.0;
+
+    let mut rows = Vec::new();
+    for (name, energy_aware) in [("latency-optimal NSA", false),
+                                 ("energy-aware (5% tolerance band)", true)] {
+        let sched = Scheduler::new(ScoringWeights::default());
+        let mut joules = 0.0;
+        for t in 0..tasks {
+            let pick = if energy_aware {
+                sched.select_node_energy_aware(&nodes, &req, est_ms, 1000, 0.05)
+            } else {
+                sched.select_node(&nodes, &req)
+            };
+            let (node, _) = pick.expect("selection");
+            joules += node.predict_task_joules(est_ms, 1000);
+            sched.task_started(node.id());
+            if t >= 2 {
+                // steady-state completion
+                sched.task_completed(node.id(), est_ms);
+            }
+        }
+        rows.push(vec![
+            name.to_string(),
+            format!("{joules:.1}"),
+            format!("{:.3}", joules / tasks as f64),
+        ]);
+    }
+    println!(
+        "{}",
+        markdown_table(
+            "Ablation — energy-aware node selection (200 tasks, 2 nodes, synthetic)",
+            &["Policy", "Total marginal J", "J per task"],
+            &rows,
+        )
+    );
+    eprintln!("ablation: done");
+}

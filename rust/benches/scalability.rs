@@ -1,0 +1,115 @@
+//! §IV-E regeneration: scalability analysis.
+//!
+//! Paper claims: near-linear performance scaling up to three edge nodes,
+//! consistent load balancing, and monitoring overhead <= 1% CPU. The bench
+//! sweeps 1..=4 identical nodes, measures throughput on a fixed workload,
+//! and self-measures the monitor thread. `cargo bench --bench scalability`.
+//!
+//! Partitions are profile-guided (`plan_measured` over a one-shot
+//! calibration of per-block execution time): the Eq. 9 static cost model
+//! prices the classifier at ~3% of the model while it measures at ~45%,
+//! so Eq. 9 plans bottleneck one stage and cap pipeline scaling. The
+//! profile-guided planner is the paper's own §V "automate partition
+//! optimization" future-work item.
+//!
+//! Nodes use the Low profile (0.4 CPU): on this single-core build host the
+//! cgroup-quota dilation is what creates overlap headroom for pipelining —
+//! at 1.0 CPU a single node already saturates the host and no topology
+//! could scale.
+
+use amp4ec::config::AmpConfig;
+use amp4ec::manifest::Manifest;
+use amp4ec::metrics::markdown_table;
+use amp4ec::monitor;
+use amp4ec::partitioner;
+use amp4ec::server::{calibrate_block_costs, EdgeServer};
+use amp4ec::workload::Arrival;
+
+const REQUESTS: usize = 40;
+const BATCH: usize = 8;
+
+fn run_nodes(n: usize, m: &Manifest, block_ms: &[f64]) -> (f64, f64, f64) {
+    let mut cfg = AmpConfig::profile_cluster(
+        &amp4ec::artifacts_dir(),
+        amp4ec::cluster::Profile::Low,
+        n,
+    );
+    cfg.batch = BATCH;
+    let plan = partitioner::plan_measured(m, block_ms, n).unwrap();
+    let server = EdgeServer::start_with_plan(cfg, Some(plan)).unwrap();
+    let report = server
+        .serve_workload(REQUESTS, REQUESTS, Arrival::Closed, 301)
+        .unwrap();
+    (
+        report.metrics.throughput_rps(),
+        report.metrics.mean_latency_ms(),
+        report.monitor_overhead_pct,
+    )
+}
+
+fn main() {
+    let m = Manifest::load(&amp4ec::artifacts_dir())
+        .expect("run `make artifacts` first");
+    eprintln!("scalability: calibrating per-block costs...");
+    let block_ms = calibrate_block_costs(&m, BATCH).unwrap();
+    eprintln!(
+        "scalability: calibrated block costs (ms at b{BATCH}): {:?}",
+        block_ms.iter().map(|v| format!("{v:.1}")).collect::<Vec<_>>()
+    );
+    eprintln!("scalability: sweeping 1..=4 nodes x {REQUESTS} requests...");
+    let mut rows = Vec::new();
+    let mut tputs = Vec::new();
+    for n in 1..=4 {
+        let (tput, lat, mon) = run_nodes(n, &m, &block_ms);
+        tputs.push(tput);
+        rows.push(vec![
+            format!("{n}"),
+            format!("{tput:.2}"),
+            format!("{:.2}x", tput / tputs[0]),
+            format!("{lat:.1}"),
+            format!("{mon:.3}%"),
+        ]);
+    }
+    println!(
+        "{}",
+        markdown_table(
+            "§IV-E — scalability with identical Low-profile (0.4 CPU) nodes, profile-guided partitions",
+            &["Nodes", "Throughput (req/s)", "Speedup vs 1 node",
+              "Mean latency (ms)", "Monitor CPU"],
+            &rows,
+        )
+    );
+
+    // ---- monitor overhead at the paper's 1 Hz --------------------------
+    let cluster = std::sync::Arc::new(amp4ec::cluster::Cluster::new(
+        amp4ec::cluster::SimParams::default(),
+    ));
+    for i in 0..3 {
+        cluster.add_node(amp4ec::cluster::NodeSpec::new(
+            &format!("n{i}"),
+            1.0,
+            1024.0,
+        ));
+    }
+    let handle = monitor::spawn(
+        std::sync::Arc::clone(&cluster),
+        monitor::MonitorConfig {
+            sample_interval: std::time::Duration::from_millis(1000),
+            history_len: 64,
+        },
+    );
+    std::thread::sleep(std::time::Duration::from_millis(2500));
+    let pct = handle.overhead_cpu_pct();
+    println!("monitor overhead at 1 Hz over 3 nodes: {pct:.4}% CPU (paper: <= 1%)");
+    assert!(pct <= 1.0, "monitor overhead {pct}% exceeds the paper's 1% claim");
+
+    // Shape assertion: scaling 1 -> 3 nodes improves throughput
+    // substantially (paper: linear up to 3 nodes).
+    assert!(
+        tputs[2] > tputs[0] * 1.4,
+        "3-node throughput {:.2} should scale well past 1-node {:.2}",
+        tputs[2],
+        tputs[0]
+    );
+    eprintln!("scalability: shape assertions PASSED");
+}

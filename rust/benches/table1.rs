@@ -1,0 +1,167 @@
+//! Table I regeneration: comparison of system performance metrics between
+//! AMP4EC(+Cache) and the monolithic approach.
+//!
+//! Paper's setup (§IV-B): MobileNetV2, batches of 32 inference requests;
+//! monolithic on one 2-core/2GB container; distributed over a
+//! heterogeneous cluster (1.0/1GB, 0.6/512MB, 0.4/512MB). We reproduce
+//! the *shape* (who wins, roughly what factor); absolute numbers differ —
+//! our substrate is a virtual cluster over XLA CPU, not Docker-on-MacOS
+//! over PyTorch. Run with `cargo bench --bench table1`.
+
+use std::sync::Arc;
+
+use amp4ec::baseline::{baseline_node_spec, MonolithicService};
+use amp4ec::cluster::{Cluster, SimParams};
+use amp4ec::config::AmpConfig;
+use amp4ec::manifest::Manifest;
+use amp4ec::metrics::{markdown_table, RunMetrics};
+use amp4ec::router::{self, InferenceService, RouterConfig};
+use amp4ec::server::EdgeServer;
+use amp4ec::workload::{feed, Arrival, InputPool};
+
+const REQUESTS: usize = 32;
+const DISTINCT: usize = 8;
+
+struct Row {
+    name: &'static str,
+    metrics: RunMetrics,
+    deploy_bytes: u64,
+    monitor_pct: f64,
+}
+
+fn run_monolithic(manifest: &Manifest) -> Row {
+    let cluster = Cluster::new(SimParams::default());
+    let id = cluster.add_node(baseline_node_spec());
+    let svc = Arc::new(
+        MonolithicService::new(manifest, cluster.get(id).unwrap(), 1).unwrap(),
+    );
+    let deploy_bytes = manifest.monolithic.as_ref().unwrap().weights_bytes;
+    let pool = InputPool::new(svc.input_shape(), DISTINCT, 101);
+    let (tx, rx) = router::request_channel(256);
+    let svc_dyn: Arc<dyn InferenceService> = svc;
+    let handle = std::thread::spawn(move || {
+        router::serve(svc_dyn, rx, RouterConfig::default(), None)
+    });
+    feed(&tx, &pool, REQUESTS, Arrival::Closed, 102);
+    drop(tx);
+    Row {
+        name: "Monolithic",
+        metrics: handle.join().unwrap(),
+        deploy_bytes,
+        monitor_pct: 0.0,
+    }
+}
+
+fn run_amp4ec(name: &'static str, cached: bool) -> Row {
+    let mut cfg = if cached {
+        AmpConfig::paper_cluster_cached(&amp4ec::artifacts_dir())
+    } else {
+        AmpConfig::paper_cluster(&amp4ec::artifacts_dir())
+    };
+    cfg.batch = 8;
+    cfg.profiled_partitioning = true;
+    let server = EdgeServer::start(cfg).unwrap();
+    if cached {
+        // Warm half the pool; the measured run mixes hits and misses
+        // (the paper's cache was partially effective, not omniscient).
+        server
+            .serve_workload(DISTINCT, DISTINCT, Arrival::Closed, 101)
+            .unwrap();
+    }
+    let pool_size = if cached { DISTINCT * 2 } else { DISTINCT };
+    let report = server
+        .serve_workload(REQUESTS, pool_size, Arrival::Closed, 101)
+        .unwrap();
+    Row {
+        name,
+        metrics: report.metrics,
+        deploy_bytes: report.deploy_transfer_bytes,
+        monitor_pct: report.monitor_overhead_pct,
+    }
+}
+
+fn main() {
+    let manifest = Manifest::load(&amp4ec::artifacts_dir())
+        .expect("run `make artifacts` first");
+    eprintln!("table1: running 3 configurations x {REQUESTS} requests...");
+
+    let rows = vec![
+        run_amp4ec("AMP4EC+Cache", true),
+        run_amp4ec("AMP4EC", false),
+        run_monolithic(&manifest),
+    ];
+
+    let fmt_rows: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            let m = &r.metrics;
+            vec![
+                r.name.to_string(),
+                format!("{:.2}", m.mean_latency_ms()),
+                format!("{:.2}", m.throughput_rps()),
+                format!("{:.2}", m.mean_comm_ms()),
+                format!("{:.2}", m.mean_sched_ms()),
+                format!("{:.3}", m.stability_score()),
+                format!("{:.1}", r.deploy_bytes as f64 / 1e6),
+                format!("{:.3}", r.monitor_pct),
+                format!("{}", m.cache_hits),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        markdown_table(
+            "Table I — AMP4EC vs monolithic (paper: -78% latency, +415% throughput)",
+            &[
+                "Config", "Latency (ms)", "Throughput (req/s)",
+                "Comm overhead (ms)", "Sched overhead (ms)", "Stability",
+                "Bandwidth (MB)", "Monitor CPU %", "Cache hits"
+            ],
+            &fmt_rows,
+        )
+    );
+
+    let mono = &rows[2].metrics;
+    let cache = &rows[0].metrics;
+    let plain = &rows[1].metrics;
+    println!("improvements vs monolithic:");
+    println!(
+        "  AMP4EC       : latency {:+.1}%  throughput {:+.1}%",
+        (plain.mean_latency_ms() / mono.mean_latency_ms() - 1.0) * 100.0,
+        (plain.throughput_rps() / mono.throughput_rps() - 1.0) * 100.0
+    );
+    println!(
+        "  AMP4EC+Cache : latency {:+.1}%  throughput {:+.1}%",
+        (cache.mean_latency_ms() / mono.mean_latency_ms() - 1.0) * 100.0,
+        (cache.throughput_rps() / mono.throughput_rps() - 1.0) * 100.0
+    );
+    println!(
+        "  paper        : latency -78.35%  throughput +414.73%  (shape target)"
+    );
+
+    // Shape assertions — fail loudly if the reproduction regresses.
+    // Plain AMP4EC ties an *optimized* monolithic baseline (equal
+    // aggregate compute; the paper's 5x gap reflects its unoptimized
+    // baseline — see EXPERIMENTS.md); +Cache must beat it outright.
+    assert!(
+        plain.throughput_rps() > mono.throughput_rps() / 2.5,
+        "AMP4EC must stay within 2.5x of monolithic throughput"
+    );
+    assert!(
+        cache.throughput_rps() > mono.throughput_rps(),
+        "+Cache must beat monolithic throughput"
+    );
+    assert!(
+        cache.mean_latency_ms() < mono.mean_latency_ms(),
+        "+Cache must beat monolithic latency"
+    );
+    assert!(
+        cache.mean_latency_ms() < plain.mean_latency_ms(),
+        "+Cache must cut latency vs plain AMP4EC"
+    );
+    assert!(
+        rows[0].deploy_bytes == 0,
+        "+Cache redeploy must move zero bytes (paper: 100MB -> 0)"
+    );
+    eprintln!("table1: shape assertions PASSED");
+}

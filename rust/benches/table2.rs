@@ -1,0 +1,88 @@
+//! Table II regeneration: resource profiles and performance.
+//!
+//! Paper: High (1.0 CPU, 1GB) 234.56 ms; Medium (0.6, 512MB) 389.27 ms;
+//! Low (0.4, 512MB) 583.91 ms — ratios 1 : 1.66 : 2.49, which track the
+//! inverse CPU shares. The bench reproduces ordering + ratios on the
+//! virtual cluster and asserts the shape. `cargo bench --bench table2`.
+
+use amp4ec::cluster::Profile;
+use amp4ec::config::AmpConfig;
+use amp4ec::metrics::markdown_table;
+use amp4ec::server::{single_request, EdgeServer};
+use amp4ec::util::stats::Summary;
+use amp4ec::workload::InputPool;
+
+const ITERATIONS: usize = 30;
+
+fn measure(profile: Profile) -> Summary {
+    let cfg = AmpConfig::profile_cluster(&amp4ec::artifacts_dir(), profile, 3);
+    let server = EdgeServer::start(cfg).unwrap();
+    let pool = InputPool::new(&server.request_shape(), 4, 201);
+    let mut lat = Summary::new();
+    single_request(&server, pool.get(0)).unwrap(); // warm-up
+    for i in 0..ITERATIONS {
+        let (_, ms) = single_request(&server, pool.get(i)).unwrap();
+        lat.record(ms);
+    }
+    lat
+}
+
+fn main() {
+    eprintln!("table2: sweeping 3 resource profiles x {ITERATIONS} iterations...");
+    let profiles = [
+        (Profile::High, 234.56),
+        (Profile::Medium, 389.27),
+        (Profile::Low, 583.91),
+    ];
+    let mut results = Vec::new();
+    for (p, paper_ms) in profiles {
+        let lat = measure(p);
+        results.push((p, paper_ms, lat));
+    }
+
+    let high_mean = results[0].2.mean();
+    let rows: Vec<Vec<String>> = results
+        .iter()
+        .map(|(p, paper_ms, lat)| {
+            let spec = p.spec();
+            vec![
+                p.name().to_string(),
+                format!("{}", spec.cpu_fraction),
+                format!("{}", spec.mem_limit_mb),
+                format!("{:.2}", lat.mean()),
+                format!("{:.2}", lat.p50()),
+                format!("{:.2}x", lat.mean() / high_mean),
+                format!("{paper_ms:.2}"),
+                format!("{:.2}x", paper_ms / 234.56),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        markdown_table(
+            "Table II — resource profiles and performance",
+            &[
+                "Profile", "CPU", "Mem MB", "Measured mean (ms)",
+                "Measured p50 (ms)", "Ratio", "Paper (ms)", "Paper ratio"
+            ],
+            &rows,
+        )
+    );
+
+    // Shape assertions: strict ordering High < Medium < Low, and the
+    // Medium/Low ratios within 40% of the paper's (which equal inverse
+    // CPU shares).
+    let (h, m, l) = (results[0].2.mean(), results[1].2.mean(), results[2].2.mean());
+    assert!(h < m && m < l, "profile ordering violated: {h} {m} {l}");
+    let med_ratio = m / h;
+    let low_ratio = l / h;
+    assert!(
+        (med_ratio - 1.66).abs() / 1.66 < 0.4,
+        "Medium ratio {med_ratio:.2} too far from paper 1.66"
+    );
+    assert!(
+        (low_ratio - 2.49).abs() / 2.49 < 0.4,
+        "Low ratio {low_ratio:.2} too far from paper 2.49"
+    );
+    eprintln!("table2: shape assertions PASSED");
+}

@@ -1,0 +1,107 @@
+//! Monolithic baseline — the paper's comparator in Table I.
+//!
+//! The whole model runs as a single AOT artifact on a single node (the
+//! paper used one container with 2 cores / 2 GB). No partitioning, no
+//! scheduling, no pipelining: requests execute strictly serially on the
+//! one device, which is why its throughput flatlines while AMP4EC
+//! overlaps stages across nodes.
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::cluster::VirtualNode;
+use crate::manifest::Manifest;
+use crate::router::InferenceService;
+use crate::runtime::{BlockHandle, Executor, Tensor};
+
+/// The paper's baseline node: 2 cores, 2 GB. We model "2 cores" as full
+/// host speed (cpu_fraction 1.0 is the no-dilation ceiling), which is
+/// *generous* to the baseline — AMP4EC's reported wins survive it.
+pub fn baseline_node_spec() -> crate::cluster::NodeSpec {
+    crate::cluster::NodeSpec::new("monolithic", 1.0, 2048.0)
+}
+
+/// Whole-model service on one virtual node with its own executor.
+pub struct MonolithicService {
+    node: Arc<VirtualNode>,
+    executor: Arc<Executor>,
+    block: BlockHandle,
+    batch: usize,
+    in_shape: Vec<usize>,
+}
+
+impl MonolithicService {
+    /// Load the monolithic artifact at `batch` and pin it to `node`.
+    pub fn new(
+        manifest: &Manifest,
+        node: Arc<VirtualNode>,
+        batch: usize,
+    ) -> Result<MonolithicService> {
+        let mono = manifest
+            .monolithic
+            .as_ref()
+            .context("manifest has no monolithic artifact")?;
+        let hlo = mono
+            .artifacts
+            .get(&batch)
+            .with_context(|| format!("no monolithic artifact for batch {batch}"))?;
+        let executor = Arc::new(Executor::spawn(node.name())?);
+        let block = executor.load_block(
+            manifest.dir.join(hlo),
+            manifest.dir.join(&mono.weights_file),
+            manifest.total_params as usize,
+            vec![batch, manifest.num_classes],
+        )?;
+        // Model transfer to the node + memory reservation.
+        node.link().receive(mono.weights_bytes);
+        node.mem_reserve(mono.weights_bytes);
+        Ok(MonolithicService {
+            node,
+            executor,
+            block,
+            batch,
+            in_shape: vec![batch, manifest.input_hw, manifest.input_hw,
+                           manifest.input_channels],
+        })
+    }
+
+    pub fn node(&self) -> &Arc<VirtualNode> {
+        &self.node
+    }
+
+    pub fn input_shape(&self) -> &[usize] {
+        &self.in_shape
+    }
+}
+
+impl InferenceService for MonolithicService {
+    fn infer_batch(&self, batch: &Tensor) -> Result<(Tensor, f64, f64)> {
+        anyhow::ensure!(
+            batch.shape == self.in_shape,
+            "expected input {:?}, got {:?}",
+            self.in_shape,
+            batch.shape
+        );
+        // Input/output still traverse the node's link (clients are remote).
+        let comm_in = self.node.link().receive(batch.byte_len());
+        let executor = &self.executor;
+        let block = self.block;
+        let input = batch.clone();
+        let (out, outcome) = self
+            .node
+            .execute_costed(move || executor.run_chain(vec![block], input))?;
+        let comm_out = self.node.link().send(out.byte_len());
+        Ok((out, outcome.sim_ms, comm_in + comm_out))
+    }
+
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    fn model_id(&self) -> u64 {
+        0xBA5E
+    }
+}
+
+// PJRT-backed tests live in rust/tests/ (need artifacts).

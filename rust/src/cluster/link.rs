@@ -1,0 +1,127 @@
+//! Network link model: latency + bandwidth with rx/tx accounting.
+//!
+//! Each virtual node has one link to the edge LAN (the Docker bridge
+//! analogue). Transfers between the leader and a node — activations moving
+//! through the partition pipeline, weight payloads during deployment —
+//! sleep out `latency + bytes/bandwidth` and are counted in the node's
+//! `network I/O` stats, mirroring Docker's `rx_bytes`/`tx_bytes`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Link characteristics.
+#[derive(Debug, Clone)]
+pub struct LinkSpec {
+    pub latency_ms: f64,
+    pub bandwidth_mbps: f64,
+}
+
+impl Default for LinkSpec {
+    fn default() -> Self {
+        // A realistic edge LAN: 1 ms, 1 Gbps.
+        LinkSpec { latency_ms: 1.0, bandwidth_mbps: 1000.0 }
+    }
+}
+
+impl LinkSpec {
+    pub fn new(latency_ms: f64, bandwidth_mbps: f64) -> LinkSpec {
+        LinkSpec { latency_ms, bandwidth_mbps }
+    }
+
+    /// Pure model: transfer time for `bytes`, in ms.
+    pub fn transfer_ms(&self, bytes: u64) -> f64 {
+        let bits = bytes as f64 * 8.0;
+        self.latency_ms + bits / (self.bandwidth_mbps * 1e3)
+    }
+}
+
+/// A live link with traffic counters.
+pub struct NetworkLink {
+    spec: LinkSpec,
+    rx_bytes: AtomicU64,
+    tx_bytes: AtomicU64,
+}
+
+impl NetworkLink {
+    pub fn new(spec: LinkSpec) -> NetworkLink {
+        NetworkLink {
+            spec,
+            rx_bytes: AtomicU64::new(0),
+            tx_bytes: AtomicU64::new(0),
+        }
+    }
+
+    pub fn spec(&self) -> &LinkSpec {
+        &self.spec
+    }
+
+    /// Simulate receiving `bytes` into this node; sleeps the model time.
+    /// Returns the delay in ms.
+    pub fn receive(&self, bytes: u64) -> f64 {
+        let ms = self.spec.transfer_ms(bytes);
+        std::thread::sleep(Duration::from_secs_f64(ms / 1e3));
+        self.rx_bytes.fetch_add(bytes, Ordering::SeqCst);
+        ms
+    }
+
+    /// Simulate sending `bytes` from this node; sleeps the model time.
+    pub fn send(&self, bytes: u64) -> f64 {
+        let ms = self.spec.transfer_ms(bytes);
+        std::thread::sleep(Duration::from_secs_f64(ms / 1e3));
+        self.tx_bytes.fetch_add(bytes, Ordering::SeqCst);
+        ms
+    }
+
+    /// Account traffic without sleeping (used when the caller aggregates
+    /// delay itself, e.g. batched deployment transfers).
+    pub fn account(&self, rx: u64, tx: u64) {
+        self.rx_bytes.fetch_add(rx, Ordering::SeqCst);
+        self.tx_bytes.fetch_add(tx, Ordering::SeqCst);
+    }
+
+    pub fn totals(&self) -> (u64, u64) {
+        (
+            self.rx_bytes.load(Ordering::SeqCst),
+            self.tx_bytes.load(Ordering::SeqCst),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_model() {
+        let l = LinkSpec::new(2.0, 100.0); // 100 Mbps
+        // 1 MB = 8e6 bits -> 80 ms + 2 ms latency.
+        let ms = l.transfer_ms(1_000_000);
+        assert!((ms - 82.0).abs() < 1e-9, "{ms}");
+        // Zero bytes still pays latency.
+        assert_eq!(l.transfer_ms(0), 2.0);
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let link = NetworkLink::new(LinkSpec::new(0.0, 1e9));
+        link.receive(100);
+        link.send(50);
+        link.account(7, 3);
+        assert_eq!(link.totals(), (107, 53));
+    }
+
+    #[test]
+    fn receive_sleeps_model_time() {
+        let link = NetworkLink::new(LinkSpec::new(10.0, 1e9));
+        let t = std::time::Instant::now();
+        let ms = link.receive(0);
+        assert!(ms >= 10.0);
+        assert!(t.elapsed().as_millis() >= 9);
+    }
+
+    #[test]
+    fn default_is_fast_lan() {
+        let l = LinkSpec::default();
+        assert!(l.transfer_ms(4 * 96 * 96 * 4) < 2.5); // one activation ~1.3ms
+    }
+}

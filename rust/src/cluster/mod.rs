@@ -1,0 +1,207 @@
+//! Virtual edge cluster — the Docker-container substitute (DESIGN.md
+//! "Substitutions").
+//!
+//! The paper evaluates AMP4EC on Docker containers with cgroup CPU quotas
+//! (`--cpu-quota`/`--cpu-period`) and memory limits (`--memory`), bridged
+//! networks with controlled latency. This module reproduces those resource
+//! semantics in-process:
+//!
+//!  * **CPU quota** — a [`node::VirtualNode`] executes work serially (one
+//!    device) and stretches measured host compute time by `1/cpu_fraction`
+//!    (a 0.4-CPU node takes 2.5x as long as the host), exactly what a
+//!    cgroup quota does to a CPU-bound container over time scales larger
+//!    than the period;
+//!  * **memory limit** — a working-set accountant; exceeding the limit
+//!    applies a paging penalty multiplier (the container analogue is the
+//!    kernel reclaiming/major-faulting, which degrades rather than kills
+//!    until the OOM threshold);
+//!  * **network** — per-node [`link::NetworkLink`] with latency and
+//!    bandwidth; transfers sleep `latency + bytes/bandwidth` and count
+//!    rx/tx bytes (the Docker stats `network I/O` metric).
+//!
+//! All of the paper's resource ratios (1.0/0.6/0.4 CPU; 1GB/512MB) are
+//! expressed through these knobs, so scheduler and partitioner behaviour
+//! is preserved while runs stay deterministic and laptop-sized.
+
+pub mod energy;
+pub mod link;
+pub mod node;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, RwLock};
+
+pub use energy::{EnergyMeter, EnergyReading, PowerModel};
+pub use link::{LinkSpec, NetworkLink};
+pub use node::{ExecOutcome, NodeSnapshot, NodeSpec, VirtualNode};
+
+/// Cluster-wide simulation parameters.
+#[derive(Debug, Clone)]
+pub struct SimParams {
+    /// Multiplier applied to all simulated compute time. 1.0 = host speed;
+    /// larger values emulate weaker edge silicon than the build host.
+    pub time_scale: f64,
+    /// Paging penalty slope: effective time *= 1 + page_factor * overflow
+    /// where overflow = (working_set - limit) / limit, when over the limit.
+    pub page_factor: f64,
+    /// Fixed per-node runtime footprint (the PyTorch-container analogue;
+    /// the paper's 512MB nodes were mostly full of framework overhead).
+    pub runtime_overhead_mb: f64,
+}
+
+impl Default for SimParams {
+    fn default() -> Self {
+        SimParams {
+            time_scale: 1.0,
+            page_factor: 4.0,
+            runtime_overhead_mb: 384.0,
+        }
+    }
+}
+
+/// Stable node identifier (survives add/remove cycles).
+pub type NodeId = usize;
+
+/// A dynamic collection of virtual edge nodes.
+///
+/// Nodes are added/removed at runtime (the paper's "new device added" /
+/// "device offline" scenarios); removal marks the node offline so inflight
+/// bookkeeping stays valid, and the monitor stops reporting it.
+pub struct Cluster {
+    params: SimParams,
+    nodes: RwLock<Vec<Arc<VirtualNode>>>,
+    next_id: AtomicUsize,
+}
+
+impl Cluster {
+    pub fn new(params: SimParams) -> Cluster {
+        Cluster {
+            params,
+            nodes: RwLock::new(Vec::new()),
+            next_id: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn params(&self) -> &SimParams {
+        &self.params
+    }
+
+    /// Add a node; returns its id.
+    pub fn add_node(&self, spec: NodeSpec) -> NodeId {
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        let node = Arc::new(VirtualNode::new(id, spec, self.params.clone()));
+        self.nodes.write().unwrap().push(node);
+        id
+    }
+
+    /// Mark a node offline (the "device offline" event). Returns false if
+    /// the id is unknown.
+    pub fn remove_node(&self, id: NodeId) -> bool {
+        let nodes = self.nodes.read().unwrap();
+        match nodes.iter().find(|n| n.id() == id) {
+            Some(n) => {
+                n.set_online(false);
+                true
+            }
+            None => false,
+        }
+    }
+
+    pub fn get(&self, id: NodeId) -> Option<Arc<VirtualNode>> {
+        self.nodes
+            .read()
+            .unwrap()
+            .iter()
+            .find(|n| n.id() == id)
+            .cloned()
+    }
+
+    /// All nodes ever added (including offline ones).
+    pub fn all_nodes(&self) -> Vec<Arc<VirtualNode>> {
+        self.nodes.read().unwrap().clone()
+    }
+
+    /// Currently-online nodes, the scheduler's candidate set.
+    pub fn online_nodes(&self) -> Vec<Arc<VirtualNode>> {
+        self.nodes
+            .read()
+            .unwrap()
+            .iter()
+            .filter(|n| n.is_online())
+            .cloned()
+            .collect()
+    }
+
+    pub fn online_count(&self) -> usize {
+        self.nodes
+            .read()
+            .unwrap()
+            .iter()
+            .filter(|n| n.is_online())
+            .count()
+    }
+}
+
+/// The paper's three resource profiles (§IV-A Table II).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Profile {
+    High,   // 1.0 CPU, 1 GB
+    Medium, // 0.6 CPU, 512 MB
+    Low,    // 0.4 CPU, 512 MB
+}
+
+impl Profile {
+    pub fn spec(&self) -> NodeSpec {
+        match self {
+            Profile::High => NodeSpec::new("high", 1.0, 1024.0),
+            Profile::Medium => NodeSpec::new("medium", 0.6, 512.0),
+            Profile::Low => NodeSpec::new("low", 0.4, 512.0),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Profile::High => "High",
+            Profile::Medium => "Medium",
+            Profile::Low => "Low",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_remove_nodes() {
+        let c = Cluster::new(SimParams::default());
+        let a = c.add_node(NodeSpec::new("a", 1.0, 1024.0));
+        let b = c.add_node(NodeSpec::new("b", 0.5, 512.0));
+        assert_eq!(c.online_count(), 2);
+        assert!(c.remove_node(a));
+        assert_eq!(c.online_count(), 1);
+        assert_eq!(c.online_nodes()[0].id(), b);
+        assert!(!c.remove_node(99));
+        // removed node still reachable for bookkeeping
+        assert!(c.get(a).is_some());
+        assert!(!c.get(a).unwrap().is_online());
+    }
+
+    #[test]
+    fn ids_are_stable_and_unique() {
+        let c = Cluster::new(SimParams::default());
+        let a = c.add_node(NodeSpec::new("a", 1.0, 512.0));
+        c.remove_node(a);
+        let b = c.add_node(NodeSpec::new("b", 1.0, 512.0));
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn profiles_match_paper() {
+        let h = Profile::High.spec();
+        assert_eq!(h.cpu_fraction, 1.0);
+        assert_eq!(h.mem_limit_mb, 1024.0);
+        let l = Profile::Low.spec();
+        assert_eq!(l.cpu_fraction, 0.4);
+        assert_eq!(l.mem_limit_mb, 512.0);
+    }
+}

@@ -1,0 +1,486 @@
+//! A virtual edge node: serial execution, CPU-quota time dilation, memory
+//! accounting with paging penalty, load/stability tracking.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use super::energy::{EnergyMeter, EnergyReading, PowerModel};
+use super::link::{LinkSpec, NetworkLink};
+use super::SimParams;
+
+/// Static description of a node's resources (the `docker run` flags).
+#[derive(Debug, Clone)]
+pub struct NodeSpec {
+    pub name: String,
+    /// CPU share, (0, 1]: 0.4 == `--cpu-quota 40000 --cpu-period 100000`.
+    pub cpu_fraction: f64,
+    /// Memory limit in MB (`--memory`).
+    pub mem_limit_mb: f64,
+    /// Network link to the edge LAN.
+    pub link: LinkSpec,
+    /// Probability an execution fails (failure injection for robustness
+    /// tests); 0 by default.
+    pub fail_rate: f64,
+    /// Power characteristics for the energy meter (§V energy-aware
+    /// extension).
+    pub power: PowerModel,
+}
+
+impl NodeSpec {
+    pub fn new(name: &str, cpu_fraction: f64, mem_limit_mb: f64) -> NodeSpec {
+        NodeSpec {
+            name: name.to_string(),
+            cpu_fraction,
+            mem_limit_mb,
+            link: LinkSpec::default(),
+            fail_rate: 0.0,
+            power: PowerModel::default(),
+        }
+    }
+
+    pub fn with_link(mut self, link: LinkSpec) -> NodeSpec {
+        self.link = link;
+        self
+    }
+
+    pub fn with_fail_rate(mut self, p: f64) -> NodeSpec {
+        self.fail_rate = p;
+        self
+    }
+
+    pub fn with_power(mut self, power: PowerModel) -> NodeSpec {
+        self.power = power;
+        self
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.cpu_fraction > 0.0 && self.cpu_fraction <= 8.0,
+            "cpu_fraction {} out of range (0, 8]",
+            self.cpu_fraction
+        );
+        anyhow::ensure!(self.mem_limit_mb > 0.0, "mem_limit_mb must be > 0");
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.fail_rate),
+            "fail_rate must be in [0, 1]"
+        );
+        self.power.validate()?;
+        Ok(())
+    }
+}
+
+/// Timing breakdown of one execution on a node.
+#[derive(Debug, Clone, Copy)]
+pub struct ExecOutcome {
+    /// Host wall time actually spent computing.
+    pub host_ms: f64,
+    /// Simulated edge time (host * 1/cpu * time_scale * mem penalty),
+    /// which is also the real wall time the call took (we sleep the gap).
+    pub sim_ms: f64,
+    /// The memory-paging multiplier that was in effect ( >= 1 ).
+    pub mem_penalty: f64,
+}
+
+/// Point-in-time resource reading (the Docker stats API analogue).
+#[derive(Debug, Clone)]
+pub struct NodeSnapshot {
+    pub id: usize,
+    pub name: String,
+    pub online: bool,
+    pub cpu_fraction: f64,
+    pub mem_limit_mb: f64,
+    /// Fraction of recent wall time the node was busy, in [0, 1].
+    pub current_load: f64,
+    pub mem_used_mb: f64,
+    pub mem_pct: f64,
+    pub rx_bytes: u64,
+    pub tx_bytes: u64,
+    pub tasks_completed: u64,
+    pub tasks_failed: u64,
+    /// 1.0 = perfectly stable; decays with failures.
+    pub stability: f64,
+    pub link_latency_ms: f64,
+}
+
+/// Mutable interior state guarded by a mutex (cold path only).
+struct Inner {
+    /// EWMA of busy fraction.
+    load: f64,
+    last_update: Instant,
+    busy_since_update_ms: f64,
+}
+
+/// A simulated edge device. Execution is serialized (one inference device
+/// per node, like one container running one model server).
+pub struct VirtualNode {
+    id: usize,
+    spec: NodeSpec,
+    params: SimParams,
+    online: AtomicBool,
+    /// Memory working set currently reserved, in bytes.
+    mem_used: AtomicU64,
+    tasks_completed: AtomicU64,
+    tasks_failed: AtomicU64,
+    /// Serialized execution (the single "device").
+    exec_lock: Mutex<()>,
+    inner: Mutex<Inner>,
+    link: NetworkLink,
+    energy: EnergyMeter,
+    /// Deterministic failure-injection stream.
+    fail_stream: Mutex<crate::util::rng::Rng>,
+}
+
+impl VirtualNode {
+    pub fn new(id: usize, spec: NodeSpec, params: SimParams) -> VirtualNode {
+        let link = NetworkLink::new(spec.link.clone());
+        let energy = EnergyMeter::new(spec.power, spec.cpu_fraction);
+        let seed = 0x5EED ^ (id as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        VirtualNode {
+            id,
+            spec,
+            params,
+            online: AtomicBool::new(true),
+            mem_used: AtomicU64::new(0),
+            tasks_completed: AtomicU64::new(0),
+            tasks_failed: AtomicU64::new(0),
+            exec_lock: Mutex::new(()),
+            inner: Mutex::new(Inner {
+                load: 0.0,
+                last_update: Instant::now(),
+                busy_since_update_ms: 0.0,
+            }),
+            link,
+            energy,
+            fail_stream: Mutex::new(crate::util::rng::Rng::new(seed)),
+        }
+    }
+
+    pub fn id(&self) -> usize {
+        self.id
+    }
+
+    pub fn name(&self) -> &str {
+        &self.spec.name
+    }
+
+    pub fn spec(&self) -> &NodeSpec {
+        &self.spec
+    }
+
+    pub fn link(&self) -> &NetworkLink {
+        &self.link
+    }
+
+    /// Accumulated energy (compute + idle floor + NIC traffic).
+    pub fn energy(&self) -> EnergyReading {
+        let (rx, tx) = self.link.totals();
+        self.energy.reading_with_net(rx + tx)
+    }
+
+    /// Predicted marginal joules of a prospective task on this node.
+    pub fn predict_task_joules(&self, est_ms: f64, bytes: u64) -> f64 {
+        self.energy.predict_task_joules(est_ms, bytes)
+    }
+
+    pub fn is_online(&self) -> bool {
+        self.online.load(Ordering::SeqCst)
+    }
+
+    pub fn set_online(&self, v: bool) {
+        self.online.store(v, Ordering::SeqCst);
+    }
+
+    // -- memory accounting ---------------------------------------------
+
+    /// Reserve working-set bytes (weights, activations). Never rejects —
+    /// like a cgroup, exceeding the limit *degrades* (paging penalty)
+    /// rather than failing outright; the deployer checks capacity before
+    /// placing partitions.
+    pub fn mem_reserve(&self, bytes: u64) {
+        self.mem_used.fetch_add(bytes, Ordering::SeqCst);
+    }
+
+    pub fn mem_release(&self, bytes: u64) {
+        // Saturating: double-release is a bug but must not wrap.
+        let mut cur = self.mem_used.load(Ordering::SeqCst);
+        loop {
+            let next = cur.saturating_sub(bytes);
+            match self.mem_used.compare_exchange(
+                cur,
+                next,
+                Ordering::SeqCst,
+                Ordering::SeqCst,
+            ) {
+                Ok(_) => break,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    /// Working set including the fixed runtime overhead, in MB.
+    pub fn mem_working_set_mb(&self) -> f64 {
+        self.mem_used.load(Ordering::SeqCst) as f64 / (1024.0 * 1024.0)
+            + self.params.runtime_overhead_mb
+    }
+
+    /// Current paging-penalty multiplier (1.0 when under the limit).
+    pub fn mem_penalty(&self) -> f64 {
+        let ws = self.mem_working_set_mb();
+        let limit = self.spec.mem_limit_mb;
+        if ws <= limit {
+            1.0
+        } else {
+            1.0 + self.params.page_factor * (ws - limit) / limit
+        }
+    }
+
+    /// Headroom check used by the scheduler's `has_sufficient_resources`.
+    pub fn mem_available_mb(&self) -> f64 {
+        (self.spec.mem_limit_mb - self.mem_working_set_mb()).max(0.0)
+    }
+
+    // -- execution -------------------------------------------------------
+
+    /// Run `work` on this node's (single) device, applying the CPU-quota
+    /// time dilation and the current memory penalty. Returns the work's
+    /// output plus the timing breakdown, or an injected failure.
+    ///
+    /// The dilation basis is the *wall* time of `work`; when the caller
+    /// can measure a contention-free compute cost (thread CPU time of an
+    /// executor thread), prefer [`VirtualNode::execute_costed`].
+    pub fn execute<T>(
+        &self,
+        work: impl FnOnce() -> anyhow::Result<T>,
+    ) -> anyhow::Result<(T, ExecOutcome)> {
+        self.execute_costed(|| {
+            let t0 = Instant::now();
+            let out = work()?;
+            Ok((out, t0.elapsed().as_secs_f64() * 1e3))
+        })
+    }
+
+    /// Like [`VirtualNode::execute`], but `work` reports its own nominal
+    /// compute cost in ms (e.g. executor-thread CPU time). The simulated
+    /// edge time is `cost / cpu_fraction * time_scale * mem_penalty`; the
+    /// call sleeps out whatever wall time that exceeds, so concurrent
+    /// stages on a contended build host are not double-penalized.
+    pub fn execute_costed<T>(
+        &self,
+        work: impl FnOnce() -> anyhow::Result<(T, f64)>,
+    ) -> anyhow::Result<(T, ExecOutcome)> {
+        anyhow::ensure!(self.is_online(), "node {} is offline", self.spec.name);
+        let _guard = self.exec_lock.lock().unwrap();
+        // Failure injection (deterministic per node).
+        if self.spec.fail_rate > 0.0
+            && self.fail_stream.lock().unwrap().chance(self.spec.fail_rate)
+        {
+            self.tasks_failed.fetch_add(1, Ordering::SeqCst);
+            anyhow::bail!("injected failure on node {}", self.spec.name);
+        }
+
+        let start = Instant::now();
+        let out = work();
+        let wall_ms = start.elapsed().as_secs_f64() * 1e3;
+
+        let mem_penalty = self.mem_penalty();
+        let (result, host_ms) = match out {
+            Ok((v, cost)) => (Ok(v), cost),
+            Err(e) => (Err(e), wall_ms),
+        };
+        let sim_ms = host_ms / self.spec.cpu_fraction
+            * self.params.time_scale
+            * mem_penalty;
+        // Sleep out the remainder so wall time == simulated edge time.
+        let gap = sim_ms - wall_ms;
+        if gap > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(gap / 1e3));
+        }
+
+        self.note_busy(sim_ms.max(wall_ms));
+        self.energy.note_busy(sim_ms.max(wall_ms));
+        match result {
+            Ok(v) => {
+                self.tasks_completed.fetch_add(1, Ordering::SeqCst);
+                Ok((v, ExecOutcome { host_ms, sim_ms, mem_penalty }))
+            }
+            Err(e) => {
+                self.tasks_failed.fetch_add(1, Ordering::SeqCst);
+                Err(e)
+            }
+        }
+    }
+
+    /// Record busy time into the load EWMA.
+    fn note_busy(&self, busy_ms: f64) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.busy_since_update_ms += busy_ms;
+        self.refresh_load(&mut inner);
+    }
+
+    /// Fold accumulated busy time into the EWMA load. Called on both the
+    /// execution path and the monitor's sampling path.
+    fn refresh_load(&self, inner: &mut Inner) {
+        let elapsed_ms =
+            inner.last_update.elapsed().as_secs_f64() * 1e3;
+        if elapsed_ms < 1.0 {
+            return; // avoid division blowups on tight loops
+        }
+        let inst = (inner.busy_since_update_ms / elapsed_ms).min(1.0);
+        const ALPHA: f64 = 0.4;
+        inner.load = ALPHA * inst + (1.0 - ALPHA) * inner.load;
+        inner.busy_since_update_ms = 0.0;
+        inner.last_update = Instant::now();
+    }
+
+    /// EWMA busy fraction in [0, 1] — the scheduler's `current_load`.
+    pub fn current_load(&self) -> f64 {
+        let mut inner = self.inner.lock().unwrap();
+        self.refresh_load(&mut inner);
+        inner.load
+    }
+
+    /// Stability score: success ratio with full credit when idle.
+    pub fn stability(&self) -> f64 {
+        let ok = self.tasks_completed.load(Ordering::SeqCst) as f64;
+        let bad = self.tasks_failed.load(Ordering::SeqCst) as f64;
+        if ok + bad == 0.0 {
+            1.0
+        } else {
+            ok / (ok + bad)
+        }
+    }
+
+    pub fn snapshot(&self) -> NodeSnapshot {
+        let (rx, tx) = self.link.totals();
+        NodeSnapshot {
+            id: self.id,
+            name: self.spec.name.clone(),
+            online: self.is_online(),
+            cpu_fraction: self.spec.cpu_fraction,
+            mem_limit_mb: self.spec.mem_limit_mb,
+            current_load: self.current_load(),
+            mem_used_mb: self.mem_working_set_mb(),
+            mem_pct: (self.mem_working_set_mb() / self.spec.mem_limit_mb
+                * 100.0)
+                .min(100.0),
+            rx_bytes: rx,
+            tx_bytes: tx,
+            tasks_completed: self.tasks_completed.load(Ordering::SeqCst),
+            tasks_failed: self.tasks_failed.load(Ordering::SeqCst),
+            stability: self.stability(),
+            link_latency_ms: self.spec.link.latency_ms,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn node(cpu: f64, mem: f64) -> VirtualNode {
+        let params = SimParams {
+            time_scale: 1.0,
+            page_factor: 4.0,
+            runtime_overhead_mb: 0.0,
+        };
+        VirtualNode::new(0, NodeSpec::new("t", cpu, mem), params)
+    }
+
+    fn busy_work(ms: u64) -> anyhow::Result<u64> {
+        let t = Instant::now();
+        let mut x = 0u64;
+        while t.elapsed() < Duration::from_millis(ms) {
+            x = x.wrapping_add(1);
+            std::hint::black_box(x);
+        }
+        Ok(x)
+    }
+
+    #[test]
+    fn cpu_quota_dilates_time() {
+        let half = node(0.5, 1024.0);
+        let t = Instant::now();
+        let (_, outcome) = half.execute(|| busy_work(20)).unwrap();
+        let wall = t.elapsed().as_secs_f64() * 1e3;
+        // 20ms of host work at 0.5 CPU => ~40ms simulated & ~40ms wall.
+        assert!(outcome.sim_ms >= 1.9 * outcome.host_ms,
+                "sim {} host {}", outcome.sim_ms, outcome.host_ms);
+        assert!(wall >= 0.9 * outcome.sim_ms);
+    }
+
+    #[test]
+    fn full_cpu_adds_no_dilation() {
+        let full = node(1.0, 1024.0);
+        let (_, outcome) = full.execute(|| busy_work(5)).unwrap();
+        assert!((outcome.sim_ms - outcome.host_ms).abs() < 1.0);
+        assert_eq!(outcome.mem_penalty, 1.0);
+    }
+
+    #[test]
+    fn memory_penalty_applies_over_limit() {
+        let n = node(1.0, 100.0);
+        n.mem_reserve(150 * 1024 * 1024);
+        assert!(n.mem_penalty() > 1.0);
+        let (_, outcome) = n.execute(|| busy_work(5)).unwrap();
+        assert!(outcome.mem_penalty > 1.0);
+        assert!(outcome.sim_ms > outcome.host_ms * 1.5);
+        n.mem_release(150 * 1024 * 1024);
+        assert_eq!(n.mem_penalty(), 1.0);
+    }
+
+    #[test]
+    fn mem_release_saturates() {
+        let n = node(1.0, 100.0);
+        n.mem_release(10);
+        assert_eq!(n.mem_working_set_mb(), 0.0);
+    }
+
+    #[test]
+    fn offline_node_rejects_work() {
+        let n = node(1.0, 100.0);
+        n.set_online(false);
+        assert!(n.execute(|| Ok(())).is_err());
+    }
+
+    #[test]
+    fn load_rises_under_work_and_decays_idle() {
+        let n = node(1.0, 1024.0);
+        for _ in 0..5 {
+            n.execute(|| busy_work(10)).unwrap();
+        }
+        let busy_load = n.current_load();
+        assert!(busy_load > 0.2, "load {busy_load}");
+        std::thread::sleep(Duration::from_millis(120));
+        let idle_load = n.current_load();
+        assert!(idle_load < busy_load);
+    }
+
+    #[test]
+    fn failure_injection_counts() {
+        let params = SimParams::default();
+        let spec = NodeSpec::new("f", 1.0, 1024.0).with_fail_rate(1.0);
+        let n = VirtualNode::new(1, spec, params);
+        assert!(n.execute(|| Ok(())).is_err());
+        assert_eq!(n.snapshot().tasks_failed, 1);
+        assert_eq!(n.stability(), 0.0);
+    }
+
+    #[test]
+    fn stability_reflects_success_ratio() {
+        let n = node(1.0, 1024.0);
+        assert_eq!(n.stability(), 1.0);
+        n.execute(|| Ok(())).unwrap();
+        assert_eq!(n.stability(), 1.0);
+    }
+
+    #[test]
+    fn snapshot_fields() {
+        let n = node(0.6, 512.0);
+        let s = n.snapshot();
+        assert_eq!(s.cpu_fraction, 0.6);
+        assert_eq!(s.mem_limit_mb, 512.0);
+        assert!(s.online);
+        assert_eq!(s.tasks_completed, 0);
+    }
+}

@@ -1,0 +1,411 @@
+//! Typed configuration system: cluster topology, scheduler weights,
+//! partitioner/batcher/cache settings — with JSON load/save and presets
+//! for every experiment in the paper's evaluation.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::cluster::{LinkSpec, NodeSpec, Profile, SimParams};
+use crate::scheduler::ScoringWeights;
+use crate::util::json::Json;
+
+/// One node's configuration (mirrors the paper's Docker resource flags).
+#[derive(Debug, Clone)]
+pub struct NodeConfig {
+    pub name: String,
+    pub cpu: f64,
+    pub mem_mb: f64,
+    pub link_latency_ms: f64,
+    pub link_bandwidth_mbps: f64,
+    pub fail_rate: f64,
+}
+
+impl NodeConfig {
+    pub fn new(name: &str, cpu: f64, mem_mb: f64) -> NodeConfig {
+        NodeConfig {
+            name: name.to_string(),
+            cpu,
+            mem_mb,
+            link_latency_ms: 1.0,
+            link_bandwidth_mbps: 1000.0,
+            fail_rate: 0.0,
+        }
+    }
+
+    pub fn to_spec(&self) -> NodeSpec {
+        NodeSpec::new(&self.name, self.cpu, self.mem_mb)
+            .with_link(LinkSpec::new(self.link_latency_ms, self.link_bandwidth_mbps))
+            .with_fail_rate(self.fail_rate)
+    }
+}
+
+/// Full framework configuration.
+#[derive(Debug, Clone)]
+pub struct AmpConfig {
+    /// Where `manifest.json` and artifacts live.
+    pub artifacts_dir: PathBuf,
+    /// Batch size to deploy (must exist in the manifest's batch_sizes).
+    pub batch: usize,
+    /// Edge nodes.
+    pub nodes: Vec<NodeConfig>,
+    /// Partitions; None = one per online node.
+    pub num_partitions: Option<usize>,
+    /// Capability-weighted partitioning (proportional to node CPU) instead
+    /// of the paper's equal-target split.
+    pub weighted_partitioning: bool,
+    /// Profile-guided partitioning: calibrate per-block execution time at
+    /// startup and balance partitions on measured cost x node CPU share
+    /// (paper §V "automate partition optimization"). Overrides
+    /// `weighted_partitioning`.
+    pub profiled_partitioning: bool,
+    /// Scheduler scoring weights (paper defaults).
+    pub weights: ScoringWeights,
+    pub overload_threshold: f64,
+    pub latency_threshold_ms: f64,
+    /// Router: batch admission window.
+    pub max_wait_ms: u64,
+    /// Router: concurrent batches in flight.
+    pub workers: usize,
+    /// Result-cache entries; None disables (plain AMP4EC).
+    pub cache_entries: Option<usize>,
+    /// Model/deployment cache across redeployments (+Cache bandwidth=0).
+    pub model_cache: bool,
+    /// Simulation parameters.
+    pub time_scale: f64,
+    pub page_factor: f64,
+    pub runtime_overhead_mb: f64,
+    /// Monitor sampling interval.
+    pub monitor_interval_ms: u64,
+}
+
+impl Default for AmpConfig {
+    fn default() -> Self {
+        AmpConfig {
+            artifacts_dir: PathBuf::from("artifacts"),
+            batch: 1,
+            nodes: vec![
+                NodeConfig::new("edge-high", 1.0, 1024.0),
+                NodeConfig::new("edge-med", 0.6, 512.0),
+                NodeConfig::new("edge-low", 0.4, 512.0),
+            ],
+            num_partitions: None,
+            weighted_partitioning: false,
+            profiled_partitioning: false,
+            weights: ScoringWeights::default(),
+            overload_threshold: 0.8,
+            latency_threshold_ms: 100.0,
+            max_wait_ms: 10,
+            workers: 4,
+            cache_entries: None,
+            model_cache: false,
+            time_scale: 1.0,
+            page_factor: 4.0,
+            runtime_overhead_mb: 384.0,
+            monitor_interval_ms: 100,
+        }
+    }
+}
+
+impl AmpConfig {
+    // ---- presets for the paper's experiments -------------------------
+
+    /// §IV-B heterogeneous cluster: 1.0/1GB, 0.6/512MB, 0.4/512MB.
+    pub fn paper_cluster(artifacts_dir: &Path) -> AmpConfig {
+        AmpConfig {
+            artifacts_dir: artifacts_dir.to_path_buf(),
+            ..AmpConfig::default()
+        }
+    }
+
+    /// §IV-B AMP4EC+Cache: result cache + warm model cache.
+    pub fn paper_cluster_cached(artifacts_dir: &Path) -> AmpConfig {
+        AmpConfig {
+            cache_entries: Some(256),
+            model_cache: true,
+            ..AmpConfig::paper_cluster(artifacts_dir)
+        }
+    }
+
+    /// §IV-C/Table II single-profile cluster of `n` identical nodes.
+    pub fn profile_cluster(artifacts_dir: &Path, profile: Profile, n: usize) -> AmpConfig {
+        let spec = profile.spec();
+        AmpConfig {
+            artifacts_dir: artifacts_dir.to_path_buf(),
+            nodes: (0..n)
+                .map(|i| {
+                    NodeConfig::new(
+                        &format!("{}-{i}", profile.name().to_lowercase()),
+                        spec.cpu_fraction,
+                        spec.mem_limit_mb,
+                    )
+                })
+                .collect(),
+            ..AmpConfig::default()
+        }
+    }
+
+    pub fn sim_params(&self) -> SimParams {
+        SimParams {
+            time_scale: self.time_scale,
+            page_factor: self.page_factor,
+            runtime_overhead_mb: self.runtime_overhead_mb,
+        }
+    }
+
+    pub fn router_config(&self) -> crate::router::RouterConfig {
+        crate::router::RouterConfig {
+            max_wait: Duration::from_millis(self.max_wait_ms),
+            workers: self.workers,
+        }
+    }
+
+    pub fn monitor_config(&self) -> crate::monitor::MonitorConfig {
+        crate::monitor::MonitorConfig {
+            sample_interval: Duration::from_millis(self.monitor_interval_ms),
+            history_len: 4096,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(!self.nodes.is_empty(), "config needs >= 1 node");
+        anyhow::ensure!(self.batch >= 1, "batch must be >= 1");
+        anyhow::ensure!(self.workers >= 1, "workers must be >= 1");
+        anyhow::ensure!(self.time_scale > 0.0, "time_scale must be > 0");
+        self.weights.validate()?;
+        for n in &self.nodes {
+            n.to_spec().validate()?;
+        }
+        if let Some(p) = self.num_partitions {
+            anyhow::ensure!(p >= 1, "num_partitions must be >= 1");
+        }
+        Ok(())
+    }
+
+    // ---- JSON persistence --------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert(
+            "artifacts_dir".into(),
+            Json::Str(self.artifacts_dir.display().to_string()),
+        );
+        m.insert("batch".into(), Json::from(self.batch));
+        m.insert(
+            "nodes".into(),
+            Json::Arr(
+                self.nodes
+                    .iter()
+                    .map(|n| {
+                        let mut nm = BTreeMap::new();
+                        nm.insert("name".into(), Json::from(n.name.as_str()));
+                        nm.insert("cpu".into(), Json::Num(n.cpu));
+                        nm.insert("mem_mb".into(), Json::Num(n.mem_mb));
+                        nm.insert("link_latency_ms".into(), Json::Num(n.link_latency_ms));
+                        nm.insert(
+                            "link_bandwidth_mbps".into(),
+                            Json::Num(n.link_bandwidth_mbps),
+                        );
+                        nm.insert("fail_rate".into(), Json::Num(n.fail_rate));
+                        Json::Obj(nm)
+                    })
+                    .collect(),
+            ),
+        );
+        if let Some(p) = self.num_partitions {
+            m.insert("num_partitions".into(), Json::from(p));
+        }
+        m.insert(
+            "weighted_partitioning".into(),
+            Json::from(self.weighted_partitioning),
+        );
+        m.insert(
+            "profiled_partitioning".into(),
+            Json::from(self.profiled_partitioning),
+        );
+        let mut w = BTreeMap::new();
+        w.insert("resource".into(), Json::Num(self.weights.resource));
+        w.insert("load".into(), Json::Num(self.weights.load));
+        w.insert("performance".into(), Json::Num(self.weights.performance));
+        w.insert("balance".into(), Json::Num(self.weights.balance));
+        m.insert("weights".into(), Json::Obj(w));
+        m.insert("overload_threshold".into(), Json::Num(self.overload_threshold));
+        m.insert(
+            "latency_threshold_ms".into(),
+            Json::Num(self.latency_threshold_ms),
+        );
+        m.insert("max_wait_ms".into(), Json::from(self.max_wait_ms as usize));
+        m.insert("workers".into(), Json::from(self.workers));
+        if let Some(c) = self.cache_entries {
+            m.insert("cache_entries".into(), Json::from(c));
+        }
+        m.insert("model_cache".into(), Json::from(self.model_cache));
+        m.insert("time_scale".into(), Json::Num(self.time_scale));
+        m.insert("page_factor".into(), Json::Num(self.page_factor));
+        m.insert(
+            "runtime_overhead_mb".into(),
+            Json::Num(self.runtime_overhead_mb),
+        );
+        m.insert(
+            "monitor_interval_ms".into(),
+            Json::from(self.monitor_interval_ms as usize),
+        );
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<AmpConfig> {
+        let d = AmpConfig::default();
+        let nodes = match j.get("nodes") {
+            Some(Json::Arr(arr)) => arr
+                .iter()
+                .map(|nj| {
+                    Ok(NodeConfig {
+                        name: nj.req_str("name")?.to_string(),
+                        cpu: nj.req_f64("cpu")?,
+                        mem_mb: nj.req_f64("mem_mb")?,
+                        link_latency_ms: nj
+                            .get("link_latency_ms")
+                            .and_then(Json::as_f64)
+                            .unwrap_or(1.0),
+                        link_bandwidth_mbps: nj
+                            .get("link_bandwidth_mbps")
+                            .and_then(Json::as_f64)
+                            .unwrap_or(1000.0),
+                        fail_rate: nj
+                            .get("fail_rate")
+                            .and_then(Json::as_f64)
+                            .unwrap_or(0.0),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?,
+            _ => d.nodes.clone(),
+        };
+        let weights = match j.get("weights") {
+            Some(w) => ScoringWeights {
+                resource: w.req_f64("resource")?,
+                load: w.req_f64("load")?,
+                performance: w.req_f64("performance")?,
+                balance: w.req_f64("balance")?,
+            },
+            None => d.weights,
+        };
+        let get_f = |key: &str, dv: f64| j.get(key).and_then(Json::as_f64).unwrap_or(dv);
+        let get_u = |key: &str, dv: usize| j.get(key).and_then(Json::as_usize).unwrap_or(dv);
+        let cfg = AmpConfig {
+            artifacts_dir: j
+                .get("artifacts_dir")
+                .and_then(Json::as_str)
+                .map(PathBuf::from)
+                .unwrap_or(d.artifacts_dir),
+            batch: get_u("batch", d.batch),
+            nodes,
+            num_partitions: j.get("num_partitions").and_then(Json::as_usize),
+            weighted_partitioning: j
+                .get("weighted_partitioning")
+                .and_then(Json::as_bool)
+                .unwrap_or(false),
+            profiled_partitioning: j
+                .get("profiled_partitioning")
+                .and_then(Json::as_bool)
+                .unwrap_or(false),
+            weights,
+            overload_threshold: get_f("overload_threshold", d.overload_threshold),
+            latency_threshold_ms: get_f("latency_threshold_ms", d.latency_threshold_ms),
+            max_wait_ms: get_u("max_wait_ms", d.max_wait_ms as usize) as u64,
+            workers: get_u("workers", d.workers),
+            cache_entries: j.get("cache_entries").and_then(Json::as_usize),
+            model_cache: j.get("model_cache").and_then(Json::as_bool).unwrap_or(false),
+            time_scale: get_f("time_scale", d.time_scale),
+            page_factor: get_f("page_factor", d.page_factor),
+            runtime_overhead_mb: get_f("runtime_overhead_mb", d.runtime_overhead_mb),
+            monitor_interval_ms: get_u(
+                "monitor_interval_ms",
+                d.monitor_interval_ms as usize,
+            ) as u64,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<AmpConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_paper_cluster() {
+        let c = AmpConfig::default();
+        c.validate().unwrap();
+        assert_eq!(c.nodes.len(), 3);
+        assert_eq!(c.nodes[0].cpu, 1.0);
+        assert_eq!(c.nodes[2].cpu, 0.4);
+        assert_eq!(c.weights, ScoringWeights::default());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut c = AmpConfig::default();
+        c.batch = 8;
+        c.cache_entries = Some(128);
+        c.model_cache = true;
+        c.num_partitions = Some(3);
+        c.weighted_partitioning = true;
+        let j = c.to_json();
+        let back = AmpConfig::from_json(&j).unwrap();
+        assert_eq!(back.batch, 8);
+        assert_eq!(back.cache_entries, Some(128));
+        assert!(back.model_cache);
+        assert_eq!(back.num_partitions, Some(3));
+        assert!(back.weighted_partitioning);
+        assert_eq!(back.nodes.len(), 3);
+        assert_eq!(back.weights, c.weights);
+    }
+
+    #[test]
+    fn save_load_file() {
+        let dir = std::env::temp_dir().join("amp4ec_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.json");
+        let c = AmpConfig::paper_cluster_cached(Path::new("artifacts"));
+        c.save(&p).unwrap();
+        let back = AmpConfig::load(&p).unwrap();
+        assert_eq!(back.cache_entries, Some(256));
+        assert!(back.model_cache);
+    }
+
+    #[test]
+    fn validation_rejects_bad_configs() {
+        let mut c = AmpConfig::default();
+        c.nodes.clear();
+        assert!(c.validate().is_err());
+        let mut c = AmpConfig::default();
+        c.batch = 0;
+        assert!(c.validate().is_err());
+        let mut c = AmpConfig::default();
+        c.weights.balance = 0.9;
+        assert!(c.validate().is_err());
+        let mut c = AmpConfig::default();
+        c.nodes[0].cpu = -1.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn profile_cluster_preset() {
+        let c = AmpConfig::profile_cluster(Path::new("a"), Profile::Low, 3);
+        assert_eq!(c.nodes.len(), 3);
+        assert!(c.nodes.iter().all(|n| n.cpu == 0.4 && n.mem_mb == 512.0));
+    }
+}

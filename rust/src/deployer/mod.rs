@@ -1,0 +1,279 @@
+//! Model Deployer — paper §III-D.
+//!
+//! Takes a partition [`Plan`], picks a node per partition via the Task
+//! Scheduler (Algorithm 1), "transfers" each partition's weight payload
+//! over the node's link (the Table I *network bandwidth* metric), loads
+//! the partition's block artifacts into the node's executor thread (each
+//! node owns its own PJRT client — see `runtime::executor`), and reserves
+//! node memory for the partition working set.
+//!
+//! Nodes keep a **model cache** of weight payloads they have already
+//! received: redeploying a cached partition moves zero bytes — this is the
+//! deployment half of AMP4EC+Cache (the paper's bandwidth column dropping
+//! from 100 MB to 0). `undeploy` releases memory; `redeploy_on_change`
+//! re-plans after a node joins or leaves (§I's two motivating scenarios).
+
+use std::collections::{HashMap, HashSet};
+use std::ops::Range;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::cluster::{Cluster, VirtualNode};
+use crate::manifest::Manifest;
+use crate::partitioner::{self, Plan};
+use crate::runtime::{BlockHandle, Executor};
+use crate::scheduler::{Scheduler, TaskRequirements};
+
+/// One partition placed on one node, ready to execute.
+pub struct Stage {
+    pub partition_idx: usize,
+    pub node: Arc<VirtualNode>,
+    pub executor: Arc<Executor>,
+    pub block_range: Range<usize>,
+    /// Executor-side handles, one per block in the range.
+    pub blocks: Vec<BlockHandle>,
+    /// Weight payload represented by this stage.
+    pub weights_bytes: u64,
+    /// Memory reserved on the node for this stage (bytes).
+    pub mem_reserved: u64,
+}
+
+/// A live deployment of a partition plan.
+pub struct Deployment {
+    pub batch: usize,
+    pub stages: Vec<Stage>,
+    /// Bytes actually moved over links during deployment.
+    pub transfer_bytes: u64,
+    pub deploy_ms: f64,
+    /// Final output shape, e.g. [batch, 1000].
+    pub out_shape: Vec<usize>,
+}
+
+impl Deployment {
+    pub fn node_ids(&self) -> Vec<usize> {
+        self.stages.iter().map(|s| s.node.id()).collect()
+    }
+}
+
+/// Deploys/undeploys partition plans onto the virtual cluster.
+pub struct ModelDeployer {
+    manifest: Arc<Manifest>,
+    /// One executor (PJRT client thread) per node, created lazily.
+    executors: Mutex<HashMap<usize, Arc<Executor>>>,
+    /// (node, block) pairs whose weights the node already holds.
+    model_cache: Mutex<HashSet<(usize, usize)>>,
+    /// When true, cached (node, block) weight payloads skip the link
+    /// transfer — the +Cache configuration.
+    pub use_model_cache: bool,
+}
+
+impl ModelDeployer {
+    pub fn new(manifest: Arc<Manifest>) -> ModelDeployer {
+        ModelDeployer {
+            manifest,
+            executors: Mutex::new(HashMap::new()),
+            model_cache: Mutex::new(HashSet::new()),
+            use_model_cache: true,
+        }
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Get or spawn the executor for a node.
+    pub fn executor_for(&self, node: &VirtualNode) -> Result<Arc<Executor>> {
+        let mut map = self.executors.lock().unwrap();
+        if let Some(e) = map.get(&node.id()) {
+            return Ok(Arc::clone(e));
+        }
+        let exec = Arc::new(Executor::spawn(node.name())?);
+        map.insert(node.id(), Arc::clone(&exec));
+        Ok(exec)
+    }
+
+    /// Estimate the working-set bytes a partition needs on its node:
+    /// weights + double-buffered largest activation at `batch`.
+    fn stage_mem_bytes(&self, range: &Range<usize>, batch: usize) -> u64 {
+        let weights: u64 = self.manifest.weights_bytes_for(range.clone());
+        let act = self.manifest.blocks[range.clone()]
+            .iter()
+            .map(|b| b.input_bytes(batch).max(b.output_bytes(batch)))
+            .max()
+            .unwrap_or(0);
+        weights + 2 * act
+    }
+
+    /// Deploy `plan` at `batch`, choosing a node per partition with the
+    /// scheduler. Prefers distinct nodes per partition (pipelining);
+    /// falls back to reuse when partitions outnumber nodes.
+    pub fn deploy(
+        &self,
+        plan: &Plan,
+        cluster: &Cluster,
+        scheduler: &Scheduler,
+        batch: usize,
+    ) -> Result<Deployment> {
+        let t0 = Instant::now();
+        let nodes = cluster.online_nodes();
+        anyhow::ensure!(!nodes.is_empty(), "no online nodes to deploy to");
+
+        let mut stages = Vec::with_capacity(plan.partitions.len());
+        let mut used: HashSet<usize> = HashSet::new();
+        let mut transfer_bytes = 0u64;
+
+        for (i, part) in plan.partitions.iter().enumerate() {
+            let mem_bytes = self.stage_mem_bytes(&part.block_range, batch);
+            let req = TaskRequirements {
+                cpu: 0.1,
+                mem_mb: mem_bytes as f64 / (1024.0 * 1024.0),
+                priority: 0,
+            };
+            // Prefer nodes not already hosting a partition.
+            let fresh: Vec<_> = nodes
+                .iter()
+                .filter(|n| !used.contains(&n.id()))
+                .cloned()
+                .collect();
+            let candidates = if fresh.is_empty() { nodes.clone() } else { fresh };
+            // Last resort: overcommit the least-loaded online node. A
+            // cgroup doesn't refuse an oversized working set — it pages;
+            // our memory model charges the same penalty (DESIGN.md).
+            let overcommit = || {
+                nodes
+                    .iter()
+                    .filter(|n| n.is_online())
+                    .min_by(|a, b| {
+                        a.current_load()
+                            .partial_cmp(&b.current_load())
+                            .unwrap()
+                    })
+                    .cloned()
+                    .map(|n| {
+                        crate::log_warn!(
+                            "deployer",
+                            "overcommitting partition {i} ({:.1} MB) onto {}",
+                            req.mem_mb,
+                            n.name()
+                        );
+                        let score = scheduler
+                            .score_node(&n, &TaskRequirements::default())
+                            .unwrap_or(crate::scheduler::ScoreBreakdown {
+                                resource: 0.0,
+                                load: 0.0,
+                                performance: 0.0,
+                                balance: 0.0,
+                                total: 0.0,
+                            });
+                        (n, score)
+                    })
+            };
+            let (node, _score) = scheduler
+                .select_node(&candidates, &req)
+                .or_else(|| scheduler.select_node(&nodes, &req))
+                .or_else(overcommit)
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "no online node for partition {i} (need {:.1} MB)",
+                        req.mem_mb
+                    )
+                })?;
+            used.insert(node.id());
+            let executor = self.executor_for(&node)?;
+
+            let mut handles = Vec::new();
+            let mut stage_bytes = 0u64;
+            for bi in part.block_range.clone() {
+                let block = &self.manifest.blocks[bi];
+                let cached = self
+                    .model_cache
+                    .lock()
+                    .unwrap()
+                    .contains(&(node.id(), bi));
+                if !(self.use_model_cache && cached) {
+                    node.link().receive(block.weights_bytes);
+                    transfer_bytes += block.weights_bytes;
+                }
+                self.model_cache.lock().unwrap().insert((node.id(), bi));
+                stage_bytes += block.weights_bytes;
+
+                let hlo = self.manifest.artifact_path(block, batch)?;
+                let handle = executor
+                    .load_block(
+                        hlo,
+                        self.manifest.weights_path(block),
+                        block.param_count as usize,
+                        vec![
+                            batch,
+                            block.out_shape[0],
+                            block.out_shape[1],
+                            block.out_shape[2],
+                        ],
+                    )
+                    .with_context(|| format!("loading block {}", block.name))?;
+                handles.push(handle);
+            }
+
+            node.mem_reserve(mem_bytes);
+            stages.push(Stage {
+                partition_idx: i,
+                node,
+                executor,
+                block_range: part.block_range.clone(),
+                blocks: handles,
+                weights_bytes: stage_bytes,
+                mem_reserved: mem_bytes,
+            });
+        }
+
+        let out_shape = vec![batch, self.manifest.num_classes];
+        Ok(Deployment {
+            batch,
+            stages,
+            transfer_bytes,
+            deploy_ms: t0.elapsed().as_secs_f64() * 1e3,
+            out_shape,
+        })
+    }
+
+    /// Release node memory and executor-side blocks held by a deployment.
+    pub fn undeploy(&self, deployment: &Deployment) {
+        for s in &deployment.stages {
+            s.node.mem_release(s.mem_reserved);
+            for b in &s.blocks {
+                s.executor.unload_block(*b);
+            }
+        }
+    }
+
+    /// Handle a topology change: re-plan for the current online node count
+    /// and redeploy. The old deployment is undeployed first.
+    pub fn redeploy_on_change(
+        &self,
+        old: Deployment,
+        cluster: &Cluster,
+        scheduler: &Scheduler,
+    ) -> Result<Deployment> {
+        let batch = old.batch;
+        self.undeploy(&old);
+        drop(old);
+        let n = cluster.online_count().min(self.manifest.blocks.len()).max(1);
+        let plan = partitioner::plan(&self.manifest, n)?;
+        self.deploy(&plan, cluster, scheduler, batch)
+    }
+
+    /// Diagnostic: how many (node, block) payloads are cached.
+    pub fn cached_payloads(&self) -> usize {
+        self.model_cache.lock().unwrap().len()
+    }
+
+    /// Drop all cached payload records (forces full re-transfer).
+    pub fn clear_model_cache(&self) {
+        self.model_cache.lock().unwrap().clear();
+    }
+}
+
+// Integration tests for the deployer live in rust/tests/ (they need the
+// artifacts directory and PJRT clients).

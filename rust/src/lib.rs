@@ -1,0 +1,55 @@
+//! # AMP4EC — Adaptive Model Partitioning for Edge Computing
+//!
+//! Rust + JAX + Pallas reproduction of *AMP4EC: Adaptive Model
+//! Partitioning Framework for Efficient Deep Learning Inference in Edge
+//! Computing Environments* (Zhang et al., 2025).
+//!
+//! Three-layer architecture, Python never on the request path:
+//!
+//! * **L3 (this crate)** — the paper's coordination contribution:
+//!   [`monitor`] (Resource Monitor, §III-A), [`partitioner`] (Model
+//!   Partitioner, §III-B, Eq. 1–3/9–10), [`scheduler`] (Task Scheduler +
+//!   NSA, §III-C, Eq. 4–8), [`deployer`] (Model Deployer, §III-D), plus
+//!   the [`cluster`] virtual-edge substrate, the [`router`] dynamic
+//!   batcher, the [`pipeline`] distributed executor, the [`baseline`]
+//!   monolithic comparator, and the [`runtime`] PJRT bridge.
+//! * **L2 (python/compile/model.py)** — MobileNetV2 in JAX, AOT-lowered
+//!   per block to HLO text.
+//! * **L1 (python/compile/kernels/)** — Pallas matmul and depthwise-conv
+//!   kernels the model's FLOPs route through.
+//!
+//! Quickstart:
+//!
+//! ```no_run
+//! use amp4ec::config::AmpConfig;
+//! use amp4ec::server::EdgeServer;
+//! use amp4ec::workload::Arrival;
+//!
+//! let cfg = AmpConfig::paper_cluster(std::path::Path::new("artifacts"));
+//! let server = EdgeServer::start(cfg).unwrap();
+//! let report = server.serve_workload(32, 32, Arrival::Closed, 0).unwrap();
+//! println!("p50 latency: {:.1} ms", report.metrics.latency_summary().p50());
+//! ```
+
+pub mod baseline;
+pub mod cluster;
+pub mod config;
+pub mod deployer;
+pub mod manifest;
+pub mod metrics;
+pub mod monitor;
+pub mod partitioner;
+pub mod pipeline;
+pub mod router;
+pub mod runtime;
+pub mod scheduler;
+pub mod server;
+pub mod util;
+pub mod workload;
+
+/// Default artifacts directory, overridable with `AMP4EC_ARTIFACTS`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("AMP4EC_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}

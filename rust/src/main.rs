@@ -1,0 +1,169 @@
+//! `amp4ec` CLI — the leader entrypoint.
+//!
+//! ```text
+//! amp4ec info        [--artifacts DIR]
+//! amp4ec partition   [--artifacts DIR] [--parts N]
+//! amp4ec serve       [--artifacts DIR] [--requests N] [--distinct N]
+//!                    [--batch B] [--partitions N] [--cache] [--workers N]
+//! amp4ec golden      [--artifacts DIR]
+//! amp4ec config      [--out FILE]       # write a default config file
+//! amp4ec serve-cfg   --config FILE [--requests N]
+//! amp4ec calibrate   [--artifacts DIR] [--batch B]  # per-block costs
+//! ```
+
+use std::path::PathBuf;
+
+use amp4ec::config::AmpConfig;
+use amp4ec::manifest::Manifest;
+use amp4ec::partitioner;
+use amp4ec::server::EdgeServer;
+use amp4ec::util::cli::Args;
+use amp4ec::workload::Arrival;
+
+fn artifacts(args: &Args) -> PathBuf {
+    args.get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(amp4ec::artifacts_dir)
+}
+
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    let m = Manifest::load(&artifacts(args))?;
+    println!("model          : {}", m.model);
+    println!("input          : {0}x{0}x{1}", m.input_hw, m.input_channels);
+    println!("classes        : {}", m.num_classes);
+    println!("batch sizes    : {:?}", m.batch_sizes);
+    println!("blocks         : {}", m.blocks.len());
+    println!("flat layers    : {}", m.flat_layers().len());
+    println!("total params   : {}", m.total_params);
+    println!(
+        "weights payload: {:.1} MB",
+        m.blocks.iter().map(|b| b.weights_bytes).sum::<u64>() as f64 / 1e6
+    );
+    Ok(())
+}
+
+fn cmd_partition(args: &Args) -> anyhow::Result<()> {
+    let m = Manifest::load(&artifacts(args))?;
+    let parts = args.get_usize("parts", 2)?;
+    let plan = partitioner::plan(&m, parts)?;
+    println!("partitions (layer sizes): {:?}", plan.layer_sizes());
+    println!("block ranges            : {:?}", plan.block_ranges());
+    println!("per-partition cost      : {:?}",
+             plan.partitions.iter().map(|p| p.cost).collect::<Vec<_>>());
+    println!("imbalance (max/min)     : {:.3}", plan.imbalance());
+    println!("comm bytes at batch 1   : {:?}", plan.comm_bytes(&m, 1));
+    println!("weights bytes           : {:?}", plan.weights_bytes(&m));
+    Ok(())
+}
+
+fn build_config(args: &Args) -> anyhow::Result<AmpConfig> {
+    let mut cfg = AmpConfig::paper_cluster(&artifacts(args));
+    cfg.batch = args.get_usize("batch", 1)?;
+    if let Some(p) = args.get("partitions") {
+        cfg.num_partitions = Some(p.parse()?);
+    }
+    if args.flag("cache") {
+        cfg.cache_entries = Some(256);
+        cfg.model_cache = true;
+    }
+    cfg.workers = args.get_usize("workers", cfg.workers)?;
+    cfg.time_scale = args.get_f64("time-scale", cfg.time_scale)?;
+    Ok(cfg)
+}
+
+fn print_report(report: &amp4ec::server::ServeReport) {
+    let m = &report.metrics;
+    let lat = m.latency_summary();
+    println!("requests completed : {}", m.completed);
+    println!("requests failed    : {}", m.failed);
+    println!("cache hits         : {}", m.cache_hits);
+    println!("latency mean/p50/p95/p99: {:.2} / {:.2} / {:.2} / {:.2} ms",
+             lat.mean(), lat.p50(), lat.p95(), lat.p99());
+    println!("throughput         : {:.2} req/s", m.throughput_rps());
+    println!("comm overhead      : {:.2} ms/req", m.mean_comm_ms());
+    println!("sched overhead     : {:.2} ms/req", m.mean_sched_ms());
+    println!("stability score    : {:.3}", m.stability_score());
+    println!("deploy transfer    : {:.2} MB", report.deploy_transfer_bytes as f64 / 1e6);
+    println!("monitor overhead   : {:.3}% CPU", report.monitor_overhead_pct);
+    println!("partition sizes    : {:?}", report.partition_layer_sizes);
+    println!("nodes              : {:?}", report.node_names);
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let cfg = build_config(args)?;
+    let requests = args.get_usize("requests", 32)?;
+    let distinct = args.get_usize("distinct", requests)?;
+    let server = EdgeServer::start(cfg)?;
+    println!("deployed over nodes: {:?}", server.service().deployment_nodes());
+    let report = server.serve_workload(requests, distinct, Arrival::Closed, 0)?;
+    print_report(&report);
+    Ok(())
+}
+
+fn cmd_serve_cfg(args: &Args) -> anyhow::Result<()> {
+    let path = args
+        .get("config")
+        .ok_or_else(|| anyhow::anyhow!("--config FILE required"))?;
+    let cfg = AmpConfig::load(std::path::Path::new(path))?;
+    let requests = args.get_usize("requests", 32)?;
+    let distinct = args.get_usize("distinct", requests)?;
+    let server = EdgeServer::start(cfg)?;
+    let report = server.serve_workload(requests, distinct, Arrival::Closed, 0)?;
+    print_report(&report);
+    Ok(())
+}
+
+fn cmd_golden(args: &Args) -> anyhow::Result<()> {
+    let cfg = build_config(args)?;
+    let server = EdgeServer::start(cfg)?;
+    let diff = server.golden_check()?;
+    println!("golden parity OK (max abs diff {diff:.2e})");
+    Ok(())
+}
+
+fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
+    let m = Manifest::load(&artifacts(args))?;
+    let batch = args.get_usize("batch", 1)?;
+    let costs = amp4ec::server::calibrate_block_costs(&m, batch)?;
+    let total: f64 = costs.iter().sum();
+    println!("{:<4} {:<22} {:>10} {:>8}", "idx", "block", "ms", "share");
+    for (b, ms) in m.blocks.iter().zip(&costs) {
+        println!(
+            "{:<4} {:<22} {:>10.3} {:>7.1}%",
+            b.index, b.name, ms, 100.0 * ms / total
+        );
+    }
+    println!("total: {total:.1} ms at batch {batch}");
+    Ok(())
+}
+
+fn cmd_config(args: &Args) -> anyhow::Result<()> {
+    let out = args.get_or("out", "amp4ec.json");
+    AmpConfig::default().save(std::path::Path::new(out))?;
+    println!("wrote default config to {out}");
+    Ok(())
+}
+
+fn main() {
+    let args = Args::from_env();
+    let result = match args.subcommand.as_deref() {
+        Some("info") => cmd_info(&args),
+        Some("partition") => cmd_partition(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("serve-cfg") => cmd_serve_cfg(&args),
+        Some("golden") => cmd_golden(&args),
+        Some("config") => cmd_config(&args),
+        Some("calibrate") => cmd_calibrate(&args),
+        other => {
+            eprintln!(
+                "usage: amp4ec <info|partition|serve|serve-cfg|golden|config|calibrate> [--options]\n\
+                 unknown subcommand: {other:?}"
+            );
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,268 @@
+//! Metrics registry: the numbers behind every table in the paper's
+//! evaluation — latency distributions, throughput, communication overhead,
+//! scheduling overhead, bandwidth, stability.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+/// Aggregated view over one serving run; feeds the Table I / II harnesses.
+#[derive(Debug, Default, Clone)]
+pub struct RunMetrics {
+    /// End-to-end per-request latency, ms.
+    pub latency: Vec<f64>,
+    /// Per-request compute time summed over stages, ms.
+    pub compute: Vec<f64>,
+    /// Per-request communication (activation transfer) time, ms.
+    pub comm: Vec<f64>,
+    /// Per-request scheduling overhead (selection + queueing), ms.
+    pub sched: Vec<f64>,
+    /// Requests served from the result cache.
+    pub cache_hits: u64,
+    /// Total requests completed.
+    pub completed: u64,
+    /// Total requests failed.
+    pub failed: u64,
+    /// Wall-clock duration of the run, ms.
+    pub wall_ms: f64,
+    /// Weight-transfer bytes during deployment (Table I "network
+    /// bandwidth").
+    pub deploy_bytes: u64,
+    /// Activation bytes moved between nodes.
+    pub activation_bytes: u64,
+}
+
+impl RunMetrics {
+    pub fn latency_summary(&self) -> Summary {
+        let mut s = Summary::new();
+        s.extend(&self.latency);
+        s
+    }
+
+    pub fn throughput_rps(&self) -> f64 {
+        if self.wall_ms <= 0.0 {
+            0.0
+        } else {
+            self.completed as f64 / (self.wall_ms / 1e3)
+        }
+    }
+
+    pub fn mean_latency_ms(&self) -> f64 {
+        self.latency_summary().mean()
+    }
+
+    pub fn mean_comm_ms(&self) -> f64 {
+        let mut s = Summary::new();
+        s.extend(&self.comm);
+        s.mean()
+    }
+
+    pub fn mean_sched_ms(&self) -> f64 {
+        let mut s = Summary::new();
+        s.extend(&self.sched);
+        s.mean()
+    }
+
+    /// Stability score: fraction of requests within 2x median latency,
+    /// scaled by the success rate. A tight, jitter-free run scores 1.0.
+    pub fn stability_score(&self) -> f64 {
+        let total = self.completed + self.failed;
+        if total == 0 {
+            return 1.0;
+        }
+        let success = self.completed as f64 / total as f64;
+        let s = self.latency_summary();
+        if s.count() == 0 {
+            return success;
+        }
+        let median = s.p50();
+        let within = self
+            .latency
+            .iter()
+            .filter(|&&l| l <= 2.0 * median)
+            .count() as f64
+            / s.count() as f64;
+        success * within
+    }
+}
+
+/// A live collector with thread-safe interior (shared by router workers).
+#[derive(Default)]
+pub struct MetricsCollector {
+    inner: Mutex<RunMetrics>,
+    started: Mutex<Option<Instant>>,
+}
+
+impl MetricsCollector {
+    pub fn new() -> MetricsCollector {
+        MetricsCollector::default()
+    }
+
+    pub fn start_run(&self) {
+        *self.started.lock().unwrap() = Some(Instant::now());
+    }
+
+    pub fn record_request(
+        &self,
+        latency_ms: f64,
+        compute_ms: f64,
+        comm_ms: f64,
+        sched_ms: f64,
+        cache_hit: bool,
+    ) {
+        let mut m = self.inner.lock().unwrap();
+        m.latency.push(latency_ms);
+        m.compute.push(compute_ms);
+        m.comm.push(comm_ms);
+        m.sched.push(sched_ms);
+        m.completed += 1;
+        if cache_hit {
+            m.cache_hits += 1;
+        }
+    }
+
+    pub fn record_failure(&self) {
+        self.inner.lock().unwrap().failed += 1;
+    }
+
+    pub fn add_deploy_bytes(&self, bytes: u64) {
+        self.inner.lock().unwrap().deploy_bytes += bytes;
+    }
+
+    pub fn add_activation_bytes(&self, bytes: u64) {
+        self.inner.lock().unwrap().activation_bytes += bytes;
+    }
+
+    /// Finish the run and return the aggregate.
+    pub fn finish(&self) -> RunMetrics {
+        let mut m = self.inner.lock().unwrap().clone();
+        if let Some(t) = *self.started.lock().unwrap() {
+            m.wall_ms = t.elapsed().as_secs_f64() * 1e3;
+        }
+        m
+    }
+}
+
+/// Render a markdown table from (metric, value) rows — used by the bench
+/// harness binaries to print paper-style tables.
+pub fn markdown_table(title: &str, headers: &[&str],
+                      rows: &[Vec<String>]) -> String {
+    let mut out = format!("\n### {title}\n\n");
+    out.push_str(&format!("| {} |\n", headers.join(" | ")));
+    out.push_str(&format!(
+        "|{}\n",
+        headers.iter().map(|_| "---|").collect::<String>()
+    ));
+    for row in rows {
+        out.push_str(&format!("| {} |\n", row.join(" | ")));
+    }
+    out
+}
+
+/// Simple key->f64 gauge set exported as JSON for tooling.
+#[derive(Default)]
+pub struct GaugeSet {
+    gauges: Mutex<BTreeMap<String, f64>>,
+}
+
+impl GaugeSet {
+    pub fn set(&self, key: &str, value: f64) {
+        self.gauges.lock().unwrap().insert(key.to_string(), value);
+    }
+
+    pub fn get(&self, key: &str) -> Option<f64> {
+        self.gauges.lock().unwrap().get(key).copied()
+    }
+
+    pub fn to_json(&self) -> crate::util::json::Json {
+        let map = self
+            .gauges
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), crate::util::json::Json::Num(*v)))
+            .collect();
+        crate::util::json::Json::Obj(map)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_computation() {
+        let mut m = RunMetrics::default();
+        m.completed = 50;
+        m.wall_ms = 10_000.0;
+        assert!((m.throughput_rps() - 5.0).abs() < 1e-9);
+        m.wall_ms = 0.0;
+        assert_eq!(m.throughput_rps(), 0.0);
+    }
+
+    #[test]
+    fn stability_perfect_run() {
+        let mut m = RunMetrics::default();
+        m.completed = 4;
+        m.latency = vec![10.0, 10.0, 10.0, 10.0];
+        assert_eq!(m.stability_score(), 1.0);
+    }
+
+    #[test]
+    fn stability_penalizes_outliers_and_failures() {
+        let mut m = RunMetrics::default();
+        m.completed = 4;
+        m.latency = vec![10.0, 10.0, 10.0, 100.0];
+        let jittery = m.stability_score();
+        assert!(jittery < 1.0);
+        m.failed = 4;
+        assert!(m.stability_score() < jittery);
+    }
+
+    #[test]
+    fn stability_empty_run_is_one() {
+        assert_eq!(RunMetrics::default().stability_score(), 1.0);
+    }
+
+    #[test]
+    fn collector_aggregates() {
+        let c = MetricsCollector::new();
+        c.start_run();
+        c.record_request(12.0, 10.0, 1.0, 0.5, false);
+        c.record_request(14.0, 11.0, 2.0, 0.5, true);
+        c.record_failure();
+        c.add_deploy_bytes(100);
+        c.add_activation_bytes(50);
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let m = c.finish();
+        assert_eq!(m.completed, 2);
+        assert_eq!(m.failed, 1);
+        assert_eq!(m.cache_hits, 1);
+        assert_eq!(m.deploy_bytes, 100);
+        assert_eq!(m.activation_bytes, 50);
+        assert!(m.wall_ms >= 5.0);
+        assert!((m.mean_latency_ms() - 13.0).abs() < 1e-9);
+        assert!((m.mean_comm_ms() - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn markdown_rendering() {
+        let t = markdown_table(
+            "Table I",
+            &["Metric", "Value"],
+            &[vec!["Latency".into(), "1.0".into()]],
+        );
+        assert!(t.contains("### Table I"));
+        assert!(t.contains("| Latency | 1.0 |"));
+    }
+
+    #[test]
+    fn gauges() {
+        let g = GaugeSet::default();
+        g.set("cpu", 0.5);
+        assert_eq!(g.get("cpu"), Some(0.5));
+        assert!(g.to_json().to_string().contains("cpu"));
+    }
+}

@@ -1,0 +1,118 @@
+//! Layer cost model — the paper's Eq. 1, 2 and 9, verbatim.
+//!
+//! ```text
+//! LayerCost(l) = k_h * k_w * c_in * c_out    for Conv2D      (Eq. 1)
+//!              = n_in * n_out                for Linear      (Eq. 2)
+//!              = params_count                otherwise       (Eq. 9)
+//! ```
+//!
+//! Note the paper reads `Conv2d.in_channels` / `out_channels` module
+//! attributes verbatim, so depthwise convs (groups == channels) cost
+//! `9 * C * C` even though they perform `9 * C` MACs per pixel — a quirk we
+//! preserve deliberately: reproducing the paper's reported partition sizes
+//! [116, 25] and [108, 16, 17] requires the same cost function they used.
+//! `flops_cost` below is the corrected alternative used by the ablation
+//! bench (`benches/partitioner.rs`).
+
+use crate::manifest::{LayerKind, LayerMeta};
+
+/// Paper Eq. 9 cost of a single layer.
+pub fn layer_cost(l: &LayerMeta) -> u64 {
+    match l.kind {
+        LayerKind::Conv2d => {
+            l.k_h as u64 * l.k_w as u64 * l.c_in as u64 * l.c_out as u64
+        }
+        LayerKind::Linear => l.n_in as u64 * l.n_out as u64,
+        _ => l.params,
+    }
+}
+
+/// Group-aware (true-MAC-proportional) cost: divides conv cost by `groups`.
+/// Not what the paper used; exercised by the ablation study to show how the
+/// boundary placement shifts under a corrected cost model.
+pub fn flops_cost(l: &LayerMeta) -> u64 {
+    match l.kind {
+        LayerKind::Conv2d => {
+            l.k_h as u64 * l.k_w as u64 * l.c_in as u64 * l.c_out as u64
+                / l.groups.max(1) as u64
+        }
+        LayerKind::Linear => l.n_in as u64 * l.n_out as u64,
+        _ => l.params,
+    }
+}
+
+/// Total cost of a slice of layers under the paper cost model.
+pub fn total_cost<'a, I: IntoIterator<Item = &'a LayerMeta>>(layers: I) -> u64 {
+    layers.into_iter().map(layer_cost).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::LayerKind;
+
+    fn conv(k: u32, cin: u32, cout: u32, groups: u32) -> LayerMeta {
+        LayerMeta {
+            name: "c".into(),
+            kind: LayerKind::Conv2d,
+            params: (k * k * cin / groups * cout) as u64,
+            k_h: k,
+            k_w: k,
+            c_in: cin,
+            c_out: cout,
+            groups,
+            stride: 1,
+            n_in: 0,
+            n_out: 0,
+        }
+    }
+
+    #[test]
+    fn conv_cost_eq1() {
+        assert_eq!(layer_cost(&conv(3, 3, 32, 1)), 3 * 3 * 3 * 32);
+    }
+
+    #[test]
+    fn depthwise_uses_module_attrs_not_groups() {
+        // Paper quirk: depthwise counts as kh*kw*C*C.
+        let dw = conv(3, 32, 32, 32);
+        assert_eq!(layer_cost(&dw), 9 * 32 * 32);
+        assert_eq!(flops_cost(&dw), 9 * 32);
+    }
+
+    #[test]
+    fn linear_cost_eq2() {
+        let l = LayerMeta {
+            name: "fc".into(),
+            kind: LayerKind::Linear,
+            params: 1280 * 1000 + 1000,
+            k_h: 0,
+            k_w: 0,
+            c_in: 0,
+            c_out: 0,
+            groups: 1,
+            stride: 1,
+            n_in: 1280,
+            n_out: 1000,
+        };
+        assert_eq!(layer_cost(&l), 1280 * 1000);
+    }
+
+    #[test]
+    fn other_layers_use_params() {
+        let bn = LayerMeta {
+            name: "bn".into(),
+            kind: LayerKind::BatchNorm2d,
+            params: 64,
+            k_h: 0,
+            k_w: 0,
+            c_in: 0,
+            c_out: 0,
+            groups: 1,
+            stride: 1,
+            n_in: 0,
+            n_out: 0,
+        };
+        assert_eq!(layer_cost(&bn), 64);
+    }
+}

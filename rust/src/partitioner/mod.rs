@@ -1,0 +1,536 @@
+//! Model Partitioner — paper §III-B.
+//!
+//! B1 *Layer Analysis* is done by the AOT manifest (type + attributes per
+//! module). B2 *Cost Estimation* is [`cost::layer_cost`] (Eq. 1/2/9).
+//! B3 *Partition Boundaries* is the greedy cumulative-cost algorithm
+//! (Eq. 3/10): accumulate layers until the running cost reaches
+//! `total / num_partitions`, cut, repeat; remaining layers join the last
+//! partition. B4 *Distributed Model* maps the layer-granular cuts onto the
+//! AOT block grid so every partition is executable (a residual-carrying
+//! block cannot be split mid-way — tensors only exist at block edges).
+//!
+//! Two refinements beyond the paper's greedy scheme, both ablated in
+//! `benches/partitioner.rs`:
+//!  * capability-weighted targets ([`plan_weighted`]): per-partition target
+//!    cost proportional to each node's CPU share, so heterogeneous clusters
+//!    get proportionally-sized partitions;
+//!  * [`Plan::comm_bytes`] exposes the activation payload at every cut so
+//!    the scheduler/deployer can reason about communication overhead.
+
+pub mod cost;
+
+use anyhow::Result;
+
+use crate::manifest::Manifest;
+
+/// A partition: a half-open range over the flat layer list, plus the
+/// realized (block-aligned) range actually deployed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Partition {
+    /// Layer-granular boundary from the paper's algorithm (reported in
+    /// §IV-D as partition *sizes*).
+    pub layer_range: std::ops::Range<usize>,
+    /// Block-aligned realization (what the deployer ships and runs).
+    pub block_range: std::ops::Range<usize>,
+    /// Eq. 9 cost of the layer range.
+    pub cost: u64,
+}
+
+impl Partition {
+    pub fn layer_count(&self) -> usize {
+        self.layer_range.len()
+    }
+}
+
+/// A complete partition plan for one model manifest.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    pub partitions: Vec<Partition>,
+    pub total_cost: u64,
+}
+
+impl Plan {
+    /// Paper §IV-D "partition sizes": layer counts per partition.
+    pub fn layer_sizes(&self) -> Vec<usize> {
+        self.partitions.iter().map(Partition::layer_count).collect()
+    }
+
+    pub fn block_ranges(&self) -> Vec<std::ops::Range<usize>> {
+        self.partitions.iter().map(|p| p.block_range.clone()).collect()
+    }
+
+    /// Activation bytes crossing each inter-partition edge at `batch`.
+    pub fn comm_bytes(&self, manifest: &Manifest, batch: usize) -> Vec<u64> {
+        self.partitions
+            .iter()
+            .take(self.partitions.len().saturating_sub(1))
+            .map(|p| {
+                let last_block = p.block_range.end - 1;
+                manifest.blocks[last_block].output_bytes(batch)
+            })
+            .collect()
+    }
+
+    /// Weight payload shipped to the node hosting each partition.
+    pub fn weights_bytes(&self, manifest: &Manifest) -> Vec<u64> {
+        self.partitions
+            .iter()
+            .map(|p| manifest.weights_bytes_for(p.block_range.clone()))
+            .collect()
+    }
+
+    /// Largest-to-smallest cost imbalance ratio (1.0 = perfectly balanced).
+    pub fn imbalance(&self) -> f64 {
+        let costs: Vec<u64> = self.partitions.iter().map(|p| p.cost).collect();
+        let max = *costs.iter().max().unwrap_or(&0) as f64;
+        let min = *costs.iter().min().unwrap_or(&0) as f64;
+        if min == 0.0 {
+            f64::INFINITY
+        } else {
+            max / min
+        }
+    }
+}
+
+/// Greedy layer-boundary computation — the paper's Eq. 3/10 algorithm,
+/// parameterized by the cost function so the ablation can swap models.
+pub fn layer_boundaries_with(
+    costs: &[u64],
+    num_partitions: usize,
+) -> Vec<std::ops::Range<usize>> {
+    assert!(num_partitions >= 1, "num_partitions must be >= 1");
+    let total: u64 = costs.iter().sum();
+    let target = total as f64 / num_partitions as f64;
+    let mut ranges = Vec::with_capacity(num_partitions);
+    let mut start = 0usize;
+    let mut acc = 0u64;
+    for (i, &c) in costs.iter().enumerate() {
+        acc += c;
+        if acc as f64 >= target && ranges.len() < num_partitions - 1 {
+            ranges.push(start..i + 1);
+            start = i + 1;
+            acc = 0;
+        }
+    }
+    ranges.push(start..costs.len());
+    // Degenerate inputs (more partitions than layers with cost) can leave
+    // empty trailing ranges; keep them — callers validate.
+    while ranges.len() < num_partitions {
+        ranges.push(costs.len()..costs.len());
+    }
+    ranges
+}
+
+/// Snap a layer index to the nearest block-start boundary (>= snapping up
+/// to the block containing the cut, choosing the closer edge by layer
+/// distance, never producing empty blocks ranges).
+fn snap_to_block(layer_cut: usize, offsets: &[usize]) -> usize {
+    // offsets: layer index at which each block starts, plus total at end.
+    // Find the block whose range contains layer_cut, then pick the nearer
+    // of its two edges.
+    match offsets.binary_search(&layer_cut) {
+        Ok(i) => i,                 // exactly on a block edge
+        Err(i) => {
+            // layer_cut falls inside block i-1 (offsets[i-1] < cut < offsets[i]).
+            let lo = offsets[i - 1];
+            let hi = offsets[i];
+            if layer_cut - lo <= hi - layer_cut {
+                i - 1
+            } else {
+                i
+            }
+        }
+    }
+}
+
+fn realize(
+    manifest: &Manifest,
+    layer_ranges: Vec<std::ops::Range<usize>>,
+    costs: &[u64],
+) -> Result<Plan> {
+    let offsets = manifest.block_layer_offsets();
+    let n_blocks = manifest.blocks.len();
+    let mut block_cuts: Vec<usize> = vec![0];
+    for r in layer_ranges.iter().take(layer_ranges.len() - 1) {
+        let mut cut = snap_to_block(r.end, &offsets);
+        // Enforce strictly increasing cuts so no partition is block-empty.
+        let prev = *block_cuts.last().unwrap();
+        if cut <= prev {
+            cut = (prev + 1).min(n_blocks);
+        }
+        block_cuts.push(cut);
+    }
+    block_cuts.push(n_blocks);
+    // Backward pass: the forward clamp can leave a cut colliding with the
+    // fixed end (e.g. greedy plans that exhaust all cost early). Pull such
+    // cuts back so every partition keeps at least one block.
+    for i in (1..block_cuts.len() - 1).rev() {
+        if block_cuts[i] >= block_cuts[i + 1] {
+            block_cuts[i] = block_cuts[i + 1].saturating_sub(1);
+        }
+    }
+
+    let total_cost: u64 = costs.iter().sum();
+    let partitions = layer_ranges
+        .iter()
+        .enumerate()
+        .map(|(i, lr)| Partition {
+            layer_range: lr.clone(),
+            block_range: block_cuts[i]..block_cuts[i + 1],
+            cost: costs[lr.clone()].iter().sum(),
+        })
+        .collect::<Vec<_>>();
+    // Validity: block ranges must tile [0, n_blocks).
+    anyhow::ensure!(
+        partitions.first().map(|p| p.block_range.start) == Some(0)
+            && partitions.last().map(|p| p.block_range.end) == Some(n_blocks),
+        "partition block ranges must tile the model"
+    );
+    for pair in partitions.windows(2) {
+        anyhow::ensure!(
+            pair[0].block_range.end == pair[1].block_range.start,
+            "block ranges must be contiguous"
+        );
+    }
+    anyhow::ensure!(
+        partitions.iter().all(|p| !p.block_range.is_empty()),
+        "every partition needs at least one block (requested {} partitions \
+         for {} blocks)",
+        partitions.len(),
+        n_blocks
+    );
+    Ok(Plan { partitions, total_cost })
+}
+
+/// Paper algorithm: equal cost targets (Eq. 3).
+pub fn plan(manifest: &Manifest, num_partitions: usize) -> Result<Plan> {
+    anyhow::ensure!(num_partitions >= 1, "num_partitions must be >= 1");
+    anyhow::ensure!(
+        num_partitions <= manifest.blocks.len(),
+        "cannot make {num_partitions} partitions from {} blocks",
+        manifest.blocks.len()
+    );
+    let costs: Vec<u64> =
+        manifest.flat_layers().iter().map(|l| cost::layer_cost(l)).collect();
+    let ranges = layer_boundaries_with(&costs, num_partitions);
+    realize(manifest, ranges, &costs)
+}
+
+/// Capability-weighted variant: target cost per partition proportional to
+/// `weights[i]` (e.g. node CPU shares), so a 1.0/0.6/0.4-CPU cluster gets
+/// partitions sized 50%/30%/20% of total cost.
+pub fn plan_weighted(manifest: &Manifest, weights: &[f64]) -> Result<Plan> {
+    anyhow::ensure!(!weights.is_empty(), "weights must be non-empty");
+    anyhow::ensure!(
+        weights.iter().all(|w| *w > 0.0),
+        "weights must be positive"
+    );
+    anyhow::ensure!(
+        weights.len() <= manifest.blocks.len(),
+        "cannot make {} partitions from {} blocks",
+        weights.len(),
+        manifest.blocks.len()
+    );
+    let costs: Vec<u64> =
+        manifest.flat_layers().iter().map(|l| cost::layer_cost(l)).collect();
+    let total: u64 = costs.iter().sum();
+    let wsum: f64 = weights.iter().sum();
+
+    let mut ranges = Vec::with_capacity(weights.len());
+    let mut start = 0usize;
+    let mut acc = 0u64;
+    let mut w_iter = weights.iter();
+    let mut target = total as f64 * w_iter.next().unwrap() / wsum;
+    for (i, &c) in costs.iter().enumerate() {
+        acc += c;
+        if acc as f64 >= target && ranges.len() < weights.len() - 1 {
+            ranges.push(start..i + 1);
+            start = i + 1;
+            acc = 0;
+            target = total as f64 * w_iter.next().unwrap() / wsum;
+        }
+    }
+    ranges.push(start..costs.len());
+    while ranges.len() < weights.len() {
+        ranges.push(costs.len()..costs.len());
+    }
+    realize(manifest, ranges, &costs)
+}
+
+/// Profile-guided partitioning (extension; paper §V "automate partition
+/// optimization"): balance partitions on *measured* per-block execution
+/// times instead of the Eq. 9 static cost model, which misjudges where
+/// wall time actually goes (e.g. it prices the classifier at ~3% of the
+/// model while it measures at ~45% at batch 1). Boundaries are chosen at
+/// block granularity directly.
+pub fn plan_measured(
+    manifest: &Manifest,
+    block_ms: &[f64],
+    num_partitions: usize,
+) -> Result<Plan> {
+    plan_measured_weighted(manifest, block_ms, &vec![1.0; num_partitions])
+}
+
+/// Profile-guided *and* capability-weighted: per-partition time targets
+/// proportional to each node's CPU share, over measured block costs. This
+/// is what makes heterogeneous pipelines run stage-balanced in *wall
+/// time* (each stage's `measured_ms / cpu_share` equalizes).
+pub fn plan_measured_weighted(
+    manifest: &Manifest,
+    block_ms: &[f64],
+    weights: &[f64],
+) -> Result<Plan> {
+    let num_partitions = weights.len();
+    anyhow::ensure!(
+        block_ms.len() == manifest.blocks.len(),
+        "need one measured cost per block ({} != {})",
+        block_ms.len(),
+        manifest.blocks.len()
+    );
+    anyhow::ensure!(num_partitions >= 1, "need >= 1 weight");
+    anyhow::ensure!(
+        weights.iter().all(|w| *w > 0.0),
+        "weights must be positive"
+    );
+    anyhow::ensure!(
+        num_partitions <= manifest.blocks.len(),
+        "cannot make {num_partitions} partitions from {} blocks",
+        manifest.blocks.len()
+    );
+    let total: f64 = block_ms.iter().sum();
+    let wsum: f64 = weights.iter().sum();
+    let n_blocks = manifest.blocks.len();
+    let mut cuts = vec![0usize];
+    let mut w_iter = weights.iter();
+    let mut target = total * w_iter.next().unwrap() / wsum;
+    let mut acc = 0.0;
+    for (i, &c) in block_ms.iter().enumerate() {
+        if cuts.len() == num_partitions {
+            break;
+        }
+        let parts_needed = num_partitions - cuts.len();
+        // Cut *before* this block when that lands closer to the target
+        // than cutting after it (minimizes per-partition deviation).
+        let over = acc + c - target;
+        let under = target - acc;
+        if acc > 0.0 && over > under && n_blocks - i >= parts_needed {
+            cuts.push(i);
+            acc = c;
+            target = total * w_iter.next().unwrap() / wsum;
+        } else {
+            acc += c;
+            if acc >= target && n_blocks - (i + 1) >= parts_needed {
+                cuts.push(i + 1);
+                acc = 0.0;
+                target = total * w_iter.next().unwrap() / wsum;
+            }
+        }
+    }
+    while cuts.len() < num_partitions {
+        // Degenerate: force single-block partitions at the tail.
+        let prev = *cuts.last().unwrap();
+        cuts.push((prev + 1).min(manifest.blocks.len() - (num_partitions - cuts.len())));
+    }
+    cuts.push(manifest.blocks.len());
+    for i in (1..cuts.len() - 1).rev() {
+        if cuts[i] >= cuts[i + 1] {
+            cuts[i] = cuts[i + 1].saturating_sub(1);
+        }
+    }
+
+    let offsets = manifest.block_layer_offsets();
+    let costs: Vec<u64> =
+        manifest.flat_layers().iter().map(|l| cost::layer_cost(l)).collect();
+    let total_cost: u64 = costs.iter().sum();
+    let partitions = (0..num_partitions)
+        .map(|i| {
+            let br = cuts[i]..cuts[i + 1];
+            let lr = offsets[br.start]..offsets[br.end];
+            Partition {
+                cost: costs[lr.clone()].iter().sum(),
+                layer_range: lr,
+                block_range: br,
+            }
+        })
+        .collect::<Vec<_>>();
+    anyhow::ensure!(
+        partitions.iter().all(|p| !p.block_range.is_empty()),
+        "measured plan produced an empty partition"
+    );
+    Ok(Plan { partitions, total_cost })
+}
+
+/// Ablation: the paper's greedy algorithm under the corrected (group-aware)
+/// cost model. Returns layer sizes only (no realization needed for study).
+pub fn layer_sizes_flops_cost(manifest: &Manifest, num_partitions: usize) -> Vec<usize> {
+    let costs: Vec<u64> =
+        manifest.flat_layers().iter().map(|l| cost::flops_cost(l)).collect();
+    layer_boundaries_with(&costs, num_partitions)
+        .into_iter()
+        .map(|r| r.len())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::testutil::tiny_manifest;
+    use crate::util::check::forall;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn single_partition_is_whole_model() {
+        let m = tiny_manifest();
+        let p = plan(&m, 1).unwrap();
+        assert_eq!(p.layer_sizes(), vec![4]);
+        assert_eq!(p.block_ranges(), vec![0..3]);
+    }
+
+    #[test]
+    fn partitions_tile_layers_and_blocks() {
+        let m = tiny_manifest();
+        for n in 1..=3 {
+            let p = plan(&m, n).unwrap();
+            assert_eq!(p.layer_sizes().iter().sum::<usize>(), 4);
+            assert_eq!(p.partitions.len(), n);
+            assert_eq!(p.partitions[0].block_range.start, 0);
+            assert_eq!(p.partitions.last().unwrap().block_range.end, 3);
+        }
+    }
+
+    #[test]
+    fn too_many_partitions_rejected() {
+        let m = tiny_manifest();
+        assert!(plan(&m, 4).is_err());
+        assert!(plan(&m, 0).is_err());
+    }
+
+    #[test]
+    fn greedy_matches_hand_computation() {
+        // costs: a.conv 3*3*4*8=288, a.bn 0 (params=0? bn params = c*c ->
+        // in tiny manifest bn has params 0 since c_in=c_out=0) -> layer
+        // costs [288, 0, 576, 80].
+        let costs = vec![288u64, 0, 576, 80];
+        let r = layer_boundaries_with(&costs, 2);
+        // total=944, target=472; cumulative 288,288,864 -> cut after idx 2.
+        assert_eq!(r, vec![0..3, 3..4]);
+    }
+
+    #[test]
+    fn weighted_plan_respects_weights_direction() {
+        let m = tiny_manifest();
+        let p_eq = plan(&m, 2).unwrap();
+        let p_heavy_first = plan_weighted(&m, &[10.0, 1.0]).unwrap();
+        // Giving partition 0 more weight can only move its boundary later
+        // (or keep it).
+        assert!(
+            p_heavy_first.partitions[0].layer_range.end
+                >= p_eq.partitions[0].layer_range.end
+        );
+    }
+
+    #[test]
+    fn snap_prefers_nearest_edge() {
+        let offsets = vec![0, 3, 8, 10];
+        assert_eq!(snap_to_block(3, &offsets), 1); // exact edge
+        assert_eq!(snap_to_block(4, &offsets), 1); // closer to 3
+        assert_eq!(snap_to_block(7, &offsets), 2); // closer to 8
+        assert_eq!(snap_to_block(0, &offsets), 0);
+        assert_eq!(snap_to_block(10, &offsets), 3);
+    }
+
+    #[test]
+    fn property_boundaries_cover_exactly_once() {
+        forall(200, 0xA11CE, |rng: &mut Rng| {
+            let n_layers = rng.range(1, 40);
+            let costs: Vec<u64> =
+                (0..n_layers).map(|_| rng.below(1000) as u64).collect();
+            let parts = rng.range(1, n_layers.min(8));
+            let ranges = layer_boundaries_with(&costs, parts);
+            assert_eq!(ranges.len(), parts);
+            // Tiling: consecutive, total coverage.
+            assert_eq!(ranges[0].start, 0);
+            assert_eq!(ranges.last().unwrap().end, n_layers);
+            for pair in ranges.windows(2) {
+                assert_eq!(pair[0].end, pair[1].start);
+            }
+        });
+    }
+
+    #[test]
+    fn property_cost_balance_bound() {
+        // Every non-final partition's cost exceeds target only by at most
+        // the largest single layer cost (greedy overshoot bound).
+        forall(200, 0xB0B, |rng: &mut Rng| {
+            let n_layers = rng.range(2, 60);
+            let costs: Vec<u64> =
+                (0..n_layers).map(|_| 1 + rng.below(1000) as u64).collect();
+            let parts = rng.range(2, n_layers.min(6));
+            let total: u64 = costs.iter().sum();
+            let target = total as f64 / parts as f64;
+            let max_layer = *costs.iter().max().unwrap() as f64;
+            let ranges = layer_boundaries_with(&costs, parts);
+            for r in ranges.iter().take(parts - 1) {
+                let c: u64 = costs[r.clone()].iter().sum();
+                assert!(
+                    (c as f64) < target + max_layer,
+                    "partition cost {c} exceeds target {target} + max {max_layer}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn property_weighted_plan_valid_on_tiny() {
+        let m = tiny_manifest();
+        forall(100, 0xCAFE, |rng: &mut Rng| {
+            let n = rng.range(1, 3);
+            let weights: Vec<f64> =
+                (0..n).map(|_| 0.1 + rng.f64()).collect();
+            let p = plan_weighted(&m, &weights).unwrap();
+            assert_eq!(p.partitions.len(), n);
+            assert_eq!(p.layer_sizes().iter().sum::<usize>(), 4);
+            assert!(p.partitions.iter().all(|x| !x.block_range.is_empty()));
+        });
+    }
+
+    #[test]
+    fn measured_plan_balances_on_real_costs() {
+        let m = tiny_manifest();
+        // Block 2 is by far the most expensive: a 2-way plan must isolate it.
+        let p = plan_measured(&m, &[1.0, 1.0, 10.0], 2).unwrap();
+        assert_eq!(p.block_ranges(), vec![0..2, 2..3]);
+        // Uniform costs split evenly.
+        let p = plan_measured(&m, &[1.0, 1.0, 1.0], 3).unwrap();
+        assert_eq!(p.block_ranges(), vec![0..1, 1..2, 2..3]);
+        assert!(plan_measured(&m, &[1.0], 2).is_err());
+    }
+
+    #[test]
+    fn property_measured_plan_tiles_blocks() {
+        let m = tiny_manifest();
+        forall(100, 0x11EA5, |rng: &mut Rng| {
+            let costs: Vec<f64> = (0..3).map(|_| 0.1 + rng.f64() * 10.0).collect();
+            let n = rng.range(1, 3);
+            let p = plan_measured(&m, &costs, n).unwrap();
+            assert_eq!(p.partitions.len(), n);
+            assert_eq!(p.partitions[0].block_range.start, 0);
+            assert_eq!(p.partitions.last().unwrap().block_range.end, 3);
+            for pair in p.partitions.windows(2) {
+                assert_eq!(pair[0].block_range.end, pair[1].block_range.start);
+            }
+            assert_eq!(p.layer_sizes().iter().sum::<usize>(), 4);
+        });
+    }
+
+    #[test]
+    fn comm_and_weight_bytes() {
+        let m = tiny_manifest();
+        let p = plan(&m, 2).unwrap();
+        let comm = p.comm_bytes(&m, 1);
+        assert_eq!(comm.len(), 1);
+        assert!(comm[0] > 0);
+        let wb = p.weights_bytes(&m);
+        assert_eq!(wb.iter().sum::<u64>(), 1200);
+    }
+}

@@ -1,0 +1,167 @@
+//! Distributed inference pipeline: run one (batched) request through the
+//! deployed partition chain across virtual nodes.
+//!
+//! Per stage: the activation is transferred over the network model
+//! (leader -> node for stage 0, node -> node between stages, node ->
+//! leader at the end), then the stage's blocks execute serially on the
+//! node's device under its CPU-quota/memory model. Timing is broken into
+//! compute vs communication per stage — the paper's Table I
+//! "communication overhead" column.
+
+use anyhow::Result;
+
+use crate::cluster::VirtualNode;
+use crate::deployer::Deployment;
+use crate::runtime::Tensor;
+
+/// Timing breakdown for one pipeline traversal.
+#[derive(Debug, Clone, Default)]
+pub struct PipelineTiming {
+    pub total_ms: f64,
+    pub compute_ms: f64,
+    pub comm_ms: f64,
+    /// (stage, node id, compute ms, comm-in ms) per stage.
+    pub stages: Vec<StageTiming>,
+    /// Activation bytes moved between leader/nodes.
+    pub activation_bytes: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct StageTiming {
+    pub stage: usize,
+    pub node: usize,
+    pub compute_ms: f64,
+    pub comm_ms: f64,
+}
+
+/// Model a transfer between two parties (leader treated as a zero-latency
+/// infinite-bandwidth endpoint; node links dominate).
+fn transfer(from: Option<&VirtualNode>, to: Option<&VirtualNode>, bytes: u64) -> f64 {
+    let mut ms = 0.0;
+    if let Some(f) = from {
+        ms += f.link().send(bytes);
+    }
+    if let Some(t) = to {
+        ms += t.link().receive(bytes);
+    }
+    ms
+}
+
+/// Execute one already-batched input through the deployment.
+pub fn run(
+    deployment: &Deployment,
+    input: &Tensor,
+) -> Result<(Tensor, PipelineTiming)> {
+    let t0 = std::time::Instant::now();
+    let mut timing = PipelineTiming::default();
+    let mut activation = input.clone();
+    let n_stages = deployment.stages.len();
+
+    for (si, stage) in deployment.stages.iter().enumerate() {
+        // ---- communication into this stage ----
+        let bytes = activation.byte_len();
+        let from: Option<&VirtualNode> = if si == 0 {
+            None // leader -> first node
+        } else {
+            Some(&*deployment.stages[si - 1].node)
+        };
+        let comm_ms = transfer(from, Some(&stage.node), bytes);
+        timing.activation_bytes += bytes;
+
+        // ---- compute on the node (serialized, CPU-quota dilated) ----
+        let executor = &stage.executor;
+        let blocks = stage.blocks.clone();
+        let input_t = activation;
+        let (out, outcome) = stage
+            .node
+            .execute_costed(move || executor.run_chain(blocks, input_t))?;
+        activation = out;
+
+        timing.compute_ms += outcome.sim_ms;
+        timing.comm_ms += comm_ms;
+        timing.stages.push(StageTiming {
+            stage: si,
+            node: stage.node.id(),
+            compute_ms: outcome.sim_ms,
+            comm_ms,
+        });
+
+        // ---- final hop back to the leader ----
+        if si == n_stages - 1 {
+            let out_bytes = activation.byte_len();
+            let ms = transfer(Some(&stage.node), None, out_bytes);
+            timing.comm_ms += ms;
+            timing.activation_bytes += out_bytes;
+        }
+    }
+
+    timing.total_ms = t0.elapsed().as_secs_f64() * 1e3;
+    Ok((activation, timing))
+}
+
+/// Stack `[1, ...]`-shaped inputs into one `[n, ...]` batch, zero-padding
+/// up to `batch` rows.
+pub fn stack_batch(inputs: &[&Tensor], batch: usize) -> Result<Tensor> {
+    anyhow::ensure!(!inputs.is_empty(), "empty batch");
+    anyhow::ensure!(inputs.len() <= batch, "batch overflow");
+    let per = &inputs[0].shape;
+    anyhow::ensure!(per[0] == 1, "stack_batch expects [1, ...] inputs");
+    for t in inputs {
+        anyhow::ensure!(t.shape == *per, "mismatched input shapes in batch");
+    }
+    let row_len: usize = per.iter().skip(1).product();
+    let mut data = Vec::with_capacity(batch * row_len);
+    for t in inputs {
+        data.extend_from_slice(&t.data);
+    }
+    data.resize(batch * row_len, 0.0);
+    let mut shape = per.clone();
+    shape[0] = batch;
+    Tensor::new(shape, data)
+}
+
+/// Split a `[batch, ...]` output back into the first `n` per-request rows.
+pub fn split_batch(output: &Tensor, n: usize) -> Result<Vec<Tensor>> {
+    anyhow::ensure!(!output.shape.is_empty(), "scalar output");
+    let batch = output.shape[0];
+    anyhow::ensure!(n <= batch, "asked for more rows than batch");
+    let row_len: usize = output.shape.iter().skip(1).product();
+    let mut shape = output.shape.clone();
+    shape[0] = 1;
+    (0..n)
+        .map(|i| {
+            Tensor::new(
+                shape.clone(),
+                output.data[i * row_len..(i + 1) * row_len].to_vec(),
+            )
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stack_and_split_roundtrip() {
+        let a = Tensor::new(vec![1, 2], vec![1.0, 2.0]).unwrap();
+        let b = Tensor::new(vec![1, 2], vec![3.0, 4.0]).unwrap();
+        let batch = stack_batch(&[&a, &b], 4).unwrap();
+        assert_eq!(batch.shape, vec![4, 2]);
+        assert_eq!(batch.data, vec![1.0, 2.0, 3.0, 4.0, 0.0, 0.0, 0.0, 0.0]);
+        let rows = split_batch(&batch, 2).unwrap();
+        assert_eq!(rows[0], a);
+        assert_eq!(rows[1], b);
+    }
+
+    #[test]
+    fn stack_rejects_mismatches() {
+        let a = Tensor::new(vec![1, 2], vec![1.0, 2.0]).unwrap();
+        let c = Tensor::new(vec![1, 3], vec![1.0, 2.0, 3.0]).unwrap();
+        assert!(stack_batch(&[&a, &c], 4).is_err());
+        assert!(stack_batch(&[], 4).is_err());
+        let batch2 = Tensor::new(vec![2, 2], vec![0.0; 4]).unwrap();
+        assert!(stack_batch(&[&batch2], 4).is_err());
+        assert!(split_batch(&batch2, 3).is_err());
+    }
+}

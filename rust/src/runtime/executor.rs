@@ -1,0 +1,212 @@
+//! Per-node executor thread.
+//!
+//! The `xla` crate's handles (`PjRtClient`, `PjRtBuffer`,
+//! `PjRtLoadedExecutable`) are `!Send`/`!Sync` (Rc + raw pointers), so they
+//! must live and die on one thread. Each virtual edge node therefore runs
+//! a dedicated executor thread that owns its *own* PJRT CPU client,
+//! compiled executables, and device-resident weight buffers — which is
+//! also the honest simulation of the paper's deployment: every edge
+//! container runs its own model server with its own runtime.
+//!
+//! The handle is `Send + Sync` (it is just an mpsc sender), so the router
+//! worker pool can drive many nodes concurrently for true pipeline
+//! overlap.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc::{self, Sender};
+use std::thread;
+use anyhow::{Context, Result};
+
+use super::{Tensor, XlaRuntime};
+
+/// Identifies a (compiled executable + uploaded weights) pair on the
+/// executor thread.
+pub type BlockHandle = usize;
+
+/// CPU time consumed by the calling thread, in milliseconds.
+pub fn thread_cpu_ms() -> f64 {
+    let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
+    let rc = unsafe {
+        libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts)
+    };
+    if rc != 0 {
+        return 0.0;
+    }
+    ts.tv_sec as f64 * 1e3 + ts.tv_nsec as f64 / 1e6
+}
+
+enum Command {
+    /// Compile an HLO artifact and upload its weight sidecar.
+    Load {
+        hlo: PathBuf,
+        weights: PathBuf,
+        param_count: usize,
+        out_shape: Vec<usize>,
+        reply: Sender<Result<BlockHandle>>,
+    },
+    /// Run a chain of loaded blocks, feeding each output to the next.
+    RunChain {
+        blocks: Vec<BlockHandle>,
+        input: Tensor,
+        reply: Sender<Result<(Tensor, f64)>>,
+    },
+    /// Drop a loaded block (undeploy).
+    Unload {
+        block: BlockHandle,
+        reply: Sender<()>,
+    },
+    Shutdown,
+}
+
+struct Loaded {
+    exe: super::Executable,
+    weights: super::DeviceBuffer,
+    out_shape: Vec<usize>,
+}
+
+/// Handle to one node's executor thread. Cloneable and thread-safe.
+pub struct Executor {
+    tx: Sender<Command>,
+    thread: Option<thread::JoinHandle<()>>,
+    name: String,
+}
+
+impl Executor {
+    /// Spawn the executor thread (creates its own PJRT CPU client).
+    pub fn spawn(name: &str) -> Result<Executor> {
+        let (tx, rx) = mpsc::channel::<Command>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let tname = name.to_string();
+        let thread = thread::Builder::new()
+            .name(format!("exec-{name}"))
+            .spawn(move || {
+                let rt = match XlaRuntime::cpu() {
+                    Ok(rt) => {
+                        let _ = ready_tx.send(Ok(()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                let mut loaded: HashMap<BlockHandle, Loaded> = HashMap::new();
+                let mut next_id: BlockHandle = 0;
+                while let Ok(cmd) = rx.recv() {
+                    match cmd {
+                        Command::Load { hlo, weights, param_count, out_shape, reply } => {
+                            let result = (|| {
+                                let exe = rt.load_hlo(&hlo)?;
+                                let w = Tensor::from_f32_file(
+                                    &weights,
+                                    vec![param_count],
+                                )?;
+                                let wbuf = rt.upload(&w)?;
+                                Ok::<_, anyhow::Error>(Loaded {
+                                    exe,
+                                    weights: wbuf,
+                                    out_shape,
+                                })
+                            })();
+                            let _ = reply.send(result.map(|l| {
+                                let id = next_id;
+                                next_id += 1;
+                                loaded.insert(id, l);
+                                id
+                            }));
+                        }
+                        Command::RunChain { blocks, input, reply } => {
+                            let t0 = thread_cpu_ms();
+                            let result = (|| {
+                                let mut cur = input;
+                                for b in &blocks {
+                                    let l = loaded.get(b).with_context(|| {
+                                        format!("block handle {b} not loaded")
+                                    })?;
+                                    let act = rt.upload(&cur)?;
+                                    cur = l.exe.run_with_weights(
+                                        &l.weights,
+                                        &act,
+                                        &l.out_shape,
+                                    )?;
+                                }
+                                Ok::<_, anyhow::Error>(cur)
+                            })();
+                            // Thread CPU time, not wall time: excludes
+                            // contention from other executor threads on
+                            // the shared build host, so the virtual
+                            // node's CPU-quota dilation is applied to
+                            // the *nominal* compute cost (a real edge
+                            // device does not share cores with its
+                            // peers).
+                            let host_ms = thread_cpu_ms() - t0;
+                            let _ = reply.send(result.map(|t| (t, host_ms)));
+                        }
+                        Command::Unload { block, reply } => {
+                            loaded.remove(&block);
+                            let _ = reply.send(());
+                        }
+                        Command::Shutdown => break,
+                    }
+                }
+                let _ = tname; // keep for debugging symmetry
+            })
+            .context("spawning executor thread")?;
+        ready_rx
+            .recv()
+            .context("executor thread died during init")??;
+        Ok(Executor { tx, thread: Some(thread), name: name.to_string() })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Compile an artifact and upload its weights; returns a handle.
+    pub fn load_block(
+        &self,
+        hlo: PathBuf,
+        weights: PathBuf,
+        param_count: usize,
+        out_shape: Vec<usize>,
+    ) -> Result<BlockHandle> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Command::Load { hlo, weights, param_count, out_shape, reply })
+            .map_err(|_| anyhow::anyhow!("executor {} gone", self.name))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("executor {} died", self.name))?
+    }
+
+    /// Run loaded blocks as a chain. Returns output + host compute cost
+    /// in thread-CPU milliseconds (contention-free nominal cost).
+    pub fn run_chain(
+        &self,
+        blocks: Vec<BlockHandle>,
+        input: Tensor,
+    ) -> Result<(Tensor, f64)> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Command::RunChain { blocks, input, reply })
+            .map_err(|_| anyhow::anyhow!("executor {} gone", self.name))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("executor {} died", self.name))?
+    }
+
+    pub fn unload_block(&self, block: BlockHandle) {
+        let (reply, rx) = mpsc::channel();
+        if self.tx.send(Command::Unload { block, reply }).is_ok() {
+            let _ = rx.recv();
+        }
+    }
+}
+
+impl Drop for Executor {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Command::Shutdown);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+// Executor integration tests (needing real artifacts) live in rust/tests/.

@@ -1,0 +1,237 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them on the CPU
+//! client (the `xla` crate). This is the only module that touches XLA —
+//! everything above it works with [`Tensor`]s.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file
+//! -> XlaComputation::from_proto -> client.compile -> execute`. Artifacts
+//! are HLO *text*, not serialized protos (jax >= 0.5 emits 64-bit ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns them).
+//!
+//! Every block artifact has the signature `(weights f32[P], x f32[B,H,W,C])
+//! -> (y,)` — a 1-tuple because the AOT path lowers with
+//! `return_tuple=True`. Weights are uploaded once per deployment as a
+//! device-resident [`xla::PjRtBuffer`] and reused across requests (the hot
+//! path only uploads the activation).
+
+pub mod executor;
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+pub use executor::{BlockHandle, Executor};
+
+/// A host-side f32 tensor (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+        let expect: usize = shape.iter().product();
+        anyhow::ensure!(
+            expect == data.len(),
+            "shape {:?} needs {expect} elements, got {}",
+            shape,
+            data.len()
+        );
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn byte_len(&self) -> u64 {
+        (self.data.len() * 4) as u64
+    }
+
+    /// Read a little-endian f32 binary sidecar (weights / goldens).
+    pub fn from_f32_file(path: &Path, shape: Vec<usize>) -> Result<Tensor> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        anyhow::ensure!(
+            bytes.len() % 4 == 0,
+            "{} is not a multiple of 4 bytes",
+            path.display()
+        );
+        let mut data = Vec::with_capacity(bytes.len() / 4);
+        for chunk in bytes.chunks_exact(4) {
+            data.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+        }
+        Tensor::new(shape, data)
+    }
+
+    /// Max |a-b| against another tensor (golden comparisons).
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+/// Shared PJRT CPU client.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+}
+
+impl XlaRuntime {
+    /// Create the CPU client. One per process is plenty.
+    pub fn cpu() -> Result<XlaRuntime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(XlaRuntime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact.
+    pub fn load_hlo(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", path.display()))?;
+        Ok(Executable {
+            exe: Arc::new(exe),
+            name: path
+                .file_name()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+        })
+    }
+
+    /// Upload a tensor to a device-resident buffer (weights, reused across
+    /// calls).
+    pub fn upload(&self, t: &Tensor) -> Result<DeviceBuffer> {
+        let buf = self
+            .client
+            .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)
+            .map_err(|e| anyhow::anyhow!("uploading buffer: {e:?}"))?;
+        Ok(DeviceBuffer { buf, shape: t.shape.clone() })
+    }
+}
+
+/// A device-resident input buffer (weights stay uploaded per deployment).
+pub struct DeviceBuffer {
+    buf: xla::PjRtBuffer,
+    pub shape: Vec<usize>,
+}
+
+/// A compiled HLO module ready to execute.
+#[derive(Clone)]
+pub struct Executable {
+    exe: Arc<xla::PjRtLoadedExecutable>,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with host tensors (uploads everything; convenience path).
+    pub fn run(&self, inputs: &[&Tensor], out_shape: &[usize]) -> Result<Tensor> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(&t.data)
+                    .reshape(&dims)
+                    .map_err(|e| anyhow::anyhow!("reshape literal: {e:?}"))
+            })
+            .collect::<Result<_>>()?;
+        let out = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("execute {}: {e:?}", self.name))?;
+        self.collect_output(out, out_shape)
+    }
+
+    /// Hot path: device-resident weights + freshly-uploaded activation.
+    pub fn run_with_weights(
+        &self,
+        weights: &DeviceBuffer,
+        activation: &DeviceBuffer,
+        out_shape: &[usize],
+    ) -> Result<Tensor> {
+        let out = self
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(&[&weights.buf, &activation.buf])
+            .map_err(|e| anyhow::anyhow!("execute_b {}: {e:?}", self.name))?;
+        self.collect_output(out, out_shape)
+    }
+
+    fn collect_output(
+        &self,
+        out: Vec<Vec<xla::PjRtBuffer>>,
+        out_shape: &[usize],
+    ) -> Result<Tensor> {
+        anyhow::ensure!(
+            !out.is_empty() && !out[0].is_empty(),
+            "executable {} produced no output",
+            self.name
+        );
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch output: {e:?}"))?;
+        // AOT lowers with return_tuple=True: unwrap the 1-tuple.
+        let inner = lit
+            .to_tuple1()
+            .map_err(|e| anyhow::anyhow!("untuple output: {e:?}"))?;
+        let data = inner
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("output to_vec: {e:?}"))?;
+        Tensor::new(out_shape.to_vec(), data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_shape_validation() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+        let z = Tensor::zeros(vec![4, 4]);
+        assert_eq!(z.len(), 16);
+        assert_eq!(z.byte_len(), 64);
+    }
+
+    #[test]
+    fn tensor_from_file_roundtrip() {
+        let dir = std::env::temp_dir().join("amp4ec_test_tensor");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.bin");
+        let vals: Vec<f32> = vec![1.5, -2.25, 3.0];
+        let bytes: Vec<u8> =
+            vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(&path, bytes).unwrap();
+        let t = Tensor::from_f32_file(&path, vec![3]).unwrap();
+        assert_eq!(t.data, vals);
+        assert!(Tensor::from_f32_file(&path, vec![4]).is_err());
+    }
+
+    #[test]
+    fn max_abs_diff() {
+        let a = Tensor::new(vec![3], vec![1.0, 2.0, 3.0]).unwrap();
+        let b = Tensor::new(vec![3], vec![1.0, 2.5, 2.0]).unwrap();
+        assert_eq!(a.max_abs_diff(&b), 1.0);
+    }
+
+    // PJRT-backed tests live in rust/tests/ since they need artifacts.
+}

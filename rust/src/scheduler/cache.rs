@@ -1,0 +1,188 @@
+//! Result cache — the "+Cache" in AMP4EC+Cache (paper §IV-B).
+//!
+//! An LRU keyed by an FNV-1a hash of (model id, input tensor bytes). A hit
+//! short-circuits the whole distributed pipeline: no node compute, no
+//! activation transfers — which is how the paper's cached configuration
+//! drives both the 2.6x latency cut over plain AMP4EC and the
+//! bandwidth-to-zero effect on repeated inputs.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// FNV-1a over arbitrary bytes; deterministic across runs and platforms.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Hash a model-scoped f32 input tensor.
+pub fn input_key(model_id: u64, input: &[f32]) -> u64 {
+    let mut h = fnv1a(&model_id.to_le_bytes());
+    // Hash the raw f32 bits in bulk.
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(input.as_ptr() as *const u8,
+                                   std::mem::size_of_val(input))
+    };
+    h ^= fnv1a(bytes);
+    h.wrapping_mul(0x9E3779B97F4A7C15)
+}
+
+struct Entry {
+    value: Vec<f32>,
+    /// LRU tick at last touch.
+    last_used: u64,
+}
+
+/// Bounded LRU result cache.
+pub struct ResultCache {
+    map: Mutex<HashMap<u64, Entry>>,
+    max_entries: usize,
+    tick: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub entries: usize,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+impl ResultCache {
+    pub fn new(max_entries: usize) -> ResultCache {
+        assert!(max_entries > 0);
+        ResultCache {
+            map: Mutex::new(HashMap::new()),
+            max_entries,
+            tick: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    pub fn get(&self, key: u64) -> Option<Vec<f32>> {
+        let tick = self.tick.fetch_add(1, Ordering::SeqCst);
+        let mut map = self.map.lock().unwrap();
+        match map.get_mut(&key) {
+            Some(e) => {
+                e.last_used = tick;
+                self.hits.fetch_add(1, Ordering::SeqCst);
+                Some(e.value.clone())
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::SeqCst);
+                None
+            }
+        }
+    }
+
+    pub fn put(&self, key: u64, value: Vec<f32>) {
+        let tick = self.tick.fetch_add(1, Ordering::SeqCst);
+        let mut map = self.map.lock().unwrap();
+        if map.len() >= self.max_entries && !map.contains_key(&key) {
+            // Evict the least-recently-used entry.
+            if let Some((&lru_key, _)) =
+                map.iter().min_by_key(|(_, e)| e.last_used)
+            {
+                map.remove(&lru_key);
+            }
+        }
+        map.insert(key, Entry { value, last_used: tick });
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::SeqCst),
+            misses: self.misses.load(Ordering::SeqCst),
+            entries: self.map.lock().unwrap().len(),
+        }
+    }
+
+    pub fn clear(&self) {
+        self.map.lock().unwrap().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+
+    #[test]
+    fn fnv_known_vectors() {
+        // FNV-1a("") = offset basis; FNV-1a("a") known value.
+        assert_eq!(fnv1a(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a(b"a"), 0xaf63dc4c8601ec8c);
+    }
+
+    #[test]
+    fn input_key_sensitive_to_model_and_data() {
+        let a = input_key(1, &[1.0, 2.0]);
+        let b = input_key(2, &[1.0, 2.0]);
+        let c = input_key(1, &[1.0, 2.5]);
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a, input_key(1, &[1.0, 2.0]));
+    }
+
+    #[test]
+    fn hit_miss_accounting() {
+        let cache = ResultCache::new(4);
+        assert!(cache.get(1).is_none());
+        cache.put(1, vec![1.0]);
+        assert_eq!(cache.get(1).unwrap(), vec![1.0]);
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+        assert!((s.hit_rate() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lru_evicts_oldest() {
+        let cache = ResultCache::new(2);
+        cache.put(1, vec![1.0]);
+        cache.put(2, vec![2.0]);
+        cache.get(1); // touch 1, so 2 is LRU
+        cache.put(3, vec![3.0]);
+        assert!(cache.get(2).is_none());
+        assert!(cache.get(1).is_some());
+        assert!(cache.get(3).is_some());
+    }
+
+    #[test]
+    fn property_never_exceeds_capacity() {
+        forall(50, 0xCAC4E, |rng| {
+            let cap = rng.range(1, 8);
+            let cache = ResultCache::new(cap);
+            for _ in 0..50 {
+                cache.put(rng.next_u64() % 20, vec![0.0]);
+                assert!(cache.stats().entries <= cap);
+            }
+        });
+    }
+
+    #[test]
+    fn overwrite_same_key_is_not_eviction() {
+        let cache = ResultCache::new(1);
+        cache.put(5, vec![1.0]);
+        cache.put(5, vec![2.0]);
+        assert_eq!(cache.get(5).unwrap(), vec![2.0]);
+        assert_eq!(cache.stats().entries, 1);
+    }
+}

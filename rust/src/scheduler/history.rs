@@ -1,0 +1,119 @@
+//! Per-node performance history (paper §III-C: "maintains a performance
+//! history cache that tracks execution patterns and node capabilities").
+
+use std::collections::VecDeque;
+
+/// Sliding window of recent execution times plus lifetime aggregates.
+#[derive(Debug, Clone)]
+pub struct PerformanceHistory {
+    window: VecDeque<f64>,
+    capacity: usize,
+    total_tasks: u64,
+    total_ms: f64,
+}
+
+impl PerformanceHistory {
+    pub fn new(capacity: usize) -> PerformanceHistory {
+        assert!(capacity > 0);
+        PerformanceHistory {
+            window: VecDeque::with_capacity(capacity),
+            capacity,
+            total_tasks: 0,
+            total_ms: 0.0,
+        }
+    }
+
+    pub fn record(&mut self, exec_ms: f64) {
+        if self.window.len() == self.capacity {
+            self.window.pop_front();
+        }
+        self.window.push_back(exec_ms);
+        self.total_tasks += 1;
+        self.total_ms += exec_ms;
+    }
+
+    /// Average execution time over the recent window, ms. 0 when empty.
+    pub fn avg_exec_ms(&self) -> f64 {
+        if self.window.is_empty() {
+            0.0
+        } else {
+            self.window.iter().sum::<f64>() / self.window.len() as f64
+        }
+    }
+
+    /// Paper Eq. 7: S_P = 1 / (1 + AvgExecTime), with exec time expressed
+    /// in seconds so the score stays meaningfully spread over ms-scale
+    /// inference latencies.
+    pub fn performance_score(&self) -> f64 {
+        1.0 / (1.0 + self.avg_exec_ms() / 1000.0)
+    }
+
+    /// "Recent task performance normalized into a 0-1 range" (§III-C):
+    /// newest sample scaled against the window max (1 = fastest recent).
+    pub fn normalized_recent(&self) -> f64 {
+        let max = self.window.iter().copied().fold(f64::MIN, f64::max);
+        match self.window.back() {
+            None => 1.0,
+            Some(_last) if max <= 0.0 => 1.0,
+            Some(last) => 1.0 - (last / max).clamp(0.0, 1.0) + 1.0 / (1.0 + max),
+        }
+    }
+
+    pub fn total_tasks(&self) -> u64 {
+        self.total_tasks
+    }
+
+    pub fn lifetime_avg_ms(&self) -> f64 {
+        if self.total_tasks == 0 {
+            0.0
+        } else {
+            self.total_ms / self.total_tasks as f64
+        }
+    }
+
+    pub fn window_len(&self) -> usize {
+        self.window.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_history_is_optimistic() {
+        let h = PerformanceHistory::new(8);
+        assert_eq!(h.avg_exec_ms(), 0.0);
+        assert_eq!(h.performance_score(), 1.0);
+    }
+
+    #[test]
+    fn window_caps_and_slides() {
+        let mut h = PerformanceHistory::new(3);
+        for v in [10.0, 20.0, 30.0, 40.0] {
+            h.record(v);
+        }
+        assert_eq!(h.window_len(), 3);
+        assert!((h.avg_exec_ms() - 30.0).abs() < 1e-9);
+        assert_eq!(h.total_tasks(), 4);
+        assert!((h.lifetime_avg_ms() - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn performance_score_decreases_with_slowness() {
+        let mut fast = PerformanceHistory::new(4);
+        fast.record(50.0);
+        let mut slow = PerformanceHistory::new(4);
+        slow.record(2000.0);
+        assert!(fast.performance_score() > slow.performance_score());
+        assert!(fast.performance_score() <= 1.0);
+        assert!(slow.performance_score() > 0.0);
+    }
+
+    #[test]
+    fn eq7_exact_values() {
+        let mut h = PerformanceHistory::new(4);
+        h.record(1000.0); // 1 second
+        assert!((h.performance_score() - 0.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,614 @@
+//! Task Scheduler — paper §III-C: the Node Selection Algorithm
+//! (Algorithm 1) with the weighted scoring mechanism of Eq. 4–8.
+//!
+//! ```text
+//! TotalScore = 0.2 * S_R + 0.2 * S_L + 0.1 * S_P + 0.5 * S_B     (Eq. 4)
+//! S_R = (cpu_avail/cpu_req + mem_avail/mem_req) / 2              (Eq. 5)
+//! S_L = 1 - CurrentLoad                                          (Eq. 6)
+//! S_P = 1 / (1 + AvgExecTime)                                    (Eq. 7)
+//! S_B = 1 / (1 + TaskCount * 2)                                  (Eq. 8)
+//! ```
+//!
+//! Candidates are skipped when overloaded (`current_load > 0.8`), when
+//! their link latency exceeds the threshold, or when they lack sufficient
+//! resources — exactly Algorithm 1's guard clauses. Sub-scores are clamped
+//! to `[0, 1]` (a node with 10x the required memory is "fully sufficient",
+//! not 10x better), which keeps the total score in `[0, 1]` — a property
+//! the proptests pin down.
+
+pub mod cache;
+pub mod history;
+pub mod predict;
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::sync::Mutex;
+
+use crate::cluster::{NodeId, VirtualNode};
+
+pub use cache::{CacheStats, ResultCache};
+pub use history::PerformanceHistory;
+pub use predict::LoadPredictor;
+
+/// Weights of Eq. 4. The paper's experimentally-determined values are the
+/// default; the ablation bench sweeps alternatives.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScoringWeights {
+    pub resource: f64,
+    pub load: f64,
+    pub performance: f64,
+    pub balance: f64,
+}
+
+impl Default for ScoringWeights {
+    fn default() -> Self {
+        ScoringWeights { resource: 0.2, load: 0.2, performance: 0.1, balance: 0.5 }
+    }
+}
+
+impl ScoringWeights {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let parts = [self.resource, self.load, self.performance, self.balance];
+        anyhow::ensure!(
+            parts.iter().all(|w| *w >= 0.0),
+            "scoring weights must be non-negative"
+        );
+        let sum: f64 = parts.iter().sum();
+        anyhow::ensure!(
+            (sum - 1.0).abs() < 1e-6,
+            "scoring weights must sum to 1.0, got {sum}"
+        );
+        Ok(())
+    }
+}
+
+/// What a task needs from a node (Algorithm 1 "task requirements").
+#[derive(Debug, Clone, Copy)]
+pub struct TaskRequirements {
+    /// CPU share needed, e.g. 0.2 of a core.
+    pub cpu: f64,
+    /// Memory needed in MB (activations + scratch for the partition).
+    pub mem_mb: f64,
+    pub priority: u8,
+}
+
+impl Default for TaskRequirements {
+    fn default() -> Self {
+        TaskRequirements { cpu: 0.1, mem_mb: 8.0, priority: 0 }
+    }
+}
+
+/// Per-candidate score decomposition (reported by the metrics layer).
+#[derive(Debug, Clone, Copy)]
+pub struct ScoreBreakdown {
+    pub resource: f64,
+    pub load: f64,
+    pub performance: f64,
+    pub balance: f64,
+    pub total: f64,
+}
+
+/// Why a node was skipped (Algorithm 1 guard clauses), for observability.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SkipReason {
+    Overloaded,
+    HighLatency,
+    InsufficientResources,
+    Offline,
+}
+
+/// The scheduler. Thread-safe; one instance serves the whole cluster.
+pub struct Scheduler {
+    weights: ScoringWeights,
+    /// Algorithm 1 line 4: skip nodes above this load.
+    pub overload_threshold: f64,
+    /// Algorithm 1 line 7: skip nodes above this link latency (ms).
+    pub latency_threshold_ms: f64,
+    state: Mutex<SchedState>,
+}
+
+struct SchedState {
+    history: HashMap<NodeId, PerformanceHistory>,
+    active_tasks: HashMap<NodeId, u64>,
+    decisions: u64,
+    skips: HashMap<&'static str, u64>,
+}
+
+/// Snapshot of scheduler bookkeeping for monitoring (§III-C "reports
+/// detailed metrics including queue lengths ... task counts, load levels").
+#[derive(Debug, Clone)]
+pub struct SchedulerReport {
+    pub decisions: u64,
+    pub active_tasks: Vec<(NodeId, u64)>,
+    pub avg_exec_ms: Vec<(NodeId, f64)>,
+    pub skips: Vec<(String, u64)>,
+}
+
+impl Scheduler {
+    pub fn new(weights: ScoringWeights) -> Scheduler {
+        weights.validate().expect("invalid scoring weights");
+        Scheduler {
+            weights,
+            overload_threshold: 0.8,
+            latency_threshold_ms: 100.0,
+            state: Mutex::new(SchedState {
+                history: HashMap::new(),
+                active_tasks: HashMap::new(),
+                decisions: 0,
+                skips: HashMap::new(),
+            }),
+        }
+    }
+
+    pub fn with_thresholds(mut self, overload: f64, latency_ms: f64) -> Scheduler {
+        self.overload_threshold = overload;
+        self.latency_threshold_ms = latency_ms;
+        self
+    }
+
+    pub fn weights(&self) -> ScoringWeights {
+        self.weights
+    }
+
+    /// Eq. 5, clamped: each sufficiency ratio saturates at 1.
+    fn resource_score(&self, node: &VirtualNode, req: &TaskRequirements) -> f64 {
+        let cpu_avail = node.spec().cpu_fraction * (1.0 - node.current_load());
+        let cpu_ratio = (cpu_avail / req.cpu.max(1e-9)).min(1.0);
+        let mem_ratio = (node.mem_available_mb() / req.mem_mb.max(1e-9)).min(1.0);
+        (cpu_ratio + mem_ratio) / 2.0
+    }
+
+    /// Algorithm 1 line 10.
+    fn has_sufficient_resources(
+        &self,
+        node: &VirtualNode,
+        req: &TaskRequirements,
+    ) -> bool {
+        let cpu_avail = node.spec().cpu_fraction * (1.0 - node.current_load());
+        cpu_avail >= req.cpu * 0.5 && node.mem_available_mb() >= req.mem_mb
+    }
+
+    /// Score a single candidate (None if a guard clause skips it).
+    pub fn score_node(
+        &self,
+        node: &VirtualNode,
+        req: &TaskRequirements,
+    ) -> Result<ScoreBreakdown, SkipReason> {
+        if !node.is_online() {
+            return Err(SkipReason::Offline);
+        }
+        let load = node.current_load();
+        if load > self.overload_threshold {
+            return Err(SkipReason::Overloaded);
+        }
+        if node.spec().link.latency_ms > self.latency_threshold_ms {
+            return Err(SkipReason::HighLatency);
+        }
+        if !self.has_sufficient_resources(node, req) {
+            return Err(SkipReason::InsufficientResources);
+        }
+        let state = self.state.lock().unwrap();
+        let perf = state
+            .history
+            .get(&node.id())
+            .map(|h| h.performance_score())
+            .unwrap_or(1.0);
+        let task_count =
+            state.active_tasks.get(&node.id()).copied().unwrap_or(0);
+        drop(state);
+
+        let s_r = self.resource_score(node, req).clamp(0.0, 1.0);
+        let s_l = (1.0 - load).clamp(0.0, 1.0);
+        let s_p = perf.clamp(0.0, 1.0);
+        let s_b = 1.0 / (1.0 + task_count as f64 * 2.0);
+        let total = self.weights.resource * s_r
+            + self.weights.load * s_l
+            + self.weights.performance * s_p
+            + self.weights.balance * s_b;
+        Ok(ScoreBreakdown {
+            resource: s_r,
+            load: s_l,
+            performance: s_p,
+            balance: s_b,
+            total,
+        })
+    }
+
+    /// Algorithm 1: pick the best node for a task, or None if every node
+    /// is skipped.
+    pub fn select_node(
+        &self,
+        nodes: &[Arc<VirtualNode>],
+        req: &TaskRequirements,
+    ) -> Option<(Arc<VirtualNode>, ScoreBreakdown)> {
+        let mut best: Option<(Arc<VirtualNode>, ScoreBreakdown)> = None;
+        for node in nodes {
+            match self.score_node(node, req) {
+                Ok(score) => {
+                    let better = match &best {
+                        None => true,
+                        Some((_, b)) => score.total > b.total,
+                    };
+                    if better {
+                        best = Some((Arc::clone(node), score));
+                    }
+                }
+                Err(reason) => {
+                    let mut state = self.state.lock().unwrap();
+                    let key = match reason {
+                        SkipReason::Overloaded => "overloaded",
+                        SkipReason::HighLatency => "high_latency",
+                        SkipReason::InsufficientResources => "insufficient",
+                        SkipReason::Offline => "offline",
+                    };
+                    *state.skips.entry(key).or_insert(0) += 1;
+                }
+            }
+        }
+        if best.is_some() {
+            self.state.lock().unwrap().decisions += 1;
+        }
+        best
+    }
+
+    /// §V extension: Algorithm 1 with Eq. 6's *current* load replaced by
+    /// the predictor's forecast (when available), so ramping nodes shed
+    /// new work one period earlier.
+    pub fn select_node_predictive(
+        &self,
+        nodes: &[Arc<VirtualNode>],
+        req: &TaskRequirements,
+        predictor: &predict::LoadPredictor,
+    ) -> Option<(Arc<VirtualNode>, ScoreBreakdown)> {
+        let mut best: Option<(Arc<VirtualNode>, ScoreBreakdown)> = None;
+        for node in nodes {
+            let mut score = match self.score_node(node, req) {
+                Ok(s) => s,
+                Err(_) => continue,
+            };
+            if let Some(pred) = predictor.predicted_load(node.id()) {
+                if pred > self.overload_threshold {
+                    continue; // predicted overload: skip early
+                }
+                let s_l = (1.0 - pred).clamp(0.0, 1.0);
+                score.total += self.weights.load * (s_l - score.load);
+                score.load = s_l;
+            }
+            let better = match &best {
+                None => true,
+                Some((_, b)) => score.total > b.total,
+            };
+            if better {
+                best = Some((Arc::clone(node), score));
+            }
+        }
+        if best.is_some() {
+            self.state.lock().unwrap().decisions += 1;
+        }
+        best
+    }
+
+    /// §V extension: energy-aware selection — among nodes whose total
+    /// score is within `tolerance` of the best, pick the one with the
+    /// lowest predicted marginal energy for the task. Latency-optimality
+    /// is preserved up to the tolerance band; joules drop measurably
+    /// (see `benches/ablation.rs`).
+    pub fn select_node_energy_aware(
+        &self,
+        nodes: &[Arc<VirtualNode>],
+        req: &TaskRequirements,
+        est_ms: f64,
+        est_bytes: u64,
+        tolerance: f64,
+    ) -> Option<(Arc<VirtualNode>, ScoreBreakdown)> {
+        let mut scored: Vec<(Arc<VirtualNode>, ScoreBreakdown)> = nodes
+            .iter()
+            .filter_map(|n| {
+                self.score_node(n, req).ok().map(|s| (Arc::clone(n), s))
+            })
+            .collect();
+        if scored.is_empty() {
+            return None;
+        }
+        let best_total = scored
+            .iter()
+            .map(|(_, s)| s.total)
+            .fold(f64::MIN, f64::max);
+        scored.retain(|(_, s)| s.total >= best_total - tolerance);
+        scored.sort_by(|a, b| {
+            let ea = a.0.predict_task_joules(est_ms, est_bytes);
+            let eb = b.0.predict_task_joules(est_ms, est_bytes);
+            ea.partial_cmp(&eb).unwrap()
+        });
+        self.state.lock().unwrap().decisions += 1;
+        scored.into_iter().next()
+    }
+
+    /// Bookkeeping: a task was dispatched to `node`.
+    pub fn task_started(&self, node: NodeId) {
+        let mut state = self.state.lock().unwrap();
+        *state.active_tasks.entry(node).or_insert(0) += 1;
+    }
+
+    /// Bookkeeping: a task finished; feeds the performance history
+    /// ("completed tasks are tracked to update execution histories and
+    /// recalibrate node loads").
+    pub fn task_completed(&self, node: NodeId, exec_ms: f64) {
+        let mut state = self.state.lock().unwrap();
+        if let Some(c) = state.active_tasks.get_mut(&node) {
+            *c = c.saturating_sub(1);
+        }
+        state
+            .history
+            .entry(node)
+            .or_insert_with(|| PerformanceHistory::new(64))
+            .record(exec_ms);
+    }
+
+    pub fn active_tasks(&self, node: NodeId) -> u64 {
+        self.state
+            .lock()
+            .unwrap()
+            .active_tasks
+            .get(&node)
+            .copied()
+            .unwrap_or(0)
+    }
+
+    pub fn report(&self) -> SchedulerReport {
+        let state = self.state.lock().unwrap();
+        SchedulerReport {
+            decisions: state.decisions,
+            active_tasks: state
+                .active_tasks
+                .iter()
+                .map(|(k, v)| (*k, *v))
+                .collect(),
+            avg_exec_ms: state
+                .history
+                .iter()
+                .map(|(k, h)| (*k, h.avg_exec_ms()))
+                .collect(),
+            skips: state
+                .skips
+                .iter()
+                .map(|(k, v)| (k.to_string(), *v))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{NodeSpec, SimParams};
+    use crate::util::check::forall;
+
+    fn mk_node(id: usize, cpu: f64, mem: f64) -> Arc<VirtualNode> {
+        let params = SimParams {
+            time_scale: 1.0,
+            page_factor: 4.0,
+            runtime_overhead_mb: 0.0,
+        };
+        Arc::new(VirtualNode::new(id, NodeSpec::new(&format!("n{id}"), cpu, mem), params))
+    }
+
+    fn req() -> TaskRequirements {
+        TaskRequirements { cpu: 0.1, mem_mb: 10.0, priority: 0 }
+    }
+
+    #[test]
+    fn default_weights_are_papers() {
+        let w = ScoringWeights::default();
+        assert_eq!((w.resource, w.load, w.performance, w.balance),
+                   (0.2, 0.2, 0.1, 0.5));
+        w.validate().unwrap();
+    }
+
+    #[test]
+    fn invalid_weights_rejected() {
+        assert!(ScoringWeights { resource: 0.5, load: 0.5, performance: 0.5, balance: 0.5 }
+            .validate()
+            .is_err());
+        assert!(ScoringWeights { resource: -0.2, load: 0.6, performance: 0.1, balance: 0.5 }
+            .validate()
+            .is_err());
+    }
+
+    #[test]
+    fn selects_idle_capable_node() {
+        let sched = Scheduler::new(ScoringWeights::default());
+        let nodes = vec![mk_node(0, 1.0, 1024.0), mk_node(1, 0.4, 512.0)];
+        let (node, score) = sched.select_node(&nodes, &req()).unwrap();
+        assert!(score.total > 0.0 && score.total <= 1.0);
+        // Both idle; equal balance/load/perf; bigger node wins on S_R tie
+        // or the first max is kept — either way a node is returned.
+        assert!(node.id() == 0 || node.id() == 1);
+    }
+
+    #[test]
+    fn skips_offline_nodes() {
+        let sched = Scheduler::new(ScoringWeights::default());
+        let nodes = vec![mk_node(0, 1.0, 1024.0)];
+        nodes[0].set_online(false);
+        assert!(sched.select_node(&nodes, &req()).is_none());
+        let report = sched.report();
+        assert_eq!(report.skips, vec![("offline".to_string(), 1)]);
+    }
+
+    #[test]
+    fn skips_high_latency_nodes() {
+        let sched = Scheduler::new(ScoringWeights::default())
+            .with_thresholds(0.8, 5.0);
+        let spec = NodeSpec::new("far", 1.0, 1024.0)
+            .with_link(crate::cluster::LinkSpec::new(50.0, 1000.0));
+        let far = Arc::new(VirtualNode::new(7, spec, SimParams::default()));
+        assert_eq!(sched.score_node(&far, &req()).unwrap_err(),
+                   SkipReason::HighLatency);
+    }
+
+    #[test]
+    fn skips_insufficient_memory() {
+        let sched = Scheduler::new(ScoringWeights::default());
+        let tiny = mk_node(2, 1.0, 4.0);
+        let r = TaskRequirements { cpu: 0.1, mem_mb: 100.0, priority: 0 };
+        assert_eq!(sched.score_node(&tiny, &r).unwrap_err(),
+                   SkipReason::InsufficientResources);
+    }
+
+    #[test]
+    fn balance_score_prefers_less_busy_node() {
+        let sched = Scheduler::new(ScoringWeights::default());
+        let nodes = vec![mk_node(0, 1.0, 1024.0), mk_node(1, 1.0, 1024.0)];
+        // Node 0 has 3 active tasks.
+        for _ in 0..3 {
+            sched.task_started(0);
+        }
+        let (selected, _) = sched.select_node(&nodes, &req()).unwrap();
+        assert_eq!(selected.id(), 1);
+    }
+
+    #[test]
+    fn eq8_balance_values() {
+        let sched = Scheduler::new(ScoringWeights::default());
+        let n = mk_node(0, 1.0, 1024.0);
+        sched.task_started(0);
+        let s = sched.score_node(&n, &req()).unwrap();
+        assert!((s.balance - 1.0 / 3.0).abs() < 1e-9); // 1/(1+1*2)
+        sched.task_started(0);
+        let s = sched.score_node(&n, &req()).unwrap();
+        assert!((s.balance - 0.2).abs() < 1e-9); // 1/(1+2*2)
+    }
+
+    #[test]
+    fn history_shifts_selection_to_faster_node() {
+        let w = ScoringWeights { resource: 0.1, load: 0.1, performance: 0.7, balance: 0.1 };
+        let sched = Scheduler::new(w);
+        let nodes = vec![mk_node(0, 1.0, 1024.0), mk_node(1, 1.0, 1024.0)];
+        sched.task_completed(0, 5000.0); // node 0 slow historically
+        sched.task_completed(1, 10.0);
+        let (selected, _) = sched.select_node(&nodes, &req()).unwrap();
+        assert_eq!(selected.id(), 1);
+    }
+
+    #[test]
+    fn task_accounting_balances() {
+        let sched = Scheduler::new(ScoringWeights::default());
+        sched.task_started(3);
+        sched.task_started(3);
+        assert_eq!(sched.active_tasks(3), 2);
+        sched.task_completed(3, 12.0);
+        assert_eq!(sched.active_tasks(3), 1);
+        sched.task_completed(3, 14.0);
+        assert_eq!(sched.active_tasks(3), 0);
+        // completing more than started must not underflow
+        sched.task_completed(3, 1.0);
+        assert_eq!(sched.active_tasks(3), 0);
+    }
+
+    #[test]
+    fn predictive_selection_avoids_ramping_node() {
+        use crate::monitor::ClusterSnapshot;
+        let sched = Scheduler::new(ScoringWeights::default());
+        let nodes = vec![mk_node(0, 1.0, 1024.0), mk_node(1, 1.0, 1024.0)];
+        let predictor = predict::LoadPredictor::new(8, 500.0);
+        // Node 0's load ramps hard; node 1 stays flat.
+        for i in 0..5 {
+            let mut snap_nodes = vec![nodes[0].snapshot(), nodes[1].snapshot()];
+            snap_nodes[0].current_load = 0.15 * i as f64;
+            snap_nodes[1].current_load = 0.1;
+            predictor.observe(&ClusterSnapshot {
+                t_ms: i as f64 * 100.0,
+                nodes: snap_nodes,
+            });
+        }
+        let (sel, _) = sched
+            .select_node_predictive(&nodes, &req(), &predictor)
+            .unwrap();
+        assert_eq!(sel.id(), 1);
+    }
+
+    #[test]
+    fn energy_aware_prefers_low_power_within_band() {
+        use crate::cluster::PowerModel;
+        let sched = Scheduler::new(ScoringWeights::default());
+        let params = SimParams {
+            time_scale: 1.0,
+            page_factor: 4.0,
+            runtime_overhead_mb: 0.0,
+        };
+        let hungry = Arc::new(VirtualNode::new(
+            0,
+            NodeSpec::new("hungry", 1.0, 1024.0).with_power(PowerModel {
+                idle_watts: 3.0,
+                busy_watts: 15.0,
+                net_joules_per_byte: 0.0,
+            }),
+            params.clone(),
+        ));
+        let frugal = Arc::new(VirtualNode::new(
+            1,
+            NodeSpec::new("frugal", 1.0, 1024.0).with_power(PowerModel {
+                idle_watts: 2.0,
+                busy_watts: 4.0,
+                net_joules_per_byte: 0.0,
+            }),
+            params,
+        ));
+        let (sel, _) = sched
+            .select_node_energy_aware(
+                &[hungry, frugal],
+                &req(),
+                100.0,
+                1000,
+                0.2,
+            )
+            .unwrap();
+        assert_eq!(sel.id(), 1);
+    }
+
+    #[test]
+    fn property_scores_bounded() {
+        forall(100, 0x5C0, |rng| {
+            let sched = Scheduler::new(ScoringWeights::default());
+            let n = mk_node(rng.below(10), 0.1 + rng.f64(), 16.0 + rng.f64() * 2048.0);
+            for _ in 0..rng.below(5) {
+                sched.task_started(n.id());
+            }
+            for _ in 0..rng.below(5) {
+                sched.task_completed(n.id(), rng.f64() * 3000.0);
+            }
+            let r = TaskRequirements {
+                cpu: 0.01 + rng.f64() * 0.5,
+                mem_mb: 1.0 + rng.f64() * 64.0,
+                priority: 0,
+            };
+            if let Ok(s) = sched.score_node(&n, &r) {
+                for v in [s.resource, s.load, s.performance, s.balance, s.total] {
+                    assert!((0.0..=1.0).contains(&v), "score {v} out of [0,1]");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn property_never_selects_offline_or_overloaded() {
+        forall(60, 0xDEAD, |rng| {
+            let sched = Scheduler::new(ScoringWeights::default());
+            let nodes: Vec<_> = (0..rng.range(1, 5))
+                .map(|i| {
+                    let n = mk_node(i, 1.0, 1024.0);
+                    if rng.chance(0.4) {
+                        n.set_online(false);
+                    }
+                    n
+                })
+                .collect();
+            if let Some((sel, _)) = sched.select_node(&nodes, &req()) {
+                assert!(sel.is_online());
+            } else {
+                assert!(nodes.iter().all(|n| !n.is_online()));
+            }
+        });
+    }
+}

@@ -1,0 +1,187 @@
+//! Predictive resource allocation (paper §V future work).
+//!
+//! [`LoadPredictor`] fits a least-squares line to each node's recent load
+//! samples (fed from monitor snapshots) and extrapolates a short horizon
+//! ahead. [`super::Scheduler::select_node_predictive`] swaps the
+//! *current* load in Eq. 6 for the *predicted* load, so a node that is
+//! ramping up stops attracting new work one scheduling period earlier.
+//! `benches/ablation.rs` quantifies the effect under a ramping workload.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::Mutex;
+
+use crate::cluster::NodeId;
+use crate::monitor::ClusterSnapshot;
+
+/// Per-node sliding window of (t_ms, load) samples.
+#[derive(Debug, Clone)]
+struct Series {
+    samples: VecDeque<(f64, f64)>,
+    capacity: usize,
+}
+
+impl Series {
+    fn new(capacity: usize) -> Series {
+        Series { samples: VecDeque::with_capacity(capacity), capacity }
+    }
+
+    fn push(&mut self, t_ms: f64, load: f64) {
+        if self.samples.len() == self.capacity {
+            self.samples.pop_front();
+        }
+        self.samples.push_back((t_ms, load));
+    }
+
+    /// Least-squares slope + intercept over the window. Falls back to the
+    /// latest sample when there is not enough signal.
+    fn forecast(&self, at_ms: f64) -> Option<f64> {
+        let n = self.samples.len();
+        if n == 0 {
+            return None;
+        }
+        let last = self.samples.back().unwrap().1;
+        if n < 3 {
+            return Some(last);
+        }
+        let (mut sx, mut sy, mut sxx, mut sxy) = (0.0, 0.0, 0.0, 0.0);
+        for &(x, y) in &self.samples {
+            sx += x;
+            sy += y;
+            sxx += x * x;
+            sxy += x * y;
+        }
+        let nf = n as f64;
+        let denom = nf * sxx - sx * sx;
+        if denom.abs() < 1e-9 {
+            return Some(last);
+        }
+        let slope = (nf * sxy - sx * sy) / denom;
+        let intercept = (sy - slope * sx) / nf;
+        Some((slope * at_ms + intercept).clamp(0.0, 1.0))
+    }
+}
+
+/// Forecasts per-node load from monitor history.
+pub struct LoadPredictor {
+    window: usize,
+    /// How far ahead to extrapolate, ms.
+    pub horizon_ms: f64,
+    series: Mutex<HashMap<NodeId, Series>>,
+    latest_t: Mutex<f64>,
+}
+
+impl LoadPredictor {
+    pub fn new(window: usize, horizon_ms: f64) -> LoadPredictor {
+        assert!(window >= 1);
+        LoadPredictor {
+            window,
+            horizon_ms,
+            series: Mutex::new(HashMap::new()),
+            latest_t: Mutex::new(0.0),
+        }
+    }
+
+    /// Feed one monitor snapshot (call per sample, e.g. from the serving
+    /// loop or a dedicated feeder thread).
+    pub fn observe(&self, snapshot: &ClusterSnapshot) {
+        let mut map = self.series.lock().unwrap();
+        for n in &snapshot.nodes {
+            map.entry(n.id)
+                .or_insert_with(|| Series::new(self.window))
+                .push(snapshot.t_ms, n.current_load);
+        }
+        *self.latest_t.lock().unwrap() = snapshot.t_ms;
+    }
+
+    /// Predicted load for `node` at `now + horizon`; None if never seen.
+    pub fn predicted_load(&self, node: NodeId) -> Option<f64> {
+        let t = *self.latest_t.lock().unwrap() + self.horizon_ms;
+        self.series.lock().unwrap().get(&node)?.forecast(t)
+    }
+
+    pub fn nodes_tracked(&self) -> usize {
+        self.series.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::NodeSnapshot;
+
+    fn snap(t_ms: f64, loads: &[(usize, f64)]) -> ClusterSnapshot {
+        ClusterSnapshot {
+            t_ms,
+            nodes: loads
+                .iter()
+                .map(|&(id, load)| NodeSnapshot {
+                    id,
+                    name: format!("n{id}"),
+                    online: true,
+                    cpu_fraction: 1.0,
+                    mem_limit_mb: 512.0,
+                    current_load: load,
+                    mem_used_mb: 0.0,
+                    mem_pct: 0.0,
+                    rx_bytes: 0,
+                    tx_bytes: 0,
+                    tasks_completed: 0,
+                    tasks_failed: 0,
+                    stability: 1.0,
+                    link_latency_ms: 1.0,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn unknown_node_is_none() {
+        let p = LoadPredictor::new(8, 100.0);
+        assert_eq!(p.predicted_load(0), None);
+    }
+
+    #[test]
+    fn few_samples_fall_back_to_latest() {
+        let p = LoadPredictor::new(8, 100.0);
+        p.observe(&snap(0.0, &[(0, 0.3)]));
+        assert!((p.predicted_load(0).unwrap() - 0.3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rising_trend_extrapolates_upward() {
+        let p = LoadPredictor::new(8, 200.0);
+        for (i, load) in [0.1, 0.2, 0.3, 0.4, 0.5].iter().enumerate() {
+            p.observe(&snap(i as f64 * 100.0, &[(0, *load)]));
+        }
+        // Latest load 0.5 at t=400; slope 0.001/ms; forecast at 600 => 0.7.
+        let f = p.predicted_load(0).unwrap();
+        assert!((f - 0.7).abs() < 0.02, "forecast {f}");
+    }
+
+    #[test]
+    fn forecast_clamped_to_unit_interval() {
+        let p = LoadPredictor::new(8, 10_000.0);
+        for (i, load) in [0.5, 0.7, 0.9].iter().enumerate() {
+            p.observe(&snap(i as f64 * 100.0, &[(1, *load)]));
+        }
+        let f = p.predicted_load(1).unwrap();
+        assert!((0.0..=1.0).contains(&f));
+    }
+
+    #[test]
+    fn flat_series_predicts_flat() {
+        let p = LoadPredictor::new(8, 500.0);
+        for i in 0..6 {
+            p.observe(&snap(i as f64 * 100.0, &[(2, 0.4)]));
+        }
+        assert!((p.predicted_load(2).unwrap() - 0.4).abs() < 1e-6);
+    }
+
+    #[test]
+    fn tracks_multiple_nodes() {
+        let p = LoadPredictor::new(4, 0.0);
+        p.observe(&snap(0.0, &[(0, 0.1), (1, 0.9)]));
+        assert_eq!(p.nodes_tracked(), 2);
+        assert!(p.predicted_load(1).unwrap() > p.predicted_load(0).unwrap());
+    }
+}

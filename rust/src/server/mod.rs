@@ -1,0 +1,417 @@
+//! EdgeServer: the leader process tying all components together.
+//!
+//! Build from an [`AmpConfig`]: create the virtual cluster, spawn the
+//! resource monitor, compute a partition plan, deploy it, then serve
+//! workloads through the router. This is the end-to-end composition the
+//! examples and the table benches drive.
+
+use std::sync::{Arc, RwLock};
+
+use anyhow::{Context, Result};
+
+use crate::cluster::Cluster;
+use crate::config::AmpConfig;
+use crate::deployer::{Deployment, ModelDeployer};
+use crate::manifest::Manifest;
+use crate::metrics::RunMetrics;
+use crate::monitor::{self, MonitorHandle};
+use crate::partitioner::{self, Plan};
+use crate::pipeline;
+use crate::router::{self, InferenceService};
+use crate::runtime::{Executor, Tensor};
+use crate::scheduler::{ResultCache, Scheduler};
+use crate::workload::{feed, Arrival, InputPool};
+
+/// The distributed pipeline as an [`InferenceService`].
+pub struct DistributedService {
+    deployment: RwLock<Deployment>,
+    scheduler: Arc<Scheduler>,
+}
+
+impl DistributedService {
+    pub fn deployment_nodes(&self) -> Vec<usize> {
+        self.deployment.read().unwrap().node_ids()
+    }
+
+    /// Swap in a new deployment (after a topology change).
+    pub fn replace_deployment(&self, d: Deployment) -> Deployment {
+        std::mem::replace(&mut *self.deployment.write().unwrap(), d)
+    }
+}
+
+impl InferenceService for DistributedService {
+    fn infer_batch(&self, batch: &Tensor) -> Result<(Tensor, f64, f64)> {
+        let dep = self.deployment.read().unwrap();
+        let first_node = dep.stages[0].node.id();
+        self.scheduler.task_started(first_node);
+        let result = pipeline::run(&dep, batch);
+        match result {
+            Ok((out, timing)) => {
+                self.scheduler.task_completed(first_node, timing.total_ms);
+                Ok((out, timing.compute_ms, timing.comm_ms))
+            }
+            Err(e) => {
+                self.scheduler.task_completed(first_node, f64::INFINITY.min(1e9));
+                Err(e)
+            }
+        }
+    }
+
+    fn batch_size(&self) -> usize {
+        self.deployment.read().unwrap().batch
+    }
+
+    fn model_id(&self) -> u64 {
+        0xD157
+    }
+}
+
+/// Everything a serving run produces, for the table harnesses.
+pub struct ServeReport {
+    pub metrics: RunMetrics,
+    pub monitor_overhead_pct: f64,
+    pub mean_stability: f64,
+    pub deploy_transfer_bytes: u64,
+    pub deploy_ms: f64,
+    pub partition_layer_sizes: Vec<usize>,
+    pub node_names: Vec<String>,
+    pub cache_stats: Option<crate::scheduler::CacheStats>,
+    /// Per-node accumulated energy (name, total J, compute J) — §V
+    /// energy-aware extension.
+    pub node_energy: Vec<(String, f64, f64)>,
+}
+
+/// The leader.
+pub struct EdgeServer {
+    pub config: AmpConfig,
+    pub manifest: Arc<Manifest>,
+    pub cluster: Arc<Cluster>,
+    pub scheduler: Arc<Scheduler>,
+    pub deployer: Arc<ModelDeployer>,
+    pub monitor: MonitorHandle,
+    /// Persistent result cache (AMP4EC+Cache); survives across workloads.
+    pub cache: Option<Arc<ResultCache>>,
+    service: Arc<DistributedService>,
+    plan: std::sync::Mutex<Plan>,
+}
+
+impl EdgeServer {
+    /// Build the full stack from a config. Loads the manifest, spins up
+    /// the cluster + monitor, plans partitions, and deploys.
+    pub fn start(config: AmpConfig) -> Result<EdgeServer> {
+        Self::start_with_plan(config, None)
+    }
+
+    /// Like [`EdgeServer::start`] but with a caller-supplied partition
+    /// plan (e.g. profile-guided via `partitioner::plan_measured`).
+    pub fn start_with_plan(
+        config: AmpConfig,
+        plan_override: Option<Plan>,
+    ) -> Result<EdgeServer> {
+        config.validate()?;
+        let manifest = Arc::new(
+            Manifest::load(&config.artifacts_dir).context("loading manifest")?,
+        );
+        anyhow::ensure!(
+            manifest.batch_sizes.contains(&config.batch),
+            "batch {} not in manifest batch sizes {:?}",
+            config.batch,
+            manifest.batch_sizes
+        );
+
+        let cluster = Arc::new(Cluster::new(config.sim_params()));
+        for n in &config.nodes {
+            cluster.add_node(n.to_spec());
+        }
+        let monitor = monitor::spawn(Arc::clone(&cluster), config.monitor_config());
+
+        let scheduler = Arc::new(
+            Scheduler::new(config.weights)
+                .with_thresholds(config.overload_threshold, config.latency_threshold_ms),
+        );
+
+        let n_parts = config
+            .num_partitions
+            .unwrap_or_else(|| cluster.online_count())
+            .min(manifest.blocks.len())
+            .max(1);
+        let plan = match plan_override {
+            Some(p) => p,
+            None if config.profiled_partitioning => {
+                let block_ms = calibrate_block_costs(&manifest, config.batch)?;
+                let weights: Vec<f64> =
+                    config.nodes.iter().map(|n| n.cpu).collect();
+                let weights = if weights.len() == n_parts {
+                    weights
+                } else {
+                    vec![1.0; n_parts]
+                };
+                partitioner::plan_measured_weighted(
+                    &manifest, &block_ms, &weights,
+                )?
+            }
+            None if config.weighted_partitioning => {
+                let weights: Vec<f64> =
+                    config.nodes.iter().map(|n| n.cpu).collect();
+                let weights = if weights.len() == n_parts {
+                    weights
+                } else {
+                    vec![1.0; n_parts]
+                };
+                partitioner::plan_weighted(&manifest, &weights)?
+            }
+            None => partitioner::plan(&manifest, n_parts)?,
+        };
+
+        let mut deployer = ModelDeployer::new(Arc::clone(&manifest));
+        deployer.use_model_cache = config.model_cache;
+        let deployer = Arc::new(deployer);
+        if config.model_cache {
+            // Warm deployment: ship once so the measured run reuses the
+            // node-local model cache (the +Cache configuration).
+            let warm = deployer.deploy(&plan, &cluster, &scheduler, config.batch)?;
+            deployer.undeploy(&warm);
+        }
+        let deployment = deployer.deploy(&plan, &cluster, &scheduler, config.batch)?;
+
+        let service = Arc::new(DistributedService {
+            deployment: RwLock::new(deployment),
+            scheduler: Arc::clone(&scheduler),
+        });
+
+        let cache = config.cache_entries.map(|n| Arc::new(ResultCache::new(n)));
+        Ok(EdgeServer {
+            config,
+            manifest,
+            cluster,
+            scheduler,
+            deployer,
+            monitor,
+            cache,
+            service,
+            plan: std::sync::Mutex::new(plan),
+        })
+    }
+
+    /// Current partition plan (clone; plans are small).
+    pub fn plan(&self) -> Plan {
+        self.plan.lock().unwrap().clone()
+    }
+
+    pub fn service(&self) -> Arc<DistributedService> {
+        Arc::clone(&self.service)
+    }
+
+    /// Input tensor shape for a single request (batch dim = 1).
+    pub fn request_shape(&self) -> Vec<usize> {
+        vec![1, self.manifest.input_hw, self.manifest.input_hw,
+             self.manifest.input_channels]
+    }
+
+    /// Run a closed- or open-loop workload of `n` requests drawn from
+    /// `distinct` inputs; returns the full report.
+    pub fn serve_workload(
+        &self,
+        n: usize,
+        distinct: usize,
+        arrival: Arrival,
+        seed: u64,
+    ) -> Result<ServeReport> {
+        let pool = InputPool::new(&self.request_shape(), distinct, seed);
+        let (tx, rx) = router::request_channel(256);
+        let service: Arc<dyn InferenceService> = self.service();
+        let router_cfg = self.config.router_config();
+        let cache = self.cache.clone();
+        let handle =
+            std::thread::spawn(move || router::serve(service, rx, router_cfg, cache));
+        feed(&tx, &pool, n, arrival, seed ^ 0xF00D);
+        drop(tx);
+        let metrics = handle.join().expect("router thread");
+
+        let dep = self.service.deployment.read().unwrap();
+        let snapshot = self.monitor.latest();
+        Ok(ServeReport {
+            metrics,
+            monitor_overhead_pct: self.monitor.overhead_cpu_pct(),
+            mean_stability: snapshot
+                .as_ref()
+                .map(|s| s.mean_stability())
+                .unwrap_or(1.0),
+            deploy_transfer_bytes: dep.transfer_bytes,
+            deploy_ms: dep.deploy_ms,
+            partition_layer_sizes: self.plan.lock().unwrap().layer_sizes(),
+            node_names: self
+                .cluster
+                .online_nodes()
+                .iter()
+                .map(|n| n.name().to_string())
+                .collect(),
+            cache_stats: self.cache.as_ref().map(|c| c.stats()),
+            node_energy: self
+                .cluster
+                .online_nodes()
+                .iter()
+                .map(|n| {
+                    let e = n.energy();
+                    (n.name().to_string(), e.total_j, e.compute_j)
+                })
+                .collect(),
+        })
+    }
+
+    /// Handle a topology change: re-plan and redeploy over the current
+    /// online nodes. Returns the new partition layer sizes.
+    pub fn rebalance(&self) -> Result<Vec<usize>> {
+        let n = self
+            .cluster
+            .online_count()
+            .min(self.manifest.blocks.len())
+            .max(1);
+        let plan = partitioner::plan(&self.manifest, n)?;
+        let new_dep =
+            self.deployer
+                .deploy(&plan, &self.cluster, &self.scheduler, self.config.batch)?;
+        let old = self.service.replace_deployment(new_dep);
+        self.deployer.undeploy(&old);
+        let sizes = plan.layer_sizes();
+        *self.plan.lock().unwrap() = plan;
+        Ok(sizes)
+    }
+
+    /// §V extension "dynamic partitioning ... adapt to runtime changes":
+    /// spawn a watchdog that rebalances automatically whenever the online
+    /// node count changes. Dropping the handle stops it.
+    pub fn start_auto_rebalance(
+        self: &Arc<Self>,
+        interval: std::time::Duration,
+    ) -> AutoRebalanceHandle {
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let server = Arc::clone(self);
+        let stop_t = Arc::clone(&stop);
+        // Baseline captured *before* the thread spawns: a topology change
+        // racing thread startup must still be detected.
+        let baseline = self.cluster.online_count();
+        let thread = std::thread::Builder::new()
+            .name("amp4ec-rebalance".into())
+            .spawn(move || {
+                let mut last = baseline;
+                while !stop_t.load(std::sync::atomic::Ordering::SeqCst) {
+                    std::thread::sleep(interval);
+                    let now = server.cluster.online_count();
+                    if now != last && now > 0 {
+                        match server.rebalance() {
+                            Ok(sizes) => crate::log_info!(
+                                "rebalance",
+                                "topology {last} -> {now} nodes; new plan {sizes:?}"
+                            ),
+                            Err(e) => crate::log_warn!(
+                                "rebalance",
+                                "failed after topology change: {e:#}"
+                            ),
+                        }
+                        last = now;
+                    }
+                }
+            })
+            .expect("spawn rebalance watchdog");
+        AutoRebalanceHandle { stop, thread: Some(thread) }
+    }
+
+    /// Golden parity: run the manifest's recorded input through the
+    /// deployed pipeline and compare against the AOT-recorded output.
+    pub fn golden_check(&self) -> Result<f32> {
+        let golden = self
+            .manifest
+            .golden
+            .as_ref()
+            .context("manifest has no golden pair")?;
+        anyhow::ensure!(
+            golden.batch == 1,
+            "golden parity assumes batch-1 recording"
+        );
+        let input = Tensor::from_f32_file(
+            &self.manifest.dir.join(&golden.input_file),
+            golden.in_shape.clone(),
+        )?;
+        let want = Tensor::from_f32_file(
+            &self.manifest.dir.join(&golden.output_file),
+            golden.out_shape.clone(),
+        )?;
+        // Pad the single input to the deployment batch.
+        let dep = self.service.deployment.read().unwrap();
+        let stacked = pipeline::stack_batch(&[&input], dep.batch)?;
+        let (out, _) = pipeline::run(&dep, &stacked)?;
+        let rows = pipeline::split_batch(&out, 1)?;
+        let diff = rows[0].max_abs_diff(&want);
+        anyhow::ensure!(
+            (diff as f64) <= golden.tolerance * 10.0,
+            "golden mismatch: max abs diff {diff}"
+        );
+        Ok(diff)
+    }
+}
+
+/// Handle to the auto-rebalance watchdog; dropping stops the thread.
+pub struct AutoRebalanceHandle {
+    stop: Arc<std::sync::atomic::AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Drop for AutoRebalanceHandle {
+    fn drop(&mut self) {
+        self.stop.store(true, std::sync::atomic::Ordering::SeqCst);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// One-shot calibration: measured per-block execution time at `batch`
+/// (thread-CPU ms on a scratch executor). Used by profile-guided
+/// partitioning and the scalability bench.
+pub fn calibrate_block_costs(
+    manifest: &Manifest,
+    batch: usize,
+) -> Result<Vec<f64>> {
+    let exec = Executor::spawn("calibrate")?;
+    let mut out = Vec::with_capacity(manifest.blocks.len());
+    let mut act = Tensor::zeros(vec![
+        batch,
+        manifest.input_hw,
+        manifest.input_hw,
+        manifest.input_channels,
+    ]);
+    for b in &manifest.blocks {
+        let out_shape =
+            vec![batch, b.out_shape[0], b.out_shape[1], b.out_shape[2]];
+        let h = exec.load_block(
+            manifest.artifact_path(b, batch)?,
+            manifest.weights_path(b),
+            b.param_count as usize,
+            out_shape,
+        )?;
+        // Warm once, then one timed run (relative weights are all the
+        // planner needs).
+        let (_, _) = exec.run_chain(vec![h], act.clone())?;
+        let (next, ms) = exec.run_chain(vec![h], act)?;
+        act = next;
+        out.push(ms);
+    }
+    Ok(out)
+}
+
+/// Convenience used by benches: a one-request-at-a-time helper.
+pub fn single_request(
+    server: &EdgeServer,
+    input: &Tensor,
+) -> Result<(Tensor, f64)> {
+    let dep = server.service.deployment.read().unwrap();
+    let stacked = pipeline::stack_batch(&[input], dep.batch)?;
+    let t0 = std::time::Instant::now();
+    let (out, _) = pipeline::run(&dep, &stacked)?;
+    let ms = t0.elapsed().as_secs_f64() * 1e3;
+    let rows = pipeline::split_batch(&out, 1)?;
+    Ok((rows[0].clone(), ms))
+}
+
+pub use crate::router::Request as ServerRequest;

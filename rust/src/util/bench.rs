@@ -1,0 +1,111 @@
+//! In-tree micro/meso benchmark harness (substrate — no criterion offline).
+//!
+//! `cargo bench` targets are `harness = false` binaries that call
+//! [`BenchSuite`]. The harness does warmup + timed iterations and prints
+//! aligned mean/p50/p95 rows, plus a machine-readable `BENCHJSON` line per
+//! benchmark for EXPERIMENTS.md tooling.
+
+use std::time::Instant;
+
+use super::stats::Summary;
+
+/// One benchmark's timing result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub min_ms: f64,
+    pub max_ms: f64,
+}
+
+/// Collects and prints benchmark rows.
+pub struct BenchSuite {
+    title: String,
+    results: Vec<BenchResult>,
+}
+
+impl BenchSuite {
+    pub fn new(title: &str) -> BenchSuite {
+        println!("\n=== bench suite: {title} ===");
+        BenchSuite { title: title.to_string(), results: Vec::new() }
+    }
+
+    /// Time `f` for `iters` iterations after `warmup` untimed runs.
+    /// `f` is called once per iteration; per-iteration wall time is recorded.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, warmup: usize,
+                             iters: usize, mut f: F) -> BenchResult {
+        for _ in 0..warmup {
+            f();
+        }
+        let mut summary = Summary::new();
+        for _ in 0..iters {
+            let t = Instant::now();
+            f();
+            summary.record(t.elapsed().as_secs_f64() * 1e3);
+        }
+        let r = BenchResult {
+            name: name.to_string(),
+            iters,
+            mean_ms: summary.mean(),
+            p50_ms: summary.p50(),
+            p95_ms: summary.p95(),
+            min_ms: summary.min(),
+            max_ms: summary.max(),
+        };
+        println!(
+            "{:<44} {:>8} iters  mean {:>9.3} ms  p50 {:>9.3} ms  p95 {:>9.3} ms",
+            r.name, r.iters, r.mean_ms, r.p50_ms, r.p95_ms
+        );
+        println!(
+            "BENCHJSON {{\"suite\":\"{}\",\"name\":\"{}\",\"mean_ms\":{:.6},\"p50_ms\":{:.6},\"p95_ms\":{:.6},\"iters\":{}}}",
+            self.title, r.name, r.mean_ms, r.p50_ms, r.p95_ms, r.iters
+        );
+        self.results.push(r.clone());
+        r
+    }
+
+    /// Record an externally-measured value as a row (for end-to-end drivers
+    /// whose metric is throughput, not per-iteration latency).
+    pub fn record_value(&mut self, name: &str, value: f64, unit: &str) {
+        println!("{name:<44} {value:>12.3} {unit}");
+        println!(
+            "BENCHJSON {{\"suite\":\"{}\",\"name\":\"{}\",\"value\":{:.6},\"unit\":\"{}\"}}",
+            self.title, name, value, unit
+        );
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut suite = BenchSuite::new("test");
+        let mut n = 0u64;
+        let r = suite.bench("noop-ish", 2, 10, || {
+            n = n.wrapping_add(1);
+        });
+        assert_eq!(r.iters, 10);
+        assert_eq!(n, 12); // warmup + iters
+        assert!(r.mean_ms >= 0.0);
+        assert!(r.p95_ms >= r.p50_ms || r.p50_ms - r.p95_ms < 1e-9);
+        assert_eq!(suite.results().len(), 1);
+    }
+
+    #[test]
+    fn timed_sleep_is_measured() {
+        let mut suite = BenchSuite::new("sleep");
+        let r = suite.bench("1ms-sleep", 0, 3, || {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        });
+        assert!(r.mean_ms >= 1.0);
+    }
+}

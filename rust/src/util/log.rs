@@ -1,0 +1,139 @@
+//! Minimal leveled logger (substrate — no `log`/`env_logger` offline).
+//!
+//! Global level from `AMP4EC_LOG` (`error|warn|info|debug|trace`), default
+//! `warn` so benches stay quiet. Timestamps are millis since process
+//! start; output goes to stderr to keep stdout clean for table output.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+
+    fn from_env(s: &str) -> Level {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Level::Error,
+            "warn" | "warning" => Level::Warn,
+            "info" => Level::Info,
+            "debug" => Level::Debug,
+            "trace" => Level::Trace,
+            _ => Level::Warn,
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX); // unset sentinel
+static START: OnceLock<Instant> = OnceLock::new();
+
+fn level() -> u8 {
+    let cur = LEVEL.load(Ordering::Relaxed);
+    if cur != u8::MAX {
+        return cur;
+    }
+    let from_env = std::env::var("AMP4EC_LOG")
+        .map(|v| Level::from_env(&v))
+        .unwrap_or(Level::Warn) as u8;
+    LEVEL.store(from_env, Ordering::Relaxed);
+    from_env
+}
+
+/// Override the level programmatically (tests, CLI `--verbose`).
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(l: Level) -> bool {
+    (l as u8) <= level()
+}
+
+/// Core sink. Prefer the `log_*!` macros.
+pub fn write(l: Level, target: &str, msg: std::fmt::Arguments<'_>) {
+    if !enabled(l) {
+        return;
+    }
+    let t0 = START.get_or_init(Instant::now);
+    eprintln!(
+        "[{:>9.3}ms {:<5} {target}] {msg}",
+        t0.elapsed().as_secs_f64() * 1e3,
+        l.as_str()
+    );
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::log::write($crate::util::log::Level::Error, $target,
+                                 format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::log::write($crate::util::log::Level::Warn, $target,
+                                 format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::log::write($crate::util::log::Level::Info, $target,
+                                 format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::log::write($crate::util::log::Level::Debug, $target,
+                                 format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        assert!(Level::Error < Level::Trace);
+        assert_eq!(Level::from_env("DEBUG"), Level::Debug);
+        assert_eq!(Level::from_env("bogus"), Level::Warn);
+    }
+
+    #[test]
+    fn set_level_gates_output() {
+        set_level(Level::Error);
+        assert!(enabled(Level::Error));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Trace);
+        assert!(enabled(Level::Debug));
+        set_level(Level::Warn); // restore default-ish
+    }
+
+    #[test]
+    fn macros_compile_and_run() {
+        set_level(Level::Error);
+        log_error!("test", "hello {}", 1);
+        log_info!("test", "suppressed {}", 2);
+    }
+}

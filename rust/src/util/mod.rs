@@ -1,0 +1,13 @@
+//! In-tree substrates: this build environment is offline and only the `xla`
+//! crate's dependency closure exists, so JSON, CLI parsing, thread pools,
+//! PRNG, property testing, and the bench harness are implemented here
+//! (see DESIGN.md "Substitutions").
+
+pub mod bench;
+pub mod check;
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod pool;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,145 @@
+//! Summary statistics over latency/throughput samples (substrate).
+
+/// Online + batch summary of a set of f64 samples (milliseconds, usually).
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    samples: Vec<f64>,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary { samples: Vec::new() }
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.samples.push(v);
+    }
+
+    pub fn extend(&mut self, vs: &[f64]) {
+        self.samples.extend_from_slice(vs);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn std(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.samples.iter().map(|x| (x - m).powi(2)).sum::<f64>()
+            / (n - 1) as f64)
+            .sqrt()
+    }
+
+    /// Coefficient of variation (std / mean); 0 for degenerate inputs.
+    pub fn cv(&self) -> f64 {
+        let m = self.mean();
+        if m.abs() < 1e-12 {
+            0.0
+        } else {
+            self.std() / m
+        }
+    }
+
+    /// Linear-interpolated percentile, `q` in `[0, 100]`.
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = (q / 100.0) * (sorted.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        if lo == hi {
+            sorted[lo]
+        } else {
+            let frac = rank - lo as f64;
+            sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+        }
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.percentile(95.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn filled(vs: &[f64]) -> Summary {
+        let mut s = Summary::new();
+        s.extend(vs);
+        s
+    }
+
+    #[test]
+    fn empty_is_zeroes() {
+        let s = Summary::new();
+        assert_eq!(s.count(), 0);
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.percentile(50.0), 0.0);
+        assert_eq!(s.std(), 0.0);
+    }
+
+    #[test]
+    fn mean_and_std() {
+        let s = filled(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.std() - 2.138).abs() < 0.01);
+    }
+
+    #[test]
+    fn percentiles_interpolate() {
+        let s = filled(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.percentile(100.0), 4.0);
+        assert!((s.p50() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_unsorted_input() {
+        let s = filled(&[9.0, 1.0, 5.0]);
+        assert_eq!(s.p50(), 5.0);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 9.0);
+    }
+
+    #[test]
+    fn cv_degenerate() {
+        assert_eq!(filled(&[0.0, 0.0]).cv(), 0.0);
+        let s = filled(&[10.0, 10.0, 10.0]);
+        assert_eq!(s.cv(), 0.0);
+    }
+}

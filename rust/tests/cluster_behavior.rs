@@ -1,0 +1,129 @@
+//! Cluster-behavior integration tests: memory pressure, failure
+//! injection, open-loop (Poisson) arrivals, and energy accounting on the
+//! real serving stack.
+
+mod common;
+
+use std::sync::Arc;
+
+use amp4ec::config::AmpConfig;
+use amp4ec::server::{single_request, EdgeServer};
+use amp4ec::workload::{Arrival, InputPool};
+
+fn base_config() -> AmpConfig {
+    let mut cfg = AmpConfig::paper_cluster(&common::artifacts_dir());
+    cfg.monitor_interval_ms = 20;
+    cfg
+}
+
+#[test]
+fn memory_pressure_slows_inference() {
+    require_artifacts!();
+    // Same CPU everywhere; the second cluster's memory limit sits below
+    // the runtime overhead + working set, so the paging penalty engages.
+    let mut roomy = base_config();
+    roomy.nodes.truncate(1);
+    roomy.nodes[0].cpu = 1.0;
+    roomy.nodes[0].mem_mb = 2048.0;
+    let mut tight = base_config();
+    tight.nodes.truncate(1);
+    tight.nodes[0].cpu = 1.0;
+    tight.nodes[0].mem_mb = 300.0; // below the 384 MB runtime overhead
+
+    let measure = |cfg: AmpConfig| -> f64 {
+        let server = EdgeServer::start(cfg).unwrap();
+        let pool = InputPool::new(&server.request_shape(), 2, 5);
+        single_request(&server, pool.get(0)).unwrap(); // warm
+        let mut total = 0.0;
+        for i in 0..5 {
+            total += single_request(&server, pool.get(i)).unwrap().1;
+        }
+        total / 5.0
+    };
+    let fast = measure(roomy);
+    let slow = measure(tight);
+    assert!(
+        slow > fast * 1.5,
+        "paging penalty should slow the tight node: {fast:.1} vs {slow:.1} ms"
+    );
+}
+
+#[test]
+fn failure_injection_degrades_stability_not_liveness() {
+    require_artifacts!();
+    let mut cfg = base_config();
+    // One flaky node in the pipeline fails ~30% of executions.
+    cfg.nodes[1].fail_rate = 0.3;
+    let server = EdgeServer::start(cfg).unwrap();
+    let report = server.serve_workload(12, 12, Arrival::Closed, 6).unwrap();
+    // Some requests fail (the pipeline surfaces the error)...
+    assert!(report.metrics.failed > 0, "failure injection had no effect");
+    // ...but the system keeps serving and the monitor sees the instability.
+    assert!(report.metrics.completed > 0);
+    let snapshot = server.monitor.latest().unwrap();
+    let flaky = snapshot
+        .nodes
+        .iter()
+        .find(|n| n.name == "edge-med")
+        .unwrap();
+    assert!(flaky.stability < 1.0, "stability {}", flaky.stability);
+}
+
+#[test]
+fn poisson_open_loop_arrivals_serve_cleanly() {
+    require_artifacts!();
+    let server = EdgeServer::start(base_config()).unwrap();
+    let report = server
+        .serve_workload(10, 10, Arrival::Poisson { rate_rps: 20.0 }, 7)
+        .unwrap();
+    assert_eq!(report.metrics.completed, 10);
+    assert_eq!(report.metrics.failed, 0);
+    // Open-loop latency at a sustainable rate is far below the closed-loop
+    // queue-saturated latency.
+    assert!(report.metrics.mean_latency_ms() < 5000.0);
+}
+
+#[test]
+fn energy_accounting_tracks_work() {
+    require_artifacts!();
+    let server = Arc::new(EdgeServer::start(base_config()).unwrap());
+    let before: f64 = server
+        .cluster
+        .online_nodes()
+        .iter()
+        .map(|n| n.energy().compute_j)
+        .sum();
+    server.serve_workload(6, 6, Arrival::Closed, 8).unwrap();
+    let after: f64 = server
+        .cluster
+        .online_nodes()
+        .iter()
+        .map(|n| n.energy().compute_j)
+        .sum();
+    assert!(after > before, "serving must burn compute energy");
+    // Network energy is accounted from link counters too.
+    let net: f64 = server
+        .cluster
+        .online_nodes()
+        .iter()
+        .map(|n| n.energy().network_j)
+        .sum();
+    assert!(net > 0.0);
+}
+
+#[test]
+fn calibration_reports_all_blocks() {
+    require_artifacts!();
+    let m = amp4ec::manifest::Manifest::load(&common::artifacts_dir()).unwrap();
+    let costs = amp4ec::server::calibrate_block_costs(&m, 1).unwrap();
+    assert_eq!(costs.len(), m.blocks.len());
+    assert!(costs.iter().all(|c| *c > 0.0));
+    // The classifier block dominates at batch 1 (the §Perf finding that
+    // motivated profile-guided partitioning).
+    let total: f64 = costs.iter().sum();
+    assert!(
+        costs[19] / total > 0.2,
+        "classifier share {:.2} unexpectedly small",
+        costs[19] / total
+    );
+}

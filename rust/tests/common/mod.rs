@@ -1,0 +1,26 @@
+//! Shared helpers for integration tests (artifacts-dependent).
+
+use std::path::PathBuf;
+
+pub fn artifacts_dir() -> PathBuf {
+    // cargo test runs from the workspace root.
+    std::env::var_os("AMP4EC_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// Skip (return true) when artifacts haven't been built. CI environments
+/// must run `make artifacts` first; unit tests never require artifacts.
+pub fn artifacts_missing() -> bool {
+    !artifacts_dir().join("manifest.json").exists()
+}
+
+#[macro_export]
+macro_rules! require_artifacts {
+    () => {
+        if common::artifacts_missing() {
+            eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+            return;
+        }
+    };
+}

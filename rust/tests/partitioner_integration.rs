@@ -1,0 +1,93 @@
+//! Partitioner over the real MobileNetV2 manifest: the paper's §IV-D
+//! numbers must reproduce exactly, plus invariants at every partition
+//! count the block grid supports.
+
+mod common;
+
+use amp4ec::manifest::Manifest;
+use amp4ec::partitioner::{self, cost};
+
+#[test]
+fn paper_partition_sizes_exact() {
+    require_artifacts!();
+    let m = Manifest::load(&common::artifacts_dir()).unwrap();
+    assert_eq!(partitioner::plan(&m, 2).unwrap().layer_sizes(), vec![116, 25]);
+    assert_eq!(
+        partitioner::plan(&m, 3).unwrap().layer_sizes(),
+        vec![108, 16, 17]
+    );
+}
+
+#[test]
+fn manifest_matches_torchvision_shape() {
+    require_artifacts!();
+    let m = Manifest::load(&common::artifacts_dir()).unwrap();
+    let layers = m.flat_layers();
+    assert_eq!(layers.len(), 141);
+    assert_eq!(m.blocks.len(), 20);
+    let convs = layers
+        .iter()
+        .filter(|l| l.kind == amp4ec::manifest::LayerKind::Conv2d)
+        .count();
+    assert_eq!(convs, 52);
+}
+
+#[test]
+fn all_partition_counts_valid() {
+    require_artifacts!();
+    let m = Manifest::load(&common::artifacts_dir()).unwrap();
+    for n in 1..=m.blocks.len() {
+        let p = partitioner::plan(&m, n).unwrap();
+        assert_eq!(p.partitions.len(), n, "n={n}");
+        assert_eq!(p.layer_sizes().iter().sum::<usize>(), 141, "n={n}");
+        assert!(p.partitions.iter().all(|x| !x.block_range.is_empty()));
+        // Contiguous block tiling.
+        assert_eq!(p.partitions[0].block_range.start, 0);
+        assert_eq!(p.partitions.last().unwrap().block_range.end, m.blocks.len());
+        // Communication estimates positive and bounded by largest
+        // activation.
+        for c in p.comm_bytes(&m, 1) {
+            assert!(c > 0);
+            assert!(c <= 8 * 48 * 48 * 96 * 4);
+        }
+    }
+}
+
+#[test]
+fn weighted_plan_tracks_cpu_shares() {
+    require_artifacts!();
+    let m = Manifest::load(&common::artifacts_dir()).unwrap();
+    let p = partitioner::plan_weighted(&m, &[1.0, 0.6, 0.4]).unwrap();
+    let costs: Vec<u64> = p.partitions.iter().map(|x| x.cost).collect();
+    let total: u64 = costs.iter().sum();
+    // First (heaviest-weighted) partition carries the largest share and
+    // roughly half the cost.
+    let share0 = costs[0] as f64 / total as f64;
+    assert!(share0 > 0.40 && share0 < 0.65, "share0 {share0}");
+    assert!(costs[0] >= costs[2]);
+}
+
+#[test]
+fn ablation_flops_cost_shifts_boundary() {
+    require_artifacts!();
+    let m = Manifest::load(&common::artifacts_dir()).unwrap();
+    let paper = partitioner::plan(&m, 2).unwrap().layer_sizes();
+    let flops = partitioner::layer_sizes_flops_cost(&m, 2);
+    assert_eq!(flops.iter().sum::<usize>(), 141);
+    // Correcting the depthwise overcount moves the cut point.
+    assert_ne!(paper, flops);
+}
+
+#[test]
+fn conv_cost_dominates_mobilenet() {
+    require_artifacts!();
+    let m = Manifest::load(&common::artifacts_dir()).unwrap();
+    let layers = m.flat_layers();
+    let conv: u64 = layers
+        .iter()
+        .filter(|l| l.kind == amp4ec::manifest::LayerKind::Conv2d)
+        .map(|l| cost::layer_cost(l))
+        .sum();
+    let total: u64 = layers.iter().map(|l| cost::layer_cost(l)).sum();
+    assert!(conv as f64 / total as f64 > 0.9);
+}

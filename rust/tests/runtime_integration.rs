@@ -1,0 +1,144 @@
+//! Runtime integration: HLO artifacts load, execute, and match the
+//! python-recorded goldens — the AOT bridge parity signal.
+
+mod common;
+
+use amp4ec::manifest::Manifest;
+use amp4ec::runtime::{Executor, Tensor, XlaRuntime};
+
+#[test]
+fn monolithic_matches_golden() {
+    require_artifacts!();
+    let m = Manifest::load(&common::artifacts_dir()).unwrap();
+    let golden = m.golden.as_ref().unwrap();
+    let mono = m.monolithic.as_ref().unwrap();
+
+    let rt = XlaRuntime::cpu().unwrap();
+    let exe = rt
+        .load_hlo(&m.dir.join(&mono.artifacts[&golden.batch]))
+        .unwrap();
+    let weights = Tensor::from_f32_file(
+        &m.dir.join(&mono.weights_file),
+        vec![m.total_params as usize],
+    )
+    .unwrap();
+    let input =
+        Tensor::from_f32_file(&m.dir.join(&golden.input_file), golden.in_shape.clone())
+            .unwrap();
+    let want =
+        Tensor::from_f32_file(&m.dir.join(&golden.output_file), golden.out_shape.clone())
+            .unwrap();
+
+    let out = exe
+        .run(&[&weights, &input], &golden.out_shape)
+        .unwrap();
+    let diff = out.max_abs_diff(&want);
+    assert!(
+        (diff as f64) <= golden.tolerance,
+        "monolithic vs golden diff {diff}"
+    );
+}
+
+#[test]
+fn block_chain_matches_golden() {
+    require_artifacts!();
+    let m = Manifest::load(&common::artifacts_dir()).unwrap();
+    let golden = m.golden.as_ref().unwrap();
+    let rt = XlaRuntime::cpu().unwrap();
+
+    let mut act =
+        Tensor::from_f32_file(&m.dir.join(&golden.input_file), golden.in_shape.clone())
+            .unwrap();
+    for b in &m.blocks {
+        let exe = rt.load_hlo(&m.artifact_path(b, golden.batch).unwrap()).unwrap();
+        let w = Tensor::from_f32_file(
+            &m.weights_path(b),
+            vec![b.param_count as usize],
+        )
+        .unwrap();
+        let out_shape = if b.name == "classifier" {
+            vec![golden.batch, m.num_classes]
+        } else {
+            vec![golden.batch, b.out_shape[0], b.out_shape[1], b.out_shape[2]]
+        };
+        act = exe.run(&[&w, &act], &out_shape).unwrap();
+    }
+    let want =
+        Tensor::from_f32_file(&m.dir.join(&golden.output_file), golden.out_shape.clone())
+            .unwrap();
+    let diff = act.max_abs_diff(&want);
+    // Chained per-block execution accumulates float reassociation noise;
+    // allow a small multiple of the recorded tolerance.
+    assert!(
+        (diff as f64) <= golden.tolerance * 10.0,
+        "block chain vs golden diff {diff}"
+    );
+}
+
+#[test]
+fn executor_thread_runs_blocks() {
+    require_artifacts!();
+    let m = Manifest::load(&common::artifacts_dir()).unwrap();
+    let exec = Executor::spawn("itest").unwrap();
+    let b0 = &m.blocks[0];
+    let h = exec
+        .load_block(
+            m.artifact_path(b0, 1).unwrap(),
+            m.weights_path(b0),
+            b0.param_count as usize,
+            vec![1, b0.out_shape[0], b0.out_shape[1], b0.out_shape[2]],
+        )
+        .unwrap();
+    let input = Tensor::zeros(vec![1, b0.in_shape[0], b0.in_shape[1], b0.in_shape[2]]);
+    let (out, host_ms) = exec.run_chain(vec![h], input).unwrap();
+    assert_eq!(out.shape, vec![1, b0.out_shape[0], b0.out_shape[1], b0.out_shape[2]]);
+    assert!(host_ms > 0.0);
+    assert!(out.data.iter().all(|v| v.is_finite()));
+    // ReLU6 epilogue bounds the stem output.
+    assert!(out.data.iter().all(|&v| (0.0..=6.0).contains(&v)));
+    exec.unload_block(h);
+    // Running an unloaded block fails cleanly.
+    let input2 = Tensor::zeros(vec![1, b0.in_shape[0], b0.in_shape[1], b0.in_shape[2]]);
+    assert!(exec.run_chain(vec![h], input2).is_err());
+}
+
+#[test]
+fn batch8_artifacts_execute() {
+    require_artifacts!();
+    let m = Manifest::load(&common::artifacts_dir()).unwrap();
+    if !m.batch_sizes.contains(&8) {
+        eprintln!("SKIP: no batch-8 artifacts");
+        return;
+    }
+    let rt = XlaRuntime::cpu().unwrap();
+    let b0 = &m.blocks[0];
+    let exe = rt.load_hlo(&m.artifact_path(b0, 8).unwrap()).unwrap();
+    let w = Tensor::from_f32_file(&m.weights_path(b0), vec![b0.param_count as usize])
+        .unwrap();
+    let x = Tensor::zeros(vec![8, b0.in_shape[0], b0.in_shape[1], b0.in_shape[2]]);
+    let out = exe
+        .run(&[&w, &x], &[8, b0.out_shape[0], b0.out_shape[1], b0.out_shape[2]])
+        .unwrap();
+    assert_eq!(out.shape[0], 8);
+}
+
+#[test]
+fn device_resident_weights_path_matches_literal_path() {
+    require_artifacts!();
+    let m = Manifest::load(&common::artifacts_dir()).unwrap();
+    let rt = XlaRuntime::cpu().unwrap();
+    let b = &m.blocks[1];
+    let exe = rt.load_hlo(&m.artifact_path(b, 1).unwrap()).unwrap();
+    let w = Tensor::from_f32_file(&m.weights_path(b), vec![b.param_count as usize])
+        .unwrap();
+    let mut x = Tensor::zeros(vec![1, b.in_shape[0], b.in_shape[1], b.in_shape[2]]);
+    for (i, v) in x.data.iter_mut().enumerate() {
+        *v = ((i % 13) as f32 - 6.0) / 6.0;
+    }
+    let out_shape = vec![1, b.out_shape[0], b.out_shape[1], b.out_shape[2]];
+    let via_literals = exe.run(&[&w, &x], &out_shape).unwrap();
+    let wbuf = rt.upload(&w).unwrap();
+    let xbuf = rt.upload(&x).unwrap();
+    let via_buffers = exe.run_with_weights(&wbuf, &xbuf, &out_shape).unwrap();
+    assert_eq!(via_literals, via_buffers);
+}

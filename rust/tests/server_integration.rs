@@ -1,0 +1,224 @@
+//! End-to-end integration: EdgeServer over the real artifacts — serving,
+//! caching, adaptability (node join/leave), baseline comparison.
+
+mod common;
+
+use std::sync::Arc;
+
+use amp4ec::baseline::{baseline_node_spec, MonolithicService};
+use amp4ec::cluster::{Cluster, SimParams};
+use amp4ec::config::AmpConfig;
+use amp4ec::router::{self, InferenceService, RouterConfig};
+
+use amp4ec::server::EdgeServer;
+use amp4ec::workload::{feed, Arrival, InputPool};
+
+fn fast_config() -> AmpConfig {
+    let mut cfg = AmpConfig::paper_cluster(&common::artifacts_dir());
+    cfg.monitor_interval_ms = 20;
+    cfg
+}
+
+#[test]
+fn serve_small_workload_end_to_end() {
+    require_artifacts!();
+    let server = EdgeServer::start(fast_config()).unwrap();
+    let report = server.serve_workload(8, 8, Arrival::Closed, 1).unwrap();
+    assert_eq!(report.metrics.completed, 8);
+    assert_eq!(report.metrics.failed, 0);
+    assert!(report.metrics.throughput_rps() > 0.0);
+    assert!(report.metrics.mean_latency_ms() > 0.0);
+    assert_eq!(report.partition_layer_sizes, vec![108, 16, 17]);
+    assert_eq!(report.node_names.len(), 3);
+    assert!(report.deploy_transfer_bytes > 10_000_000); // ~14 MB of weights
+    assert!(report.monitor_overhead_pct < 5.0);
+}
+
+#[test]
+fn golden_parity_through_distributed_pipeline() {
+    require_artifacts!();
+    let server = EdgeServer::start(fast_config()).unwrap();
+    let diff = server.golden_check().unwrap();
+    assert!(diff < 1e-2, "diff {diff}");
+}
+
+#[test]
+fn result_cache_short_circuits_repeats() {
+    require_artifacts!();
+    let mut cfg = fast_config();
+    cfg.cache_entries = Some(64);
+    let server = EdgeServer::start(cfg).unwrap();
+    // Warm the cache with the 3 distinct inputs (cache persists on the
+    // server across workloads), then every request in the measured run
+    // must hit.
+    let warm = server.serve_workload(3, 3, Arrival::Closed, 2).unwrap();
+    assert_eq!(warm.metrics.completed, 3);
+    let report = server.serve_workload(12, 3, Arrival::Closed, 2).unwrap();
+    assert_eq!(report.metrics.completed, 12);
+    assert_eq!(report.metrics.cache_hits, 12);
+    let stats = report.cache_stats.unwrap();
+    assert!(stats.hits >= 12);
+    // Hits are far faster than the warm run's misses.
+    assert!(report.metrics.mean_latency_ms()
+        < warm.metrics.mean_latency_ms() / 2.0);
+}
+
+#[test]
+fn model_cache_zeroes_redeploy_bandwidth() {
+    require_artifacts!();
+    let mut cfg = fast_config();
+    cfg.model_cache = true;
+    let server = EdgeServer::start(cfg).unwrap();
+    // start() does a warm deploy then the real deploy: the measured one
+    // must have moved zero bytes.
+    let report = server.serve_workload(2, 2, Arrival::Closed, 3).unwrap();
+    assert_eq!(report.deploy_transfer_bytes, 0);
+    assert_eq!(report.metrics.completed, 2);
+}
+
+#[test]
+fn node_offline_triggers_rebalance() {
+    require_artifacts!();
+    let server = EdgeServer::start(fast_config()).unwrap();
+    assert_eq!(server.plan().partitions.len(), 3);
+    // Take the last node offline (the paper's "device offline" scenario).
+    let victims = server.cluster.online_nodes();
+    server.cluster.remove_node(victims.last().unwrap().id());
+    let sizes = server.rebalance().unwrap();
+    assert_eq!(sizes, vec![116, 25]); // 2-node plan
+    let report = server.serve_workload(4, 4, Arrival::Closed, 4).unwrap();
+    assert_eq!(report.metrics.completed, 4);
+    assert_eq!(report.metrics.failed, 0);
+}
+
+#[test]
+fn node_join_triggers_scale_up() {
+    require_artifacts!();
+    let mut cfg = fast_config();
+    cfg.nodes.truncate(2); // start with 2 nodes
+    let server = EdgeServer::start(cfg).unwrap();
+    assert_eq!(server.plan().partitions.len(), 2);
+    // New device added (§I scenario 1).
+    server
+        .cluster
+        .add_node(amp4ec::cluster::NodeSpec::new("edge-new", 1.0, 1024.0));
+    let sizes = server.rebalance().unwrap();
+    assert_eq!(sizes.len(), 3);
+    let report = server.serve_workload(4, 4, Arrival::Closed, 5).unwrap();
+    assert_eq!(report.metrics.completed, 4);
+}
+
+#[test]
+fn auto_rebalance_watchdog_reacts_to_topology() {
+    require_artifacts!();
+    let mut cfg = fast_config();
+    cfg.model_cache = true; // cheap redeploys
+    let server = Arc::new(EdgeServer::start(cfg).unwrap());
+    let _watchdog = server
+        .start_auto_rebalance(std::time::Duration::from_millis(50));
+    assert_eq!(server.plan().partitions.len(), 3);
+    let victim = server.cluster.online_nodes().last().unwrap().id();
+    server.cluster.remove_node(victim);
+    // Wait for the watchdog to notice and redeploy.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+    loop {
+        if server.plan().partitions.len() == 2 {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "watchdog did not rebalance in time"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    assert_eq!(server.plan().layer_sizes(), vec![116, 25]);
+    // Service continues on the new deployment.
+    let report = server.serve_workload(4, 4, Arrival::Closed, 6).unwrap();
+    assert_eq!(report.metrics.completed, 4);
+    // Energy accounting is live.
+    assert!(!report.node_energy.is_empty());
+    assert!(report.node_energy.iter().all(|(_, total, _)| *total > 0.0));
+}
+
+#[test]
+fn monolithic_baseline_serves() {
+    require_artifacts!();
+    let manifest =
+        amp4ec::manifest::Manifest::load(&common::artifacts_dir()).unwrap();
+    let cluster = Cluster::new(SimParams::default());
+    let id = cluster.add_node(baseline_node_spec());
+    let node = cluster.get(id).unwrap();
+    let svc = Arc::new(MonolithicService::new(&manifest, node, 1).unwrap());
+
+    let pool = InputPool::new(svc.input_shape(), 4, 7);
+    let (tx, rx) = router::request_channel(16);
+    let svc_dyn: Arc<dyn InferenceService> = svc;
+    let handle = std::thread::spawn(move || {
+        router::serve(svc_dyn, rx, RouterConfig::default(), None)
+    });
+    feed(&tx, &pool, 4, Arrival::Closed, 8);
+    drop(tx);
+    let metrics = handle.join().unwrap();
+    assert_eq!(metrics.completed, 4);
+    assert_eq!(metrics.failed, 0);
+    assert!(metrics.mean_latency_ms() > 0.0);
+}
+
+#[test]
+fn distributed_tracks_monolithic_and_cache_beats_it() {
+    require_artifacts!();
+    // Table I shape, at miniature scale, under an *optimized* baseline:
+    // plain AMP4EC must stay within 2.5x of the monolithic throughput
+    // (equal aggregate compute, pipeline overheads), and AMP4EC+Cache
+    // must strictly beat the monolithic on throughput. (The paper's 5x
+    // gap for cache-less AMP4EC is an artifact of its unoptimized
+    // baseline — 0.96 req/s for MobileNetV2; see EXPERIMENTS.md.)
+    let n_req = 24;
+
+    // Monolithic.
+    let manifest =
+        amp4ec::manifest::Manifest::load(&common::artifacts_dir()).unwrap();
+    let cluster = Cluster::new(SimParams::default());
+    let id = cluster.add_node(baseline_node_spec());
+    let svc = Arc::new(
+        MonolithicService::new(&manifest, cluster.get(id).unwrap(), 1).unwrap(),
+    );
+    let pool = InputPool::new(svc.input_shape(), n_req, 9);
+    let (tx, rx) = router::request_channel(64);
+    let svc_dyn: Arc<dyn InferenceService> = svc;
+    let handle = std::thread::spawn(move || {
+        router::serve(svc_dyn, rx, RouterConfig::default(), None)
+    });
+    feed(&tx, &pool, n_req, Arrival::Closed, 10);
+    drop(tx);
+    let mono = handle.join().unwrap();
+
+    // Distributed: batch-8 artifacts + profile-guided partitions.
+    let mut cfg = fast_config();
+    cfg.batch = 8;
+    cfg.profiled_partitioning = true;
+    cfg.cache_entries = Some(128);
+    let server = EdgeServer::start(cfg).unwrap();
+    let dist = server
+        .serve_workload(n_req, n_req, Arrival::Closed, 9)
+        .unwrap()
+        .metrics;
+    assert!(
+        dist.throughput_rps() > mono.throughput_rps() / 2.5,
+        "distributed {:.2} rps vs monolithic {:.2} rps",
+        dist.throughput_rps(),
+        mono.throughput_rps()
+    );
+
+    // Warm cache: repeated inputs now short-circuit the pipeline.
+    let cached = server
+        .serve_workload(n_req, n_req, Arrival::Closed, 9)
+        .unwrap()
+        .metrics;
+    assert!(
+        cached.throughput_rps() > mono.throughput_rps(),
+        "cached {:.2} rps must beat monolithic {:.2} rps",
+        cached.throughput_rps(),
+        mono.throughput_rps()
+    );
+}
