@@ -1,0 +1,102 @@
+//! Serial vs streamed pipeline execution on heterogeneous profiles.
+//!
+//! Demonstrates the `pipeline::engine` streaming engine on the
+//! virtual-node substrate (no compiled artifacts needed): a 3-stage
+//! chain on the paper's 1.0/0.6/0.4 CPU cluster, plus a wider sweep of
+//! cluster profiles, comparing the serial schedule (`pipeline::run`
+//! semantics) against the streamed schedule at several pipeline depths.
+//! All reported times are simulated milliseconds from the engine's
+//! critical-path accounting, so the numbers are machine-independent.
+//!
+//! Run with: `cargo run --example streaming_pipeline`
+
+use amp4ec::metrics::markdown_table;
+use amp4ec::pipeline::engine::{
+    run_serial, run_streamed, EngineConfig, SimStages,
+};
+use amp4ec::runtime::Tensor;
+
+fn input(rows: usize, cols: usize) -> Tensor {
+    let data = (0..rows * cols).map(|i| (i as f32) * 0.25 - 8.0).collect();
+    Tensor::new(vec![rows, cols], data).unwrap()
+}
+
+fn main() -> anyhow::Result<()> {
+    let profiles: &[(&str, &[f64])] = &[
+        ("paper heterogeneous 1.0/0.6/0.4", &[1.0, 0.6, 0.4]),
+        ("balanced 0.6 x3", &[0.6, 0.6, 0.6]),
+        ("steep 1.0/0.5/0.25/0.25", &[1.0, 0.5, 0.25, 0.25]),
+    ];
+    let n_micro = 8;
+    let batch = input(n_micro, 32);
+
+    for (name, cpus) in profiles {
+        let stages = SimStages::heterogeneous(cpus, 3.0);
+        let serial = run_serial(&stages, &batch, 1)?;
+
+        let mut rows = vec![vec![
+            "serial".to_string(),
+            format!("{:.1}", serial.timing.total_ms),
+            format!("{:.1}", serial.timing.compute_ms),
+            format!("{:.1}", serial.timing.comm_ms),
+            "1.00x".to_string(),
+        ]];
+        for depth in [2usize, 4, 8] {
+            let cfg = EngineConfig { micro_batch_rows: 1, max_in_flight: depth };
+            let run = run_streamed(&stages, &batch, &cfg)?;
+            anyhow::ensure!(
+                run.output == serial.output,
+                "streamed output diverged from serial"
+            );
+            rows.push(vec![
+                format!("streamed depth {depth}"),
+                format!("{:.1}", run.timing.total_ms),
+                format!("{:.1}", run.timing.compute_ms),
+                format!("{:.1}", run.timing.comm_ms),
+                format!("{:.2}x", serial.timing.total_ms / run.timing.total_ms),
+            ]);
+        }
+        println!(
+            "{}",
+            markdown_table(
+                &format!("{name} — {n_micro} micro-batches (sim ms)"),
+                &["Schedule", "Total", "Compute", "Comm", "Speedup"],
+                &rows,
+            )
+        );
+
+        // Per-stage view of the deepest streamed run: where the bubbles
+        // live tells you which node to upgrade next.
+        let cfg = EngineConfig { micro_batch_rows: 1, max_in_flight: 8 };
+        let run = run_streamed(&stages, &batch, &cfg)?;
+        let total = run.timing.total_ms;
+        let stage_rows: Vec<Vec<String>> = run
+            .stage_counters
+            .iter()
+            .map(|c| {
+                vec![
+                    format!("{}", c.stage),
+                    format!("{:.2}", cpus[c.stage]),
+                    format!("{:.1}", c.busy_ms),
+                    format!("{:.1}", c.bubble_ms),
+                    format!("{:.0}%", 100.0 * c.occupancy(total)),
+                ]
+            })
+            .collect();
+        println!(
+            "{}",
+            markdown_table(
+                &format!("{name} — per-stage occupancy at depth 8"),
+                &["Stage", "CPU share", "Busy ms", "Bubble ms", "Occupancy"],
+                &stage_rows,
+            )
+        );
+    }
+
+    println!(
+        "The streamed schedule approaches the pipeline bound \
+         (fill + n_micro x slowest stage) while serial pays the full sum \
+         of stage times per micro-batch; outputs are bit-identical."
+    );
+    Ok(())
+}

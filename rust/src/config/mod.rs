@@ -69,6 +69,12 @@ pub struct AmpConfig {
     pub max_wait_ms: u64,
     /// Router: concurrent batches in flight.
     pub workers: usize,
+    /// Streaming pipeline engine: micro-batches kept in flight per
+    /// admitted batch. 1 = serial `pipeline::run`; >1 makes the router
+    /// admit `batch * pipeline_depth`-row super-batches that the engine
+    /// streams across the stage nodes as `pipeline_depth` micro-batches
+    /// of the compiled `batch` rows each.
+    pub pipeline_depth: usize,
     /// Result-cache entries; None disables (plain AMP4EC).
     pub cache_entries: Option<usize>,
     /// Model/deployment cache across redeployments (+Cache bandwidth=0).
@@ -99,6 +105,7 @@ impl Default for AmpConfig {
             latency_threshold_ms: 100.0,
             max_wait_ms: 10,
             workers: 4,
+            pipeline_depth: 1,
             cache_entries: None,
             model_cache: false,
             time_scale: 1.0,
@@ -125,6 +132,15 @@ impl AmpConfig {
         AmpConfig {
             cache_entries: Some(256),
             model_cache: true,
+            ..AmpConfig::paper_cluster(artifacts_dir)
+        }
+    }
+
+    /// Streaming variant of the paper cluster: the pipeline engine keeps
+    /// `depth` micro-batches in flight across the partition chain.
+    pub fn paper_cluster_streamed(artifacts_dir: &Path, depth: usize) -> AmpConfig {
+        AmpConfig {
+            pipeline_depth: depth.max(1),
             ..AmpConfig::paper_cluster(artifacts_dir)
         }
     }
@@ -173,6 +189,7 @@ impl AmpConfig {
         anyhow::ensure!(!self.nodes.is_empty(), "config needs >= 1 node");
         anyhow::ensure!(self.batch >= 1, "batch must be >= 1");
         anyhow::ensure!(self.workers >= 1, "workers must be >= 1");
+        anyhow::ensure!(self.pipeline_depth >= 1, "pipeline_depth must be >= 1");
         anyhow::ensure!(self.time_scale > 0.0, "time_scale must be > 0");
         self.weights.validate()?;
         for n in &self.nodes {
@@ -238,6 +255,7 @@ impl AmpConfig {
         );
         m.insert("max_wait_ms".into(), Json::from(self.max_wait_ms as usize));
         m.insert("workers".into(), Json::from(self.workers));
+        m.insert("pipeline_depth".into(), Json::from(self.pipeline_depth));
         if let Some(c) = self.cache_entries {
             m.insert("cache_entries".into(), Json::from(c));
         }
@@ -315,6 +333,7 @@ impl AmpConfig {
             latency_threshold_ms: get_f("latency_threshold_ms", d.latency_threshold_ms),
             max_wait_ms: get_u("max_wait_ms", d.max_wait_ms as usize) as u64,
             workers: get_u("workers", d.workers),
+            pipeline_depth: get_u("pipeline_depth", d.pipeline_depth),
             cache_entries: j.get("cache_entries").and_then(Json::as_usize),
             model_cache: j.get("model_cache").and_then(Json::as_bool).unwrap_or(false),
             time_scale: get_f("time_scale", d.time_scale),
@@ -363,9 +382,11 @@ mod tests {
         c.model_cache = true;
         c.num_partitions = Some(3);
         c.weighted_partitioning = true;
+        c.pipeline_depth = 4;
         let j = c.to_json();
         let back = AmpConfig::from_json(&j).unwrap();
         assert_eq!(back.batch, 8);
+        assert_eq!(back.pipeline_depth, 4);
         assert_eq!(back.cache_entries, Some(128));
         assert!(back.model_cache);
         assert_eq!(back.num_partitions, Some(3));
@@ -400,6 +421,17 @@ mod tests {
         let mut c = AmpConfig::default();
         c.nodes[0].cpu = -1.0;
         assert!(c.validate().is_err());
+        let mut c = AmpConfig::default();
+        c.pipeline_depth = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn streamed_preset_sets_depth() {
+        let c = AmpConfig::paper_cluster_streamed(Path::new("a"), 4);
+        assert_eq!(c.pipeline_depth, 4);
+        c.validate().unwrap();
+        assert_eq!(AmpConfig::paper_cluster_streamed(Path::new("a"), 0).pipeline_depth, 1);
     }
 
     #[test]

@@ -11,8 +11,10 @@
 //!   Partitioner, §III-B, Eq. 1–3/9–10), [`scheduler`] (Task Scheduler +
 //!   NSA, §III-C, Eq. 4–8), [`deployer`] (Model Deployer, §III-D), plus
 //!   the [`cluster`] virtual-edge substrate, the [`router`] dynamic
-//!   batcher, the [`pipeline`] distributed executor, the [`baseline`]
-//!   monolithic comparator, and the [`runtime`] PJRT bridge.
+//!   batcher, the [`pipeline`] distributed executor (serial `run` plus
+//!   the [`pipeline::engine`] streaming micro-batch engine), the
+//!   [`baseline`] monolithic comparator, and the [`runtime`] PJRT
+//!   bridge.
 //! * **L2 (python/compile/model.py)** — MobileNetV2 in JAX, AOT-lowered
 //!   per block to HLO text.
 //! * **L1 (python/compile/kernels/)** — Pallas matmul and depthwise-conv

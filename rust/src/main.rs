@@ -5,6 +5,7 @@
 //! amp4ec partition   [--artifacts DIR] [--parts N]
 //! amp4ec serve       [--artifacts DIR] [--requests N] [--distinct N]
 //!                    [--batch B] [--partitions N] [--cache] [--workers N]
+//!                    [--depth D]   # streaming pipeline depth (1 = serial)
 //! amp4ec golden      [--artifacts DIR]
 //! amp4ec config      [--out FILE]       # write a default config file
 //! amp4ec serve-cfg   --config FILE [--requests N]
@@ -68,6 +69,7 @@ fn build_config(args: &Args) -> anyhow::Result<AmpConfig> {
     }
     cfg.workers = args.get_usize("workers", cfg.workers)?;
     cfg.time_scale = args.get_f64("time-scale", cfg.time_scale)?;
+    cfg.pipeline_depth = args.get_usize("depth", cfg.pipeline_depth)?;
     Ok(cfg)
 }
 
@@ -87,6 +89,12 @@ fn print_report(report: &amp4ec::server::ServeReport) {
     println!("monitor overhead   : {:.3}% CPU", report.monitor_overhead_pct);
     println!("partition sizes    : {:?}", report.partition_layer_sizes);
     println!("nodes              : {:?}", report.node_names);
+    for c in &report.stage_counters {
+        println!(
+            "stage {} (node {})  : busy {:.1} ms, bubble {:.1} ms, {} micro-batches",
+            c.stage, c.node, c.busy_ms, c.bubble_ms, c.micro_batches
+        );
+    }
 }
 
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {

@@ -145,6 +145,76 @@ impl MetricsCollector {
     }
 }
 
+/// Per-pipeline-stage occupancy counters produced by the streaming
+/// engine's critical-path accounting (`pipeline::timing`). All times are
+/// simulated milliseconds.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StageCounter {
+    pub stage: usize,
+    /// Node hosting the stage.
+    pub node: usize,
+    /// Simulated compute time the stage spent busy.
+    pub busy_ms: f64,
+    /// Idle gaps between consecutive micro-batches while the pipeline
+    /// was active (excludes initial pipeline fill).
+    pub bubble_ms: f64,
+    /// Simulated ingress communication time.
+    pub comm_ms: f64,
+    /// Micro-batches this stage processed.
+    pub micro_batches: u64,
+}
+
+impl StageCounter {
+    /// Fraction of the traversal the stage spent computing.
+    pub fn occupancy(&self, makespan_ms: f64) -> f64 {
+        if makespan_ms <= 0.0 {
+            0.0
+        } else {
+            (self.busy_ms / makespan_ms).min(1.0)
+        }
+    }
+}
+
+/// Thread-safe accumulator merging [`StageCounter`]s across traversals
+/// (the per-deployment view a serving run reports).
+#[derive(Default)]
+pub struct StageCounterSet {
+    inner: Mutex<Vec<StageCounter>>,
+}
+
+impl StageCounterSet {
+    pub fn new() -> StageCounterSet {
+        StageCounterSet::default()
+    }
+
+    /// Fold one traversal's counters in, summing by stage index.
+    pub fn merge(&self, counters: &[StageCounter]) {
+        let mut inner = self.inner.lock().unwrap();
+        for c in counters {
+            if let Some(existing) =
+                inner.iter_mut().find(|e| e.stage == c.stage)
+            {
+                existing.node = c.node; // latest deployment wins
+                existing.busy_ms += c.busy_ms;
+                existing.bubble_ms += c.bubble_ms;
+                existing.comm_ms += c.comm_ms;
+                existing.micro_batches += c.micro_batches;
+            } else {
+                inner.push(c.clone());
+            }
+        }
+        inner.sort_by_key(|c| c.stage);
+    }
+
+    pub fn snapshot(&self) -> Vec<StageCounter> {
+        self.inner.lock().unwrap().clone()
+    }
+
+    pub fn reset(&self) {
+        self.inner.lock().unwrap().clear();
+    }
+}
+
 /// Render a markdown table from (metric, value) rows — used by the bench
 /// harness binaries to print paper-style tables.
 pub fn markdown_table(title: &str, headers: &[&str],
@@ -256,6 +326,36 @@ mod tests {
         );
         assert!(t.contains("### Table I"));
         assert!(t.contains("| Latency | 1.0 |"));
+    }
+
+    #[test]
+    fn stage_counters_merge_and_occupancy() {
+        let set = StageCounterSet::new();
+        let a = StageCounter {
+            stage: 0, node: 3, busy_ms: 10.0, bubble_ms: 1.0,
+            comm_ms: 2.0, micro_batches: 4,
+        };
+        let b = StageCounter {
+            stage: 0, node: 3, busy_ms: 5.0, bubble_ms: 0.5,
+            comm_ms: 1.0, micro_batches: 2,
+        };
+        let c = StageCounter {
+            stage: 1, node: 5, busy_ms: 20.0, bubble_ms: 0.0,
+            comm_ms: 4.0, micro_batches: 6,
+        };
+        set.merge(&[a, c.clone()]);
+        set.merge(&[b]);
+        let snap = set.snapshot();
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap[0].stage, 0);
+        assert!((snap[0].busy_ms - 15.0).abs() < 1e-9);
+        assert_eq!(snap[0].micro_batches, 6);
+        assert!((snap[0].bubble_ms - 1.5).abs() < 1e-9);
+        assert_eq!(snap[1], c);
+        assert!((snap[1].occupancy(40.0) - 0.5).abs() < 1e-9);
+        assert_eq!(snap[1].occupancy(0.0), 0.0);
+        set.reset();
+        assert!(set.snapshot().is_empty());
     }
 
     #[test]

@@ -1,102 +1,53 @@
 //! Distributed inference pipeline: run one (batched) request through the
 //! deployed partition chain across virtual nodes.
 //!
-//! Per stage: the activation is transferred over the network model
-//! (leader -> node for stage 0, node -> node between stages, node ->
-//! leader at the end), then the stage's blocks execute serially on the
-//! node's device under its CPU-quota/memory model. Timing is broken into
-//! compute vs communication per stage — the paper's Table I
-//! "communication overhead" column.
+//! Two execution modes share one simulated-time model ([`timing`]):
+//!
+//! * [`run`] — serial traversal: the activation visits stage 0..N-1 in
+//!   order, one stage computing at a time. Per stage the activation is
+//!   transferred over the network model (leader -> node for stage 0,
+//!   node -> node between stages, node -> leader at the end), then the
+//!   stage's blocks execute serially on the node's device under its
+//!   CPU-quota/memory model. Timing is broken into compute vs
+//!   communication per stage — the paper's Table I "communication
+//!   overhead" column.
+//! * [`engine`] — streaming traversal: the batch is split into row-wise
+//!   micro-batches driven through per-stage bounded queues so stage *k*
+//!   computes while stage *k+1* receives. See the module docs for the
+//!   micro-batch and sim-time model.
+//!
+//! All reported times are **simulated milliseconds**. In particular
+//! `PipelineTiming::total_ms` is the simulated critical-path sum — for a
+//! serial run exactly `compute_ms + comm_ms` — never host wall-clock
+//! (which is machine-dependent and historically undercut its own
+//! components on fast hosts).
+
+pub mod engine;
+pub mod timing;
 
 use anyhow::Result;
 
-use crate::cluster::VirtualNode;
 use crate::deployer::Deployment;
 use crate::runtime::Tensor;
 
-/// Timing breakdown for one pipeline traversal.
-#[derive(Debug, Clone, Default)]
-pub struct PipelineTiming {
-    pub total_ms: f64,
-    pub compute_ms: f64,
-    pub comm_ms: f64,
-    /// (stage, node id, compute ms, comm-in ms) per stage.
-    pub stages: Vec<StageTiming>,
-    /// Activation bytes moved between leader/nodes.
-    pub activation_bytes: u64,
-}
+pub use timing::{PipelineTiming, StageTiming};
 
-#[derive(Debug, Clone)]
-pub struct StageTiming {
-    pub stage: usize,
-    pub node: usize,
-    pub compute_ms: f64,
-    pub comm_ms: f64,
-}
-
-/// Model a transfer between two parties (leader treated as a zero-latency
-/// infinite-bandwidth endpoint; node links dominate).
-fn transfer(from: Option<&VirtualNode>, to: Option<&VirtualNode>, bytes: u64) -> f64 {
-    let mut ms = 0.0;
-    if let Some(f) = from {
-        ms += f.link().send(bytes);
-    }
-    if let Some(t) = to {
-        ms += t.link().receive(bytes);
-    }
-    ms
-}
-
-/// Execute one already-batched input through the deployment.
+/// Execute one already-batched input through the deployment, serially.
+///
+/// This is the single-chunk degenerate case of the engine's schedule:
+/// it delegates to [`engine::run_serial`] with the whole batch as one
+/// micro-batch, so serial and streamed runs share one accounting path.
 pub fn run(
     deployment: &Deployment,
     input: &Tensor,
 ) -> Result<(Tensor, PipelineTiming)> {
-    let t0 = std::time::Instant::now();
-    let mut timing = PipelineTiming::default();
-    let mut activation = input.clone();
-    let n_stages = deployment.stages.len();
-
-    for (si, stage) in deployment.stages.iter().enumerate() {
-        // ---- communication into this stage ----
-        let bytes = activation.byte_len();
-        let from: Option<&VirtualNode> = if si == 0 {
-            None // leader -> first node
-        } else {
-            Some(&*deployment.stages[si - 1].node)
-        };
-        let comm_ms = transfer(from, Some(&stage.node), bytes);
-        timing.activation_bytes += bytes;
-
-        // ---- compute on the node (serialized, CPU-quota dilated) ----
-        let executor = &stage.executor;
-        let blocks = stage.blocks.clone();
-        let input_t = activation;
-        let (out, outcome) = stage
-            .node
-            .execute_costed(move || executor.run_chain(blocks, input_t))?;
-        activation = out;
-
-        timing.compute_ms += outcome.sim_ms;
-        timing.comm_ms += comm_ms;
-        timing.stages.push(StageTiming {
-            stage: si,
-            node: stage.node.id(),
-            compute_ms: outcome.sim_ms,
-            comm_ms,
-        });
-
-        // ---- final hop back to the leader ----
-        if si == n_stages - 1 {
-            let out_bytes = activation.byte_len();
-            let ms = transfer(Some(&stage.node), None, out_bytes);
-            timing.comm_ms += ms;
-            timing.activation_bytes += out_bytes;
-        }
-    }
-
-    timing.total_ms = t0.elapsed().as_secs_f64() * 1e3;
-    Ok((activation, timing))
+    let rows = input.shape.first().copied().unwrap_or(1).max(1);
+    let run = engine::run_serial(
+        &engine::DeploymentStages::new(deployment),
+        input,
+        rows,
+    )?;
+    Ok((run.output, run.timing))
 }
 
 /// Stack `[1, ...]`-shaped inputs into one `[n, ...]` batch, zero-padding

@@ -1,0 +1,311 @@
+//! Shared simulated-time accounting for the serial pipeline and the
+//! streaming engine.
+//!
+//! Everything here is expressed in **simulated milliseconds** — the
+//! virtual-edge clock produced by CPU-quota dilation
+//! (`VirtualNode::execute_costed`) and the link transfer model
+//! (`LinkSpec::transfer_ms`) — never host wall-clock. Mixing the two was
+//! the seed's `total_ms` bug: a total measured with `Instant::elapsed()`
+//! is machine-dependent and can even undercut its own simulated
+//! components on a fast build host.
+//!
+//! The core is the classic pipeline critical-path recurrence. For
+//! micro-batch *i* entering stage *k*:
+//!
+//! ```text
+//! arrive[i, k] = ready[i, k-1] + comm[i, k]
+//! start[i, k]  = max(arrive[i, k], stage_free[k])
+//! ready[i, k]  = start[i, k] + compute[i, k]
+//! ```
+//!
+//! where `stage_free[k]` is when stage *k*'s node finished its previous
+//! micro-batch (each virtual node executes serially). A serial,
+//! one-chunk traversal degenerates to `total = Σ comm + Σ compute`; a
+//! streamed run's makespan is the true overlapped end-to-end time.
+
+use crate::metrics::StageCounter;
+
+/// Timing breakdown for one pipeline traversal (serial or streamed).
+/// All fields are simulated milliseconds.
+#[derive(Debug, Clone, Default)]
+pub struct PipelineTiming {
+    /// Simulated end-to-end critical-path time: when the last output row
+    /// is back at the leader. For serial runs this equals
+    /// `compute_ms + comm_ms` (pinned by a regression test); for
+    /// streamed runs it is strictly less than that sum whenever stages
+    /// overlap.
+    pub total_ms: f64,
+    /// Total simulated compute across all stages and micro-batches.
+    pub compute_ms: f64,
+    /// Total simulated communication (stage ingress + final hop back to
+    /// the leader).
+    pub comm_ms: f64,
+    /// Per-stage aggregates (summed over micro-batches).
+    pub stages: Vec<StageTiming>,
+    /// Activation bytes moved between leader/nodes.
+    pub activation_bytes: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct StageTiming {
+    pub stage: usize,
+    pub node: usize,
+    /// Simulated compute ms on this stage (summed over micro-batches).
+    pub compute_ms: f64,
+    /// Simulated ingress communication ms into this stage.
+    pub comm_ms: f64,
+}
+
+/// Per-stage accumulator for the recurrence above.
+#[derive(Debug, Clone, Default)]
+struct Lane {
+    /// When this stage's node finishes its current micro-batch.
+    free_ms: f64,
+    /// Σ compute over micro-batches.
+    busy_ms: f64,
+    /// Idle gaps between consecutive micro-batches (excludes the initial
+    /// pipeline-fill wait before the first arrival).
+    bubble_ms: f64,
+    /// Σ ingress comm over micro-batches.
+    comm_ms: f64,
+    micro_batches: u64,
+    /// Whether the stage has seen its first micro-batch (gates bubble
+    /// accounting so pipeline fill is not counted as a bubble).
+    fed: bool,
+}
+
+/// Critical-path clock shared by `pipeline::run` and the streaming
+/// engine. One instance accounts one traversal (any number of
+/// micro-batches); stage drivers feed it in FIFO per-stage order, which
+/// makes the accounting deterministic regardless of thread scheduling
+/// when every stage has its own node. Stages that *share* a node (the
+/// deployer's overcommit fallback when partitions outnumber nodes) are
+/// additionally serialized on that node's clock — a single device
+/// cannot overlap two stages — so the makespan never fabricates
+/// overlap the hardware cannot deliver; in that shared case the
+/// accounted order follows the node's actual serialization order.
+#[derive(Debug, Clone)]
+pub struct CriticalPath {
+    lanes: Vec<Lane>,
+    /// Node hosting each stage.
+    node_of: Vec<usize>,
+    /// When each distinct node's single device frees up.
+    node_free: std::collections::HashMap<usize, f64>,
+    makespan_ms: f64,
+    final_comm_ms: f64,
+    activation_bytes: u64,
+}
+
+impl CriticalPath {
+    /// `node_ids[k]` is the node hosting stage `k` (duplicates allowed —
+    /// shared nodes serialize their stages).
+    pub fn new(node_ids: &[usize]) -> CriticalPath {
+        CriticalPath {
+            lanes: vec![Lane::default(); node_ids.len()],
+            node_of: node_ids.to_vec(),
+            node_free: std::collections::HashMap::new(),
+            makespan_ms: 0.0,
+            final_comm_ms: 0.0,
+            activation_bytes: 0,
+        }
+    }
+
+    pub fn n_stages(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Account one micro-batch through `stage`. `ready_in_ms` is the
+    /// simulated time the activation left the previous stage (0 for
+    /// stage 0: the leader holds all micro-batches at t=0). Returns the
+    /// simulated time the stage's output is ready.
+    pub fn step(
+        &mut self,
+        stage: usize,
+        ready_in_ms: f64,
+        comm_ms: f64,
+        compute_ms: f64,
+        bytes: u64,
+    ) -> f64 {
+        let node = self.node_of[stage];
+        let node_free = self.node_free.get(&node).copied().unwrap_or(0.0);
+        let lane = &mut self.lanes[stage];
+        let arrive = ready_in_ms + comm_ms;
+        let floor = lane.free_ms.max(node_free);
+        let start = if arrive > floor {
+            if lane.fed {
+                lane.bubble_ms += arrive - floor;
+            }
+            arrive
+        } else {
+            floor
+        };
+        let done = start + compute_ms;
+        lane.free_ms = done;
+        lane.busy_ms += compute_ms;
+        lane.comm_ms += comm_ms;
+        lane.micro_batches += 1;
+        lane.fed = true;
+        self.node_free.insert(node, done);
+        self.activation_bytes += bytes;
+        self.makespan_ms = self.makespan_ms.max(done);
+        done
+    }
+
+    /// Account the final hop of one micro-batch back to the leader.
+    /// Returns the simulated delivery time.
+    pub fn deliver(&mut self, comm_ms: f64, bytes: u64, ready_ms: f64) -> f64 {
+        self.final_comm_ms += comm_ms;
+        self.activation_bytes += bytes;
+        let done = ready_ms + comm_ms;
+        self.makespan_ms = self.makespan_ms.max(done);
+        done
+    }
+
+    /// Simulated end-to-end time: last delivery back at the leader.
+    pub fn makespan_ms(&self) -> f64 {
+        self.makespan_ms
+    }
+
+    pub fn compute_ms(&self) -> f64 {
+        self.lanes.iter().map(|l| l.busy_ms).sum()
+    }
+
+    pub fn comm_ms(&self) -> f64 {
+        self.lanes.iter().map(|l| l.comm_ms).sum::<f64>() + self.final_comm_ms
+    }
+
+    /// Assemble the traversal's [`PipelineTiming`].
+    pub fn timing(&self) -> PipelineTiming {
+        PipelineTiming {
+            total_ms: self.makespan_ms,
+            compute_ms: self.compute_ms(),
+            comm_ms: self.comm_ms(),
+            stages: self
+                .lanes
+                .iter()
+                .enumerate()
+                .map(|(k, l)| StageTiming {
+                    stage: k,
+                    node: self.node_of[k],
+                    compute_ms: l.busy_ms,
+                    comm_ms: l.comm_ms,
+                })
+                .collect(),
+            activation_bytes: self.activation_bytes,
+        }
+    }
+
+    /// Per-stage occupancy/bubble counters for the metrics layer.
+    pub fn counters(&self) -> Vec<StageCounter> {
+        self.lanes
+            .iter()
+            .enumerate()
+            .map(|(k, l)| StageCounter {
+                stage: k,
+                node: self.node_of[k],
+                busy_ms: l.busy_ms,
+                bubble_ms: l.bubble_ms,
+                comm_ms: l.comm_ms,
+                micro_batches: l.micro_batches,
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serial_total_is_sum_of_components() {
+        // One chunk through 3 stages: the recurrence must collapse to the
+        // plain serial sum (the total_ms regression pinned by ISSUE 1).
+        let mut cp = CriticalPath::new(&[0, 1, 2]);
+        let mut ready = 0.0;
+        for (k, (comm, compute)) in
+            [(1.0, 10.0), (2.0, 5.0), (1.5, 20.0)].into_iter().enumerate()
+        {
+            ready = cp.step(k, ready, comm, compute, 0);
+        }
+        let done = cp.deliver(0.5, 64, ready);
+        let t = cp.timing();
+        assert!((t.total_ms - (t.compute_ms + t.comm_ms)).abs() < 1e-9,
+                "total {} vs compute+comm {}", t.total_ms, t.compute_ms + t.comm_ms);
+        assert!((done - 40.0).abs() < 1e-9);
+        assert_eq!(t.stages.len(), 3);
+        assert!((t.compute_ms - 35.0).abs() < 1e-9);
+        assert!((t.comm_ms - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pipelined_makespan_overlaps() {
+        // 4 micro-batches, 2 stages, equal 10 ms compute, zero comm.
+        // Serial would be 4 * 20 = 80 ms; pipelined is 10 (fill) + 4*10
+        // = 50 ms.
+        let mut cp = CriticalPath::new(&[0, 1]);
+        let mut ready0 = Vec::new();
+        for _ in 0..4 {
+            ready0.push(cp.step(0, 0.0, 0.0, 10.0, 0));
+        }
+        let mut last = 0.0;
+        for r in ready0 {
+            last = cp.step(1, r, 0.0, 10.0, 0);
+        }
+        cp.deliver(0.0, 0, last);
+        let t = cp.timing();
+        assert!((t.total_ms - 50.0).abs() < 1e-9, "makespan {}", t.total_ms);
+        assert!((t.compute_ms - 80.0).abs() < 1e-9);
+        assert!(t.total_ms < t.compute_ms);
+    }
+
+    #[test]
+    fn stages_sharing_a_node_cannot_overlap() {
+        // Same schedule as `pipelined_makespan_overlaps`, but both stages
+        // live on node 0 (the deployer's overcommit fallback): a single
+        // device serializes them, so the makespan must be the full
+        // 80 ms, not the pipelined 50 ms.
+        let mut cp = CriticalPath::new(&[0, 0]);
+        let mut ready0 = Vec::new();
+        for _ in 0..4 {
+            ready0.push(cp.step(0, 0.0, 0.0, 10.0, 0));
+        }
+        let mut last = 0.0;
+        for r in ready0 {
+            last = cp.step(1, r, 0.0, 10.0, 0);
+        }
+        cp.deliver(0.0, 0, last);
+        let t = cp.timing();
+        assert!((t.total_ms - 80.0).abs() < 1e-9, "makespan {}", t.total_ms);
+        assert!((t.total_ms - t.compute_ms).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bubbles_exclude_pipeline_fill() {
+        let mut cp = CriticalPath::new(&[7]);
+        // First micro-batch arrives at t=5: fill, not a bubble.
+        let r1 = cp.step(0, 5.0, 0.0, 10.0, 0);
+        assert!((r1 - 15.0).abs() < 1e-9);
+        // Second arrives at t=30 while the stage freed at 15: 15 ms bubble.
+        let r2 = cp.step(0, 30.0, 0.0, 10.0, 0);
+        assert!((r2 - 40.0).abs() < 1e-9);
+        let c = cp.counters();
+        assert_eq!(c.len(), 1);
+        assert_eq!(c[0].node, 7);
+        assert_eq!(c[0].micro_batches, 2);
+        assert!((c[0].bubble_ms - 15.0).abs() < 1e-9);
+        assert!((c[0].busy_ms - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn busy_stage_serializes_micro_batches() {
+        let mut cp = CriticalPath::new(&[0]);
+        // Both micro-batches available immediately; the stage's single
+        // device serializes them.
+        let r1 = cp.step(0, 0.0, 1.0, 10.0, 8);
+        let r2 = cp.step(0, 0.0, 1.0, 10.0, 8);
+        assert!((r1 - 11.0).abs() < 1e-9);
+        assert!((r2 - 21.0).abs() < 1e-9);
+        assert_eq!(cp.counters()[0].bubble_ms, 0.0);
+        assert_eq!(cp.timing().activation_bytes, 16);
+    }
+}

@@ -1,12 +1,16 @@
 //! Request router + dynamic batcher.
 //!
 //! Requests enter a bounded queue; the batcher groups up to
-//! `deployment batch` of them within `max_wait` (the paper's ~10 ms
+//! `service.batch_size()` of them within `max_wait` (the paper's ~10 ms
 //! scheduling overhead is exactly this admission delay plus node
 //! selection), checks the result cache, and dispatches misses to an
 //! [`InferenceService`] on a worker pool so multiple batches are in
-//! flight at once — that overlap across pipeline stages is where AMP4EC's
-//! throughput multiple over the monolithic baseline comes from.
+//! flight at once. When the service is the streaming
+//! `DistributedService` (`pipeline_depth > 1`), each dispatched batch is
+//! a super-batch that the `pipeline::engine` further splits into
+//! micro-batches streamed across the stage nodes — so a single router
+//! worker drives every node in the chain concurrently instead of
+//! blocking on a serial `pipeline::run`.
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
 use std::sync::Arc;
@@ -29,6 +33,16 @@ pub trait InferenceService: Send + Sync {
 
     /// The fixed batch the service's artifacts were compiled for.
     fn batch_size(&self) -> usize;
+
+    /// Rows a miss set of `n` requests should be zero-padded to before
+    /// [`InferenceService::infer_batch`]. Defaults to the full admission
+    /// batch; streaming services override to round up to a multiple of
+    /// their micro-batch instead, so light traffic does not pay compute
+    /// for whole padding micro-batches.
+    fn padded_rows(&self, n: usize) -> usize {
+        let _ = n;
+        self.batch_size()
+    }
 
     /// A stable id namespacing cache keys.
     fn model_id(&self) -> u64;
@@ -74,8 +88,11 @@ pub fn serve(
     let pool = ThreadPool::new(config.workers, "router");
     let batch_size = service.batch_size();
 
-    // Track outstanding batches so we can wait for drain at the end.
-    let mut outstanding: Vec<WaitGroup> = Vec::new();
+    // One shared counter tracks outstanding batches; we wait for it to
+    // drain once at the end. (This used to be a Vec with one WaitGroup
+    // pushed per batch for the whole run — unbounded growth under
+    // sustained traffic.)
+    let drain = WaitGroup::new(0);
 
     loop {
         // ---- collect a batch ----
@@ -98,8 +115,8 @@ pub fn serve(
         }
 
         // ---- dispatch ----
-        let wg = WaitGroup::new(1);
-        outstanding.push(wg.clone_handle());
+        drain.add(1);
+        let wg = drain.clone_handle();
         let service = Arc::clone(&service);
         let metrics = Arc::clone(&metrics);
         let cache = cache.clone();
@@ -110,9 +127,7 @@ pub fn serve(
         });
     }
 
-    for wg in outstanding {
-        wg.wait();
-    }
+    drain.wait();
     metrics.finish()
 }
 
@@ -149,7 +164,7 @@ fn process_batch(
 
     // Run the miss set as one stacked batch.
     let inputs: Vec<&Tensor> = misses.iter().map(|r| &r.input).collect();
-    let stacked = match stack_batch(&inputs, service.batch_size()) {
+    let stacked = match stack_batch(&inputs, service.padded_rows(misses.len())) {
         Ok(t) => t,
         Err(_) => {
             for _ in &misses {
@@ -289,6 +304,70 @@ mod tests {
         // 16 requests at batch 8 in <= ~4 calls (timing-dependent but far
         // fewer than 16).
         assert!(svc.calls.load(Ordering::SeqCst) <= 8);
+    }
+
+    #[test]
+    fn padded_rows_override_controls_stacking() {
+        // A streaming-style service pads misses to its micro-batch
+        // multiple, not the full admission batch.
+        struct MicroPad;
+        impl InferenceService for MicroPad {
+            fn infer_batch(&self, batch: &Tensor) -> Result<(Tensor, f64, f64)> {
+                anyhow::ensure!(
+                    batch.shape[0] % 2 == 0 && batch.shape[0] < 8,
+                    "expected micro-batch-multiple padding, got {:?}",
+                    batch.shape
+                );
+                Ok((batch.clone(), 0.0, 0.0))
+            }
+            fn batch_size(&self) -> usize {
+                8
+            }
+            fn padded_rows(&self, n: usize) -> usize {
+                (n + 1) / 2 * 2 // micro-batch of 2
+            }
+            fn model_id(&self) -> u64 {
+                3
+            }
+        }
+        let (tx, rx) = request_channel(16);
+        send_n(&tx, 3, 3); // one admission of 3 misses -> padded to 4
+        drop(tx);
+        let m = serve(Arc::new(MicroPad), rx, RouterConfig::default(), None);
+        assert_eq!(m.completed, 3);
+        assert_eq!(m.failed, 0);
+    }
+
+    #[test]
+    fn long_run_drain_bookkeeping_stays_bounded() {
+        // Sustained traffic: many batches through one serve() call. With
+        // the shared-counter drain the bookkeeping is O(1); the run must
+        // complete everything and end fully drained.
+        struct Instant0 {
+            batch: usize,
+        }
+        impl InferenceService for Instant0 {
+            fn infer_batch(&self, batch: &Tensor) -> Result<(Tensor, f64, f64)> {
+                Ok((batch.clone(), 0.1, 0.0))
+            }
+            fn batch_size(&self) -> usize {
+                self.batch
+            }
+            fn model_id(&self) -> u64 {
+                9
+            }
+        }
+        let (tx, rx) = request_channel(512);
+        send_n(&tx, 400, 400);
+        drop(tx);
+        let m = serve(
+            Arc::new(Instant0 { batch: 2 }),
+            rx,
+            RouterConfig { max_wait: Duration::from_millis(1), workers: 4 },
+            None,
+        );
+        assert_eq!(m.completed, 400);
+        assert_eq!(m.failed, 0);
     }
 
     #[test]

@@ -178,24 +178,71 @@ impl Executor {
         rx.recv().map_err(|_| anyhow::anyhow!("executor {} died", self.name))?
     }
 
+    /// Submit a chain run without blocking: the command is queued on the
+    /// executor thread and a [`PendingRun`] is returned immediately,
+    /// letting one caller thread keep several nodes' executors busy at
+    /// once. [`Executor::run_chain`] is the blocking submit-and-wait
+    /// over this primitive; the streaming engine gets its concurrency
+    /// from per-stage driver threads instead, so this is the building
+    /// block for callers that fan out across nodes from a single thread
+    /// (e.g. calibration sweeps or future cross-batch streaming).
+    pub fn submit_chain(
+        &self,
+        blocks: Vec<BlockHandle>,
+        input: Tensor,
+    ) -> Result<PendingRun> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Command::RunChain { blocks, input, reply })
+            .map_err(|_| anyhow::anyhow!("executor {} gone", self.name))?;
+        Ok(PendingRun { rx, name: self.name.clone() })
+    }
+
     /// Run loaded blocks as a chain. Returns output + host compute cost
     /// in thread-CPU milliseconds (contention-free nominal cost).
+    /// Blocking convenience over [`Executor::submit_chain`].
     pub fn run_chain(
         &self,
         blocks: Vec<BlockHandle>,
         input: Tensor,
     ) -> Result<(Tensor, f64)> {
-        let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(Command::RunChain { blocks, input, reply })
-            .map_err(|_| anyhow::anyhow!("executor {} gone", self.name))?;
-        rx.recv().map_err(|_| anyhow::anyhow!("executor {} died", self.name))?
+        self.submit_chain(blocks, input)?.wait()
     }
 
     pub fn unload_block(&self, block: BlockHandle) {
         let (reply, rx) = mpsc::channel();
         if self.tx.send(Command::Unload { block, reply }).is_ok() {
             let _ = rx.recv();
+        }
+    }
+}
+
+/// An in-flight [`Executor::submit_chain`] call. The executor thread is
+/// already working on it; `wait` collects the result.
+pub struct PendingRun {
+    rx: mpsc::Receiver<Result<(Tensor, f64)>>,
+    name: String,
+}
+
+impl PendingRun {
+    /// Block until the chain finishes; returns output + host compute
+    /// cost in thread-CPU milliseconds.
+    pub fn wait(self) -> Result<(Tensor, f64)> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("executor {} died", self.name))?
+    }
+
+    /// Non-blocking poll: `None` while the chain is still running. A
+    /// dead executor yields `Some(Err(..))`, not `None` — otherwise a
+    /// poll loop would spin forever on a crashed node.
+    pub fn try_wait(&self) -> Option<Result<(Tensor, f64)>> {
+        match self.rx.try_recv() {
+            Ok(result) => Some(result),
+            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Disconnected) => Some(Err(
+                anyhow::anyhow!("executor {} died", self.name),
+            )),
         }
     }
 }

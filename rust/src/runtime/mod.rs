@@ -20,7 +20,7 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-pub use executor::{BlockHandle, Executor};
+pub use executor::{BlockHandle, Executor, PendingRun};
 
 /// A host-side f32 tensor (row-major).
 #[derive(Debug, Clone, PartialEq)]

@@ -110,6 +110,11 @@ pub struct Scheduler {
 struct SchedState {
     history: HashMap<NodeId, PerformanceHistory>,
     active_tasks: HashMap<NodeId, u64>,
+    /// Failed executions per node. Kept separate from `history`: a
+    /// failure has no meaningful execution time, and feeding a sentinel
+    /// (e.g. 1e9 ms) into the window would permanently crater Eq. 7's
+    /// S_P for the node.
+    failures: HashMap<NodeId, u64>,
     decisions: u64,
     skips: HashMap<&'static str, u64>,
 }
@@ -121,6 +126,7 @@ pub struct SchedulerReport {
     pub decisions: u64,
     pub active_tasks: Vec<(NodeId, u64)>,
     pub avg_exec_ms: Vec<(NodeId, f64)>,
+    pub failures: Vec<(NodeId, u64)>,
     pub skips: Vec<(String, u64)>,
 }
 
@@ -134,6 +140,7 @@ impl Scheduler {
             state: Mutex::new(SchedState {
                 history: HashMap::new(),
                 active_tasks: HashMap::new(),
+                failures: HashMap::new(),
                 decisions: 0,
                 skips: HashMap::new(),
             }),
@@ -315,13 +322,19 @@ impl Scheduler {
             .map(|(_, s)| s.total)
             .fold(f64::MIN, f64::max);
         scored.retain(|(_, s)| s.total >= best_total - tolerance);
-        scored.sort_by(|a, b| {
-            let ea = a.0.predict_task_joules(est_ms, est_bytes);
-            let eb = b.0.predict_task_joules(est_ms, est_bytes);
-            ea.partial_cmp(&eb).unwrap()
-        });
+        // Predict each candidate's joules exactly once (the comparator
+        // used to re-predict on every comparison — O(n log n) redundant
+        // model evaluations) and order with `total_cmp`, which is total
+        // over NaN instead of panicking on it.
+        let best = scored
+            .into_iter()
+            .map(|(n, s)| {
+                let joules = n.predict_task_joules(est_ms, est_bytes);
+                (joules, n, s)
+            })
+            .min_by(|a, b| a.0.total_cmp(&b.0));
         self.state.lock().unwrap().decisions += 1;
-        scored.into_iter().next()
+        best.map(|(_, n, s)| (n, s))
     }
 
     /// Bookkeeping: a task was dispatched to `node`.
@@ -343,6 +356,28 @@ impl Scheduler {
             .entry(node)
             .or_insert_with(|| PerformanceHistory::new(64))
             .record(exec_ms);
+    }
+
+    /// Bookkeeping: a dispatched task failed on `node`. Decrements the
+    /// active count like [`Scheduler::task_completed`] but records the
+    /// failure in a dedicated counter instead of polluting the
+    /// performance history with a sentinel execution time.
+    pub fn task_failed(&self, node: NodeId) {
+        let mut state = self.state.lock().unwrap();
+        if let Some(c) = state.active_tasks.get_mut(&node) {
+            *c = c.saturating_sub(1);
+        }
+        *state.failures.entry(node).or_insert(0) += 1;
+    }
+
+    pub fn failures(&self, node: NodeId) -> u64 {
+        self.state
+            .lock()
+            .unwrap()
+            .failures
+            .get(&node)
+            .copied()
+            .unwrap_or(0)
     }
 
     pub fn active_tasks(&self, node: NodeId) -> u64 {
@@ -368,6 +403,11 @@ impl Scheduler {
                 .history
                 .iter()
                 .map(|(k, h)| (*k, h.avg_exec_ms()))
+                .collect(),
+            failures: state
+                .failures
+                .iter()
+                .map(|(k, v)| (*k, *v))
                 .collect(),
             skips: state
                 .skips
@@ -504,6 +544,88 @@ mod tests {
         // completing more than started must not underflow
         sched.task_completed(3, 1.0);
         assert_eq!(sched.active_tasks(3), 0);
+    }
+
+    #[test]
+    fn multi_stage_accounting_charges_every_node() {
+        // A 3-stage pipeline batch must charge all three stage nodes —
+        // the seed charged only stage 0, so Eq. 8's balance score saw
+        // stages 2..N as permanently idle.
+        let sched = Scheduler::new(ScoringWeights::default());
+        for node in [0, 1, 2] {
+            sched.task_started(node);
+        }
+        for node in [0, 1, 2] {
+            assert_eq!(sched.active_tasks(node), 1);
+        }
+        for (node, ms) in [(0usize, 12.0), (1, 20.0), (2, 30.0)] {
+            sched.task_completed(node, ms);
+        }
+        for node in [0, 1, 2] {
+            assert_eq!(sched.active_tasks(node), 0);
+        }
+        let report = sched.report();
+        assert_eq!(report.avg_exec_ms.len(), 3);
+        assert!(report
+            .avg_exec_ms
+            .iter()
+            .any(|(n, ms)| *n == 2 && (*ms - 30.0).abs() < 1e-9));
+    }
+
+    #[test]
+    fn failures_do_not_poison_performance_history() {
+        let sched = Scheduler::new(ScoringWeights::default());
+        let node = mk_node(0, 1.0, 1024.0);
+        sched.task_started(0);
+        sched.task_failed(0);
+        assert_eq!(sched.active_tasks(0), 0);
+        assert_eq!(sched.failures(0), 1);
+        // S_P stays optimistic: no sentinel exec time was recorded.
+        let s = sched.score_node(&node, &req()).unwrap();
+        assert!((s.performance - 1.0).abs() < 1e-9,
+                "failure must not crater S_P, got {}", s.performance);
+        // A real completion afterwards is the only thing feeding Eq. 7.
+        sched.task_started(0);
+        sched.task_completed(0, 1000.0);
+        let s = sched.score_node(&node, &req()).unwrap();
+        assert!((s.performance - 0.5).abs() < 1e-9);
+        let report = sched.report();
+        assert_eq!(report.failures, vec![(0, 1)]);
+        // Failure accounting never underflows.
+        sched.task_failed(0);
+        assert_eq!(sched.active_tasks(0), 0);
+        assert_eq!(sched.failures(0), 2);
+    }
+
+    #[test]
+    fn energy_aware_survives_nan_predictions() {
+        use crate::cluster::PowerModel;
+        let sched = Scheduler::new(ScoringWeights::default());
+        let params = SimParams {
+            time_scale: 1.0,
+            page_factor: 4.0,
+            runtime_overhead_mb: 0.0,
+        };
+        // A corrupt power model predicting NaN joules used to panic the
+        // sort comparator; total_cmp orders NaN last instead.
+        let broken = Arc::new(VirtualNode::new(
+            0,
+            NodeSpec::new("broken", 1.0, 1024.0).with_power(PowerModel {
+                idle_watts: f64::NAN,
+                busy_watts: f64::NAN,
+                net_joules_per_byte: 0.0,
+            }),
+            params.clone(),
+        ));
+        let sane = Arc::new(VirtualNode::new(
+            1,
+            NodeSpec::new("sane", 1.0, 1024.0),
+            params,
+        ));
+        let (sel, _) = sched
+            .select_node_energy_aware(&[broken, sane], &req(), 50.0, 100, 1.0)
+            .unwrap();
+        assert_eq!(sel.id(), 1, "NaN-predicting node must lose, not panic");
     }
 
     #[test]

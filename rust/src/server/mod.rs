@@ -23,9 +23,22 @@ use crate::scheduler::{ResultCache, Scheduler};
 use crate::workload::{feed, Arrival, InputPool};
 
 /// The distributed pipeline as an [`InferenceService`].
+///
+/// With `pipeline_depth == 1` every batch runs through the serial
+/// [`pipeline::run`]. With `pipeline_depth > 1` the service admits
+/// super-batches of `deployment.batch * pipeline_depth` rows and streams
+/// them through the [`pipeline::engine`] as `pipeline_depth`
+/// micro-batches of exactly the compiled artifact batch each — stage
+/// *k* computes one micro-batch while stage *k+1* receives the previous
+/// one.
 pub struct DistributedService {
     deployment: RwLock<Deployment>,
     scheduler: Arc<Scheduler>,
+    /// Micro-batches kept in flight per admitted batch (1 = serial).
+    pipeline_depth: usize,
+    /// Accumulated per-stage occupancy/bubble counters (streamed and
+    /// serial runs alike).
+    stage_counters: crate::metrics::StageCounterSet,
 }
 
 impl DistributedService {
@@ -37,28 +50,79 @@ impl DistributedService {
     pub fn replace_deployment(&self, d: Deployment) -> Deployment {
         std::mem::replace(&mut *self.deployment.write().unwrap(), d)
     }
+
+    /// Accumulated per-stage engine counters since startup.
+    pub fn stage_counters(&self) -> Vec<crate::metrics::StageCounter> {
+        self.stage_counters.snapshot()
+    }
+
+    pub fn pipeline_depth(&self) -> usize {
+        self.pipeline_depth
+    }
 }
 
 impl InferenceService for DistributedService {
     fn infer_batch(&self, batch: &Tensor) -> Result<(Tensor, f64, f64)> {
         let dep = self.deployment.read().unwrap();
-        let first_node = dep.stages[0].node.id();
-        self.scheduler.task_started(first_node);
-        let result = pipeline::run(&dep, batch);
+        // Eq. 8 balance bookkeeping: every stage node carries this batch,
+        // not just the first — charging only stage 0 made stages 2..N
+        // look permanently idle to the scheduler.
+        let node_ids: Vec<usize> =
+            dep.stages.iter().map(|s| s.node.id()).collect();
+        for id in &node_ids {
+            self.scheduler.task_started(*id);
+        }
+        let dep_stages = pipeline::engine::DeploymentStages::new(&dep);
+        let result = if self.pipeline_depth > 1 {
+            let cfg = pipeline::engine::EngineConfig {
+                micro_batch_rows: dep.batch,
+                max_in_flight: self.pipeline_depth,
+            };
+            pipeline::engine::run_streamed(&dep_stages, batch, &cfg)
+        } else {
+            // Serial schedule (pipeline::run semantics) through the same
+            // engine accounting, so stage counters are reported either
+            // way.
+            let rows = batch.shape.first().copied().unwrap_or(1).max(1);
+            pipeline::engine::run_serial(&dep_stages, batch, rows)
+        }
+        .map(|run| {
+            self.stage_counters.merge(&run.stage_counters);
+            (run.output, run.timing)
+        });
         match result {
             Ok((out, timing)) => {
-                self.scheduler.task_completed(first_node, timing.total_ms);
+                for st in &timing.stages {
+                    self.scheduler
+                        .task_completed(st.node, st.compute_ms + st.comm_ms);
+                }
                 Ok((out, timing.compute_ms, timing.comm_ms))
             }
             Err(e) => {
-                self.scheduler.task_completed(first_node, f64::INFINITY.min(1e9));
+                // A failure has no meaningful execution time; count it in
+                // the dedicated failure counter instead of feeding a 1e9
+                // ms sentinel into the performance history (which
+                // permanently cratered Eq. 7's S_P for the node).
+                for id in &node_ids {
+                    self.scheduler.task_failed(*id);
+                }
                 Err(e)
             }
         }
     }
 
     fn batch_size(&self) -> usize {
-        self.deployment.read().unwrap().batch
+        self.deployment.read().unwrap().batch * self.pipeline_depth
+    }
+
+    fn padded_rows(&self, n: usize) -> usize {
+        // Round up to whole micro-batches, not the full super-batch: a
+        // light-traffic miss set of 1 request at depth 4 runs 1
+        // micro-batch, not 4 (3 of which would be pure padding).
+        let micro = self.deployment.read().unwrap().batch.max(1);
+        let admission = micro * self.pipeline_depth;
+        let chunks = n.div_euclid(micro) + usize::from(n % micro != 0);
+        (chunks.max(1) * micro).min(admission)
     }
 
     fn model_id(&self) -> u64 {
@@ -79,6 +143,9 @@ pub struct ServeReport {
     /// Per-node accumulated energy (name, total J, compute J) — §V
     /// energy-aware extension.
     pub node_energy: Vec<(String, f64, f64)>,
+    /// Per-pipeline-stage occupancy/bubble counters accumulated by the
+    /// execution engine (simulated ms).
+    pub stage_counters: Vec<crate::metrics::StageCounter>,
 }
 
 /// The leader.
@@ -177,6 +244,8 @@ impl EdgeServer {
         let service = Arc::new(DistributedService {
             deployment: RwLock::new(deployment),
             scheduler: Arc::clone(&scheduler),
+            pipeline_depth: config.pipeline_depth.max(1),
+            stage_counters: crate::metrics::StageCounterSet::new(),
         });
 
         let cache = config.cache_entries.map(|n| Arc::new(ResultCache::new(n)));
@@ -256,6 +325,7 @@ impl EdgeServer {
                     (n.name().to_string(), e.total_j, e.compute_j)
                 })
                 .collect(),
+            stage_counters: self.service.stage_counters(),
         })
     }
 

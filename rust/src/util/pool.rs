@@ -66,7 +66,11 @@ impl Drop for ThreadPool {
     }
 }
 
-/// Await-able single-value slot, the poor man's oneshot + future.
+/// Go-style wait group: a shared counter awaited once at drain. Long
+/// dispatch loops `add(1)` per submitted job and workers `done()` —
+/// bookkeeping stays O(1) no matter how many jobs pass through (the
+/// router used to push one group per batch into a Vec for the whole
+/// run).
 pub struct WaitGroup {
     counter: Arc<(Mutex<usize>, std::sync::Condvar)>,
 }
@@ -78,6 +82,13 @@ impl WaitGroup {
         }
     }
 
+    /// Register `n` more outstanding jobs. Must happen-before the
+    /// matching `done()` calls (i.e. call it before submitting the job).
+    pub fn add(&self, n: usize) {
+        let (lock, _) = &*self.counter;
+        *lock.lock().unwrap() += n;
+    }
+
     pub fn done(&self) {
         let (lock, cv) = &*self.counter;
         let mut n = lock.lock().unwrap();
@@ -85,6 +96,11 @@ impl WaitGroup {
         if *n == 0 {
             cv.notify_all();
         }
+    }
+
+    /// Currently outstanding count (diagnostics/tests).
+    pub fn pending(&self) -> usize {
+        *self.counter.0.lock().unwrap()
     }
 
     pub fn wait(&self) {
@@ -158,5 +174,30 @@ mod tests {
     #[test]
     fn waitgroup_zero_is_immediate() {
         WaitGroup::new(0).wait();
+    }
+
+    #[test]
+    fn waitgroup_add_reuses_one_counter() {
+        // The drain pattern: one group, add-before-submit, wait once.
+        let pool = ThreadPool::new(2, "wg");
+        let wg = WaitGroup::new(0);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..50 {
+            wg.add(1);
+            let w = wg.clone_handle();
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+                w.done();
+            });
+        }
+        wg.wait();
+        assert_eq!(counter.load(Ordering::SeqCst), 50);
+        assert_eq!(wg.pending(), 0);
+        // Reusable after a full drain.
+        wg.add(1);
+        assert_eq!(wg.pending(), 1);
+        wg.done();
+        wg.wait();
     }
 }
