@@ -6,21 +6,36 @@
 //! cost, dilated by its node's CPU quota, so serial execution costs the
 //! *sum* of the stage times per micro-batch while the streamed engine
 //! approaches the *max* (the pipeline bound). Asserts the acceptance
-//! criteria of ISSUE 1: streamed outputs bit-identical to serial, and
+//! criteria of ISSUE 1 (streamed outputs bit-identical to serial,
 //! streamed throughput strictly better with >= 4 micro-batches in
-//! flight. `cargo bench --bench pipeline_engine`.
+//! flight) and ISSUE 2 (persistent cross-batch streaming >= 20% over
+//! per-super-batch streaming at depth >= 4; adaptive depth within 1 of
+//! the best fixed depth). Emits `BENCH_pipeline.json` with the
+//! simulated-throughput trajectory. `cargo bench --bench
+//! pipeline_engine`.
 
+use std::collections::BTreeMap;
+use std::sync::Arc;
 use std::time::Instant;
 
 use amp4ec::metrics::markdown_table;
 use amp4ec::pipeline::engine::{
-    run_serial, run_streamed, EngineConfig, SimStages,
+    run_serial, run_streamed, AdaptiveDepthConfig, EngineConfig,
+    PersistentEngine, PersistentEngineConfig, SimStages,
 };
 use amp4ec::runtime::Tensor;
 use amp4ec::util::bench::BenchSuite;
+use amp4ec::util::json::Json;
 
 fn input(rows: usize, cols: usize) -> Tensor {
     let data = (0..rows * cols).map(|i| (i as f32) * 0.125 - 4.0).collect();
+    Tensor::new(vec![rows, cols], data).unwrap()
+}
+
+fn input_off(rows: usize, cols: usize, off: f32) -> Tensor {
+    let data = (0..rows * cols)
+        .map(|i| (i as f32) * 0.125 - 4.0 + off)
+        .collect();
     Tensor::new(vec![rows, cols], data).unwrap()
 }
 
@@ -138,4 +153,222 @@ fn main() {
             &sweep_rows,
         )
     );
+
+    // ---- ISSUE 2: persistent cross-batch vs per-super-batch -----------
+    // Same heterogeneous profile, lighter nominal cost so the multi-batch
+    // sweeps stay fast. Per-super-batch = one `run_streamed` call per
+    // batch (PR 1's serving path: full fill+drain every batch);
+    // persistent = the same batches submitted back-to-back into one
+    // long-lived engine.
+    let nominal_ms = 2.0;
+    let micro_per_batch = 4usize;
+    let n_batches = 10usize;
+    let batches: Vec<Tensor> = (0..n_batches)
+        .map(|i| input_off(micro_per_batch, 64, i as f32))
+        .collect();
+    let total_rows = (n_batches * micro_per_batch) as f64;
+
+    let serial_stages = SimStages::heterogeneous(&[1.0, 0.6, 0.4], nominal_ms);
+    let serial_outputs: Vec<Tensor> = batches
+        .iter()
+        .map(|b| run_serial(&serial_stages, b, 1).expect("serial").output)
+        .collect();
+
+    let mut table_rows = Vec::new();
+    let mut json_rows = Vec::new();
+    let mut improvement_at = BTreeMap::new();
+    for depth in [1usize, 2, 4, 8] {
+        // Per-super-batch streaming: fresh fill+drain per batch.
+        let stages =
+            SimStages::heterogeneous(&[1.0, 0.6, 0.4], nominal_ms);
+        let cfg = EngineConfig { micro_batch_rows: 1, max_in_flight: depth };
+        let mut per_batch_ms = 0.0;
+        for (b, want) in batches.iter().zip(&serial_outputs) {
+            let run = run_streamed(&stages, b, &cfg).expect("per-batch run");
+            assert_eq!(&run.output, want, "per-batch output diverged");
+            per_batch_ms += run.timing.total_ms;
+        }
+
+        // Persistent cross-batch streaming: same batches, no drain.
+        let engine = PersistentEngine::new(
+            Arc::new(SimStages::heterogeneous(&[1.0, 0.6, 0.4], nominal_ms)),
+            PersistentEngineConfig {
+                micro_batch_rows: 1,
+                initial_depth: depth,
+                adaptive: None,
+            },
+        )
+        .expect("engine");
+        let handles: Vec<_> = batches
+            .iter()
+            .map(|b| engine.submit(b).expect("submit"))
+            .collect();
+        for (h, want) in handles.into_iter().zip(&serial_outputs) {
+            let run = h.wait().expect("persistent run");
+            assert_eq!(&run.output, want, "persistent output diverged");
+        }
+        let persistent_ms = engine.makespan_ms();
+        let totals = engine.total_counters();
+        let bottleneck = totals
+            .iter()
+            .max_by(|a, b| a.busy_ms.total_cmp(&b.busy_ms))
+            .expect("stages");
+        let bubble_pct = 100.0 * bottleneck.bubble_fraction();
+
+        let improvement = per_batch_ms / persistent_ms - 1.0;
+        improvement_at.insert(depth, improvement);
+        table_rows.push(vec![
+            format!("{depth}"),
+            format!("{:.1}", per_batch_ms),
+            format!("{:.1}", persistent_ms),
+            format!("{:.1}%", improvement * 100.0),
+            format!("{bubble_pct:.1}%"),
+        ]);
+        let mut row = BTreeMap::new();
+        row.insert("depth".into(), Json::from(depth));
+        row.insert("per_batch_sim_ms".into(), Json::Num(per_batch_ms));
+        row.insert("persistent_sim_ms".into(), Json::Num(persistent_ms));
+        row.insert(
+            "per_batch_rows_per_s".into(),
+            Json::Num(total_rows / (per_batch_ms / 1e3)),
+        );
+        row.insert(
+            "persistent_rows_per_s".into(),
+            Json::Num(total_rows / (persistent_ms / 1e3)),
+        );
+        row.insert(
+            "improvement_pct".into(),
+            Json::Num(improvement * 100.0),
+        );
+        row.insert(
+            "bottleneck_bubble_pct".into(),
+            Json::Num(bubble_pct),
+        );
+        json_rows.push(Json::Obj(row));
+        suite.record_value(
+            &format!("persistent throughput d{depth}"),
+            total_rows / (persistent_ms / 1e3),
+            "rows/s",
+        );
+    }
+    println!(
+        "{}",
+        markdown_table(
+            "Persistent cross-batch vs per-super-batch streaming (sim ms)",
+            &[
+                "Depth",
+                "Per-batch total",
+                "Persistent total",
+                "Improvement",
+                "Bottleneck bubble",
+            ],
+            &table_rows,
+        )
+    );
+    // The ISSUE-2 acceptance gate: >= 20% simulated-throughput win at
+    // depth >= 4 from eliminating inter-batch drain bubbles.
+    for depth in [4usize, 8] {
+        let imp = improvement_at[&depth];
+        assert!(
+            imp >= 0.20,
+            "persistent streaming at depth {depth} improved only \
+             {:.1}% (< 20%)",
+            imp * 100.0
+        );
+    }
+
+    // ---- adaptive depth convergence ------------------------------------
+    // Best fixed depth: smallest depth within 2% of the best cross-batch
+    // makespan over 1..=8.
+    let conv_batches: Vec<Tensor> = (0..8)
+        .map(|i| input_off(micro_per_batch, 16, i as f32))
+        .collect();
+    let mut fixed: Vec<(usize, f64)> = Vec::new();
+    for depth in 1..=8usize {
+        let engine = PersistentEngine::new(
+            Arc::new(SimStages::heterogeneous(&[1.0, 0.6, 0.4], nominal_ms)),
+            PersistentEngineConfig {
+                micro_batch_rows: 1,
+                initial_depth: depth,
+                adaptive: None,
+            },
+        )
+        .expect("engine");
+        let handles: Vec<_> = conv_batches
+            .iter()
+            .map(|b| engine.submit(b).expect("submit"))
+            .collect();
+        for h in handles {
+            h.wait().expect("run");
+        }
+        fixed.push((depth, engine.makespan_ms()));
+    }
+    let best_ms = fixed.iter().map(|(_, ms)| *ms).fold(f64::INFINITY, f64::min);
+    let best_depth = fixed
+        .iter()
+        .find(|(_, ms)| *ms <= best_ms * 1.02)
+        .map(|(d, _)| *d)
+        .expect("best depth");
+
+    let engine = PersistentEngine::new(
+        Arc::new(SimStages::heterogeneous(&[1.0, 0.6, 0.4], nominal_ms)),
+        PersistentEngineConfig {
+            micro_batch_rows: 1,
+            initial_depth: 1,
+            adaptive: Some(AdaptiveDepthConfig {
+                max_depth: 8,
+                ..AdaptiveDepthConfig::default()
+            }),
+        },
+    )
+    .expect("engine");
+    let mut handles = Vec::new();
+    for _round in 0..3 {
+        for b in &conv_batches {
+            handles.push(engine.submit(b).expect("submit"));
+        }
+    }
+    for h in handles {
+        h.wait().expect("run");
+    }
+    let adaptive_report = engine.depth_report();
+    let final_depth = engine.current_depth();
+    suite.record_value("best fixed depth", best_depth as f64, "");
+    suite.record_value("adaptive final depth", final_depth as f64, "");
+    assert!(
+        (final_depth as i64 - best_depth as i64).abs() <= 1,
+        "adaptive depth {final_depth} not within 1 of best fixed \
+         {best_depth} (sweep {fixed:?}, report {adaptive_report:?})"
+    );
+
+    // ---- machine-readable trajectory -----------------------------------
+    let mut doc = BTreeMap::new();
+    doc.insert("suite".into(), Json::Str("pipeline_engine".into()));
+    doc.insert(
+        "cpu_shares".into(),
+        Json::Arr(vec![Json::Num(1.0), Json::Num(0.6), Json::Num(0.4)]),
+    );
+    doc.insert("nominal_ms".into(), Json::Num(nominal_ms));
+    doc.insert("micro_per_batch".into(), Json::from(micro_per_batch));
+    doc.insert("n_batches".into(), Json::from(n_batches));
+    doc.insert("depths".into(), Json::Arr(json_rows));
+    let mut adaptive = BTreeMap::new();
+    adaptive.insert("best_fixed_depth".into(), Json::from(best_depth));
+    adaptive.insert("final_depth".into(), Json::from(final_depth));
+    adaptive.insert(
+        "initial_depth".into(),
+        Json::from(adaptive_report.initial_depth),
+    );
+    adaptive.insert(
+        "widenings".into(),
+        Json::from(adaptive_report.widenings as usize),
+    );
+    adaptive.insert(
+        "narrowings".into(),
+        Json::from(adaptive_report.narrowings as usize),
+    );
+    doc.insert("adaptive".into(), Json::Obj(adaptive));
+    std::fs::write("BENCH_pipeline.json", Json::Obj(doc).to_string())
+        .expect("write BENCH_pipeline.json");
+    println!("wrote BENCH_pipeline.json");
 }

@@ -71,10 +71,20 @@ pub struct AmpConfig {
     pub workers: usize,
     /// Streaming pipeline engine: micro-batches kept in flight per
     /// admitted batch. 1 = serial `pipeline::run`; >1 makes the router
-    /// admit `batch * pipeline_depth`-row super-batches that the engine
-    /// streams across the stage nodes as `pipeline_depth` micro-batches
-    /// of the compiled `batch` rows each.
+    /// admit `batch * pipeline_depth`-row super-batches that the
+    /// persistent `pipeline::engine` streams across the stage nodes as
+    /// `pipeline_depth` micro-batches of the compiled `batch` rows each,
+    /// back-to-back across successive super-batches (no inter-batch
+    /// drain).
     pub pipeline_depth: usize,
+    /// Adaptive pipeline depth: let the engine's controller widen/narrow
+    /// the in-flight window online from observed per-stage bubble time,
+    /// starting at `pipeline_depth` and bounded by `max_pipeline_depth`.
+    pub adaptive_depth: bool,
+    /// Upper bound for the adaptive controller's window (ignored unless
+    /// `adaptive_depth`; effective bound is
+    /// `max(pipeline_depth, max_pipeline_depth)`).
+    pub max_pipeline_depth: usize,
     /// Result-cache entries; None disables (plain AMP4EC).
     pub cache_entries: Option<usize>,
     /// Model/deployment cache across redeployments (+Cache bandwidth=0).
@@ -106,6 +116,8 @@ impl Default for AmpConfig {
             max_wait_ms: 10,
             workers: 4,
             pipeline_depth: 1,
+            adaptive_depth: false,
+            max_pipeline_depth: 8,
             cache_entries: None,
             model_cache: false,
             time_scale: 1.0,
@@ -141,6 +153,17 @@ impl AmpConfig {
     pub fn paper_cluster_streamed(artifacts_dir: &Path, depth: usize) -> AmpConfig {
         AmpConfig {
             pipeline_depth: depth.max(1),
+            ..AmpConfig::paper_cluster(artifacts_dir)
+        }
+    }
+
+    /// Adaptive streaming variant: the persistent engine starts at
+    /// `pipeline_depth` and sizes its in-flight window online from
+    /// observed per-stage bubble time, up to `max_depth`.
+    pub fn paper_cluster_adaptive(artifacts_dir: &Path, max_depth: usize) -> AmpConfig {
+        AmpConfig {
+            adaptive_depth: true,
+            max_pipeline_depth: max_depth.max(1),
             ..AmpConfig::paper_cluster(artifacts_dir)
         }
     }
@@ -190,6 +213,10 @@ impl AmpConfig {
         anyhow::ensure!(self.batch >= 1, "batch must be >= 1");
         anyhow::ensure!(self.workers >= 1, "workers must be >= 1");
         anyhow::ensure!(self.pipeline_depth >= 1, "pipeline_depth must be >= 1");
+        anyhow::ensure!(
+            self.max_pipeline_depth >= 1,
+            "max_pipeline_depth must be >= 1"
+        );
         anyhow::ensure!(self.time_scale > 0.0, "time_scale must be > 0");
         self.weights.validate()?;
         for n in &self.nodes {
@@ -256,6 +283,11 @@ impl AmpConfig {
         m.insert("max_wait_ms".into(), Json::from(self.max_wait_ms as usize));
         m.insert("workers".into(), Json::from(self.workers));
         m.insert("pipeline_depth".into(), Json::from(self.pipeline_depth));
+        m.insert("adaptive_depth".into(), Json::from(self.adaptive_depth));
+        m.insert(
+            "max_pipeline_depth".into(),
+            Json::from(self.max_pipeline_depth),
+        );
         if let Some(c) = self.cache_entries {
             m.insert("cache_entries".into(), Json::from(c));
         }
@@ -334,6 +366,11 @@ impl AmpConfig {
             max_wait_ms: get_u("max_wait_ms", d.max_wait_ms as usize) as u64,
             workers: get_u("workers", d.workers),
             pipeline_depth: get_u("pipeline_depth", d.pipeline_depth),
+            adaptive_depth: j
+                .get("adaptive_depth")
+                .and_then(Json::as_bool)
+                .unwrap_or(false),
+            max_pipeline_depth: get_u("max_pipeline_depth", d.max_pipeline_depth),
             cache_entries: j.get("cache_entries").and_then(Json::as_usize),
             model_cache: j.get("model_cache").and_then(Json::as_bool).unwrap_or(false),
             time_scale: get_f("time_scale", d.time_scale),
@@ -383,10 +420,14 @@ mod tests {
         c.num_partitions = Some(3);
         c.weighted_partitioning = true;
         c.pipeline_depth = 4;
+        c.adaptive_depth = true;
+        c.max_pipeline_depth = 12;
         let j = c.to_json();
         let back = AmpConfig::from_json(&j).unwrap();
         assert_eq!(back.batch, 8);
         assert_eq!(back.pipeline_depth, 4);
+        assert!(back.adaptive_depth);
+        assert_eq!(back.max_pipeline_depth, 12);
         assert_eq!(back.cache_entries, Some(128));
         assert!(back.model_cache);
         assert_eq!(back.num_partitions, Some(3));
@@ -424,6 +465,17 @@ mod tests {
         let mut c = AmpConfig::default();
         c.pipeline_depth = 0;
         assert!(c.validate().is_err());
+        let mut c = AmpConfig::default();
+        c.max_pipeline_depth = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn adaptive_preset_sets_bounds() {
+        let c = AmpConfig::paper_cluster_adaptive(Path::new("a"), 16);
+        assert!(c.adaptive_depth);
+        assert_eq!(c.max_pipeline_depth, 16);
+        c.validate().unwrap();
     }
 
     #[test]

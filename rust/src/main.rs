@@ -6,6 +6,7 @@
 //! amp4ec serve       [--artifacts DIR] [--requests N] [--distinct N]
 //!                    [--batch B] [--partitions N] [--cache] [--workers N]
 //!                    [--depth D]   # streaming pipeline depth (1 = serial)
+//!                    [--adaptive-depth] [--max-depth M]  # online window sizing
 //! amp4ec golden      [--artifacts DIR]
 //! amp4ec config      [--out FILE]       # write a default config file
 //! amp4ec serve-cfg   --config FILE [--requests N]
@@ -70,6 +71,9 @@ fn build_config(args: &Args) -> anyhow::Result<AmpConfig> {
     cfg.workers = args.get_usize("workers", cfg.workers)?;
     cfg.time_scale = args.get_f64("time-scale", cfg.time_scale)?;
     cfg.pipeline_depth = args.get_usize("depth", cfg.pipeline_depth)?;
+    cfg.adaptive_depth = args.flag("adaptive-depth");
+    cfg.max_pipeline_depth =
+        args.get_usize("max-depth", cfg.max_pipeline_depth)?;
     Ok(cfg)
 }
 
@@ -91,8 +95,25 @@ fn print_report(report: &amp4ec::server::ServeReport) {
     println!("nodes              : {:?}", report.node_names);
     for c in &report.stage_counters {
         println!(
-            "stage {} (node {})  : busy {:.1} ms, bubble {:.1} ms, {} micro-batches",
-            c.stage, c.node, c.busy_ms, c.bubble_ms, c.micro_batches
+            "stage {} (node {})  : busy {:.1} ms, bubble {:.1} ms ({:.0}%), {} micro-batches",
+            c.stage,
+            c.node,
+            c.busy_ms,
+            c.bubble_ms,
+            100.0 * c.bubble_fraction(),
+            c.micro_batches
+        );
+    }
+    println!("pipeline depth     : {}", report.final_pipeline_depth);
+    if let Some(d) = &report.depth_report {
+        println!(
+            "adaptive depth     : {} -> {} (range {}..{}, +{} / -{})",
+            d.initial_depth,
+            d.final_depth,
+            d.min_depth,
+            d.max_depth,
+            d.widenings,
+            d.narrowings
         );
     }
 }

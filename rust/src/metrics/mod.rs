@@ -173,6 +173,19 @@ impl StageCounter {
             (self.busy_ms / makespan_ms).min(1.0)
         }
     }
+
+    /// Fraction of the stage's active span spent idle between
+    /// micro-batches (`bubble / (busy + bubble)`). This is the signal
+    /// the adaptive depth controller watches: a saturated bottleneck
+    /// stage reads ~0, a credit-starved one reads high.
+    pub fn bubble_fraction(&self) -> f64 {
+        let span = self.busy_ms + self.bubble_ms;
+        if span <= 0.0 {
+            0.0
+        } else {
+            self.bubble_ms / span
+        }
+    }
 }
 
 /// Thread-safe accumulator merging [`StageCounter`]s across traversals
@@ -354,6 +367,9 @@ mod tests {
         assert_eq!(snap[1], c);
         assert!((snap[1].occupancy(40.0) - 0.5).abs() < 1e-9);
         assert_eq!(snap[1].occupancy(0.0), 0.0);
+        // 15 busy + 1.5 bubble across the merged stage-0 counters.
+        assert!((snap[0].bubble_fraction() - 1.5 / 16.5).abs() < 1e-9);
+        assert_eq!(StageCounter::default().bubble_fraction(), 0.0);
         set.reset();
         assert!(set.snapshot().is_empty());
     }

@@ -92,6 +92,27 @@ impl Plan {
     }
 }
 
+/// Exclusive prefix sums over layer costs: `prefix[i] = Σ costs[..i]`,
+/// length `costs.len() + 1`. Computed once per plan so every candidate
+/// range's cost is an O(1) [`range_cost`] lookup instead of an O(L)
+/// rescan of `costs[range]` (which made boundary realization and
+/// rebalance re-plans O(L·P) in aggregate).
+pub fn prefix_sums(costs: &[u64]) -> Vec<u64> {
+    let mut out = Vec::with_capacity(costs.len() + 1);
+    let mut acc = 0u64;
+    out.push(0);
+    for &c in costs {
+        acc += c;
+        out.push(acc);
+    }
+    out
+}
+
+/// O(1) cost of a half-open layer range, given [`prefix_sums`] output.
+pub fn range_cost(prefix: &[u64], r: &std::ops::Range<usize>) -> u64 {
+    prefix[r.end] - prefix[r.start]
+}
+
 /// Greedy layer-boundary computation — the paper's Eq. 3/10 algorithm,
 /// parameterized by the cost function so the ablation can swap models.
 pub fn layer_boundaries_with(
@@ -170,14 +191,15 @@ fn realize(
         }
     }
 
-    let total_cost: u64 = costs.iter().sum();
+    let prefix = prefix_sums(costs);
+    let total_cost = *prefix.last().unwrap();
     let partitions = layer_ranges
         .iter()
         .enumerate()
         .map(|(i, lr)| Partition {
+            cost: range_cost(&prefix, lr),
             layer_range: lr.clone(),
             block_range: block_cuts[i]..block_cuts[i + 1],
-            cost: costs[lr.clone()].iter().sum(),
         })
         .collect::<Vec<_>>();
     // Validity: block ranges must tile [0, n_blocks).
@@ -341,13 +363,14 @@ pub fn plan_measured_weighted(
     let offsets = manifest.block_layer_offsets();
     let costs: Vec<u64> =
         manifest.flat_layers().iter().map(|l| cost::layer_cost(l)).collect();
-    let total_cost: u64 = costs.iter().sum();
+    let prefix = prefix_sums(&costs);
+    let total_cost = *prefix.last().unwrap();
     let partitions = (0..num_partitions)
         .map(|i| {
             let br = cuts[i]..cuts[i + 1];
             let lr = offsets[br.start]..offsets[br.end];
             Partition {
-                cost: costs[lr.clone()].iter().sum(),
+                cost: range_cost(&prefix, &lr),
                 layer_range: lr,
                 block_range: br,
             }
@@ -470,14 +493,57 @@ mod tests {
             let target = total as f64 / parts as f64;
             let max_layer = *costs.iter().max().unwrap() as f64;
             let ranges = layer_boundaries_with(&costs, parts);
+            let prefix = prefix_sums(&costs);
             for r in ranges.iter().take(parts - 1) {
-                let c: u64 = costs[r.clone()].iter().sum();
+                let c = range_cost(&prefix, r);
                 assert!(
                     (c as f64) < target + max_layer,
                     "partition cost {c} exceeds target {target} + max {max_layer}"
                 );
             }
         });
+    }
+
+    #[test]
+    fn prefix_sums_match_naive_range_sums() {
+        // Equivalence pin for the O(1) range-cost path: every random
+        // range's prefix-difference equals the naive rescan.
+        forall(200, 0x9F5, |rng: &mut Rng| {
+            let n = rng.range(1, 60);
+            let costs: Vec<u64> =
+                (0..n).map(|_| rng.below(1000) as u64).collect();
+            let prefix = prefix_sums(&costs);
+            assert_eq!(prefix.len(), n + 1);
+            assert_eq!(*prefix.last().unwrap(), costs.iter().sum::<u64>());
+            for _ in 0..10 {
+                let a = rng.below(n + 1);
+                let b = rng.below(n + 1);
+                let (a, b) = if a <= b { (a, b) } else { (b, a) };
+                let naive: u64 = costs[a..b].iter().sum();
+                assert_eq!(range_cost(&prefix, &(a..b)), naive);
+            }
+        });
+    }
+
+    #[test]
+    fn plan_costs_agree_with_naive_rescan() {
+        // The realized plans must report exactly the costs a naive
+        // per-range rescan would (the prefix-sum refactor is pure perf).
+        let m = tiny_manifest();
+        let costs: Vec<u64> = m
+            .flat_layers()
+            .iter()
+            .map(|l| cost::layer_cost(l))
+            .collect();
+        for n in 1..=3 {
+            let p = plan(&m, n).unwrap();
+            for part in &p.partitions {
+                let naive: u64 =
+                    costs[part.layer_range.clone()].iter().sum();
+                assert_eq!(part.cost, naive);
+            }
+            assert_eq!(p.total_cost, costs.iter().sum::<u64>());
+        }
     }
 
     #[test]

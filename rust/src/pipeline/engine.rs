@@ -39,13 +39,47 @@
 //! wall-clock into simulated totals. Per-stage occupancy and bubble
 //! (idle-gap) time are exported as [`StageCounter`]s for the metrics
 //! layer.
+//!
+//! ## Persistent cross-batch streaming
+//!
+//! [`run_streamed`] tears its stage drivers down when its one batch
+//! drains, so successive batches each pay a fill+drain bubble of
+//! ~(stages − 1) micro-batch slots plus thread spawn/join.
+//! [`PersistentEngine`] promotes the same drivers into long-lived
+//! threads: per-stage bounded queues and the critical-path clock live
+//! for the whole serve run, micro-batches from *successive* batches are
+//! tagged `(batch, idx)` and flow back-to-back with no inter-batch
+//! drain, and per-batch outputs are reassembled by sequence-numbered
+//! completion tracking in the collector. The `ready[k]` recurrence and
+//! shared-node serialization carry across batch boundaries unchanged —
+//! stage `free` times simply keep advancing — so the accounting stays
+//! device-honest while the drain bubbles disappear. Both entry points
+//! share one driver/feeder/collector core, so the one-shot and
+//! persistent schedules can never diverge.
+//!
+//! On top of the persistent credits sits an optional **adaptive depth
+//! controller** ([`AdaptiveDepthConfig`]): per completed batch it reads
+//! the bottleneck stage's bubble fraction from the batch-local
+//! [`StageCounter`]s and widens the credit window while bubbles remain
+//! (adding a credit), or narrows it after consecutive bubble-free
+//! batches (swallowing a returned credit) — converging to the smallest
+//! `max_in_flight` that saturates the bottleneck stage. To tell window
+//! pressure from mere arrival spacing, the feeder marks a batch
+//! *credit-starved* when it held one of its micro-batches while the
+//! credit window was empty: starved batches are observed with their
+//! full bubbles (entry gaps included — the window itself delayed them,
+//! the only signal a single-chunk batch can produce), while un-starved
+//! batches have each stage's entry gap excluded, so light sequential
+//! traffic never ratchets the window toward the maximum.
 
-use std::sync::mpsc::{channel, sync_channel, Receiver, SyncSender};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
 use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
-use super::timing::{CriticalPath, PipelineTiming};
+use super::timing::{CriticalPath, PipelineTiming, StageTiming};
 use crate::cluster::{NodeSpec, SimParams, VirtualNode};
 use crate::deployer::Deployment;
 use crate::metrics::StageCounter;
@@ -131,18 +165,23 @@ fn node_comm_out(last: Option<&VirtualNode>, bytes: u64) -> f64 {
 }
 
 /// [`StageExec`] over a live [`Deployment`]: real executors on virtual
-/// nodes, identical per-stage semantics to `pipeline::run`.
-pub struct DeploymentStages<'a> {
-    dep: &'a Deployment,
+/// nodes, identical per-stage semantics to `pipeline::run`. Generic
+/// over how the deployment is held: `DeploymentStages<&Deployment>`
+/// borrows for a one-shot traversal, while
+/// `DeploymentStages<Arc<Deployment>>` owns a reference so a
+/// [`PersistentEngine`]'s long-lived driver threads can keep executing
+/// against it.
+pub struct DeploymentStages<D: std::ops::Deref<Target = Deployment>> {
+    dep: D,
 }
 
-impl<'a> DeploymentStages<'a> {
-    pub fn new(dep: &'a Deployment) -> DeploymentStages<'a> {
+impl<D: std::ops::Deref<Target = Deployment>> DeploymentStages<D> {
+    pub fn new(dep: D) -> DeploymentStages<D> {
         DeploymentStages { dep }
     }
 }
 
-impl StageExec for DeploymentStages<'_> {
+impl<D: std::ops::Deref<Target = Deployment> + Sync> StageExec for DeploymentStages<D> {
     fn num_stages(&self) -> usize {
         self.dep.stages.len()
     }
@@ -287,15 +326,515 @@ pub fn concat_rows(chunks: &[Tensor]) -> Result<Tensor> {
     Tensor::new(shape, data)
 }
 
-/// One micro-batch moving through the stage queues. `ready_ms` is the
-/// simulated time it left the previous stage.
-struct Msg {
+// ---------------------------------------------------------------------------
+// Shared streaming core: one driver/feeder/collector implementation used by
+// both the one-shot `run_streamed` (scoped threads, single batch) and the
+// `PersistentEngine` (long-lived threads, batches tagged and interleaved).
+// ---------------------------------------------------------------------------
+
+/// One micro-batch moving through the stage queues. `batch` tags which
+/// admitted batch the rows belong to (always 0 for one-shot runs);
+/// `ready_ms` is the simulated time it left the previous stage.
+struct PMsg {
+    batch: u64,
     idx: usize,
     ready_ms: f64,
     tensor: Tensor,
 }
 
-type Flow = std::result::Result<Msg, anyhow::Error>;
+/// What flows through a stage queue: a live micro-batch or a failure
+/// being forwarded to the collector so its batch can complete (and its
+/// window credit return) without dropping messages.
+enum PFlow {
+    Item(PMsg),
+    Failed { batch: u64, error: anyhow::Error },
+}
+
+/// Per-batch completion tracking: outputs keyed by micro-batch sequence
+/// number plus batch-local timing/counter aggregation. The critical-path
+/// lanes accumulate across batches; these aggregates carry the per-batch
+/// attribution (step deltas) so each batch reports its own timing.
+struct BatchAgg {
+    outs: Vec<Option<Tensor>>,
+    remaining: usize,
+    /// Simulated time the batch began *service*: its first micro-batch's
+    /// stage-0 compute start minus that step's ingress comm, set by the
+    /// stage-0 driver. Batch `total_ms` is measured from here, so a
+    /// batch queued behind earlier batches (e.g. admitted on a stale
+    /// leftover credit) reports its own pipeline time, not the queueing
+    /// time in front of it. For the first batch this is exactly 0.
+    t0_ms: f64,
+    last_deliver_ms: f64,
+    bytes: u64,
+    final_comm_ms: f64,
+    counters: Vec<StageCounter>,
+    /// Per-stage bubble booked by the batch's *first* micro-batch — the
+    /// entry gap since the previous batch left that stage. When the
+    /// batch's admission was *not* credit-starved the adaptive
+    /// controller subtracts it before observing: an arrival gap is not
+    /// credit starvation, and no window width can remove it. Reported
+    /// counters keep the full bubble (the stage really was idle).
+    lead_bubble_ms: Vec<f64>,
+    /// True when the feeder had one of this batch's micro-batches in
+    /// hand but found the credit window empty — the window itself
+    /// delayed admission. For such batches entry gaps *are* starvation
+    /// (the only widening signal a single-chunk batch can produce).
+    credit_starved: bool,
+    error: Option<anyhow::Error>,
+    reply: Sender<Result<EngineRun>>,
+}
+
+/// State shared by drivers, feeder, and collector: the persistent
+/// critical-path clock plus the in-flight batch table.
+struct EngineState {
+    cp: CriticalPath,
+    node_ids: Vec<usize>,
+    batches: HashMap<u64, BatchAgg>,
+}
+
+impl EngineState {
+    fn new(node_ids: &[usize]) -> EngineState {
+        EngineState {
+            cp: CriticalPath::new(node_ids),
+            node_ids: node_ids.to_vec(),
+            batches: HashMap::new(),
+        }
+    }
+
+    /// Register a batch before any of its micro-batches are fed, so
+    /// drivers can attribute steps from the first one onward.
+    fn register(
+        &mut self,
+        id: u64,
+        n_chunks: usize,
+        reply: Sender<Result<EngineRun>>,
+    ) {
+        let counters = self
+            .node_ids
+            .iter()
+            .enumerate()
+            .map(|(k, &node)| StageCounter { stage: k, node, ..StageCounter::default() })
+            .collect();
+        self.batches.insert(
+            id,
+            BatchAgg {
+                outs: (0..n_chunks).map(|_| None).collect(),
+                remaining: n_chunks,
+                t0_ms: 0.0,
+                last_deliver_ms: 0.0,
+                bytes: 0,
+                final_comm_ms: 0.0,
+                counters,
+                lead_bubble_ms: vec![0.0; self.node_ids.len()],
+                credit_starved: false,
+                error: None,
+                reply,
+            },
+        );
+    }
+}
+
+/// Poison-tolerant state lock: a panicking stage (a bug in a `StageExec`
+/// implementation) must degrade to failed batches, not wedge every other
+/// driver — and ultimately every `BatchHandle::wait` — behind a poisoned
+/// mutex. Sim accounting after a panic is best-effort by design.
+fn lock_state(state: &Mutex<EngineState>) -> std::sync::MutexGuard<'_, EngineState> {
+    state.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Stage driver loop: receive, transfer in, execute, account one step on
+/// the shared clock, forward. Failures are forwarded (never dropped) so
+/// the collector's per-batch completion count stays exact.
+fn drive_stage<S: StageExec + ?Sized>(
+    stages: &S,
+    k: usize,
+    rx: Receiver<PFlow>,
+    tx: SyncSender<PFlow>,
+    state: &Mutex<EngineState>,
+) {
+    while let Ok(flow) = rx.recv() {
+        let next = match flow {
+            PFlow::Failed { batch, error } => PFlow::Failed { batch, error },
+            PFlow::Item(m) => {
+                let bytes = m.tensor.byte_len();
+                let comm_ms = stages.comm_in(k, bytes);
+                match stages.execute(k, m.tensor) {
+                    Ok((out, compute_ms)) => {
+                        let mut st = lock_state(state);
+                        let d = st.cp.step_detail(
+                            k, m.ready_ms, comm_ms, compute_ms, bytes,
+                        );
+                        if let Some(agg) = st.batches.get_mut(&m.batch) {
+                            if m.idx == 0 {
+                                if k == 0 {
+                                    // Service start: when stage 0
+                                    // actually began this batch (comm
+                                    // backed out so a fresh pipeline
+                                    // reports t0 = 0). Always >= the
+                                    // admission credit, and > it when the
+                                    // batch queued behind earlier work.
+                                    agg.t0_ms = d.start_ms - comm_ms;
+                                }
+                                // Entry gap at this stage (see
+                                // BatchAgg::lead_bubble_ms).
+                                agg.lead_bubble_ms[k] = d.bubble_ms;
+                            }
+                            let c = &mut agg.counters[k];
+                            c.busy_ms += compute_ms;
+                            c.comm_ms += comm_ms;
+                            c.bubble_ms += d.bubble_ms;
+                            c.micro_batches += 1;
+                            agg.bytes += bytes;
+                        }
+                        drop(st);
+                        PFlow::Item(PMsg {
+                            batch: m.batch,
+                            idx: m.idx,
+                            ready_ms: d.done_ms,
+                            tensor: out,
+                        })
+                    }
+                    Err(e) => PFlow::Failed {
+                        batch: m.batch,
+                        error: e.context(format!(
+                            "pipeline stage {k}, micro-batch {}",
+                            m.idx
+                        )),
+                    },
+                }
+            }
+        };
+        if tx.send(next).is_err() {
+            break; // downstream gone
+        }
+    }
+    // rx disconnected: upstream finished; dropping tx cascades shutdown
+    // to the next stage.
+}
+
+/// Feed one batch's micro-batches into stage 0, spending one window
+/// credit each; the credit's value is the simulated time the slot freed,
+/// which becomes the admitted micro-batch's clock start. An admission
+/// that finds the credit channel empty marks the batch credit-starved
+/// (work was ready; the window held it back) — the signal that lets the
+/// depth controller tell window pressure from mere arrival spacing.
+/// Returns false when the engine is tearing down.
+fn feed_batch(
+    id: u64,
+    chunks: Vec<Tensor>,
+    credit_rx: &Receiver<f64>,
+    feed_tx: &SyncSender<PFlow>,
+    state: &Mutex<EngineState>,
+) -> bool {
+    for (idx, tensor) in chunks.into_iter().enumerate() {
+        let ready_ms = match credit_rx.try_recv() {
+            Ok(t) => t,
+            Err(std::sync::mpsc::TryRecvError::Empty) => {
+                if let Some(agg) = lock_state(state).batches.get_mut(&id) {
+                    agg.credit_starved = true;
+                }
+                match credit_rx.recv() {
+                    Ok(t) => t,
+                    Err(_) => return false, // collector gone
+                }
+            }
+            Err(std::sync::mpsc::TryRecvError::Disconnected) => return false,
+        };
+        if feed_tx
+            .send(PFlow::Item(PMsg { batch: id, idx, ready_ms, tensor }))
+            .is_err()
+        {
+            return false;
+        }
+    }
+    true
+}
+
+/// Collector loop: every admitted micro-batch yields exactly one
+/// terminal message (delivered output or forwarded failure); each
+/// terminal returns its window credit (unless the depth controller is
+/// narrowing) and decrements its batch's completion count. A batch whose
+/// count reaches zero is finalized and its result sent to the waiter.
+fn collect_loop<S: StageExec + ?Sized>(
+    stages: &S,
+    rx: Receiver<PFlow>,
+    credit_tx: Sender<f64>,
+    state: &Mutex<EngineState>,
+    ctrl: &mut DepthCtrl,
+) {
+    // Armed for the whole loop: when the collector exits — orderly
+    // shutdown, a driver panic's channel cascade, or a panic on this
+    // very thread (e.g. a buggy `comm_out`) — any batch stranded
+    // mid-flight is dropped so its reply sender closes and
+    // `BatchHandle::wait` reports shutdown instead of hanging forever.
+    // On an orderly shutdown every accepted batch has already
+    // finalized, so this is a no-op.
+    struct StrandedBatchGuard<'a>(&'a Mutex<EngineState>);
+    impl Drop for StrandedBatchGuard<'_> {
+        fn drop(&mut self) {
+            lock_state(self.0).batches.clear();
+        }
+    }
+    let _stranded = StrandedBatchGuard(state);
+
+    while let Ok(flow) = rx.recv() {
+        match flow {
+            PFlow::Item(m) => {
+                let bytes = m.tensor.byte_len();
+                let hop = stages.comm_out(bytes);
+                let mut st = lock_state(state);
+                let done = st.cp.deliver(hop, bytes, m.ready_ms);
+                let mut finished = None;
+                if let Some(agg) = st.batches.get_mut(&m.batch) {
+                    agg.bytes += bytes;
+                    agg.final_comm_ms += hop;
+                    agg.last_deliver_ms = agg.last_deliver_ms.max(done);
+                    agg.outs[m.idx] = Some(m.tensor);
+                    agg.remaining -= 1;
+                    if agg.remaining == 0 {
+                        finished = Some(m.batch);
+                    }
+                }
+                let completed =
+                    finished.and_then(|id| st.batches.remove(&id));
+                drop(st);
+                ctrl.credit(&credit_tx, done);
+                if let Some(agg) = completed {
+                    // Build the controller's view only when a controller
+                    // exists — the fixed-window and one-shot paths skip
+                    // the per-batch allocation. Batches that carried a
+                    // failure are never observed: their dead micro-batches
+                    // open gaps that read as starvation but are failure
+                    // noise, not a window signal. For batches whose
+                    // admission was never credit-starved, the observed
+                    // counters exclude each stage's entry gap (the idle
+                    // time before the batch's first micro-batch arrived):
+                    // that is request-arrival spacing, which no window
+                    // width can remove. A credit-starved batch keeps its
+                    // entry gaps — the window itself delayed it, which is
+                    // exactly the widening signal (and the only one a
+                    // single-chunk batch can produce).
+                    let observed = (ctrl.is_adaptive() && agg.error.is_none())
+                        .then(|| {
+                            if agg.credit_starved {
+                                agg.counters.clone()
+                            } else {
+                                agg.counters
+                                    .iter()
+                                    .zip(&agg.lead_bubble_ms)
+                                    .map(|(c, lead)| StageCounter {
+                                        bubble_ms: (c.bubble_ms - lead)
+                                            .max(0.0),
+                                        ..c.clone()
+                                    })
+                                    .collect::<Vec<_>>()
+                            }
+                        });
+                    finalize_batch(agg);
+                    if let Some(counters) = observed {
+                        ctrl.observe_batch(&counters, &credit_tx, state);
+                    }
+                }
+            }
+            PFlow::Failed { batch, error } => {
+                let mut st = lock_state(state);
+                let credit_val = st.cp.makespan_ms();
+                let mut finished = None;
+                if let Some(agg) = st.batches.get_mut(&batch) {
+                    if agg.error.is_none() {
+                        agg.error = Some(error);
+                    }
+                    agg.remaining -= 1;
+                    if agg.remaining == 0 {
+                        finished = Some(batch);
+                    }
+                }
+                let completed =
+                    finished.and_then(|id| st.batches.remove(&id));
+                drop(st);
+                ctrl.credit(&credit_tx, credit_val);
+                if let Some(agg) = completed {
+                    finalize_batch(agg);
+                }
+            }
+        }
+    }
+    // `_stranded` drops here (and on unwind), failing any unfinalized
+    // batches.
+}
+
+/// Assemble a completed batch's [`EngineRun`] from its aggregates and
+/// send it to the waiter. Timing is batch-local: `total_ms` runs from
+/// the batch's first admission to its last delivery, compute/comm are
+/// the batch's own sums.
+fn finalize_batch(agg: BatchAgg) {
+    let BatchAgg {
+        outs,
+        t0_ms,
+        last_deliver_ms,
+        bytes,
+        final_comm_ms,
+        counters,
+        error,
+        reply,
+        ..
+    } = agg;
+    let result = match error {
+        Some(e) => Err(e),
+        None => (|| {
+            let collected: Vec<Tensor> = outs
+                .into_iter()
+                .map(|o| {
+                    o.ok_or_else(|| {
+                        anyhow::anyhow!("pipeline dropped a micro-batch")
+                    })
+                })
+                .collect::<Result<_>>()?;
+            let output = concat_rows(&collected)?;
+            let compute_ms: f64 = counters.iter().map(|c| c.busy_ms).sum();
+            let stage_comm_ms: f64 = counters.iter().map(|c| c.comm_ms).sum();
+            let timing = PipelineTiming {
+                total_ms: last_deliver_ms - t0_ms,
+                compute_ms,
+                comm_ms: stage_comm_ms + final_comm_ms,
+                stages: counters
+                    .iter()
+                    .map(|c| StageTiming {
+                        stage: c.stage,
+                        node: c.node,
+                        compute_ms: c.busy_ms,
+                        comm_ms: c.comm_ms,
+                    })
+                    .collect(),
+                activation_bytes: bytes,
+            };
+            Ok(EngineRun { output, timing, stage_counters: counters })
+        })(),
+    };
+    let _ = reply.send(result);
+}
+
+/// Live depth bookkeeping shared between the controller (collector
+/// thread) and [`PersistentEngine`] accessors.
+#[derive(Debug)]
+struct DepthStats {
+    initial: usize,
+    current: AtomicUsize,
+    min_seen: AtomicUsize,
+    max_seen: AtomicUsize,
+    widenings: AtomicU64,
+    narrowings: AtomicU64,
+}
+
+impl DepthStats {
+    fn new(initial: usize) -> DepthStats {
+        DepthStats {
+            initial,
+            current: AtomicUsize::new(initial),
+            min_seen: AtomicUsize::new(initial),
+            max_seen: AtomicUsize::new(initial),
+            widenings: AtomicU64::new(0),
+            narrowings: AtomicU64::new(0),
+        }
+    }
+
+    fn set_depth(&self, d: usize) {
+        self.current.store(d, Ordering::SeqCst);
+        self.min_seen.fetch_min(d, Ordering::SeqCst);
+        self.max_seen.fetch_max(d, Ordering::SeqCst);
+    }
+
+    fn report(&self) -> DepthReport {
+        DepthReport {
+            initial_depth: self.initial,
+            final_depth: self.current.load(Ordering::SeqCst),
+            min_depth: self.min_seen.load(Ordering::SeqCst),
+            max_depth: self.max_seen.load(Ordering::SeqCst),
+            widenings: self.widenings.load(Ordering::SeqCst),
+            narrowings: self.narrowings.load(Ordering::SeqCst),
+        }
+    }
+}
+
+/// The adaptive depth controller, run inline on the collector thread.
+/// Widening injects an extra credit (valued at the current makespan so
+/// the new slot's clock starts "now"); narrowing swallows the next
+/// returned credit. Without an [`AdaptiveDepthConfig`] it only relays
+/// credits — the fixed-window behaviour.
+struct DepthCtrl {
+    cfg: Option<AdaptiveDepthConfig>,
+    swallow: usize,
+    cooldown: u32,
+    clean_batches: u32,
+    stats: Arc<DepthStats>,
+}
+
+impl DepthCtrl {
+    fn new(cfg: Option<AdaptiveDepthConfig>, stats: Arc<DepthStats>) -> DepthCtrl {
+        DepthCtrl { cfg, swallow: 0, cooldown: 0, clean_batches: 0, stats }
+    }
+
+    /// Whether completed batches are worth observing at all.
+    fn is_adaptive(&self) -> bool {
+        self.cfg.is_some()
+    }
+
+    /// Return a window credit, unless a pending narrowing absorbs it.
+    fn credit(&mut self, credit_tx: &Sender<f64>, value: f64) {
+        if self.swallow > 0 {
+            self.swallow -= 1;
+            return;
+        }
+        let _ = credit_tx.send(value);
+    }
+
+    /// Per completed batch: widen while the bottleneck stage shows
+    /// bubbles, narrow after consecutive bubble-free batches. Hysteresis
+    /// plus a cooldown keeps the window within one step of the smallest
+    /// saturating depth.
+    fn observe_batch(
+        &mut self,
+        counters: &[StageCounter],
+        credit_tx: &Sender<f64>,
+        state: &Mutex<EngineState>,
+    ) {
+        let Some(cfg) = self.cfg else { return };
+        if self.cooldown > 0 {
+            self.cooldown -= 1;
+            return;
+        }
+        let Some(bottleneck) = counters
+            .iter()
+            .max_by(|a, b| a.busy_ms.total_cmp(&b.busy_ms))
+        else {
+            return;
+        };
+        if bottleneck.busy_ms + bottleneck.bubble_ms <= 0.0 {
+            return;
+        }
+        let frac = bottleneck.bubble_fraction();
+        let depth = self.stats.current.load(Ordering::SeqCst);
+        if frac > cfg.widen_bubble_frac && depth < cfg.max_depth {
+            let now = lock_state(state).cp.makespan_ms();
+            let _ = credit_tx.send(now);
+            self.stats.set_depth(depth + 1);
+            self.stats.widenings.fetch_add(1, Ordering::SeqCst);
+            self.cooldown = cfg.cooldown_batches;
+            self.clean_batches = 0;
+        } else if frac < cfg.narrow_bubble_frac && depth > cfg.min_depth {
+            self.clean_batches += 1;
+            if self.clean_batches >= 2 {
+                self.swallow += 1;
+                self.stats.set_depth(depth - 1);
+                self.stats.narrowings.fetch_add(1, Ordering::SeqCst);
+                self.cooldown = cfg.cooldown_batches;
+                self.clean_batches = 0;
+            }
+        } else {
+            self.clean_batches = 0;
+        }
+    }
+}
 
 /// Serial comparator with identical accounting: every micro-batch runs
 /// through all stages before the next one starts (chunk-major order).
@@ -343,6 +882,11 @@ pub fn run_serial<S: StageExec + ?Sized>(
 /// through per-stage bounded queues with one driver thread per stage, up
 /// to `cfg.max_in_flight` micro-batches in flight. Output rows are
 /// reassembled in request order and are bit-identical to [`run_serial`].
+///
+/// One-shot wrapper over the shared streaming core: scoped driver
+/// threads live for exactly one batch. For back-to-back batches use
+/// [`PersistentEngine`], which keeps the same drivers (and the
+/// critical-path clock) alive across batches.
 pub fn run_streamed<S: StageExec + ?Sized>(
     stages: &S,
     input: &Tensor,
@@ -352,9 +896,11 @@ pub fn run_streamed<S: StageExec + ?Sized>(
     anyhow::ensure!(n_stages > 0, "engine needs >= 1 stage");
     anyhow::ensure!(cfg.max_in_flight > 0, "max_in_flight must be > 0");
     let chunks = split_rows(input, cfg.micro_batch_rows)?;
-    let n_chunks = chunks.len();
     let node_ids: Vec<usize> = (0..n_stages).map(|k| stages.node_id(k)).collect();
-    let cp = Mutex::new(CriticalPath::new(&node_ids));
+
+    let (reply_tx, reply_rx) = channel::<Result<EngineRun>>();
+    let state = Mutex::new(EngineState::new(&node_ids));
+    lock_state(&state).register(0, chunks.len(), reply_tx);
 
     // Channel k feeds stage k; channel n_stages is the collector. The
     // global in-flight limit is the credit window below; the bounded
@@ -363,7 +909,7 @@ pub fn run_streamed<S: StageExec + ?Sized>(
     let mut senders = Vec::with_capacity(n_stages + 1);
     let mut receivers = Vec::with_capacity(n_stages + 1);
     for _ in 0..=n_stages {
-        let (tx, rx) = sync_channel::<Flow>(cfg.max_in_flight);
+        let (tx, rx) = sync_channel::<PFlow>(cfg.max_in_flight);
         senders.push(tx);
         receivers.push(rx);
     }
@@ -382,101 +928,365 @@ pub fn run_streamed<S: StageExec + ?Sized>(
         let _ = credit_tx.send(0.0);
     }
 
-    let mut outs: Vec<Option<Tensor>> = (0..n_chunks).map(|_| None).collect();
-    let mut first_err: Option<anyhow::Error> = None;
-
     std::thread::scope(|scope| {
         // One driver thread per stage.
         for k in 0..n_stages {
-            let rx: Receiver<Flow> = receivers.next().expect("stage receiver");
-            let tx: SyncSender<Flow> = senders.next().expect("stage sender");
-            let cp = &cp;
+            let rx: Receiver<PFlow> = receivers.next().expect("stage receiver");
+            let tx: SyncSender<PFlow> = senders.next().expect("stage sender");
+            let state = &state;
+            scope.spawn(move || drive_stage(stages, k, rx, tx, state));
+        }
+
+        // Feeder: micro-batches are admitted as window credits free up.
+        {
+            let state = &state;
             scope.spawn(move || {
-                while let Ok(flow) = rx.recv() {
-                    let next: Flow = match flow {
-                        Err(e) => Err(e), // forward downstream; no compute
-                        Ok(m) => {
-                            let bytes = m.tensor.byte_len();
-                            let comm_ms = stages.comm_in(k, bytes);
-                            match stages.execute(k, m.tensor) {
-                                Ok((out, compute_ms)) => {
-                                    let ready = cp.lock().unwrap().step(
-                                        k, m.ready_ms, comm_ms, compute_ms, bytes,
-                                    );
-                                    Ok(Msg { idx: m.idx, ready_ms: ready, tensor: out })
-                                }
-                                Err(e) => Err(e.context(format!(
-                                    "pipeline stage {k}, micro-batch {}",
-                                    m.idx
-                                ))),
-                            }
-                        }
-                    };
-                    if tx.send(next).is_err() {
-                        break; // downstream gone
-                    }
-                }
-                // rx disconnected: upstream finished; dropping tx cascades
-                // shutdown to the next stage.
+                feed_batch(0, chunks, &credit_rx, &feed_tx, state);
             });
         }
 
+        // Collector runs inline; it exits when the last driver drops its
+        // sender (after the feeder finished and the queues drained).
         let collect_rx = receivers.next().expect("collector receiver");
-
-        // Feeder: micro-batches are admitted as window credits free up;
-        // each admitted chunk's simulated clock starts when its slot's
-        // previous occupant was delivered.
-        scope.spawn(move || {
-            for (idx, tensor) in chunks.into_iter().enumerate() {
-                let ready_ms = match credit_rx.recv() {
-                    Ok(t) => t,
-                    Err(_) => break, // collector gone
-                };
-                if feed_tx.send(Ok(Msg { idx, ready_ms, tensor })).is_err() {
-                    break;
-                }
-            }
-        });
-
-        // Collector: every micro-batch yields exactly one terminal
-        // message (output or forwarded error) and returns its window
-        // credit either way.
-        for _ in 0..n_chunks {
-            match collect_rx.recv() {
-                Ok(Ok(m)) => {
-                    let bytes = m.tensor.byte_len();
-                    let hop = stages.comm_out(bytes);
-                    let done = cp.lock().unwrap().deliver(hop, bytes, m.ready_ms);
-                    outs[m.idx] = Some(m.tensor);
-                    let _ = credit_tx.send(done);
-                }
-                Ok(Err(e)) => {
-                    let _ = credit_tx.send(cp.lock().unwrap().makespan_ms());
-                    if first_err.is_none() {
-                        first_err = Some(e);
-                    }
-                }
-                Err(_) => break, // a stage driver died
-            }
-        }
-        // Dropping credit_tx here unblocks a feeder still waiting on a
-        // credit after an early exit.
-        drop(credit_tx);
+        let mut ctrl =
+            DepthCtrl::new(None, Arc::new(DepthStats::new(cfg.max_in_flight)));
+        collect_loop(stages, collect_rx, credit_tx, &state, &mut ctrl);
     });
 
-    if let Some(e) = first_err {
-        return Err(e);
+    match reply_rx.try_recv() {
+        Ok(result) => result,
+        Err(_) => Err(anyhow::anyhow!("pipeline engine dropped the batch")),
     }
-    let collected: Vec<Tensor> = outs
-        .into_iter()
-        .map(|o| o.ok_or_else(|| anyhow::anyhow!("pipeline dropped a micro-batch")))
-        .collect::<Result<_>>()?;
-    let cp = cp.into_inner().expect("critical path lock");
-    Ok(EngineRun {
-        output: concat_rows(&collected)?,
-        timing: cp.timing(),
-        stage_counters: cp.counters(),
-    })
+}
+
+// ---------------------------------------------------------------------------
+// Persistent cross-batch engine
+// ---------------------------------------------------------------------------
+
+/// Adaptive depth controller knobs (see the module docs). The window is
+/// widened while the bottleneck stage's per-batch bubble fraction stays
+/// above `widen_bubble_frac`, and narrowed after two consecutive batches
+/// below `narrow_bubble_frac` — hysteresis that parks the window within
+/// one step of the smallest depth that saturates the bottleneck. Each
+/// stage's entry gap (idle before a batch's first micro-batch) is
+/// excluded from observations unless the batch's admission was
+/// credit-starved: arrival spacing is not credit starvation, but a
+/// window that held ready work back is.
+#[derive(Debug, Clone, Copy)]
+pub struct AdaptiveDepthConfig {
+    pub min_depth: usize,
+    pub max_depth: usize,
+    /// Widen when the bottleneck stage's bubble fraction exceeds this.
+    pub widen_bubble_frac: f64,
+    /// Narrow (after 2 clean batches) when it stays below this.
+    pub narrow_bubble_frac: f64,
+    /// Batches to skip after a change so its effect is observed before
+    /// the next decision.
+    pub cooldown_batches: u32,
+}
+
+impl Default for AdaptiveDepthConfig {
+    fn default() -> Self {
+        AdaptiveDepthConfig {
+            min_depth: 1,
+            max_depth: 8,
+            widen_bubble_frac: 0.10,
+            narrow_bubble_frac: 0.02,
+            cooldown_batches: 1,
+        }
+    }
+}
+
+/// Configuration for a [`PersistentEngine`].
+#[derive(Debug, Clone)]
+pub struct PersistentEngineConfig {
+    /// Rows per micro-batch (the compiled artifact batch for real
+    /// deployments).
+    pub micro_batch_rows: usize,
+    /// Starting credit window (micro-batches in flight across *all*
+    /// batches at once).
+    pub initial_depth: usize,
+    /// Enable the adaptive depth controller.
+    pub adaptive: Option<AdaptiveDepthConfig>,
+}
+
+impl Default for PersistentEngineConfig {
+    fn default() -> Self {
+        PersistentEngineConfig {
+            micro_batch_rows: 1,
+            initial_depth: 4,
+            adaptive: None,
+        }
+    }
+}
+
+impl PersistentEngineConfig {
+    /// Queue bound: the widest window the controller may reach.
+    fn depth_cap(&self) -> usize {
+        match &self.adaptive {
+            Some(a) => a.max_depth.max(self.initial_depth),
+            None => self.initial_depth,
+        }
+    }
+}
+
+/// Snapshot of the adaptive controller's trajectory for reports.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DepthReport {
+    pub initial_depth: usize,
+    pub final_depth: usize,
+    pub min_depth: usize,
+    pub max_depth: usize,
+    pub widenings: u64,
+    pub narrowings: u64,
+}
+
+/// A waiter for one submitted batch.
+pub struct BatchHandle {
+    rx: Receiver<Result<EngineRun>>,
+}
+
+impl BatchHandle {
+    /// Block until the batch's last micro-batch is delivered (or its
+    /// first failure has drained through the pipeline).
+    pub fn wait(self) -> Result<EngineRun> {
+        match self.rx.recv() {
+            Ok(result) => result,
+            Err(_) => Err(anyhow::anyhow!(
+                "persistent engine shut down before the batch completed"
+            )),
+        }
+    }
+}
+
+/// Long-lived streaming engine: per-stage driver threads, a feeder, and
+/// a collector that all survive across batches, fed through
+/// [`PersistentEngine::submit`]. Successive batches stream back-to-back
+/// through the same bounded queues — no inter-batch drain, no thread
+/// churn — while the shared [`CriticalPath`] keeps device-honest
+/// simulated accounting across batch boundaries. Dropping the engine
+/// drains in-flight batches (their [`BatchHandle`]s still complete) and
+/// joins every thread.
+pub struct PersistentEngine {
+    submit_tx: Option<SyncSender<(u64, Vec<Tensor>)>>,
+    state: Arc<Mutex<EngineState>>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+    next_batch: AtomicU64,
+    micro_batch_rows: usize,
+    node_ids: Vec<usize>,
+    depth_stats: Arc<DepthStats>,
+}
+
+impl PersistentEngine {
+    /// Spawn the engine over an owned stage chain.
+    pub fn new<S: StageExec + Send + Sync + 'static>(
+        stages: Arc<S>,
+        cfg: PersistentEngineConfig,
+    ) -> Result<PersistentEngine> {
+        Self::new_dyn(stages, cfg)
+    }
+
+    /// Type-erased constructor (the engine stores `dyn StageExec`).
+    pub fn new_dyn(
+        stages: Arc<dyn StageExec + Send + Sync>,
+        cfg: PersistentEngineConfig,
+    ) -> Result<PersistentEngine> {
+        let n_stages = stages.num_stages();
+        anyhow::ensure!(n_stages > 0, "engine needs >= 1 stage");
+        anyhow::ensure!(cfg.micro_batch_rows > 0, "micro_batch_rows must be > 0");
+        anyhow::ensure!(cfg.initial_depth > 0, "initial_depth must be > 0");
+        if let Some(a) = &cfg.adaptive {
+            anyhow::ensure!(a.min_depth >= 1, "min_depth must be >= 1");
+            anyhow::ensure!(
+                a.min_depth <= a.max_depth,
+                "min_depth {} > max_depth {}",
+                a.min_depth,
+                a.max_depth
+            );
+            anyhow::ensure!(
+                (a.min_depth..=a.max_depth).contains(&cfg.initial_depth),
+                "initial_depth {} outside adaptive range [{}, {}]",
+                cfg.initial_depth,
+                a.min_depth,
+                a.max_depth
+            );
+            // Thresholds: widen must sit at or above narrow, or the
+            // controller oscillates +1/-1 forever in the overlap band;
+            // NaN would silently disable both comparisons.
+            anyhow::ensure!(
+                a.widen_bubble_frac.is_finite()
+                    && a.narrow_bubble_frac.is_finite()
+                    && a.narrow_bubble_frac >= 0.0
+                    && a.widen_bubble_frac >= a.narrow_bubble_frac,
+                "bubble thresholds must be finite with widen ({}) >= \
+                 narrow ({}) >= 0",
+                a.widen_bubble_frac,
+                a.narrow_bubble_frac
+            );
+        }
+        let node_ids: Vec<usize> =
+            (0..n_stages).map(|k| stages.node_id(k)).collect();
+        let state = Arc::new(Mutex::new(EngineState::new(&node_ids)));
+        let cap = cfg.depth_cap();
+
+        let mut senders = Vec::with_capacity(n_stages + 1);
+        let mut receivers = Vec::with_capacity(n_stages + 1);
+        for _ in 0..=n_stages {
+            let (tx, rx) = sync_channel::<PFlow>(cap);
+            senders.push(tx);
+            receivers.push(rx);
+        }
+        let mut senders = senders.into_iter();
+        let mut receivers = receivers.into_iter();
+        let feed_tx = senders.next().expect("feeder sender");
+
+        let (credit_tx, credit_rx) = channel::<f64>();
+        for _ in 0..cfg.initial_depth {
+            let _ = credit_tx.send(0.0);
+        }
+        let depth_stats = Arc::new(DepthStats::new(cfg.initial_depth));
+
+        let mut threads = Vec::with_capacity(n_stages + 2);
+        for k in 0..n_stages {
+            let rx = receivers.next().expect("stage receiver");
+            let tx = senders.next().expect("stage sender");
+            let stages = Arc::clone(&stages);
+            let state = Arc::clone(&state);
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("pipe-stage-{k}"))
+                    .spawn(move || drive_stage(&*stages, k, rx, tx, &state))
+                    .context("spawning stage driver")?,
+            );
+        }
+        {
+            let collect_rx = receivers.next().expect("collector receiver");
+            let stages = Arc::clone(&stages);
+            let state = Arc::clone(&state);
+            let stats = Arc::clone(&depth_stats);
+            let adaptive = cfg.adaptive;
+            threads.push(
+                std::thread::Builder::new()
+                    .name("pipe-collect".into())
+                    .spawn(move || {
+                        let mut ctrl = DepthCtrl::new(adaptive, stats);
+                        collect_loop(&*stages, collect_rx, credit_tx, &state, &mut ctrl);
+                    })
+                    .context("spawning collector")?,
+            );
+        }
+        let (submit_tx, submit_rx) =
+            sync_channel::<(u64, Vec<Tensor>)>(cap.max(4));
+        {
+            let state = Arc::clone(&state);
+            threads.push(
+                std::thread::Builder::new()
+                    .name("pipe-feed".into())
+                    .spawn(move || {
+                        while let Ok((id, chunks)) = submit_rx.recv() {
+                            if !feed_batch(id, chunks, &credit_rx, &feed_tx, &state) {
+                                // The pipeline died under us (panic-driven
+                                // cascade): fail this batch and every
+                                // submission still reaching the queue so
+                                // no waiter hangs on a reply that will
+                                // never come. The loop ends only when all
+                                // submit senders drop.
+                                lock_state(&state).batches.remove(&id);
+                                while let Ok((id, _)) = submit_rx.recv() {
+                                    lock_state(&state).batches.remove(&id);
+                                }
+                                break;
+                            }
+                        }
+                        // Dropping feed_tx cascades shutdown through the
+                        // stage drivers to the collector.
+                    })
+                    .context("spawning feeder")?,
+            );
+        }
+
+        Ok(PersistentEngine {
+            submit_tx: Some(submit_tx),
+            state,
+            threads,
+            next_batch: AtomicU64::new(0),
+            micro_batch_rows: cfg.micro_batch_rows,
+            node_ids,
+            depth_stats,
+        })
+    }
+
+    /// Split `input` into micro-batches and enqueue them behind any
+    /// batches already flowing — no drain in between. Returns a
+    /// [`BatchHandle`] whose `wait` yields the reassembled, in-order
+    /// output (bit-identical to a serial traversal) plus batch-local
+    /// timing. Blocks only on submission-queue back-pressure, never on
+    /// the batch's execution.
+    pub fn submit(&self, input: &Tensor) -> Result<BatchHandle> {
+        let chunks = split_rows(input, self.micro_batch_rows)?;
+        let id = self.next_batch.fetch_add(1, Ordering::SeqCst);
+        let (reply_tx, reply_rx) = channel::<Result<EngineRun>>();
+        lock_state(&self.state).register(id, chunks.len(), reply_tx);
+        let submit_tx = self.submit_tx.as_ref().expect("engine running");
+        if submit_tx.send((id, chunks)).is_err() {
+            lock_state(&self.state).batches.remove(&id);
+            anyhow::bail!("persistent engine is shut down");
+        }
+        Ok(BatchHandle { rx: reply_rx })
+    }
+
+    /// Submit and wait — the synchronous convenience used by
+    /// `DistributedService::infer_batch`.
+    pub fn run(&self, input: &Tensor) -> Result<EngineRun> {
+        self.submit(input)?.wait()
+    }
+
+    pub fn n_stages(&self) -> usize {
+        self.node_ids.len()
+    }
+
+    /// Node hosting each stage of *this engine's* chain. Callers doing
+    /// per-node accounting must use these (not a freshly-read
+    /// deployment): during a deployment swap a batch submitted to this
+    /// engine still executes on this engine's stages.
+    pub fn node_ids(&self) -> &[usize] {
+        &self.node_ids
+    }
+
+    /// The credit window right now (== the configured depth unless the
+    /// adaptive controller moved it).
+    pub fn current_depth(&self) -> usize {
+        self.depth_stats.current.load(Ordering::SeqCst)
+    }
+
+    /// The adaptive controller's trajectory so far.
+    pub fn depth_report(&self) -> DepthReport {
+        self.depth_stats.report()
+    }
+
+    /// Simulated time of the last delivery across *all* batches — the
+    /// cross-batch makespan (aggregate throughput = total rows / this).
+    pub fn makespan_ms(&self) -> f64 {
+        lock_state(&self.state).cp.makespan_ms()
+    }
+
+    /// Cumulative per-stage counters across every batch served.
+    pub fn total_counters(&self) -> Vec<StageCounter> {
+        lock_state(&self.state).cp.counters()
+    }
+}
+
+impl Drop for PersistentEngine {
+    fn drop(&mut self) {
+        // Close the submission queue; the feeder drains what was already
+        // accepted, then the shutdown cascades stage by stage. In-flight
+        // batches complete and their handles resolve before the joins
+        // finish.
+        drop(self.submit_tx.take());
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
 }
 
 #[cfg(test)]
@@ -634,5 +1444,376 @@ mod tests {
         assert_eq!(run.stage_counters[0].micro_batches, 1);
         let tm = &run.timing;
         assert!((tm.total_ms - (tm.compute_ms + tm.comm_ms)).abs() < 1e-6);
+    }
+
+    fn input_off(rows: usize, cols: usize, off: f32) -> Tensor {
+        let data =
+            (0..rows * cols).map(|i| i as f32 * 0.5 - 3.0 + off).collect();
+        Tensor::new(vec![rows, cols], data).unwrap()
+    }
+
+    #[test]
+    fn persistent_multi_batch_bit_identical_and_faster_than_per_batch() {
+        let stages = Arc::new(SimStages::heterogeneous(&[1.0, 0.6, 0.4], 2.0));
+        let cfg = PersistentEngineConfig {
+            micro_batch_rows: 1,
+            initial_depth: 4,
+            adaptive: None,
+        };
+        let engine = PersistentEngine::new(Arc::clone(&stages), cfg).unwrap();
+        let batches: Vec<Tensor> =
+            (0..4).map(|i| input_off(4, 6, i as f32 * 10.0)).collect();
+        // Submit everything before waiting: batches stream back-to-back.
+        let handles: Vec<BatchHandle> =
+            batches.iter().map(|b| engine.submit(b).unwrap()).collect();
+        let runs: Vec<EngineRun> =
+            handles.into_iter().map(|h| h.wait().unwrap()).collect();
+        for (b, r) in batches.iter().zip(&runs) {
+            let serial = run_serial(&*stages, b, 1).unwrap();
+            assert_eq!(serial.output, r.output, "batch output diverged");
+            for c in &r.stage_counters {
+                assert_eq!(c.micro_batches, 4);
+            }
+        }
+        // No inter-batch drain: the cross-batch makespan beats the sum of
+        // independent per-batch streamed runs (each pays fill + drain).
+        let cross = engine.makespan_ms();
+        let mut per_batch = 0.0;
+        let one_cfg = EngineConfig { micro_batch_rows: 1, max_in_flight: 4 };
+        for b in &batches {
+            per_batch +=
+                run_streamed(&*stages, b, &one_cfg).unwrap().timing.total_ms;
+        }
+        assert!(
+            cross < per_batch,
+            "cross-batch {cross:.2} ms must beat per-batch {per_batch:.2} ms"
+        );
+    }
+
+    #[test]
+    fn persistent_single_batch_matches_one_shot_schedule() {
+        let t = input(6, 4);
+        let one_shot = run_streamed(
+            &SimStages::heterogeneous(&[1.0, 0.6, 0.4], 2.0),
+            &t,
+            &EngineConfig { micro_batch_rows: 1, max_in_flight: 3 },
+        )
+        .unwrap();
+        let engine = PersistentEngine::new(
+            Arc::new(SimStages::heterogeneous(&[1.0, 0.6, 0.4], 2.0)),
+            PersistentEngineConfig {
+                micro_batch_rows: 1,
+                initial_depth: 3,
+                adaptive: None,
+            },
+        )
+        .unwrap();
+        let run = engine.run(&t).unwrap();
+        // Same shared core, same credits: the first persistent batch must
+        // reproduce the one-shot schedule exactly, in outputs and sim-ms.
+        assert_eq!(run.output, one_shot.output);
+        assert!(
+            (run.timing.total_ms - one_shot.timing.total_ms).abs() < 1e-9,
+            "persistent {} vs one-shot {}",
+            run.timing.total_ms,
+            one_shot.timing.total_ms
+        );
+        assert!(
+            (run.timing.compute_ms - one_shot.timing.compute_ms).abs() < 1e-9
+        );
+        assert!((run.timing.comm_ms - one_shot.timing.comm_ms).abs() < 1e-9);
+    }
+
+    /// Fails at stage 1 whenever the activation carries the sentinel.
+    struct FailOnMark;
+    impl StageExec for FailOnMark {
+        fn num_stages(&self) -> usize {
+            2
+        }
+        fn node_id(&self, stage: usize) -> usize {
+            stage
+        }
+        fn comm_in(&self, _stage: usize, _bytes: u64) -> f64 {
+            0.0
+        }
+        fn comm_out(&self, _bytes: u64) -> f64 {
+            0.0
+        }
+        fn execute(&self, stage: usize, input: Tensor) -> Result<(Tensor, f64)> {
+            anyhow::ensure!(
+                !(stage == 1 && input.data[0] == 999.0),
+                "sentinel failure"
+            );
+            Ok((input, 1.0))
+        }
+    }
+
+    #[test]
+    fn persistent_failure_isolated_to_its_batch() {
+        let engine = PersistentEngine::new(
+            Arc::new(FailOnMark),
+            PersistentEngineConfig {
+                micro_batch_rows: 1,
+                initial_depth: 2,
+                adaptive: None,
+            },
+        )
+        .unwrap();
+        let good = Tensor::new(vec![2, 2], vec![1.0; 4]).unwrap();
+        let bad = Tensor::new(vec![2, 2], vec![999.0; 4]).unwrap();
+        let h1 = engine.submit(&good).unwrap();
+        let h2 = engine.submit(&bad).unwrap();
+        let h3 = engine.submit(&good).unwrap();
+        let r1 = h1.wait().unwrap();
+        assert_eq!(r1.output, good);
+        let err = h2.wait().unwrap_err();
+        assert!(
+            format!("{err:#}").contains("stage 1"),
+            "unexpected error: {err:#}"
+        );
+        // The failure drained without touching the following batch, and
+        // counters stay consistent (every stage saw both micro-batches).
+        let r3 = h3.wait().unwrap();
+        assert_eq!(r3.output, good);
+        for c in &r3.stage_counters {
+            assert_eq!(c.micro_batches, 2, "stage {} counters", c.stage);
+        }
+        // Engine still serves after the failure.
+        let r4 = engine.run(&good).unwrap();
+        assert_eq!(r4.output, good);
+    }
+
+    #[test]
+    fn queued_batch_reports_service_time_not_queueing() {
+        // A wide window hands batch B a stale leftover credit (value 0)
+        // while batch A still occupies the pipeline. B's total_ms must
+        // measure B's own pass (from its stage-0 service start), not the
+        // whole cross-batch makespan.
+        let stages = Arc::new(SimStages::heterogeneous(&[1.0, 0.6, 0.4], 2.0));
+        let engine = PersistentEngine::new(
+            Arc::clone(&stages),
+            PersistentEngineConfig {
+                micro_batch_rows: 1,
+                initial_depth: 8,
+                adaptive: None,
+            },
+        )
+        .unwrap();
+        let a = input(4, 4);
+        let b = input_off(1, 4, 5.0);
+        let ha = engine.submit(&a).unwrap();
+        let hb = engine.submit(&b).unwrap();
+        let ra = ha.wait().unwrap();
+        let rb = hb.wait().unwrap();
+        assert_eq!(rb.output, run_serial(&*stages, &b, 1).unwrap().output);
+        let makespan = engine.makespan_ms();
+        assert!(
+            rb.timing.total_ms < 0.9 * makespan,
+            "queued batch total {:.2} ms should exclude queueing \
+             (cross-batch makespan {makespan:.2} ms)",
+            rb.timing.total_ms
+        );
+        assert!(
+            rb.timing.total_ms < ra.timing.total_ms,
+            "single-micro batch B ({:.2} ms) must report less service \
+             time than 4-micro batch A ({:.2} ms)",
+            rb.timing.total_ms,
+            ra.timing.total_ms
+        );
+    }
+
+    #[test]
+    fn adaptive_depth_widens_until_bottleneck_saturates() {
+        let stages = Arc::new(SimStages::heterogeneous(&[1.0, 0.6, 0.4], 2.0));
+        let engine = PersistentEngine::new(
+            stages,
+            PersistentEngineConfig {
+                micro_batch_rows: 1,
+                initial_depth: 1,
+                adaptive: Some(AdaptiveDepthConfig {
+                    max_depth: 6,
+                    ..AdaptiveDepthConfig::default()
+                }),
+            },
+        )
+        .unwrap();
+        let b = input(4, 4);
+        let mut handles = Vec::new();
+        for _ in 0..12 {
+            handles.push(engine.submit(&b).unwrap());
+        }
+        for h in handles {
+            h.wait().unwrap();
+        }
+        let report = engine.depth_report();
+        assert_eq!(report.initial_depth, 1);
+        assert!(report.widenings >= 1, "controller never widened: {report:?}");
+        let depth = engine.current_depth();
+        assert!(
+            (2..=6).contains(&depth),
+            "depth {depth} did not move off the serial window"
+        );
+    }
+
+    #[test]
+    fn adaptive_depth_ignores_arrival_gaps() {
+        // Strictly sequential traffic (each batch waited before the next
+        // is submitted): the idle time between batches is arrival
+        // spacing, not credit starvation. With the window already wide
+        // enough for a whole batch (4 > 3 chunks) the controller must
+        // never ratchet it upward chasing those gaps — the entry-gap
+        // exclusion means the observed bottleneck bubbles stay ~0.
+        let stages = Arc::new(SimStages::heterogeneous(&[1.0, 0.6, 0.4], 1.0));
+        let engine = PersistentEngine::new(
+            stages,
+            PersistentEngineConfig {
+                micro_batch_rows: 1,
+                initial_depth: 4,
+                adaptive: Some(AdaptiveDepthConfig {
+                    max_depth: 8,
+                    ..AdaptiveDepthConfig::default()
+                }),
+            },
+        )
+        .unwrap();
+        let b = input(3, 4);
+        for _ in 0..8 {
+            engine.run(&b).unwrap();
+        }
+        let report = engine.depth_report();
+        assert!(
+            report.max_depth <= 4,
+            "window ratcheted upward on arrival gaps: {report:?}"
+        );
+        assert!(report.final_depth >= 1 && report.final_depth <= 4);
+    }
+
+    #[test]
+    fn adaptive_depth_works_with_single_chunk_batches() {
+        // pipeline_depth = 1 + adaptive (the bare `--adaptive-depth`
+        // serve configuration): every batch is exactly one micro-batch,
+        // so there are no intra-batch bubbles at all. Back-to-back
+        // submissions starve on credits at depth 1, and those starved
+        // entry gaps must still widen the window.
+        let stages = Arc::new(SimStages::heterogeneous(&[1.0, 0.6, 0.4], 2.0));
+        let engine = PersistentEngine::new(
+            stages,
+            PersistentEngineConfig {
+                micro_batch_rows: 1,
+                initial_depth: 1,
+                adaptive: Some(AdaptiveDepthConfig {
+                    max_depth: 6,
+                    ..AdaptiveDepthConfig::default()
+                }),
+            },
+        )
+        .unwrap();
+        let b = input(1, 4);
+        let mut handles = Vec::new();
+        for _ in 0..16 {
+            handles.push(engine.submit(&b).unwrap());
+        }
+        for h in handles {
+            h.wait().unwrap();
+        }
+        let report = engine.depth_report();
+        assert!(
+            report.widenings >= 1,
+            "single-chunk adaptive serving never widened: {report:?}"
+        );
+        assert!(engine.current_depth() >= 2, "{report:?}");
+    }
+
+    #[test]
+    fn adaptive_depth_widens_on_sequential_starved_batches() {
+        // Solo batches can still carry genuine credit starvation: at
+        // window 1 a 4-chunk batch serializes its own micro-batches, and
+        // those intra-batch bubbles (entry gap excluded) must widen the
+        // window even though the batches never overlap each other.
+        let stages = Arc::new(SimStages::heterogeneous(&[1.0, 0.6, 0.4], 2.0));
+        let engine = PersistentEngine::new(
+            stages,
+            PersistentEngineConfig {
+                micro_batch_rows: 1,
+                initial_depth: 1,
+                adaptive: Some(AdaptiveDepthConfig {
+                    max_depth: 6,
+                    ..AdaptiveDepthConfig::default()
+                }),
+            },
+        )
+        .unwrap();
+        let b = input(4, 4);
+        for _ in 0..8 {
+            engine.run(&b).unwrap();
+        }
+        let report = engine.depth_report();
+        assert!(
+            report.widenings >= 1,
+            "sequential starved batches must still widen: {report:?}"
+        );
+        assert!(engine.current_depth() >= 2, "{report:?}");
+    }
+
+    #[test]
+    fn persistent_engine_rejects_bad_configs() {
+        let stages = || Arc::new(SimStages::heterogeneous(&[1.0], 1.0));
+        assert!(PersistentEngine::new(
+            stages(),
+            PersistentEngineConfig {
+                micro_batch_rows: 0,
+                initial_depth: 1,
+                adaptive: None
+            },
+        )
+        .is_err());
+        assert!(PersistentEngine::new(
+            stages(),
+            PersistentEngineConfig {
+                micro_batch_rows: 1,
+                initial_depth: 0,
+                adaptive: None
+            },
+        )
+        .is_err());
+        assert!(PersistentEngine::new(
+            stages(),
+            PersistentEngineConfig {
+                micro_batch_rows: 1,
+                initial_depth: 9,
+                adaptive: Some(AdaptiveDepthConfig {
+                    min_depth: 1,
+                    max_depth: 8,
+                    ..AdaptiveDepthConfig::default()
+                }),
+            },
+        )
+        .is_err());
+        // Inverted or non-finite bubble thresholds are rejected.
+        assert!(PersistentEngine::new(
+            stages(),
+            PersistentEngineConfig {
+                micro_batch_rows: 1,
+                initial_depth: 1,
+                adaptive: Some(AdaptiveDepthConfig {
+                    widen_bubble_frac: 0.05,
+                    narrow_bubble_frac: 0.20,
+                    ..AdaptiveDepthConfig::default()
+                }),
+            },
+        )
+        .is_err());
+        assert!(PersistentEngine::new(
+            stages(),
+            PersistentEngineConfig {
+                micro_batch_rows: 1,
+                initial_depth: 1,
+                adaptive: Some(AdaptiveDepthConfig {
+                    widen_bubble_frac: f64::NAN,
+                    ..AdaptiveDepthConfig::default()
+                }),
+            },
+        )
+        .is_err());
     }
 }

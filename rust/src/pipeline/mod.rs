@@ -13,8 +13,13 @@
 //!   overhead" column.
 //! * [`engine`] — streaming traversal: the batch is split into row-wise
 //!   micro-batches driven through per-stage bounded queues so stage *k*
-//!   computes while stage *k+1* receives. See the module docs for the
-//!   micro-batch and sim-time model.
+//!   computes while stage *k+1* receives. One-shot via
+//!   [`engine::run_streamed`]; cross-batch via
+//!   [`engine::PersistentEngine`], whose drivers (and critical-path
+//!   clock) live for the whole serve run so successive batches stream
+//!   back-to-back with no inter-batch drain, optionally with an
+//!   adaptive in-flight window. See the module docs for the micro-batch
+//!   and sim-time model.
 //!
 //! All reported times are **simulated milliseconds**. In particular
 //! `PipelineTiming::total_ms` is the simulated critical-path sum — for a

@@ -74,6 +74,19 @@ struct Lane {
     fed: bool,
 }
 
+/// Per-step outcome of [`CriticalPath::step_detail`].
+#[derive(Debug, Clone, Copy)]
+pub struct StepDetail {
+    /// Simulated time the stage began computing this micro-batch
+    /// (`max(arrive, stage/node free)`).
+    pub start_ms: f64,
+    /// Simulated time the stage's output is ready.
+    pub done_ms: f64,
+    /// Idle gap this step opened at the stage (0 during pipeline fill
+    /// and when the stage was still busy when the activation arrived).
+    pub bubble_ms: f64,
+}
+
 /// Critical-path clock shared by `pipeline::run` and the streaming
 /// engine. One instance accounts one traversal (any number of
 /// micro-batches); stage drivers feed it in FIFO per-stage order, which
@@ -126,14 +139,32 @@ impl CriticalPath {
         compute_ms: f64,
         bytes: u64,
     ) -> f64 {
+        self.step_detail(stage, ready_in_ms, comm_ms, compute_ms, bytes)
+            .done_ms
+    }
+
+    /// Like [`CriticalPath::step`] but also reports the idle gap this
+    /// step opened at the stage (0 during pipeline fill). The persistent
+    /// engine uses the delta to attribute bubbles to individual batches
+    /// while the lanes themselves accumulate across batch boundaries.
+    pub fn step_detail(
+        &mut self,
+        stage: usize,
+        ready_in_ms: f64,
+        comm_ms: f64,
+        compute_ms: f64,
+        bytes: u64,
+    ) -> StepDetail {
         let node = self.node_of[stage];
         let node_free = self.node_free.get(&node).copied().unwrap_or(0.0);
         let lane = &mut self.lanes[stage];
         let arrive = ready_in_ms + comm_ms;
         let floor = lane.free_ms.max(node_free);
+        let mut bubble = 0.0;
         let start = if arrive > floor {
             if lane.fed {
-                lane.bubble_ms += arrive - floor;
+                bubble = arrive - floor;
+                lane.bubble_ms += bubble;
             }
             arrive
         } else {
@@ -148,7 +179,7 @@ impl CriticalPath {
         self.node_free.insert(node, done);
         self.activation_bytes += bytes;
         self.makespan_ms = self.makespan_ms.max(done);
-        done
+        StepDetail { start_ms: start, done_ms: done, bubble_ms: bubble }
     }
 
     /// Account the final hop of one micro-batch back to the leader.
@@ -294,6 +325,23 @@ mod tests {
         assert_eq!(c[0].micro_batches, 2);
         assert!((c[0].bubble_ms - 15.0).abs() < 1e-9);
         assert!((c[0].busy_ms - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn step_detail_reports_per_step_bubble() {
+        let mut cp = CriticalPath::new(&[0]);
+        // Fill: arrives at t=5 on a fresh stage — no bubble reported.
+        let d1 = cp.step_detail(0, 5.0, 0.0, 10.0, 0);
+        assert!((d1.done_ms - 15.0).abs() < 1e-9);
+        assert_eq!(d1.bubble_ms, 0.0);
+        // Arrives at t=30 while the stage freed at 15: 15 ms bubble, and
+        // the delta matches the lane's cumulative bubble.
+        let d2 = cp.step_detail(0, 30.0, 0.0, 10.0, 0);
+        assert!((d2.bubble_ms - 15.0).abs() < 1e-9);
+        assert!((cp.counters()[0].bubble_ms - 15.0).abs() < 1e-9);
+        // Back-to-back arrival while busy: no bubble.
+        let d3 = cp.step_detail(0, 0.0, 0.0, 10.0, 0);
+        assert_eq!(d3.bubble_ms, 0.0);
     }
 
     #[test]

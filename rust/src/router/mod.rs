@@ -5,12 +5,17 @@
 //! scheduling overhead is exactly this admission delay plus node
 //! selection), checks the result cache, and dispatches misses to an
 //! [`InferenceService`] on a worker pool so multiple batches are in
-//! flight at once. When the service is the streaming
-//! `DistributedService` (`pipeline_depth > 1`), each dispatched batch is
-//! a super-batch that the `pipeline::engine` further splits into
-//! micro-batches streamed across the stage nodes — so a single router
-//! worker drives every node in the chain concurrently instead of
-//! blocking on a serial `pipeline::run`.
+//! flight at once.
+//!
+//! Streaming services (the `DistributedService` with `pipeline_depth >
+//! 1` or adaptive depth) override [`InferenceService::submit_batch`] to
+//! feed their **persistent** `pipeline::engine` directly: the worker's
+//! submission enqueues the super-batch's micro-batches behind whatever
+//! is already flowing — successive router batches stream back-to-back
+//! through the same long-lived stage drivers with no inter-batch drain
+//! — and the worker then blocks only on that batch's own completion.
+//! Services without a streaming path fall back to a synchronous
+//! [`InferenceService::infer_batch`] on the worker.
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
 use std::sync::Arc;
@@ -19,10 +24,22 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::metrics::{MetricsCollector, RunMetrics};
-use crate::pipeline::{split_batch, stack_batch};
+use crate::pipeline::stack_batch;
 use crate::runtime::Tensor;
 use crate::scheduler::cache::{input_key, ResultCache};
 use crate::util::pool::{ThreadPool, WaitGroup};
+
+/// How a service accepted a stacked batch (see
+/// [`InferenceService::submit_batch`]).
+pub enum Submission {
+    /// The batch was fed into a streaming engine; the closure blocks
+    /// until that batch's rows are delivered and returns the usual
+    /// `(output, compute_ms, comm_ms)` triple.
+    Pending(Box<dyn FnOnce() -> Result<(Tensor, f64, f64)> + Send>),
+    /// No streaming path: the router worker should run
+    /// [`InferenceService::infer_batch`] on the returned batch itself.
+    Inline(Tensor),
+}
 
 /// Anything that can run a batched inference (distributed pipeline,
 /// monolithic baseline, mocks in tests).
@@ -30,6 +47,15 @@ pub trait InferenceService: Send + Sync {
     /// Run one stacked batch. Returns output batch plus a timing split
     /// (compute ms, comm ms).
     fn infer_batch(&self, batch: &Tensor) -> Result<(Tensor, f64, f64)>;
+
+    /// Submit a stacked batch, preferring an asynchronous streaming
+    /// path. Streaming services override this to enqueue the batch into
+    /// their persistent engine (so successive batches overlap) and
+    /// return [`Submission::Pending`]; the default hands the batch back
+    /// for a synchronous `infer_batch`.
+    fn submit_batch(&self, batch: Tensor) -> Submission {
+        Submission::Inline(batch)
+    }
 
     /// The fixed batch the service's artifacts were compiled for.
     fn batch_size(&self) -> usize;
@@ -138,21 +164,29 @@ fn process_batch(
     metrics: &MetricsCollector,
     dispatched: Instant,
 ) {
-    // Split into cache hits and misses.
-    let mut misses: Vec<&Request> = Vec::new();
-    let mut hits: Vec<(usize, Vec<f32>)> = Vec::new();
-    let mut keys: Vec<u64> = Vec::with_capacity(batch.len());
-    for (i, r) in batch.iter().enumerate() {
-        let key = input_key(service.model_id(), &r.input.data);
-        keys.push(key);
-        match cache.and_then(|c| c.get(key)) {
-            Some(v) => hits.push((i, v)),
-            None => misses.push(r),
+    // Split into cache hits and misses (misses keep their batch index so
+    // cache inserts are O(1) lookups, not per-row scans). Without a
+    // cache there is nothing to key: skip hashing every input tensor.
+    let mut misses: Vec<(usize, &Request)> = Vec::new();
+    let mut hits: Vec<usize> = Vec::new();
+    let mut keys: Vec<u64> = Vec::new();
+    match cache {
+        Some(c) => {
+            keys.reserve(batch.len());
+            for (i, r) in batch.iter().enumerate() {
+                let key = input_key(service.model_id(), &r.input.data);
+                keys.push(key);
+                match c.get(key) {
+                    Some(_row) => hits.push(i), // Arc clone; bytes untouched
+                    None => misses.push((i, r)),
+                }
+            }
         }
+        None => misses.extend(batch.iter().enumerate()),
     }
 
     // Serve hits immediately (zero compute / comm).
-    for (i, _v) in &hits {
+    for i in &hits {
         let r = &batch[*i];
         let latency = r.enqueued.elapsed().as_secs_f64() * 1e3;
         let sched = (dispatched - r.enqueued).as_secs_f64() * 1e3;
@@ -162,8 +196,11 @@ fn process_batch(
         return;
     }
 
-    // Run the miss set as one stacked batch.
-    let inputs: Vec<&Tensor> = misses.iter().map(|r| &r.input).collect();
+    // Run the miss set as one stacked batch. `submit_batch` lets a
+    // streaming service enqueue it into its persistent engine right
+    // behind the previous batch (no inter-batch drain); this worker then
+    // waits only for its own batch's completion.
+    let inputs: Vec<&Tensor> = misses.iter().map(|(_, r)| &r.input).collect();
     let stacked = match stack_batch(&inputs, service.padded_rows(misses.len())) {
         Ok(t) => t,
         Err(_) => {
@@ -173,30 +210,36 @@ fn process_batch(
             return;
         }
     };
-    match service.infer_batch(&stacked) {
+    let stacked_bytes = stacked.byte_len();
+    let result = match service.submit_batch(stacked) {
+        Submission::Pending(wait) => wait(),
+        Submission::Inline(t) => service.infer_batch(&t),
+    };
+    match result {
         Ok((output, compute_ms, comm_ms)) => {
-            let rows = match split_batch(&output, misses.len()) {
-                Ok(r) => r,
-                Err(_) => {
-                    for _ in &misses {
-                        metrics.record_failure();
-                    }
-                    return;
+            let row_len: usize = output.shape.iter().skip(1).product();
+            if output.shape.is_empty()
+                || output.shape[0] < misses.len()
+                || row_len == 0
+            {
+                for _ in &misses {
+                    metrics.record_failure();
                 }
-            };
-            metrics.add_activation_bytes(
-                stacked.byte_len() + output.byte_len(),
-            );
-            for (r, row) in misses.iter().zip(rows.iter()) {
+                return;
+            }
+            metrics.add_activation_bytes(stacked_bytes + output.byte_len());
+            for (slot, (idx, r)) in misses.iter().enumerate() {
                 let latency = r.enqueued.elapsed().as_secs_f64() * 1e3;
                 let sched = (dispatched - r.enqueued).as_secs_f64() * 1e3;
                 metrics.record_request(latency, compute_ms, comm_ms, sched, false);
                 if let Some(c) = cache {
-                    let idx = batch
-                        .iter()
-                        .position(|b| b.id == r.id)
-                        .expect("request in batch");
-                    c.put(keys[idx], row.data.clone());
+                    // One copy out of the batched output into a shared
+                    // row; the cache keeps an Arc clone of the same
+                    // allocation the response path hands out.
+                    let row: std::sync::Arc<[f32]> = output.data
+                        [slot * row_len..(slot + 1) * row_len]
+                        .into();
+                    c.put(keys[*idx], row);
                 }
             }
         }
@@ -368,6 +411,73 @@ mod tests {
         );
         assert_eq!(m.completed, 400);
         assert_eq!(m.failed, 0);
+    }
+
+    #[test]
+    fn pending_submissions_drive_the_streaming_path() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        // A streaming-style service: submit_batch returns a Pending
+        // waiter and infer_batch must never be called by the router.
+        struct Streaming {
+            submissions: AtomicUsize,
+            inline_calls: AtomicUsize,
+        }
+        impl InferenceService for Streaming {
+            fn infer_batch(&self, batch: &Tensor) -> Result<(Tensor, f64, f64)> {
+                self.inline_calls.fetch_add(1, Ordering::SeqCst);
+                Ok((batch.clone(), 0.0, 0.0))
+            }
+            fn submit_batch(&self, batch: Tensor) -> Submission {
+                self.submissions.fetch_add(1, Ordering::SeqCst);
+                Submission::Pending(Box::new(move || {
+                    let data = batch.data.iter().map(|v| v + 1.0).collect();
+                    Ok((Tensor::new(batch.shape.clone(), data)?, 1.0, 0.5))
+                }))
+            }
+            fn batch_size(&self) -> usize {
+                4
+            }
+            fn model_id(&self) -> u64 {
+                11
+            }
+        }
+        let svc = Arc::new(Streaming {
+            submissions: AtomicUsize::new(0),
+            inline_calls: AtomicUsize::new(0),
+        });
+        let (tx, rx) = request_channel(32);
+        send_n(&tx, 8, 8);
+        drop(tx);
+        let m = serve(
+            Arc::clone(&svc) as Arc<dyn InferenceService>,
+            rx,
+            RouterConfig::default(),
+            None,
+        );
+        assert_eq!(m.completed, 8);
+        assert_eq!(m.failed, 0);
+        assert!(svc.submissions.load(Ordering::SeqCst) >= 1);
+        assert_eq!(svc.inline_calls.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn cache_rows_are_shared_not_copied() {
+        // After a miss populates the cache, a repeat of the same input
+        // must hit; the stored row is the Arc the router built.
+        let cache = Arc::new(ResultCache::new(8));
+        let (tx, rx) = request_channel(16);
+        send_n(&tx, 6, 2); // 2 distinct inputs, repeated
+        drop(tx);
+        let m = serve(
+            Arc::new(Doubler { batch: 1 }),
+            rx,
+            RouterConfig::default(),
+            Some(Arc::clone(&cache)),
+        );
+        assert_eq!(m.completed, 6);
+        assert!(m.cache_hits >= 2, "hits {}", m.cache_hits);
+        let stats = cache.stats();
+        assert_eq!(stats.entries, 2);
     }
 
     #[test]

@@ -14,7 +14,9 @@
 
 use std::collections::HashMap;
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Sender};
+use std::sync::Arc;
 use std::thread;
 use anyhow::{Context, Result};
 
@@ -70,6 +72,10 @@ pub struct Executor {
     tx: Sender<Command>,
     thread: Option<thread::JoinHandle<()>>,
     name: String,
+    /// Chain runs submitted but not yet completed on the executor
+    /// thread — the per-node backlog gauge the streaming engine and
+    /// monitors can read without blocking.
+    pending: Arc<AtomicUsize>,
 }
 
 impl Executor {
@@ -77,6 +83,8 @@ impl Executor {
     pub fn spawn(name: &str) -> Result<Executor> {
         let (tx, rx) = mpsc::channel::<Command>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let pending = Arc::new(AtomicUsize::new(0));
+        let pending_t = Arc::clone(&pending);
         let tname = name.to_string();
         let thread = thread::Builder::new()
             .name(format!("exec-{name}"))
@@ -141,6 +149,10 @@ impl Executor {
                             // device does not share cores with its
                             // peers).
                             let host_ms = thread_cpu_ms() - t0;
+                            // Relaxed: the gauge is monotonic bookkeeping,
+                            // not a synchronization edge — keep the hot
+                            // path free of ordering cost.
+                            pending_t.fetch_sub(1, Ordering::Relaxed);
                             let _ = reply.send(result.map(|t| (t, host_ms)));
                         }
                         Command::Unload { block, reply } => {
@@ -156,11 +168,24 @@ impl Executor {
         ready_rx
             .recv()
             .context("executor thread died during init")??;
-        Ok(Executor { tx, thread: Some(thread), name: name.to_string() })
+        Ok(Executor {
+            tx,
+            thread: Some(thread),
+            name: name.to_string(),
+            pending,
+        })
     }
 
     pub fn name(&self) -> &str {
         &self.name
+    }
+
+    /// Chain runs queued or executing on this node right now. The
+    /// persistent pipeline engine keeps each stage's executor fed from
+    /// its driver thread; this gauge exposes the resulting per-node
+    /// backlog for diagnostics and depth decisions.
+    pub fn queue_depth(&self) -> usize {
+        self.pending.load(Ordering::Relaxed)
     }
 
     /// Compile an artifact and upload its weights; returns a handle.
@@ -192,9 +217,15 @@ impl Executor {
         input: Tensor,
     ) -> Result<PendingRun> {
         let (reply, rx) = mpsc::channel();
-        self.tx
+        self.pending.fetch_add(1, Ordering::Relaxed);
+        if self
+            .tx
             .send(Command::RunChain { blocks, input, reply })
-            .map_err(|_| anyhow::anyhow!("executor {} gone", self.name))?;
+            .is_err()
+        {
+            self.pending.fetch_sub(1, Ordering::Relaxed);
+            anyhow::bail!("executor {} gone", self.name);
+        }
         Ok(PendingRun { rx, name: self.name.clone() })
     }
 
@@ -257,3 +288,26 @@ impl Drop for Executor {
 }
 
 // Executor integration tests (needing real artifacts) live in rust/tests/.
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn queue_depth_tracks_chain_submissions() {
+        // The stub PJRT client boots, so spawn works without artifacts;
+        // a chain on an unloaded handle errors on the executor thread
+        // but must still balance the pending gauge.
+        let exec = Executor::spawn("gauge-test").unwrap();
+        assert_eq!(exec.queue_depth(), 0);
+        let run = exec
+            .submit_chain(vec![0], Tensor::zeros(vec![1, 2]))
+            .unwrap();
+        assert!(run.wait().is_err(), "unloaded handle must error");
+        assert_eq!(
+            exec.queue_depth(),
+            0,
+            "gauge must return to zero after completion (even on error)"
+        );
+    }
+}

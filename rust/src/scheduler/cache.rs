@@ -8,7 +8,7 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// FNV-1a over arbitrary bytes; deterministic across runs and platforms.
 pub fn fnv1a(bytes: &[u8]) -> u64 {
@@ -33,7 +33,10 @@ pub fn input_key(model_id: u64, input: &[f32]) -> u64 {
 }
 
 struct Entry {
-    value: Vec<f32>,
+    /// Shared with the router's response path: hits hand back a cheap
+    /// `Arc` clone instead of copying the activation row, and inserts
+    /// share the row the response path already built.
+    value: Arc<[f32]>,
     /// LRU tick at last touch.
     last_used: u64,
 }
@@ -77,14 +80,14 @@ impl ResultCache {
         }
     }
 
-    pub fn get(&self, key: u64) -> Option<Vec<f32>> {
+    pub fn get(&self, key: u64) -> Option<Arc<[f32]>> {
         let tick = self.tick.fetch_add(1, Ordering::SeqCst);
         let mut map = self.map.lock().unwrap();
         match map.get_mut(&key) {
             Some(e) => {
                 e.last_used = tick;
                 self.hits.fetch_add(1, Ordering::SeqCst);
-                Some(e.value.clone())
+                Some(Arc::clone(&e.value))
             }
             None => {
                 self.misses.fetch_add(1, Ordering::SeqCst);
@@ -93,7 +96,7 @@ impl ResultCache {
         }
     }
 
-    pub fn put(&self, key: u64, value: Vec<f32>) {
+    pub fn put(&self, key: u64, value: Arc<[f32]>) {
         let tick = self.tick.fetch_add(1, Ordering::SeqCst);
         let mut map = self.map.lock().unwrap();
         if map.len() >= self.max_entries && !map.contains_key(&key) {
@@ -142,24 +145,38 @@ mod tests {
         assert_eq!(a, input_key(1, &[1.0, 2.0]));
     }
 
+    fn row(vals: &[f32]) -> Arc<[f32]> {
+        vals.into()
+    }
+
     #[test]
     fn hit_miss_accounting() {
         let cache = ResultCache::new(4);
         assert!(cache.get(1).is_none());
-        cache.put(1, vec![1.0]);
-        assert_eq!(cache.get(1).unwrap(), vec![1.0]);
+        cache.put(1, row(&[1.0]));
+        assert_eq!(&cache.get(1).unwrap()[..], &[1.0f32][..]);
         let s = cache.stats();
         assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
         assert!((s.hit_rate() - 0.5).abs() < 1e-9);
     }
 
     #[test]
+    fn hits_share_the_stored_row() {
+        // A hit is an Arc clone of the inserted row, not a copy.
+        let cache = ResultCache::new(4);
+        let stored = row(&[4.0, 5.0]);
+        cache.put(9, Arc::clone(&stored));
+        let hit = cache.get(9).unwrap();
+        assert!(Arc::ptr_eq(&stored, &hit));
+    }
+
+    #[test]
     fn lru_evicts_oldest() {
         let cache = ResultCache::new(2);
-        cache.put(1, vec![1.0]);
-        cache.put(2, vec![2.0]);
+        cache.put(1, row(&[1.0]));
+        cache.put(2, row(&[2.0]));
         cache.get(1); // touch 1, so 2 is LRU
-        cache.put(3, vec![3.0]);
+        cache.put(3, row(&[3.0]));
         assert!(cache.get(2).is_none());
         assert!(cache.get(1).is_some());
         assert!(cache.get(3).is_some());
@@ -171,7 +188,7 @@ mod tests {
             let cap = rng.range(1, 8);
             let cache = ResultCache::new(cap);
             for _ in 0..50 {
-                cache.put(rng.next_u64() % 20, vec![0.0]);
+                cache.put(rng.next_u64() % 20, row(&[0.0]));
                 assert!(cache.stats().entries <= cap);
             }
         });
@@ -180,9 +197,9 @@ mod tests {
     #[test]
     fn overwrite_same_key_is_not_eviction() {
         let cache = ResultCache::new(1);
-        cache.put(5, vec![1.0]);
-        cache.put(5, vec![2.0]);
-        assert_eq!(cache.get(5).unwrap(), vec![2.0]);
+        cache.put(5, row(&[1.0]));
+        cache.put(5, row(&[2.0]));
+        assert_eq!(&cache.get(5).unwrap()[..], &[2.0f32][..]);
         assert_eq!(cache.stats().entries, 1);
     }
 }

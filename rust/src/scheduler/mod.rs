@@ -339,8 +339,20 @@ impl Scheduler {
 
     /// Bookkeeping: a task was dispatched to `node`.
     pub fn task_started(&self, node: NodeId) {
+        self.tasks_started(std::slice::from_ref(&node));
+    }
+
+    /// Bookkeeping for a pipeline batch: every stage node carries it, so
+    /// charge them all under one lock. With the persistent engine many
+    /// batches are interleaved in flight at once and each charges every
+    /// stage node on submit — one lock per batch instead of one per
+    /// stage keeps the hot path cheap and the counts atomic with respect
+    /// to concurrent submissions.
+    pub fn tasks_started(&self, nodes: &[NodeId]) {
         let mut state = self.state.lock().unwrap();
-        *state.active_tasks.entry(node).or_insert(0) += 1;
+        for node in nodes {
+            *state.active_tasks.entry(*node).or_insert(0) += 1;
+        }
     }
 
     /// Bookkeeping: a task finished; feeds the performance history
@@ -363,11 +375,19 @@ impl Scheduler {
     /// failure in a dedicated counter instead of polluting the
     /// performance history with a sentinel execution time.
     pub fn task_failed(&self, node: NodeId) {
+        self.tasks_failed(std::slice::from_ref(&node));
+    }
+
+    /// Batch failure: release and count every stage node at once (the
+    /// multi-node counterpart of [`Scheduler::task_failed`]).
+    pub fn tasks_failed(&self, nodes: &[NodeId]) {
         let mut state = self.state.lock().unwrap();
-        if let Some(c) = state.active_tasks.get_mut(&node) {
-            *c = c.saturating_sub(1);
+        for node in nodes {
+            if let Some(c) = state.active_tasks.get_mut(node) {
+                *c = c.saturating_sub(1);
+            }
+            *state.failures.entry(*node).or_insert(0) += 1;
         }
-        *state.failures.entry(node).or_insert(0) += 1;
     }
 
     pub fn failures(&self, node: NodeId) -> u64 {
@@ -570,6 +590,28 @@ mod tests {
             .avg_exec_ms
             .iter()
             .any(|(n, ms)| *n == 2 && (*ms - 30.0).abs() < 1e-9));
+    }
+
+    #[test]
+    fn bulk_charging_matches_per_node_calls() {
+        // Interleaved persistent-engine batches charge all stage nodes
+        // per submit; the bulk APIs must agree with N single calls.
+        let sched = Scheduler::new(ScoringWeights::default());
+        let nodes = [0usize, 1, 2];
+        sched.tasks_started(&nodes);
+        sched.tasks_started(&nodes); // two batches in flight
+        for n in nodes {
+            assert_eq!(sched.active_tasks(n), 2);
+        }
+        sched.tasks_failed(&nodes); // one batch fails on every stage
+        for n in nodes {
+            assert_eq!(sched.active_tasks(n), 1);
+            assert_eq!(sched.failures(n), 1);
+        }
+        for n in nodes {
+            sched.task_completed(n, 10.0);
+            assert_eq!(sched.active_tasks(n), 0);
+        }
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //! workloads through the router. This is the end-to-end composition the
 //! examples and the table benches drive.
 
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, Mutex, RwLock};
 
 use anyhow::{Context, Result};
 
@@ -16,29 +16,39 @@ use crate::manifest::Manifest;
 use crate::metrics::RunMetrics;
 use crate::monitor::{self, MonitorHandle};
 use crate::partitioner::{self, Plan};
-use crate::pipeline;
-use crate::router::{self, InferenceService};
+use crate::pipeline::{self, engine};
+use crate::router::{self, InferenceService, Submission};
 use crate::runtime::{Executor, Tensor};
 use crate::scheduler::{ResultCache, Scheduler};
 use crate::workload::{feed, Arrival, InputPool};
 
+/// Boxed completion waiter produced by the streaming submission path:
+/// blocks until the batch's rows are delivered.
+type InferWait = Box<dyn FnOnce() -> Result<(Tensor, f64, f64)> + Send>;
+
 /// The distributed pipeline as an [`InferenceService`].
 ///
-/// With `pipeline_depth == 1` every batch runs through the serial
-/// [`pipeline::run`]. With `pipeline_depth > 1` the service admits
-/// super-batches of `deployment.batch * pipeline_depth` rows and streams
-/// them through the [`pipeline::engine`] as `pipeline_depth`
-/// micro-batches of exactly the compiled artifact batch each — stage
-/// *k* computes one micro-batch while stage *k+1* receives the previous
-/// one.
+/// With `pipeline_depth == 1` (and no adaptive depth) every batch runs
+/// through the serial [`pipeline::run`] schedule. Otherwise the service
+/// owns a **persistent** [`engine::PersistentEngine`]: super-batches of
+/// `deployment.batch * pipeline_depth` rows are *submitted* (not run)
+/// into long-lived per-stage driver threads, so successive router
+/// batches stream back-to-back across the stage nodes with no
+/// inter-batch drain, and — when `adaptive_depth` is on — the in-flight
+/// window resizes itself online from observed per-stage bubble time.
 pub struct DistributedService {
-    deployment: RwLock<Deployment>,
+    deployment: RwLock<Arc<Deployment>>,
     scheduler: Arc<Scheduler>,
-    /// Micro-batches kept in flight per admitted batch (1 = serial).
+    /// Configured micro-batches in flight per admitted batch (1 =
+    /// serial); the adaptive controller may move the live window.
     pipeline_depth: usize,
+    adaptive: Option<engine::AdaptiveDepthConfig>,
+    /// The long-lived streaming engine (None = serial schedule). Rebuilt
+    /// on deployment swaps; the old engine drains before teardown.
+    engine: Mutex<Option<Arc<engine::PersistentEngine>>>,
     /// Accumulated per-stage occupancy/bubble counters (streamed and
-    /// serial runs alike).
-    stage_counters: crate::metrics::StageCounterSet,
+    /// serial runs alike). Arc so completion closures can merge into it.
+    stage_counters: Arc<crate::metrics::StageCounterSet>,
 }
 
 impl DistributedService {
@@ -46,9 +56,54 @@ impl DistributedService {
         self.deployment.read().unwrap().node_ids()
     }
 
-    /// Swap in a new deployment (after a topology change).
-    pub fn replace_deployment(&self, d: Deployment) -> Deployment {
-        std::mem::replace(&mut *self.deployment.write().unwrap(), d)
+    /// Build the persistent engine for a deployment (None when the
+    /// config asks for the serial schedule).
+    fn build_engine(
+        dep: &Arc<Deployment>,
+        pipeline_depth: usize,
+        adaptive: Option<engine::AdaptiveDepthConfig>,
+    ) -> Result<Option<Arc<engine::PersistentEngine>>> {
+        if pipeline_depth <= 1 && adaptive.is_none() {
+            return Ok(None);
+        }
+        let cfg = engine::PersistentEngineConfig {
+            micro_batch_rows: dep.batch.max(1),
+            initial_depth: pipeline_depth.max(1),
+            adaptive,
+        };
+        let stages =
+            Arc::new(engine::DeploymentStages::new(Arc::clone(dep)));
+        Ok(Some(Arc::new(engine::PersistentEngine::new(stages, cfg)?)))
+    }
+
+    /// Swap in a new deployment (after a topology change): the streaming
+    /// engine is rebuilt over the new stage chain; the old engine drains
+    /// its in-flight batches against the old deployment before teardown.
+    /// Returns the old deployment for undeploy. On error (e.g. the new
+    /// engine failed to spawn) nothing was swapped — the caller still
+    /// owns `d` and must undeploy it.
+    pub fn replace_deployment(&self, d: Arc<Deployment>) -> Result<Arc<Deployment>> {
+        let new_engine =
+            Self::build_engine(&d, self.pipeline_depth, self.adaptive)?;
+        // Swap both under the deployment write lock. Acquiring it waits
+        // for every submit_streaming/serial_infer read guard, and the
+        // engine is swapped before the write guard releases, so no
+        // submission can reach the old engine afterwards: once we hold
+        // `old_engine` its refcount is ours alone.
+        let (old_dep, old_engine) = {
+            let mut dep_guard = self.deployment.write().unwrap();
+            let old_dep = std::mem::replace(&mut *dep_guard, Arc::clone(&d));
+            let old_engine = std::mem::replace(
+                &mut *self.engine.lock().unwrap(),
+                new_engine,
+            );
+            (old_dep, old_engine)
+        };
+        // Last reference: dropping joins the old engine's threads after
+        // its queues drain, so in-flight batches complete against the old
+        // deployment before the caller undeploys it.
+        drop(old_engine);
+        Ok(old_dep)
     }
 
     /// Accumulated per-stage engine counters since startup.
@@ -59,55 +114,113 @@ impl DistributedService {
     pub fn pipeline_depth(&self) -> usize {
         self.pipeline_depth
     }
-}
 
-impl InferenceService for DistributedService {
-    fn infer_batch(&self, batch: &Tensor) -> Result<(Tensor, f64, f64)> {
+    /// Live in-flight window plus the adaptive controller's trajectory
+    /// (None when running the serial schedule or a fixed window).
+    pub fn depth_status(&self) -> (usize, Option<engine::DepthReport>) {
+        match &*self.engine.lock().unwrap() {
+            Some(e) => {
+                let report =
+                    self.adaptive.is_some().then(|| e.depth_report());
+                (e.current_depth(), report)
+            }
+            None => (self.pipeline_depth, None),
+        }
+    }
+
+    /// Feed the persistent engine by reference, returning a completion
+    /// waiter, or None when no engine is configured. Node charging uses
+    /// the *engine's* stage nodes — during a deployment swap a batch
+    /// submitted to the old engine still executes on the old stages, so
+    /// reading `self.deployment` here could charge the wrong nodes.
+    fn submit_streaming(&self, batch: &Tensor) -> Option<InferWait> {
+        // Hold the deployment read guard across the engine lookup *and*
+        // the submission: replace_deployment's write lock then waits for
+        // every mid-flight submission before swapping, and since `engine`
+        // (declared after the guard) drops first, the moment the write
+        // lock is granted the old engine's only reference is the
+        // service's — its drop truly drains before the caller undeploys.
+        let _dep_guard = self.deployment.read().unwrap();
+        let engine = self.engine.lock().unwrap().clone()?;
+        let node_ids = engine.node_ids().to_vec();
+        self.scheduler.tasks_started(&node_ids);
+        let scheduler = Arc::clone(&self.scheduler);
+        let stage_counters = Arc::clone(&self.stage_counters);
+        match engine.submit(batch) {
+            Ok(handle) => Some(Box::new(move || match handle.wait() {
+                Ok(run) => {
+                    stage_counters.merge(&run.stage_counters);
+                    for st in &run.timing.stages {
+                        scheduler
+                            .task_completed(st.node, st.compute_ms + st.comm_ms);
+                    }
+                    Ok((run.output, run.timing.compute_ms, run.timing.comm_ms))
+                }
+                Err(e) => {
+                    scheduler.tasks_failed(&node_ids);
+                    Err(e)
+                }
+            })),
+            Err(e) => {
+                self.scheduler.tasks_failed(&node_ids);
+                Some(Box::new(move || Err(e)))
+            }
+        }
+    }
+
+    /// Serial schedule (pipeline::run semantics) through the engine
+    /// accounting, with full scheduler charging.
+    fn serial_infer(&self, batch: &Tensor) -> Result<(Tensor, f64, f64)> {
+        // Hold the read guard across the whole run: a concurrent
+        // rebalance's write + undeploy must wait for in-flight serial
+        // inferences instead of unloading executor blocks under them.
         let dep = self.deployment.read().unwrap();
         // Eq. 8 balance bookkeeping: every stage node carries this batch,
         // not just the first — charging only stage 0 made stages 2..N
         // look permanently idle to the scheduler.
         let node_ids: Vec<usize> =
             dep.stages.iter().map(|s| s.node.id()).collect();
-        for id in &node_ids {
-            self.scheduler.task_started(*id);
-        }
-        let dep_stages = pipeline::engine::DeploymentStages::new(&dep);
-        let result = if self.pipeline_depth > 1 {
-            let cfg = pipeline::engine::EngineConfig {
-                micro_batch_rows: dep.batch,
-                max_in_flight: self.pipeline_depth,
-            };
-            pipeline::engine::run_streamed(&dep_stages, batch, &cfg)
-        } else {
-            // Serial schedule (pipeline::run semantics) through the same
-            // engine accounting, so stage counters are reported either
-            // way.
-            let rows = batch.shape.first().copied().unwrap_or(1).max(1);
-            pipeline::engine::run_serial(&dep_stages, batch, rows)
-        }
-        .map(|run| {
-            self.stage_counters.merge(&run.stage_counters);
-            (run.output, run.timing)
-        });
-        match result {
-            Ok((out, timing)) => {
-                for st in &timing.stages {
+        self.scheduler.tasks_started(&node_ids);
+        let dep_stages = engine::DeploymentStages::new(&**dep);
+        let rows = batch.shape.first().copied().unwrap_or(1).max(1);
+        match engine::run_serial(&dep_stages, batch, rows) {
+            Ok(run) => {
+                self.stage_counters.merge(&run.stage_counters);
+                for st in &run.timing.stages {
                     self.scheduler
                         .task_completed(st.node, st.compute_ms + st.comm_ms);
                 }
-                Ok((out, timing.compute_ms, timing.comm_ms))
+                Ok((run.output, run.timing.compute_ms, run.timing.comm_ms))
             }
             Err(e) => {
                 // A failure has no meaningful execution time; count it in
                 // the dedicated failure counter instead of feeding a 1e9
                 // ms sentinel into the performance history (which
                 // permanently cratered Eq. 7's S_P for the node).
-                for id in &node_ids {
-                    self.scheduler.task_failed(*id);
-                }
+                self.scheduler.tasks_failed(&node_ids);
                 Err(e)
             }
+        }
+    }
+}
+
+impl InferenceService for DistributedService {
+    fn infer_batch(&self, batch: &Tensor) -> Result<(Tensor, f64, f64)> {
+        match self.submit_streaming(batch) {
+            Some(wait) => wait(),
+            None => self.serial_infer(batch),
+        }
+    }
+
+    /// Feed the persistent engine directly: the batch's micro-batches
+    /// are enqueued behind whatever is already streaming (submission
+    /// blocks only on queue back-pressure), and the returned waiter
+    /// resolves when this batch's rows are delivered. Falls back to the
+    /// serial schedule when no engine is configured.
+    fn submit_batch(&self, batch: Tensor) -> Submission {
+        match self.submit_streaming(&batch) {
+            Some(wait) => Submission::Pending(wait),
+            None => Submission::Inline(batch),
         }
     }
 
@@ -146,6 +259,11 @@ pub struct ServeReport {
     /// Per-pipeline-stage occupancy/bubble counters accumulated by the
     /// execution engine (simulated ms).
     pub stage_counters: Vec<crate::metrics::StageCounter>,
+    /// Live in-flight window at the end of the run (== configured
+    /// `pipeline_depth` unless the adaptive controller moved it).
+    pub final_pipeline_depth: usize,
+    /// Adaptive depth trajectory (None unless `adaptive_depth`).
+    pub depth_report: Option<engine::DepthReport>,
 }
 
 /// The leader.
@@ -239,13 +357,28 @@ impl EdgeServer {
             let warm = deployer.deploy(&plan, &cluster, &scheduler, config.batch)?;
             deployer.undeploy(&warm);
         }
-        let deployment = deployer.deploy(&plan, &cluster, &scheduler, config.batch)?;
+        let deployment =
+            Arc::new(deployer.deploy(&plan, &cluster, &scheduler, config.batch)?);
 
+        let pipeline_depth = config.pipeline_depth.max(1);
+        let adaptive = config.adaptive_depth.then(|| {
+            engine::AdaptiveDepthConfig {
+                max_depth: config.max_pipeline_depth.max(pipeline_depth),
+                ..engine::AdaptiveDepthConfig::default()
+            }
+        });
+        let pipeline_engine = DistributedService::build_engine(
+            &deployment,
+            pipeline_depth,
+            adaptive,
+        )?;
         let service = Arc::new(DistributedService {
             deployment: RwLock::new(deployment),
             scheduler: Arc::clone(&scheduler),
-            pipeline_depth: config.pipeline_depth.max(1),
-            stage_counters: crate::metrics::StageCounterSet::new(),
+            pipeline_depth,
+            adaptive,
+            engine: Mutex::new(pipeline_engine),
+            stage_counters: Arc::new(crate::metrics::StageCounterSet::new()),
         });
 
         let cache = config.cache_entries.map(|n| Arc::new(ResultCache::new(n)));
@@ -297,7 +430,8 @@ impl EdgeServer {
         drop(tx);
         let metrics = handle.join().expect("router thread");
 
-        let dep = self.service.deployment.read().unwrap();
+        let dep = Arc::clone(&*self.service.deployment.read().unwrap());
+        let (final_depth, depth_report) = self.service.depth_status();
         let snapshot = self.monitor.latest();
         Ok(ServeReport {
             metrics,
@@ -326,6 +460,8 @@ impl EdgeServer {
                 })
                 .collect(),
             stage_counters: self.service.stage_counters(),
+            final_pipeline_depth: final_depth,
+            depth_report,
         })
     }
 
@@ -338,10 +474,21 @@ impl EdgeServer {
             .min(self.manifest.blocks.len())
             .max(1);
         let plan = partitioner::plan(&self.manifest, n)?;
-        let new_dep =
-            self.deployer
-                .deploy(&plan, &self.cluster, &self.scheduler, self.config.batch)?;
-        let old = self.service.replace_deployment(new_dep);
+        let new_dep = Arc::new(self.deployer.deploy(
+            &plan,
+            &self.cluster,
+            &self.scheduler,
+            self.config.batch,
+        )?);
+        let old = match self.service.replace_deployment(Arc::clone(&new_dep)) {
+            Ok(old) => old,
+            Err(e) => {
+                // The swap never happened: release the freshly loaded
+                // blocks instead of leaking them on the stage executors.
+                self.deployer.undeploy(&new_dep);
+                return Err(e);
+            }
+        };
         self.deployer.undeploy(&old);
         let sizes = plan.layer_sizes();
         *self.plan.lock().unwrap() = plan;
@@ -407,7 +554,9 @@ impl EdgeServer {
             &self.manifest.dir.join(&golden.output_file),
             golden.out_shape.clone(),
         )?;
-        // Pad the single input to the deployment batch.
+        // Pad the single input to the deployment batch; the guard is
+        // held across the run so a racing rebalance cannot undeploy the
+        // stages mid-parity-check.
         let dep = self.service.deployment.read().unwrap();
         let stacked = pipeline::stack_batch(&[&input], dep.batch)?;
         let (out, _) = pipeline::run(&dep, &stacked)?;
@@ -475,6 +624,7 @@ pub fn single_request(
     server: &EdgeServer,
     input: &Tensor,
 ) -> Result<(Tensor, f64)> {
+    // Guard held across the run (see serial_infer).
     let dep = server.service.deployment.read().unwrap();
     let stacked = pipeline::stack_batch(&[input], dep.batch)?;
     let t0 = std::time::Instant::now();

@@ -1,0 +1,276 @@
+//! Persistent cross-batch streaming engine: multi-batch bit-identity
+//! against the serial schedule, interleaved submissions, heterogeneous
+//! stage chains, mid-stream failure isolation, and adaptive depth — all
+//! on the virtual-node substrate (no compiled artifacts needed) — plus
+//! an artifact-gated end-to-end adaptive serve.
+
+mod common;
+
+use std::sync::Arc;
+
+use amp4ec::config::AmpConfig;
+use amp4ec::pipeline::engine::{
+    run_serial, run_streamed, AdaptiveDepthConfig, EngineConfig,
+    PersistentEngine, PersistentEngineConfig, SimStages,
+};
+use amp4ec::runtime::Tensor;
+use amp4ec::server::EdgeServer;
+use amp4ec::workload::Arrival;
+
+fn input(rows: usize, cols: usize, off: f32) -> Tensor {
+    let data = (0..rows * cols)
+        .map(|i| i as f32 * 0.25 - 2.0 + off)
+        .collect();
+    Tensor::new(vec![rows, cols], data).unwrap()
+}
+
+fn paper_stages() -> Arc<SimStages> {
+    Arc::new(SimStages::heterogeneous(&[1.0, 0.6, 0.4], 2.0))
+}
+
+#[test]
+fn interleaved_batches_stay_bit_identical_to_serial() {
+    let stages = paper_stages();
+    let engine = PersistentEngine::new(
+        Arc::clone(&stages),
+        PersistentEngineConfig {
+            micro_batch_rows: 1,
+            initial_depth: 4,
+            adaptive: None,
+        },
+    )
+    .unwrap();
+    // Distinct inputs, all submitted before any wait: micro-batches of
+    // different batches interleave in the stage queues.
+    let batches: Vec<Tensor> =
+        (0..6).map(|i| input(3, 5, i as f32 * 7.0)).collect();
+    let handles: Vec<_> =
+        batches.iter().map(|b| engine.submit(b).unwrap()).collect();
+    for (b, h) in batches.iter().zip(handles) {
+        let run = h.wait().unwrap();
+        let serial = run_serial(&*stages, b, 1).unwrap();
+        assert_eq!(run.output, serial.output, "interleaved batch diverged");
+        // Batch-local counters: every stage saw exactly this batch's
+        // micro-batches.
+        assert_eq!(run.stage_counters.len(), 3);
+        for c in &run.stage_counters {
+            assert_eq!(c.micro_batches, 3);
+        }
+        // Batch-local timing is self-consistent.
+        assert!(run.timing.total_ms > 0.0);
+        assert!(run.timing.compute_ms > 0.0);
+        assert!(run.timing.activation_bytes > 0);
+    }
+}
+
+#[test]
+fn cross_batch_streaming_eliminates_drain_bubbles() {
+    // The tentpole claim at engine level: back-to-back batches through
+    // the persistent engine beat the same batches run one `run_streamed`
+    // call each (which drains the pipeline between batches).
+    let stages = paper_stages();
+    let n_batches = 8;
+    let batches: Vec<Tensor> =
+        (0..n_batches).map(|i| input(4, 8, i as f32)).collect();
+
+    let engine = PersistentEngine::new(
+        Arc::clone(&stages),
+        PersistentEngineConfig {
+            micro_batch_rows: 1,
+            initial_depth: 4,
+            adaptive: None,
+        },
+    )
+    .unwrap();
+    let handles: Vec<_> =
+        batches.iter().map(|b| engine.submit(b).unwrap()).collect();
+    for h in handles {
+        h.wait().unwrap();
+    }
+    let cross_ms = engine.makespan_ms();
+
+    let per_batch_stages = paper_stages();
+    let cfg = EngineConfig { micro_batch_rows: 1, max_in_flight: 4 };
+    let mut per_batch_ms = 0.0;
+    for b in &batches {
+        per_batch_ms += run_streamed(&*per_batch_stages, b, &cfg)
+            .unwrap()
+            .timing
+            .total_ms;
+    }
+
+    // The sim model makes this deterministic; the fill/drain analysis
+    // predicts ~34% here, so 15% is a safe floor (the bench pins the
+    // >= 20% acceptance number).
+    assert!(
+        cross_ms * 1.15 < per_batch_ms,
+        "cross-batch {cross_ms:.1} ms must be >= 15% under per-batch \
+         {per_batch_ms:.1} ms"
+    );
+    // Cumulative engine counters saw every micro-batch of every batch.
+    let totals = engine.total_counters();
+    for c in &totals {
+        assert_eq!(c.micro_batches, (n_batches * 4) as u64);
+    }
+}
+
+#[test]
+fn mid_stream_failure_leaves_later_batches_unaffected() {
+    // Stage 1 rejects activations carrying a sentinel; surrounding
+    // batches must complete with consistent counters and the engine must
+    // keep serving.
+    struct FailOnSentinel;
+    impl amp4ec::pipeline::engine::StageExec for FailOnSentinel {
+        fn num_stages(&self) -> usize {
+            3
+        }
+        fn node_id(&self, stage: usize) -> usize {
+            stage
+        }
+        fn comm_in(&self, _stage: usize, _bytes: u64) -> f64 {
+            0.5
+        }
+        fn comm_out(&self, _bytes: u64) -> f64 {
+            0.5
+        }
+        fn execute(
+            &self,
+            stage: usize,
+            input: Tensor,
+        ) -> anyhow::Result<(Tensor, f64)> {
+            anyhow::ensure!(
+                !(stage == 1 && input.data[0] == -1234.5),
+                "sentinel rejected"
+            );
+            Ok((input, 2.0))
+        }
+    }
+
+    let engine = PersistentEngine::new(
+        Arc::new(FailOnSentinel),
+        PersistentEngineConfig {
+            micro_batch_rows: 1,
+            initial_depth: 3,
+            adaptive: None,
+        },
+    )
+    .unwrap();
+    let good_a = input(3, 2, 0.0);
+    let bad = Tensor::new(vec![3, 2], vec![-1234.5; 6]).unwrap();
+    let good_b = input(3, 2, 100.0);
+
+    let ha = engine.submit(&good_a).unwrap();
+    let hbad = engine.submit(&bad).unwrap();
+    let hb = engine.submit(&good_b).unwrap();
+
+    assert_eq!(ha.wait().unwrap().output, good_a);
+    let err = hbad.wait().unwrap_err();
+    assert!(
+        format!("{err:#}").contains("stage 1"),
+        "failure must carry stage context, got: {err:#}"
+    );
+    let run_b = hb.wait().unwrap();
+    assert_eq!(run_b.output, good_b);
+    for c in &run_b.stage_counters {
+        assert_eq!(
+            c.micro_batches, 3,
+            "stage {} lost micro-batches after the failure",
+            c.stage
+        );
+    }
+    // Still serving after the failure drained.
+    assert_eq!(engine.run(&good_a).unwrap().output, good_a);
+}
+
+#[test]
+fn adaptive_depth_converges_near_best_fixed_depth() {
+    // Sweep fixed depths to find the knee (smallest depth within 2% of
+    // the best cross-batch throughput), then check the controller parks
+    // within one step of it.
+    let n_batches = 10;
+    let batches: Vec<Tensor> =
+        (0..n_batches).map(|i| input(4, 4, i as f32)).collect();
+
+    let mut best_ms = f64::INFINITY;
+    let mut sweep: Vec<(usize, f64)> = Vec::new();
+    for depth in 1..=6 {
+        let engine = PersistentEngine::new(
+            paper_stages(),
+            PersistentEngineConfig {
+                micro_batch_rows: 1,
+                initial_depth: depth,
+                adaptive: None,
+            },
+        )
+        .unwrap();
+        let handles: Vec<_> =
+            batches.iter().map(|b| engine.submit(b).unwrap()).collect();
+        for h in handles {
+            h.wait().unwrap();
+        }
+        let ms = engine.makespan_ms();
+        best_ms = best_ms.min(ms);
+        sweep.push((depth, ms));
+    }
+    let best_depth = sweep
+        .iter()
+        .find(|(_, ms)| *ms <= best_ms * 1.02)
+        .map(|(d, _)| *d)
+        .unwrap();
+
+    let engine = PersistentEngine::new(
+        paper_stages(),
+        PersistentEngineConfig {
+            micro_batch_rows: 1,
+            initial_depth: 1,
+            adaptive: Some(AdaptiveDepthConfig {
+                max_depth: 6,
+                ..AdaptiveDepthConfig::default()
+            }),
+        },
+    )
+    .unwrap();
+    // Longer run so the controller has batches to observe.
+    let mut handles = Vec::new();
+    for _round in 0..3 {
+        for b in &batches {
+            handles.push(engine.submit(b).unwrap());
+        }
+    }
+    for h in handles {
+        h.wait().unwrap();
+    }
+    let final_depth = engine.current_depth() as i64;
+    assert!(
+        (final_depth - best_depth as i64).abs() <= 1,
+        "adaptive depth {final_depth} not within 1 of best fixed depth \
+         {best_depth} (sweep: {sweep:?})"
+    );
+    let report = engine.depth_report();
+    assert!(report.widenings >= 1, "controller never widened: {report:?}");
+}
+
+#[test]
+fn streamed_serving_uses_persistent_engine_end_to_end() {
+    require_artifacts!();
+    let mut cfg = AmpConfig::paper_cluster_adaptive(&common::artifacts_dir(), 6);
+    cfg.pipeline_depth = 2;
+    cfg.monitor_interval_ms = 20;
+    let server = EdgeServer::start(cfg).unwrap();
+    let report = server.serve_workload(16, 16, Arrival::Closed, 7).unwrap();
+    assert_eq!(report.metrics.completed, 16);
+    assert_eq!(report.metrics.failed, 0);
+    // The adaptive engine reported its trajectory and a live window.
+    assert!(report.final_pipeline_depth >= 1);
+    let depth = report.depth_report.expect("adaptive depth report");
+    assert_eq!(depth.initial_depth, 2);
+    assert!(depth.final_depth >= 1 && depth.final_depth <= 6);
+    // Stage counters flowed through the persistent engine into the
+    // report, and the scheduler drained every stage node.
+    assert_eq!(report.stage_counters.len(), 3);
+    for c in &report.stage_counters {
+        assert!(c.micro_batches > 0);
+    }
+    let sched = server.scheduler.report();
+    assert!(sched.active_tasks.iter().all(|(_, active)| *active == 0));
+}
