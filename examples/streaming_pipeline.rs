@@ -132,6 +132,7 @@ fn main() -> anyhow::Result<()> {
             micro_batch_rows: 1,
             initial_depth: 4,
             adaptive: None,
+            ..Default::default()
         },
     )?;
     let handles: Vec<_> = per_batch
@@ -158,6 +159,7 @@ fn main() -> anyhow::Result<()> {
             micro_batch_rows: 1,
             initial_depth: 1,
             adaptive: Some(AdaptiveDepthConfig::default()),
+            ..Default::default()
         },
     )?;
     let mut handles = Vec::new();

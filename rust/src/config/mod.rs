@@ -85,6 +85,20 @@ pub struct AmpConfig {
     /// `adaptive_depth`; effective bound is
     /// `max(pipeline_depth, max_pipeline_depth)`).
     pub max_pipeline_depth: usize,
+    /// Per-stage credit windows: the engine's admission window becomes
+    /// one bounded credit budget per stage and the adaptive controller
+    /// resizes them independently, so a slow middle stage grows the
+    /// windows gating its supply instead of inflating the whole chain.
+    /// Off = uniform budgets, which behave exactly like the single
+    /// global window. On rebalance the learned budgets carry into the
+    /// rebuilt engine. CLI: `--stage-windows`.
+    pub per_stage_windows: bool,
+    /// Batch coalescing: the engine feeder merges adjacent small
+    /// miss-sets into shared micro-batches when that reduces the
+    /// micro-batch count; results are re-split per batch at delivery.
+    /// Also relaxes miss padding to exact row counts (short tails pack
+    /// together instead of being padded). CLI: `--coalesce`.
+    pub coalesce: bool,
     /// Result-cache entries; None disables (plain AMP4EC).
     pub cache_entries: Option<usize>,
     /// Model/deployment cache across redeployments (+Cache bandwidth=0).
@@ -118,6 +132,8 @@ impl Default for AmpConfig {
             pipeline_depth: 1,
             adaptive_depth: false,
             max_pipeline_depth: 8,
+            per_stage_windows: false,
+            coalesce: false,
             cache_entries: None,
             model_cache: false,
             time_scale: 1.0,
@@ -288,6 +304,11 @@ impl AmpConfig {
             "max_pipeline_depth".into(),
             Json::from(self.max_pipeline_depth),
         );
+        m.insert(
+            "per_stage_windows".into(),
+            Json::from(self.per_stage_windows),
+        );
+        m.insert("coalesce".into(), Json::from(self.coalesce));
         if let Some(c) = self.cache_entries {
             m.insert("cache_entries".into(), Json::from(c));
         }
@@ -371,6 +392,11 @@ impl AmpConfig {
                 .and_then(Json::as_bool)
                 .unwrap_or(false),
             max_pipeline_depth: get_u("max_pipeline_depth", d.max_pipeline_depth),
+            per_stage_windows: j
+                .get("per_stage_windows")
+                .and_then(Json::as_bool)
+                .unwrap_or(false),
+            coalesce: j.get("coalesce").and_then(Json::as_bool).unwrap_or(false),
             cache_entries: j.get("cache_entries").and_then(Json::as_usize),
             model_cache: j.get("model_cache").and_then(Json::as_bool).unwrap_or(false),
             time_scale: get_f("time_scale", d.time_scale),
@@ -422,12 +448,16 @@ mod tests {
         c.pipeline_depth = 4;
         c.adaptive_depth = true;
         c.max_pipeline_depth = 12;
+        c.per_stage_windows = true;
+        c.coalesce = true;
         let j = c.to_json();
         let back = AmpConfig::from_json(&j).unwrap();
         assert_eq!(back.batch, 8);
         assert_eq!(back.pipeline_depth, 4);
         assert!(back.adaptive_depth);
         assert_eq!(back.max_pipeline_depth, 12);
+        assert!(back.per_stage_windows);
+        assert!(back.coalesce);
         assert_eq!(back.cache_entries, Some(128));
         assert!(back.model_cache);
         assert_eq!(back.num_partitions, Some(3));

@@ -7,6 +7,8 @@
 //!                    [--batch B] [--partitions N] [--cache] [--workers N]
 //!                    [--depth D]   # streaming pipeline depth (1 = serial)
 //!                    [--adaptive-depth] [--max-depth M]  # online window sizing
+//!                    [--stage-windows]  # per-stage credit windows
+//!                    [--coalesce]       # merge adjacent small miss-sets
 //! amp4ec golden      [--artifacts DIR]
 //! amp4ec config      [--out FILE]       # write a default config file
 //! amp4ec serve-cfg   --config FILE [--requests N]
@@ -74,6 +76,8 @@ fn build_config(args: &Args) -> anyhow::Result<AmpConfig> {
     cfg.adaptive_depth = args.flag("adaptive-depth");
     cfg.max_pipeline_depth =
         args.get_usize("max-depth", cfg.max_pipeline_depth)?;
+    cfg.per_stage_windows = args.flag("stage-windows");
+    cfg.coalesce = args.flag("coalesce");
     Ok(cfg)
 }
 
@@ -105,6 +109,19 @@ fn print_report(report: &amp4ec::server::ServeReport) {
         );
     }
     println!("pipeline depth     : {}", report.final_pipeline_depth);
+    if !report.stage_budgets.is_empty() {
+        println!("stage windows      : {:?}", report.stage_budgets);
+    }
+    if let Some(c) = &report.coalesce_stats {
+        println!(
+            "coalescing         : {} transports ({} coalesced), {} member \
+             batches, {} micro-batches saved",
+            c.transports,
+            c.coalesced_transports,
+            c.member_batches,
+            c.saved_micro_batches
+        );
+    }
     if let Some(d) = &report.depth_report {
         println!(
             "adaptive depth     : {} -> {} (range {}..{}, +{} / -{})",

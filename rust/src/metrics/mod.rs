@@ -188,6 +188,23 @@ impl StageCounter {
     }
 }
 
+/// Feeder-side batch-coalescing counters from the persistent pipeline
+/// engine: how many transports were formed, how many of them merged
+/// multiple member batches, and how many padded micro-batches the
+/// merging saved (the DEFER-style "merge small transfers" win).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct CoalesceStats {
+    /// Transports formed by the feeder (coalesced or not).
+    pub transports: u64,
+    /// Transports that merged more than one member batch.
+    pub coalesced_transports: u64,
+    /// Member batches carried across all transports.
+    pub member_batches: u64,
+    /// Micro-batches avoided by merging short tails, vs feeding every
+    /// member separately.
+    pub saved_micro_batches: u64,
+}
+
 /// Thread-safe accumulator merging [`StageCounter`]s across traversals
 /// (the per-deployment view a serving run reports).
 #[derive(Default)]

@@ -57,16 +57,49 @@
 //! share one driver/feeder/collector core, so the one-shot and
 //! persistent schedules can never diverge.
 //!
-//! On top of the persistent credits sits an optional **adaptive depth
+//! ## Per-stage credit windows
+//!
+//! Admission flows through **per-stage credit windows** rather than a
+//! single global window: window *k* bounds the micro-batches admitted
+//! but not yet past stage *k* (the last window: not yet delivered). The
+//! feeder spends one credit from every window per admission and the
+//! admitted micro-batch's simulated clock starts at the max of the
+//! credit values; stage *k*'s driver returns its credit at completion,
+//! the collector returns the last window's at delivery. Equal budgets
+//! make the last window subsume the rest, degenerating *bit-exactly*
+//! to the single global window (pinned by equivalence tests), while
+//! shaped budgets — small on fast early stages, deep on the delivery
+//! window ([`budgets_from_profile`]) — let a skewed chain run at the
+//! bottleneck's true rate with the same credit total.
+//!
+//! ## Batch coalescing
+//!
+//! With [`PersistentEngineConfig::coalesce`] the feeder merges adjacent
+//! small submissions into one *transport* when that strictly reduces
+//! the micro-batch count (short tails packing together). Members keep
+//! their row ranges; delivery re-splits the transport's output so every
+//! waiter receives exactly its own rows, bit-identical to an
+//! uncoalesced run. A failure (or stage panic — drivers catch unwinds)
+//! anywhere in a transport fails only that transport's members.
+//!
+//! On top of the persistent credits sits an optional **adaptive window
 //! controller** ([`AdaptiveDepthConfig`]): per completed batch it reads
 //! the bottleneck stage's bubble fraction from the batch-local
 //! [`StageCounter`]s and widens the credit window while bubbles remain
 //! (adding a credit), or narrows it after consecutive bubble-free
 //! batches (swallowing a returned credit) — converging to the smallest
-//! `max_in_flight` that saturates the bottleneck stage. To tell window
+//! window that saturates the bottleneck stage. In *both* modes,
+//! widening is vetoed while the bottleneck node's wall-clock backlog
+//! ([`StageExec::backlog`], `Executor::queue_depth`) exceeds its budget
+//! — device congestion is not credit starvation (this second signal is
+//! the one intentional divergence from the PR-2 controller, which had
+//! no backlog input). In per-stage mode
+//! ([`PersistentEngineConfig::per_stage`]) budgets additionally resize
+//! independently: widening targets the smallest *starved* window
+//! instead of the whole chain. To tell window
 //! pressure from mere arrival spacing, the feeder marks a batch
-//! *credit-starved* when it held one of its micro-batches while the
-//! credit window was empty: starved batches are observed with their
+//! *credit-starved* (per window) when it held one of its micro-batches
+//! while that window was empty: starved batches are observed with their
 //! full bubbles (entry gaps included — the window itself delayed them,
 //! the only signal a single-chunk batch can produce), while un-starved
 //! batches have each stage's entry gap excluded, so light sequential
@@ -130,6 +163,17 @@ pub trait StageExec: Sync {
 
     /// Id of the node hosting `stage` (for accounting).
     fn node_id(&self, stage: usize) -> usize;
+
+    /// Wall-clock backlog on the node hosting `stage` (chain runs
+    /// submitted but not completed — `Executor::queue_depth` for real
+    /// deployments). The adaptive window controller reads this as a
+    /// second signal: a stage whose device is already backed up gains
+    /// nothing from more credits, so widening is vetoed. Defaults to 0
+    /// (no backlog signal).
+    fn backlog(&self, stage: usize) -> usize {
+        let _ = stage;
+        0
+    }
 
     /// Move `bytes` of activation into `stage` (from the leader for
     /// stage 0, from stage `k-1`'s node otherwise). Returns simulated ms.
@@ -209,6 +253,10 @@ impl<D: std::ops::Deref<Target = Deployment> + Sync> StageExec for DeploymentSta
             .node
             .execute_costed(move || executor.run_chain(blocks, input))?;
         Ok((out, outcome.sim_ms))
+    }
+
+    fn backlog(&self, stage: usize) -> usize {
+        self.dep.stages[stage].executor.queue_depth()
     }
 }
 
@@ -333,8 +381,8 @@ pub fn concat_rows(chunks: &[Tensor]) -> Result<Tensor> {
 // ---------------------------------------------------------------------------
 
 /// One micro-batch moving through the stage queues. `batch` tags which
-/// admitted batch the rows belong to (always 0 for one-shot runs);
-/// `ready_ms` is the simulated time it left the previous stage.
+/// admitted *transport* the rows belong to (always 0 for one-shot
+/// runs); `ready_ms` is the simulated time it left the previous stage.
 struct PMsg {
     batch: u64,
     idx: usize,
@@ -342,18 +390,138 @@ struct PMsg {
     tensor: Tensor,
 }
 
-/// What flows through a stage queue: a live micro-batch or a failure
-/// being forwarded to the collector so its batch can complete (and its
-/// window credit return) without dropping messages.
-enum PFlow {
-    Item(PMsg),
-    Failed { batch: u64, error: anyhow::Error },
+/// Per-stage credit windows (the tentpole of ISSUE 3). Window `k`
+/// bounds the number of micro-batches *admitted but not yet past stage
+/// `k`* — returned by stage `k`'s driver at completion for `k <
+/// S-1`, and by the collector at delivery for the last window. The
+/// feeder spends one credit from **every** window per admission, and
+/// the admitted micro-batch's simulated clock starts at the max of the
+/// credit values, so each window throttles admission in both wall
+/// clock and sim time.
+///
+/// With all budgets equal to `W` the last window's constraint
+/// (admitted-but-undelivered <= W) subsumes the earlier ones and its
+/// credit value (delivery time of micro `i-W`) dominates the max — the
+/// schedule degenerates *bit-exactly* to the PR-2 single global window
+/// of `W` (pinned by equivalence tests). Unequal budgets let a
+/// heterogeneous chain keep a large in-flight window through the
+/// bottleneck while early fast stages run on small ones.
+struct CreditWindows {
+    txs: Vec<Sender<f64>>,
+    /// Pending narrowings per window: the next returned credit is
+    /// absorbed instead of re-issued.
+    swallow: Vec<AtomicUsize>,
+    /// Live budget per window (target size, narrowings already
+    /// subtracted).
+    budgets: Vec<AtomicUsize>,
 }
 
-/// Per-batch completion tracking: outputs keyed by micro-batch sequence
-/// number plus batch-local timing/counter aggregation. The critical-path
-/// lanes accumulate across batches; these aggregates carry the per-batch
-/// attribution (step deltas) so each batch reports its own timing.
+impl CreditWindows {
+    /// Build windows seeded with `budgets[k]` zero-valued credits each;
+    /// returns the feeder-side receivers (index = stage).
+    fn new(budgets: &[usize]) -> (CreditWindows, Vec<Receiver<f64>>) {
+        let mut txs = Vec::with_capacity(budgets.len());
+        let mut rxs = Vec::with_capacity(budgets.len());
+        for &b in budgets {
+            let (tx, rx) = channel::<f64>();
+            for _ in 0..b {
+                let _ = tx.send(0.0);
+            }
+            txs.push(tx);
+            rxs.push(rx);
+        }
+        let windows = CreditWindows {
+            txs,
+            swallow: budgets.iter().map(|_| AtomicUsize::new(0)).collect(),
+            budgets: budgets.iter().map(|&b| AtomicUsize::new(b)).collect(),
+        };
+        (windows, rxs)
+    }
+
+    fn n(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Return window `k`'s credit (value = the simulated time the slot
+    /// freed), unless a pending narrowing absorbs it.
+    fn give(&self, k: usize, value: f64) {
+        let absorbed = self.swallow[k]
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |s| {
+                s.checked_sub(1)
+            })
+            .is_ok();
+        if !absorbed {
+            let _ = self.txs[k].send(value);
+        }
+    }
+
+    /// Grow window `k` by one credit valued `now` (cancels a pending
+    /// narrowing first, so widen/narrow pairs are net zero).
+    fn widen(&self, k: usize, now: f64) {
+        self.budgets[k].fetch_add(1, Ordering::SeqCst);
+        let cancelled = self.swallow[k]
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |s| {
+                s.checked_sub(1)
+            })
+            .is_ok();
+        if !cancelled {
+            let _ = self.txs[k].send(now);
+        }
+    }
+
+    /// Shrink window `k` by one: the next returned credit is swallowed.
+    fn narrow(&self, k: usize) {
+        self.budgets[k].fetch_sub(1, Ordering::SeqCst);
+        self.swallow[k].fetch_add(1, Ordering::SeqCst);
+    }
+
+    fn budgets_snapshot(&self) -> Vec<usize> {
+        self.budgets
+            .iter()
+            .map(|b| b.load(Ordering::SeqCst))
+            .collect()
+    }
+
+    /// The delivery window (last stage's budget) — what
+    /// `current_depth`/`DepthReport` track, identical to the PR-2
+    /// global depth when budgets are uniform.
+    fn delivery_budget(&self) -> usize {
+        self.budgets
+            .last()
+            .map(|b| b.load(Ordering::SeqCst))
+            .unwrap_or(0)
+    }
+}
+
+/// What flows through a stage queue: a live micro-batch or a failure
+/// being forwarded to the collector so its batch can complete (and its
+/// window credits return) without dropping messages. `at_ms` is the
+/// simulated makespan when the failure occurred, stamped once at the
+/// failing stage — downstream drivers and the collector use it as the
+/// returned credit value without touching the shared state lock.
+enum PFlow {
+    Item(PMsg),
+    Failed { batch: u64, error: anyhow::Error, at_ms: f64 },
+}
+
+/// One submitted batch riding inside a transport: where its rows live
+/// in the transport's row space, and who is waiting for them. A
+/// transport formed without coalescing has exactly one member covering
+/// every row.
+struct Member {
+    rows: std::ops::Range<usize>,
+    reply: Sender<Result<EngineRun>>,
+}
+
+/// Per-*transport* completion tracking: outputs keyed by micro-batch
+/// sequence number plus transport-local timing/counter aggregation. A
+/// transport is the unit that flows through the pipeline — one
+/// submitted batch, or several adjacent small submissions the feeder
+/// coalesced into shared micro-batches (members are re-split by row
+/// range at finalization, so results stay batch-addressable). The
+/// critical-path lanes accumulate across transports; these aggregates
+/// carry the per-transport attribution (step deltas) so each batch
+/// reports its own timing.
 struct BatchAgg {
     outs: Vec<Option<Tensor>>,
     remaining: usize,
@@ -375,13 +543,28 @@ struct BatchAgg {
     /// credit starvation, and no window width can remove it. Reported
     /// counters keep the full bubble (the stage really was idle).
     lead_bubble_ms: Vec<f64>,
-    /// True when the feeder had one of this batch's micro-batches in
-    /// hand but found the credit window empty — the window itself
-    /// delayed admission. For such batches entry gaps *are* starvation
-    /// (the only widening signal a single-chunk batch can produce).
-    credit_starved: bool,
+    /// Per-window starvation mask: `starved[k]` is set when the feeder
+    /// had one of this transport's micro-batches in hand but found
+    /// window `k` empty — that window itself delayed admission. For
+    /// such batches entry gaps *are* starvation (the only widening
+    /// signal a single-chunk batch can produce), and the mask tells the
+    /// per-stage controller *which* budget to grow.
+    starved: Vec<bool>,
     error: Option<anyhow::Error>,
-    reply: Sender<Result<EngineRun>>,
+    members: Vec<Member>,
+    /// Rows fed into stage 0 (member rows plus any feeder padding). A
+    /// row-wise stage chain delivers exactly this many rows back; when
+    /// the output disagrees (a row-count-changing `StageExec`), member
+    /// re-splitting is meaningless and finalization falls back to
+    /// whole-output delivery (single member) or an explicit error
+    /// (coalesced members).
+    expected_rows: usize,
+}
+
+impl BatchAgg {
+    fn credit_starved(&self) -> bool {
+        self.starved.iter().any(|s| *s)
+    }
 }
 
 /// State shared by drivers, feeder, and collector: the persistent
@@ -401,13 +584,14 @@ impl EngineState {
         }
     }
 
-    /// Register a batch before any of its micro-batches are fed, so
+    /// Register a transport before any of its micro-batches are fed, so
     /// drivers can attribute steps from the first one onward.
     fn register(
         &mut self,
         id: u64,
         n_chunks: usize,
-        reply: Sender<Result<EngineRun>>,
+        members: Vec<Member>,
+        expected_rows: usize,
     ) {
         let counters = self
             .node_ids
@@ -426,9 +610,10 @@ impl EngineState {
                 final_comm_ms: 0.0,
                 counters,
                 lead_bubble_ms: vec![0.0; self.node_ids.len()],
-                credit_starved: false,
+                starved: vec![false; self.node_ids.len()],
                 error: None,
-                reply,
+                members,
+                expected_rows,
             },
         );
     }
@@ -442,23 +627,57 @@ fn lock_state(state: &Mutex<EngineState>) -> std::sync::MutexGuard<'_, EngineSta
     state.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
 }
 
+/// Human-readable payload of a caught stage panic.
+fn panic_msg(p: Box<dyn std::any::Any + Send>) -> String {
+    p.downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| p.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "opaque panic payload".into())
+}
+
 /// Stage driver loop: receive, transfer in, execute, account one step on
-/// the shared clock, forward. Failures are forwarded (never dropped) so
-/// the collector's per-batch completion count stays exact.
+/// the shared clock, return this stage's window credit, forward.
+/// Failures are forwarded (never dropped) so the collector's
+/// per-transport completion count stays exact, and a *panicking* stage
+/// is caught and converted into a failure of just that transport — the
+/// drivers stay alive and unrelated in-flight batches complete.
 fn drive_stage<S: StageExec + ?Sized>(
     stages: &S,
     k: usize,
     rx: Receiver<PFlow>,
     tx: SyncSender<PFlow>,
     state: &Mutex<EngineState>,
+    windows: &CreditWindows,
 ) {
+    // The last window's credit is returned by the collector at delivery
+    // (that is what makes uniform budgets degenerate to the global
+    // window); every earlier stage returns its own at completion.
+    let returns_credit = k + 1 < windows.n();
     while let Ok(flow) = rx.recv() {
         let next = match flow {
-            PFlow::Failed { batch, error } => PFlow::Failed { batch, error },
+            PFlow::Failed { batch, error, at_ms } => {
+                if returns_credit {
+                    windows.give(k, at_ms);
+                }
+                PFlow::Failed { batch, error, at_ms }
+            }
             PFlow::Item(m) => {
                 let bytes = m.tensor.byte_len();
                 let comm_ms = stages.comm_in(k, bytes);
-                match stages.execute(k, m.tensor) {
+                // A panic inside a StageExec implementation must degrade
+                // to a failed transport, not a dead driver thread (which
+                // would tear the whole engine down). Accounting after a
+                // panic is best-effort by design (AssertUnwindSafe).
+                let executed = std::panic::catch_unwind(
+                    std::panic::AssertUnwindSafe(|| stages.execute(k, m.tensor)),
+                )
+                .unwrap_or_else(|p| {
+                    Err(anyhow::anyhow!(
+                        "stage implementation panicked: {}",
+                        panic_msg(p)
+                    ))
+                });
+                match executed {
                     Ok((out, compute_ms)) => {
                         let mut st = lock_state(state);
                         let d = st.cp.step_detail(
@@ -487,6 +706,9 @@ fn drive_stage<S: StageExec + ?Sized>(
                             agg.bytes += bytes;
                         }
                         drop(st);
+                        if returns_credit {
+                            windows.give(k, d.done_ms);
+                        }
                         PFlow::Item(PMsg {
                             batch: m.batch,
                             idx: m.idx,
@@ -494,13 +716,20 @@ fn drive_stage<S: StageExec + ?Sized>(
                             tensor: out,
                         })
                     }
-                    Err(e) => PFlow::Failed {
-                        batch: m.batch,
-                        error: e.context(format!(
-                            "pipeline stage {k}, micro-batch {}",
-                            m.idx
-                        )),
-                    },
+                    Err(e) => {
+                        let now = lock_state(state).cp.makespan_ms();
+                        if returns_credit {
+                            windows.give(k, now);
+                        }
+                        PFlow::Failed {
+                            batch: m.batch,
+                            error: e.context(format!(
+                                "pipeline stage {k}, micro-batch {}",
+                                m.idx
+                            )),
+                            at_ms: now,
+                        }
+                    }
                 }
             }
         };
@@ -512,34 +741,43 @@ fn drive_stage<S: StageExec + ?Sized>(
     // to the next stage.
 }
 
-/// Feed one batch's micro-batches into stage 0, spending one window
-/// credit each; the credit's value is the simulated time the slot freed,
-/// which becomes the admitted micro-batch's clock start. An admission
-/// that finds the credit channel empty marks the batch credit-starved
-/// (work was ready; the window held it back) — the signal that lets the
-/// depth controller tell window pressure from mere arrival spacing.
-/// Returns false when the engine is tearing down.
+/// Feed one transport's micro-batches into stage 0, spending one credit
+/// from **every** stage window per admission; the admitted micro-batch's
+/// simulated clock starts at the max of the credit values (each value is
+/// the simulated time that window's slot freed). An admission that finds
+/// window `k` empty marks the transport starved on `k` (work was ready;
+/// that window held it back) — the signal that lets the window
+/// controller tell credit pressure from mere arrival spacing, and pick
+/// *which* budget to grow. Returns false when the engine is tearing
+/// down.
 fn feed_batch(
     id: u64,
     chunks: Vec<Tensor>,
-    credit_rx: &Receiver<f64>,
+    credit_rxs: &[Receiver<f64>],
     feed_tx: &SyncSender<PFlow>,
     state: &Mutex<EngineState>,
 ) -> bool {
     for (idx, tensor) in chunks.into_iter().enumerate() {
-        let ready_ms = match credit_rx.try_recv() {
-            Ok(t) => t,
-            Err(std::sync::mpsc::TryRecvError::Empty) => {
-                if let Some(agg) = lock_state(state).batches.get_mut(&id) {
-                    agg.credit_starved = true;
+        let mut ready_ms = 0.0f64;
+        for (k, credit_rx) in credit_rxs.iter().enumerate() {
+            let v = match credit_rx.try_recv() {
+                Ok(t) => t,
+                Err(std::sync::mpsc::TryRecvError::Empty) => {
+                    if let Some(agg) = lock_state(state).batches.get_mut(&id)
+                    {
+                        agg.starved[k] = true;
+                    }
+                    match credit_rx.recv() {
+                        Ok(t) => t,
+                        Err(_) => return false, // collector gone
+                    }
                 }
-                match credit_rx.recv() {
-                    Ok(t) => t,
-                    Err(_) => return false, // collector gone
+                Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                    return false
                 }
-            }
-            Err(std::sync::mpsc::TryRecvError::Disconnected) => return false,
-        };
+            };
+            ready_ms = ready_ms.max(v);
+        }
         if feed_tx
             .send(PFlow::Item(PMsg { batch: id, idx, ready_ms, tensor }))
             .is_err()
@@ -552,15 +790,15 @@ fn feed_batch(
 
 /// Collector loop: every admitted micro-batch yields exactly one
 /// terminal message (delivered output or forwarded failure); each
-/// terminal returns its window credit (unless the depth controller is
-/// narrowing) and decrements its batch's completion count. A batch whose
-/// count reaches zero is finalized and its result sent to the waiter.
+/// terminal returns the *last* window's credit (unless the window
+/// controller is narrowing) and decrements its transport's completion
+/// count. A transport whose count reaches zero is finalized and each
+/// member's result sent to its waiter.
 fn collect_loop<S: StageExec + ?Sized>(
     stages: &S,
     rx: Receiver<PFlow>,
-    credit_tx: Sender<f64>,
     state: &Mutex<EngineState>,
-    ctrl: &mut DepthCtrl,
+    ctrl: &mut WindowCtrl,
 ) {
     // Armed for the whole loop: when the collector exits — orderly
     // shutdown, a driver panic's channel cascade, or a panic on this
@@ -598,7 +836,7 @@ fn collect_loop<S: StageExec + ?Sized>(
                 let completed =
                     finished.and_then(|id| st.batches.remove(&id));
                 drop(st);
-                ctrl.credit(&credit_tx, done);
+                ctrl.terminal_credit(done);
                 if let Some(agg) = completed {
                     // Build the controller's view only when a controller
                     // exists — the fixed-window and one-shot paths skip
@@ -616,7 +854,7 @@ fn collect_loop<S: StageExec + ?Sized>(
                     // single-chunk batch can produce).
                     let observed = (ctrl.is_adaptive() && agg.error.is_none())
                         .then(|| {
-                            if agg.credit_starved {
+                            let counters = if agg.credit_starved() {
                                 agg.counters.clone()
                             } else {
                                 agg.counters
@@ -628,17 +866,17 @@ fn collect_loop<S: StageExec + ?Sized>(
                                         ..c.clone()
                                     })
                                     .collect::<Vec<_>>()
-                            }
+                            };
+                            (counters, agg.starved.clone())
                         });
                     finalize_batch(agg);
-                    if let Some(counters) = observed {
-                        ctrl.observe_batch(&counters, &credit_tx, state);
+                    if let Some((counters, starved)) = observed {
+                        ctrl.observe_batch(stages, &counters, &starved, state);
                     }
                 }
             }
-            PFlow::Failed { batch, error } => {
+            PFlow::Failed { batch, error, at_ms } => {
                 let mut st = lock_state(state);
-                let credit_val = st.cp.makespan_ms();
                 let mut finished = None;
                 if let Some(agg) = st.batches.get_mut(&batch) {
                     if agg.error.is_none() {
@@ -652,7 +890,7 @@ fn collect_loop<S: StageExec + ?Sized>(
                 let completed =
                     finished.and_then(|id| st.batches.remove(&id));
                 drop(st);
-                ctrl.credit(&credit_tx, credit_val);
+                ctrl.terminal_credit(at_ms);
                 if let Some(agg) = completed {
                     finalize_batch(agg);
                 }
@@ -663,10 +901,75 @@ fn collect_loop<S: StageExec + ?Sized>(
     // batches.
 }
 
-/// Assemble a completed batch's [`EngineRun`] from its aggregates and
-/// send it to the waiter. Timing is batch-local: `total_ms` runs from
-/// the batch's first admission to its last delivery, compute/comm are
-/// the batch's own sums.
+/// Largest-remainder apportionment of `total` indivisible units across
+/// `weights`: shares sum to exactly `total`, proportional to weight.
+/// Used to split a coalesced transport's micro-batch counts by member
+/// rows, so merging the members' counters reproduces the real count
+/// (naive per-member rounding would inflate it by up to the member
+/// count).
+fn apportion(total: u64, weights: &[usize]) -> Vec<u64> {
+    let sum: usize = weights.iter().sum();
+    if sum == 0 {
+        return vec![0; weights.len()];
+    }
+    let mut out = Vec::with_capacity(weights.len());
+    let mut rems = Vec::with_capacity(weights.len());
+    for (i, &w) in weights.iter().enumerate() {
+        let exact = total as f64 * w as f64 / sum as f64;
+        let base = exact.floor();
+        out.push(base as u64);
+        rems.push((i, exact - base));
+    }
+    let assigned: u64 = out.iter().sum();
+    let mut left = total.saturating_sub(assigned);
+    rems.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+    for (i, _) in rems {
+        if left == 0 {
+            break;
+        }
+        out[i] += 1;
+        left -= 1;
+    }
+    out
+}
+
+/// Fail every member of a transport: the lone member of an uncoalesced
+/// transport keeps the original error chain; coalesced members each get
+/// the flattened message under `context` (anyhow errors are not Clone).
+fn fail_members(mut members: Vec<Member>, error: anyhow::Error, context: &str) {
+    if members.len() == 1 {
+        let _ = members.pop().expect("one member").reply.send(Err(error));
+        return;
+    }
+    let msg = format!("{error:#}");
+    for m in members {
+        let _ = m.reply.send(Err(anyhow::anyhow!("{context}: {msg}")));
+    }
+}
+
+/// Slice a contiguous row range out of a `[rows, ...]` tensor.
+fn slice_rows(t: &Tensor, range: &std::ops::Range<usize>) -> Result<Tensor> {
+    anyhow::ensure!(
+        !t.shape.is_empty() && range.end <= t.shape[0] && range.start < range.end,
+        "member row range {range:?} outside transport output {:?}",
+        t.shape
+    );
+    let row_len: usize = t.shape.iter().skip(1).product();
+    let mut shape = t.shape.clone();
+    shape[0] = range.end - range.start;
+    Tensor::new(
+        shape,
+        t.data[range.start * row_len..range.end * row_len].to_vec(),
+    )
+}
+
+/// Assemble a completed transport's [`EngineRun`]s from its aggregates
+/// and send each member its rows. Timing is transport-local: `total_ms`
+/// runs from the transport's first admission to its last delivery,
+/// compute/comm are the transport's own sums. Coalesced members share
+/// the transport's timing and counters (they shared its micro-batches);
+/// their outputs are re-split by row range, so results stay
+/// batch-addressable and bit-identical to an uncoalesced run.
 fn finalize_batch(agg: BatchAgg) {
     let BatchAgg {
         outs,
@@ -676,42 +979,130 @@ fn finalize_batch(agg: BatchAgg) {
         final_comm_ms,
         counters,
         error,
-        reply,
+        mut members,
+        expected_rows,
         ..
     } = agg;
-    let result = match error {
-        Some(e) => Err(e),
-        None => (|| {
-            let collected: Vec<Tensor> = outs
-                .into_iter()
-                .map(|o| {
-                    o.ok_or_else(|| {
-                        anyhow::anyhow!("pipeline dropped a micro-batch")
-                    })
+    if let Some(e) = error {
+        // A failure anywhere in the transport fails every member batch
+        // (they shared micro-batches).
+        fail_members(members, e, "coalesced transport failed");
+        return;
+    }
+    let assembled = (|| {
+        let collected: Vec<Tensor> = outs
+            .into_iter()
+            .map(|o| {
+                o.ok_or_else(|| {
+                    anyhow::anyhow!("pipeline dropped a micro-batch")
                 })
-                .collect::<Result<_>>()?;
-            let output = concat_rows(&collected)?;
-            let compute_ms: f64 = counters.iter().map(|c| c.busy_ms).sum();
-            let stage_comm_ms: f64 = counters.iter().map(|c| c.comm_ms).sum();
-            let timing = PipelineTiming {
-                total_ms: last_deliver_ms - t0_ms,
-                compute_ms,
-                comm_ms: stage_comm_ms + final_comm_ms,
-                stages: counters
+            })
+            .collect::<Result<_>>()?;
+        let output = concat_rows(&collected)?;
+        let compute_ms: f64 = counters.iter().map(|c| c.busy_ms).sum();
+        let stage_comm_ms: f64 = counters.iter().map(|c| c.comm_ms).sum();
+        let timing = PipelineTiming {
+            total_ms: last_deliver_ms - t0_ms,
+            compute_ms,
+            comm_ms: stage_comm_ms + final_comm_ms,
+            stages: counters
+                .iter()
+                .map(|c| StageTiming {
+                    stage: c.stage,
+                    node: c.node,
+                    compute_ms: c.busy_ms,
+                    comm_ms: c.comm_ms,
+                })
+                .collect(),
+            activation_bytes: bytes,
+        };
+        Ok::<_, anyhow::Error>((output, timing))
+    })();
+    match assembled {
+        Ok((output, timing)) => {
+            let rows_as_fed = output.shape[0] == expected_rows;
+            // Whole-output delivery: a padding-free single member, or a
+            // row-count-changing stage chain (the trait never promised
+            // row preservation) where slicing would be meaningless — the
+            // lone waiter gets everything, as in the pre-coalescing
+            // engine.
+            if members.len() == 1
+                && (!rows_as_fed || members[0].rows.len() == output.shape[0])
+            {
+                let m = members.pop().expect("one member");
+                let _ = m.reply.send(Ok(EngineRun {
+                    output,
+                    timing,
+                    stage_counters: counters,
+                }));
+                return;
+            }
+            if !rows_as_fed {
+                // Coalesced members cannot be re-split out of an output
+                // whose rows no longer line up with what was fed: fail
+                // loudly rather than hand someone another batch's rows.
+                fail_members(
+                    members,
+                    anyhow::anyhow!(
+                        "stage chain changed the row count ({} fed, {} \
+                         delivered)",
+                        expected_rows,
+                        output.shape[0]
+                    ),
+                    "coalesced transport cannot be re-split",
+                );
+                return;
+            }
+            // Split each stage's micro-batch count across members by
+            // largest remainder, so merged member counters sum back to
+            // the transport's true counts. Fractions are over the
+            // members' real rows (padding overhead is shared
+            // proportionally too).
+            let weights: Vec<usize> =
+                members.iter().map(|m| m.rows.len()).collect();
+            let member_rows: usize = weights.iter().sum::<usize>().max(1);
+            let stage_shares: Vec<Vec<u64>> = counters
+                .iter()
+                .map(|c| apportion(c.micro_batches, &weights))
+                .collect();
+            let byte_shares = apportion(timing.activation_bytes, &weights);
+            for (mi, m) in members.into_iter().enumerate() {
+                // Members share the transport's latency (total_ms) but
+                // split its work proportionally by rows: charging every
+                // member the full transport compute/occupancy would
+                // multiply the scheduler's per-node execution history
+                // and the server's merged StageCounterSet by the member
+                // count.
+                let frac = m.rows.len() as f64 / member_rows as f64;
+                let mut t = timing.clone();
+                t.compute_ms *= frac;
+                t.comm_ms *= frac;
+                t.activation_bytes = byte_shares[mi];
+                for st in &mut t.stages {
+                    st.compute_ms *= frac;
+                    st.comm_ms *= frac;
+                }
+                let member_counters: Vec<StageCounter> = counters
                     .iter()
-                    .map(|c| StageTiming {
-                        stage: c.stage,
-                        node: c.node,
-                        compute_ms: c.busy_ms,
-                        comm_ms: c.comm_ms,
+                    .enumerate()
+                    .map(|(k, c)| StageCounter {
+                        busy_ms: c.busy_ms * frac,
+                        bubble_ms: c.bubble_ms * frac,
+                        comm_ms: c.comm_ms * frac,
+                        micro_batches: stage_shares[k][mi],
+                        ..c.clone()
                     })
-                    .collect(),
-                activation_bytes: bytes,
-            };
-            Ok(EngineRun { output, timing, stage_counters: counters })
-        })(),
-    };
-    let _ = reply.send(result);
+                    .collect();
+                let result = slice_rows(&output, &m.rows).map(|rows| EngineRun {
+                    output: rows,
+                    timing: t,
+                    stage_counters: member_counters,
+                });
+                let _ = m.reply.send(result);
+            }
+        }
+        Err(e) => fail_members(members, e, "transport assembly failed"),
+    }
 }
 
 /// Live depth bookkeeping shared between the controller (collector
@@ -756,22 +1147,42 @@ impl DepthStats {
     }
 }
 
-/// The adaptive depth controller, run inline on the collector thread.
+/// The adaptive window controller, run inline on the collector thread.
 /// Widening injects an extra credit (valued at the current makespan so
 /// the new slot's clock starts "now"); narrowing swallows the next
-/// returned credit. Without an [`AdaptiveDepthConfig`] it only relays
+/// returned credit of the shrunk window. Without an
+/// [`AdaptiveDepthConfig`] it only relays the last window's terminal
 /// credits — the fixed-window behaviour.
-struct DepthCtrl {
+///
+/// In **uniform** mode (`per_stage == false`) every stage budget moves
+/// together by one, reproducing the PR-2 global depth controller —
+/// except for the backlog veto below, which applies in both modes (the
+/// `Executor::queue_depth` second signal is new in this engine and
+/// intentionally stops a uniform controller from widening into a
+/// device-congested bottleneck). In **per-stage** mode each budget
+/// resizes independently:
+/// widening targets the smallest budget among the windows the feeder
+/// reported *starved* (falling back to the global minimum budget), and
+/// narrowing shrinks the largest budget — so a slow middle stage grows
+/// the windows that actually gate its supply instead of inflating the
+/// whole chain.
+struct WindowCtrl {
     cfg: Option<AdaptiveDepthConfig>,
-    swallow: usize,
+    per_stage: bool,
+    windows: Arc<CreditWindows>,
     cooldown: u32,
     clean_batches: u32,
     stats: Arc<DepthStats>,
 }
 
-impl DepthCtrl {
-    fn new(cfg: Option<AdaptiveDepthConfig>, stats: Arc<DepthStats>) -> DepthCtrl {
-        DepthCtrl { cfg, swallow: 0, cooldown: 0, clean_batches: 0, stats }
+impl WindowCtrl {
+    fn new(
+        cfg: Option<AdaptiveDepthConfig>,
+        per_stage: bool,
+        windows: Arc<CreditWindows>,
+        stats: Arc<DepthStats>,
+    ) -> WindowCtrl {
+        WindowCtrl { cfg, per_stage, windows, cooldown: 0, clean_batches: 0, stats }
     }
 
     /// Whether completed batches are worth observing at all.
@@ -779,23 +1190,48 @@ impl DepthCtrl {
         self.cfg.is_some()
     }
 
-    /// Return a window credit, unless a pending narrowing absorbs it.
-    fn credit(&mut self, credit_tx: &Sender<f64>, value: f64) {
-        if self.swallow > 0 {
-            self.swallow -= 1;
-            return;
+    /// Return the last window's credit at a terminal (delivery or
+    /// drained failure).
+    fn terminal_credit(&self, value: f64) {
+        let last = self.windows.n() - 1;
+        self.windows.give(last, value);
+    }
+
+    /// Record the delivery budget into the depth stats after a resize.
+    fn sync_stats(&self) {
+        self.stats.set_depth(self.windows.delivery_budget());
+    }
+
+    /// Pick the window to widen: among the starved windows (or all, if
+    /// the mask is empty) still below `max_depth`, the smallest budget —
+    /// ties broken toward the latest stage, whose window dominates the
+    /// admission clock.
+    fn widen_target(&self, starved: &[bool], max_depth: usize) -> Option<usize> {
+        let budgets = self.windows.budgets_snapshot();
+        let pick = |mask: bool| {
+            (0..budgets.len())
+                .filter(|&k| (!mask || starved[k]) && budgets[k] < max_depth)
+                .min_by_key(|&k| (budgets[k], std::cmp::Reverse(k)))
+        };
+        if starved.iter().any(|s| *s) {
+            pick(true).or_else(|| pick(false))
+        } else {
+            pick(false)
         }
-        let _ = credit_tx.send(value);
     }
 
     /// Per completed batch: widen while the bottleneck stage shows
     /// bubbles, narrow after consecutive bubble-free batches. Hysteresis
     /// plus a cooldown keeps the window within one step of the smallest
-    /// saturating depth.
-    fn observe_batch(
+    /// saturating depth. `Executor::queue_depth` backlog is the second
+    /// signal: when the bottleneck's node already has more queued work
+    /// than its window, its bubbles are device backlog, not credit
+    /// starvation, and widening is vetoed.
+    fn observe_batch<S: StageExec + ?Sized>(
         &mut self,
+        stages: &S,
         counters: &[StageCounter],
-        credit_tx: &Sender<f64>,
+        starved: &[bool],
         state: &Mutex<EngineState>,
     ) {
         let Some(cfg) = self.cfg else { return };
@@ -813,21 +1249,78 @@ impl DepthCtrl {
             return;
         }
         let frac = bottleneck.bubble_fraction();
-        let depth = self.stats.current.load(Ordering::SeqCst);
-        if frac > cfg.widen_bubble_frac && depth < cfg.max_depth {
-            let now = lock_state(state).cp.makespan_ms();
-            let _ = credit_tx.send(now);
-            self.stats.set_depth(depth + 1);
-            self.stats.widenings.fetch_add(1, Ordering::SeqCst);
-            self.cooldown = cfg.cooldown_batches;
-            self.clean_batches = 0;
-        } else if frac < cfg.narrow_bubble_frac && depth > cfg.min_depth {
+        let budgets = self.windows.budgets_snapshot();
+        let b = bottleneck.stage;
+        if frac > cfg.widen_bubble_frac {
+            if stages.backlog(b) > budgets[b] {
+                return; // device backlog, not credit starvation
+            }
+            let widened = if self.per_stage {
+                match self.widen_target(starved, cfg.max_depth) {
+                    Some(k) => {
+                        let now = lock_state(state).cp.makespan_ms();
+                        self.windows.widen(k, now);
+                        true
+                    }
+                    None => false,
+                }
+            } else if budgets.iter().any(|&b| b < cfg.max_depth) {
+                // Uniform mode: move the whole chain one step, but never
+                // push an individual window past the cap — a non-uniform
+                // seed (carried budgets) must stay within [min, max],
+                // and a window still below the cap must keep widening
+                // even after the widest one saturates.
+                let now = lock_state(state).cp.makespan_ms();
+                for k in 0..self.windows.n() {
+                    if budgets[k] < cfg.max_depth {
+                        self.windows.widen(k, now);
+                    }
+                }
+                true
+            } else {
+                false
+            };
+            if widened {
+                self.sync_stats();
+                self.stats.widenings.fetch_add(1, Ordering::SeqCst);
+                self.cooldown = cfg.cooldown_batches;
+                self.clean_batches = 0;
+            }
+        } else if frac < cfg.narrow_bubble_frac {
             self.clean_batches += 1;
             if self.clean_batches >= 2 {
-                self.swallow += 1;
-                self.stats.set_depth(depth - 1);
-                self.stats.narrowings.fetch_add(1, Ordering::SeqCst);
-                self.cooldown = cfg.cooldown_batches;
+                let narrowed = if self.per_stage {
+                    // Shrink the largest budget still above the floor;
+                    // ties toward the latest stage (undoing widen order).
+                    match (0..budgets.len())
+                        .filter(|&k| budgets[k] > cfg.min_depth)
+                        .max_by_key(|&k| (budgets[k], k))
+                    {
+                        Some(k) => {
+                            self.windows.narrow(k);
+                            true
+                        }
+                        None => false,
+                    }
+                } else if budgets.iter().any(|&b| b > cfg.min_depth) {
+                    // Per-window floor: narrowing a window already at
+                    // min_depth would drive its budget to 0 and starve
+                    // the feeder forever (a non-uniform seed can sit at
+                    // the floor while the delivery window is above it).
+                    for k in 0..self.windows.n() {
+                        if budgets[k] > cfg.min_depth {
+                            self.windows.narrow(k);
+                        }
+                    }
+                    true
+                } else {
+                    false
+                };
+                if narrowed {
+                    self.sync_stats();
+                    self.stats.narrowings.fetch_add(1, Ordering::SeqCst);
+                    self.cooldown = cfg.cooldown_batches;
+                }
                 self.clean_batches = 0;
             }
         } else {
@@ -896,15 +1389,21 @@ pub fn run_streamed<S: StageExec + ?Sized>(
     anyhow::ensure!(n_stages > 0, "engine needs >= 1 stage");
     anyhow::ensure!(cfg.max_in_flight > 0, "max_in_flight must be > 0");
     let chunks = split_rows(input, cfg.micro_batch_rows)?;
+    let rows = input.shape[0];
     let node_ids: Vec<usize> = (0..n_stages).map(|k| stages.node_id(k)).collect();
 
     let (reply_tx, reply_rx) = channel::<Result<EngineRun>>();
     let state = Mutex::new(EngineState::new(&node_ids));
-    lock_state(&state).register(0, chunks.len(), reply_tx);
+    lock_state(&state).register(
+        0,
+        chunks.len(),
+        vec![Member { rows: 0..rows, reply: reply_tx }],
+        rows,
+    );
 
     // Channel k feeds stage k; channel n_stages is the collector. The
-    // global in-flight limit is the credit window below; the bounded
-    // queues add per-stage back-pressure so a stalled stage blocks its
+    // in-flight limit is the credit windows below; the bounded queues
+    // add per-stage back-pressure so a stalled stage blocks its
     // upstream driver instead of buffering unboundedly.
     let mut senders = Vec::with_capacity(n_stages + 1);
     let mut receivers = Vec::with_capacity(n_stages + 1);
@@ -917,16 +1416,13 @@ pub fn run_streamed<S: StageExec + ?Sized>(
     let mut receivers = receivers.into_iter();
     let feed_tx = senders.next().expect("feeder sender");
 
-    // Credit-based admission window: the feeder spends one credit per
-    // admitted micro-batch; the collector returns a credit (carrying the
-    // simulated time the slot freed) per delivery. This is what makes
-    // `max_in_flight` real in *both* clocks — the feeder's wall-clock
-    // wait and the admitted micro-batch's simulated start time. A
-    // window of 1 degenerates to the serial schedule.
-    let (credit_tx, credit_rx) = channel::<f64>();
-    for _ in 0..cfg.max_in_flight {
-        let _ = credit_tx.send(0.0);
-    }
+    // Credit-based admission: uniform per-stage windows of
+    // `max_in_flight` each, which is exactly the single global window
+    // (see CreditWindows). A window of 1 degenerates to the serial
+    // schedule.
+    let (windows, credit_rxs) =
+        CreditWindows::new(&vec![cfg.max_in_flight; n_stages]);
+    let windows = Arc::new(windows);
 
     std::thread::scope(|scope| {
         // One driver thread per stage.
@@ -934,23 +1430,28 @@ pub fn run_streamed<S: StageExec + ?Sized>(
             let rx: Receiver<PFlow> = receivers.next().expect("stage receiver");
             let tx: SyncSender<PFlow> = senders.next().expect("stage sender");
             let state = &state;
-            scope.spawn(move || drive_stage(stages, k, rx, tx, state));
+            let windows = Arc::clone(&windows);
+            scope.spawn(move || drive_stage(stages, k, rx, tx, state, &windows));
         }
 
         // Feeder: micro-batches are admitted as window credits free up.
         {
             let state = &state;
             scope.spawn(move || {
-                feed_batch(0, chunks, &credit_rx, &feed_tx, state);
+                feed_batch(0, chunks, &credit_rxs, &feed_tx, state);
             });
         }
 
         // Collector runs inline; it exits when the last driver drops its
         // sender (after the feeder finished and the queues drained).
         let collect_rx = receivers.next().expect("collector receiver");
-        let mut ctrl =
-            DepthCtrl::new(None, Arc::new(DepthStats::new(cfg.max_in_flight)));
-        collect_loop(stages, collect_rx, credit_tx, &state, &mut ctrl);
+        let mut ctrl = WindowCtrl::new(
+            None,
+            false,
+            Arc::clone(&windows),
+            Arc::new(DepthStats::new(cfg.max_in_flight)),
+        );
+        collect_loop(stages, collect_rx, &state, &mut ctrl);
     });
 
     match reply_rx.try_recv() {
@@ -1003,10 +1504,25 @@ pub struct PersistentEngineConfig {
     /// Rows per micro-batch (the compiled artifact batch for real
     /// deployments).
     pub micro_batch_rows: usize,
-    /// Starting credit window (micro-batches in flight across *all*
-    /// batches at once).
+    /// Starting credit budget per stage window (micro-batches admitted
+    /// but not yet past that stage, across *all* batches at once).
+    /// Uniform budgets are exactly the PR-2 global window.
     pub initial_depth: usize,
-    /// Enable the adaptive depth controller.
+    /// Explicit starting budgets, one per stage (e.g. carried from a
+    /// previous engine across a rebalance, or shaped from a measured
+    /// profile via [`budgets_from_profile`]). `None` seeds every window
+    /// at `initial_depth`.
+    pub stage_budgets: Option<Vec<usize>>,
+    /// Let the adaptive controller resize stage budgets independently
+    /// (per-stage windows) instead of moving them in lockstep (the PR-2
+    /// global behaviour).
+    pub per_stage: bool,
+    /// Feeder-side batch coalescing: merge adjacent small submissions
+    /// into shared micro-batches when that reduces the micro-batch
+    /// count (short tails pack together); members are re-split by row
+    /// range at delivery.
+    pub coalesce: bool,
+    /// Enable the adaptive window controller.
     pub adaptive: Option<AdaptiveDepthConfig>,
 }
 
@@ -1015,6 +1531,9 @@ impl Default for PersistentEngineConfig {
         PersistentEngineConfig {
             micro_batch_rows: 1,
             initial_depth: 4,
+            stage_budgets: None,
+            per_stage: false,
+            coalesce: false,
             adaptive: None,
         }
     }
@@ -1023,9 +1542,15 @@ impl Default for PersistentEngineConfig {
 impl PersistentEngineConfig {
     /// Queue bound: the widest window the controller may reach.
     fn depth_cap(&self) -> usize {
+        let seeded = self
+            .stage_budgets
+            .as_ref()
+            .and_then(|b| b.iter().copied().max())
+            .unwrap_or(0)
+            .max(self.initial_depth);
         match &self.adaptive {
-            Some(a) => a.max_depth.max(self.initial_depth),
-            None => self.initial_depth,
+            Some(a) => a.max_depth.max(seeded),
+            None => seeded,
         }
     }
 }
@@ -1059,22 +1584,264 @@ impl BatchHandle {
     }
 }
 
+/// One batch handed to the feeder thread: the waiter's reply sender and
+/// the raw rows (chunking happens feeder-side so adjacent submissions
+/// can coalesce into shared micro-batches).
+struct SubmitMsg {
+    reply: Sender<Result<EngineRun>>,
+    tensor: Tensor,
+}
+
+/// Feeder-side coalescing counters (see
+/// [`crate::metrics::CoalesceStats`]).
+#[derive(Default)]
+struct CoalesceCounters {
+    transports: AtomicU64,
+    coalesced_transports: AtomicU64,
+    member_batches: AtomicU64,
+    saved_micro_batches: AtomicU64,
+}
+
+/// Most member batches one transport may carry: bounds the blast radius
+/// of a failure inside a coalesced transport (every member shares its
+/// fate) and the per-delivery reassembly work.
+const MAX_COALESCE_MEMBERS: usize = 8;
+
+/// Micro-batches needed for `rows` rows at `micro` rows per chunk.
+fn chunks_for(rows: usize, micro: usize) -> usize {
+    rows.div_ceil(micro)
+}
+
+/// Map learned per-stage budgets onto a chain with a different stage
+/// count (an engine-aware rebalance after a topology change): nearest
+/// rank sampling with pinned endpoints — the first budget (admission
+/// pacing) and the last (delivery window) always carry over verbatim
+/// (when `n_new == 1` the delivery budget wins), and monotone sources
+/// stay monotone.
+pub fn carry_stage_budgets(old: &[usize], n_new: usize) -> Vec<usize> {
+    assert!(!old.is_empty() && n_new > 0, "carry needs non-empty budgets");
+    (0..n_new)
+        .map(|i| {
+            let j = if i == 0 && n_new > 1 {
+                0
+            } else {
+                ((i + 1) * old.len() / n_new)
+                    .saturating_sub(1)
+                    .min(old.len() - 1)
+            };
+            old[j].max(1)
+        })
+        .collect()
+}
+
+/// Shape `total_credits` credits into per-stage budgets from a measured
+/// per-stage latency profile (compute + ingress comm, e.g. a probe
+/// run's [`StageCounter`]s). Each stage's budget is proportional to the
+/// *cumulative* latency through it — the in-flight count needed to keep
+/// a stage fed scales with the admission-to-that-stage delay — so fast
+/// early stages get small windows and the delivery window absorbs the
+/// rest. Result is non-decreasing, every budget >= 1, and sums to
+/// `max(total_credits, stages)`.
+pub fn budgets_from_profile(
+    stage_latency_ms: &[f64],
+    total_credits: usize,
+) -> Vec<usize> {
+    let s = stage_latency_ms.len();
+    assert!(s > 0, "profile needs >= 1 stage");
+    let mut cum = Vec::with_capacity(s);
+    let mut acc = 0.0f64;
+    for &ms in stage_latency_ms {
+        acc += ms.max(1e-9);
+        cum.push(acc);
+    }
+    let sum_cum: f64 = cum.iter().sum();
+    let target = total_credits.max(s);
+    let mut w: Vec<usize> = cum
+        .iter()
+        .map(|c| ((target as f64 * c / sum_cum).round() as usize).max(1))
+        .collect();
+    for k in 1..s {
+        w[k] = w[k].max(w[k - 1]);
+    }
+    // Fix the rounded sum up/down to the target without breaking
+    // monotonicity: trim the earliest shrinkable budget, grow the
+    // delivery window.
+    loop {
+        let sum: usize = w.iter().sum();
+        if sum > target {
+            let Some(k) = (0..s)
+                .find(|&k| w[k] > 1 && (k == 0 || w[k] > w[k - 1]))
+            else {
+                break;
+            };
+            w[k] -= 1;
+        } else if sum < target {
+            w[s - 1] += target - sum;
+        } else {
+            break;
+        }
+    }
+    w
+}
+
+/// Persistent feeder loop: pop submissions, optionally coalesce
+/// adjacent small ones into a single transport (only when merging
+/// strictly reduces the micro-batch count — short tails packing
+/// together — and tails are shape-compatible), register the transport,
+/// and feed its micro-batches through the credit windows. A submission
+/// that arrives while the previous one is still acquiring credits
+/// queues up and becomes a coalescing candidate, which is exactly the
+/// "window under-filled" condition: saturated pipelines back-pressure
+/// the feeder and small miss-sets pile up behind it.
+fn feeder_loop(
+    submit_rx: Receiver<SubmitMsg>,
+    feed_tx: SyncSender<PFlow>,
+    credit_rxs: Vec<Receiver<f64>>,
+    state: Arc<Mutex<EngineState>>,
+    micro: usize,
+    coalesce: bool,
+    counters: Arc<CoalesceCounters>,
+) {
+    let mut next_id: u64 = 0;
+    let mut pending: Option<SubmitMsg> = None;
+    loop {
+        let first = match pending.take() {
+            Some(s) => s,
+            None => match submit_rx.recv() {
+                Ok(s) => s,
+                Err(_) => break, // all submit senders dropped
+            },
+        };
+        let mut group = vec![first];
+        if coalesce {
+            while group.len() < MAX_COALESCE_MEMBERS {
+                match submit_rx.try_recv() {
+                    Ok(next) => {
+                        let cur_rows: usize =
+                            group.iter().map(|s| s.tensor.shape[0]).sum();
+                        let nrows = next.tensor.shape[0];
+                        let tail_ok = next.tensor.shape[1..]
+                            == group[0].tensor.shape[1..];
+                        let saves = chunks_for(cur_rows, micro)
+                            + chunks_for(nrows, micro)
+                            > chunks_for(cur_rows + nrows, micro);
+                        if tail_ok && saves {
+                            group.push(next);
+                        } else {
+                            pending = Some(next);
+                            break;
+                        }
+                    }
+                    Err(_) => break, // nothing immediately available
+                }
+            }
+        }
+
+        let id = next_id;
+        next_id += 1;
+        let n_members = group.len();
+        let mut replies = Vec::with_capacity(n_members);
+        let mut tensors = Vec::with_capacity(n_members);
+        for s in group {
+            replies.push(s.reply);
+            tensors.push(s.tensor);
+        }
+        let row_counts: Vec<usize> =
+            tensors.iter().map(|t| t.shape[0]).collect();
+        let chunks = if tensors.len() == 1 {
+            Ok(tensors.pop().expect("one tensor"))
+        } else {
+            concat_rows(&tensors)
+        }
+        .and_then(|merged| {
+            // Under coalescing, zero-pad the merged tail up to a whole
+            // micro-batch: the serving path submits exact-row miss sets
+            // (`padded_rows` stops rounding), but real deployments run
+            // executables compiled for exactly `micro` rows, so every
+            // chunk must be full-size. Members only ever cover their
+            // real row ranges, so the padding rows are dropped at
+            // reassembly. Without coalescing the tail is fed exactly as
+            // submitted — identical to `run_streamed` and the PR-2
+            // engine (callers pad to the compiled batch themselves).
+            let rows = merged.shape[0];
+            let padded =
+                if coalesce { chunks_for(rows, micro) * micro } else { rows };
+            let merged = if padded == rows {
+                merged
+            } else {
+                let row_len: usize = merged.shape.iter().skip(1).product();
+                let mut shape = merged.shape.clone();
+                shape[0] = padded;
+                let mut data = merged.data;
+                data.resize(padded * row_len, 0.0);
+                Tensor::new(shape, data)?
+            };
+            Ok((padded, split_rows(&merged, micro)?))
+        });
+        let (padded_rows, chunks) = match chunks {
+            Ok(c) => c,
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for r in replies {
+                    let _ = r.send(Err(anyhow::anyhow!(
+                        "transport formation failed: {msg}"
+                    )));
+                }
+                continue;
+            }
+        };
+
+        counters.transports.fetch_add(1, Ordering::Relaxed);
+        counters
+            .member_batches
+            .fetch_add(n_members as u64, Ordering::Relaxed);
+        if n_members > 1 {
+            counters.coalesced_transports.fetch_add(1, Ordering::Relaxed);
+            let separate: usize =
+                row_counts.iter().map(|&r| chunks_for(r, micro)).sum();
+            counters
+                .saved_micro_batches
+                .fetch_add((separate - chunks.len()) as u64, Ordering::Relaxed);
+        }
+
+        let mut members = Vec::with_capacity(n_members);
+        let mut start = 0;
+        for (reply, rows) in replies.into_iter().zip(row_counts) {
+            members.push(Member { rows: start..start + rows, reply });
+            start += rows;
+        }
+        lock_state(&state).register(id, chunks.len(), members, padded_rows);
+        if !feed_batch(id, chunks, &credit_rxs, &feed_tx, &state) {
+            // The pipeline died under us (panic-driven cascade): fail
+            // this transport and every submission still reaching the
+            // queue so no waiter hangs on a reply that will never come
+            // (dropping a SubmitMsg drops its reply sender). The loop
+            // ends only when all submit senders drop.
+            lock_state(&state).batches.remove(&id);
+            while submit_rx.recv().is_ok() {}
+            break;
+        }
+    }
+}
+
 /// Long-lived streaming engine: per-stage driver threads, a feeder, and
 /// a collector that all survive across batches, fed through
 /// [`PersistentEngine::submit`]. Successive batches stream back-to-back
 /// through the same bounded queues — no inter-batch drain, no thread
 /// churn — while the shared [`CriticalPath`] keeps device-honest
-/// simulated accounting across batch boundaries. Dropping the engine
-/// drains in-flight batches (their [`BatchHandle`]s still complete) and
-/// joins every thread.
+/// simulated accounting across batch boundaries. Admission flows
+/// through per-stage credit windows ([`CreditWindows`]); the feeder may
+/// coalesce adjacent small submissions into shared micro-batches when
+/// enabled. Dropping the engine drains in-flight batches (their
+/// [`BatchHandle`]s still complete) and joins every thread.
 pub struct PersistentEngine {
-    submit_tx: Option<SyncSender<(u64, Vec<Tensor>)>>,
+    submit_tx: Option<SyncSender<SubmitMsg>>,
     state: Arc<Mutex<EngineState>>,
     threads: Vec<std::thread::JoinHandle<()>>,
-    next_batch: AtomicU64,
-    micro_batch_rows: usize,
     node_ids: Vec<usize>,
     depth_stats: Arc<DepthStats>,
+    windows: Arc<CreditWindows>,
+    coalesce: Arc<CoalesceCounters>,
 }
 
 impl PersistentEngine {
@@ -1124,10 +1891,37 @@ impl PersistentEngine {
                 a.narrow_bubble_frac
             );
         }
+        if let Some(budgets) = &cfg.stage_budgets {
+            anyhow::ensure!(
+                budgets.len() == n_stages,
+                "stage_budgets has {} entries for {} stages",
+                budgets.len(),
+                n_stages
+            );
+            anyhow::ensure!(
+                budgets.iter().all(|&b| b >= 1),
+                "every stage budget must be >= 1 (got {budgets:?})"
+            );
+            if let Some(a) = &cfg.adaptive {
+                anyhow::ensure!(
+                    budgets
+                        .iter()
+                        .all(|b| (a.min_depth..=a.max_depth).contains(b)),
+                    "stage budgets {budgets:?} outside adaptive range \
+                     [{}, {}]",
+                    a.min_depth,
+                    a.max_depth
+                );
+            }
+        }
         let node_ids: Vec<usize> =
             (0..n_stages).map(|k| stages.node_id(k)).collect();
         let state = Arc::new(Mutex::new(EngineState::new(&node_ids)));
         let cap = cfg.depth_cap();
+        let seed_budgets = cfg
+            .stage_budgets
+            .clone()
+            .unwrap_or_else(|| vec![cfg.initial_depth; n_stages]);
 
         let mut senders = Vec::with_capacity(n_stages + 1);
         let mut receivers = Vec::with_capacity(n_stages + 1);
@@ -1140,11 +1934,11 @@ impl PersistentEngine {
         let mut receivers = receivers.into_iter();
         let feed_tx = senders.next().expect("feeder sender");
 
-        let (credit_tx, credit_rx) = channel::<f64>();
-        for _ in 0..cfg.initial_depth {
-            let _ = credit_tx.send(0.0);
-        }
-        let depth_stats = Arc::new(DepthStats::new(cfg.initial_depth));
+        let (windows, credit_rxs) = CreditWindows::new(&seed_budgets);
+        let windows = Arc::new(windows);
+        let depth_stats =
+            Arc::new(DepthStats::new(*seed_budgets.last().expect("stages")));
+        let coalesce_counters = Arc::new(CoalesceCounters::default());
 
         let mut threads = Vec::with_capacity(n_stages + 2);
         for k in 0..n_stages {
@@ -1152,10 +1946,13 @@ impl PersistentEngine {
             let tx = senders.next().expect("stage sender");
             let stages = Arc::clone(&stages);
             let state = Arc::clone(&state);
+            let windows = Arc::clone(&windows);
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("pipe-stage-{k}"))
-                    .spawn(move || drive_stage(&*stages, k, rx, tx, &state))
+                    .spawn(move || {
+                        drive_stage(&*stages, k, rx, tx, &state, &windows)
+                    })
                     .context("spawning stage driver")?,
             );
         }
@@ -1164,40 +1961,34 @@ impl PersistentEngine {
             let stages = Arc::clone(&stages);
             let state = Arc::clone(&state);
             let stats = Arc::clone(&depth_stats);
+            let windows = Arc::clone(&windows);
             let adaptive = cfg.adaptive;
+            let per_stage = cfg.per_stage;
             threads.push(
                 std::thread::Builder::new()
                     .name("pipe-collect".into())
                     .spawn(move || {
-                        let mut ctrl = DepthCtrl::new(adaptive, stats);
-                        collect_loop(&*stages, collect_rx, credit_tx, &state, &mut ctrl);
+                        let mut ctrl =
+                            WindowCtrl::new(adaptive, per_stage, windows, stats);
+                        collect_loop(&*stages, collect_rx, &state, &mut ctrl);
                     })
                     .context("spawning collector")?,
             );
         }
-        let (submit_tx, submit_rx) =
-            sync_channel::<(u64, Vec<Tensor>)>(cap.max(4));
+        let (submit_tx, submit_rx) = sync_channel::<SubmitMsg>(cap.max(4));
         {
             let state = Arc::clone(&state);
+            let counters = Arc::clone(&coalesce_counters);
+            let micro = cfg.micro_batch_rows;
+            let coalesce = cfg.coalesce;
             threads.push(
                 std::thread::Builder::new()
                     .name("pipe-feed".into())
                     .spawn(move || {
-                        while let Ok((id, chunks)) = submit_rx.recv() {
-                            if !feed_batch(id, chunks, &credit_rx, &feed_tx, &state) {
-                                // The pipeline died under us (panic-driven
-                                // cascade): fail this batch and every
-                                // submission still reaching the queue so
-                                // no waiter hangs on a reply that will
-                                // never come. The loop ends only when all
-                                // submit senders drop.
-                                lock_state(&state).batches.remove(&id);
-                                while let Ok((id, _)) = submit_rx.recv() {
-                                    lock_state(&state).batches.remove(&id);
-                                }
-                                break;
-                            }
-                        }
+                        feeder_loop(
+                            submit_rx, feed_tx, credit_rxs, state, micro,
+                            coalesce, counters,
+                        );
                         // Dropping feed_tx cascades shutdown through the
                         // stage drivers to the collector.
                     })
@@ -1209,10 +2000,10 @@ impl PersistentEngine {
             submit_tx: Some(submit_tx),
             state,
             threads,
-            next_batch: AtomicU64::new(0),
-            micro_batch_rows: cfg.micro_batch_rows,
             node_ids,
             depth_stats,
+            windows,
+            coalesce: coalesce_counters,
         })
     }
 
@@ -1223,13 +2014,19 @@ impl PersistentEngine {
     /// timing. Blocks only on submission-queue back-pressure, never on
     /// the batch's execution.
     pub fn submit(&self, input: &Tensor) -> Result<BatchHandle> {
-        let chunks = split_rows(input, self.micro_batch_rows)?;
-        let id = self.next_batch.fetch_add(1, Ordering::SeqCst);
+        self.submit_owned(input.clone())
+    }
+
+    /// By-value submission: avoids the defensive row copy when the
+    /// caller already owns the batch (the router's streaming path hands
+    /// its stacked miss-set straight through).
+    pub fn submit_owned(&self, input: Tensor) -> Result<BatchHandle> {
+        anyhow::ensure!(!input.shape.is_empty(), "cannot submit a scalar tensor");
+        anyhow::ensure!(input.shape[0] > 0, "empty batch");
         let (reply_tx, reply_rx) = channel::<Result<EngineRun>>();
-        lock_state(&self.state).register(id, chunks.len(), reply_tx);
         let submit_tx = self.submit_tx.as_ref().expect("engine running");
-        if submit_tx.send((id, chunks)).is_err() {
-            lock_state(&self.state).batches.remove(&id);
+        let msg = SubmitMsg { reply: reply_tx, tensor: input };
+        if submit_tx.send(msg).is_err() {
             anyhow::bail!("persistent engine is shut down");
         }
         Ok(BatchHandle { rx: reply_rx })
@@ -1253,10 +2050,34 @@ impl PersistentEngine {
         &self.node_ids
     }
 
-    /// The credit window right now (== the configured depth unless the
-    /// adaptive controller moved it).
+    /// The delivery window right now (== the configured depth unless
+    /// the adaptive controller moved it; with uniform budgets this is
+    /// exactly the PR-2 global credit window).
     pub fn current_depth(&self) -> usize {
         self.depth_stats.current.load(Ordering::SeqCst)
+    }
+
+    /// Live per-stage credit budgets — the learned window shape a
+    /// rebalance carries into the rebuilt engine (see
+    /// [`carry_stage_budgets`]).
+    pub fn stage_budgets(&self) -> Vec<usize> {
+        self.windows.budgets_snapshot()
+    }
+
+    /// Feeder-side coalescing counters since startup.
+    pub fn coalesce_stats(&self) -> crate::metrics::CoalesceStats {
+        crate::metrics::CoalesceStats {
+            transports: self.coalesce.transports.load(Ordering::Relaxed),
+            coalesced_transports: self
+                .coalesce
+                .coalesced_transports
+                .load(Ordering::Relaxed),
+            member_batches: self.coalesce.member_batches.load(Ordering::Relaxed),
+            saved_micro_batches: self
+                .coalesce
+                .saved_micro_batches
+                .load(Ordering::Relaxed),
+        }
     }
 
     /// The adaptive controller's trajectory so far.
@@ -1459,6 +2280,7 @@ mod tests {
             micro_batch_rows: 1,
             initial_depth: 4,
             adaptive: None,
+            ..Default::default()
         };
         let engine = PersistentEngine::new(Arc::clone(&stages), cfg).unwrap();
         let batches: Vec<Tensor> =
@@ -1505,6 +2327,7 @@ mod tests {
                 micro_batch_rows: 1,
                 initial_depth: 3,
                 adaptive: None,
+                ..Default::default()
             },
         )
         .unwrap();
@@ -1556,6 +2379,7 @@ mod tests {
                 micro_batch_rows: 1,
                 initial_depth: 2,
                 adaptive: None,
+                ..Default::default()
             },
         )
         .unwrap();
@@ -1596,6 +2420,7 @@ mod tests {
                 micro_batch_rows: 1,
                 initial_depth: 8,
                 adaptive: None,
+                ..Default::default()
             },
         )
         .unwrap();
@@ -1634,6 +2459,7 @@ mod tests {
                     max_depth: 6,
                     ..AdaptiveDepthConfig::default()
                 }),
+                ..Default::default()
             },
         )
         .unwrap();
@@ -1673,6 +2499,7 @@ mod tests {
                     max_depth: 8,
                     ..AdaptiveDepthConfig::default()
                 }),
+                ..Default::default()
             },
         )
         .unwrap();
@@ -1705,6 +2532,7 @@ mod tests {
                     max_depth: 6,
                     ..AdaptiveDepthConfig::default()
                 }),
+                ..Default::default()
             },
         )
         .unwrap();
@@ -1740,6 +2568,7 @@ mod tests {
                     max_depth: 6,
                     ..AdaptiveDepthConfig::default()
                 }),
+                ..Default::default()
             },
         )
         .unwrap();
@@ -1763,7 +2592,8 @@ mod tests {
             PersistentEngineConfig {
                 micro_batch_rows: 0,
                 initial_depth: 1,
-                adaptive: None
+                adaptive: None,
+                ..Default::default()
             },
         )
         .is_err());
@@ -1772,7 +2602,8 @@ mod tests {
             PersistentEngineConfig {
                 micro_batch_rows: 1,
                 initial_depth: 0,
-                adaptive: None
+                adaptive: None,
+                ..Default::default()
             },
         )
         .is_err());
@@ -1786,6 +2617,7 @@ mod tests {
                     max_depth: 8,
                     ..AdaptiveDepthConfig::default()
                 }),
+                ..Default::default()
             },
         )
         .is_err());
@@ -1800,6 +2632,7 @@ mod tests {
                     narrow_bubble_frac: 0.20,
                     ..AdaptiveDepthConfig::default()
                 }),
+                ..Default::default()
             },
         )
         .is_err());
@@ -1812,8 +2645,118 @@ mod tests {
                     widen_bubble_frac: f64::NAN,
                     ..AdaptiveDepthConfig::default()
                 }),
+                ..Default::default()
             },
         )
         .is_err());
+        // Stage budgets must match the stage count, be >= 1, and sit
+        // inside the adaptive range.
+        assert!(PersistentEngine::new(
+            stages(),
+            PersistentEngineConfig {
+                micro_batch_rows: 1,
+                initial_depth: 1,
+                stage_budgets: Some(vec![1, 2]),
+                ..Default::default()
+            },
+        )
+        .is_err());
+        assert!(PersistentEngine::new(
+            stages(),
+            PersistentEngineConfig {
+                micro_batch_rows: 1,
+                initial_depth: 1,
+                stage_budgets: Some(vec![0]),
+                ..Default::default()
+            },
+        )
+        .is_err());
+        assert!(PersistentEngine::new(
+            stages(),
+            PersistentEngineConfig {
+                micro_batch_rows: 1,
+                initial_depth: 1,
+                stage_budgets: Some(vec![9]),
+                adaptive: Some(AdaptiveDepthConfig {
+                    max_depth: 8,
+                    ..AdaptiveDepthConfig::default()
+                }),
+                ..Default::default()
+            },
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn chunks_for_rounds_up() {
+        assert_eq!(chunks_for(1, 4), 1);
+        assert_eq!(chunks_for(4, 4), 1);
+        assert_eq!(chunks_for(5, 4), 2);
+        assert_eq!(chunks_for(8, 4), 2);
+        assert_eq!(chunks_for(0, 4), 0);
+    }
+
+    #[test]
+    fn credit_windows_narrow_swallows_and_widen_cancels() {
+        let (w, rxs) = CreditWindows::new(&[2, 1]);
+        // Seeded credits are immediately available.
+        assert!(rxs[0].try_recv().is_ok());
+        assert!(rxs[0].try_recv().is_ok());
+        assert!(rxs[0].try_recv().is_err());
+        // Narrow: the next returned credit is absorbed, the one after
+        // flows through.
+        w.narrow(0);
+        assert_eq!(w.budgets_snapshot(), vec![1, 1]);
+        w.give(0, 7.0);
+        assert!(rxs[0].try_recv().is_err(), "swallowed credit leaked");
+        w.give(0, 9.0);
+        assert_eq!(rxs[0].try_recv().unwrap(), 9.0);
+        // Widen cancels a pending narrow instead of double-counting.
+        w.narrow(1);
+        w.widen(1, 3.0);
+        assert_eq!(w.budgets_snapshot(), vec![1, 1]);
+        assert!(rxs[1].try_recv().is_ok(), "seed credit");
+        w.give(1, 5.0);
+        assert_eq!(
+            rxs[1].try_recv().unwrap(),
+            5.0,
+            "cancelled narrow must not swallow the returned credit"
+        );
+        assert_eq!(w.delivery_budget(), 1);
+    }
+
+    #[test]
+    fn slice_rows_extracts_member_ranges() {
+        let t = input(4, 3);
+        let head = slice_rows(&t, &(0..2)).unwrap();
+        let tail = slice_rows(&t, &(2..4)).unwrap();
+        assert_eq!(head.shape, vec![2, 3]);
+        assert_eq!(concat_rows(&[head, tail]).unwrap(), t);
+        assert!(slice_rows(&t, &(2..5)).is_err());
+        assert!(slice_rows(&t, &(2..2)).is_err());
+    }
+
+    #[test]
+    fn apportion_sums_to_total_and_tracks_weights() {
+        assert_eq!(apportion(1, &[2, 2]).iter().sum::<u64>(), 1);
+        assert_eq!(apportion(8, &[1, 3]), vec![2, 6]);
+        assert_eq!(apportion(3, &[1, 1, 1, 1]).iter().sum::<u64>(), 3);
+        assert_eq!(apportion(5, &[0, 0]), vec![0, 0]);
+        assert_eq!(apportion(0, &[4, 4]), vec![0, 0]);
+    }
+
+    #[test]
+    fn carry_and_profile_helpers_hold_invariants() {
+        assert_eq!(carry_stage_budgets(&[2, 3, 5], 3), vec![2, 3, 5]);
+        assert_eq!(*carry_stage_budgets(&[2, 3, 5], 7).last().unwrap(), 5);
+        assert_eq!(carry_stage_budgets(&[4], 2), vec![4, 4]);
+        // Endpoints survive aggressive shrinks: the learned admission
+        // pacing (first) and delivery window (last) both carry.
+        assert_eq!(carry_stage_budgets(&[1, 8, 8, 8], 2), vec![1, 8]);
+        assert_eq!(carry_stage_budgets(&[1, 2, 8, 8], 1), vec![8]);
+        let w = budgets_from_profile(&[1.0, 1.0, 1.0, 1.0, 4.0], 10);
+        assert_eq!(w.iter().sum::<usize>(), 10);
+        assert!(w.windows(2).all(|p| p[0] <= p[1]), "{w:?}");
+        assert!(*w.last().unwrap() >= 3, "delivery window too shallow: {w:?}");
     }
 }

@@ -91,7 +91,11 @@ pub struct StepDetail {
 /// engine. One instance accounts one traversal (any number of
 /// micro-batches); stage drivers feed it in FIFO per-stage order, which
 /// makes the accounting deterministic regardless of thread scheduling
-/// when every stage has its own node. Stages that *share* a node (the
+/// when every stage has its own node. Admission gating lives one layer
+/// up: the engine's credit windows time-stamp each admitted micro-batch
+/// with the simulated instant its window slots freed (the max across
+/// per-stage windows), and that value arrives here as stage 0's
+/// `ready_in_ms` — the clock itself is window-agnostic. Stages that *share* a node (the
 /// deployer's overcommit fallback when partitions outnumber nodes) are
 /// additionally serialized on that node's clock — a single device
 /// cannot overlap two stages — so the makespan never fabricates

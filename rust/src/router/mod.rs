@@ -8,14 +8,20 @@
 //! flight at once.
 //!
 //! Streaming services (the `DistributedService` with `pipeline_depth >
-//! 1` or adaptive depth) override [`InferenceService::submit_batch`] to
-//! feed their **persistent** `pipeline::engine` directly: the worker's
-//! submission enqueues the super-batch's micro-batches behind whatever
-//! is already flowing — successive router batches stream back-to-back
-//! through the same long-lived stage drivers with no inter-batch drain
-//! — and the worker then blocks only on that batch's own completion.
-//! Services without a streaming path fall back to a synchronous
-//! [`InferenceService::infer_batch`] on the worker.
+//! 1`, adaptive depth, per-stage windows, or coalescing) override
+//! [`InferenceService::submit_batch`] to feed their **persistent**
+//! `pipeline::engine` directly: the worker's submission enqueues the
+//! super-batch's micro-batches behind whatever is already flowing —
+//! successive router batches stream back-to-back through the same
+//! long-lived stage drivers with no inter-batch drain — and the worker
+//! then blocks only on that batch's own completion. With coalescing the
+//! engine's feeder may merge adjacent small miss-sets (each still its
+//! own `submit_batch` call, padded to exact rows via
+//! [`InferenceService::padded_rows`]) into shared micro-batches; every
+//! worker still gets exactly its own batch's rows back, so the router
+//! needs no awareness of the merge. Services without a streaming path
+//! fall back to a synchronous [`InferenceService::infer_batch`] on the
+//! worker.
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
 use std::sync::Arc;

@@ -43,6 +43,13 @@ pub struct DistributedService {
     /// serial); the adaptive controller may move the live window.
     pipeline_depth: usize,
     adaptive: Option<engine::AdaptiveDepthConfig>,
+    /// Per-stage credit windows: the adaptive controller resizes each
+    /// stage's budget independently, and rebalance carries learned
+    /// budgets into the rebuilt engine.
+    per_stage_windows: bool,
+    /// Feeder-side batch coalescing (also relaxes miss padding to exact
+    /// rows — short tails merge in the engine instead of being padded).
+    coalesce: bool,
     /// The long-lived streaming engine (None = serial schedule). Rebuilt
     /// on deployment swaps; the old engine drains before teardown.
     engine: Mutex<Option<Arc<engine::PersistentEngine>>>,
@@ -51,24 +58,73 @@ pub struct DistributedService {
     stage_counters: Arc<crate::metrics::StageCounterSet>,
 }
 
+/// What a previous engine learned, for an engine-aware rebalance: the
+/// live delivery depth plus the per-stage budget shape.
+struct LearnedWindows {
+    depth: usize,
+    stage_budgets: Vec<usize>,
+}
+
 impl DistributedService {
     pub fn deployment_nodes(&self) -> Vec<usize> {
         self.deployment.read().unwrap().node_ids()
     }
 
+    fn wants_engine(
+        pipeline_depth: usize,
+        adaptive: Option<&engine::AdaptiveDepthConfig>,
+        per_stage_windows: bool,
+        coalesce: bool,
+    ) -> bool {
+        pipeline_depth > 1
+            || adaptive.is_some()
+            || per_stage_windows
+            || coalesce
+    }
+
     /// Build the persistent engine for a deployment (None when the
-    /// config asks for the serial schedule).
+    /// config asks for the serial schedule). `carried` is the previous
+    /// engine's learned window state: an engine-aware rebalance seeds
+    /// the rebuilt engine from it instead of restarting the controller
+    /// cold.
     fn build_engine(
         dep: &Arc<Deployment>,
         pipeline_depth: usize,
         adaptive: Option<engine::AdaptiveDepthConfig>,
+        per_stage_windows: bool,
+        coalesce: bool,
+        carried: Option<LearnedWindows>,
     ) -> Result<Option<Arc<engine::PersistentEngine>>> {
-        if pipeline_depth <= 1 && adaptive.is_none() {
+        if !Self::wants_engine(
+            pipeline_depth,
+            adaptive.as_ref(),
+            per_stage_windows,
+            coalesce,
+        ) {
             return Ok(None);
         }
+        let n_stages = dep.stages.len().max(1);
+        let clamp = |d: usize| match &adaptive {
+            Some(a) => d.clamp(a.min_depth, a.max_depth),
+            None => d.max(1),
+        };
+        let (initial_depth, stage_budgets) = match carried {
+            Some(learned) => {
+                let budgets: Vec<usize> =
+                    engine::carry_stage_budgets(&learned.stage_budgets, n_stages)
+                        .into_iter()
+                        .map(clamp)
+                        .collect();
+                (clamp(learned.depth), Some(budgets))
+            }
+            None => (clamp(pipeline_depth.max(1)), None),
+        };
         let cfg = engine::PersistentEngineConfig {
             micro_batch_rows: dep.batch.max(1),
-            initial_depth: pipeline_depth.max(1),
+            initial_depth,
+            stage_budgets,
+            per_stage: per_stage_windows,
+            coalesce,
             adaptive,
         };
         let stages =
@@ -77,14 +133,28 @@ impl DistributedService {
     }
 
     /// Swap in a new deployment (after a topology change): the streaming
-    /// engine is rebuilt over the new stage chain; the old engine drains
-    /// its in-flight batches against the old deployment before teardown.
-    /// Returns the old deployment for undeploy. On error (e.g. the new
-    /// engine failed to spawn) nothing was swapped — the caller still
-    /// owns `d` and must undeploy it.
+    /// engine is rebuilt over the new stage chain, seeded with the old
+    /// engine's *learned* per-stage budgets and live depth (engine-aware
+    /// rebalance — the controller does not restart cold); the old engine
+    /// drains its in-flight batches against the old deployment before
+    /// teardown. Returns the old deployment for undeploy. On error (e.g.
+    /// the new engine failed to spawn) nothing was swapped — the caller
+    /// still owns `d` and must undeploy it.
     pub fn replace_deployment(&self, d: Arc<Deployment>) -> Result<Arc<Deployment>> {
-        let new_engine =
-            Self::build_engine(&d, self.pipeline_depth, self.adaptive)?;
+        let carried = self.engine.lock().unwrap().as_ref().map(|e| {
+            LearnedWindows {
+                depth: e.current_depth(),
+                stage_budgets: e.stage_budgets(),
+            }
+        });
+        let new_engine = Self::build_engine(
+            &d,
+            self.pipeline_depth,
+            self.adaptive,
+            self.per_stage_windows,
+            self.coalesce,
+            carried,
+        )?;
         // Swap both under the deployment write lock. Acquiring it waits
         // for every submit_streaming/serial_infer read guard, and the
         // engine is swapped before the write guard releases, so no
@@ -128,12 +198,32 @@ impl DistributedService {
         }
     }
 
-    /// Feed the persistent engine by reference, returning a completion
-    /// waiter, or None when no engine is configured. Node charging uses
-    /// the *engine's* stage nodes — during a deployment swap a batch
+    /// Live per-stage credit budgets (empty when running the serial
+    /// schedule) and the feeder's coalescing counters (None when no
+    /// engine is configured or coalescing is off).
+    pub fn window_status(
+        &self,
+    ) -> (Vec<usize>, Option<crate::metrics::CoalesceStats>) {
+        match &*self.engine.lock().unwrap() {
+            Some(e) => (
+                e.stage_budgets(),
+                self.coalesce.then(|| e.coalesce_stats()),
+            ),
+            None => (Vec::new(), None),
+        }
+    }
+
+    /// Feed the persistent engine (by value — the batch's rows go
+    /// straight into the feeder with no defensive copy), returning a
+    /// completion waiter; hands the batch back untouched when no engine
+    /// is configured (serial schedule). Node charging uses the
+    /// *engine's* stage nodes — during a deployment swap a batch
     /// submitted to the old engine still executes on the old stages, so
     /// reading `self.deployment` here could charge the wrong nodes.
-    fn submit_streaming(&self, batch: &Tensor) -> Option<InferWait> {
+    fn submit_streaming(
+        &self,
+        batch: Tensor,
+    ) -> std::result::Result<InferWait, Tensor> {
         // Hold the deployment read guard across the engine lookup *and*
         // the submission: replace_deployment's write lock then waits for
         // every mid-flight submission before swapping, and since `engine`
@@ -141,13 +231,16 @@ impl DistributedService {
         // lock is granted the old engine's only reference is the
         // service's — its drop truly drains before the caller undeploys.
         let _dep_guard = self.deployment.read().unwrap();
-        let engine = self.engine.lock().unwrap().clone()?;
+        let engine = match self.engine.lock().unwrap().clone() {
+            Some(e) => e,
+            None => return Err(batch),
+        };
         let node_ids = engine.node_ids().to_vec();
         self.scheduler.tasks_started(&node_ids);
         let scheduler = Arc::clone(&self.scheduler);
         let stage_counters = Arc::clone(&self.stage_counters);
-        match engine.submit(batch) {
-            Ok(handle) => Some(Box::new(move || match handle.wait() {
+        match engine.submit_owned(batch) {
+            Ok(handle) => Ok(Box::new(move || match handle.wait() {
                 Ok(run) => {
                     stage_counters.merge(&run.stage_counters);
                     for st in &run.timing.stages {
@@ -163,7 +256,7 @@ impl DistributedService {
             })),
             Err(e) => {
                 self.scheduler.tasks_failed(&node_ids);
-                Some(Box::new(move || Err(e)))
+                Ok(Box::new(move || Err(e)))
             }
         }
     }
@@ -206,10 +299,15 @@ impl DistributedService {
 
 impl InferenceService for DistributedService {
     fn infer_batch(&self, batch: &Tensor) -> Result<(Tensor, f64, f64)> {
-        match self.submit_streaming(batch) {
-            Some(wait) => wait(),
-            None => self.serial_infer(batch),
+        // Cheap presence check first so the serial-only configuration
+        // never clones; the owned submission handles the (rare)
+        // engine-swap race by handing the batch back.
+        if self.engine.lock().unwrap().is_some() {
+            if let Ok(wait) = self.submit_streaming(batch.clone()) {
+                return wait();
+            }
         }
+        self.serial_infer(batch)
     }
 
     /// Feed the persistent engine directly: the batch's micro-batches
@@ -218,9 +316,9 @@ impl InferenceService for DistributedService {
     /// resolves when this batch's rows are delivered. Falls back to the
     /// serial schedule when no engine is configured.
     fn submit_batch(&self, batch: Tensor) -> Submission {
-        match self.submit_streaming(&batch) {
-            Some(wait) => Submission::Pending(wait),
-            None => Submission::Inline(batch),
+        match self.submit_streaming(batch) {
+            Ok(wait) => Submission::Pending(wait),
+            Err(batch) => Submission::Inline(batch),
         }
     }
 
@@ -229,6 +327,14 @@ impl InferenceService for DistributedService {
     }
 
     fn padded_rows(&self, n: usize) -> usize {
+        // With coalescing the engine feeder merges short tails across
+        // adjacent miss-sets, so padding to a micro-batch multiple here
+        // would only manufacture rows for it to *not* save: submit the
+        // exact miss rows instead. (coalesce implies an engine exists —
+        // see wants_engine — so no lock is needed on this hot path.)
+        if self.coalesce {
+            return n.max(1);
+        }
         // Round up to whole micro-batches, not the full super-batch: a
         // light-traffic miss set of 1 request at depth 4 runs 1
         // micro-batch, not 4 (3 of which would be pure padding).
@@ -264,6 +370,11 @@ pub struct ServeReport {
     pub final_pipeline_depth: usize,
     /// Adaptive depth trajectory (None unless `adaptive_depth`).
     pub depth_report: Option<engine::DepthReport>,
+    /// Live per-stage credit budgets at the end of the run (empty when
+    /// running the serial schedule).
+    pub stage_budgets: Vec<usize>,
+    /// Feeder coalescing counters (None when no engine is configured).
+    pub coalesce_stats: Option<crate::metrics::CoalesceStats>,
 }
 
 /// The leader.
@@ -371,12 +482,17 @@ impl EdgeServer {
             &deployment,
             pipeline_depth,
             adaptive,
+            config.per_stage_windows,
+            config.coalesce,
+            None,
         )?;
         let service = Arc::new(DistributedService {
             deployment: RwLock::new(deployment),
             scheduler: Arc::clone(&scheduler),
             pipeline_depth,
             adaptive,
+            per_stage_windows: config.per_stage_windows,
+            coalesce: config.coalesce,
             engine: Mutex::new(pipeline_engine),
             stage_counters: Arc::new(crate::metrics::StageCounterSet::new()),
         });
@@ -432,6 +548,7 @@ impl EdgeServer {
 
         let dep = Arc::clone(&*self.service.deployment.read().unwrap());
         let (final_depth, depth_report) = self.service.depth_status();
+        let (stage_budgets, coalesce_stats) = self.service.window_status();
         let snapshot = self.monitor.latest();
         Ok(ServeReport {
             metrics,
@@ -462,6 +579,8 @@ impl EdgeServer {
             stage_counters: self.service.stage_counters(),
             final_pipeline_depth: final_depth,
             depth_report,
+            stage_budgets,
+            coalesce_stats,
         })
     }
 

@@ -1,0 +1,182 @@
+//! Deterministic, seeded engine test harness.
+//!
+//! Shared by the engine/server integration tests so each test file
+//! stops re-declaring the same sim-cluster builders, canned
+//! deployments, and fault-injection scaffolding. Everything here is
+//! deterministic: inputs come from the in-tree SplitMix64 PRNG keyed by
+//! an explicit seed, and the virtual-node substrate's simulated-ms
+//! accounting is machine-independent, so assertions on schedules and
+//! makespans reproduce exactly across hosts.
+#![allow(dead_code)]
+
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use amp4ec::cluster::{Cluster, NodeSpec, SimParams};
+use amp4ec::deployer::{Deployment, ModelDeployer};
+use amp4ec::manifest::Manifest;
+use amp4ec::partitioner;
+use amp4ec::pipeline::engine::{
+    AdaptiveDepthConfig, PersistentEngine, PersistentEngineConfig, SimStages,
+    StageExec,
+};
+use amp4ec::runtime::Tensor;
+use amp4ec::scheduler::{Scheduler, ScoringWeights};
+use amp4ec::util::rng::Rng;
+
+/// The paper's §IV-B heterogeneous CPU shares.
+pub const PAPER_SHARES: &[f64] = &[1.0, 0.6, 0.4];
+
+/// A 5-stage profile with fast early stages and a slow tail — the
+/// skewed chain where window *shape* (not just size) decides whether
+/// the bottleneck stays fed.
+pub const SKEWED_SHARES: &[f64] = &[1.0, 1.0, 1.0, 1.0, 0.3];
+
+/// Deterministic `[rows, cols]` input drawn from the seeded PRNG.
+pub fn seeded_input(rows: usize, cols: usize, seed: u64) -> Tensor {
+    let mut rng = Rng::new(seed);
+    let data = (0..rows * cols).map(|_| rng.f32_range(-4.0, 4.0)).collect();
+    Tensor::new(vec![rows, cols], data).unwrap()
+}
+
+/// A batch whose every element is `value` — the trigger pattern for
+/// [`FaultStages`] sentinels.
+pub fn sentinel_input(rows: usize, cols: usize, value: f32) -> Tensor {
+    Tensor::new(vec![rows, cols], vec![value; rows * cols]).unwrap()
+}
+
+/// The paper's heterogeneous 3-stage sim chain.
+pub fn paper_stages(nominal_ms: f64) -> Arc<SimStages> {
+    Arc::new(SimStages::heterogeneous(PAPER_SHARES, nominal_ms))
+}
+
+/// Arbitrary-profile sim chain (one stage per CPU share).
+pub fn sim_stages(shares: &[f64], nominal_ms: f64) -> Arc<SimStages> {
+    Arc::new(SimStages::heterogeneous(shares, nominal_ms))
+}
+
+/// Fixed-window persistent-engine config at uniform `depth`
+/// (micro-batch of 1 row — the engine test default).
+pub fn engine_cfg(depth: usize) -> PersistentEngineConfig {
+    PersistentEngineConfig {
+        micro_batch_rows: 1,
+        initial_depth: depth,
+        ..Default::default()
+    }
+}
+
+/// Adaptive-window config: start at `initial`, bounded by `max_depth`.
+pub fn adaptive_cfg(initial: usize, max_depth: usize) -> PersistentEngineConfig {
+    PersistentEngineConfig {
+        micro_batch_rows: 1,
+        initial_depth: initial,
+        adaptive: Some(AdaptiveDepthConfig {
+            max_depth,
+            ..AdaptiveDepthConfig::default()
+        }),
+        ..Default::default()
+    }
+}
+
+/// Spawn a fixed-window engine over `stages`.
+pub fn engine<S: StageExec + Send + Sync + 'static>(
+    stages: Arc<S>,
+    depth: usize,
+) -> PersistentEngine {
+    PersistentEngine::new(stages, engine_cfg(depth)).unwrap()
+}
+
+/// Fault-injection wrapper around any [`StageExec`]: sentinel-triggered
+/// `Err`s or *panics* at a chosen stage (the sentinel is the batch's
+/// first element), plus an injectable per-stage wall backlog so tests
+/// can drive the adaptive controller's `Executor::queue_depth` veto
+/// without a real executor.
+pub struct FaultStages<S: StageExec> {
+    inner: S,
+    fail_at: Option<(usize, f32)>,
+    panic_at: Option<(usize, f32)>,
+    backlog: Vec<AtomicUsize>,
+}
+
+impl<S: StageExec> FaultStages<S> {
+    pub fn new(inner: S) -> FaultStages<S> {
+        let n = inner.num_stages();
+        FaultStages {
+            inner,
+            fail_at: None,
+            panic_at: None,
+            backlog: (0..n).map(|_| AtomicUsize::new(0)).collect(),
+        }
+    }
+
+    /// Error at `stage` whenever the activation's first element equals
+    /// `sentinel`.
+    pub fn fail_on(mut self, stage: usize, sentinel: f32) -> Self {
+        self.fail_at = Some((stage, sentinel));
+        self
+    }
+
+    /// Panic at `stage` whenever the activation's first element equals
+    /// `sentinel` (exercises the engine's catch-unwind isolation).
+    pub fn panic_on(mut self, stage: usize, sentinel: f32) -> Self {
+        self.panic_at = Some((stage, sentinel));
+        self
+    }
+
+    /// Inject a wall-clock backlog reading for `stage`.
+    pub fn set_backlog(&self, stage: usize, depth: usize) {
+        self.backlog[stage].store(depth, Ordering::SeqCst);
+    }
+}
+
+impl<S: StageExec> StageExec for FaultStages<S> {
+    fn num_stages(&self) -> usize {
+        self.inner.num_stages()
+    }
+
+    fn node_id(&self, stage: usize) -> usize {
+        self.inner.node_id(stage)
+    }
+
+    fn comm_in(&self, stage: usize, bytes: u64) -> f64 {
+        self.inner.comm_in(stage, bytes)
+    }
+
+    fn comm_out(&self, bytes: u64) -> f64 {
+        self.inner.comm_out(bytes)
+    }
+
+    fn backlog(&self, stage: usize) -> usize {
+        self.backlog[stage].load(Ordering::SeqCst)
+    }
+
+    fn execute(&self, stage: usize, input: Tensor) -> anyhow::Result<(Tensor, f64)> {
+        if let Some((s, v)) = self.fail_at {
+            if stage == s && input.data.first() == Some(&v) {
+                anyhow::bail!("injected failure at stage {stage}");
+            }
+        }
+        if let Some((s, v)) = self.panic_at {
+            if stage == s && input.data.first() == Some(&v) {
+                panic!("injected panic at stage {stage}");
+            }
+        }
+        self.inner.execute(stage, input)
+    }
+}
+
+/// Canned artifact-gated deployment: the manifest at batch 1 over the
+/// paper's heterogeneous trio (equal-split partition plan).
+pub fn deploy_paper_cluster(artifacts: &Path) -> (Deployment, Arc<ModelDeployer>) {
+    let manifest = Arc::new(Manifest::load(artifacts).unwrap());
+    let cluster = Cluster::new(SimParams::default());
+    cluster.add_node(NodeSpec::new("edge-high", 1.0, 1024.0));
+    cluster.add_node(NodeSpec::new("edge-med", 0.6, 512.0));
+    cluster.add_node(NodeSpec::new("edge-low", 0.4, 512.0));
+    let scheduler = Scheduler::new(ScoringWeights::default());
+    let plan = partitioner::plan(&manifest, 3).unwrap();
+    let deployer = Arc::new(ModelDeployer::new(Arc::clone(&manifest)));
+    let dep = deployer.deploy(&plan, &cluster, &scheduler, 1).unwrap();
+    (dep, deployer)
+}

@@ -1,4 +1,7 @@
-//! Shared helpers for integration tests (artifacts-dependent).
+//! Shared helpers for integration tests: artifact gating plus the
+//! deterministic engine harness (`harness`).
+
+pub mod harness;
 
 use std::path::PathBuf;
 

@@ -79,6 +79,41 @@ fn ablation_flops_cost_shifts_boundary() {
 }
 
 #[test]
+fn range_cost_prefix_sums_stay_pinned() {
+    // Artifact-free property sweep (ISSUE 3 equivalence satellite): on
+    // seeded random cost arrays, every half-open range's O(1)
+    // prefix-sum cost must equal the naive rescan, and the plan-level
+    // invariant Σ range_cost(partitions) == Σ costs must hold.
+    use amp4ec::util::rng::Rng;
+    let mut rng = Rng::new(0xC057);
+    for trial in 0..20 {
+        let len = rng.range(1, 40);
+        let costs: Vec<u64> =
+            (0..len).map(|_| rng.below(1_000) as u64).collect();
+        let prefix = partitioner::prefix_sums(&costs);
+        assert_eq!(prefix.len(), len + 1);
+        assert_eq!(prefix[0], 0);
+        for a in 0..=len {
+            for b in a..=len {
+                let naive: u64 = costs[a..b].iter().sum();
+                assert_eq!(
+                    partitioner::range_cost(&prefix, &(a..b)),
+                    naive,
+                    "trial {trial}, range {a}..{b}"
+                );
+            }
+        }
+        let parts = rng.range(1, len);
+        let ranges = partitioner::layer_boundaries_with(&costs, parts);
+        let total: u64 = ranges
+            .iter()
+            .map(|r| partitioner::range_cost(&prefix, r))
+            .sum();
+        assert_eq!(total, costs.iter().sum::<u64>(), "trial {trial}");
+    }
+}
+
+#[test]
 fn conv_cost_dominates_mobilenet() {
     require_artifacts!();
     let m = Manifest::load(&common::artifacts_dir()).unwrap();

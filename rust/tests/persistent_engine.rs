@@ -1,53 +1,34 @@
 //! Persistent cross-batch streaming engine: multi-batch bit-identity
 //! against the serial schedule, interleaved submissions, heterogeneous
 //! stage chains, mid-stream failure isolation, and adaptive depth — all
-//! on the virtual-node substrate (no compiled artifacts needed) — plus
-//! an artifact-gated end-to-end adaptive serve.
+//! on the deterministic harness (`common::harness`, no compiled
+//! artifacts needed) — plus an artifact-gated end-to-end adaptive
+//! serve.
 
 mod common;
 
-use std::sync::Arc;
+use common::harness as h;
 
 use amp4ec::config::AmpConfig;
 use amp4ec::pipeline::engine::{
-    run_serial, run_streamed, AdaptiveDepthConfig, EngineConfig,
-    PersistentEngine, PersistentEngineConfig, SimStages,
+    run_serial, run_streamed, EngineConfig, PersistentEngine,
 };
 use amp4ec::runtime::Tensor;
 use amp4ec::server::EdgeServer;
 use amp4ec::workload::Arrival;
 
-fn input(rows: usize, cols: usize, off: f32) -> Tensor {
-    let data = (0..rows * cols)
-        .map(|i| i as f32 * 0.25 - 2.0 + off)
-        .collect();
-    Tensor::new(vec![rows, cols], data).unwrap()
-}
-
-fn paper_stages() -> Arc<SimStages> {
-    Arc::new(SimStages::heterogeneous(&[1.0, 0.6, 0.4], 2.0))
-}
-
 #[test]
 fn interleaved_batches_stay_bit_identical_to_serial() {
-    let stages = paper_stages();
-    let engine = PersistentEngine::new(
-        Arc::clone(&stages),
-        PersistentEngineConfig {
-            micro_batch_rows: 1,
-            initial_depth: 4,
-            adaptive: None,
-        },
-    )
-    .unwrap();
+    let stages = h::paper_stages(2.0);
+    let engine = h::engine(stages.clone(), 4);
     // Distinct inputs, all submitted before any wait: micro-batches of
     // different batches interleave in the stage queues.
     let batches: Vec<Tensor> =
-        (0..6).map(|i| input(3, 5, i as f32 * 7.0)).collect();
+        (0..6).map(|i| h::seeded_input(3, 5, 100 + i)).collect();
     let handles: Vec<_> =
         batches.iter().map(|b| engine.submit(b).unwrap()).collect();
-    for (b, h) in batches.iter().zip(handles) {
-        let run = h.wait().unwrap();
+    for (b, hdl) in batches.iter().zip(handles) {
+        let run = hdl.wait().unwrap();
         let serial = run_serial(&*stages, b, 1).unwrap();
         assert_eq!(run.output, serial.output, "interleaved batch diverged");
         // Batch-local counters: every stage saw exactly this batch's
@@ -65,31 +46,24 @@ fn interleaved_batches_stay_bit_identical_to_serial() {
 
 #[test]
 fn cross_batch_streaming_eliminates_drain_bubbles() {
-    // The tentpole claim at engine level: back-to-back batches through
-    // the persistent engine beat the same batches run one `run_streamed`
-    // call each (which drains the pipeline between batches).
-    let stages = paper_stages();
+    // The PR-2 tentpole claim at engine level: back-to-back batches
+    // through the persistent engine beat the same batches run one
+    // `run_streamed` call each (which drains the pipeline between
+    // batches).
+    let stages = h::paper_stages(2.0);
     let n_batches = 8;
     let batches: Vec<Tensor> =
-        (0..n_batches).map(|i| input(4, 8, i as f32)).collect();
+        (0..n_batches).map(|i| h::seeded_input(4, 8, 200 + i)).collect();
 
-    let engine = PersistentEngine::new(
-        Arc::clone(&stages),
-        PersistentEngineConfig {
-            micro_batch_rows: 1,
-            initial_depth: 4,
-            adaptive: None,
-        },
-    )
-    .unwrap();
+    let engine = h::engine(stages.clone(), 4);
     let handles: Vec<_> =
         batches.iter().map(|b| engine.submit(b).unwrap()).collect();
-    for h in handles {
-        h.wait().unwrap();
+    for hdl in handles {
+        hdl.wait().unwrap();
     }
     let cross_ms = engine.makespan_ms();
 
-    let per_batch_stages = paper_stages();
+    let per_batch_stages = h::paper_stages(2.0);
     let cfg = EngineConfig { micro_batch_rows: 1, max_in_flight: 4 };
     let mut per_batch_ms = 0.0;
     for b in &batches {
@@ -118,59 +92,39 @@ fn cross_batch_streaming_eliminates_drain_bubbles() {
 fn mid_stream_failure_leaves_later_batches_unaffected() {
     // Stage 1 rejects activations carrying a sentinel; surrounding
     // batches must complete with consistent counters and the engine must
-    // keep serving.
-    struct FailOnSentinel;
-    impl amp4ec::pipeline::engine::StageExec for FailOnSentinel {
-        fn num_stages(&self) -> usize {
-            3
-        }
-        fn node_id(&self, stage: usize) -> usize {
-            stage
-        }
-        fn comm_in(&self, _stage: usize, _bytes: u64) -> f64 {
-            0.5
-        }
-        fn comm_out(&self, _bytes: u64) -> f64 {
-            0.5
-        }
-        fn execute(
-            &self,
-            stage: usize,
-            input: Tensor,
-        ) -> anyhow::Result<(Tensor, f64)> {
-            anyhow::ensure!(
-                !(stage == 1 && input.data[0] == -1234.5),
-                "sentinel rejected"
-            );
-            Ok((input, 2.0))
-        }
-    }
-
-    let engine = PersistentEngine::new(
-        Arc::new(FailOnSentinel),
-        PersistentEngineConfig {
-            micro_batch_rows: 1,
-            initial_depth: 3,
-            adaptive: None,
-        },
-    )
-    .unwrap();
-    let good_a = input(3, 2, 0.0);
-    let bad = Tensor::new(vec![3, 2], vec![-1234.5; 6]).unwrap();
-    let good_b = input(3, 2, 100.0);
+    // keep serving. (Stage 0's row-wise transform is applied before the
+    // activation reaches stage 1, so the stage-1 sentinel is the
+    // transformed value.)
+    let sent = -1234.5f32;
+    let sent_at_1 = sent * 1.5 + 0.25;
+    let stages = std::sync::Arc::new(
+        h::FaultStages::new(
+            amp4ec::pipeline::engine::SimStages::heterogeneous(
+                &[1.0, 1.0, 1.0],
+                2.0,
+            ),
+        )
+        .fail_on(1, sent_at_1),
+    );
+    let engine = h::engine(stages.clone(), 3);
+    let good_a = h::seeded_input(3, 2, 31);
+    let bad = h::sentinel_input(3, 2, sent);
+    let good_b = h::seeded_input(3, 2, 32);
 
     let ha = engine.submit(&good_a).unwrap();
     let hbad = engine.submit(&bad).unwrap();
     let hb = engine.submit(&good_b).unwrap();
 
-    assert_eq!(ha.wait().unwrap().output, good_a);
+    let want_a = run_serial(&*stages, &good_a, 1).unwrap().output;
+    let want_b = run_serial(&*stages, &good_b, 1).unwrap().output;
+    assert_eq!(ha.wait().unwrap().output, want_a);
     let err = hbad.wait().unwrap_err();
     assert!(
         format!("{err:#}").contains("stage 1"),
         "failure must carry stage context, got: {err:#}"
     );
     let run_b = hb.wait().unwrap();
-    assert_eq!(run_b.output, good_b);
+    assert_eq!(run_b.output, want_b);
     for c in &run_b.stage_counters {
         assert_eq!(
             c.micro_batches, 3,
@@ -179,7 +133,7 @@ fn mid_stream_failure_leaves_later_batches_unaffected() {
         );
     }
     // Still serving after the failure drained.
-    assert_eq!(engine.run(&good_a).unwrap().output, good_a);
+    assert_eq!(engine.run(&good_a).unwrap().output, want_a);
 }
 
 #[test]
@@ -189,24 +143,16 @@ fn adaptive_depth_converges_near_best_fixed_depth() {
     // within one step of it.
     let n_batches = 10;
     let batches: Vec<Tensor> =
-        (0..n_batches).map(|i| input(4, 4, i as f32)).collect();
+        (0..n_batches).map(|i| h::seeded_input(4, 4, 300 + i)).collect();
 
     let mut best_ms = f64::INFINITY;
     let mut sweep: Vec<(usize, f64)> = Vec::new();
     for depth in 1..=6 {
-        let engine = PersistentEngine::new(
-            paper_stages(),
-            PersistentEngineConfig {
-                micro_batch_rows: 1,
-                initial_depth: depth,
-                adaptive: None,
-            },
-        )
-        .unwrap();
+        let engine = h::engine(h::paper_stages(2.0), depth);
         let handles: Vec<_> =
             batches.iter().map(|b| engine.submit(b).unwrap()).collect();
-        for h in handles {
-            h.wait().unwrap();
+        for hdl in handles {
+            hdl.wait().unwrap();
         }
         let ms = engine.makespan_ms();
         best_ms = best_ms.min(ms);
@@ -218,18 +164,9 @@ fn adaptive_depth_converges_near_best_fixed_depth() {
         .map(|(d, _)| *d)
         .unwrap();
 
-    let engine = PersistentEngine::new(
-        paper_stages(),
-        PersistentEngineConfig {
-            micro_batch_rows: 1,
-            initial_depth: 1,
-            adaptive: Some(AdaptiveDepthConfig {
-                max_depth: 6,
-                ..AdaptiveDepthConfig::default()
-            }),
-        },
-    )
-    .unwrap();
+    let engine =
+        PersistentEngine::new(h::paper_stages(2.0), h::adaptive_cfg(1, 6))
+            .unwrap();
     // Longer run so the controller has batches to observe.
     let mut handles = Vec::new();
     for _round in 0..3 {
@@ -237,8 +174,8 @@ fn adaptive_depth_converges_near_best_fixed_depth() {
             handles.push(engine.submit(b).unwrap());
         }
     }
-    for h in handles {
-        h.wait().unwrap();
+    for hdl in handles {
+        hdl.wait().unwrap();
     }
     let final_depth = engine.current_depth() as i64;
     assert!(
@@ -265,6 +202,13 @@ fn streamed_serving_uses_persistent_engine_end_to_end() {
     let depth = report.depth_report.expect("adaptive depth report");
     assert_eq!(depth.initial_depth, 2);
     assert!(depth.final_depth >= 1 && depth.final_depth <= 6);
+    // Per-stage budgets are live (uniform mode keeps them in lockstep
+    // with the depth) and surfaced in the report.
+    assert_eq!(report.stage_budgets.len(), 3);
+    assert!(report
+        .stage_budgets
+        .iter()
+        .all(|&b| b == report.final_pipeline_depth));
     // Stage counters flowed through the persistent engine into the
     // report, and the scheduler drained every stage node.
     assert_eq!(report.stage_counters.len(), 3);

@@ -4,31 +4,18 @@
 
 mod common;
 
-use std::sync::Arc;
-
-use amp4ec::cluster::{Cluster, NodeSpec, SimParams};
 use amp4ec::config::AmpConfig;
-use amp4ec::deployer::{Deployment, ModelDeployer};
-use amp4ec::manifest::Manifest;
-use amp4ec::partitioner;
 use amp4ec::pipeline::{self, engine};
-use amp4ec::scheduler::{Scheduler, ScoringWeights};
 use amp4ec::server::EdgeServer;
 use amp4ec::workload::{Arrival, InputPool};
 
-/// Deploy the manifest at batch 1 over the paper's heterogeneous trio.
-fn deploy_paper_cluster() -> (Deployment, Arc<ModelDeployer>) {
-    let manifest =
-        Arc::new(Manifest::load(&common::artifacts_dir()).unwrap());
-    let cluster = Cluster::new(SimParams::default());
-    cluster.add_node(NodeSpec::new("edge-high", 1.0, 1024.0));
-    cluster.add_node(NodeSpec::new("edge-med", 0.6, 512.0));
-    cluster.add_node(NodeSpec::new("edge-low", 0.4, 512.0));
-    let scheduler = Scheduler::new(ScoringWeights::default());
-    let plan = partitioner::plan(&manifest, 3).unwrap();
-    let deployer = Arc::new(ModelDeployer::new(Arc::clone(&manifest)));
-    let dep = deployer.deploy(&plan, &cluster, &scheduler, 1).unwrap();
-    (dep, deployer)
+/// Deploy the manifest at batch 1 over the paper's heterogeneous trio
+/// (the harness's canned deployment).
+fn deploy_paper_cluster() -> (
+    amp4ec::deployer::Deployment,
+    std::sync::Arc<amp4ec::deployer::ModelDeployer>,
+) {
+    common::harness::deploy_paper_cluster(&common::artifacts_dir())
 }
 
 #[test]
