@@ -20,8 +20,8 @@ use amp4ec::cluster::{Cluster, SimParams};
 use amp4ec::config::AmpConfig;
 use amp4ec::manifest::Manifest;
 use amp4ec::metrics::RunMetrics;
-use amp4ec::router::{self, InferenceService, RouterConfig};
 use amp4ec::server::EdgeServer;
+use amp4ec::serving::{IngressConfig, ServiceHandle};
 use amp4ec::workload::{feed, Arrival, InputPool};
 
 const REQUESTS: usize = 32; // the paper's batch of 32 inference requests
@@ -36,14 +36,10 @@ fn run_monolithic(manifest: &Manifest) -> anyhow::Result<RunMetrics> {
         1,
     )?);
     let pool = InputPool::new(svc.input_shape(), DISTINCT, 11);
-    let (tx, rx) = router::request_channel(256);
-    let svc_dyn: Arc<dyn InferenceService> = svc;
-    let handle = std::thread::spawn(move || {
-        router::serve(svc_dyn, rx, RouterConfig::default(), None)
-    });
-    feed(&tx, &pool, REQUESTS, Arrival::Closed, 12);
-    drop(tx);
-    Ok(handle.join().expect("router"))
+    // Same unified ingress the distributed configurations ride.
+    let handle = ServiceHandle::new(svc, IngressConfig::default(), None);
+    feed(&handle, &pool, REQUESTS, Arrival::Closed, 12);
+    Ok(handle.finish())
 }
 
 fn run_amp4ec(cached: bool) -> anyhow::Result<(RunMetrics, u64)> {

@@ -1,12 +1,17 @@
 //! Quickstart: bring up AMP4EC on the default 3-node heterogeneous edge
-//! cluster, run one inference, and print where everything went.
+//! cluster and serve requests through the unified request-level API —
+//! a `ServiceHandle` whose `RequestBuilder` carries per-request
+//! priority and deadline, returning a non-blocking `ResponseHandle`.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example quickstart
 //! ```
 
+use std::time::Duration;
+
 use amp4ec::config::AmpConfig;
-use amp4ec::server::{single_request, EdgeServer};
+use amp4ec::server::EdgeServer;
+use amp4ec::serving::{Outcome, Priority};
 use amp4ec::workload::InputPool;
 
 fn main() -> anyhow::Result<()> {
@@ -23,21 +28,56 @@ fn main() -> anyhow::Result<()> {
     println!("placement: partitions on nodes {:?}",
              server.service().deployment_nodes());
 
-    // One synthetic 96x96x3 image.
-    let pool = InputPool::new(&server.request_shape(), 1, 42);
-    let (logits, ms) = single_request(&server, pool.get(0))?;
+    // The unified serving ingress: every request goes through here.
+    let handle = server.serve_handle();
+    let pool = InputPool::new(&server.request_shape(), 3, 42);
 
-    let top1 = logits
-        .data
-        .iter()
-        .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-        .map(|(i, v)| (i, *v))
-        .unwrap();
-    println!("\ninference: {ms:.1} ms end-to-end across the pipeline");
-    println!("top-1    : class {} (logit {:.3})", top1.0, top1.1);
+    // A latency-critical request with a deadline, a default-class
+    // request, and a background one — submitted together; the ingress
+    // dispatches strictly by priority.
+    let urgent = handle
+        .request(pool.get(0).clone())
+        .priority(Priority::HIGH)
+        .deadline(Duration::from_secs(10))
+        .tag("urgent")
+        .submit()?;
+    let normal = handle.submit(pool.get(1).clone())?;
+    let background = handle
+        .request(pool.get(2).clone())
+        .priority(Priority::BEST_EFFORT)
+        .submit()?;
 
-    // Parity against the AOT-recorded golden output.
+    match urgent.wait() {
+        Outcome::Done(r) => {
+            let top1 = r
+                .output
+                .data
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, v)| (i, *v))
+                .unwrap();
+            println!(
+                "\nurgent   : {:.1} ms end-to-end, deadline met: {:?}",
+                r.latency_ms, r.deadline_met
+            );
+            println!("top-1    : class {} (logit {:.3})", top1.0, top1.1);
+        }
+        Outcome::Shed(reason) => println!("\nurgent   : shed ({reason:?})"),
+        Outcome::Failed(e) => return Err(e),
+    }
+    normal.wait_output()?;
+    background.wait_output()?;
+
+    let metrics = handle.finish();
+    println!(
+        "served   : {} requests ({} shed), mean latency {:.1} ms",
+        metrics.completed,
+        metrics.total_shed(),
+        metrics.mean_latency_ms()
+    );
+
+    // Parity against the AOT-recorded golden output (same ingress).
     let diff = server.golden_check()?;
     println!("golden   : max abs diff {diff:.2e} (PASS)");
     Ok(())

@@ -26,6 +26,9 @@ use amp4ec::pipeline::engine::{
     EngineConfig, PersistentEngine, PersistentEngineConfig, SimStages,
 };
 use amp4ec::runtime::Tensor;
+use amp4ec::serving::{
+    class_name, EngineService, IngressConfig, Priority, ServiceHandle,
+};
 use amp4ec::util::bench::BenchSuite;
 use amp4ec::util::json::Json;
 
@@ -471,6 +474,195 @@ fn main() {
          window on the skewed profile (budgets {shaped:?})",
         window_win * 100.0
     );
+
+    // ---- ISSUE 4: two-class serving through the unified ingress --------
+    // A saturated engine served through the request-level API: a
+    // best-effort flood plus a high-priority deadline class. The
+    // high-priority lane jumps both the ingress queue and the engine
+    // feeder, so its p99 must beat the best-effort p99 under identical
+    // load; a best-effort-only control run shows what the same deadline
+    // looks like without priority (sheds/misses). Emits per-class
+    // p50/p99 and shed counts to BENCH_api.json.
+    use std::time::Duration;
+    let api_engine = || {
+        Arc::new(
+            PersistentEngine::new(
+                Arc::new(SimStages::heterogeneous(&[1.0, 0.25], 1.0)),
+                PersistentEngineConfig {
+                    micro_batch_rows: 1,
+                    initial_depth: 1,
+                    adaptive: None,
+                    ..Default::default()
+                },
+            )
+            .expect("api engine"),
+        )
+    };
+    let api_input = |i: usize| input_off(1, 32, i as f32);
+    let flood_n = 40usize;
+    let hi_n = 6usize;
+    let deadline = Duration::from_millis(150);
+
+    // Mixed run: flood + high-priority deadline class.
+    let handle = ServiceHandle::new(
+        Arc::new(EngineService::new(api_engine(), 1, 1)),
+        IngressConfig {
+            workers: 1,
+            max_wait: Duration::from_millis(1),
+            ..IngressConfig::default()
+        },
+        None,
+    );
+    let flood: Vec<_> = (0..flood_n)
+        .map(|i| {
+            handle
+                .request(api_input(i))
+                .priority(Priority::BEST_EFFORT)
+                .submit()
+                .expect("flood submit")
+        })
+        .collect();
+    let urgent: Vec<_> = (0..hi_n)
+        .map(|i| {
+            handle
+                .request(api_input(flood_n + i))
+                .priority(Priority::HIGH)
+                .deadline(deadline)
+                .submit()
+                .expect("urgent submit")
+        })
+        .collect();
+    for u in urgent {
+        u.wait();
+    }
+    for f in flood {
+        f.wait();
+    }
+    let mixed = handle.finish();
+    let hi = mixed.class(Priority::HIGH.class()).expect("high class");
+    let be = mixed
+        .class(Priority::BEST_EFFORT.class())
+        .expect("best-effort class");
+    let hi_lat = hi.latency_summary();
+    let be_lat = be.latency_summary();
+
+    // Control: the same flood best-effort-only, every request carrying
+    // the deadline the high class met.
+    let control = ServiceHandle::new(
+        Arc::new(EngineService::new(api_engine(), 1, 1)),
+        IngressConfig {
+            workers: 1,
+            max_wait: Duration::from_millis(1),
+            ..IngressConfig::default()
+        },
+        None,
+    );
+    let rs: Vec<_> = (0..flood_n + hi_n)
+        .map(|i| {
+            control
+                .request(api_input(i))
+                .priority(Priority::BEST_EFFORT)
+                .deadline(deadline)
+                .submit()
+                .expect("control submit")
+        })
+        .collect();
+    for r in rs {
+        r.wait();
+    }
+    let control_m = control.finish();
+    let cbe = control_m
+        .class(Priority::BEST_EFFORT.class())
+        .expect("control class");
+
+    println!(
+        "{}",
+        markdown_table(
+            "Two-class serving under saturation (wall ms, deadline 150 ms)",
+            &["Class", "Completed", "Shed", "p50", "p99", "Deadlines met"],
+            &[
+                vec![
+                    "high".into(),
+                    format!("{}", hi.completed),
+                    format!("{}", hi.shed()),
+                    format!("{:.1}", hi_lat.p50()),
+                    format!("{:.1}", hi_lat.p99()),
+                    format!("{}/{}", hi.deadline_met, hi.deadline_total),
+                ],
+                vec![
+                    "best-effort".into(),
+                    format!("{}", be.completed),
+                    format!("{}", be.shed()),
+                    format!("{:.1}", be_lat.p50()),
+                    format!("{:.1}", be_lat.p99()),
+                    "-".into(),
+                ],
+                vec![
+                    "best-effort only (control)".into(),
+                    format!("{}", cbe.completed),
+                    format!("{}", cbe.shed()),
+                    format!("{:.1}", cbe.latency_summary().p50()),
+                    format!("{:.1}", cbe.latency_summary().p99()),
+                    format!("{}/{}", cbe.deadline_met, cbe.deadline_total),
+                ],
+            ],
+        )
+    );
+    suite.record_value("high-priority p99", hi_lat.p99(), "ms");
+    suite.record_value("best-effort p99", be_lat.p99(), "ms");
+    assert_eq!(hi.completed as usize, hi_n, "high-priority requests lost");
+    assert_eq!(
+        hi.deadline_met, hi.deadline_total,
+        "high-priority class missed its deadline under saturation"
+    );
+    assert!(
+        hi_lat.p99() < be_lat.p99(),
+        "priority lane p99 {:.1} ms must beat best-effort p99 {:.1} ms",
+        hi_lat.p99(),
+        be_lat.p99()
+    );
+    assert!(
+        cbe.shed() > 0 || cbe.deadline_met < cbe.deadline_total,
+        "the best-effort-only control should miss the deadline the \
+         high-priority class met"
+    );
+
+    let class_json = |c: &amp4ec::metrics::ClassMetrics| {
+        let lat = c.latency_summary();
+        let mut j = BTreeMap::new();
+        j.insert("class".into(), Json::from(c.class));
+        j.insert("name".into(), Json::Str(class_name(c.class)));
+        j.insert("completed".into(), Json::from(c.completed as usize));
+        j.insert("shed_expired".into(), Json::from(c.shed_expired as usize));
+        j.insert(
+            "shed_predicted".into(),
+            Json::from(c.shed_predicted as usize),
+        );
+        j.insert("p50_ms".into(), Json::Num(lat.p50()));
+        j.insert("p99_ms".into(), Json::Num(lat.p99()));
+        j.insert("deadline_met".into(), Json::from(c.deadline_met as usize));
+        j.insert(
+            "deadline_total".into(),
+            Json::from(c.deadline_total as usize),
+        );
+        Json::Obj(j)
+    };
+    let mut api_doc = BTreeMap::new();
+    api_doc.insert("suite".into(), Json::Str("serving_api".into()));
+    api_doc.insert("deadline_ms".into(), Json::Num(150.0));
+    api_doc.insert("flood_requests".into(), Json::from(flood_n));
+    api_doc.insert("high_priority_requests".into(), Json::from(hi_n));
+    api_doc.insert(
+        "mixed".into(),
+        Json::Arr(vec![class_json(hi), class_json(be)]),
+    );
+    api_doc.insert(
+        "best_effort_only".into(),
+        Json::Arr(vec![class_json(cbe)]),
+    );
+    std::fs::write("BENCH_api.json", Json::Obj(api_doc).to_string())
+        .expect("write BENCH_api.json");
+    println!("wrote BENCH_api.json");
 
     // ---- machine-readable trajectory -----------------------------------
     let mut doc = BTreeMap::new();

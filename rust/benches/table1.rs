@@ -15,8 +15,8 @@ use amp4ec::cluster::{Cluster, SimParams};
 use amp4ec::config::AmpConfig;
 use amp4ec::manifest::Manifest;
 use amp4ec::metrics::{markdown_table, RunMetrics};
-use amp4ec::router::{self, InferenceService, RouterConfig};
 use amp4ec::server::EdgeServer;
+use amp4ec::serving::{IngressConfig, ServiceHandle};
 use amp4ec::workload::{feed, Arrival, InputPool};
 
 const REQUESTS: usize = 32;
@@ -37,16 +37,12 @@ fn run_monolithic(manifest: &Manifest) -> Row {
     );
     let deploy_bytes = manifest.monolithic.as_ref().unwrap().weights_bytes;
     let pool = InputPool::new(svc.input_shape(), DISTINCT, 101);
-    let (tx, rx) = router::request_channel(256);
-    let svc_dyn: Arc<dyn InferenceService> = svc;
-    let handle = std::thread::spawn(move || {
-        router::serve(svc_dyn, rx, RouterConfig::default(), None)
-    });
-    feed(&tx, &pool, REQUESTS, Arrival::Closed, 102);
-    drop(tx);
+    // Same unified serving ingress the distributed configurations use.
+    let handle = ServiceHandle::new(svc, IngressConfig::default(), None);
+    feed(&handle, &pool, REQUESTS, Arrival::Closed, 102);
     Row {
         name: "Monolithic",
-        metrics: handle.join().unwrap(),
+        metrics: handle.finish(),
         deploy_bytes,
         monitor_pct: 0.0,
     }

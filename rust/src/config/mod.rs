@@ -65,10 +65,19 @@ pub struct AmpConfig {
     pub weights: ScoringWeights,
     pub overload_threshold: f64,
     pub latency_threshold_ms: f64,
-    /// Router: batch admission window.
+    /// Serving ingress: batch admission window (how long the dispatcher
+    /// waits to fill a batch).
     pub max_wait_ms: u64,
-    /// Router: concurrent batches in flight.
+    /// Serving ingress: concurrent batches in flight.
     pub workers: usize,
+    /// Serving ingress: number of priority classes (strict-priority
+    /// lanes; requests clamp to `priority_classes - 1`). CLI:
+    /// `--priority-classes`.
+    pub priority_classes: usize,
+    /// Serving ingress: deadline (ms) applied to requests that don't
+    /// set their own; requests that cannot meet it are shed instead of
+    /// served late. None = no default deadline. CLI: `--deadline-ms`.
+    pub default_deadline_ms: Option<f64>,
     /// Streaming pipeline engine: micro-batches kept in flight per
     /// admitted batch. 1 = serial `pipeline::run`; >1 makes the router
     /// admit `batch * pipeline_depth`-row super-batches that the
@@ -129,6 +138,8 @@ impl Default for AmpConfig {
             latency_threshold_ms: 100.0,
             max_wait_ms: 10,
             workers: 4,
+            priority_classes: 3,
+            default_deadline_ms: None,
             pipeline_depth: 1,
             adaptive_depth: false,
             max_pipeline_depth: 8,
@@ -210,10 +221,19 @@ impl AmpConfig {
         }
     }
 
-    pub fn router_config(&self) -> crate::router::RouterConfig {
-        crate::router::RouterConfig {
+    /// The serving ingress configuration (replaces the old
+    /// `router_config`): admission window and worker pool carry over,
+    /// plus the request-level knobs — priority-lane count and the
+    /// default per-request deadline.
+    pub fn ingress_config(&self) -> crate::serving::IngressConfig {
+        crate::serving::IngressConfig {
+            capacity: 256,
             max_wait: Duration::from_millis(self.max_wait_ms),
             workers: self.workers,
+            classes: self.priority_classes.max(1),
+            default_deadline: self
+                .default_deadline_ms
+                .map(|ms| Duration::from_secs_f64(ms.max(0.0) / 1e3)),
         }
     }
 
@@ -228,6 +248,16 @@ impl AmpConfig {
         anyhow::ensure!(!self.nodes.is_empty(), "config needs >= 1 node");
         anyhow::ensure!(self.batch >= 1, "batch must be >= 1");
         anyhow::ensure!(self.workers >= 1, "workers must be >= 1");
+        anyhow::ensure!(
+            self.priority_classes >= 1,
+            "priority_classes must be >= 1"
+        );
+        if let Some(ms) = self.default_deadline_ms {
+            anyhow::ensure!(
+                ms.is_finite() && ms > 0.0,
+                "default_deadline_ms must be a positive number"
+            );
+        }
         anyhow::ensure!(self.pipeline_depth >= 1, "pipeline_depth must be >= 1");
         anyhow::ensure!(
             self.max_pipeline_depth >= 1,
@@ -298,6 +328,13 @@ impl AmpConfig {
         );
         m.insert("max_wait_ms".into(), Json::from(self.max_wait_ms as usize));
         m.insert("workers".into(), Json::from(self.workers));
+        m.insert(
+            "priority_classes".into(),
+            Json::from(self.priority_classes),
+        );
+        if let Some(ms) = self.default_deadline_ms {
+            m.insert("default_deadline_ms".into(), Json::Num(ms));
+        }
         m.insert("pipeline_depth".into(), Json::from(self.pipeline_depth));
         m.insert("adaptive_depth".into(), Json::from(self.adaptive_depth));
         m.insert(
@@ -386,6 +423,10 @@ impl AmpConfig {
             latency_threshold_ms: get_f("latency_threshold_ms", d.latency_threshold_ms),
             max_wait_ms: get_u("max_wait_ms", d.max_wait_ms as usize) as u64,
             workers: get_u("workers", d.workers),
+            priority_classes: get_u("priority_classes", d.priority_classes),
+            default_deadline_ms: j
+                .get("default_deadline_ms")
+                .and_then(Json::as_f64),
             pipeline_depth: get_u("pipeline_depth", d.pipeline_depth),
             adaptive_depth: j
                 .get("adaptive_depth")
@@ -450,8 +491,12 @@ mod tests {
         c.max_pipeline_depth = 12;
         c.per_stage_windows = true;
         c.coalesce = true;
+        c.priority_classes = 4;
+        c.default_deadline_ms = Some(250.0);
         let j = c.to_json();
         let back = AmpConfig::from_json(&j).unwrap();
+        assert_eq!(back.priority_classes, 4);
+        assert_eq!(back.default_deadline_ms, Some(250.0));
         assert_eq!(back.batch, 8);
         assert_eq!(back.pipeline_depth, 4);
         assert!(back.adaptive_depth);
@@ -498,6 +543,26 @@ mod tests {
         let mut c = AmpConfig::default();
         c.max_pipeline_depth = 0;
         assert!(c.validate().is_err());
+        let mut c = AmpConfig::default();
+        c.priority_classes = 0;
+        assert!(c.validate().is_err());
+        let mut c = AmpConfig::default();
+        c.default_deadline_ms = Some(-5.0);
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn ingress_config_carries_request_knobs() {
+        let mut c = AmpConfig::default();
+        c.priority_classes = 2;
+        c.default_deadline_ms = Some(100.0);
+        let ing = c.ingress_config();
+        assert_eq!(ing.classes, 2);
+        assert_eq!(ing.workers, c.workers);
+        assert_eq!(ing.max_wait, Duration::from_millis(c.max_wait_ms));
+        assert_eq!(ing.default_deadline, Some(Duration::from_millis(100)));
+        c.default_deadline_ms = None;
+        assert_eq!(c.ingress_config().default_deadline, None);
     }
 
     #[test]

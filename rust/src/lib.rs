@@ -10,11 +10,12 @@
 //!   [`monitor`] (Resource Monitor, §III-A), [`partitioner`] (Model
 //!   Partitioner, §III-B, Eq. 1–3/9–10), [`scheduler`] (Task Scheduler +
 //!   NSA, §III-C, Eq. 4–8), [`deployer`] (Model Deployer, §III-D), plus
-//!   the [`cluster`] virtual-edge substrate, the [`router`] dynamic
-//!   batcher, the [`pipeline`] distributed executor (serial `run` plus
-//!   the [`pipeline::engine`] streaming micro-batch engine), the
-//!   [`baseline`] monolithic comparator, and the [`runtime`] PJRT
-//!   bridge.
+//!   the [`cluster`] virtual-edge substrate, the [`serving`] unified
+//!   request-level ingress (priority/deadline-aware admission over the
+//!   [`router`] service boundary), the [`pipeline`] distributed
+//!   executor (serial `run` plus the [`pipeline::engine`] streaming
+//!   micro-batch engine), the [`baseline`] monolithic comparator, and
+//!   the [`runtime`] PJRT bridge.
 //! * **L2 (python/compile/model.py)** — MobileNetV2 in JAX, AOT-lowered
 //!   per block to HLO text.
 //! * **L1 (python/compile/kernels/)** — Pallas matmul and depthwise-conv
@@ -46,6 +47,7 @@ pub mod router;
 pub mod runtime;
 pub mod scheduler;
 pub mod server;
+pub mod serving;
 pub mod util;
 pub mod workload;
 

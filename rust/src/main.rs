@@ -9,6 +9,8 @@
 //!                    [--adaptive-depth] [--max-depth M]  # online window sizing
 //!                    [--stage-windows]  # per-stage credit windows
 //!                    [--coalesce]       # merge adjacent small miss-sets
+//!                    [--deadline-ms MS] # default per-request deadline (shed past it)
+//!                    [--priority-classes N]  # strict-priority ingress lanes
 //! amp4ec golden      [--artifacts DIR]
 //! amp4ec config      [--out FILE]       # write a default config file
 //! amp4ec serve-cfg   --config FILE [--requests N]
@@ -78,6 +80,14 @@ fn build_config(args: &Args) -> anyhow::Result<AmpConfig> {
         args.get_usize("max-depth", cfg.max_pipeline_depth)?;
     cfg.per_stage_windows = args.flag("stage-windows");
     cfg.coalesce = args.flag("coalesce");
+    cfg.priority_classes =
+        args.get_usize("priority-classes", cfg.priority_classes)?;
+    if let Some(ms) = args.get("deadline-ms") {
+        cfg.default_deadline_ms = Some(
+            ms.parse()
+                .map_err(|_| anyhow::anyhow!("--deadline-ms expects a number, got `{ms}`"))?,
+        );
+    }
     Ok(cfg)
 }
 
@@ -86,6 +96,7 @@ fn print_report(report: &amp4ec::server::ServeReport) {
     let lat = m.latency_summary();
     println!("requests completed : {}", m.completed);
     println!("requests failed    : {}", m.failed);
+    println!("requests shed      : {}", m.total_shed());
     println!("cache hits         : {}", m.cache_hits);
     println!("latency mean/p50/p95/p99: {:.2} / {:.2} / {:.2} / {:.2} ms",
              lat.mean(), lat.p50(), lat.p95(), lat.p99());
@@ -93,6 +104,31 @@ fn print_report(report: &amp4ec::server::ServeReport) {
     println!("comm overhead      : {:.2} ms/req", m.mean_comm_ms());
     println!("sched overhead     : {:.2} ms/req", m.mean_sched_ms());
     println!("stability score    : {:.3}", m.stability_score());
+    // Per-priority-class breakdown (only classes that saw traffic).
+    for c in &m.classes {
+        if c.completed + c.failed + c.shed() == 0 {
+            continue;
+        }
+        let lat = c.latency_summary();
+        let deadline = if c.deadline_total > 0 {
+            format!(", deadlines met {}/{}", c.deadline_met, c.deadline_total)
+        } else {
+            String::new()
+        };
+        println!(
+            "class {:<12}: {} ok / {} failed / {} shed ({} expired, {} \
+             predicted), p50/p99 {:.2}/{:.2} ms{}",
+            amp4ec::serving::class_name(c.class),
+            c.completed,
+            c.failed,
+            c.shed(),
+            c.shed_expired,
+            c.shed_predicted,
+            lat.p50(),
+            lat.p99(),
+            deadline
+        );
+    }
     println!("deploy transfer    : {:.2} MB", report.deploy_transfer_bytes as f64 / 1e6);
     println!("monitor overhead   : {:.3}% CPU", report.monitor_overhead_pct);
     println!("partition sizes    : {:?}", report.partition_layer_sizes);

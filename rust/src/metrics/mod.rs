@@ -32,6 +32,43 @@ pub struct RunMetrics {
     pub deploy_bytes: u64,
     /// Activation bytes moved between nodes.
     pub activation_bytes: u64,
+    /// Per-priority-class breakdown (index = class; empty when the run
+    /// never recorded class-tagged requests).
+    pub classes: Vec<ClassMetrics>,
+}
+
+/// Per-priority-class serving metrics: latency distribution, shed
+/// counts, and deadline hit rate for one class of the run's traffic.
+#[derive(Debug, Default, Clone)]
+pub struct ClassMetrics {
+    pub class: usize,
+    /// End-to-end per-request latency, ms.
+    pub latency: Vec<f64>,
+    pub completed: u64,
+    pub failed: u64,
+    pub cache_hits: u64,
+    /// Requests shed because their deadline had already passed.
+    pub shed_expired: u64,
+    /// Requests shed because the service-time estimate said the
+    /// deadline could not be met.
+    pub shed_predicted: u64,
+    /// Completed requests that carried a deadline.
+    pub deadline_total: u64,
+    /// Of those, how many finished within it.
+    pub deadline_met: u64,
+}
+
+impl ClassMetrics {
+    pub fn latency_summary(&self) -> Summary {
+        let mut s = Summary::new();
+        s.extend(&self.latency);
+        s
+    }
+
+    /// All sheds (expired + predicted-miss).
+    pub fn shed(&self) -> u64 {
+        self.shed_expired + self.shed_predicted
+    }
 }
 
 impl RunMetrics {
@@ -63,6 +100,16 @@ impl RunMetrics {
         let mut s = Summary::new();
         s.extend(&self.sched);
         s.mean()
+    }
+
+    /// Metrics for one priority class, if any were recorded for it.
+    pub fn class(&self, class: usize) -> Option<&ClassMetrics> {
+        self.classes.get(class)
+    }
+
+    /// Total requests shed across all classes.
+    pub fn total_shed(&self) -> u64 {
+        self.classes.iter().map(ClassMetrics::shed).sum()
     }
 
     /// Stability score: fraction of requests within 2x median latency,
@@ -123,8 +170,64 @@ impl MetricsCollector {
         }
     }
 
+    /// [`MetricsCollector::record_request`] plus the per-class
+    /// breakdown, under one lock acquisition (this is the serving
+    /// ingress's per-request hot path). `deadline_met` is `None` for
+    /// deadline-free requests.
+    #[allow(clippy::too_many_arguments)]
+    pub fn record_request_class(
+        &self,
+        class: usize,
+        latency_ms: f64,
+        compute_ms: f64,
+        comm_ms: f64,
+        sched_ms: f64,
+        cache_hit: bool,
+        deadline_met: Option<bool>,
+    ) {
+        let mut m = self.inner.lock().unwrap();
+        m.latency.push(latency_ms);
+        m.compute.push(compute_ms);
+        m.comm.push(comm_ms);
+        m.sched.push(sched_ms);
+        m.completed += 1;
+        if cache_hit {
+            m.cache_hits += 1;
+        }
+        let c = class_slot(&mut m.classes, class);
+        c.latency.push(latency_ms);
+        c.completed += 1;
+        if cache_hit {
+            c.cache_hits += 1;
+        }
+        if let Some(met) = deadline_met {
+            c.deadline_total += 1;
+            if met {
+                c.deadline_met += 1;
+            }
+        }
+    }
+
     pub fn record_failure(&self) {
         self.inner.lock().unwrap().failed += 1;
+    }
+
+    pub fn record_failure_class(&self, class: usize) {
+        let mut m = self.inner.lock().unwrap();
+        m.failed += 1;
+        class_slot(&mut m.classes, class).failed += 1;
+    }
+
+    /// A request shed by the ingress (deadline expired or predicted to
+    /// miss). Sheds are neither completions nor failures.
+    pub fn record_shed(&self, class: usize, expired: bool) {
+        let mut m = self.inner.lock().unwrap();
+        let c = class_slot(&mut m.classes, class);
+        if expired {
+            c.shed_expired += 1;
+        } else {
+            c.shed_predicted += 1;
+        }
     }
 
     pub fn add_deploy_bytes(&self, bytes: u64) {
@@ -143,6 +246,16 @@ impl MetricsCollector {
         }
         m
     }
+}
+
+/// Grow-and-index into the per-class vector (classes are small dense
+/// indices assigned by the serving ingress).
+fn class_slot(classes: &mut Vec<ClassMetrics>, class: usize) -> &mut ClassMetrics {
+    while classes.len() <= class {
+        let c = classes.len();
+        classes.push(ClassMetrics { class: c, ..ClassMetrics::default() });
+    }
+    &mut classes[class]
 }
 
 /// Per-pipeline-stage occupancy counters produced by the streaming
@@ -345,6 +458,41 @@ mod tests {
         assert!(m.wall_ms >= 5.0);
         assert!((m.mean_latency_ms() - 13.0).abs() < 1e-9);
         assert!((m.mean_comm_ms() - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn per_class_accounting() {
+        let c = MetricsCollector::new();
+        c.start_run();
+        c.record_request_class(0, 5.0, 4.0, 0.5, 0.1, false, Some(true));
+        c.record_request_class(0, 6.0, 4.0, 0.5, 0.1, false, Some(false));
+        c.record_request_class(2, 50.0, 4.0, 0.5, 0.1, true, None);
+        c.record_failure_class(2);
+        c.record_shed(2, true);
+        c.record_shed(2, false);
+        let m = c.finish();
+        // Aggregate view still counts everything.
+        assert_eq!(m.completed, 3);
+        assert_eq!(m.failed, 1);
+        assert_eq!(m.cache_hits, 1);
+        assert_eq!(m.total_shed(), 2);
+        let hi = m.class(0).unwrap();
+        assert_eq!(hi.completed, 2);
+        assert_eq!(hi.deadline_total, 2);
+        assert_eq!(hi.deadline_met, 1);
+        assert_eq!(hi.shed(), 0);
+        assert!((hi.latency_summary().mean() - 5.5).abs() < 1e-9);
+        // Class 1 exists as a zeroed slot (dense indexing), class 2 has
+        // the best-effort traffic.
+        assert_eq!(m.class(1).unwrap().completed, 0);
+        let be = m.class(2).unwrap();
+        assert_eq!(be.completed, 1);
+        assert_eq!(be.failed, 1);
+        assert_eq!(be.cache_hits, 1);
+        assert_eq!(be.shed_expired, 1);
+        assert_eq!(be.shed_predicted, 1);
+        assert_eq!(be.shed(), 2);
+        assert!(m.class(3).is_none());
     }
 
     #[test]

@@ -1586,11 +1586,37 @@ impl BatchHandle {
 
 /// One batch handed to the feeder thread: the waiter's reply sender and
 /// the raw rows (chunking happens feeder-side so adjacent submissions
-/// can coalesce into shared micro-batches).
+/// can coalesce into shared micro-batches), plus the request-level
+/// context the serving ingress threads through — the priority class the
+/// feeder orders pending submissions by, and an optional wall-clock
+/// deadline checked right before admission.
 struct SubmitMsg {
     reply: Sender<Result<EngineRun>>,
     tensor: Tensor,
+    /// Priority class (0 = most urgent): when several submissions are
+    /// waiting, the feeder admits the lowest class first (FIFO within a
+    /// class).
+    class: usize,
+    /// Absolute deadline: if it has already passed when the feeder is
+    /// about to admit the batch, the batch is shed with a
+    /// [`DeadlineShed`] error instead of spending engine credits on
+    /// output nobody can use.
+    deadline: Option<std::time::Instant>,
 }
+
+/// Marker error for a batch the engine shed because its deadline
+/// expired while it waited in the submission queue. Callers (the
+/// serving ingress) downcast to tell a shed from a real failure.
+#[derive(Debug, Clone, Copy)]
+pub struct DeadlineShed;
+
+impl std::fmt::Display for DeadlineShed {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "deadline expired before engine admission; batch shed")
+    }
+}
+
+impl std::error::Error for DeadlineShed {}
 
 /// Feeder-side coalescing counters (see
 /// [`crate::metrics::CoalesceStats`]).
@@ -1684,15 +1710,19 @@ pub fn budgets_from_profile(
     w
 }
 
-/// Persistent feeder loop: pop submissions, optionally coalesce
-/// adjacent small ones into a single transport (only when merging
-/// strictly reduces the micro-batch count — short tails packing
-/// together — and tails are shape-compatible), register the transport,
-/// and feed its micro-batches through the credit windows. A submission
-/// that arrives while the previous one is still acquiring credits
-/// queues up and becomes a coalescing candidate, which is exactly the
-/// "window under-filled" condition: saturated pipelines back-pressure
-/// the feeder and small miss-sets pile up behind it.
+/// Persistent feeder loop: pop submissions, admit the most urgent one
+/// (lowest priority class, FIFO within a class — a backlogged
+/// submission queue is exactly where request-level priority matters),
+/// shed it instead if its deadline already passed, optionally coalesce
+/// adjacent small same-class submissions into a single transport (only
+/// when merging strictly reduces the micro-batch count — short tails
+/// packing together — and tails are shape-compatible), register the
+/// transport, and feed its micro-batches through the credit windows. A
+/// submission that arrives while the previous one is still acquiring
+/// credits queues up and becomes a reordering/coalescing candidate,
+/// which is exactly the "window under-filled" condition: saturated
+/// pipelines back-pressure the feeder and small miss-sets pile up
+/// behind it.
 fn feeder_loop(
     submit_rx: Receiver<SubmitMsg>,
     feed_tx: SyncSender<PFlow>,
@@ -1703,36 +1733,81 @@ fn feeder_loop(
     counters: Arc<CoalesceCounters>,
 ) {
     let mut next_id: u64 = 0;
-    let mut pending: Option<SubmitMsg> = None;
+    let mut next_seq: u64 = 0;
+    // Pending submissions, always ascending by arrival seq (drained from
+    // the FIFO channel in order). With a single class the head pick
+    // below is exactly the old FIFO pop, so default traffic keeps the
+    // PR-3 schedule bit-for-bit.
+    let mut buf: Vec<(u64, SubmitMsg)> = Vec::new();
     loop {
-        let first = match pending.take() {
-            Some(s) => s,
-            None => match submit_rx.recv() {
-                Ok(s) => s,
+        if buf.is_empty() {
+            match submit_rx.recv() {
+                Ok(s) => {
+                    buf.push((next_seq, s));
+                    next_seq += 1;
+                }
                 Err(_) => break, // all submit senders dropped
-            },
-        };
+            }
+        }
+        // Opportunistic drain so priority sees everything waiting.
+        while let Ok(s) = submit_rx.try_recv() {
+            buf.push((next_seq, s));
+            next_seq += 1;
+        }
+        let head = buf
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, (seq, m))| (m.class, *seq))
+            .map(|(i, _)| i)
+            .expect("buffer non-empty");
+        let (_, first) = buf.remove(head);
+        if let Some(d) = first.deadline {
+            if std::time::Instant::now() >= d {
+                let _ = first
+                    .reply
+                    .send(Err(anyhow::Error::new(DeadlineShed)));
+                continue;
+            }
+        }
+        let cls = first.class;
         let mut group = vec![first];
         if coalesce {
-            while group.len() < MAX_COALESCE_MEMBERS {
-                match submit_rx.try_recv() {
-                    Ok(next) => {
-                        let cur_rows: usize =
-                            group.iter().map(|s| s.tensor.shape[0]).sum();
-                        let nrows = next.tensor.shape[0];
-                        let tail_ok = next.tensor.shape[1..]
-                            == group[0].tensor.shape[1..];
-                        let saves = chunks_for(cur_rows, micro)
-                            + chunks_for(nrows, micro)
-                            > chunks_for(cur_rows + nrows, micro);
-                        if tail_ok && saves {
-                            group.push(next);
-                        } else {
-                            pending = Some(next);
-                            break;
+            // Scan remaining pending submissions in arrival order,
+            // merging same-class neighbours; stop at the first
+            // same-class candidate that doesn't merge (the old
+            // stop-at-first-non-merging rule).
+            let mut i = 0;
+            while group.len() < MAX_COALESCE_MEMBERS && i < buf.len() {
+                if buf[i].1.class != cls {
+                    i += 1;
+                    continue;
+                }
+                let cur_rows: usize =
+                    group.iter().map(|s| s.tensor.shape[0]).sum();
+                let nrows = buf[i].1.tensor.shape[0];
+                let tail_ok =
+                    buf[i].1.tensor.shape[1..] == group[0].tensor.shape[1..];
+                let saves = chunks_for(cur_rows, micro)
+                    + chunks_for(nrows, micro)
+                    > chunks_for(cur_rows + nrows, micro);
+                if tail_ok && saves {
+                    let (_, next) = buf.remove(i);
+                    // The head's deadline was checked above; a merged
+                    // member gets the same pre-admission check — an
+                    // expired candidate is shed here instead of riding
+                    // the transport into the pipeline (re-examine the
+                    // same index after the removal either way).
+                    if let Some(d) = next.deadline {
+                        if std::time::Instant::now() >= d {
+                            let _ = next
+                                .reply
+                                .send(Err(anyhow::Error::new(DeadlineShed)));
+                            continue;
                         }
                     }
-                    Err(_) => break, // nothing immediately available
+                    group.push(next);
+                } else {
+                    break;
                 }
             }
         }
@@ -1842,6 +1917,11 @@ pub struct PersistentEngine {
     depth_stats: Arc<DepthStats>,
     windows: Arc<CreditWindows>,
     coalesce: Arc<CoalesceCounters>,
+    /// `[min_depth, max_depth]` of the adaptive controller, if one is
+    /// active — [`PersistentEngine::reshape_budgets`] clamps external
+    /// targets into it so a live retune can never fight the controller
+    /// out of its configured range.
+    budget_bounds: Option<(usize, usize)>,
 }
 
 impl PersistentEngine {
@@ -2004,6 +2084,7 @@ impl PersistentEngine {
             depth_stats,
             windows,
             coalesce: coalesce_counters,
+            budget_bounds: cfg.adaptive.map(|a| (a.min_depth, a.max_depth)),
         })
     }
 
@@ -2018,14 +2099,27 @@ impl PersistentEngine {
     }
 
     /// By-value submission: avoids the defensive row copy when the
-    /// caller already owns the batch (the router's streaming path hands
-    /// its stacked miss-set straight through).
+    /// caller already owns the batch (the ingress streaming path hands
+    /// its stacked miss-set straight through). Class 0, no deadline.
     pub fn submit_owned(&self, input: Tensor) -> Result<BatchHandle> {
+        self.submit_owned_with(input, 0, None)
+    }
+
+    /// Submission with request-level context: `class` orders pending
+    /// submissions in the feeder (lowest first, FIFO within a class) and
+    /// `deadline` lets the feeder shed the batch with a [`DeadlineShed`]
+    /// error if it expires before admission.
+    pub fn submit_owned_with(
+        &self,
+        input: Tensor,
+        class: usize,
+        deadline: Option<std::time::Instant>,
+    ) -> Result<BatchHandle> {
         anyhow::ensure!(!input.shape.is_empty(), "cannot submit a scalar tensor");
         anyhow::ensure!(input.shape[0] > 0, "empty batch");
         let (reply_tx, reply_rx) = channel::<Result<EngineRun>>();
         let submit_tx = self.submit_tx.as_ref().expect("engine running");
-        let msg = SubmitMsg { reply: reply_tx, tensor: input };
+        let msg = SubmitMsg { reply: reply_tx, tensor: input, class, deadline };
         if submit_tx.send(msg).is_err() {
             anyhow::bail!("persistent engine is shut down");
         }
@@ -2062,6 +2156,40 @@ impl PersistentEngine {
     /// [`carry_stage_budgets`]).
     pub fn stage_budgets(&self) -> Vec<usize> {
         self.windows.budgets_snapshot()
+    }
+
+    /// Move the live per-stage budgets toward `target` without draining
+    /// the pipeline: each window is widened credit by credit (new
+    /// credits valued at the current makespan, so their clocks start
+    /// "now") or narrowed by marking returned credits for absorption —
+    /// the same primitives the adaptive controller uses, so a retune is
+    /// safe while batches are in flight and composes with a concurrent
+    /// controller (both paths go through the atomic budget counters).
+    /// Targets are clamped to the adaptive `[min, max]` range when a
+    /// controller is active, and never below 1. Extra entries in
+    /// `target` are ignored; missing ones leave their windows untouched.
+    ///
+    /// This is how the serving layer re-shapes windows from the
+    /// monitor's *live* profile (`budgets_from_profile` over
+    /// load-scaled stage latencies) instead of only a startup probe.
+    pub fn reshape_budgets(&self, target: &[usize]) {
+        let now = lock_state(&self.state).cp.makespan_ms();
+        let (lo, hi) = self.budget_bounds.unwrap_or((1, usize::MAX));
+        for (k, &t) in target.iter().enumerate().take(self.windows.n()) {
+            let want = t.clamp(lo.max(1), hi);
+            let cur = self.windows.budgets[k].load(Ordering::SeqCst);
+            if want > cur {
+                for _ in cur..want {
+                    self.windows.widen(k, now);
+                }
+            } else {
+                for _ in want..cur {
+                    self.windows.narrow(k);
+                }
+            }
+        }
+        // Keep the reported depth (== delivery budget) in sync.
+        self.depth_stats.set_depth(self.windows.delivery_budget());
     }
 
     /// Feeder-side coalescing counters since startup.

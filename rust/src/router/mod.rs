@@ -1,39 +1,38 @@
-//! Request router + dynamic batcher.
+//! The inference-service abstraction the serving ingress dispatches
+//! into.
 //!
-//! Requests enter a bounded queue; the batcher groups up to
-//! `service.batch_size()` of them within `max_wait` (the paper's ~10 ms
-//! scheduling overhead is exactly this admission delay plus node
-//! selection), checks the result cache, and dispatches misses to an
-//! [`InferenceService`] on a worker pool so multiple batches are in
-//! flight at once.
+//! This module used to own the whole request path — a raw
+//! `SyncSender<Request>` channel, the batching loop (`serve`), and the
+//! cache/padding plumbing. All of that moved into the unified
+//! request-level ingress ([`crate::serving`]): requests now enter
+//! through a `ServiceHandle` with per-request priority and deadline,
+//! and the ingress dispatcher is the only place batches are formed.
+//! What remains here is the boundary the dispatcher talks to:
 //!
-//! Streaming services (the `DistributedService` with `pipeline_depth >
-//! 1`, adaptive depth, per-stage windows, or coalescing) override
-//! [`InferenceService::submit_batch`] to feed their **persistent**
-//! `pipeline::engine` directly: the worker's submission enqueues the
-//! super-batch's micro-batches behind whatever is already flowing —
-//! successive router batches stream back-to-back through the same
-//! long-lived stage drivers with no inter-batch drain — and the worker
-//! then blocks only on that batch's own completion. With coalescing the
-//! engine's feeder may merge adjacent small miss-sets (each still its
-//! own `submit_batch` call, padded to exact rows via
-//! [`InferenceService::padded_rows`]) into shared micro-batches; every
-//! worker still gets exactly its own batch's rows back, so the router
-//! needs no awareness of the merge. Services without a streaming path
-//! fall back to a synchronous [`InferenceService::infer_batch`] on the
-//! worker.
-
-use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
-use std::sync::Arc;
-use std::time::{Duration, Instant};
+//! * [`InferenceService`] — anything that can run a stacked batch
+//!   (distributed pipeline, monolithic baseline, mocks in tests).
+//! * [`Submission`] — how a service accepted a batch: an asynchronous
+//!   streaming waiter ([`Submission::Pending`]) or a handed-back tensor
+//!   for synchronous execution ([`Submission::Inline`]).
+//! * [`BatchMeta`] — the request-level context (priority class,
+//!   batch deadline) the ingress threads through to the engine's
+//!   admission and the scheduler's per-class charging.
 
 use anyhow::Result;
 
-use crate::metrics::{MetricsCollector, RunMetrics};
-use crate::pipeline::stack_batch;
 use crate::runtime::Tensor;
-use crate::scheduler::cache::{input_key, ResultCache};
-use crate::util::pool::{ThreadPool, WaitGroup};
+
+/// Request-level context for one dispatched batch: the strictest
+/// priority class among its requests, and — when every request carries
+/// a deadline — the most lenient of them (so an engine-side shed is
+/// correct for every member).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BatchMeta {
+    /// Priority class (0 = most urgent).
+    pub class: usize,
+    /// Absolute deadline for the whole batch, if every member has one.
+    pub deadline: Option<std::time::Instant>,
+}
 
 /// How a service accepted a stacked batch (see
 /// [`InferenceService::submit_batch`]).
@@ -42,8 +41,9 @@ pub enum Submission {
     /// until that batch's rows are delivered and returns the usual
     /// `(output, compute_ms, comm_ms)` triple.
     Pending(Box<dyn FnOnce() -> Result<(Tensor, f64, f64)> + Send>),
-    /// No streaming path: the router worker should run
-    /// [`InferenceService::infer_batch`] on the returned batch itself.
+    /// No streaming path: the ingress worker should run
+    /// [`InferenceService::infer_batch_meta`] on the returned batch
+    /// itself.
     Inline(Tensor),
 }
 
@@ -54,13 +54,34 @@ pub trait InferenceService: Send + Sync {
     /// (compute ms, comm ms).
     fn infer_batch(&self, batch: &Tensor) -> Result<(Tensor, f64, f64)>;
 
+    /// Like [`InferenceService::infer_batch`] but with the batch's
+    /// request-level context, so synchronous services can still charge
+    /// per class. Defaults to ignoring the meta.
+    fn infer_batch_meta(
+        &self,
+        batch: &Tensor,
+        meta: BatchMeta,
+    ) -> Result<(Tensor, f64, f64)> {
+        let _ = meta;
+        self.infer_batch(batch)
+    }
+
     /// Submit a stacked batch, preferring an asynchronous streaming
     /// path. Streaming services override this to enqueue the batch into
     /// their persistent engine (so successive batches overlap) and
     /// return [`Submission::Pending`]; the default hands the batch back
-    /// for a synchronous `infer_batch`.
+    /// for a synchronous `infer_batch_meta`.
     fn submit_batch(&self, batch: Tensor) -> Submission {
         Submission::Inline(batch)
+    }
+
+    /// [`InferenceService::submit_batch`] with request-level context:
+    /// streaming services thread `meta.class` into their engine's
+    /// admission ordering and `meta.deadline` into its pre-admission
+    /// shed check. Defaults to the meta-less path.
+    fn submit_batch_meta(&self, batch: Tensor, meta: BatchMeta) -> Submission {
+        let _ = meta;
+        self.submit_batch(batch)
     }
 
     /// The fixed batch the service's artifacts were compiled for.
@@ -78,433 +99,4 @@ pub trait InferenceService: Send + Sync {
 
     /// A stable id namespacing cache keys.
     fn model_id(&self) -> u64;
-}
-
-/// One inference request.
-pub struct Request {
-    pub id: u64,
-    pub input: Tensor,
-    pub enqueued: Instant,
-}
-
-/// Router configuration.
-#[derive(Debug, Clone)]
-pub struct RouterConfig {
-    /// Batch admission window.
-    pub max_wait: Duration,
-    /// Concurrent batches in flight.
-    pub workers: usize,
-}
-
-impl Default for RouterConfig {
-    fn default() -> Self {
-        RouterConfig {
-            max_wait: Duration::from_millis(10),
-            workers: 4,
-        }
-    }
-}
-
-/// Drive `service` with requests from `rx` until the channel closes,
-/// optionally consulting a caller-owned result cache (the cache outlives
-/// individual runs — AMP4EC+Cache's warm-cache behaviour). Returns
-/// aggregate run metrics.
-pub fn serve(
-    service: Arc<dyn InferenceService>,
-    rx: Receiver<Request>,
-    config: RouterConfig,
-    cache: Option<Arc<ResultCache>>,
-) -> RunMetrics {
-    let metrics = Arc::new(MetricsCollector::new());
-    metrics.start_run();
-    let pool = ThreadPool::new(config.workers, "router");
-    let batch_size = service.batch_size();
-
-    // One shared counter tracks outstanding batches; we wait for it to
-    // drain once at the end. (This used to be a Vec with one WaitGroup
-    // pushed per batch for the whole run — unbounded growth under
-    // sustained traffic.)
-    let drain = WaitGroup::new(0);
-
-    loop {
-        // ---- collect a batch ----
-        let mut batch: Vec<Request> = Vec::with_capacity(batch_size);
-        match rx.recv() {
-            Ok(first) => batch.push(first),
-            Err(_) => break, // channel closed and drained
-        }
-        let deadline = Instant::now() + config.max_wait;
-        while batch.len() < batch_size {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(r) => batch.push(r),
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => break,
-            }
-        }
-
-        // ---- dispatch ----
-        drain.add(1);
-        let wg = drain.clone_handle();
-        let service = Arc::clone(&service);
-        let metrics = Arc::clone(&metrics);
-        let cache = cache.clone();
-        let dispatched = Instant::now();
-        pool.execute(move || {
-            process_batch(&*service, batch, cache.as_deref(), &metrics, dispatched);
-            wg.done();
-        });
-    }
-
-    drain.wait();
-    metrics.finish()
-}
-
-fn process_batch(
-    service: &dyn InferenceService,
-    batch: Vec<Request>,
-    cache: Option<&ResultCache>,
-    metrics: &MetricsCollector,
-    dispatched: Instant,
-) {
-    // Split into cache hits and misses (misses keep their batch index so
-    // cache inserts are O(1) lookups, not per-row scans). Without a
-    // cache there is nothing to key: skip hashing every input tensor.
-    let mut misses: Vec<(usize, &Request)> = Vec::new();
-    let mut hits: Vec<usize> = Vec::new();
-    let mut keys: Vec<u64> = Vec::new();
-    match cache {
-        Some(c) => {
-            keys.reserve(batch.len());
-            for (i, r) in batch.iter().enumerate() {
-                let key = input_key(service.model_id(), &r.input.data);
-                keys.push(key);
-                match c.get(key) {
-                    Some(_row) => hits.push(i), // Arc clone; bytes untouched
-                    None => misses.push((i, r)),
-                }
-            }
-        }
-        None => misses.extend(batch.iter().enumerate()),
-    }
-
-    // Serve hits immediately (zero compute / comm).
-    for i in &hits {
-        let r = &batch[*i];
-        let latency = r.enqueued.elapsed().as_secs_f64() * 1e3;
-        let sched = (dispatched - r.enqueued).as_secs_f64() * 1e3;
-        metrics.record_request(latency, 0.0, 0.0, sched, true);
-    }
-    if misses.is_empty() {
-        return;
-    }
-
-    // Run the miss set as one stacked batch. `submit_batch` lets a
-    // streaming service enqueue it into its persistent engine right
-    // behind the previous batch (no inter-batch drain); this worker then
-    // waits only for its own batch's completion.
-    let inputs: Vec<&Tensor> = misses.iter().map(|(_, r)| &r.input).collect();
-    let stacked = match stack_batch(&inputs, service.padded_rows(misses.len())) {
-        Ok(t) => t,
-        Err(_) => {
-            for _ in &misses {
-                metrics.record_failure();
-            }
-            return;
-        }
-    };
-    let stacked_bytes = stacked.byte_len();
-    let result = match service.submit_batch(stacked) {
-        Submission::Pending(wait) => wait(),
-        Submission::Inline(t) => service.infer_batch(&t),
-    };
-    match result {
-        Ok((output, compute_ms, comm_ms)) => {
-            let row_len: usize = output.shape.iter().skip(1).product();
-            if output.shape.is_empty()
-                || output.shape[0] < misses.len()
-                || row_len == 0
-            {
-                for _ in &misses {
-                    metrics.record_failure();
-                }
-                return;
-            }
-            metrics.add_activation_bytes(stacked_bytes + output.byte_len());
-            for (slot, (idx, r)) in misses.iter().enumerate() {
-                let latency = r.enqueued.elapsed().as_secs_f64() * 1e3;
-                let sched = (dispatched - r.enqueued).as_secs_f64() * 1e3;
-                metrics.record_request(latency, compute_ms, comm_ms, sched, false);
-                if let Some(c) = cache {
-                    // One copy out of the batched output into a shared
-                    // row; the cache keeps an Arc clone of the same
-                    // allocation the response path hands out.
-                    let row: std::sync::Arc<[f32]> = output.data
-                        [slot * row_len..(slot + 1) * row_len]
-                        .into();
-                    c.put(keys[*idx], row);
-                }
-            }
-        }
-        Err(_) => {
-            for _ in &misses {
-                metrics.record_failure();
-            }
-        }
-    }
-}
-
-/// Convenience: a bounded request channel pair.
-pub fn request_channel(capacity: usize) -> (SyncSender<Request>, Receiver<Request>) {
-    std::sync::mpsc::sync_channel(capacity)
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    /// A fake service: output = input * 2, sleeps 2 ms per batch.
-    struct Doubler {
-        batch: usize,
-    }
-
-    impl InferenceService for Doubler {
-        fn infer_batch(&self, batch: &Tensor) -> Result<(Tensor, f64, f64)> {
-            std::thread::sleep(Duration::from_millis(2));
-            let data = batch.data.iter().map(|v| v * 2.0).collect();
-            Ok((Tensor::new(batch.shape.clone(), data)?, 2.0, 0.1))
-        }
-        fn batch_size(&self) -> usize {
-            self.batch
-        }
-        fn model_id(&self) -> u64 {
-            7
-        }
-    }
-
-    fn send_n(tx: &SyncSender<Request>, n: usize, distinct: usize) {
-        for i in 0..n {
-            let v = (i % distinct) as f32;
-            tx.send(Request {
-                id: i as u64,
-                input: Tensor::new(vec![1, 4], vec![v; 4]).unwrap(),
-                enqueued: Instant::now(),
-            })
-            .unwrap();
-        }
-    }
-
-    #[test]
-    fn serves_all_requests() {
-        let (tx, rx) = request_channel(64);
-        send_n(&tx, 20, 20);
-        drop(tx);
-        let m = serve(Arc::new(Doubler { batch: 4 }), rx,
-                      RouterConfig::default(), None);
-        assert_eq!(m.completed, 20);
-        assert_eq!(m.failed, 0);
-        assert_eq!(m.cache_hits, 0);
-        assert!(m.mean_latency_ms() > 0.0);
-    }
-
-    #[test]
-    fn cache_hits_on_repeated_inputs() {
-        let (tx, rx) = request_channel(64);
-        send_n(&tx, 30, 3); // only 3 distinct inputs
-        drop(tx);
-        let m = serve(
-            Arc::new(Doubler { batch: 1 }),
-            rx,
-            RouterConfig::default(),
-            Some(Arc::new(ResultCache::new(16))),
-        );
-        assert_eq!(m.completed, 30);
-        assert!(m.cache_hits >= 20, "hits {}", m.cache_hits);
-    }
-
-    #[test]
-    fn batching_reduces_service_calls() {
-        use std::sync::atomic::{AtomicUsize, Ordering};
-        struct Counting {
-            calls: AtomicUsize,
-        }
-        impl InferenceService for Counting {
-            fn infer_batch(&self, batch: &Tensor) -> Result<(Tensor, f64, f64)> {
-                self.calls.fetch_add(1, Ordering::SeqCst);
-                Ok((batch.clone(), 0.0, 0.0))
-            }
-            fn batch_size(&self) -> usize {
-                8
-            }
-            fn model_id(&self) -> u64 {
-                1
-            }
-        }
-        let svc = Arc::new(Counting { calls: AtomicUsize::new(0) });
-        let (tx, rx) = request_channel(64);
-        send_n(&tx, 16, 16);
-        drop(tx);
-        let m = serve(Arc::clone(&svc) as Arc<dyn InferenceService>, rx,
-                      RouterConfig::default(), None);
-        assert_eq!(m.completed, 16);
-        // 16 requests at batch 8 in <= ~4 calls (timing-dependent but far
-        // fewer than 16).
-        assert!(svc.calls.load(Ordering::SeqCst) <= 8);
-    }
-
-    #[test]
-    fn padded_rows_override_controls_stacking() {
-        // A streaming-style service pads misses to its micro-batch
-        // multiple, not the full admission batch.
-        struct MicroPad;
-        impl InferenceService for MicroPad {
-            fn infer_batch(&self, batch: &Tensor) -> Result<(Tensor, f64, f64)> {
-                anyhow::ensure!(
-                    batch.shape[0] % 2 == 0 && batch.shape[0] < 8,
-                    "expected micro-batch-multiple padding, got {:?}",
-                    batch.shape
-                );
-                Ok((batch.clone(), 0.0, 0.0))
-            }
-            fn batch_size(&self) -> usize {
-                8
-            }
-            fn padded_rows(&self, n: usize) -> usize {
-                (n + 1) / 2 * 2 // micro-batch of 2
-            }
-            fn model_id(&self) -> u64 {
-                3
-            }
-        }
-        let (tx, rx) = request_channel(16);
-        send_n(&tx, 3, 3); // one admission of 3 misses -> padded to 4
-        drop(tx);
-        let m = serve(Arc::new(MicroPad), rx, RouterConfig::default(), None);
-        assert_eq!(m.completed, 3);
-        assert_eq!(m.failed, 0);
-    }
-
-    #[test]
-    fn long_run_drain_bookkeeping_stays_bounded() {
-        // Sustained traffic: many batches through one serve() call. With
-        // the shared-counter drain the bookkeeping is O(1); the run must
-        // complete everything and end fully drained.
-        struct Instant0 {
-            batch: usize,
-        }
-        impl InferenceService for Instant0 {
-            fn infer_batch(&self, batch: &Tensor) -> Result<(Tensor, f64, f64)> {
-                Ok((batch.clone(), 0.1, 0.0))
-            }
-            fn batch_size(&self) -> usize {
-                self.batch
-            }
-            fn model_id(&self) -> u64 {
-                9
-            }
-        }
-        let (tx, rx) = request_channel(512);
-        send_n(&tx, 400, 400);
-        drop(tx);
-        let m = serve(
-            Arc::new(Instant0 { batch: 2 }),
-            rx,
-            RouterConfig { max_wait: Duration::from_millis(1), workers: 4 },
-            None,
-        );
-        assert_eq!(m.completed, 400);
-        assert_eq!(m.failed, 0);
-    }
-
-    #[test]
-    fn pending_submissions_drive_the_streaming_path() {
-        use std::sync::atomic::{AtomicUsize, Ordering};
-        // A streaming-style service: submit_batch returns a Pending
-        // waiter and infer_batch must never be called by the router.
-        struct Streaming {
-            submissions: AtomicUsize,
-            inline_calls: AtomicUsize,
-        }
-        impl InferenceService for Streaming {
-            fn infer_batch(&self, batch: &Tensor) -> Result<(Tensor, f64, f64)> {
-                self.inline_calls.fetch_add(1, Ordering::SeqCst);
-                Ok((batch.clone(), 0.0, 0.0))
-            }
-            fn submit_batch(&self, batch: Tensor) -> Submission {
-                self.submissions.fetch_add(1, Ordering::SeqCst);
-                Submission::Pending(Box::new(move || {
-                    let data = batch.data.iter().map(|v| v + 1.0).collect();
-                    Ok((Tensor::new(batch.shape.clone(), data)?, 1.0, 0.5))
-                }))
-            }
-            fn batch_size(&self) -> usize {
-                4
-            }
-            fn model_id(&self) -> u64 {
-                11
-            }
-        }
-        let svc = Arc::new(Streaming {
-            submissions: AtomicUsize::new(0),
-            inline_calls: AtomicUsize::new(0),
-        });
-        let (tx, rx) = request_channel(32);
-        send_n(&tx, 8, 8);
-        drop(tx);
-        let m = serve(
-            Arc::clone(&svc) as Arc<dyn InferenceService>,
-            rx,
-            RouterConfig::default(),
-            None,
-        );
-        assert_eq!(m.completed, 8);
-        assert_eq!(m.failed, 0);
-        assert!(svc.submissions.load(Ordering::SeqCst) >= 1);
-        assert_eq!(svc.inline_calls.load(Ordering::SeqCst), 0);
-    }
-
-    #[test]
-    fn cache_rows_are_shared_not_copied() {
-        // After a miss populates the cache, a repeat of the same input
-        // must hit; the stored row is the Arc the router built.
-        let cache = Arc::new(ResultCache::new(8));
-        let (tx, rx) = request_channel(16);
-        send_n(&tx, 6, 2); // 2 distinct inputs, repeated
-        drop(tx);
-        let m = serve(
-            Arc::new(Doubler { batch: 1 }),
-            rx,
-            RouterConfig::default(),
-            Some(Arc::clone(&cache)),
-        );
-        assert_eq!(m.completed, 6);
-        assert!(m.cache_hits >= 2, "hits {}", m.cache_hits);
-        let stats = cache.stats();
-        assert_eq!(stats.entries, 2);
-    }
-
-    #[test]
-    fn failures_are_counted() {
-        struct Failing;
-        impl InferenceService for Failing {
-            fn infer_batch(&self, _batch: &Tensor) -> Result<(Tensor, f64, f64)> {
-                anyhow::bail!("boom")
-            }
-            fn batch_size(&self) -> usize {
-                2
-            }
-            fn model_id(&self) -> u64 {
-                2
-            }
-        }
-        let (tx, rx) = request_channel(16);
-        send_n(&tx, 4, 4);
-        drop(tx);
-        let m = serve(Arc::new(Failing), rx, RouterConfig::default(), None);
-        assert_eq!(m.completed, 0);
-        assert_eq!(m.failed, 4);
-    }
 }

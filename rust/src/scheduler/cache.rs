@@ -96,6 +96,16 @@ impl ResultCache {
         }
     }
 
+    /// Stats-neutral presence probe: no hit/miss accounting, no LRU
+    /// touch. The serving ingress uses this at admission — a request
+    /// whose answer is already cached costs ~0 ms to serve, so the
+    /// deadline shedder must not reject it on the batch service-time
+    /// estimate, and the probe must not distort the cache metrics the
+    /// real lookup records later.
+    pub fn contains(&self, key: u64) -> bool {
+        self.map.lock().unwrap().contains_key(&key)
+    }
+
     pub fn put(&self, key: u64, value: Arc<[f32]>) {
         let tick = self.tick.fetch_add(1, Ordering::SeqCst);
         let mut map = self.map.lock().unwrap();

@@ -378,6 +378,21 @@ impl Scheduler {
         self.tasks_failed(std::slice::from_ref(&node));
     }
 
+    /// A dispatched batch was *shed* (deadline expired before the
+    /// engine admitted it): the nodes never executed anything, so the
+    /// started charge is reversed without recording a failure — a shed
+    /// is an admission-control decision, not a node fault, and counting
+    /// it as one would poison Eq. 7's stability score for healthy
+    /// nodes.
+    pub fn tasks_cancelled(&self, nodes: &[NodeId]) {
+        let mut state = self.state.lock().unwrap();
+        for node in nodes {
+            if let Some(c) = state.active_tasks.get_mut(node) {
+                *c = c.saturating_sub(1);
+            }
+        }
+    }
+
     /// Batch failure: release and count every stage node at once (the
     /// multi-node counterpart of [`Scheduler::task_failed`]).
     pub fn tasks_failed(&self, nodes: &[NodeId]) {

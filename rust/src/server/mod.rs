@@ -2,8 +2,11 @@
 //!
 //! Build from an [`AmpConfig`]: create the virtual cluster, spawn the
 //! resource monitor, compute a partition plan, deploy it, then serve
-//! workloads through the router. This is the end-to-end composition the
-//! examples and the table benches drive.
+//! requests through the unified serving ingress
+//! ([`EdgeServer::serve_handle`] — every entry point, from the CLI
+//! serve loop to [`single_request`] and [`EdgeServer::golden_check`],
+//! rides the same request-level path). This is the end-to-end
+//! composition the examples and the table benches drive.
 
 use std::sync::{Arc, Mutex, RwLock};
 
@@ -13,13 +16,14 @@ use crate::cluster::Cluster;
 use crate::config::AmpConfig;
 use crate::deployer::{Deployment, ModelDeployer};
 use crate::manifest::Manifest;
-use crate::metrics::RunMetrics;
-use crate::monitor::{self, MonitorHandle};
+use crate::metrics::{RunMetrics, StageCounter};
+use crate::monitor::{self, ClusterSnapshot, MonitorHandle};
 use crate::partitioner::{self, Plan};
-use crate::pipeline::{self, engine};
-use crate::router::{self, InferenceService, Submission};
+use crate::pipeline::engine;
+use crate::router::{BatchMeta, InferenceService, Submission};
 use crate::runtime::{Executor, Tensor};
 use crate::scheduler::{ResultCache, Scheduler};
+use crate::serving::ServiceHandle;
 use crate::workload::{feed, Arrival, InputPool};
 
 /// Boxed completion waiter produced by the streaming submission path:
@@ -213,16 +217,44 @@ impl DistributedService {
         }
     }
 
+    /// Reshape the engine's per-stage credit windows from the monitor's
+    /// *live* profile (the ROADMAP follow-on to probe-batch shaping,
+    /// behind the same `--stage-windows` flag): the engine's measured
+    /// per-micro-batch stage latencies are scaled by each stage node's
+    /// current load from `snapshot`
+    /// ([`live_stage_latencies`]), re-shaped into budgets with
+    /// `budgets_from_profile` at the *current* credit total, and applied
+    /// in place with `PersistentEngine::reshape_budgets` — no drain, no
+    /// engine rebuild. Returns the resulting live budgets, or None when
+    /// per-stage windows are off, no engine is running, or no stage has
+    /// served traffic yet (a cold engine has no profile to shape from).
+    pub fn retune_windows(&self, snapshot: &ClusterSnapshot) -> Option<Vec<usize>> {
+        if !self.per_stage_windows {
+            return None;
+        }
+        let engine = self.engine.lock().unwrap().clone()?;
+        let latencies =
+            live_stage_latencies(&engine.total_counters(), snapshot)?;
+        let total: usize = engine.stage_budgets().iter().sum();
+        let target = engine::budgets_from_profile(&latencies, total);
+        engine.reshape_budgets(&target);
+        Some(engine.stage_budgets())
+    }
+
     /// Feed the persistent engine (by value — the batch's rows go
     /// straight into the feeder with no defensive copy), returning a
     /// completion waiter; hands the batch back untouched when no engine
-    /// is configured (serial schedule). Node charging uses the
-    /// *engine's* stage nodes — during a deployment swap a batch
-    /// submitted to the old engine still executes on the old stages, so
-    /// reading `self.deployment` here could charge the wrong nodes.
+    /// is configured (serial schedule). The batch's request-level
+    /// context threads through: `meta.class` orders pending submissions
+    /// in the engine feeder and `meta.deadline` arms its pre-admission
+    /// shed check. Node charging uses the *engine's* stage nodes —
+    /// during a deployment swap a batch submitted to the old engine
+    /// still executes on the old stages, so reading `self.deployment`
+    /// here could charge the wrong nodes.
     fn submit_streaming(
         &self,
         batch: Tensor,
+        meta: BatchMeta,
     ) -> std::result::Result<InferWait, Tensor> {
         // Hold the deployment read guard across the engine lookup *and*
         // the submission: replace_deployment's write lock then waits for
@@ -239,7 +271,7 @@ impl DistributedService {
         self.scheduler.tasks_started(&node_ids);
         let scheduler = Arc::clone(&self.scheduler);
         let stage_counters = Arc::clone(&self.stage_counters);
-        match engine.submit_owned(batch) {
+        match engine.submit_owned_with(batch, meta.class, meta.deadline) {
             Ok(handle) => Ok(Box::new(move || match handle.wait() {
                 Ok(run) => {
                     stage_counters.merge(&run.stage_counters);
@@ -250,7 +282,14 @@ impl DistributedService {
                     Ok((run.output, run.timing.compute_ms, run.timing.comm_ms))
                 }
                 Err(e) => {
-                    scheduler.tasks_failed(&node_ids);
+                    // A deadline shed never reached the stage nodes:
+                    // reverse the started charge instead of booking a
+                    // failure against healthy hardware.
+                    if e.downcast_ref::<engine::DeadlineShed>().is_some() {
+                        scheduler.tasks_cancelled(&node_ids);
+                    } else {
+                        scheduler.tasks_failed(&node_ids);
+                    }
                     Err(e)
                 }
             })),
@@ -299,24 +338,38 @@ impl DistributedService {
 
 impl InferenceService for DistributedService {
     fn infer_batch(&self, batch: &Tensor) -> Result<(Tensor, f64, f64)> {
+        self.infer_batch_meta(batch, BatchMeta::default())
+    }
+
+    fn infer_batch_meta(
+        &self,
+        batch: &Tensor,
+        meta: BatchMeta,
+    ) -> Result<(Tensor, f64, f64)> {
         // Cheap presence check first so the serial-only configuration
         // never clones; the owned submission handles the (rare)
         // engine-swap race by handing the batch back.
         if self.engine.lock().unwrap().is_some() {
-            if let Ok(wait) = self.submit_streaming(batch.clone()) {
+            if let Ok(wait) = self.submit_streaming(batch.clone(), meta) {
                 return wait();
             }
         }
         self.serial_infer(batch)
     }
 
+    fn submit_batch(&self, batch: Tensor) -> Submission {
+        self.submit_batch_meta(batch, BatchMeta::default())
+    }
+
     /// Feed the persistent engine directly: the batch's micro-batches
     /// are enqueued behind whatever is already streaming (submission
-    /// blocks only on queue back-pressure), and the returned waiter
-    /// resolves when this batch's rows are delivered. Falls back to the
-    /// serial schedule when no engine is configured.
-    fn submit_batch(&self, batch: Tensor) -> Submission {
-        match self.submit_streaming(batch) {
+    /// blocks only on queue back-pressure) ordered by `meta.class`, and
+    /// the returned waiter resolves when this batch's rows are
+    /// delivered — or with a `DeadlineShed` if `meta.deadline` expired
+    /// before the feeder admitted it. Falls back to the serial schedule
+    /// when no engine is configured.
+    fn submit_batch_meta(&self, batch: Tensor, meta: BatchMeta) -> Submission {
+        match self.submit_streaming(batch, meta) {
             Ok(wait) => Submission::Pending(wait),
             Err(batch) => Submission::Inline(batch),
         }
@@ -389,6 +442,11 @@ pub struct EdgeServer {
     pub cache: Option<Arc<ResultCache>>,
     service: Arc<DistributedService>,
     plan: std::sync::Mutex<Plan>,
+    /// Lazily-built long-lived ingress for the one-request convenience
+    /// paths ([`single_request`], [`EdgeServer::golden_check`]): one
+    /// worker, no batch-fill wait, no cache, no default deadline —
+    /// built once instead of spawning an ingress per call.
+    one_shot: std::sync::OnceLock<ServiceHandle>,
 }
 
 impl EdgeServer {
@@ -508,6 +566,7 @@ impl EdgeServer {
             cache,
             service,
             plan: std::sync::Mutex::new(plan),
+            one_shot: std::sync::OnceLock::new(),
         })
     }
 
@@ -526,6 +585,22 @@ impl EdgeServer {
              self.manifest.input_channels]
     }
 
+    /// The unified request-level serving ingress over this server's
+    /// distributed service: build requests with
+    /// `handle.request(input).priority(..).deadline(..)`, submit, and
+    /// wait on the returned `ResponseHandle`. Every call spawns a fresh
+    /// ingress (bounded priority queue + dispatcher + worker pool, per
+    /// [`AmpConfig::ingress_config`]) sharing the server's persistent
+    /// result cache; `finish()` drains it and returns the run's
+    /// [`RunMetrics`] including the per-class breakdown.
+    pub fn serve_handle(&self) -> ServiceHandle {
+        ServiceHandle::new(
+            self.service(),
+            self.config.ingress_config(),
+            self.cache.clone(),
+        )
+    }
+
     /// Run a closed- or open-loop workload of `n` requests drawn from
     /// `distinct` inputs; returns the full report.
     pub fn serve_workload(
@@ -536,15 +611,18 @@ impl EdgeServer {
         seed: u64,
     ) -> Result<ServeReport> {
         let pool = InputPool::new(&self.request_shape(), distinct, seed);
-        let (tx, rx) = router::request_channel(256);
-        let service: Arc<dyn InferenceService> = self.service();
-        let router_cfg = self.config.router_config();
-        let cache = self.cache.clone();
-        let handle =
-            std::thread::spawn(move || router::serve(service, rx, router_cfg, cache));
-        feed(&tx, &pool, n, arrival, seed ^ 0xF00D);
-        drop(tx);
-        let metrics = handle.join().expect("router thread");
+        // Live-profile window retune (ROADMAP follow-on): with
+        // per-stage windows on, reshape the engine's budgets from the
+        // monitor's latest snapshot before the run — a no-op until the
+        // engine has served traffic to profile.
+        if self.config.per_stage_windows {
+            if let Some(snapshot) = self.monitor.latest() {
+                self.service.retune_windows(&snapshot);
+            }
+        }
+        let handle = self.serve_handle();
+        feed(&handle, &pool, n, arrival, seed ^ 0xF00D);
+        let metrics = handle.finish();
 
         let dep = Arc::clone(&*self.service.deployment.read().unwrap());
         let (final_depth, depth_report) = self.service.depth_status();
@@ -654,7 +732,9 @@ impl EdgeServer {
     }
 
     /// Golden parity: run the manifest's recorded input through the
-    /// deployed pipeline and compare against the AOT-recorded output.
+    /// deployed pipeline — via the same unified serving ingress every
+    /// other entry point uses — and compare against the AOT-recorded
+    /// output.
     pub fn golden_check(&self) -> Result<f32> {
         let golden = self
             .manifest
@@ -673,20 +753,32 @@ impl EdgeServer {
             &self.manifest.dir.join(&golden.output_file),
             golden.out_shape.clone(),
         )?;
-        // Pad the single input to the deployment batch; the guard is
-        // held across the run so a racing rebalance cannot undeploy the
-        // stages mid-parity-check.
-        let dep = self.service.deployment.read().unwrap();
-        let stacked = pipeline::stack_batch(&[&input], dep.batch)?;
-        let (out, _) = pipeline::run(&dep, &stacked)?;
-        let rows = pipeline::split_batch(&out, 1)?;
-        let diff = rows[0].max_abs_diff(&want);
+        // One request through a one-shot ingress: no batch-fill wait for
+        // a lone request, no result cache (parity must hit the
+        // pipeline), and no default deadline (parity must never shed).
+        let out = one_shot_handle(self).submit(input)?.wait_output()?;
+        let diff = out.max_abs_diff(&want);
         anyhow::ensure!(
             (diff as f64) <= golden.tolerance * 10.0,
             "golden mismatch: max abs diff {diff}"
         );
         Ok(diff)
     }
+}
+
+/// The server's shared single-request ingress (see
+/// [`EdgeServer::one_shot`]'s field docs), built on first use.
+/// [`single_request`] and [`EdgeServer::golden_check`] ride this so
+/// even the one-off convenience paths go through the unified serving
+/// API without paying an ingress spawn per call.
+fn one_shot_handle(server: &EdgeServer) -> &ServiceHandle {
+    server.one_shot.get_or_init(|| {
+        let mut cfg = server.config.ingress_config();
+        cfg.workers = 1;
+        cfg.max_wait = std::time::Duration::ZERO;
+        cfg.default_deadline = None;
+        ServiceHandle::new(server.service(), cfg, None)
+    })
 }
 
 /// Handle to the auto-rebalance watchdog; dropping stops the thread.
@@ -738,19 +830,48 @@ pub fn calibrate_block_costs(
     Ok(out)
 }
 
-/// Convenience used by benches: a one-request-at-a-time helper.
+/// Convenience used by benches: a one-request-at-a-time helper, riding
+/// the unified serving ingress (one-shot handle, no batching wait).
+/// Returns the request's output row and its end-to-end wall latency.
 pub fn single_request(
     server: &EdgeServer,
     input: &Tensor,
 ) -> Result<(Tensor, f64)> {
-    // Guard held across the run (see serial_infer).
-    let dep = server.service.deployment.read().unwrap();
-    let stacked = pipeline::stack_batch(&[input], dep.batch)?;
+    let handle = one_shot_handle(server);
     let t0 = std::time::Instant::now();
-    let (out, _) = pipeline::run(&dep, &stacked)?;
-    let ms = t0.elapsed().as_secs_f64() * 1e3;
-    let rows = pipeline::split_batch(&out, 1)?;
-    Ok((rows[0].clone(), ms))
+    let out = handle.submit(input.clone())?.wait_output()?;
+    Ok((out, t0.elapsed().as_secs_f64() * 1e3))
 }
 
-pub use crate::router::Request as ServerRequest;
+/// Effective per-stage latency profile from the engine's cumulative
+/// counters and the monitor's live snapshot: each stage's measured
+/// per-micro-batch service time (compute + ingress comm) scaled by its
+/// node's current load — a node half-busy with other work serves at
+/// roughly double the empty-node latency, so its stage weighs heavier
+/// when `budgets_from_profile` re-shapes the credit windows. Returns
+/// None until every stage has served at least one micro-batch (a cold
+/// profile would shape windows from noise).
+pub fn live_stage_latencies(
+    counters: &[StageCounter],
+    snapshot: &ClusterSnapshot,
+) -> Option<Vec<f64>> {
+    if counters.is_empty() || counters.iter().any(|c| c.micro_batches == 0) {
+        return None;
+    }
+    Some(
+        counters
+            .iter()
+            .map(|c| {
+                let per_micro =
+                    (c.busy_ms + c.comm_ms) / c.micro_batches as f64;
+                let load = snapshot
+                    .nodes
+                    .iter()
+                    .find(|n| n.id == c.node)
+                    .map(|n| n.current_load.clamp(0.0, 1.0))
+                    .unwrap_or(0.0);
+                per_micro * (1.0 + load)
+            })
+            .collect(),
+    )
+}

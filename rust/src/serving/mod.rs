@@ -1,0 +1,1424 @@
+//! Unified request-level serving API: the one ingress every entry point
+//! rides.
+//!
+//! Historically each entry point reached the engine differently — the
+//! CLI serve loop through `router::serve` + a raw sync channel,
+//! `single_request`/`golden_check` through ad-hoc `pipeline::run` calls,
+//! examples through hand-rolled channel plumbing — and none of them
+//! could express what the paper's serving story needs: per-request
+//! **priorities** and **deadlines** (DEFER / edge-cloud-continuum style
+//! request-level SLOs). This module replaces all of that with one
+//! request-level path:
+//!
+//! * [`ServiceHandle`] — obtained from `EdgeServer` (or built directly
+//!   over any [`InferenceService`]); owns the ingress queue and its
+//!   dispatcher.
+//! * [`RequestBuilder`] — one request: input tensor, [`Priority`]
+//!   class, optional deadline, optional tag.
+//! * [`ResponseHandle`] — non-blocking completion handle:
+//!   [`ResponseHandle::wait`] / [`ResponseHandle::try_wait`] resolve to
+//!   an [`Outcome`] (completed, shed, or failed) — **never hangs**: a
+//!   shed or dropped request still resolves its handle.
+//! * [`IngressQueue`] — bounded priority queue doing admission:
+//!   priority-ordered dequeue into the dispatcher, deadline-aware
+//!   shedding (a request that cannot meet its SLO given the current
+//!   service-time estimate is rejected instead of wasting engine
+//!   credits), and bounded-queue backpressure (submission blocks while
+//!   the queue is full).
+//!
+//! The dispatcher preserves the old router's batching semantics exactly
+//! — collect up to `InferenceService::batch_size` requests within
+//! `max_wait`, check the result cache, stack misses padded via
+//! `padded_rows`, submit through `submit_batch_meta` — so default-class
+//! no-deadline traffic produces **bit-identical outputs** to the
+//! pre-redesign path (pinned by equivalence tests). Priority changes
+//! only *order*: lanes are strict-priority, FIFO within a class, and a
+//! worker slot is acquired *before* the next batch is popped so the
+//! priority decision happens as late as possible.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::metrics::{MetricsCollector, RunMetrics};
+use crate::pipeline::stack_batch;
+use crate::router::{BatchMeta, InferenceService, Submission};
+use crate::runtime::Tensor;
+use crate::scheduler::cache::{input_key, ResultCache};
+use crate::util::pool::{ThreadPool, WaitGroup};
+
+// ---------------------------------------------------------------------------
+// Request-side types
+// ---------------------------------------------------------------------------
+
+/// A request's priority class. Lower is more urgent: class 0 is
+/// dispatched before class 1, and so on. [`Priority::NORMAL`] is the
+/// default — plain traffic that neither jumps nor yields.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Priority(pub u8);
+
+impl Priority {
+    /// Latency-critical traffic: dispatched ahead of everything else.
+    pub const HIGH: Priority = Priority(0);
+    /// The default class.
+    pub const NORMAL: Priority = Priority(1);
+    /// Background traffic: dispatched only when nothing above it waits.
+    pub const BEST_EFFORT: Priority = Priority(2);
+
+    pub fn class(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl Default for Priority {
+    fn default() -> Self {
+        Priority::NORMAL
+    }
+}
+
+/// Human-readable name for a priority class (reports/CLI).
+pub fn class_name(class: usize) -> String {
+    match class {
+        0 => "high".into(),
+        1 => "normal".into(),
+        2 => "best-effort".into(),
+        n => format!("class-{n}"),
+    }
+}
+
+/// Why a request was shed instead of served.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    /// The deadline had already passed when the dispatcher reached the
+    /// request (or when the engine feeder was about to admit it).
+    DeadlineExpired,
+    /// The deadline was still ahead, but the current service-time
+    /// estimate says it cannot be met — shedding now saves the engine
+    /// work that would be wasted anyway.
+    PredictedMiss,
+}
+
+/// A completed request.
+#[derive(Debug, Clone)]
+pub struct Response {
+    /// This request's output row(s) — shape `[1, ...]`.
+    pub output: Tensor,
+    /// End-to-end latency (enqueue to completion), wall-clock ms.
+    pub latency_ms: f64,
+    /// Batch-shared simulated compute / communication ms.
+    pub compute_ms: f64,
+    pub comm_ms: f64,
+    pub cache_hit: bool,
+    /// Whether the request carried a deadline and completed within it
+    /// (`None` when no deadline was set).
+    pub deadline_met: Option<bool>,
+}
+
+/// Terminal state of one request. Every submitted request resolves to
+/// exactly one `Outcome` — shed and failed requests included.
+#[derive(Debug)]
+pub enum Outcome {
+    Done(Response),
+    Shed(ShedReason),
+    Failed(anyhow::Error),
+}
+
+impl Outcome {
+    /// Completed output, or an error describing the shed/failure.
+    pub fn into_output(self) -> Result<Tensor> {
+        match self {
+            Outcome::Done(r) => Ok(r.output),
+            Outcome::Shed(reason) => {
+                Err(anyhow::anyhow!("request shed: {reason:?}"))
+            }
+            Outcome::Failed(e) => Err(e),
+        }
+    }
+
+    pub fn is_shed(&self) -> bool {
+        matches!(self, Outcome::Shed(_))
+    }
+}
+
+/// Non-blocking completion handle for one submitted request.
+pub struct ResponseHandle {
+    rx: Receiver<Outcome>,
+}
+
+impl ResponseHandle {
+    /// Block until the request resolves. Never hangs: shedding, batch
+    /// failure, ingress shutdown, and even a panicking service all
+    /// resolve the handle.
+    pub fn wait(self) -> Outcome {
+        match self.rx.recv() {
+            Ok(o) => o,
+            Err(_) => Self::dropped(),
+        }
+    }
+
+    /// Non-blocking poll: `None` only while the request is genuinely
+    /// still in flight. A dropped request (ingress shutdown, worker
+    /// panic) yields `Some(Outcome::Failed)` — pollers never spin
+    /// forever.
+    pub fn try_wait(&self) -> Option<Outcome> {
+        match self.rx.try_recv() {
+            Ok(o) => Some(o),
+            Err(std::sync::mpsc::TryRecvError::Empty) => None,
+            Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                Some(Self::dropped())
+            }
+        }
+    }
+
+    /// Block up to `timeout`; `None` only if the request is still in
+    /// flight. Like [`ResponseHandle::try_wait`], a dropped request
+    /// resolves as `Some(Outcome::Failed)` instead of timing out
+    /// forever.
+    pub fn wait_timeout(&self, timeout: Duration) -> Option<Outcome> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(o) => Some(o),
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => None,
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                Some(Self::dropped())
+            }
+        }
+    }
+
+    fn dropped() -> Outcome {
+        Outcome::Failed(anyhow::anyhow!(
+            "request dropped before resolving (ingress shut down or its \
+             batch worker panicked)"
+        ))
+    }
+
+    /// Convenience: wait and unwrap the completed output.
+    pub fn wait_output(self) -> Result<Tensor> {
+        self.wait().into_output()
+    }
+}
+
+/// One request being assembled. Submit with [`RequestBuilder::submit`]
+/// (blocks on queue backpressure).
+pub struct RequestBuilder<'a> {
+    handle: &'a ServiceHandle,
+    input: Tensor,
+    priority: Priority,
+    deadline: Option<Duration>,
+    tag: Option<String>,
+}
+
+impl RequestBuilder<'_> {
+    pub fn priority(mut self, p: Priority) -> Self {
+        self.priority = p;
+        self
+    }
+
+    /// Relative deadline: the request must complete within `d` of
+    /// submission or it is shed/reported as missed.
+    pub fn deadline(mut self, d: Duration) -> Self {
+        self.deadline = Some(d);
+        self
+    }
+
+    pub fn deadline_ms(self, ms: f64) -> Self {
+        self.deadline(Duration::from_secs_f64(ms.max(0.0) / 1e3))
+    }
+
+    /// Free-form label carried through for debugging/tracing.
+    pub fn tag(mut self, tag: &str) -> Self {
+        self.tag = Some(tag.to_string());
+        self
+    }
+
+    /// Enqueue the request (blocking while the bounded ingress queue is
+    /// full — backpressure). Errors only if the ingress is shut down.
+    pub fn submit(self) -> Result<ResponseHandle> {
+        let cfg = &self.handle.cfg;
+        let class = (self.priority.class()).min(cfg.classes.max(1) - 1);
+        let deadline = self
+            .deadline
+            .or(cfg.default_deadline)
+            .map(|d| Instant::now() + d);
+        let (reply, rx) = channel();
+        let req = QueuedRequest {
+            input: self.input,
+            class,
+            deadline,
+            tag: self.tag,
+            enqueued: Instant::now(),
+            reply,
+        };
+        if self.handle.queue.push(req) {
+            Ok(ResponseHandle { rx })
+        } else {
+            anyhow::bail!("ingress is shut down")
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Ingress queue
+// ---------------------------------------------------------------------------
+
+/// Ingress configuration (the old `RouterConfig`, extended with the
+/// request-level knobs).
+#[derive(Debug, Clone)]
+pub struct IngressConfig {
+    /// Bounded queue size: submission blocks past this (backpressure).
+    pub capacity: usize,
+    /// Batch admission window (how long the dispatcher waits to fill a
+    /// batch).
+    pub max_wait: Duration,
+    /// Concurrent batches in flight.
+    pub workers: usize,
+    /// Number of priority classes (lanes). Priorities clamp to
+    /// `classes - 1`.
+    pub classes: usize,
+    /// Deadline applied to requests that don't set their own (CLI
+    /// `--deadline-ms`).
+    pub default_deadline: Option<Duration>,
+}
+
+impl Default for IngressConfig {
+    fn default() -> Self {
+        IngressConfig {
+            capacity: 256,
+            max_wait: Duration::from_millis(10),
+            workers: 4,
+            classes: 3,
+            default_deadline: None,
+        }
+    }
+}
+
+struct QueuedRequest {
+    input: Tensor,
+    class: usize,
+    deadline: Option<Instant>,
+    #[allow(dead_code)]
+    tag: Option<String>,
+    enqueued: Instant,
+    reply: Sender<Outcome>,
+}
+
+struct QueueState {
+    /// One FIFO lane per priority class; dequeue scans lanes in order.
+    lanes: Vec<std::collections::VecDeque<QueuedRequest>>,
+    len: usize,
+    closed: bool,
+}
+
+enum Popped {
+    Item(QueuedRequest),
+    Timeout,
+    Closed,
+}
+
+/// Bounded multi-lane priority queue with condvar-based blocking on both
+/// sides: producers block while full (backpressure), the dispatcher
+/// blocks while empty. Also owns the service-time estimate the
+/// deadline shedder consults, and the shed counters.
+pub struct IngressQueue {
+    state: Mutex<QueueState>,
+    arrived: Condvar,
+    space: Condvar,
+    capacity: usize,
+    /// EWMA of observed dispatch-to-completion service time, ms. `None`
+    /// until the first batch completes (no shedding on a cold estimate).
+    estimate: Mutex<Option<f64>>,
+    shed_expired: AtomicU64,
+    shed_predicted: AtomicU64,
+}
+
+impl IngressQueue {
+    fn new(capacity: usize, classes: usize) -> IngressQueue {
+        IngressQueue {
+            state: Mutex::new(QueueState {
+                lanes: (0..classes.max(1))
+                    .map(|_| std::collections::VecDeque::new())
+                    .collect(),
+                len: 0,
+                closed: false,
+            }),
+            arrived: Condvar::new(),
+            space: Condvar::new(),
+            capacity: capacity.max(1),
+            estimate: Mutex::new(None),
+            shed_expired: AtomicU64::new(0),
+            shed_predicted: AtomicU64::new(0),
+        }
+    }
+
+    /// Enqueue; blocks while full. Returns false (req dropped, handle
+    /// resolves as Failed via the dropped sender) when closed.
+    fn push(&self, req: QueuedRequest) -> bool {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.closed {
+                return false;
+            }
+            if st.len < self.capacity {
+                let lane = req.class.min(st.lanes.len() - 1);
+                st.lanes[lane].push_back(req);
+                st.len += 1;
+                self.arrived.notify_one();
+                return true;
+            }
+            st = self.space.wait(st).unwrap();
+        }
+    }
+
+    fn take(st: &mut QueueState) -> Option<QueuedRequest> {
+        for lane in st.lanes.iter_mut() {
+            if let Some(r) = lane.pop_front() {
+                st.len -= 1;
+                return Some(r);
+            }
+        }
+        None
+    }
+
+    /// Block until a request is available (highest-priority lane first)
+    /// or the queue is closed *and* empty.
+    fn pop_one(&self) -> Option<QueuedRequest> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(r) = Self::take(&mut st) {
+                self.space.notify_one();
+                return Some(r);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.arrived.wait(st).unwrap();
+        }
+    }
+
+    /// Like [`IngressQueue::pop_one`] but give up after `timeout` (the
+    /// batch-fill wait).
+    fn pop_one_timeout(&self, timeout: Duration) -> Popped {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(r) = Self::take(&mut st) {
+                self.space.notify_one();
+                return Popped::Item(r);
+            }
+            if st.closed {
+                return Popped::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Popped::Timeout;
+            }
+            let (guard, _) =
+                self.arrived.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+    }
+
+    fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.arrived.notify_all();
+        self.space.notify_all();
+    }
+
+    /// Requests currently queued (diagnostics).
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Current service-time estimate (EWMA of dispatch-to-completion
+    /// ms), the critical-path figure the deadline shedder compares
+    /// against remaining slack.
+    pub fn estimate_ms(&self) -> Option<f64> {
+        *self.estimate.lock().unwrap()
+    }
+
+    fn observe_service_ms(&self, ms: f64) {
+        let mut est = self.estimate.lock().unwrap();
+        *est = Some(match *est {
+            Some(e) => 0.7 * e + 0.3 * ms,
+            None => ms,
+        });
+    }
+
+    /// (expired, predicted-miss) shed counts since startup.
+    pub fn shed_counts(&self) -> (u64, u64) {
+        (
+            self.shed_expired.load(Ordering::Relaxed),
+            self.shed_predicted.load(Ordering::Relaxed),
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker-slot gate
+// ---------------------------------------------------------------------------
+
+/// Counting semaphore bounding in-flight batches: the dispatcher
+/// acquires a slot *before* popping the next batch, so priority
+/// decisions happen at the last possible moment instead of queueing
+/// already-ordered batches inside the thread pool.
+struct Slots {
+    free: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Slots {
+    fn new(n: usize) -> Arc<Slots> {
+        Arc::new(Slots { free: Mutex::new(n.max(1)), cv: Condvar::new() })
+    }
+
+    fn acquire(&self) {
+        let mut n = self.free.lock().unwrap();
+        while *n == 0 {
+            n = self.cv.wait(n).unwrap();
+        }
+        *n -= 1;
+    }
+
+    fn release(&self) {
+        *self.free.lock().unwrap() += 1;
+        self.cv.notify_one();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Service handle + dispatcher
+// ---------------------------------------------------------------------------
+
+/// The unified serving ingress over one [`InferenceService`]. Create
+/// via `EdgeServer::serve_handle()` (or directly for tests/benches),
+/// build requests with [`ServiceHandle::request`], and finish with
+/// [`ServiceHandle::finish`] to collect the run's metrics.
+pub struct ServiceHandle {
+    queue: Arc<IngressQueue>,
+    metrics: Arc<MetricsCollector>,
+    cfg: IngressConfig,
+    dispatcher: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServiceHandle {
+    /// Spawn an ingress (queue + dispatcher + worker pool) over
+    /// `service`. The optional result cache is consulted per request
+    /// before dispatch, exactly like the old router.
+    pub fn new(
+        service: Arc<dyn InferenceService>,
+        cfg: IngressConfig,
+        cache: Option<Arc<ResultCache>>,
+    ) -> ServiceHandle {
+        let queue = Arc::new(IngressQueue::new(
+            cfg.capacity,
+            cfg.classes.max(1),
+        ));
+        let metrics = Arc::new(MetricsCollector::new());
+        metrics.start_run();
+        let dispatcher = {
+            let queue = Arc::clone(&queue);
+            let metrics = Arc::clone(&metrics);
+            let cfg = cfg.clone();
+            std::thread::Builder::new()
+                .name("amp4ec-ingress".into())
+                .spawn(move || {
+                    dispatch_loop(service, queue, cfg, cache, metrics)
+                })
+                .expect("spawn ingress dispatcher")
+        };
+        ServiceHandle { queue, metrics, cfg, dispatcher: Some(dispatcher) }
+    }
+
+    /// Start building one request.
+    pub fn request(&self, input: Tensor) -> RequestBuilder<'_> {
+        RequestBuilder {
+            handle: self,
+            input,
+            priority: Priority::default(),
+            deadline: None,
+            tag: None,
+        }
+    }
+
+    /// Sugar: submit with default priority and no explicit deadline.
+    pub fn submit(&self, input: Tensor) -> Result<ResponseHandle> {
+        self.request(input).submit()
+    }
+
+    /// The ingress queue (shed counts, service estimate, depth).
+    pub fn queue(&self) -> &IngressQueue {
+        &self.queue
+    }
+
+    /// Close the ingress, drain in-flight work, and return the run's
+    /// aggregate metrics (including per-class latency and shed counts).
+    pub fn finish(mut self) -> RunMetrics {
+        self.queue.close();
+        if let Some(t) = self.dispatcher.take() {
+            let _ = t.join();
+        }
+        self.metrics.finish()
+    }
+}
+
+impl Drop for ServiceHandle {
+    fn drop(&mut self) {
+        self.queue.close();
+        if let Some(t) = self.dispatcher.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Engine adapter
+// ---------------------------------------------------------------------------
+
+/// An [`InferenceService`] over a bare
+/// [`PersistentEngine`](crate::pipeline::engine::PersistentEngine) —
+/// the artifact-free adapter benches and tests use to drive the full
+/// request-level ingress against `SimStages` chains. Threads the
+/// batch's priority class and deadline straight into the engine's
+/// feeder (`PersistentEngine::submit_owned_with`), so engine-side
+/// admission ordering and pre-admission deadline shedding are
+/// exercised end-to-end.
+pub struct EngineService {
+    engine: Arc<crate::pipeline::engine::PersistentEngine>,
+    micro_rows: usize,
+    depth: usize,
+    id: u64,
+}
+
+impl EngineService {
+    /// `micro_rows` must equal the engine's configured micro-batch;
+    /// `depth` sizes the admission super-batch (`micro_rows * depth`
+    /// rows per dispatched batch).
+    pub fn new(
+        engine: Arc<crate::pipeline::engine::PersistentEngine>,
+        micro_rows: usize,
+        depth: usize,
+    ) -> EngineService {
+        EngineService {
+            engine,
+            micro_rows: micro_rows.max(1),
+            depth: depth.max(1),
+            id: 0xE5E5,
+        }
+    }
+
+    pub fn engine(&self) -> &Arc<crate::pipeline::engine::PersistentEngine> {
+        &self.engine
+    }
+}
+
+impl InferenceService for EngineService {
+    fn infer_batch(&self, batch: &Tensor) -> Result<(Tensor, f64, f64)> {
+        let run = self.engine.run(batch)?;
+        Ok((run.output, run.timing.compute_ms, run.timing.comm_ms))
+    }
+
+    fn submit_batch_meta(&self, batch: Tensor, meta: BatchMeta) -> Submission {
+        match self.engine.submit_owned_with(batch, meta.class, meta.deadline) {
+            Ok(h) => Submission::Pending(Box::new(move || {
+                let run = h.wait()?;
+                Ok((run.output, run.timing.compute_ms, run.timing.comm_ms))
+            })),
+            Err(e) => Submission::Pending(Box::new(move || Err(e))),
+        }
+    }
+
+    fn batch_size(&self) -> usize {
+        self.micro_rows * self.depth
+    }
+
+    fn padded_rows(&self, n: usize) -> usize {
+        // Whole micro-batches, never more than the admission batch.
+        let chunks = n.div_euclid(self.micro_rows)
+            + usize::from(n % self.micro_rows != 0);
+        (chunks.max(1) * self.micro_rows).min(self.batch_size())
+    }
+
+    fn model_id(&self) -> u64 {
+        self.id
+    }
+}
+
+/// Dispatcher: pop priority-ordered batches, shed what cannot make its
+/// deadline, and hand each batch to a pool worker. The loop exits when
+/// the queue closes and drains; the pool drains before return.
+fn dispatch_loop(
+    service: Arc<dyn InferenceService>,
+    queue: Arc<IngressQueue>,
+    cfg: IngressConfig,
+    cache: Option<Arc<ResultCache>>,
+    metrics: Arc<MetricsCollector>,
+) {
+    let pool = ThreadPool::new(cfg.workers.max(1), "ingress");
+    let drain = WaitGroup::new(0);
+    let slots = Slots::new(cfg.workers.max(1));
+    let batch_size = service.batch_size().max(1);
+    let model_id = service.model_id();
+
+    'outer: loop {
+        // A worker slot first: the next batch is chosen only when it can
+        // actually start, so late-arriving high-priority requests still
+        // jump everything not yet dispatched.
+        slots.acquire();
+        let mut batch: Vec<QueuedRequest> = Vec::with_capacity(batch_size);
+        // ---- collect a batch (priority lanes, shed-aware) ----
+        loop {
+            match queue.pop_one() {
+                Some(r) => {
+                    admit_or_shed(
+                        r,
+                        &mut batch,
+                        &queue,
+                        &metrics,
+                        cache.as_deref(),
+                        model_id,
+                    );
+                    if !batch.is_empty() {
+                        break;
+                    }
+                }
+                None => {
+                    slots.release();
+                    break 'outer;
+                }
+            }
+        }
+        let fill_deadline = Instant::now() + cfg.max_wait;
+        while batch.len() < batch_size {
+            let now = Instant::now();
+            if now >= fill_deadline {
+                break;
+            }
+            match queue.pop_one_timeout(fill_deadline - now) {
+                Popped::Item(r) => admit_or_shed(
+                    r,
+                    &mut batch,
+                    &queue,
+                    &metrics,
+                    cache.as_deref(),
+                    model_id,
+                ),
+                Popped::Timeout | Popped::Closed => break,
+            }
+        }
+
+        // ---- dispatch ----
+        drain.add(1);
+        let wg = drain.clone_handle();
+        let service = Arc::clone(&service);
+        let metrics = Arc::clone(&metrics);
+        let queue = Arc::clone(&queue);
+        let cache = cache.clone();
+        let slots_t = Arc::clone(&slots);
+        let dispatched = Instant::now();
+        pool.execute(move || {
+            // A panicking InferenceService must not wedge the ingress:
+            // catching the unwind keeps this pool worker alive and lets
+            // the slot/drain bookkeeping below run, and dropping the
+            // batch during the unwind drops its reply senders, so every
+            // ResponseHandle still resolves (as Failed) — the module's
+            // never-hangs contract survives a buggy service.
+            let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                || {
+                    process_batch(
+                        &*service,
+                        batch,
+                        cache.as_deref(),
+                        &metrics,
+                        &queue,
+                        dispatched,
+                    );
+                },
+            ));
+            slots_t.release();
+            wg.done();
+        });
+    }
+
+    drain.wait();
+}
+
+/// Admission check at dequeue: expired deadlines and predicted misses
+/// are shed (handle resolved immediately, metrics recorded); everything
+/// else joins the batch. The predicted-miss check first probes the
+/// result cache (stats-neutral): a request whose answer is already
+/// cached is served in ~0 ms regardless of the batch service-time
+/// estimate, so shedding it would throw away a free hit.
+fn admit_or_shed(
+    req: QueuedRequest,
+    batch: &mut Vec<QueuedRequest>,
+    queue: &IngressQueue,
+    metrics: &MetricsCollector,
+    cache: Option<&ResultCache>,
+    model_id: u64,
+) {
+    if let Some(d) = req.deadline {
+        let now = Instant::now();
+        if now >= d {
+            queue.shed_expired.fetch_add(1, Ordering::Relaxed);
+            metrics.record_shed(req.class, true);
+            let _ = req.reply.send(Outcome::Shed(ShedReason::DeadlineExpired));
+            return;
+        }
+        if let Some(est) = queue.estimate_ms() {
+            let slack_ms = (d - now).as_secs_f64() * 1e3;
+            let cached = || {
+                cache.is_some_and(|c| {
+                    c.contains(input_key(model_id, &req.input.data))
+                })
+            };
+            if slack_ms < est && !cached() {
+                queue.shed_predicted.fetch_add(1, Ordering::Relaxed);
+                metrics.record_shed(req.class, false);
+                let _ =
+                    req.reply.send(Outcome::Shed(ShedReason::PredictedMiss));
+                return;
+            }
+        }
+    }
+    batch.push(req);
+}
+
+/// Serve one dispatched batch: cache hits answered inline, misses
+/// stacked (padded via `padded_rows`) and submitted through the
+/// service's streaming path, per-request rows sliced back out and every
+/// handle resolved. This is the old `router::process_batch`, extended
+/// with per-request replies, per-class metrics, and deadline
+/// bookkeeping.
+fn process_batch(
+    service: &dyn InferenceService,
+    batch: Vec<QueuedRequest>,
+    cache: Option<&ResultCache>,
+    metrics: &MetricsCollector,
+    queue: &IngressQueue,
+    dispatched: Instant,
+) {
+    // Split into cache hits and misses (misses keep their batch index so
+    // cache inserts are O(1) lookups). Without a cache there is nothing
+    // to key: skip hashing every input tensor.
+    let mut misses: Vec<usize> = Vec::new();
+    let mut keys: Vec<u64> = Vec::new();
+    match cache {
+        Some(c) => {
+            keys.reserve(batch.len());
+            for (i, r) in batch.iter().enumerate() {
+                let key = input_key(service.model_id(), &r.input.data);
+                keys.push(key);
+                match c.get(key) {
+                    Some(row) => {
+                        // Serve the hit immediately: zero compute/comm.
+                        let latency =
+                            r.enqueued.elapsed().as_secs_f64() * 1e3;
+                        let sched =
+                            (dispatched - r.enqueued).as_secs_f64() * 1e3;
+                        let met = deadline_met(r.deadline);
+                        metrics.record_request_class(
+                            r.class, latency, 0.0, 0.0, sched, true, met,
+                        );
+                        let output = Tensor::new(
+                            vec![1, row.len()],
+                            row.to_vec(),
+                        )
+                        .expect("cached row tensor");
+                        let _ = r.reply.send(Outcome::Done(Response {
+                            output,
+                            latency_ms: latency,
+                            compute_ms: 0.0,
+                            comm_ms: 0.0,
+                            cache_hit: true,
+                            deadline_met: met,
+                        }));
+                    }
+                    None => misses.push(i),
+                }
+            }
+        }
+        None => misses.extend(0..batch.len()),
+    }
+    if misses.is_empty() {
+        return;
+    }
+
+    // Run the miss set as one stacked batch through the streaming path.
+    let inputs: Vec<&Tensor> =
+        misses.iter().map(|&i| &batch[i].input).collect();
+    let stacked =
+        match stack_batch(&inputs, service.padded_rows(misses.len())) {
+            Ok(t) => t,
+            Err(e) => {
+                fail_requests(&batch, &misses, metrics, &e);
+                return;
+            }
+        };
+    let stacked_bytes = stacked.byte_len();
+    // The batch's meta: the strictest class present, and — when every
+    // miss carries a deadline — the most lenient one, so an engine-side
+    // shed (deadline already blown in the submission queue) is correct
+    // for every member.
+    let meta = BatchMeta {
+        class: misses
+            .iter()
+            .map(|&i| batch[i].class)
+            .min()
+            .unwrap_or(0),
+        deadline: {
+            let ds: Vec<Instant> = misses
+                .iter()
+                .filter_map(|&i| batch[i].deadline)
+                .collect();
+            if ds.len() == misses.len() {
+                ds.into_iter().max()
+            } else {
+                None
+            }
+        },
+    };
+    let result = match service.submit_batch_meta(stacked, meta) {
+        Submission::Pending(wait) => wait(),
+        Submission::Inline(t) => service.infer_batch_meta(&t, meta),
+    };
+    match result {
+        Ok((output, compute_ms, comm_ms)) => {
+            let row_len: usize = output.shape.iter().skip(1).product();
+            if output.shape.is_empty()
+                || output.shape[0] < misses.len()
+                || row_len == 0
+            {
+                let e = anyhow::anyhow!(
+                    "service returned a malformed batch output {:?}",
+                    output.shape
+                );
+                fail_requests(&batch, &misses, metrics, &e);
+                return;
+            }
+            metrics.add_activation_bytes(stacked_bytes + output.byte_len());
+            queue.observe_service_ms(
+                dispatched.elapsed().as_secs_f64() * 1e3,
+            );
+            let mut row_shape = output.shape.clone();
+            row_shape[0] = 1;
+            for (slot, &idx) in misses.iter().enumerate() {
+                let r = &batch[idx];
+                let latency = r.enqueued.elapsed().as_secs_f64() * 1e3;
+                let sched = (dispatched - r.enqueued).as_secs_f64() * 1e3;
+                let met = deadline_met(r.deadline);
+                metrics.record_request_class(
+                    r.class, latency, compute_ms, comm_ms, sched, false, met,
+                );
+                let row_data = &output.data[slot * row_len..(slot + 1) * row_len];
+                if let Some(c) = cache {
+                    // One extra copy out of the batched output into a
+                    // shared row for the cache; without a cache the
+                    // response slices straight from the batch.
+                    c.put(keys[idx], row_data.into());
+                }
+                let out = Tensor::new(row_shape.clone(), row_data.to_vec());
+                let outcome = match out {
+                    Ok(output) => Outcome::Done(Response {
+                        output,
+                        latency_ms: latency,
+                        compute_ms,
+                        comm_ms,
+                        cache_hit: false,
+                        deadline_met: met,
+                    }),
+                    Err(e) => Outcome::Failed(e),
+                };
+                let _ = r.reply.send(outcome);
+            }
+        }
+        Err(e) => {
+            if e.downcast_ref::<crate::pipeline::engine::DeadlineShed>()
+                .is_some()
+            {
+                // The engine shed the whole transport pre-admission: the
+                // batch deadline was the most lenient member's, so every
+                // member's own deadline is blown too.
+                for &i in &misses {
+                    let r = &batch[i];
+                    queue.shed_expired.fetch_add(1, Ordering::Relaxed);
+                    metrics.record_shed(r.class, true);
+                    let _ = r
+                        .reply
+                        .send(Outcome::Shed(ShedReason::DeadlineExpired));
+                }
+            } else {
+                fail_requests(&batch, &misses, metrics, &e);
+            }
+        }
+    }
+}
+
+fn deadline_met(deadline: Option<Instant>) -> Option<bool> {
+    deadline.map(|d| Instant::now() <= d)
+}
+
+fn fail_requests(
+    batch: &[QueuedRequest],
+    misses: &[usize],
+    metrics: &MetricsCollector,
+    error: &anyhow::Error,
+) {
+    let msg = format!("{error:#}");
+    for &i in misses {
+        let r = &batch[i];
+        metrics.record_failure_class(r.class);
+        let _ = r
+            .reply
+            .send(Outcome::Failed(anyhow::anyhow!("{msg}")));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A fake service: output = input * 2, sleeps 2 ms per batch.
+    struct Doubler {
+        batch: usize,
+    }
+
+    impl InferenceService for Doubler {
+        fn infer_batch(&self, batch: &Tensor) -> Result<(Tensor, f64, f64)> {
+            std::thread::sleep(Duration::from_millis(2));
+            let data = batch.data.iter().map(|v| v * 2.0).collect();
+            Ok((Tensor::new(batch.shape.clone(), data)?, 2.0, 0.1))
+        }
+        fn batch_size(&self) -> usize {
+            self.batch
+        }
+        fn model_id(&self) -> u64 {
+            7
+        }
+    }
+
+    fn handle_over(batch: usize, cache: Option<Arc<ResultCache>>) -> ServiceHandle {
+        ServiceHandle::new(
+            Arc::new(Doubler { batch }),
+            IngressConfig::default(),
+            cache,
+        )
+    }
+
+    fn req(v: f32) -> Tensor {
+        Tensor::new(vec![1, 4], vec![v; 4]).unwrap()
+    }
+
+    #[test]
+    fn serves_all_requests_with_outputs() {
+        let h = handle_over(4, None);
+        let responses: Vec<_> = (0..20)
+            .map(|i| h.submit(req(i as f32)).unwrap())
+            .collect();
+        for (i, r) in responses.into_iter().enumerate() {
+            let out = r.wait_output().unwrap();
+            assert_eq!(out.shape, vec![1, 4]);
+            assert_eq!(out.data, vec![i as f32 * 2.0; 4]);
+        }
+        let m = h.finish();
+        assert_eq!(m.completed, 20);
+        assert_eq!(m.failed, 0);
+        assert_eq!(m.cache_hits, 0);
+        assert!(m.mean_latency_ms() > 0.0);
+    }
+
+    #[test]
+    fn cache_hits_on_repeated_inputs() {
+        let cache = Arc::new(ResultCache::new(16));
+        let h = handle_over(1, Some(Arc::clone(&cache)));
+        let responses: Vec<_> = (0..30)
+            .map(|i| h.submit(req((i % 3) as f32)).unwrap())
+            .collect();
+        let mut hits = 0;
+        for r in responses {
+            match r.wait() {
+                Outcome::Done(resp) => {
+                    if resp.cache_hit {
+                        hits += 1;
+                    }
+                }
+                other => panic!("unexpected outcome {other:?}"),
+            }
+        }
+        let m = h.finish();
+        assert_eq!(m.completed, 30);
+        assert!(m.cache_hits >= 20, "hits {}", m.cache_hits);
+        assert_eq!(m.cache_hits, hits);
+        assert_eq!(cache.stats().entries, 3);
+    }
+
+    #[test]
+    fn batching_reduces_service_calls() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        struct Counting {
+            calls: AtomicUsize,
+        }
+        impl InferenceService for Counting {
+            fn infer_batch(&self, batch: &Tensor) -> Result<(Tensor, f64, f64)> {
+                self.calls.fetch_add(1, Ordering::SeqCst);
+                Ok((batch.clone(), 0.0, 0.0))
+            }
+            fn batch_size(&self) -> usize {
+                8
+            }
+            fn model_id(&self) -> u64 {
+                1
+            }
+        }
+        let svc = Arc::new(Counting { calls: AtomicUsize::new(0) });
+        let h = ServiceHandle::new(
+            Arc::clone(&svc) as Arc<dyn InferenceService>,
+            IngressConfig::default(),
+            None,
+        );
+        let responses: Vec<_> =
+            (0..16).map(|i| h.submit(req(i as f32)).unwrap()).collect();
+        drop(responses);
+        let m = h.finish();
+        assert_eq!(m.completed, 16);
+        assert!(svc.calls.load(Ordering::SeqCst) <= 8);
+    }
+
+    #[test]
+    fn padded_rows_override_controls_stacking() {
+        struct MicroPad;
+        impl InferenceService for MicroPad {
+            fn infer_batch(&self, batch: &Tensor) -> Result<(Tensor, f64, f64)> {
+                anyhow::ensure!(
+                    batch.shape[0] % 2 == 0 && batch.shape[0] < 8,
+                    "expected micro-batch-multiple padding, got {:?}",
+                    batch.shape
+                );
+                Ok((batch.clone(), 0.0, 0.0))
+            }
+            fn batch_size(&self) -> usize {
+                8
+            }
+            fn padded_rows(&self, n: usize) -> usize {
+                (n + 1) / 2 * 2
+            }
+            fn model_id(&self) -> u64 {
+                3
+            }
+        }
+        let h = ServiceHandle::new(
+            Arc::new(MicroPad),
+            IngressConfig::default(),
+            None,
+        );
+        let rs: Vec<_> =
+            (0..3).map(|i| h.submit(req(i as f32)).unwrap()).collect();
+        drop(rs);
+        let m = h.finish();
+        assert_eq!(m.completed, 3);
+        assert_eq!(m.failed, 0);
+    }
+
+    #[test]
+    fn failures_are_counted_and_resolve_handles() {
+        struct Failing;
+        impl InferenceService for Failing {
+            fn infer_batch(&self, _batch: &Tensor) -> Result<(Tensor, f64, f64)> {
+                anyhow::bail!("boom")
+            }
+            fn batch_size(&self) -> usize {
+                2
+            }
+            fn model_id(&self) -> u64 {
+                2
+            }
+        }
+        let h = ServiceHandle::new(
+            Arc::new(Failing),
+            IngressConfig::default(),
+            None,
+        );
+        let rs: Vec<_> =
+            (0..4).map(|i| h.submit(req(i as f32)).unwrap()).collect();
+        for r in rs {
+            match r.wait() {
+                Outcome::Failed(e) => {
+                    assert!(format!("{e:#}").contains("boom"))
+                }
+                other => panic!("expected failure, got {other:?}"),
+            }
+        }
+        let m = h.finish();
+        assert_eq!(m.completed, 0);
+        assert_eq!(m.failed, 4);
+    }
+
+    #[test]
+    fn expired_deadline_is_shed_not_served() {
+        let h = handle_over(1, None);
+        // Deadline of ~0: by the time the dispatcher pops it, expired.
+        let r = h.req_with_tiny_deadline();
+        match r.wait() {
+            Outcome::Shed(ShedReason::DeadlineExpired) => {}
+            other => panic!("expected expired shed, got {other:?}"),
+        }
+        let m = h.finish();
+        assert_eq!(m.completed, 0);
+        let c = m.class(Priority::NORMAL.class()).expect("class metrics");
+        assert_eq!(c.shed_expired, 1);
+    }
+
+    impl ServiceHandle {
+        /// Test helper: a request whose deadline has effectively already
+        /// passed at submission.
+        fn req_with_tiny_deadline(&self) -> ResponseHandle {
+            self.request(req(1.0))
+                .deadline(Duration::from_nanos(1))
+                .submit()
+                .unwrap()
+        }
+    }
+
+    #[test]
+    fn predicted_miss_is_shed_once_estimate_warm() {
+        // Doubler sleeps 2 ms per batch; after one completion the EWMA
+        // estimate is ~2 ms, so a 0.1 ms deadline sheds predictively.
+        let h = handle_over(1, None);
+        h.submit(req(1.0)).unwrap().wait_output().unwrap();
+        assert!(h.queue().estimate_ms().unwrap() > 0.0);
+        let r = h
+            .request(req(2.0))
+            .deadline(Duration::from_micros(100))
+            .submit()
+            .unwrap();
+        match r.wait() {
+            Outcome::Shed(_) => {}
+            other => panic!("expected shed, got {other:?}"),
+        }
+        let (expired, predicted) = h.queue().shed_counts();
+        assert_eq!(expired + predicted, 1);
+        let m = h.finish();
+        assert_eq!(m.completed, 1);
+    }
+
+    #[test]
+    fn priority_lanes_dequeue_high_first() {
+        // Single worker + a service gated on a channel: the first batch
+        // blocks the worker, everything else queues; when released, the
+        // high-priority request must be dispatched before the earlier
+        // best-effort backlog.
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::mpsc::SyncSender;
+        struct Gated {
+            gate: Mutex<std::sync::mpsc::Receiver<()>>,
+            order: Mutex<Vec<usize>>,
+            calls: AtomicUsize,
+        }
+        impl InferenceService for Gated {
+            fn infer_batch(&self, batch: &Tensor) -> Result<(Tensor, f64, f64)> {
+                Ok((batch.clone(), 0.0, 0.0))
+            }
+            fn infer_batch_meta(
+                &self,
+                batch: &Tensor,
+                meta: BatchMeta,
+            ) -> Result<(Tensor, f64, f64)> {
+                self.calls.fetch_add(1, Ordering::SeqCst);
+                self.order.lock().unwrap().push(meta.class);
+                let _ = self.gate.lock().unwrap().recv();
+                self.infer_batch(batch)
+            }
+            fn batch_size(&self) -> usize {
+                1
+            }
+            fn model_id(&self) -> u64 {
+                5
+            }
+        }
+        let (gate_tx, gate_rx): (SyncSender<()>, _) =
+            std::sync::mpsc::sync_channel(64);
+        let svc = Arc::new(Gated {
+            gate: Mutex::new(gate_rx),
+            order: Mutex::new(Vec::new()),
+            calls: AtomicUsize::new(0),
+        });
+        let h = ServiceHandle::new(
+            Arc::clone(&svc) as Arc<dyn InferenceService>,
+            IngressConfig {
+                workers: 1,
+                max_wait: Duration::from_millis(1),
+                ..IngressConfig::default()
+            },
+            None,
+        );
+        // 4 best-effort requests; the first occupies the single worker.
+        let rs: Vec<_> = (0..4)
+            .map(|i| {
+                h.request(req(i as f32))
+                    .priority(Priority::BEST_EFFORT)
+                    .submit()
+                    .unwrap()
+            })
+            .collect();
+        // Wait until the first batch is actually in the worker.
+        while svc.calls.load(Ordering::SeqCst) == 0 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // Now a high-priority request arrives behind the backlog.
+        let hi = h
+            .request(req(9.0))
+            .priority(Priority::HIGH)
+            .submit()
+            .unwrap();
+        // Release everything.
+        for _ in 0..8 {
+            let _ = gate_tx.send(());
+        }
+        hi.wait_output().unwrap();
+        for r in rs {
+            r.wait_output().unwrap();
+        }
+        let m = h.finish();
+        assert_eq!(m.completed, 5);
+        let order = svc.order.lock().unwrap().clone();
+        // First dispatched batch was best-effort (it was alone); the
+        // high-priority class must appear before the best-effort
+        // backlog finishes.
+        let hi_pos = order
+            .iter()
+            .position(|&c| c == Priority::HIGH.class())
+            .expect("high-priority batch dispatched");
+        assert!(
+            order[hi_pos + 1..]
+                .contains(&Priority::BEST_EFFORT.class()),
+            "high priority did not jump the backlog: {order:?}"
+        );
+    }
+
+    #[test]
+    fn per_class_metrics_are_recorded() {
+        let h = handle_over(2, None);
+        let a = h
+            .request(req(1.0))
+            .priority(Priority::HIGH)
+            .deadline(Duration::from_secs(10))
+            .submit()
+            .unwrap();
+        let b = h
+            .request(req(2.0))
+            .priority(Priority::BEST_EFFORT)
+            .submit()
+            .unwrap();
+        a.wait_output().unwrap();
+        b.wait_output().unwrap();
+        let m = h.finish();
+        let hi = m.class(Priority::HIGH.class()).expect("high class");
+        assert_eq!(hi.completed, 1);
+        assert_eq!(hi.deadline_total, 1);
+        assert_eq!(hi.deadline_met, 1);
+        let be = m
+            .class(Priority::BEST_EFFORT.class())
+            .expect("best-effort class");
+        assert_eq!(be.completed, 1);
+        assert_eq!(be.deadline_total, 0);
+    }
+
+    #[test]
+    fn backpressure_blocks_then_accepts() {
+        // Capacity 2 with a slow single worker: the third submit blocks
+        // until the dispatcher drains one — and everything completes.
+        let h = ServiceHandle::new(
+            Arc::new(Doubler { batch: 1 }),
+            IngressConfig {
+                capacity: 2,
+                workers: 1,
+                max_wait: Duration::from_millis(1),
+                ..IngressConfig::default()
+            },
+            None,
+        );
+        let rs: Vec<_> =
+            (0..8).map(|i| h.submit(req(i as f32)).unwrap()).collect();
+        for r in rs {
+            r.wait_output().unwrap();
+        }
+        let m = h.finish();
+        assert_eq!(m.completed, 8);
+    }
+
+    #[test]
+    fn finish_drains_and_closed_queue_rejects_pushes() {
+        let h = handle_over(1, None);
+        let q = Arc::clone(&h.queue);
+        let m = h.finish();
+        assert_eq!(m.completed, 0);
+        assert_eq!(q.len(), 0);
+        // The closed queue refuses new work (returns false, does not
+        // block); the dropped reply sender resolves the would-be
+        // handle.
+        let (reply, rx) = channel();
+        let rejected = QueuedRequest {
+            input: req(1.0),
+            class: 0,
+            deadline: None,
+            tag: None,
+            enqueued: Instant::now(),
+            reply,
+        };
+        assert!(!q.push(rejected));
+        assert!(matches!(
+            (ResponseHandle { rx }).wait(),
+            Outcome::Failed(_)
+        ));
+    }
+
+    #[test]
+    fn panicking_service_resolves_handles_and_keeps_serving() {
+        // A service that panics on a sentinel input must fail only that
+        // request's handle; the worker, slot, and drain bookkeeping all
+        // survive, so later requests complete and finish() returns.
+        struct Landmine;
+        impl InferenceService for Landmine {
+            fn infer_batch(&self, batch: &Tensor) -> Result<(Tensor, f64, f64)> {
+                if batch.data.first() == Some(&13.0) {
+                    panic!("injected service panic");
+                }
+                Ok((batch.clone(), 0.0, 0.0))
+            }
+            fn batch_size(&self) -> usize {
+                1
+            }
+            fn model_id(&self) -> u64 {
+                13
+            }
+        }
+        let h = ServiceHandle::new(
+            Arc::new(Landmine),
+            IngressConfig { workers: 1, ..IngressConfig::default() },
+            None,
+        );
+        let boom = h.submit(req(13.0)).unwrap();
+        match boom.wait() {
+            Outcome::Failed(_) => {}
+            other => panic!("expected failure, got {other:?}"),
+        }
+        // The single worker survived the panic and keeps serving.
+        let ok = h.submit(req(2.0)).unwrap();
+        assert_eq!(ok.wait_output().unwrap().data, vec![2.0; 4]);
+        let m = h.finish();
+        assert_eq!(m.completed, 1);
+    }
+
+    #[test]
+    fn class_names_render() {
+        assert_eq!(class_name(0), "high");
+        assert_eq!(class_name(1), "normal");
+        assert_eq!(class_name(2), "best-effort");
+        assert_eq!(class_name(7), "class-7");
+    }
+}

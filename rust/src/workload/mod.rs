@@ -4,13 +4,15 @@
 //! inference requests over MobileNetV2. We generate seeded N(0,1) image
 //! tensors from a bounded *pool* of distinct inputs — the pool size
 //! controls the result-cache hit rate (paper's +Cache rows), and closed-
-//! vs open-loop arrival controls queueing behaviour.
+//! vs open-loop arrival controls queueing behaviour. Requests enter
+//! through the unified serving ingress ([`ServiceHandle`]) like every
+//! other entry point; [`feed_with`] lets a workload mix priority
+//! classes and deadlines per request.
 
-use std::sync::mpsc::SyncSender;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
-use crate::router::Request;
 use crate::runtime::Tensor;
+use crate::serving::{Priority, ServiceHandle};
 use crate::util::rng::Rng;
 
 /// A reusable pool of distinct input tensors.
@@ -55,15 +57,51 @@ pub enum Arrival {
     Poisson { rate_rps: f64 },
 }
 
-/// Feed `n` requests drawn round-robin from `pool` into the router channel.
-/// Returns the number of requests sent. Blocks on a full queue
-/// (backpressure).
+/// Per-request serving context a workload assigns: priority class plus
+/// an optional relative deadline. [`RequestSpec::default`] is plain
+/// default-class no-deadline traffic.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RequestSpec {
+    pub priority: Priority,
+    pub deadline: Option<Duration>,
+}
+
+impl RequestSpec {
+    pub fn new(priority: Priority) -> RequestSpec {
+        RequestSpec { priority, deadline: None }
+    }
+
+    pub fn with_deadline(mut self, d: Duration) -> RequestSpec {
+        self.deadline = Some(d);
+        self
+    }
+}
+
+/// Feed `n` default-class requests drawn round-robin from `pool` into
+/// the serving ingress. Returns the number of requests submitted.
+/// Blocks on a full ingress queue (backpressure). Outcomes are recorded
+/// in the handle's metrics; call `handle.finish()` to collect them.
 pub fn feed(
-    tx: &SyncSender<Request>,
+    handle: &ServiceHandle,
     pool: &InputPool,
     n: usize,
     arrival: Arrival,
     seed: u64,
+) -> usize {
+    feed_with(handle, pool, n, arrival, seed, |_| RequestSpec::default())
+}
+
+/// [`feed`] with a per-request spec: `spec(i)` assigns the `i`-th
+/// request's priority class and optional deadline — how mixed-
+/// criticality workloads (latency-critical traffic over a best-effort
+/// flood) are expressed.
+pub fn feed_with(
+    handle: &ServiceHandle,
+    pool: &InputPool,
+    n: usize,
+    arrival: Arrival,
+    seed: u64,
+    mut spec: impl FnMut(usize) -> RequestSpec,
 ) -> usize {
     let mut rng = Rng::new(seed);
     let mut sent = 0;
@@ -72,13 +110,13 @@ pub fn feed(
             let gap_s = rng.exp(1.0 / rate_rps.max(1e-9));
             std::thread::sleep(Duration::from_secs_f64(gap_s));
         }
-        let req = Request {
-            id: i as u64,
-            input: pool.get(i).clone(),
-            enqueued: Instant::now(),
-        };
-        if tx.send(req).is_err() {
-            break; // router gone
+        let s = spec(i);
+        let mut req = handle.request(pool.get(i).clone()).priority(s.priority);
+        if let Some(d) = s.deadline {
+            req = req.deadline(d);
+        }
+        if req.submit().is_err() {
+            break; // ingress shut down
         }
         sent += 1;
     }
@@ -88,7 +126,11 @@ pub fn feed(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::router::request_channel;
+    use std::sync::Arc;
+    use std::time::Instant;
+
+    use crate::router::InferenceService;
+    use crate::serving::IngressConfig;
 
     #[test]
     fn pool_is_deterministic_and_distinct() {
@@ -102,25 +144,72 @@ mod tests {
         assert_eq!(a.get(0).data, a.get(3).data);
     }
 
+    /// Identity service: output = input, fixed batch of 4.
+    struct Echo;
+    impl InferenceService for Echo {
+        fn infer_batch(
+            &self,
+            batch: &Tensor,
+        ) -> anyhow::Result<(Tensor, f64, f64)> {
+            Ok((batch.clone(), 0.0, 0.0))
+        }
+        fn batch_size(&self) -> usize {
+            4
+        }
+        fn model_id(&self) -> u64 {
+            11
+        }
+    }
+
+    fn handle() -> ServiceHandle {
+        ServiceHandle::new(Arc::new(Echo), IngressConfig::default(), None)
+    }
+
     #[test]
     fn feed_closed_loop_sends_all() {
         let pool = InputPool::new(&[1, 2], 2, 1);
-        let (tx, rx) = request_channel(64);
-        let sent = feed(&tx, &pool, 10, Arrival::Closed, 2);
+        let h = handle();
+        let sent = feed(&h, &pool, 10, Arrival::Closed, 2);
         assert_eq!(sent, 10);
-        drop(tx);
-        assert_eq!(rx.iter().count(), 10);
+        let m = h.finish();
+        assert_eq!(m.completed, 10);
+        assert_eq!(m.failed, 0);
     }
 
     #[test]
     fn feed_poisson_spaces_arrivals() {
         let pool = InputPool::new(&[1, 2], 1, 1);
-        let (tx, rx) = request_channel(64);
+        let h = handle();
         let t0 = Instant::now();
-        feed(&tx, &pool, 5, Arrival::Poisson { rate_rps: 1000.0 }, 3);
+        let sent = feed(&h, &pool, 5, Arrival::Poisson { rate_rps: 1000.0 }, 3);
         let elapsed = t0.elapsed();
         assert!(elapsed.as_micros() > 500, "arrivals too fast");
-        drop(tx);
-        assert_eq!(rx.iter().count(), 5);
+        assert_eq!(sent, 5);
+        let m = h.finish();
+        assert_eq!(m.completed, 5);
+    }
+
+    #[test]
+    fn feed_with_assigns_classes_and_deadlines() {
+        let pool = InputPool::new(&[1, 2], 4, 1);
+        let h = handle();
+        feed_with(&h, &pool, 8, Arrival::Closed, 4, |i| {
+            if i % 2 == 0 {
+                RequestSpec::new(Priority::HIGH)
+                    .with_deadline(Duration::from_secs(30))
+            } else {
+                RequestSpec::new(Priority::BEST_EFFORT)
+            }
+        });
+        let m = h.finish();
+        assert_eq!(m.completed, 8);
+        let hi = m.class(Priority::HIGH.class()).expect("high class");
+        assert_eq!(hi.completed, 4);
+        assert_eq!(hi.deadline_total, 4);
+        let be = m
+            .class(Priority::BEST_EFFORT.class())
+            .expect("best-effort class");
+        assert_eq!(be.completed, 4);
+        assert_eq!(be.deadline_total, 0);
     }
 }

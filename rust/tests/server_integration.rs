@@ -8,9 +8,9 @@ use std::sync::Arc;
 use amp4ec::baseline::{baseline_node_spec, MonolithicService};
 use amp4ec::cluster::{Cluster, SimParams};
 use amp4ec::config::AmpConfig;
-use amp4ec::router::{self, InferenceService, RouterConfig};
 
 use amp4ec::server::EdgeServer;
+use amp4ec::serving::{IngressConfig, ServiceHandle};
 use amp4ec::workload::{feed, Arrival, InputPool};
 
 fn fast_config() -> AmpConfig {
@@ -151,14 +151,9 @@ fn monolithic_baseline_serves() {
     let svc = Arc::new(MonolithicService::new(&manifest, node, 1).unwrap());
 
     let pool = InputPool::new(svc.input_shape(), 4, 7);
-    let (tx, rx) = router::request_channel(16);
-    let svc_dyn: Arc<dyn InferenceService> = svc;
-    let handle = std::thread::spawn(move || {
-        router::serve(svc_dyn, rx, RouterConfig::default(), None)
-    });
-    feed(&tx, &pool, 4, Arrival::Closed, 8);
-    drop(tx);
-    let metrics = handle.join().unwrap();
+    let handle = ServiceHandle::new(svc, IngressConfig::default(), None);
+    feed(&handle, &pool, 4, Arrival::Closed, 8);
+    let metrics = handle.finish();
     assert_eq!(metrics.completed, 4);
     assert_eq!(metrics.failed, 0);
     assert!(metrics.mean_latency_ms() > 0.0);
@@ -184,14 +179,9 @@ fn distributed_tracks_monolithic_and_cache_beats_it() {
         MonolithicService::new(&manifest, cluster.get(id).unwrap(), 1).unwrap(),
     );
     let pool = InputPool::new(svc.input_shape(), n_req, 9);
-    let (tx, rx) = router::request_channel(64);
-    let svc_dyn: Arc<dyn InferenceService> = svc;
-    let handle = std::thread::spawn(move || {
-        router::serve(svc_dyn, rx, RouterConfig::default(), None)
-    });
-    feed(&tx, &pool, n_req, Arrival::Closed, 10);
-    drop(tx);
-    let mono = handle.join().unwrap();
+    let handle = ServiceHandle::new(svc, IngressConfig::default(), None);
+    feed(&handle, &pool, n_req, Arrival::Closed, 10);
+    let mono = handle.finish();
 
     // Distributed: batch-8 artifacts + profile-guided partitions.
     let mut cfg = fast_config();

@@ -1,0 +1,512 @@
+//! ISSUE 4 tentpole tests: the unified request-level serving API.
+//!
+//! Pins the redesign's acceptance criteria on the deterministic
+//! harness: default-class no-deadline traffic through the ingress is
+//! bit-identical to the pre-redesign direct pipeline path; expired-
+//! deadline requests are shed (reported, never hung) at both the
+//! ingress and the engine feeder; high-priority requests meet deadlines
+//! under a saturated engine that a best-effort-only run misses (the
+//! engine held saturated via the harness's `FaultStages` backlog
+//! injection, which vetoes adaptive widening); and the live-profile
+//! window retune (`reshape_budgets` / `live_stage_latencies`) moves
+//! budgets without draining the pipeline.
+
+mod common;
+
+use common::harness as h;
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use amp4ec::cluster::NodeSnapshot;
+use amp4ec::monitor::ClusterSnapshot;
+use amp4ec::pipeline::engine::{
+    run_serial, AdaptiveDepthConfig, DeadlineShed, PersistentEngine,
+    PersistentEngineConfig, SimStages,
+};
+use amp4ec::runtime::Tensor;
+use amp4ec::server::{live_stage_latencies, single_request, EdgeServer};
+use amp4ec::serving::{
+    EngineService, IngressConfig, Outcome, Priority, ServiceHandle,
+    ShedReason,
+};
+use amp4ec::workload::{feed_with, Arrival, InputPool, RequestSpec};
+
+fn row(cols: usize, seed: u64) -> Tensor {
+    h::seeded_input(1, cols, seed)
+}
+
+fn ingress_over(
+    engine: PersistentEngine,
+    depth: usize,
+    cfg: IngressConfig,
+) -> ServiceHandle {
+    ServiceHandle::new(
+        Arc::new(EngineService::new(Arc::new(engine), 1, depth)),
+        cfg,
+        None,
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Equivalence: default-class traffic is bit-identical to the direct path
+// ---------------------------------------------------------------------------
+
+#[test]
+fn default_traffic_bit_identical_to_direct_pipeline() {
+    // 24 single-row requests through the full ingress (batching,
+    // padding, engine submission) must produce exactly the rows the
+    // pre-redesign direct path (serial pipeline traversal of each
+    // input) produces.
+    let inputs: Vec<Tensor> = (0..24).map(|i| row(16, 900 + i)).collect();
+    let direct = h::sim_stages(h::PAPER_SHARES, 1.0);
+    let expected: Vec<Tensor> = inputs
+        .iter()
+        .map(|t| run_serial(&*direct, t, 1).unwrap().output)
+        .collect();
+
+    let engine =
+        PersistentEngine::new(h::sim_stages(h::PAPER_SHARES, 1.0), h::engine_cfg(2))
+            .unwrap();
+    let handle = ingress_over(engine, 4, IngressConfig::default());
+    let responses: Vec<_> = inputs
+        .iter()
+        .map(|t| handle.submit(t.clone()).unwrap())
+        .collect();
+    for (r, want) in responses.into_iter().zip(&expected) {
+        let out = r.wait_output().unwrap();
+        assert_eq!(&out, want, "ingress output diverged from direct path");
+    }
+    let m = handle.finish();
+    assert_eq!(m.completed, 24);
+    assert_eq!(m.failed, 0);
+    assert_eq!(m.total_shed(), 0);
+    // Default-class traffic lands in the NORMAL lane.
+    let c = m.class(Priority::NORMAL.class()).unwrap();
+    assert_eq!(c.completed, 24);
+    assert_eq!(c.deadline_total, 0);
+}
+
+// ---------------------------------------------------------------------------
+// Deadline shedding: ingress-level and engine-level, never hung
+// ---------------------------------------------------------------------------
+
+#[test]
+fn expired_deadlines_shed_at_ingress_under_saturation() {
+    // Saturate a slow serial engine with best-effort traffic, then push
+    // deadline-carrying requests the backlog cannot possibly meet:
+    // every one resolves as Shed — reported, never hung — and the
+    // per-class metrics count them.
+    let engine =
+        PersistentEngine::new(h::sim_stages(&[1.0, 0.25], 2.0), h::engine_cfg(1))
+            .unwrap();
+    let handle = ingress_over(
+        engine,
+        1,
+        IngressConfig {
+            workers: 1,
+            max_wait: Duration::from_millis(1),
+            ..IngressConfig::default()
+        },
+    );
+    let flood: Vec<_> = (0..12)
+        .map(|i| {
+            handle
+                .request(row(8, 700 + i))
+                .priority(Priority::BEST_EFFORT)
+                .submit()
+                .unwrap()
+        })
+        .collect();
+    // Already-expired deadlines: shed at dispatch, no engine work.
+    let doomed: Vec<_> = (0..4)
+        .map(|i| {
+            handle
+                .request(row(8, 750 + i))
+                .deadline(Duration::from_nanos(1))
+                .submit()
+                .unwrap()
+        })
+        .collect();
+    for d in doomed {
+        match d.wait() {
+            Outcome::Shed(ShedReason::DeadlineExpired | ShedReason::PredictedMiss) => {}
+            other => panic!("expected shed, got {other:?}"),
+        }
+    }
+    for f in flood {
+        f.wait_output().unwrap();
+    }
+    let m = handle.finish();
+    assert_eq!(m.completed, 12);
+    assert_eq!(m.failed, 0);
+    assert_eq!(m.total_shed(), 4);
+    assert_eq!(m.class(Priority::NORMAL.class()).unwrap().shed(), 4);
+}
+
+#[test]
+fn engine_feeder_sheds_expired_deadline_pre_admission() {
+    // Fill a depth-1 engine's feeder with slow same-class batches, then
+    // submit a batch whose deadline expires while it waits in the
+    // submission queue: the feeder sheds it with a DeadlineShed error
+    // instead of spending credits — and the handle resolves.
+    let engine =
+        PersistentEngine::new(h::sim_stages(&[1.0, 0.25], 3.0), h::engine_cfg(1))
+            .unwrap();
+    let blockers: Vec<_> = (0..4)
+        .map(|i| {
+            engine
+                .submit_owned_with(h::seeded_input(3, 8, 800 + i), 1, None)
+                .unwrap()
+        })
+        .collect();
+    // ~12 micro-batches of >= 12 ms bottleneck time queue ahead; 20 ms
+    // cannot survive the wait.
+    let doomed = engine
+        .submit_owned_with(
+            h::seeded_input(2, 8, 850),
+            1,
+            Some(Instant::now() + Duration::from_millis(20)),
+        )
+        .unwrap();
+    let err = doomed.wait().expect_err("deadline must shed");
+    assert!(
+        err.downcast_ref::<DeadlineShed>().is_some(),
+        "expected DeadlineShed, got {err:#}"
+    );
+    for b in blockers {
+        b.wait().unwrap();
+    }
+}
+
+#[test]
+fn engine_feeder_admits_urgent_class_first() {
+    // While the feeder is busy pushing a slow blocker through a depth-1
+    // window, a best-effort and a high-priority submission queue up;
+    // the high-priority one must be admitted — and therefore delivered
+    // — first, despite arriving later.
+    let engine = Arc::new(
+        PersistentEngine::new(h::sim_stages(&[1.0, 0.4], 4.0), h::engine_cfg(1))
+            .unwrap(),
+    );
+    let blocker = engine
+        .submit_owned_with(h::seeded_input(3, 8, 860), 1, None)
+        .unwrap();
+    let best_effort = engine
+        .submit_owned_with(h::seeded_input(2, 8, 861), 2, None)
+        .unwrap();
+    let urgent = engine
+        .submit_owned_with(h::seeded_input(2, 8, 862), 0, None)
+        .unwrap();
+
+    let t0 = Instant::now();
+    let done_at = Arc::new(std::sync::Mutex::new(Vec::<(&str, Duration)>::new()));
+    std::thread::scope(|s| {
+        let d1 = Arc::clone(&done_at);
+        s.spawn(move || {
+            best_effort.wait().unwrap();
+            d1.lock().unwrap().push(("best-effort", t0.elapsed()));
+        });
+        let d2 = Arc::clone(&done_at);
+        s.spawn(move || {
+            urgent.wait().unwrap();
+            d2.lock().unwrap().push(("urgent", t0.elapsed()));
+        });
+        blocker.wait().unwrap();
+    });
+    let order = done_at.lock().unwrap().clone();
+    let pos = |label: &str| {
+        order
+            .iter()
+            .position(|(l, _)| *l == label)
+            .unwrap_or_else(|| panic!("{label} never completed: {order:?}"))
+    };
+    assert!(
+        pos("urgent") < pos("best-effort"),
+        "urgent batch did not jump the best-effort backlog: {order:?}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Acceptance: priority meets deadlines a saturated best-effort run misses
+// ---------------------------------------------------------------------------
+
+/// A saturated serving stack: adaptive per-stage engine over a
+/// `FaultStages`-wrapped skewed chain whose injected device backlog
+/// vetoes widening, so the window stays pinned at depth 1 and the
+/// bottleneck's queueing is real.
+fn saturated_stack() -> ServiceHandle {
+    let faulty = Arc::new(h::FaultStages::new(
+        SimStages::heterogeneous(&[1.0, 0.25], 2.0),
+    ));
+    // Backlog injection: the bottleneck node reports more queued work
+    // than any budget, so the adaptive controller's widen veto keeps
+    // the window at 1 for the whole run.
+    faulty.set_backlog(1, 1000);
+    let engine = PersistentEngine::new(
+        faulty,
+        PersistentEngineConfig {
+            micro_batch_rows: 1,
+            initial_depth: 1,
+            adaptive: Some(AdaptiveDepthConfig {
+                max_depth: 8,
+                ..AdaptiveDepthConfig::default()
+            }),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    ServiceHandle::new(
+        Arc::new(EngineService::new(Arc::new(engine), 1, 1)),
+        IngressConfig {
+            workers: 1,
+            max_wait: Duration::from_millis(1),
+            ..IngressConfig::default()
+        },
+        None,
+    )
+}
+
+const FLOOD: usize = 30;
+const DEADLINE: Duration = Duration::from_millis(250);
+
+#[test]
+fn high_priority_meets_deadlines_saturated_best_effort_misses() {
+    // Mixed run: a best-effort flood saturates the engine; four
+    // high-priority requests with a 250 ms deadline arrive behind it
+    // and must all meet it (they jump everything not yet dispatched).
+    let handle = saturated_stack();
+    let flood: Vec<_> = (0..FLOOD)
+        .map(|i| {
+            handle
+                .request(row(8, 500 + i as u64))
+                .priority(Priority::BEST_EFFORT)
+                .submit()
+                .unwrap()
+        })
+        .collect();
+    let urgent: Vec<_> = (0..4)
+        .map(|i| {
+            handle
+                .request(row(8, 580 + i))
+                .priority(Priority::HIGH)
+                .deadline(DEADLINE)
+                .submit()
+                .unwrap()
+        })
+        .collect();
+    for u in urgent {
+        match u.wait() {
+            Outcome::Done(r) => assert_eq!(r.deadline_met, Some(true)),
+            other => panic!("urgent request did not complete: {other:?}"),
+        }
+    }
+    for f in flood {
+        f.wait_output().unwrap();
+    }
+    let m = handle.finish();
+    let hi = m.class(Priority::HIGH.class()).unwrap();
+    assert_eq!(hi.completed, 4);
+    assert_eq!(hi.deadline_total, 4);
+    assert_eq!(
+        hi.deadline_met, 4,
+        "high-priority p99 blew the deadline: {:?} ms",
+        hi.latency_summary().p99()
+    );
+    assert_eq!(hi.shed(), 0);
+    let be = m.class(Priority::BEST_EFFORT.class()).unwrap();
+    assert_eq!(be.completed as usize, FLOOD);
+
+    // Control run: the same flood best-effort-only, every request
+    // carrying the same deadline — the saturated tail cannot make it:
+    // requests are shed (expired or predicted) and/or finish late.
+    // Every handle still resolves.
+    let control = saturated_stack();
+    let rs: Vec<_> = (0..FLOOD)
+        .map(|i| {
+            control
+                .request(row(8, 500 + i as u64))
+                .priority(Priority::BEST_EFFORT)
+                .deadline(DEADLINE)
+                .submit()
+                .unwrap()
+        })
+        .collect();
+    for r in rs {
+        let _ = r.wait(); // resolves: Done, Shed, or Failed — never hangs
+    }
+    let cm = control.finish();
+    let be = cm.class(Priority::BEST_EFFORT.class()).unwrap();
+    assert_eq!(
+        be.completed + be.failed + be.shed(),
+        FLOOD as u64,
+        "every request must resolve"
+    );
+    assert_eq!(be.failed, 0);
+    assert!(
+        be.shed() > 0 || be.deadline_met < be.deadline_total,
+        "a saturated best-effort-only run should miss the deadline the \
+         high-priority class met: {be:?}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Live-profile window retune
+// ---------------------------------------------------------------------------
+
+#[test]
+fn reshape_budgets_moves_windows_in_place() {
+    let engine = PersistentEngine::new(
+        h::sim_stages(h::SKEWED_SHARES, 1.0),
+        PersistentEngineConfig {
+            micro_batch_rows: 1,
+            initial_depth: 2,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(engine.stage_budgets(), vec![2; 5]);
+    engine.reshape_budgets(&[1, 1, 2, 3, 3]);
+    assert_eq!(engine.stage_budgets(), vec![1, 1, 2, 3, 3]);
+    assert_eq!(engine.current_depth(), 3);
+    // The reshaped engine still serves, bit-identically.
+    let input = h::seeded_input(6, 8, 870);
+    let want = run_serial(&*h::sim_stages(h::SKEWED_SHARES, 1.0), &input, 1)
+        .unwrap()
+        .output;
+    assert_eq!(engine.run(&input).unwrap().output, want);
+    // Zero targets clamp to the >= 1 floor instead of wedging a window.
+    engine.reshape_budgets(&[0, 0, 0, 0, 0]);
+    assert_eq!(engine.stage_budgets(), vec![1; 5]);
+    assert_eq!(engine.run(&input).unwrap().output, want);
+}
+
+#[test]
+fn reshape_budgets_clamps_to_adaptive_range() {
+    let engine = PersistentEngine::new(
+        h::sim_stages(h::PAPER_SHARES, 1.0),
+        h::adaptive_cfg(2, 4),
+    )
+    .unwrap();
+    engine.reshape_budgets(&[100, 1, 100]);
+    // min_depth defaults to 1 in AdaptiveDepthConfig; max is 4.
+    let budgets = engine.stage_budgets();
+    assert!(
+        budgets.iter().all(|&b| (1..=4).contains(&b)),
+        "budgets escaped the adaptive range: {budgets:?}"
+    );
+    assert_eq!(budgets[0], 4);
+    assert_eq!(budgets[2], 4);
+}
+
+#[test]
+fn live_stage_latencies_scale_with_node_load() {
+    // Serve some traffic so every stage has a measured profile, then
+    // check the monitor-snapshot scaling: a loaded node's stage weighs
+    // heavier, and a cold engine yields None.
+    let engine = PersistentEngine::new(
+        h::sim_stages(h::PAPER_SHARES, 2.0),
+        h::engine_cfg(2),
+    )
+    .unwrap();
+    let idle_snapshot = |loads: &[f64]| ClusterSnapshot {
+        t_ms: 0.0,
+        nodes: loads
+            .iter()
+            .enumerate()
+            .map(|(id, &load)| NodeSnapshot {
+                id,
+                name: format!("sim-{id}"),
+                online: true,
+                cpu_fraction: 1.0,
+                mem_limit_mb: 1024.0,
+                current_load: load,
+                mem_used_mb: 0.0,
+                mem_pct: 0.0,
+                rx_bytes: 0,
+                tx_bytes: 0,
+                tasks_completed: 0,
+                tasks_failed: 0,
+                stability: 1.0,
+                link_latency_ms: 1.0,
+            })
+            .collect(),
+    };
+    // Cold engine: no profile yet.
+    assert!(live_stage_latencies(
+        &engine.total_counters(),
+        &idle_snapshot(&[0.0, 0.0, 0.0])
+    )
+    .is_none());
+
+    engine.run(&h::seeded_input(4, 8, 880)).unwrap();
+    let idle =
+        live_stage_latencies(&engine.total_counters(), &idle_snapshot(&[0.0, 0.0, 0.0]))
+            .unwrap();
+    assert_eq!(idle.len(), 3);
+    assert!(idle.iter().all(|&ms| ms > 0.0));
+    // Load node 1 to 100%: its stage latency doubles, others unchanged.
+    let loaded =
+        live_stage_latencies(&engine.total_counters(), &idle_snapshot(&[0.0, 1.0, 0.0]))
+            .unwrap();
+    assert!((loaded[0] - idle[0]).abs() < 1e-9);
+    assert!((loaded[1] - 2.0 * idle[1]).abs() < 1e-9);
+    assert!((loaded[2] - idle[2]).abs() < 1e-9);
+}
+
+// ---------------------------------------------------------------------------
+// Artifact-gated: the real-model entry points ride the same ingress
+// ---------------------------------------------------------------------------
+
+#[test]
+fn single_request_and_handle_agree_on_real_model() {
+    require_artifacts!();
+    let cfg = amp4ec::config::AmpConfig::paper_cluster(&common::artifacts_dir());
+    let server = EdgeServer::start(cfg).unwrap();
+    let pool = InputPool::new(&server.request_shape(), 2, 42);
+
+    // The one-shot convenience path and an explicit serve handle must
+    // produce bit-identical outputs for the same input (both are the
+    // same ingress + pipeline).
+    let (via_single, ms) = single_request(&server, pool.get(0)).unwrap();
+    assert!(ms > 0.0);
+    let handle = server.serve_handle();
+    let via_handle = handle
+        .request(pool.get(0).clone())
+        .priority(Priority::HIGH)
+        .deadline(Duration::from_secs(60))
+        .submit()
+        .unwrap()
+        .wait_output()
+        .unwrap();
+    assert_eq!(via_single, via_handle);
+    let m = handle.finish();
+    let hi = m.class(Priority::HIGH.class()).unwrap();
+    assert_eq!(hi.completed, 1);
+    assert_eq!(hi.deadline_met, 1);
+}
+
+#[test]
+fn mixed_class_workload_on_real_model() {
+    require_artifacts!();
+    let mut cfg = amp4ec::config::AmpConfig::paper_cluster(&common::artifacts_dir());
+    cfg.monitor_interval_ms = 20;
+    let server = EdgeServer::start(cfg).unwrap();
+    let pool = InputPool::new(&server.request_shape(), 4, 9);
+    let handle = server.serve_handle();
+    let sent = feed_with(&handle, &pool, 8, Arrival::Closed, 5, |i| {
+        if i % 2 == 0 {
+            RequestSpec::new(Priority::HIGH)
+                .with_deadline(Duration::from_secs(120))
+        } else {
+            RequestSpec::new(Priority::BEST_EFFORT)
+        }
+    });
+    assert_eq!(sent, 8);
+    let m = handle.finish();
+    assert_eq!(m.completed, 8);
+    assert_eq!(m.failed, 0);
+    let hi = m.class(Priority::HIGH.class()).unwrap();
+    assert_eq!(hi.completed, 4);
+    assert_eq!(hi.deadline_met, 4);
+}
