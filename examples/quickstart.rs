@@ -51,7 +51,7 @@ fn main() -> anyhow::Result<()> {
         Outcome::Done(r) => {
             let top1 = r
                 .output
-                .data
+                .data()
                 .iter()
                 .enumerate()
                 .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())

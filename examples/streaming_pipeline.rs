@@ -111,7 +111,7 @@ fn main() -> anyhow::Result<()> {
     let per_batch: Vec<Tensor> = (0..n_batches)
         .map(|i| {
             let mut t = input(4, 32);
-            for v in &mut t.data {
+            for v in t.data_mut() {
                 *v += i as f32;
             }
             t

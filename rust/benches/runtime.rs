@@ -10,7 +10,7 @@ use amp4ec::util::rng::Rng;
 
 fn rand_tensor(shape: Vec<usize>, seed: u64) -> Tensor {
     let mut t = Tensor::zeros(shape);
-    Rng::new(seed).fill_normal_f32(&mut t.data);
+    Rng::new(seed).fill_normal_f32(t.data_mut());
     t
 }
 

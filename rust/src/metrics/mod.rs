@@ -8,6 +8,63 @@ use std::time::Instant;
 
 use crate::util::stats::Summary;
 
+/// Data-plane copy accounting: process-global counters fed by the
+/// activation path (`runtime::Tensor`, `pipeline::stack_batch`, the
+/// engine feeder/collector). `copied_bytes` counts every activation
+/// memcpy the data plane performs; `viewed_bytes` counts bytes handed
+/// off as zero-copy views instead — the bytes the Arc-backed tensor
+/// refactor stopped moving. Benches snapshot before/after a section to
+/// report the copy tax of a workload (counters are global, so deltas
+/// are only exact in single-threaded harnesses).
+pub mod data_plane {
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static COPIED_BYTES: AtomicU64 = AtomicU64::new(0);
+    static COPIES: AtomicU64 = AtomicU64::new(0);
+    static VIEWED_BYTES: AtomicU64 = AtomicU64::new(0);
+
+    /// Point-in-time view of the process-global data-plane counters.
+    #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+    pub struct DataPlaneStats {
+        /// Activation bytes physically copied since process start.
+        pub copied_bytes: u64,
+        /// Individual copy operations.
+        pub copies: u64,
+        /// Activation bytes shared as zero-copy views instead of copied.
+        pub viewed_bytes: u64,
+    }
+
+    impl DataPlaneStats {
+        /// Counter movement since an earlier snapshot.
+        pub fn since(&self, earlier: &DataPlaneStats) -> DataPlaneStats {
+            DataPlaneStats {
+                copied_bytes: self.copied_bytes - earlier.copied_bytes,
+                copies: self.copies - earlier.copies,
+                viewed_bytes: self.viewed_bytes - earlier.viewed_bytes,
+            }
+        }
+    }
+
+    /// Record one activation memcpy of `bytes`.
+    pub fn count_copy(bytes: u64) {
+        COPIED_BYTES.fetch_add(bytes, Ordering::Relaxed);
+        COPIES.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record `bytes` handed off as a zero-copy view.
+    pub fn count_view(bytes: u64) {
+        VIEWED_BYTES.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn snapshot() -> DataPlaneStats {
+        DataPlaneStats {
+            copied_bytes: COPIED_BYTES.load(Ordering::Relaxed),
+            copies: COPIES.load(Ordering::Relaxed),
+            viewed_bytes: VIEWED_BYTES.load(Ordering::Relaxed),
+        }
+    }
+}
+
 /// Aggregated view over one serving run; feeds the Table I / II harnesses.
 #[derive(Debug, Default, Clone)]
 pub struct RunMetrics {
@@ -537,6 +594,20 @@ mod tests {
         assert_eq!(StageCounter::default().bubble_fraction(), 0.0);
         set.reset();
         assert!(set.snapshot().is_empty());
+    }
+
+    #[test]
+    fn data_plane_counters_accumulate() {
+        // Counters are process-global and shared across parallel tests,
+        // so assert monotonic movement, not absolute values.
+        let before = data_plane::snapshot();
+        data_plane::count_copy(128);
+        data_plane::count_view(256);
+        let after = data_plane::snapshot();
+        let d = after.since(&before);
+        assert!(d.copied_bytes >= 128);
+        assert!(d.copies >= 1);
+        assert!(d.viewed_bytes >= 256);
     }
 
     #[test]

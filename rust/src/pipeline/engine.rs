@@ -323,9 +323,14 @@ impl StageExec for SimStages {
         let nominal = self.nominal_ms;
         let (out, outcome) = self.nodes[stage].execute_costed(move || {
             // Row-wise elementwise transform: bit-identical under any
-            // micro-batch split.
-            let data = input.data.iter().map(|v| v * 1.5 + 0.25).collect();
+            // micro-batch split. Output storage comes from the buffer
+            // pool (producing values is compute, not a data-plane copy);
+            // the consumed input view is recycled.
+            let mut data =
+                crate::util::pool::BufferPool::global().take(input.len());
+            data.extend(input.data().iter().map(|v| v * 1.5 + 0.25));
             let t = Tensor::new(input.shape.clone(), data)?;
+            input.recycle();
             Ok((t, nominal))
         })?;
         Ok((out, outcome.sim_ms))
@@ -333,45 +338,81 @@ impl StageExec for SimStages {
 }
 
 /// Split a `[rows, ...]` tensor into row-contiguous chunks of up to
-/// `chunk_rows` rows (the last chunk may be short).
+/// `chunk_rows` rows (the last chunk may be short). Every chunk is a
+/// zero-copy view sharing the batch's backing buffer — carving
+/// micro-batches out of an admitted batch moves no activation bytes.
 pub fn split_rows(t: &Tensor, chunk_rows: usize) -> Result<Vec<Tensor>> {
     anyhow::ensure!(!t.shape.is_empty(), "cannot split a scalar tensor");
     anyhow::ensure!(chunk_rows > 0, "chunk_rows must be > 0");
     let rows = t.shape[0];
     anyhow::ensure!(rows > 0, "empty batch");
-    let row_len: usize = t.shape.iter().skip(1).product();
-    let mut out = Vec::with_capacity((rows + chunk_rows - 1) / chunk_rows);
+    let mut out = Vec::with_capacity(rows.div_ceil(chunk_rows));
     let mut r = 0;
     while r < rows {
         let take = chunk_rows.min(rows - r);
-        let mut shape = t.shape.clone();
-        shape[0] = take;
-        out.push(Tensor::new(
-            shape,
-            t.data[r * row_len..(r + take) * row_len].to_vec(),
-        )?);
+        out.push(t.view_rows(r..r + take)?);
         r += take;
     }
     Ok(out)
 }
 
 /// Reassemble chunks produced by [`split_rows`] (in order).
+///
+/// Zero-copy fast paths: a single chunk is returned as a shared view,
+/// and chunks that are still *adjacent views of one backing buffer* (a
+/// split that was never scattered) re-merge as a view over their span.
+/// Disjoint buffers — the common case for stage outputs arriving at the
+/// collector — copy once into a pooled buffer (counted), because the
+/// next consumer (an executor upload, a cache insert) needs the rows
+/// contiguous.
 pub fn concat_rows(chunks: &[Tensor]) -> Result<Tensor> {
     anyhow::ensure!(!chunks.is_empty(), "no chunks to concatenate");
     let tail: &[usize] = &chunks[0].shape[1..];
     let mut rows = 0;
-    let mut data = Vec::new();
     for c in chunks {
         anyhow::ensure!(
             !c.shape.is_empty() && &c.shape[1..] == tail,
             "mismatched chunk shapes"
         );
         rows += c.shape[0];
-        data.extend_from_slice(&c.data);
     }
     let mut shape = chunks[0].shape.clone();
     shape[0] = rows;
+    if chunks.len() == 1 {
+        crate::metrics::data_plane::count_view(chunks[0].byte_len());
+        return Ok(chunks[0].clone());
+    }
+    if chunks.windows(2).all(|p| p[0].abuts(&p[1])) {
+        crate::metrics::data_plane::count_view(
+            chunks.iter().map(Tensor::byte_len).sum(),
+        );
+        return Tensor::from_buf(
+            shape,
+            Arc::clone(chunks[0].buf()),
+            chunks[0].offset(),
+        );
+    }
+    let row_len: usize = tail.iter().product();
+    let mut data =
+        crate::util::pool::BufferPool::global().take(rows * row_len);
+    for c in chunks {
+        data.extend_from_slice(c.data());
+    }
+    crate::metrics::data_plane::count_copy((data.len() * 4) as u64);
     Tensor::new(shape, data)
+}
+
+/// [`concat_rows`] over owned chunks: identical result, but chunks that
+/// had to be copied are recycled into the buffer pool afterwards (stage
+/// outputs reassembled at the collector are the pool's main supply).
+fn concat_rows_owned(chunks: Vec<Tensor>) -> Result<Tensor> {
+    let out = concat_rows(&chunks)?;
+    // When the fast path produced a view, the chunks share the output's
+    // buffer and recycle() is a cheap no-op (refcount > 1).
+    for c in chunks {
+        c.recycle();
+    }
+    Ok(out)
 }
 
 // ---------------------------------------------------------------------------
@@ -568,18 +609,21 @@ impl BatchAgg {
 }
 
 /// State shared by drivers, feeder, and collector: the persistent
-/// critical-path clock plus the in-flight batch table.
+/// critical-path clock plus the in-flight batch table. The stage→node
+/// map is an `Arc<[usize]>` shared with the engine handle and every
+/// scheduler-charging call site — one allocation for the engine's
+/// lifetime instead of one `to_vec` per batch.
 struct EngineState {
     cp: CriticalPath,
-    node_ids: Vec<usize>,
+    node_ids: Arc<[usize]>,
     batches: HashMap<u64, BatchAgg>,
 }
 
 impl EngineState {
-    fn new(node_ids: &[usize]) -> EngineState {
+    fn new(node_ids: Arc<[usize]>) -> EngineState {
         EngineState {
-            cp: CriticalPath::new(node_ids),
-            node_ids: node_ids.to_vec(),
+            cp: CriticalPath::new(&node_ids),
+            node_ids,
             batches: HashMap::new(),
         }
     }
@@ -947,20 +991,16 @@ fn fail_members(mut members: Vec<Member>, error: anyhow::Error, context: &str) {
     }
 }
 
-/// Slice a contiguous row range out of a `[rows, ...]` tensor.
+/// Slice a contiguous row range out of a `[rows, ...]` tensor — a
+/// zero-copy view (coalesced members share the transport output's
+/// backing buffer).
 fn slice_rows(t: &Tensor, range: &std::ops::Range<usize>) -> Result<Tensor> {
     anyhow::ensure!(
         !t.shape.is_empty() && range.end <= t.shape[0] && range.start < range.end,
         "member row range {range:?} outside transport output {:?}",
         t.shape
     );
-    let row_len: usize = t.shape.iter().skip(1).product();
-    let mut shape = t.shape.clone();
-    shape[0] = range.end - range.start;
-    Tensor::new(
-        shape,
-        t.data[range.start * row_len..range.end * row_len].to_vec(),
-    )
+    t.view_rows(range.clone())
 }
 
 /// Assemble a completed transport's [`EngineRun`]s from its aggregates
@@ -998,7 +1038,11 @@ fn finalize_batch(agg: BatchAgg) {
                 })
             })
             .collect::<Result<_>>()?;
-        let output = concat_rows(&collected)?;
+        // View concatenation where possible; when the stage outputs live
+        // in disjoint buffers this is the data plane's one genuine
+        // reassembly copy, and the consumed chunk buffers go back to the
+        // pool.
+        let output = concat_rows_owned(collected)?;
         let compute_ms: f64 = counters.iter().map(|c| c.busy_ms).sum();
         let stage_comm_ms: f64 = counters.iter().map(|c| c.comm_ms).sum();
         let timing = PipelineTiming {
@@ -1393,7 +1437,7 @@ pub fn run_streamed<S: StageExec + ?Sized>(
     let node_ids: Vec<usize> = (0..n_stages).map(|k| stages.node_id(k)).collect();
 
     let (reply_tx, reply_rx) = channel::<Result<EngineRun>>();
-    let state = Mutex::new(EngineState::new(&node_ids));
+    let state = Mutex::new(EngineState::new(node_ids.into()));
     lock_state(&state).register(
         0,
         chunks.len(),
@@ -1826,7 +1870,9 @@ fn feeder_loop(
         let chunks = if tensors.len() == 1 {
             Ok(tensors.pop().expect("one tensor"))
         } else {
-            concat_rows(&tensors)
+            // Coalesced members merge into one backing buffer here; the
+            // micro-batch views split off below all share it.
+            concat_rows_owned(tensors)
         }
         .and_then(|merged| {
             // Under coalescing, zero-pad the merged tail up to a whole
@@ -1844,10 +1890,13 @@ fn feeder_loop(
             let merged = if padded == rows {
                 merged
             } else {
-                let row_len: usize = merged.shape.iter().skip(1).product();
+                // Padding needs fresh contiguous storage — a genuine
+                // data-plane copy unless the merged buffer is already
+                // exclusively ours (then `into_vec` just resizes it).
+                let row_len = merged.row_len();
                 let mut shape = merged.shape.clone();
                 shape[0] = padded;
-                let mut data = merged.data;
+                let mut data = merged.into_vec();
                 data.resize(padded * row_len, 0.0);
                 Tensor::new(shape, data)?
             };
@@ -1913,7 +1962,7 @@ pub struct PersistentEngine {
     submit_tx: Option<SyncSender<SubmitMsg>>,
     state: Arc<Mutex<EngineState>>,
     threads: Vec<std::thread::JoinHandle<()>>,
-    node_ids: Vec<usize>,
+    node_ids: Arc<[usize]>,
     depth_stats: Arc<DepthStats>,
     windows: Arc<CreditWindows>,
     coalesce: Arc<CoalesceCounters>,
@@ -1994,9 +2043,10 @@ impl PersistentEngine {
                 );
             }
         }
-        let node_ids: Vec<usize> =
+        let node_ids: Arc<[usize]> =
             (0..n_stages).map(|k| stages.node_id(k)).collect();
-        let state = Arc::new(Mutex::new(EngineState::new(&node_ids)));
+        let state =
+            Arc::new(Mutex::new(EngineState::new(Arc::clone(&node_ids))));
         let cap = cfg.depth_cap();
         let seed_budgets = cfg
             .stage_budgets
@@ -2142,6 +2192,13 @@ impl PersistentEngine {
     /// engine still executes on this engine's stages.
     pub fn node_ids(&self) -> &[usize] {
         &self.node_ids
+    }
+
+    /// Shared handle to the stage→node map: callers that charge the
+    /// scheduler per batch clone the `Arc` instead of copying the ids
+    /// for every submission.
+    pub fn shared_node_ids(&self) -> Arc<[usize]> {
+        Arc::clone(&self.node_ids)
     }
 
     /// The delivery window right now (== the configured depth unless
@@ -2492,7 +2549,7 @@ mod tests {
         }
         fn execute(&self, stage: usize, input: Tensor) -> Result<(Tensor, f64)> {
             anyhow::ensure!(
-                !(stage == 1 && input.data[0] == 999.0),
+                !(stage == 1 && input.data()[0] == 999.0),
                 "sentinel failure"
             );
             Ok((input, 1.0))

@@ -57,6 +57,13 @@ pub fn run(
 
 /// Stack `[1, ...]`-shaped inputs into one `[n, ...]` batch, zero-padding
 /// up to `batch` rows.
+///
+/// Zero-copy fast paths: a lone padding-free input is returned as a
+/// shared view, and inputs that are already *adjacent views of one
+/// backing buffer* (e.g. rows previously split off the same batch, or a
+/// cache-warm replay of a pooled workload) re-assemble as a single view
+/// over their span. Everything else copies once into a pooled buffer
+/// (counted in [`crate::metrics::data_plane`]).
 pub fn stack_batch(inputs: &[&Tensor], batch: usize) -> Result<Tensor> {
     anyhow::ensure!(!inputs.is_empty(), "empty batch");
     anyhow::ensure!(inputs.len() <= batch, "batch overflow");
@@ -66,32 +73,42 @@ pub fn stack_batch(inputs: &[&Tensor], batch: usize) -> Result<Tensor> {
         anyhow::ensure!(t.shape == *per, "mismatched input shapes in batch");
     }
     let row_len: usize = per.iter().skip(1).product();
-    let mut data = Vec::with_capacity(batch * row_len);
-    for t in inputs {
-        data.extend_from_slice(&t.data);
-    }
-    data.resize(batch * row_len, 0.0);
     let mut shape = per.clone();
     shape[0] = batch;
+    if inputs.len() == batch {
+        if batch == 1 {
+            crate::metrics::data_plane::count_view(inputs[0].byte_len());
+            return Ok(inputs[0].clone());
+        }
+        if inputs.windows(2).all(|p| p[0].abuts(p[1])) {
+            crate::metrics::data_plane::count_view(
+                (batch * row_len * 4) as u64,
+            );
+            return Tensor::from_buf(
+                shape,
+                std::sync::Arc::clone(inputs[0].buf()),
+                inputs[0].offset(),
+            );
+        }
+    }
+    let mut data =
+        crate::util::pool::BufferPool::global().take(batch * row_len);
+    for t in inputs {
+        data.extend_from_slice(t.data());
+    }
+    crate::metrics::data_plane::count_copy((data.len() * 4) as u64);
+    data.resize(batch * row_len, 0.0);
     Tensor::new(shape, data)
 }
 
-/// Split a `[batch, ...]` output back into the first `n` per-request rows.
+/// Split a `[batch, ...]` output back into the first `n` per-request
+/// rows. Each row is a zero-copy view sharing the batch's backing
+/// buffer (the buffer stays alive as long as any row does).
 pub fn split_batch(output: &Tensor, n: usize) -> Result<Vec<Tensor>> {
     anyhow::ensure!(!output.shape.is_empty(), "scalar output");
     let batch = output.shape[0];
     anyhow::ensure!(n <= batch, "asked for more rows than batch");
-    let row_len: usize = output.shape.iter().skip(1).product();
-    let mut shape = output.shape.clone();
-    shape[0] = 1;
-    (0..n)
-        .map(|i| {
-            Tensor::new(
-                shape.clone(),
-                output.data[i * row_len..(i + 1) * row_len].to_vec(),
-            )
-        })
-        .collect()
+    (0..n).map(|i| output.view_rows(i..i + 1)).collect()
 }
 
 #[cfg(test)]
@@ -104,7 +121,10 @@ mod tests {
         let b = Tensor::new(vec![1, 2], vec![3.0, 4.0]).unwrap();
         let batch = stack_batch(&[&a, &b], 4).unwrap();
         assert_eq!(batch.shape, vec![4, 2]);
-        assert_eq!(batch.data, vec![1.0, 2.0, 3.0, 4.0, 0.0, 0.0, 0.0, 0.0]);
+        assert_eq!(
+            batch.data(),
+            &[1.0, 2.0, 3.0, 4.0, 0.0, 0.0, 0.0, 0.0][..]
+        );
         let rows = split_batch(&batch, 2).unwrap();
         assert_eq!(rows[0], a);
         assert_eq!(rows[1], b);

@@ -133,11 +133,16 @@ impl Executor {
                                         format!("block handle {b} not loaded")
                                     })?;
                                     let act = rt.upload(&cur)?;
-                                    cur = l.exe.run_with_weights(
+                                    let out = l.exe.run_with_weights(
                                         &l.weights,
                                         &act,
                                         &l.out_shape,
                                     )?;
+                                    // The consumed activation's buffer
+                                    // feeds the pool once it is device
+                                    // resident (no-op for shared views).
+                                    std::mem::replace(&mut cur, out)
+                                        .recycle();
                                 }
                                 Ok::<_, anyhow::Error>(cur)
                             })();

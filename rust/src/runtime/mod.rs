@@ -22,14 +22,39 @@ use anyhow::{Context, Result};
 
 pub use executor::{BlockHandle, Executor, PendingRun};
 
-/// A host-side f32 tensor (row-major).
-#[derive(Debug, Clone, PartialEq)]
+/// Shared activation storage: one refcounted buffer backing any number
+/// of [`Tensor`] views. `Arc<Vec<f32>>` rather than `Arc<[f32]>` so a
+/// `Vec` wraps with **zero copy** and a sole-owner buffer can be
+/// reclaimed into the [`crate::util::pool::BufferPool`]
+/// (`Arc::try_unwrap`) when its last view drops.
+pub type TensorBuf = Arc<Vec<f32>>;
+
+/// A host-side f32 tensor (row-major): a shape plus a *view* into a
+/// shared backing buffer (`offset..offset + len` elements of `buf`).
+///
+/// Cloning a tensor, slicing rows out of it ([`Tensor::view_rows`]),
+/// and splitting a batch into micro-batches are all refcount-and-slice
+/// operations — no activation bytes move. The data plane copies only
+/// when fresh contiguous storage is genuinely required (zero-padding,
+/// stacking disjoint buffers, executor output collection); every such
+/// copy is counted in [`crate::metrics::data_plane`] so the zero-copy
+/// win stays measurable.
+#[derive(Debug, Clone)]
 pub struct Tensor {
     pub shape: Vec<usize>,
-    pub data: Vec<f32>,
+    buf: TensorBuf,
+    offset: usize,
+    len: usize,
+}
+
+impl PartialEq for Tensor {
+    fn eq(&self, other: &Tensor) -> bool {
+        self.shape == other.shape && self.data() == other.data()
+    }
 }
 
 impl Tensor {
+    /// Wrap an owned buffer — zero copy.
     pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
         let expect: usize = shape.iter().product();
         anyhow::ensure!(
@@ -38,24 +63,158 @@ impl Tensor {
             shape,
             data.len()
         );
-        Ok(Tensor { shape, data })
+        let len = data.len();
+        Ok(Tensor { shape, buf: Arc::new(data), offset: 0, len })
+    }
+
+    /// View into an already-shared buffer — zero copy. The view covers
+    /// `offset..offset + shape.product()` elements of `buf`.
+    pub fn from_buf(
+        shape: Vec<usize>,
+        buf: TensorBuf,
+        offset: usize,
+    ) -> Result<Tensor> {
+        let len: usize = shape.iter().product();
+        anyhow::ensure!(
+            offset.checked_add(len).is_some_and(|end| end <= buf.len()),
+            "view of {len} elements at offset {offset} outside buffer of \
+             {} elements",
+            buf.len()
+        );
+        Ok(Tensor { shape, buf, offset, len })
     }
 
     pub fn zeros(shape: Vec<usize>) -> Tensor {
         let n = shape.iter().product();
-        Tensor { shape, data: vec![0.0; n] }
+        Tensor { shape, buf: Arc::new(vec![0.0; n]), offset: 0, len: n }
+    }
+
+    /// The view's elements.
+    pub fn data(&self) -> &[f32] {
+        &self.buf[self.offset..self.offset + self.len]
+    }
+
+    /// Mutable access, copy-on-write: a sole-owner full-buffer tensor
+    /// mutates in place; a shared or partial view first materializes its
+    /// own buffer (a counted copy). Mutating through here can therefore
+    /// never alter another view or a cached row.
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        let exclusive = self.offset == 0
+            && self.len == self.buf.len()
+            && Arc::get_mut(&mut self.buf).is_some();
+        if !exclusive {
+            crate::metrics::data_plane::count_copy(self.byte_len());
+            let mut owned =
+                crate::util::pool::BufferPool::global().take(self.len);
+            owned.extend_from_slice(self.data());
+            self.buf = Arc::new(owned);
+            self.offset = 0;
+        }
+        let len = self.len;
+        &mut Arc::get_mut(&mut self.buf).expect("exclusive buffer")[..len]
+    }
+
+    /// The shared backing buffer (for contiguity checks — two views are
+    /// adjacent when they share a buffer and their ranges abut).
+    pub fn buf(&self) -> &TensorBuf {
+        &self.buf
+    }
+
+    /// Element offset of this view inside [`Tensor::buf`].
+    pub fn offset(&self) -> usize {
+        self.offset
+    }
+
+    /// Elements per row (`shape[1..]` product).
+    pub fn row_len(&self) -> usize {
+        self.shape.iter().skip(1).product()
+    }
+
+    /// Zero-copy view of a contiguous row range of a `[rows, ...]`
+    /// tensor: shares the backing buffer, adjusts offset and shape.
+    pub fn view_rows(&self, range: std::ops::Range<usize>) -> Result<Tensor> {
+        anyhow::ensure!(
+            !self.shape.is_empty()
+                && range.start < range.end
+                && range.end <= self.shape[0],
+            "row range {range:?} outside tensor {:?}",
+            self.shape
+        );
+        let row_len = self.row_len();
+        let mut shape = self.shape.clone();
+        shape[0] = range.end - range.start;
+        crate::metrics::data_plane::count_view(
+            ((range.end - range.start) * row_len * 4) as u64,
+        );
+        Ok(Tensor {
+            shape,
+            buf: Arc::clone(&self.buf),
+            offset: self.offset + range.start * row_len,
+            len: (range.end - range.start) * row_len,
+        })
+    }
+
+    /// Whether `next` is the view immediately following this one in the
+    /// same backing buffer (so the pair concatenates without a copy).
+    pub fn abuts(&self, next: &Tensor) -> bool {
+        Arc::ptr_eq(&self.buf, &next.buf)
+            && self.offset + self.len == next.offset
+    }
+
+    /// Copy the view out into an owned `Vec` (counted, pooled storage).
+    pub fn to_vec(&self) -> Vec<f32> {
+        crate::metrics::data_plane::count_copy(self.byte_len());
+        let mut out = crate::util::pool::BufferPool::global().take(self.len);
+        out.extend_from_slice(self.data());
+        out
+    }
+
+    /// Consume the tensor into an owned `Vec`: zero-copy when this view
+    /// is the buffer's sole owner and covers it fully, a counted copy
+    /// (from pooled storage) otherwise.
+    pub fn into_vec(self) -> Vec<f32> {
+        if self.offset == 0 && self.len == self.buf.len() {
+            match Arc::try_unwrap(self.buf) {
+                Ok(v) => return v,
+                Err(buf) => {
+                    crate::metrics::data_plane::count_copy(
+                        (self.len * 4) as u64,
+                    );
+                    let mut out = crate::util::pool::BufferPool::global()
+                        .take(self.len);
+                    out.extend_from_slice(&buf[..self.len]);
+                    return out;
+                }
+            }
+        }
+        crate::metrics::data_plane::count_copy((self.len * 4) as u64);
+        let mut out = crate::util::pool::BufferPool::global().take(self.len);
+        out.extend_from_slice(self.data());
+        out
+    }
+
+    /// Drop the tensor, returning its backing storage to the global
+    /// [`crate::util::pool::BufferPool`] when this view was the sole
+    /// owner (no-op otherwise). Hot loops that churn activations call
+    /// this so fresh-allocation sites can reuse the storage.
+    pub fn recycle(self) {
+        if self.offset == 0 && self.len == self.buf.len() {
+            if let Ok(v) = Arc::try_unwrap(self.buf) {
+                crate::util::pool::BufferPool::global().give(v);
+            }
+        }
     }
 
     pub fn len(&self) -> usize {
-        self.data.len()
+        self.len
     }
 
     pub fn is_empty(&self) -> bool {
-        self.data.is_empty()
+        self.len == 0
     }
 
     pub fn byte_len(&self) -> u64 {
-        (self.data.len() * 4) as u64
+        (self.len * 4) as u64
     }
 
     /// Read a little-endian f32 binary sidecar (weights / goldens).
@@ -76,9 +235,9 @@ impl Tensor {
 
     /// Max |a-b| against another tensor (golden comparisons).
     pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
-        self.data
+        self.data()
             .iter()
-            .zip(other.data.iter())
+            .zip(other.data().iter())
             .map(|(a, b)| (a - b).abs())
             .fold(0.0, f32::max)
     }
@@ -123,7 +282,7 @@ impl XlaRuntime {
     pub fn upload(&self, t: &Tensor) -> Result<DeviceBuffer> {
         let buf = self
             .client
-            .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)
+            .buffer_from_host_buffer::<f32>(t.data(), &t.shape, None)
             .map_err(|e| anyhow::anyhow!("uploading buffer: {e:?}"))?;
         Ok(DeviceBuffer { buf, shape: t.shape.clone() })
     }
@@ -149,7 +308,7 @@ impl Executable {
             .iter()
             .map(|t| {
                 let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
-                xla::Literal::vec1(&t.data)
+                xla::Literal::vec1(t.data())
                     .reshape(&dims)
                     .map_err(|e| anyhow::anyhow!("reshape literal: {e:?}"))
             })
@@ -222,7 +381,7 @@ mod tests {
             vals.iter().flat_map(|v| v.to_le_bytes()).collect();
         std::fs::write(&path, bytes).unwrap();
         let t = Tensor::from_f32_file(&path, vec![3]).unwrap();
-        assert_eq!(t.data, vals);
+        assert_eq!(t.data(), &vals[..]);
         assert!(Tensor::from_f32_file(&path, vec![4]).is_err());
     }
 
@@ -231,6 +390,71 @@ mod tests {
         let a = Tensor::new(vec![3], vec![1.0, 2.0, 3.0]).unwrap();
         let b = Tensor::new(vec![3], vec![1.0, 2.5, 2.0]).unwrap();
         assert_eq!(a.max_abs_diff(&b), 1.0);
+    }
+
+    #[test]
+    fn view_rows_shares_the_backing_buffer() {
+        let t = Tensor::new(vec![4, 2], (0..8).map(|i| i as f32).collect())
+            .unwrap();
+        let mid = t.view_rows(1..3).unwrap();
+        assert_eq!(mid.shape, vec![2, 2]);
+        assert_eq!(mid.data(), &[2.0, 3.0, 4.0, 5.0]);
+        assert!(Arc::ptr_eq(t.buf(), mid.buf()), "view must not copy");
+        assert_eq!(mid.offset(), 2);
+        assert_eq!(mid.byte_len(), 16);
+        assert!(t.view_rows(3..5).is_err());
+        assert!(t.view_rows(2..2).is_err());
+        // Adjacent views abut; overlapping/gapped ones do not.
+        let head = t.view_rows(0..1).unwrap();
+        assert!(head.abuts(&mid));
+        assert!(!mid.abuts(&head));
+        // A view of a view composes offsets.
+        let sub = mid.view_rows(1..2).unwrap();
+        assert_eq!(sub.data(), &[4.0, 5.0]);
+        assert_eq!(sub.offset(), 3 * 2);
+    }
+
+    #[test]
+    fn from_buf_wraps_shared_storage_without_copy() {
+        let buf: TensorBuf = Arc::new(vec![1.0, 2.0, 3.0, 4.0]);
+        let t = Tensor::from_buf(vec![1, 2], Arc::clone(&buf), 2).unwrap();
+        assert_eq!(t.data(), &[3.0, 4.0]);
+        assert!(Arc::ptr_eq(&buf, t.buf()));
+        assert!(Tensor::from_buf(vec![1, 3], Arc::clone(&buf), 2).is_err());
+    }
+
+    #[test]
+    fn clone_is_refcount_not_copy() {
+        let t = Tensor::zeros(vec![2, 2]);
+        let c = t.clone();
+        assert!(Arc::ptr_eq(t.buf(), c.buf()));
+        assert_eq!(t, c);
+    }
+
+    #[test]
+    fn data_mut_is_copy_on_write() {
+        // Sole owner: in-place, same buffer.
+        let mut t = Tensor::zeros(vec![2, 2]);
+        let before = Arc::as_ptr(t.buf());
+        t.data_mut()[0] = 5.0;
+        assert_eq!(Arc::as_ptr(t.buf()), before);
+        // Shared: the mutating side re-buffers, the other view is
+        // untouched (the aliasing guarantee).
+        let view = t.view_rows(0..1).unwrap();
+        t.data_mut()[0] = 9.0;
+        assert_eq!(view.data()[0], 5.0);
+        assert_eq!(t.data()[0], 9.0);
+        assert!(!Arc::ptr_eq(t.buf(), view.buf()));
+    }
+
+    #[test]
+    fn into_vec_zero_copy_when_exclusive() {
+        let t = Tensor::new(vec![3], vec![7.0, 8.0, 9.0]).unwrap();
+        assert_eq!(t.into_vec(), vec![7.0, 8.0, 9.0]);
+        // Partial view copies just its window.
+        let t = Tensor::new(vec![2, 2], vec![0.0, 1.0, 2.0, 3.0]).unwrap();
+        let tail = t.view_rows(1..2).unwrap();
+        assert_eq!(tail.into_vec(), vec![2.0, 3.0]);
     }
 
     // PJRT-backed tests live in rust/tests/ since they need artifacts.

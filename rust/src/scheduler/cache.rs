@@ -5,10 +5,19 @@
 //! activation transfers — which is how the paper's cached configuration
 //! drives both the 2.6x latency cut over plain AMP4EC and the
 //! bandwidth-to-zero effect on repeated inputs.
+//!
+//! Rows are stored as [`TensorBuf`]s (`Arc<Vec<f32>>`): a hit hands the
+//! serving path a refcounted buffer it wraps into a zero-copy
+//! [`crate::runtime::Tensor`] view, and inserts copy the row *once* out
+//! of the batched output so a cached row can never alias a live
+//! activation buffer (mutating an executor output must never change a
+//! cached answer — pinned by the data-plane aliasing test).
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+
+use crate::runtime::TensorBuf;
 
 /// FNV-1a over arbitrary bytes; deterministic across runs and platforms.
 pub fn fnv1a(bytes: &[u8]) -> u64 {
@@ -33,10 +42,9 @@ pub fn input_key(model_id: u64, input: &[f32]) -> u64 {
 }
 
 struct Entry {
-    /// Shared with the router's response path: hits hand back a cheap
-    /// `Arc` clone instead of copying the activation row, and inserts
-    /// share the row the response path already built.
-    value: Arc<[f32]>,
+    /// Shared with the serving response path: hits hand back a cheap
+    /// `Arc` clone the caller wraps into a zero-copy tensor view.
+    value: TensorBuf,
     /// LRU tick at last touch.
     last_used: u64,
 }
@@ -80,7 +88,7 @@ impl ResultCache {
         }
     }
 
-    pub fn get(&self, key: u64) -> Option<Arc<[f32]>> {
+    pub fn get(&self, key: u64) -> Option<TensorBuf> {
         let tick = self.tick.fetch_add(1, Ordering::SeqCst);
         let mut map = self.map.lock().unwrap();
         match map.get_mut(&key) {
@@ -106,7 +114,7 @@ impl ResultCache {
         self.map.lock().unwrap().contains_key(&key)
     }
 
-    pub fn put(&self, key: u64, value: Arc<[f32]>) {
+    pub fn put(&self, key: u64, value: TensorBuf) {
         let tick = self.tick.fetch_add(1, Ordering::SeqCst);
         let mut map = self.map.lock().unwrap();
         if map.len() >= self.max_entries && !map.contains_key(&key) {
@@ -155,8 +163,8 @@ mod tests {
         assert_eq!(a, input_key(1, &[1.0, 2.0]));
     }
 
-    fn row(vals: &[f32]) -> Arc<[f32]> {
-        vals.into()
+    fn row(vals: &[f32]) -> TensorBuf {
+        Arc::new(vals.to_vec())
     }
 
     #[test]

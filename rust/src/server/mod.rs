@@ -267,7 +267,8 @@ impl DistributedService {
             Some(e) => e,
             None => return Err(batch),
         };
-        let node_ids = engine.node_ids().to_vec();
+        // Shared Arc<[usize]> — no per-batch copy of the stage→node map.
+        let node_ids = engine.shared_node_ids();
         self.scheduler.tasks_started(&node_ids);
         let scheduler = Arc::clone(&self.scheduler);
         let stage_counters = Arc::clone(&self.stage_counters);

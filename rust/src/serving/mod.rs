@@ -235,6 +235,16 @@ impl RequestBuilder<'_> {
 
     /// Enqueue the request (blocking while the bounded ingress queue is
     /// full — backpressure). Errors only if the ingress is shut down.
+    ///
+    /// Queue-depth-aware predictive shedding happens *here*, before the
+    /// request ever occupies a queue slot: the EWMA service-time
+    /// estimate is scaled by the batch waves of same-or-higher-class
+    /// traffic already queued ahead, so a deadline that is already
+    /// doomed behind a deep backlog resolves as
+    /// [`ShedReason::PredictedMiss`] immediately instead of at dispatch.
+    /// A cold estimate never sheds, and neither does a request whose
+    /// answer is already cached (it costs ~0 ms regardless of the
+    /// queue).
     pub fn submit(self) -> Result<ResponseHandle> {
         let cfg = &self.handle.cfg;
         let class = (self.priority.class()).min(cfg.classes.max(1) - 1);
@@ -243,6 +253,12 @@ impl RequestBuilder<'_> {
             .or(cfg.default_deadline)
             .map(|d| Instant::now() + d);
         let (reply, rx) = channel();
+        if let Some(d) = deadline {
+            if self.handle.shed_doomed(&self.input, class, d) {
+                let _ = reply.send(Outcome::Shed(ShedReason::PredictedMiss));
+                return Ok(ResponseHandle { rx });
+            }
+        }
         let req = QueuedRequest {
             input: self.input,
             class,
@@ -457,6 +473,21 @@ impl IngressQueue {
             self.shed_predicted.load(Ordering::Relaxed),
         )
     }
+
+    /// Requests queued in this class's lane and every more-urgent lane —
+    /// the traffic that will be dispatched before a new arrival of
+    /// `class`. The queue-depth-aware shedder scales the service-time
+    /// estimate by the batch *waves* this backlog represents, so a
+    /// doomed deadline is shed at submission instead of after it has
+    /// waited through the whole queue.
+    pub fn queued_ahead(&self, class: usize) -> usize {
+        let st = self.state.lock().unwrap();
+        st.lanes
+            .iter()
+            .take(class.min(st.lanes.len().saturating_sub(1)) + 1)
+            .map(|l| l.len())
+            .sum()
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -504,6 +535,12 @@ pub struct ServiceHandle {
     metrics: Arc<MetricsCollector>,
     cfg: IngressConfig,
     dispatcher: Option<std::thread::JoinHandle<()>>,
+    /// Admission-batch size and cache probe context for the
+    /// submission-time queue-depth-aware shedder (mirrors what the
+    /// dispatcher sees, without reaching through the service Arc).
+    batch_size: usize,
+    model_id: u64,
+    cache: Option<Arc<ResultCache>>,
 }
 
 impl ServiceHandle {
@@ -521,10 +558,13 @@ impl ServiceHandle {
         ));
         let metrics = Arc::new(MetricsCollector::new());
         metrics.start_run();
+        let batch_size = service.batch_size().max(1);
+        let model_id = service.model_id();
         let dispatcher = {
             let queue = Arc::clone(&queue);
             let metrics = Arc::clone(&metrics);
             let cfg = cfg.clone();
+            let cache = cache.clone();
             std::thread::Builder::new()
                 .name("amp4ec-ingress".into())
                 .spawn(move || {
@@ -532,7 +572,47 @@ impl ServiceHandle {
                 })
                 .expect("spawn ingress dispatcher")
         };
-        ServiceHandle { queue, metrics, cfg, dispatcher: Some(dispatcher) }
+        ServiceHandle {
+            queue,
+            metrics,
+            cfg,
+            dispatcher: Some(dispatcher),
+            batch_size,
+            model_id,
+            cache,
+        }
+    }
+
+    /// Submission-time predictive shed decision (see
+    /// [`RequestBuilder::submit`]): true when the deadline `d` cannot be
+    /// met given the warm service-time estimate scaled by the batch
+    /// waves of same-or-higher-class traffic already queued, and the
+    /// answer is not already cached. Records the shed when it fires.
+    fn shed_doomed(&self, input: &Tensor, class: usize, d: Instant) -> bool {
+        let Some(est) = self.queue.estimate_ms() else {
+            return false; // cold estimate never sheds
+        };
+        let now = Instant::now();
+        if now >= d {
+            return false; // already expired: dispatch-time shed accounts it
+        }
+        // Requests ahead dispatch in batches of `batch_size`; this
+        // request rides the wave after them.
+        let ahead = self.queue.queued_ahead(class);
+        let waves = 1.0 + (ahead / self.batch_size) as f64;
+        let slack_ms = (d - now).as_secs_f64() * 1e3;
+        if slack_ms >= est * waves {
+            return false;
+        }
+        let cached = self.cache.as_ref().is_some_and(|c| {
+            c.contains(input_key(self.model_id, input.data()))
+        });
+        if cached {
+            return false;
+        }
+        self.queue.shed_predicted.fetch_add(1, Ordering::Relaxed);
+        self.metrics.record_shed(class, false);
+        true
     }
 
     /// Start building one request.
@@ -774,7 +854,7 @@ fn admit_or_shed(
             let slack_ms = (d - now).as_secs_f64() * 1e3;
             let cached = || {
                 cache.is_some_and(|c| {
-                    c.contains(input_key(model_id, &req.input.data))
+                    c.contains(input_key(model_id, req.input.data()))
                 })
             };
             if slack_ms < est && !cached() {
@@ -812,7 +892,7 @@ fn process_batch(
         Some(c) => {
             keys.reserve(batch.len());
             for (i, r) in batch.iter().enumerate() {
-                let key = input_key(service.model_id(), &r.input.data);
+                let key = input_key(service.model_id(), r.input.data());
                 keys.push(key);
                 match c.get(key) {
                     Some(row) => {
@@ -825,11 +905,14 @@ fn process_batch(
                         metrics.record_request_class(
                             r.class, latency, 0.0, 0.0, sched, true, met,
                         );
-                        let output = Tensor::new(
-                            vec![1, row.len()],
-                            row.to_vec(),
-                        )
-                        .expect("cached row tensor");
+                        // Zero-copy: the response wraps the cached row's
+                        // shared buffer directly.
+                        crate::metrics::data_plane::count_view(
+                            (row.len() * 4) as u64,
+                        );
+                        let shape = vec![1, row.len()];
+                        let output = Tensor::from_buf(shape, row, 0)
+                            .expect("cached row tensor");
                         let _ = r.reply.send(Outcome::Done(Response {
                             output,
                             latency_ms: latency,
@@ -905,8 +988,6 @@ fn process_batch(
             queue.observe_service_ms(
                 dispatched.elapsed().as_secs_f64() * 1e3,
             );
-            let mut row_shape = output.shape.clone();
-            row_shape[0] = 1;
             for (slot, &idx) in misses.iter().enumerate() {
                 let r = &batch[idx];
                 let latency = r.enqueued.elapsed().as_secs_f64() * 1e3;
@@ -915,14 +996,21 @@ fn process_batch(
                 metrics.record_request_class(
                     r.class, latency, compute_ms, comm_ms, sched, false, met,
                 );
-                let row_data = &output.data[slot * row_len..(slot + 1) * row_len];
                 if let Some(c) = cache {
-                    // One extra copy out of the batched output into a
-                    // shared row for the cache; without a cache the
-                    // response slices straight from the batch.
-                    c.put(keys[idx], row_data.into());
+                    // The cache's one deliberate copy: a cached row owns
+                    // its storage outright so it can never alias (and be
+                    // corrupted through) a live activation buffer.
+                    let row_data =
+                        &output.data()[slot * row_len..(slot + 1) * row_len];
+                    crate::metrics::data_plane::count_copy(
+                        (row_data.len() * 4) as u64,
+                    );
+                    c.put(keys[idx], std::sync::Arc::new(row_data.to_vec()));
                 }
-                let out = Tensor::new(row_shape.clone(), row_data.to_vec());
+                // The response row is a zero-copy view into the batch
+                // output (the batch buffer lives as long as any of its
+                // row views).
+                let out = output.view_rows(slot..slot + 1);
                 let outcome = match out {
                     Ok(output) => Outcome::Done(Response {
                         output,
@@ -991,7 +1079,7 @@ mod tests {
     impl InferenceService for Doubler {
         fn infer_batch(&self, batch: &Tensor) -> Result<(Tensor, f64, f64)> {
             std::thread::sleep(Duration::from_millis(2));
-            let data = batch.data.iter().map(|v| v * 2.0).collect();
+            let data = batch.data().iter().map(|v| v * 2.0).collect();
             Ok((Tensor::new(batch.shape.clone(), data)?, 2.0, 0.1))
         }
         fn batch_size(&self) -> usize {
@@ -1023,7 +1111,7 @@ mod tests {
         for (i, r) in responses.into_iter().enumerate() {
             let out = r.wait_output().unwrap();
             assert_eq!(out.shape, vec![1, 4]);
-            assert_eq!(out.data, vec![i as f32 * 2.0; 4]);
+            assert_eq!(out.data(), &vec![i as f32 * 2.0; 4][..]);
         }
         let m = h.finish();
         assert_eq!(m.completed, 20);
@@ -1207,6 +1295,52 @@ mod tests {
     }
 
     #[test]
+    fn deep_queue_sheds_doomed_deadline_at_submission() {
+        // Queue-depth-aware predictive shedding: a deadline that one
+        // batch wave could meet (slack > EWMA estimate) is still doomed
+        // behind a deep same-class backlog — it must resolve as
+        // PredictedMiss *at submission*, before waiting in the queue.
+        let h = ServiceHandle::new(
+            Arc::new(Doubler { batch: 1 }),
+            IngressConfig {
+                workers: 1,
+                capacity: 256,
+                max_wait: Duration::from_millis(1),
+                ..IngressConfig::default()
+            },
+            None,
+        );
+        // Warm the estimate (~2 ms per batch).
+        h.submit(req(0.0)).unwrap().wait_output().unwrap();
+        let est = h.queue().estimate_ms().expect("warm estimate");
+        // Same-class backlog: tens of batch waves ahead.
+        let backlog: Vec<_> =
+            (0..40).map(|i| h.submit(req(i as f32)).unwrap()).collect();
+        assert!(h.queue().queued_ahead(Priority::NORMAL.class()) > 5);
+        // Slack comfortably above one wave's estimate, far below the
+        // backlog's: the single-wave dispatch check would admit it, the
+        // depth-aware one sheds it immediately.
+        let doomed = h
+            .request(req(99.0))
+            .deadline(Duration::from_secs_f64(est * 3.0 / 1e3))
+            .submit()
+            .unwrap();
+        match doomed.try_wait() {
+            Some(Outcome::Shed(ShedReason::PredictedMiss)) => {}
+            other => panic!(
+                "expected an immediate predicted-miss shed, got {other:?}"
+            ),
+        }
+        for r in backlog {
+            r.wait_output().unwrap();
+        }
+        let m = h.finish();
+        assert_eq!(m.completed, 41);
+        let c = m.class(Priority::NORMAL.class()).unwrap();
+        assert_eq!(c.shed_predicted, 1);
+    }
+
+    #[test]
     fn priority_lanes_dequeue_high_first() {
         // Single worker + a service gated on a channel: the first batch
         // blocks the worker, everything else queues; when released, the
@@ -1385,7 +1519,7 @@ mod tests {
         struct Landmine;
         impl InferenceService for Landmine {
             fn infer_batch(&self, batch: &Tensor) -> Result<(Tensor, f64, f64)> {
-                if batch.data.first() == Some(&13.0) {
+                if batch.data().first() == Some(&13.0) {
                     panic!("injected service panic");
                 }
                 Ok((batch.clone(), 0.0, 0.0))
@@ -1409,7 +1543,7 @@ mod tests {
         }
         // The single worker survived the panic and keeps serving.
         let ok = h.submit(req(2.0)).unwrap();
-        assert_eq!(ok.wait_output().unwrap().data, vec![2.0; 4]);
+        assert_eq!(ok.wait_output().unwrap().data(), &[2.0; 4][..]);
         let m = h.finish();
         assert_eq!(m.completed, 1);
     }

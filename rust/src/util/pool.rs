@@ -116,6 +116,124 @@ impl WaitGroup {
     }
 }
 
+/// Reusable f32 buffer pool backing the activation data plane's
+/// *genuine* copies (micro-batch padding, stacking disjoint request
+/// rows, collector reassembly). The zero-copy tensor refactor turned
+/// every split/slice into an `Arc` view; what remains is a small number
+/// of fresh-contiguous-storage sites, and this pool lets them reuse
+/// buffers reclaimed by [`crate::runtime::Tensor::recycle`] instead of
+/// hitting the allocator per batch.
+///
+/// Buffers are stored cleared (`len == 0`, capacity intact);
+/// [`BufferPool::take`] returns the pooled buffer with the largest
+/// capacity (best fit for wide activations) or a fresh one. The pool is
+/// bounded: beyond `MAX_POOLED` buffers or `MAX_POOLED_ELEMS` capacity a
+/// returned buffer is simply dropped.
+pub struct BufferPool {
+    buffers: Mutex<Vec<Vec<f32>>>,
+    hits: std::sync::atomic::AtomicU64,
+    misses: std::sync::atomic::AtomicU64,
+    returns: std::sync::atomic::AtomicU64,
+}
+
+/// Pooled-buffer counters (diagnostics + the dataplane bench).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// `take` calls served by a pooled buffer.
+    pub hits: u64,
+    /// `take` calls that had to allocate.
+    pub misses: u64,
+    /// Buffers accepted back by `give`.
+    pub returns: u64,
+}
+
+const MAX_POOLED: usize = 32;
+const MAX_POOLED_ELEMS: usize = 1 << 22; // 16 MiB of f32 per buffer
+
+impl BufferPool {
+    fn new() -> BufferPool {
+        BufferPool {
+            buffers: Mutex::new(Vec::new()),
+            hits: std::sync::atomic::AtomicU64::new(0),
+            misses: std::sync::atomic::AtomicU64::new(0),
+            returns: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    /// The process-global pool the tensor data plane recycles through.
+    pub fn global() -> &'static BufferPool {
+        static POOL: std::sync::OnceLock<BufferPool> = std::sync::OnceLock::new();
+        POOL.get_or_init(BufferPool::new)
+    }
+
+    /// An empty buffer with capacity for at least `min_capacity`
+    /// elements: best-fit from the pool (smallest buffer that already
+    /// fits, so a tiny tensor never pins a wide batch's storage through
+    /// its `Arc` views), falling back to the largest pooled buffer
+    /// (grown via `reserve`), else a fresh allocation.
+    pub fn take(&self, min_capacity: usize) -> Vec<f32> {
+        use std::sync::atomic::Ordering;
+        let pooled = {
+            let mut buffers = self.buffers.lock().unwrap();
+            let idx = buffers
+                .iter()
+                .enumerate()
+                .filter(|(_, b)| b.capacity() >= min_capacity)
+                .min_by_key(|(_, b)| b.capacity())
+                .map(|(i, _)| i)
+                .or_else(|| {
+                    buffers
+                        .iter()
+                        .enumerate()
+                        .max_by_key(|(_, b)| b.capacity())
+                        .map(|(i, _)| i)
+                });
+            idx.map(|i| buffers.swap_remove(i))
+        };
+        match pooled {
+            Some(mut b) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                b.clear();
+                b.reserve(min_capacity);
+                b
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                Vec::with_capacity(min_capacity)
+            }
+        }
+    }
+
+    /// Return a buffer for reuse (dropped when the pool is full or the
+    /// buffer is outsized).
+    pub fn give(&self, mut buf: Vec<f32>) {
+        if buf.capacity() == 0 || buf.capacity() > MAX_POOLED_ELEMS {
+            return;
+        }
+        buf.clear();
+        let mut buffers = self.buffers.lock().unwrap();
+        if buffers.len() < MAX_POOLED {
+            self.returns
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            buffers.push(buf);
+        }
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        use std::sync::atomic::Ordering;
+        PoolStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            returns: self.returns.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Buffers currently pooled.
+    pub fn pooled(&self) -> usize {
+        self.buffers.lock().unwrap().len()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -174,6 +292,50 @@ mod tests {
     #[test]
     fn waitgroup_zero_is_immediate() {
         WaitGroup::new(0).wait();
+    }
+
+    #[test]
+    fn buffer_pool_reuses_returned_storage() {
+        // A private pool (not the global one) so the assertions are
+        // exact under parallel tests.
+        let pool = BufferPool::new();
+        let first = pool.take(128);
+        assert!(first.capacity() >= 128);
+        assert_eq!(pool.stats().misses, 1);
+        pool.give(first);
+        assert_eq!(pool.pooled(), 1);
+        let again = pool.take(16);
+        assert!(again.is_empty());
+        assert!(again.capacity() >= 128, "pooled capacity lost");
+        let s = pool.stats();
+        assert_eq!((s.hits, s.misses, s.returns), (1, 1, 1));
+        // Zero-capacity buffers are not worth pooling.
+        pool.give(Vec::new());
+        assert_eq!(pool.pooled(), 0);
+    }
+
+    #[test]
+    fn buffer_pool_is_best_fit() {
+        let pool = BufferPool::new();
+        pool.give(Vec::with_capacity(8));
+        pool.give(Vec::with_capacity(64));
+        // A small request takes the smallest buffer that fits — the
+        // wide one stays pooled for the next wide activation instead of
+        // being pinned under a tiny tensor's views.
+        let small = pool.take(4);
+        let wide = pool.take(4);
+        assert!(small.capacity() >= 4);
+        assert!(
+            small.capacity() < wide.capacity(),
+            "best-fit must not hand out the widest buffer first ({} vs {})",
+            small.capacity(),
+            wide.capacity()
+        );
+        assert!(wide.capacity() >= 64);
+        // A request nothing fits falls back to the largest (grown).
+        pool.give(Vec::with_capacity(8));
+        assert!(pool.take(32).capacity() >= 32);
+        assert_eq!(pool.pooled(), 0);
     }
 
     #[test]

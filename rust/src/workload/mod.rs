@@ -25,11 +25,12 @@ impl InputPool {
     pub fn new(shape: &[usize], distinct: usize, seed: u64) -> InputPool {
         assert!(distinct > 0);
         let mut rng = Rng::new(seed);
+        let n: usize = shape.iter().product();
         let inputs = (0..distinct)
             .map(|_| {
-                let mut t = Tensor::zeros(shape.to_vec());
-                rng.fill_normal_f32(&mut t.data);
-                t
+                let mut data = vec![0.0f32; n];
+                rng.fill_normal_f32(&mut data);
+                Tensor::new(shape.to_vec(), data).expect("pool tensor")
             })
             .collect();
         InputPool { inputs }
@@ -137,11 +138,11 @@ mod tests {
         let a = InputPool::new(&[1, 4], 3, 9);
         let b = InputPool::new(&[1, 4], 3, 9);
         for i in 0..3 {
-            assert_eq!(a.get(i).data, b.get(i).data);
+            assert_eq!(a.get(i).data(), b.get(i).data());
         }
-        assert_ne!(a.get(0).data, a.get(1).data);
+        assert_ne!(a.get(0).data(), a.get(1).data());
         // Round-robin wraps.
-        assert_eq!(a.get(0).data, a.get(3).data);
+        assert_eq!(a.get(0).data(), a.get(3).data());
     }
 
     /// Identity service: output = input, fixed batch of 4.

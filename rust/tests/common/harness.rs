@@ -153,12 +153,12 @@ impl<S: StageExec> StageExec for FaultStages<S> {
 
     fn execute(&self, stage: usize, input: Tensor) -> anyhow::Result<(Tensor, f64)> {
         if let Some((s, v)) = self.fail_at {
-            if stage == s && input.data.first() == Some(&v) {
+            if stage == s && input.data().first() == Some(&v) {
                 anyhow::bail!("injected failure at stage {stage}");
             }
         }
         if let Some((s, v)) = self.panic_at {
-            if stage == s && input.data.first() == Some(&v) {
+            if stage == s && input.data().first() == Some(&v) {
                 panic!("injected panic at stage {stage}");
             }
         }

@@ -1,0 +1,363 @@
+//! ISSUE 5 tentpole tests: the zero-copy activation data plane.
+//!
+//! The Arc-backed tensor refactor must be a pure *mechanism* change:
+//! every view-based path (stack, micro-batch split, reassembly, member
+//! re-split, per-request row split, coalescing) has to stay
+//! bit-identical to the copying implementations it replaced. The
+//! copying oracles live right here, so the equivalence is pinned
+//! against the old semantics, not against the new code. On top of that:
+//! zero-copy pinning (`Arc::ptr_eq` — a split/slice really shares its
+//! parent buffer) and the aliasing test (mutating a served output can
+//! never alter a cached row).
+
+mod common;
+
+use common::harness as h;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use amp4ec::pipeline::engine::{
+    concat_rows, run_serial, split_rows, PersistentEngine,
+    PersistentEngineConfig,
+};
+use amp4ec::pipeline::{split_batch, stack_batch};
+use amp4ec::runtime::Tensor;
+use amp4ec::scheduler::cache::{input_key, ResultCache};
+use amp4ec::serving::{EngineService, IngressConfig, Outcome, ServiceHandle};
+use amp4ec::util::check::forall;
+use amp4ec::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// Copying oracles: the pre-refactor implementations, verbatim semantics
+// ---------------------------------------------------------------------------
+
+/// The old `split_rows`: memcpy every chunk out of the batch.
+fn oracle_split_rows(t: &Tensor, chunk_rows: usize) -> Vec<Tensor> {
+    let rows = t.shape[0];
+    let row_len: usize = t.shape.iter().skip(1).product();
+    let mut out = Vec::new();
+    let mut r = 0;
+    while r < rows {
+        let take = chunk_rows.min(rows - r);
+        let mut shape = t.shape.clone();
+        shape[0] = take;
+        out.push(
+            Tensor::new(
+                shape,
+                t.data()[r * row_len..(r + take) * row_len].to_vec(),
+            )
+            .unwrap(),
+        );
+        r += take;
+    }
+    out
+}
+
+/// The old `concat_rows`: memcpy every chunk into a fresh buffer.
+fn oracle_concat_rows(chunks: &[Tensor]) -> Tensor {
+    let mut rows = 0;
+    let mut data = Vec::new();
+    for c in chunks {
+        rows += c.shape[0];
+        data.extend_from_slice(c.data());
+    }
+    let mut shape = chunks[0].shape.clone();
+    shape[0] = rows;
+    Tensor::new(shape, data).unwrap()
+}
+
+/// The old `stack_batch`: memcpy rows + zero-fill padding.
+fn oracle_stack_batch(inputs: &[&Tensor], batch: usize) -> Tensor {
+    let per = &inputs[0].shape;
+    let row_len: usize = per.iter().skip(1).product();
+    let mut data = Vec::with_capacity(batch * row_len);
+    for t in inputs {
+        data.extend_from_slice(t.data());
+    }
+    data.resize(batch * row_len, 0.0);
+    let mut shape = per.clone();
+    shape[0] = batch;
+    Tensor::new(shape, data).unwrap()
+}
+
+/// The old `split_batch`: memcpy each row back out.
+fn oracle_split_batch(output: &Tensor, n: usize) -> Vec<Tensor> {
+    let row_len: usize = output.shape.iter().skip(1).product();
+    let mut shape = output.shape.clone();
+    shape[0] = 1;
+    (0..n)
+        .map(|i| {
+            Tensor::new(
+                shape.clone(),
+                output.data()[i * row_len..(i + 1) * row_len].to_vec(),
+            )
+            .unwrap()
+        })
+        .collect()
+}
+
+fn rand_tensor(rng: &mut Rng, rows: usize, cols: usize) -> Tensor {
+    let data =
+        (0..rows * cols).map(|_| rng.f32_range(-8.0, 8.0)).collect();
+    Tensor::new(vec![rows, cols], data).unwrap()
+}
+
+// ---------------------------------------------------------------------------
+// Property: view-based primitives are bit-identical to the copying oracles
+// ---------------------------------------------------------------------------
+
+#[test]
+fn property_split_concat_roundtrips_match_oracles() {
+    forall(60, 0xDA7A, |rng| {
+        let rows = rng.range(1, 12);
+        let cols = rng.range(1, 9);
+        let chunk = rng.range(1, rows + 2);
+        let t = rand_tensor(rng, rows, cols);
+
+        let views = split_rows(&t, chunk).unwrap();
+        let copies = oracle_split_rows(&t, chunk);
+        assert_eq!(views.len(), copies.len());
+        for (v, c) in views.iter().zip(&copies) {
+            assert_eq!(v, c, "split_rows diverged from the copying oracle");
+            // Zero-copy pinned: every chunk is a window into the batch.
+            assert!(
+                Arc::ptr_eq(v.buf(), t.buf()),
+                "split_rows copied a chunk"
+            );
+        }
+        // Roundtrip both ways, and cross: views reassembled must equal
+        // the oracle reassembly of the oracle chunks.
+        assert_eq!(concat_rows(&views).unwrap(), t);
+        assert_eq!(oracle_concat_rows(&copies), t);
+        assert_eq!(concat_rows(&copies).unwrap(), oracle_concat_rows(&views));
+    });
+}
+
+#[test]
+fn property_stack_and_split_batch_match_oracles() {
+    forall(60, 0x57AC, |rng| {
+        let n = rng.range(1, 7);
+        let cols = rng.range(1, 10);
+        let batch = n + rng.below(4);
+        let inputs: Vec<Tensor> =
+            (0..n).map(|_| rand_tensor(rng, 1, cols)).collect();
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+
+        let stacked = stack_batch(&refs, batch).unwrap();
+        assert_eq!(stacked, oracle_stack_batch(&refs, batch));
+
+        let rows = split_batch(&stacked, n).unwrap();
+        let oracle_rows = oracle_split_batch(&stacked, n);
+        for ((r, o), original) in rows.iter().zip(&oracle_rows).zip(&inputs) {
+            assert_eq!(r, o, "split_batch diverged from the copying oracle");
+            assert_eq!(r, original, "row did not roundtrip");
+            assert!(
+                Arc::ptr_eq(r.buf(), stacked.buf()),
+                "split_batch copied a row"
+            );
+        }
+    });
+}
+
+#[test]
+fn stack_batch_fast_paths_share_buffers() {
+    // A lone padding-free input passes through as a view.
+    let one = h::seeded_input(1, 6, 11);
+    let stacked = stack_batch(&[&one], 1).unwrap();
+    assert!(Arc::ptr_eq(stacked.buf(), one.buf()));
+    // Rows split off one batch re-stack as a view of that batch.
+    let batch = h::seeded_input(4, 6, 12);
+    let rows = split_batch(&batch, 4).unwrap();
+    let refs: Vec<&Tensor> = rows.iter().collect();
+    let restacked = stack_batch(&refs, 4).unwrap();
+    assert!(
+        Arc::ptr_eq(restacked.buf(), batch.buf()),
+        "contiguous re-stack must be a view"
+    );
+    assert_eq!(restacked, batch);
+    // Out-of-order rows are not contiguous: the copying path kicks in
+    // and still matches the oracle.
+    let shuffled = [&rows[2], &rows[0], &rows[1], &rows[3]];
+    let copied = stack_batch(&shuffled, 4).unwrap();
+    assert!(!Arc::ptr_eq(copied.buf(), batch.buf()));
+    assert_eq!(copied, oracle_stack_batch(&shuffled, 4));
+}
+
+// ---------------------------------------------------------------------------
+// Property: the engine's micro-batch/coalesce path stays bit-identical
+// ---------------------------------------------------------------------------
+
+#[test]
+fn property_engine_micro_batching_bit_identical_to_serial() {
+    forall(12, 0xE9E1, |rng| {
+        let rows = rng.range(1, 9);
+        let cols = rng.range(1, 17);
+        let micro = rng.range(1, 4);
+        let depth = rng.range(1, 5);
+        let t = rand_tensor(rng, rows, cols);
+        let stages = h::paper_stages(0.5);
+        let want = run_serial(&*stages, &t, rows).unwrap().output;
+        let engine = PersistentEngine::new(
+            h::paper_stages(0.5),
+            PersistentEngineConfig {
+                micro_batch_rows: micro,
+                initial_depth: depth,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let got = engine.run(&t).unwrap().output;
+        assert_eq!(got, want, "micro-batched output diverged from serial");
+    });
+}
+
+#[test]
+fn property_coalesced_transports_bit_identical_and_addressable() {
+    forall(10, 0xC0A1, |rng| {
+        let cols = rng.range(1, 9);
+        let n_batches = rng.range(2, 6);
+        let batches: Vec<Tensor> = (0..n_batches)
+            .map(|_| rand_tensor(rng, rng.range(1, 4), cols))
+            .collect();
+        let stages = h::paper_stages(0.5);
+        let want: Vec<Tensor> = batches
+            .iter()
+            .map(|b| run_serial(&*stages, b, b.shape[0]).unwrap().output)
+            .collect();
+        let engine = PersistentEngine::new(
+            h::paper_stages(0.5),
+            PersistentEngineConfig {
+                micro_batch_rows: 4,
+                initial_depth: 2,
+                coalesce: true,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let handles: Vec<_> = batches
+            .iter()
+            .map(|b| engine.submit(b).unwrap())
+            .collect();
+        for (hd, want) in handles.into_iter().zip(&want) {
+            let run = hd.wait().unwrap();
+            assert_eq!(
+                &run.output, want,
+                "coalesced member output diverged (not batch-addressable)"
+            );
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Aliasing: a cached row can never be altered through a served output
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mutating_a_served_output_never_alters_the_cached_row() {
+    let engine = PersistentEngine::new(
+        h::sim_stages(h::PAPER_SHARES, 0.5),
+        PersistentEngineConfig {
+            micro_batch_rows: 1,
+            initial_depth: 2,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let cache = Arc::new(ResultCache::new(16));
+    let handle = ServiceHandle::new(
+        Arc::new(EngineService::new(Arc::new(engine), 1, 2)),
+        IngressConfig {
+            max_wait: Duration::from_millis(1),
+            ..IngressConfig::default()
+        },
+        Some(Arc::clone(&cache)),
+    );
+    let input = h::seeded_input(1, 8, 77);
+    let mut first = match handle.submit(input.clone()).unwrap().wait() {
+        Outcome::Done(r) => {
+            assert!(!r.cache_hit);
+            r.output
+        }
+        other => panic!("unexpected outcome {other:?}"),
+    };
+    let honest = first.clone();
+    // Stomp the served output through the copy-on-write path: the
+    // response row is a view into the batch output, and the cached row
+    // must own separate storage.
+    for v in first.data_mut() {
+        *v = -1234.5;
+    }
+    let second = match handle.submit(input.clone()).unwrap().wait() {
+        Outcome::Done(r) => {
+            assert!(r.cache_hit, "repeat input must hit the cache");
+            r.output
+        }
+        other => panic!("unexpected outcome {other:?}"),
+    };
+    assert_eq!(
+        second, honest,
+        "mutating a served output leaked into the cached row"
+    );
+    // And the hit itself is zero-copy: the response wraps the cache's
+    // shared buffer.
+    let key = input_key(0xE5E5, input.data());
+    let stored = cache.get(key).expect("row cached");
+    assert!(
+        Arc::ptr_eq(&stored, second.buf()),
+        "cache hit should hand back the stored buffer as a view"
+    );
+    drop(handle);
+}
+
+#[test]
+fn cached_hit_survives_recycling_of_the_batch_buffer() {
+    // A cache-hit tensor keeps its buffer alive independently of the
+    // serving path's pooling/recycling: wait for two hits on the same
+    // key and check both views read identically.
+    let engine = PersistentEngine::new(
+        h::sim_stages(h::PAPER_SHARES, 0.5),
+        PersistentEngineConfig {
+            micro_batch_rows: 1,
+            initial_depth: 2,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let cache = Arc::new(ResultCache::new(8));
+    let handle = ServiceHandle::new(
+        Arc::new(EngineService::new(Arc::new(engine), 1, 2)),
+        IngressConfig {
+            max_wait: Duration::from_millis(1),
+            ..IngressConfig::default()
+        },
+        Some(cache),
+    );
+    let input = h::seeded_input(1, 8, 78);
+    let miss = handle.submit(input.clone()).unwrap().wait_output().unwrap();
+    let hit1 = handle.submit(input.clone()).unwrap().wait_output().unwrap();
+    let hit2 = handle.submit(input).unwrap().wait_output().unwrap();
+    assert_eq!(miss, hit1);
+    assert_eq!(hit1, hit2);
+    // The two hits share one stored buffer (zero-copy), yet equal the
+    // original miss bit-for-bit.
+    assert!(Arc::ptr_eq(hit1.buf(), hit2.buf()));
+    drop(handle);
+}
+
+// ---------------------------------------------------------------------------
+// Artifact-gated: the real-model pipeline stays golden through the
+// view-based data plane
+// ---------------------------------------------------------------------------
+
+#[test]
+fn real_model_golden_parity_through_view_data_plane() {
+    require_artifacts!();
+    let cfg =
+        amp4ec::config::AmpConfig::paper_cluster(&common::artifacts_dir());
+    let server = amp4ec::server::EdgeServer::start(cfg).unwrap();
+    // Golden parity rides the full ingress → stack → engine → reassembly
+    // → row-split path; a view-aliasing bug anywhere in it shows up as a
+    // golden mismatch.
+    server.golden_check().unwrap();
+}

@@ -93,9 +93,9 @@ fn executor_thread_runs_blocks() {
     let (out, host_ms) = exec.run_chain(vec![h], input).unwrap();
     assert_eq!(out.shape, vec![1, b0.out_shape[0], b0.out_shape[1], b0.out_shape[2]]);
     assert!(host_ms > 0.0);
-    assert!(out.data.iter().all(|v| v.is_finite()));
+    assert!(out.data().iter().all(|v| v.is_finite()));
     // ReLU6 epilogue bounds the stem output.
-    assert!(out.data.iter().all(|&v| (0.0..=6.0).contains(&v)));
+    assert!(out.data().iter().all(|&v| (0.0..=6.0).contains(&v)));
     exec.unload_block(h);
     // Running an unloaded block fails cleanly.
     let input2 = Tensor::zeros(vec![1, b0.in_shape[0], b0.in_shape[1], b0.in_shape[2]]);
@@ -132,7 +132,7 @@ fn device_resident_weights_path_matches_literal_path() {
     let w = Tensor::from_f32_file(&m.weights_path(b), vec![b.param_count as usize])
         .unwrap();
     let mut x = Tensor::zeros(vec![1, b.in_shape[0], b.in_shape[1], b.in_shape[2]]);
-    for (i, v) in x.data.iter_mut().enumerate() {
+    for (i, v) in x.data_mut().iter_mut().enumerate() {
         *v = ((i % 13) as f32 - 6.0) / 6.0;
     }
     let out_shape = vec![1, b.out_shape[0], b.out_shape[1], b.out_shape[2]];
