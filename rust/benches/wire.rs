@@ -1,0 +1,203 @@
+//! Wire-transport overhead: UDS loopback agents vs the in-process
+//! chain on the wide-activation profile (4096 f32/row — the traffic
+//! where frame encode/decode cost would show if it were going to).
+//!
+//! Both runs stream the same batches through a depth-4 persistent
+//! engine over the paper's 1.0/0.6/0.4 heterogeneous profile; the wire
+//! run hosts each stage in a `NodeAgent` behind a Unix domain socket.
+//! Asserts the PR-6 acceptance criteria: outputs bit-identical to
+//! in-process, and wall time within the stated bound
+//! (`MAX_OVERHEAD_X`) of the in-process run — the sim sleeps dominate,
+//! so the wire's per-micro-batch round-trips must stay in the noise.
+//! Emits `BENCH_wire.json`. `cargo bench --bench wire`.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use amp4ec::metrics::wire as wire_metrics;
+use amp4ec::pipeline::engine::{
+    PersistentEngine, PersistentEngineConfig, SimStages,
+};
+use amp4ec::runtime::Tensor;
+use amp4ec::transport::agent::NodeAgent;
+use amp4ec::transport::WireStages;
+use amp4ec::util::bench::BenchSuite;
+use amp4ec::util::json::Json;
+
+const SHARES: &[f64] = &[1.0, 0.6, 0.4];
+const NOMINAL_MS: f64 = 1.0;
+const COLS: usize = 4096;
+const ROWS_PER_BATCH: usize = 6;
+const N_BATCHES: usize = 12;
+const DEPTH: usize = 4;
+/// Stated acceptance bound: the UDS loopback run's wall time must stay
+/// within this factor of the in-process run on the same workload.
+const MAX_OVERHEAD_X: f64 = 1.5;
+
+fn batches() -> Vec<Tensor> {
+    (0..N_BATCHES)
+        .map(|b| {
+            let data = (0..ROWS_PER_BATCH * COLS)
+                .map(|i| (i as f32) * 0.0625 - 2.0 + b as f32)
+                .collect();
+            Tensor::new(vec![ROWS_PER_BATCH, COLS], data).unwrap()
+        })
+        .collect()
+}
+
+fn engine_cfg() -> PersistentEngineConfig {
+    PersistentEngineConfig {
+        micro_batch_rows: 1,
+        initial_depth: DEPTH,
+        adaptive: None,
+        ..Default::default()
+    }
+}
+
+/// Stream every batch through `engine`; returns (outputs, wall ms,
+/// final sim makespan).
+fn drive(engine: &PersistentEngine, inputs: &[Tensor]) -> (Vec<Tensor>, f64, f64) {
+    let t0 = Instant::now();
+    let handles: Vec<_> = inputs
+        .iter()
+        .map(|b| engine.submit(b).expect("submit"))
+        .collect();
+    let outputs: Vec<Tensor> = handles
+        .into_iter()
+        .map(|h| h.wait().expect("batch").output)
+        .collect();
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    (outputs, wall_ms, engine.makespan_ms())
+}
+
+fn main() {
+    let mut suite = BenchSuite::new("wire");
+    let inputs = batches();
+    let total_rows = (N_BATCHES * ROWS_PER_BATCH) as f64;
+
+    // ---- in-process reference -----------------------------------------
+    let inproc_engine = PersistentEngine::new(
+        Arc::new(SimStages::heterogeneous(SHARES, NOMINAL_MS)),
+        engine_cfg(),
+    )
+    .expect("inproc engine");
+    let (inproc_out, inproc_wall_ms, inproc_sim_ms) =
+        drive(&inproc_engine, &inputs);
+    drop(inproc_engine);
+
+    // ---- UDS loopback: one agent per stage ----------------------------
+    let dir = std::env::temp_dir();
+    let agents: Vec<_> = (0..SHARES.len())
+        .map(|i| {
+            let path = dir
+                .join(format!("amp4ec-bench-wire-{}-{i}.sock", std::process::id()));
+            NodeAgent::serve_uds(&path).expect("serve agent")
+        })
+        .collect();
+    let addrs: Vec<_> = agents.iter().map(|a| a.addr().clone()).collect();
+
+    let wire_before = wire_metrics::snapshot();
+    let wire_engine = PersistentEngine::new(
+        Arc::new(
+            WireStages::connect_sim(
+                &addrs,
+                SHARES,
+                NOMINAL_MS,
+                Duration::from_secs(10),
+            )
+            .expect("connect agents"),
+        ),
+        engine_cfg(),
+    )
+    .expect("wire engine");
+    let (wire_out, uds_wall_ms, uds_sim_ms) = drive(&wire_engine, &inputs);
+    drop(wire_engine);
+    let moved = wire_metrics::snapshot().since(&wire_before);
+    drop(agents);
+
+    // ---- acceptance: bit-identity and bounded overhead ----------------
+    assert_eq!(
+        wire_out, inproc_out,
+        "wire outputs must be bit-identical to in-process"
+    );
+    assert!(
+        (uds_sim_ms - inproc_sim_ms).abs() < 1e-6,
+        "sim accounting diverged: wire {uds_sim_ms:.3} ms vs in-process \
+         {inproc_sim_ms:.3} ms"
+    );
+    let overhead_x = uds_wall_ms / inproc_wall_ms;
+    assert!(
+        overhead_x <= MAX_OVERHEAD_X,
+        "UDS loopback wall {uds_wall_ms:.1} ms is {overhead_x:.2}x the \
+         in-process {inproc_wall_ms:.1} ms (bound {MAX_OVERHEAD_X}x)"
+    );
+    assert!(
+        moved.frames_tx > 0 && moved.frames_rx > 0,
+        "wire counters never moved: {moved:?}"
+    );
+
+    suite.record_value("inproc wall", inproc_wall_ms, "ms");
+    suite.record_value("uds wall", uds_wall_ms, "ms");
+    suite.record_value("uds overhead", (overhead_x - 1.0) * 100.0, "%");
+    suite.record_value(
+        "inproc throughput",
+        total_rows / (inproc_wall_ms / 1e3),
+        "rows/s",
+    );
+    suite.record_value(
+        "uds throughput",
+        total_rows / (uds_wall_ms / 1e3),
+        "rows/s",
+    );
+    suite.record_value("wire frames tx", moved.frames_tx as f64, "");
+    suite.record_value(
+        "wire MB tx",
+        moved.bytes_tx as f64 / (1024.0 * 1024.0),
+        "MB",
+    );
+    suite.record_value(
+        "encode per frame",
+        moved.encode_ns as f64 / 1e3 / moved.frames_tx.max(1) as f64,
+        "us",
+    );
+
+    let mut doc = BTreeMap::new();
+    doc.insert("suite".into(), Json::Str("wire".into()));
+    doc.insert(
+        "cpu_shares".into(),
+        Json::Arr(SHARES.iter().map(|&s| Json::Num(s)).collect()),
+    );
+    doc.insert("nominal_ms".into(), Json::Num(NOMINAL_MS));
+    doc.insert("row_len".into(), Json::from(COLS));
+    doc.insert("rows_per_batch".into(), Json::from(ROWS_PER_BATCH));
+    doc.insert("n_batches".into(), Json::from(N_BATCHES));
+    doc.insert("depth".into(), Json::from(DEPTH));
+    doc.insert("inproc_wall_ms".into(), Json::Num(inproc_wall_ms));
+    doc.insert("uds_wall_ms".into(), Json::Num(uds_wall_ms));
+    doc.insert("inproc_sim_ms".into(), Json::Num(inproc_sim_ms));
+    doc.insert("uds_sim_ms".into(), Json::Num(uds_sim_ms));
+    doc.insert("overhead_x".into(), Json::Num(overhead_x));
+    doc.insert("bound_x".into(), Json::Num(MAX_OVERHEAD_X));
+    doc.insert(
+        "inproc_rows_per_s".into(),
+        Json::Num(total_rows / (inproc_wall_ms / 1e3)),
+    );
+    doc.insert(
+        "uds_rows_per_s".into(),
+        Json::Num(total_rows / (uds_wall_ms / 1e3)),
+    );
+    doc.insert("frames_tx".into(), Json::from(moved.frames_tx as usize));
+    doc.insert("frames_rx".into(), Json::from(moved.frames_rx as usize));
+    doc.insert("bytes_tx".into(), Json::from(moved.bytes_tx as usize));
+    doc.insert("bytes_rx".into(), Json::from(moved.bytes_rx as usize));
+    doc.insert("encode_ns".into(), Json::from(moved.encode_ns as usize));
+    doc.insert("decode_ns".into(), Json::from(moved.decode_ns as usize));
+    doc.insert(
+        "encode_us_per_frame".into(),
+        Json::Num(moved.encode_ns as f64 / 1e3 / moved.frames_tx.max(1) as f64),
+    );
+    std::fs::write("BENCH_wire.json", Json::Obj(doc).to_string())
+        .expect("write BENCH_wire.json");
+    println!("wrote BENCH_wire.json");
+}

@@ -10,6 +10,7 @@ use anyhow::{Context, Result};
 
 use crate::cluster::{LinkSpec, NodeSpec, Profile, SimParams};
 use crate::scheduler::ScoringWeights;
+use crate::transport::{AgentAddr, TransportKind};
 use crate::util::json::Json;
 
 /// One node's configuration (mirrors the paper's Docker resource flags).
@@ -112,6 +113,14 @@ pub struct AmpConfig {
     pub cache_entries: Option<usize>,
     /// Model/deployment cache across redeployments (+Cache bandwidth=0).
     pub model_cache: bool,
+    /// Stage transport: `inproc` (default — stages run in this
+    /// process), `uds`, or `tcp` (stages run in `amp4ec node` agents
+    /// listed in `agents`). CLI: `--transport`.
+    pub transport: TransportKind,
+    /// Node-agent addresses for uds/tcp transports (socket paths or
+    /// host:port; stages are assigned round-robin when there are fewer
+    /// agents than stages). CLI: `--agents a,b,...`.
+    pub agents: Vec<String>,
     /// Simulation parameters.
     pub time_scale: f64,
     pub page_factor: f64,
@@ -147,6 +156,8 @@ impl Default for AmpConfig {
             coalesce: false,
             cache_entries: None,
             model_cache: false,
+            transport: TransportKind::Inproc,
+            agents: Vec::new(),
             time_scale: 1.0,
             page_factor: 4.0,
             runtime_overhead_mb: 384.0,
@@ -221,6 +232,17 @@ impl AmpConfig {
         }
     }
 
+    /// Parsed agent addresses (empty for the in-process transport).
+    pub fn agent_addrs(&self) -> Result<Vec<AgentAddr>> {
+        if self.transport == TransportKind::Inproc {
+            return Ok(Vec::new());
+        }
+        self.agents
+            .iter()
+            .map(|a| AgentAddr::parse(self.transport, a))
+            .collect()
+    }
+
     /// The serving ingress configuration (replaces the old
     /// `router_config`): admission window and worker pool carry over,
     /// plus the request-level knobs — priority-lane count and the
@@ -264,6 +286,28 @@ impl AmpConfig {
             "max_pipeline_depth must be >= 1"
         );
         anyhow::ensure!(self.time_scale > 0.0, "time_scale must be > 0");
+        match self.transport {
+            TransportKind::Inproc => anyhow::ensure!(
+                self.agents.is_empty(),
+                "transport `inproc` takes no agent addresses; drop `agents` \
+                 or set the transport to uds/tcp"
+            ),
+            kind => {
+                anyhow::ensure!(
+                    !self.agents.is_empty(),
+                    "transport `{kind}` needs at least one agent address, \
+                     e.g. agents = [{}]",
+                    if kind == TransportKind::Uds {
+                        "\"/tmp/amp4ec-a.sock\""
+                    } else {
+                        "\"127.0.0.1:7070\""
+                    }
+                );
+                for a in &self.agents {
+                    AgentAddr::parse(kind, a)?;
+                }
+            }
+        }
         self.weights.validate()?;
         for n in &self.nodes {
             n.to_spec().validate()?;
@@ -350,6 +394,18 @@ impl AmpConfig {
             m.insert("cache_entries".into(), Json::from(c));
         }
         m.insert("model_cache".into(), Json::from(self.model_cache));
+        m.insert("transport".into(), Json::Str(self.transport.name().to_string()));
+        if !self.agents.is_empty() {
+            m.insert(
+                "agents".into(),
+                Json::Arr(
+                    self.agents
+                        .iter()
+                        .map(|a| Json::Str(a.clone()))
+                        .collect(),
+                ),
+            );
+        }
         m.insert("time_scale".into(), Json::Num(self.time_scale));
         m.insert("page_factor".into(), Json::Num(self.page_factor));
         m.insert(
@@ -440,6 +496,22 @@ impl AmpConfig {
             coalesce: j.get("coalesce").and_then(Json::as_bool).unwrap_or(false),
             cache_entries: j.get("cache_entries").and_then(Json::as_usize),
             model_cache: j.get("model_cache").and_then(Json::as_bool).unwrap_or(false),
+            transport: match j.get("transport").and_then(Json::as_str) {
+                Some(s) => TransportKind::parse(s)?,
+                None => d.transport,
+            },
+            agents: match j.get("agents") {
+                Some(Json::Arr(arr)) => arr
+                    .iter()
+                    .map(|a| {
+                        a.as_str().map(str::to_string).ok_or_else(|| {
+                            anyhow::anyhow!("`agents` entries must be strings")
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?,
+                Some(_) => anyhow::bail!("`agents` must be an array of strings"),
+                None => Vec::new(),
+            },
             time_scale: get_f("time_scale", d.time_scale),
             page_factor: get_f("page_factor", d.page_factor),
             runtime_overhead_mb: get_f("runtime_overhead_mb", d.runtime_overhead_mb),
@@ -549,6 +621,63 @@ mod tests {
         let mut c = AmpConfig::default();
         c.default_deadline_ms = Some(-5.0);
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn transport_validation_is_actionable() {
+        // inproc + agents listed: contradictory.
+        let mut c = AmpConfig::default();
+        c.agents = vec!["/tmp/a.sock".to_string()];
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("takes no agent addresses"), "{err}");
+        // tcp with no agents: tells you what to add.
+        let mut c = AmpConfig::default();
+        c.transport = TransportKind::Tcp;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("at least one agent address"), "{err}");
+        assert!(err.contains("127.0.0.1:7070"), "{err}");
+        // tcp with a port-less address: names the offender.
+        c.agents = vec!["localhost".to_string()];
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("host:port"), "{err}");
+        // Valid uds and tcp configs pass.
+        let mut c = AmpConfig::default();
+        c.transport = TransportKind::Uds;
+        c.agents = vec!["/tmp/a.sock".to_string(), "/tmp/b.sock".to_string()];
+        c.validate().unwrap();
+        assert_eq!(c.agent_addrs().unwrap().len(), 2);
+        let mut c = AmpConfig::default();
+        c.transport = TransportKind::Tcp;
+        c.agents = vec!["127.0.0.1:7070".to_string()];
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn transport_json_roundtrip() {
+        let mut c = AmpConfig::default();
+        c.transport = TransportKind::Uds;
+        c.agents = vec!["/tmp/a.sock".to_string(), "/tmp/b.sock".to_string()];
+        let back = AmpConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.transport, TransportKind::Uds);
+        assert_eq!(back.agents, c.agents);
+        // Default round-trips as inproc with no agents key.
+        let d = AmpConfig::default();
+        let j = d.to_json();
+        assert!(j.get("agents").is_none());
+        let back = AmpConfig::from_json(&j).unwrap();
+        assert_eq!(back.transport, TransportKind::Inproc);
+        assert!(back.agents.is_empty());
+        // Unknown transport strings and non-string agents are rejected
+        // at parse time (from_json validates).
+        let mut m = match d.to_json() {
+            Json::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        m.insert("transport".into(), Json::Str("pigeon".into()));
+        assert!(AmpConfig::from_json(&Json::Obj(m.clone())).is_err());
+        m.insert("transport".into(), Json::Str("tcp".into()));
+        m.insert("agents".into(), Json::Arr(vec![Json::Num(1.0)]));
+        assert!(AmpConfig::from_json(&Json::Obj(m)).is_err());
     }
 
     #[test]

@@ -11,6 +11,9 @@
 //!                    [--coalesce]       # merge adjacent small miss-sets
 //!                    [--deadline-ms MS] # default per-request deadline (shed past it)
 //!                    [--priority-classes N]  # strict-priority ingress lanes
+//!                    [--transport inproc|uds|tcp] [--agents a,b,...]  # wire transport
+//! amp4ec node        --listen ADDR      # node agent (socket path or host:port)
+//!                    [--transport uds|tcp] [--stay]  # --stay: don't exit when idle
 //! amp4ec golden      [--artifacts DIR]
 //! amp4ec config      [--out FILE]       # write a default config file
 //! amp4ec serve-cfg   --config FILE [--requests N]
@@ -87,6 +90,17 @@ fn build_config(args: &Args) -> anyhow::Result<AmpConfig> {
             ms.parse()
                 .map_err(|_| anyhow::anyhow!("--deadline-ms expects a number, got `{ms}`"))?,
         );
+    }
+    if let Some(t) = args.get("transport") {
+        cfg.transport = amp4ec::transport::TransportKind::parse(t)?;
+    }
+    if let Some(a) = args.get("agents") {
+        cfg.agents = a
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(str::to_string)
+            .collect();
     }
     Ok(cfg)
 }
@@ -169,6 +183,30 @@ fn print_report(report: &amp4ec::server::ServeReport) {
             d.narrowings
         );
     }
+    let dp = &report.data_plane;
+    println!(
+        "data plane         : {:.2} MB copied ({} copies), {:.2} MB as views",
+        dp.copied_bytes as f64 / 1e6,
+        dp.copies,
+        dp.viewed_bytes as f64 / 1e6
+    );
+    let p = &report.pool_stats;
+    println!(
+        "buffer pool        : {} hits / {} misses / {} returns",
+        p.hits, p.misses, p.returns
+    );
+    if let Some(w) = &report.wire {
+        println!(
+            "wire transport     : {} frames / {:.2} MB tx, {} frames / {:.2} MB rx, \
+             encode {:.2} ms, decode {:.2} ms",
+            w.frames_tx,
+            w.bytes_tx as f64 / 1e6,
+            w.frames_rx,
+            w.bytes_rx as f64 / 1e6,
+            w.encode_ns as f64 / 1e6,
+            w.decode_ns as f64 / 1e6
+        );
+    }
 }
 
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
@@ -219,6 +257,37 @@ fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Run a node agent: host stage deployments shipped by a coordinator
+/// over the wire transport. By default the agent exits once it has
+/// served a coordinator and that coordinator disconnects (`--stay`
+/// keeps it listening forever).
+fn cmd_node(args: &Args) -> anyhow::Result<()> {
+    use amp4ec::transport::{agent::NodeAgent, TransportKind};
+    let listen = args
+        .get("listen")
+        .ok_or_else(|| anyhow::anyhow!("--listen ADDR required (socket path or host:port)"))?;
+    // Infer the flavor from the address shape unless told explicitly:
+    // host:port is TCP, anything else is a socket path.
+    let kind = match args.get("transport") {
+        Some(t) => match TransportKind::parse(t)? {
+            TransportKind::Inproc => anyhow::bail!(
+                "a node agent serves uds or tcp, not inproc"
+            ),
+            k => k,
+        },
+        None if listen.contains(':') => TransportKind::Tcp,
+        None => TransportKind::Uds,
+    };
+    let handle = match kind {
+        TransportKind::Tcp => NodeAgent::serve_tcp(listen)?,
+        _ => NodeAgent::serve_uds(listen)?,
+    };
+    handle.exit_when_idle(!args.flag("stay"));
+    println!("node agent listening on {}", handle.addr());
+    handle.join();
+    Ok(())
+}
+
 fn cmd_config(args: &Args) -> anyhow::Result<()> {
     let out = args.get_or("out", "amp4ec.json");
     AmpConfig::default().save(std::path::Path::new(out))?;
@@ -233,12 +302,13 @@ fn main() {
         Some("partition") => cmd_partition(&args),
         Some("serve") => cmd_serve(&args),
         Some("serve-cfg") => cmd_serve_cfg(&args),
+        Some("node") => cmd_node(&args),
         Some("golden") => cmd_golden(&args),
         Some("config") => cmd_config(&args),
         Some("calibrate") => cmd_calibrate(&args),
         other => {
             eprintln!(
-                "usage: amp4ec <info|partition|serve|serve-cfg|golden|config|calibrate> [--options]\n\
+                "usage: amp4ec <info|partition|serve|serve-cfg|node|golden|config|calibrate> [--options]\n\
                  unknown subcommand: {other:?}"
             );
             std::process::exit(2);

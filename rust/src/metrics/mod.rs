@@ -65,6 +65,79 @@ pub mod data_plane {
     }
 }
 
+/// Process-global wire-transport counters, mirroring [`data_plane`]:
+/// every frame the transport codec writes or reads is counted here
+/// (frames, bytes, and the nanoseconds spent encoding/decoding —
+/// including the socket wait, so the numbers reflect what the wire
+/// actually cost, not just the marshalling). Snapshot before/after a
+/// run and diff with [`WireStats::since`].
+pub mod wire {
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static FRAMES_TX: AtomicU64 = AtomicU64::new(0);
+    static BYTES_TX: AtomicU64 = AtomicU64::new(0);
+    static ENCODE_NS: AtomicU64 = AtomicU64::new(0);
+    static FRAMES_RX: AtomicU64 = AtomicU64::new(0);
+    static BYTES_RX: AtomicU64 = AtomicU64::new(0);
+    static DECODE_NS: AtomicU64 = AtomicU64::new(0);
+
+    /// Point-in-time view of the process-global wire counters.
+    #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+    pub struct WireStats {
+        /// Frames written to a wire stream.
+        pub frames_tx: u64,
+        /// Bytes written (length prefix + kind + payload).
+        pub bytes_tx: u64,
+        /// Nanoseconds spent encoding + writing frames.
+        pub encode_ns: u64,
+        /// Frames read from a wire stream.
+        pub frames_rx: u64,
+        /// Bytes read.
+        pub bytes_rx: u64,
+        /// Nanoseconds spent reading + decoding frames.
+        pub decode_ns: u64,
+    }
+
+    impl WireStats {
+        /// Counter movement since an earlier snapshot.
+        pub fn since(&self, earlier: &WireStats) -> WireStats {
+            WireStats {
+                frames_tx: self.frames_tx - earlier.frames_tx,
+                bytes_tx: self.bytes_tx - earlier.bytes_tx,
+                encode_ns: self.encode_ns - earlier.encode_ns,
+                frames_rx: self.frames_rx - earlier.frames_rx,
+                bytes_rx: self.bytes_rx - earlier.bytes_rx,
+                decode_ns: self.decode_ns - earlier.decode_ns,
+            }
+        }
+    }
+
+    /// Record one frame written: `bytes` on the wire, `ns` to encode.
+    pub fn count_tx(bytes: u64, ns: u64) {
+        FRAMES_TX.fetch_add(1, Ordering::Relaxed);
+        BYTES_TX.fetch_add(bytes, Ordering::Relaxed);
+        ENCODE_NS.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Record one frame read: `bytes` off the wire, `ns` to decode.
+    pub fn count_rx(bytes: u64, ns: u64) {
+        FRAMES_RX.fetch_add(1, Ordering::Relaxed);
+        BYTES_RX.fetch_add(bytes, Ordering::Relaxed);
+        DECODE_NS.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    pub fn snapshot() -> WireStats {
+        WireStats {
+            frames_tx: FRAMES_TX.load(Ordering::Relaxed),
+            bytes_tx: BYTES_TX.load(Ordering::Relaxed),
+            encode_ns: ENCODE_NS.load(Ordering::Relaxed),
+            frames_rx: FRAMES_RX.load(Ordering::Relaxed),
+            bytes_rx: BYTES_RX.load(Ordering::Relaxed),
+            decode_ns: DECODE_NS.load(Ordering::Relaxed),
+        }
+    }
+}
+
 /// Aggregated view over one serving run; feeds the Table I / II harnesses.
 #[derive(Debug, Default, Clone)]
 pub struct RunMetrics {

@@ -193,7 +193,11 @@ pub trait StageExec: Sync {
 /// receive. Both [`DeploymentStages`] and [`SimStages`] route through
 /// these so the synthetic model used by benches/tests can never
 /// silently diverge from the real deployment path.
-fn node_comm_in(prev: Option<&VirtualNode>, to: &VirtualNode, bytes: u64) -> f64 {
+pub(crate) fn node_comm_in(
+    prev: Option<&VirtualNode>,
+    to: &VirtualNode,
+    bytes: u64,
+) -> f64 {
     let mut ms = 0.0;
     if let Some(p) = prev {
         ms += p.link().send(bytes);
@@ -201,7 +205,7 @@ fn node_comm_in(prev: Option<&VirtualNode>, to: &VirtualNode, bytes: u64) -> f64
     ms + to.link().receive(bytes)
 }
 
-fn node_comm_out(last: Option<&VirtualNode>, bytes: u64) -> f64 {
+pub(crate) fn node_comm_out(last: Option<&VirtualNode>, bytes: u64) -> f64 {
     match last {
         Some(n) => n.link().send(bytes),
         None => 0.0,

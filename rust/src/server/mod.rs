@@ -24,6 +24,7 @@ use crate::router::{BatchMeta, InferenceService, Submission};
 use crate::runtime::{Executor, Tensor};
 use crate::scheduler::{ResultCache, Scheduler};
 use crate::serving::ServiceHandle;
+use crate::transport::{self, TransportKind};
 use crate::workload::{feed, Arrival, InputPool};
 
 /// Boxed completion waiter produced by the streaming submission path:
@@ -54,6 +55,11 @@ pub struct DistributedService {
     /// Feeder-side batch coalescing (also relaxes miss padding to exact
     /// rows — short tails merge in the engine instead of being padded).
     coalesce: bool,
+    /// Wire-transport configuration: when set, stage chains are built
+    /// over node-agent connections instead of in-process deployment
+    /// stages. Wire mode always runs the engine — the serial fallback
+    /// would execute stages locally, silently ignoring the agents.
+    wire: Option<transport::WireConfig>,
     /// The long-lived streaming engine (None = serial schedule). Rebuilt
     /// on deployment swaps; the old engine drains before teardown.
     engine: Mutex<Option<Arc<engine::PersistentEngine>>>,
@@ -79,11 +85,13 @@ impl DistributedService {
         adaptive: Option<&engine::AdaptiveDepthConfig>,
         per_stage_windows: bool,
         coalesce: bool,
+        wire: Option<&transport::WireConfig>,
     ) -> bool {
         pipeline_depth > 1
             || adaptive.is_some()
             || per_stage_windows
             || coalesce
+            || wire.is_some()
     }
 
     /// Build the persistent engine for a deployment (None when the
@@ -97,6 +105,7 @@ impl DistributedService {
         adaptive: Option<engine::AdaptiveDepthConfig>,
         per_stage_windows: bool,
         coalesce: bool,
+        wire: Option<&transport::WireConfig>,
         carried: Option<LearnedWindows>,
     ) -> Result<Option<Arc<engine::PersistentEngine>>> {
         if !Self::wants_engine(
@@ -104,6 +113,7 @@ impl DistributedService {
             adaptive.as_ref(),
             per_stage_windows,
             coalesce,
+            wire,
         ) {
             return Ok(None);
         }
@@ -131,9 +141,31 @@ impl DistributedService {
             coalesce,
             adaptive,
         };
-        let stages =
-            Arc::new(engine::DeploymentStages::new(Arc::clone(dep)));
-        Ok(Some(Arc::new(engine::PersistentEngine::new(stages, cfg)?)))
+        let built = match wire {
+            // Wire mode: the stage chain is the remote twin of `dep` —
+            // each agent replays the same block loads (or sim spec) and
+            // the coordinator keeps link-model mirrors, so scheduling
+            // and sim accounting match the in-process chain.
+            Some(w) => {
+                let specs = transport::block_specs_for(
+                    dep,
+                    &w.params,
+                    &w.artifacts_dir,
+                );
+                let stages = Arc::new(transport::WireStages::connect_blocks(
+                    &w.addrs,
+                    specs,
+                    w.connect_timeout,
+                )?);
+                engine::PersistentEngine::new(stages, cfg)?
+            }
+            None => {
+                let stages =
+                    Arc::new(engine::DeploymentStages::new(Arc::clone(dep)));
+                engine::PersistentEngine::new(stages, cfg)?
+            }
+        };
+        Ok(Some(Arc::new(built)))
     }
 
     /// Swap in a new deployment (after a topology change): the streaming
@@ -157,6 +189,7 @@ impl DistributedService {
             self.adaptive,
             self.per_stage_windows,
             self.coalesce,
+            self.wire.as_ref(),
             carried,
         )?;
         // Swap both under the deployment write lock. Acquiring it waits
@@ -429,6 +462,14 @@ pub struct ServeReport {
     pub stage_budgets: Vec<usize>,
     /// Feeder coalescing counters (None when no engine is configured).
     pub coalesce_stats: Option<crate::metrics::CoalesceStats>,
+    /// Activation data-plane movement during this run: the copies the
+    /// zero-copy plane could not avoid, vs. bytes moved as `Arc` views.
+    pub data_plane: crate::metrics::data_plane::DataPlaneStats,
+    /// Buffer-pool hit/miss/return movement during this run.
+    pub pool_stats: crate::util::pool::PoolStats,
+    /// Wire-transport frame/byte/codec counters during this run (None
+    /// on the in-process transport).
+    pub wire: Option<crate::metrics::wire::WireStats>,
 }
 
 /// The leader.
@@ -537,12 +578,22 @@ impl EdgeServer {
                 ..engine::AdaptiveDepthConfig::default()
             }
         });
+        let wire = match config.transport {
+            TransportKind::Inproc => None,
+            kind => Some(transport::WireConfig::new(
+                kind,
+                config.agent_addrs()?,
+                config.sim_params(),
+                config.artifacts_dir.clone(),
+            )),
+        };
         let pipeline_engine = DistributedService::build_engine(
             &deployment,
             pipeline_depth,
             adaptive,
             config.per_stage_windows,
             config.coalesce,
+            wire.as_ref(),
             None,
         )?;
         let service = Arc::new(DistributedService {
@@ -552,6 +603,7 @@ impl EdgeServer {
             adaptive,
             per_stage_windows: config.per_stage_windows,
             coalesce: config.coalesce,
+            wire,
             engine: Mutex::new(pipeline_engine),
             stage_counters: Arc::new(crate::metrics::StageCounterSet::new()),
         });
@@ -621,9 +673,19 @@ impl EdgeServer {
                 self.service.retune_windows(&snapshot);
             }
         }
+        // Data-plane / pool / wire counters are process-global; snapshot
+        // around the run so the report shows *this run's* movement.
+        let dp0 = crate::metrics::data_plane::snapshot();
+        let pool0 = crate::util::pool::BufferPool::global().stats();
+        let wire0 = crate::metrics::wire::snapshot();
         let handle = self.serve_handle();
         feed(&handle, &pool, n, arrival, seed ^ 0xF00D);
         let metrics = handle.finish();
+        let data_plane = crate::metrics::data_plane::snapshot().since(&dp0);
+        let pool_stats =
+            crate::util::pool::BufferPool::global().stats().since(&pool0);
+        let wire = (self.config.transport != TransportKind::Inproc)
+            .then(|| crate::metrics::wire::snapshot().since(&wire0));
 
         let dep = Arc::clone(&*self.service.deployment.read().unwrap());
         let (final_depth, depth_report) = self.service.depth_status();
@@ -660,6 +722,9 @@ impl EdgeServer {
             depth_report,
             stage_budgets,
             coalesce_stats,
+            data_plane,
+            pool_stats,
+            wire,
         })
     }
 

@@ -1,0 +1,440 @@
+//! Node agent: the remote end of the wire transport.
+//!
+//! An agent listens on one Unix domain socket or TCP address and serves
+//! any number of coordinator connections. Each connection hosts exactly
+//! one deployed stage (the coordinator opens one connection per stage,
+//! so a single agent can host several stages concurrently) and runs a
+//! simple request loop: `Hello` → `DeploySim`/`DeployBlocks` → a stream
+//! of `Execute` frames answered with `ExecuteOk`/`ExecuteErr`.
+//!
+//! Lifecycle: a stage-level failure answers `ExecuteErr` and keeps the
+//! connection (the engine retries nothing — it fails that batch and
+//! keeps feeding); a protocol violation or socket error drops the
+//! connection. With [`AgentHandle::exit_when_idle`] set (the `amp4ec
+//! node` default) the agent exits once it has served at least one
+//! connection and the last one closes — i.e. when the coordinator goes
+//! away, the agent goes away.
+
+use std::io::Write as _;
+use std::net::TcpListener;
+use std::os::unix::net::UnixListener;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::cluster::VirtualNode;
+use crate::manifest::Manifest;
+use crate::runtime::{Executor, Tensor};
+use crate::util::pool::BufferPool;
+
+use super::frame::{
+    self, BlockStageSpec, Frame, SimStageSpec, WIRE_VERSION,
+};
+use super::{AgentAddr, WireStream};
+
+/// One stage a connection is hosting.
+enum HostedStage {
+    /// Synthetic stage: the exact `SimStages` transform on a locally
+    /// rebuilt virtual node — bit-identical outputs and identical
+    /// simulated milliseconds to the in-process chain.
+    Sim { node: VirtualNode, nominal_ms: f64 },
+    /// Real block range loaded from the agent-local artifacts dir.
+    Blocks {
+        node: VirtualNode,
+        executor: Arc<Executor>,
+        blocks: Vec<crate::runtime::BlockHandle>,
+    },
+}
+
+impl HostedStage {
+    fn sim(spec: SimStageSpec) -> HostedStage {
+        HostedStage::Sim {
+            node: spec.virtual_node(),
+            nominal_ms: spec.nominal_ms,
+        }
+    }
+
+    /// Replay the deployer's block-loading sequence for this stage's
+    /// range against the agent-local manifest.
+    fn blocks(spec: &BlockStageSpec) -> Result<HostedStage> {
+        let dir = PathBuf::from(&spec.artifacts_dir);
+        let manifest = Manifest::load(&dir)
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let (start, end) = (spec.block_start as usize, spec.block_end as usize);
+        anyhow::ensure!(
+            start <= end && end <= manifest.blocks.len(),
+            "block range {start}..{end} outside manifest ({} blocks)",
+            manifest.blocks.len()
+        );
+        let node = spec.virtual_node();
+        let executor = Arc::new(Executor::spawn(&spec.name)?);
+        let batch = spec.batch as usize;
+        let mut blocks = Vec::with_capacity(end - start);
+        for bi in start..end {
+            let block = &manifest.blocks[bi];
+            let hlo = manifest.artifact_path(block, batch)?;
+            let handle = executor
+                .load_block(
+                    hlo,
+                    manifest.weights_path(block),
+                    block.param_count as usize,
+                    vec![
+                        batch,
+                        block.out_shape[0],
+                        block.out_shape[1],
+                        block.out_shape[2],
+                    ],
+                )
+                .with_context(|| format!("loading block {}", block.name))?;
+            blocks.push(handle);
+        }
+        node.mem_reserve(spec.mem_reserve);
+        Ok(HostedStage::Blocks { node, executor, blocks })
+    }
+
+    fn execute(&self, input: Tensor) -> Result<(Tensor, f64)> {
+        match self {
+            HostedStage::Sim { node, nominal_ms } => {
+                let nominal = *nominal_ms;
+                let (out, outcome) = node.execute_costed(move || {
+                    // Mirror of `SimStages::execute`: same transform,
+                    // same pooled output buffer, same recycle.
+                    let mut data = BufferPool::global().take(input.len());
+                    data.extend(input.data().iter().map(|v| v * 1.5 + 0.25));
+                    let t = Tensor::new(input.shape.clone(), data)?;
+                    input.recycle();
+                    Ok((t, nominal))
+                })?;
+                Ok((out, outcome.sim_ms))
+            }
+            HostedStage::Blocks { node, executor, blocks } => {
+                let executor = Arc::clone(executor);
+                let blocks = blocks.clone();
+                let (out, outcome) =
+                    node.execute_costed(move || executor.run_chain(blocks, input))?;
+                Ok((out, outcome.sim_ms))
+            }
+        }
+    }
+}
+
+enum Listener {
+    Unix(UnixListener),
+    Tcp(TcpListener),
+}
+
+impl Listener {
+    fn accept(&self) -> std::io::Result<WireStream> {
+        match self {
+            Listener::Unix(l) => {
+                let (s, _) = l.accept()?;
+                s.set_nonblocking(false)?;
+                Ok(WireStream::Unix(s))
+            }
+            Listener::Tcp(l) => {
+                let (s, _) = l.accept()?;
+                s.set_nonblocking(false)?;
+                let _ = s.set_nodelay(true);
+                Ok(WireStream::Tcp(s))
+            }
+        }
+    }
+}
+
+/// State shared between the accept loop, connection handlers, and the
+/// controlling [`AgentHandle`].
+struct Shared {
+    stop: AtomicBool,
+    exit_when_idle: AtomicBool,
+    /// Currently open connections.
+    active: AtomicUsize,
+    /// Connections accepted over the agent's lifetime.
+    served: AtomicUsize,
+    /// Socket clones of live connections, so `kill()` can unblock
+    /// handlers parked in a read.
+    conns: Mutex<Vec<WireStream>>,
+    handlers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+/// Decrements `active` when a handler exits, however it exits.
+struct ActiveGuard(Arc<Shared>);
+
+impl Drop for ActiveGuard {
+    fn drop(&mut self) {
+        self.0.active.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// A running node agent.
+pub struct NodeAgent;
+
+impl NodeAgent {
+    /// Listen on a Unix domain socket (any stale socket file at `path`
+    /// is replaced).
+    pub fn serve_uds(path: impl AsRef<Path>) -> Result<AgentHandle> {
+        let path = path.as_ref().to_path_buf();
+        let _ = std::fs::remove_file(&path);
+        let listener = UnixListener::bind(&path)
+            .with_context(|| format!("binding uds:{}", path.display()))?;
+        listener.set_nonblocking(true)?;
+        AgentHandle::spawn(
+            Listener::Unix(listener),
+            AgentAddr::Uds(path.clone()),
+            Some(path),
+        )
+    }
+
+    /// Listen on a TCP address; `host:0` picks a free port (the bound
+    /// address is available via [`AgentHandle::addr`]).
+    pub fn serve_tcp(addr: &str) -> Result<AgentHandle> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding tcp:{addr}"))?;
+        let bound = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        AgentHandle::spawn(
+            Listener::Tcp(listener),
+            AgentAddr::Tcp(bound.to_string()),
+            None,
+        )
+    }
+}
+
+/// Control handle for a running agent: query its bound address, flip
+/// exit-on-idle, kill it hard, or join until it exits on its own.
+pub struct AgentHandle {
+    addr: AgentAddr,
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+    uds_path: Option<PathBuf>,
+}
+
+impl AgentHandle {
+    fn spawn(
+        listener: Listener,
+        addr: AgentAddr,
+        uds_path: Option<PathBuf>,
+    ) -> Result<AgentHandle> {
+        let shared = Arc::new(Shared {
+            stop: AtomicBool::new(false),
+            exit_when_idle: AtomicBool::new(false),
+            active: AtomicUsize::new(0),
+            served: AtomicUsize::new(0),
+            conns: Mutex::new(Vec::new()),
+            handlers: Mutex::new(Vec::new()),
+        });
+        let loop_shared = Arc::clone(&shared);
+        let accept = std::thread::Builder::new()
+            .name("amp4ec-agent-accept".to_string())
+            .spawn(move || accept_loop(listener, loop_shared))
+            .context("spawning agent accept thread")?;
+        Ok(AgentHandle { addr, shared, accept: Some(accept), uds_path })
+    }
+
+    /// Where the agent is listening (with the resolved port for
+    /// `host:0` TCP binds).
+    pub fn addr(&self) -> &AgentAddr {
+        &self.addr
+    }
+
+    /// When set, the agent exits once it has served at least one
+    /// connection and the last one closes — the "shut down when the
+    /// coordinator goes away" mode `amp4ec node` runs in.
+    pub fn exit_when_idle(&self, on: bool) {
+        self.shared.exit_when_idle.store(on, Ordering::SeqCst);
+    }
+
+    /// Open connections right now.
+    pub fn active_connections(&self) -> usize {
+        self.shared.active.load(Ordering::SeqCst)
+    }
+
+    /// Hard-stop: severs every live connection mid-stream (in-flight
+    /// coordinator round-trips fail immediately) and stops accepting.
+    /// Does not join — pair with [`AgentHandle::join`] or drop.
+    pub fn kill(&self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        for conn in self.shared.conns.lock().unwrap().iter() {
+            conn.shutdown();
+        }
+    }
+
+    /// Wait until the agent exits (via [`kill`](AgentHandle::kill) or
+    /// exit-on-idle) and reap all of its threads.
+    pub fn join(mut self) {
+        self.join_inner();
+    }
+
+    fn join_inner(&mut self) {
+        if let Some(t) = self.accept.take() {
+            let _ = t.join();
+        }
+        let handlers = std::mem::take(&mut *self.shared.handlers.lock().unwrap());
+        for h in handlers {
+            let _ = h.join();
+        }
+        if let Some(path) = self.uds_path.take() {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+impl Drop for AgentHandle {
+    fn drop(&mut self) {
+        if self.accept.is_some() {
+            self.kill();
+            self.join_inner();
+        }
+    }
+}
+
+fn accept_loop(listener: Listener, shared: Arc<Shared>) {
+    loop {
+        if shared.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        if shared.exit_when_idle.load(Ordering::SeqCst)
+            && shared.served.load(Ordering::SeqCst) > 0
+            && shared.active.load(Ordering::SeqCst) == 0
+        {
+            break;
+        }
+        match listener.accept() {
+            Ok(stream) => {
+                shared.served.fetch_add(1, Ordering::SeqCst);
+                shared.active.fetch_add(1, Ordering::SeqCst);
+                if let Ok(clone) = stream.try_clone() {
+                    shared.conns.lock().unwrap().push(clone);
+                }
+                let conn_shared = Arc::clone(&shared);
+                let handler = std::thread::Builder::new()
+                    .name("amp4ec-agent-conn".to_string())
+                    .spawn(move || {
+                        let _guard = ActiveGuard(Arc::clone(&conn_shared));
+                        handle_conn(stream, &conn_shared);
+                    });
+                match handler {
+                    Ok(h) => shared.handlers.lock().unwrap().push(h),
+                    // Spawn failure: the ActiveGuard never ran, undo.
+                    Err(_) => {
+                        shared.active.fetch_sub(1, Ordering::SeqCst);
+                    }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => {
+                if shared.stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+    }
+}
+
+/// Answer `frame`, reporting whether the connection is still usable.
+fn send(stream: &mut WireStream, frame: &Frame) -> bool {
+    frame::write_frame(stream, frame).is_ok() && stream.flush().is_ok()
+}
+
+fn handle_conn(mut stream: WireStream, shared: &Shared) {
+    let mut hosted: Option<HostedStage> = None;
+    loop {
+        if shared.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        // EOF or a malformed frame both end the connection; the
+        // coordinator side surfaces its own error for in-flight work.
+        let frame = match frame::read_frame(&mut stream) {
+            Ok(f) => f,
+            Err(_) => break,
+        };
+        match frame {
+            Frame::Hello { version } => {
+                if version != WIRE_VERSION {
+                    let _ = send(
+                        &mut stream,
+                        &Frame::ExecuteErr {
+                            seq: 0,
+                            message: format!(
+                                "agent speaks protocol v{WIRE_VERSION}, \
+                                 coordinator sent v{version}"
+                            ),
+                        },
+                    );
+                    break;
+                }
+                if !send(&mut stream, &Frame::HelloAck { version: WIRE_VERSION }) {
+                    break;
+                }
+            }
+            Frame::DeploySim(spec) => {
+                let stage = spec.stage;
+                hosted = Some(HostedStage::sim(spec));
+                if !send(&mut stream, &Frame::DeployAck { stage }) {
+                    break;
+                }
+            }
+            Frame::DeployBlocks(spec) => match HostedStage::blocks(&spec) {
+                Ok(h) => {
+                    hosted = Some(h);
+                    if !send(&mut stream, &Frame::DeployAck { stage: spec.stage }) {
+                        break;
+                    }
+                }
+                Err(e) => {
+                    let _ = send(
+                        &mut stream,
+                        &Frame::ExecuteErr {
+                            seq: 0,
+                            message: format!("deploy failed: {e:#}"),
+                        },
+                    );
+                    break;
+                }
+            },
+            Frame::Execute { seq, tensor } => {
+                let reply = match &hosted {
+                    None => Frame::ExecuteErr {
+                        seq,
+                        message: "no stage deployed on this connection".to_string(),
+                    },
+                    Some(stage) => match stage.execute(tensor) {
+                        Ok((out, compute_ms)) => {
+                            Frame::ExecuteOk { seq, compute_ms, tensor: out }
+                        }
+                        Err(e) => Frame::ExecuteErr {
+                            seq,
+                            message: format!("{e:#}"),
+                        },
+                    },
+                };
+                let ok = send(&mut stream, &reply);
+                // The stage output is on the wire; pool its buffer.
+                if let Frame::ExecuteOk { tensor, .. } = reply {
+                    tensor.recycle();
+                }
+                if !ok {
+                    break;
+                }
+            }
+            Frame::Shutdown => break,
+            other => {
+                let _ = send(
+                    &mut stream,
+                    &Frame::ExecuteErr {
+                        seq: 0,
+                        message: format!("unexpected {} frame", other.kind_name()),
+                    },
+                );
+                break;
+            }
+        }
+    }
+    stream.shutdown();
+}

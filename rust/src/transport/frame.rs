@@ -1,0 +1,945 @@
+//! Length-prefixed binary wire protocol for coordinator <-> node-agent
+//! traffic.
+//!
+//! Every message is one frame: `[len: u32 LE][kind: u8][payload]`,
+//! where `len` counts the kind byte plus the payload. Activation frames
+//! ([`Frame::Execute`] / [`Frame::ExecuteOk`]) carry a tensor as
+//! `[ndim: u8][dims: u32 x ndim][f32 LE x product]`; encoding writes
+//! the header and the tensor's `data()` slice (an offset/len view of
+//! its shared `TensorBuf`) with one vectored write — no re-marshal of
+//! the activation — and decoding lands the rows directly into a buffer
+//! from the global [`BufferPool`]. Malformed input (truncated header,
+//! oversized length, mid-frame EOF, dimension overflow) always returns
+//! an error, never panics, and never allocates proportionally to an
+//! unvalidated length.
+//!
+//! All frame traffic is counted in [`crate::metrics::wire`].
+
+use std::io::{self, IoSlice, Read, Write};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::Tensor;
+use crate::util::pool::BufferPool;
+
+/// Protocol magic carried in [`Frame::Hello`] so an agent can reject a
+/// stray non-protocol peer on the first frame.
+pub const WIRE_MAGIC: u32 = 0xA4EC_0001;
+/// Protocol version negotiated in the Hello/HelloAck handshake.
+pub const WIRE_VERSION: u16 = 1;
+/// Hard ceiling on one frame's `len` (kind + payload). 256 MiB covers
+/// any realistic activation micro-batch while bounding what a corrupt
+/// length prefix can make the decoder read.
+pub const MAX_FRAME_BYTES: u32 = 256 * 1024 * 1024;
+
+const KIND_HELLO: u8 = 1;
+const KIND_HELLO_ACK: u8 = 2;
+const KIND_DEPLOY_SIM: u8 = 3;
+const KIND_DEPLOY_BLOCKS: u8 = 4;
+const KIND_DEPLOY_ACK: u8 = 5;
+const KIND_EXECUTE: u8 = 6;
+const KIND_EXECUTE_OK: u8 = 7;
+const KIND_EXECUTE_ERR: u8 = 8;
+const KIND_SHUTDOWN: u8 = 9;
+
+/// Deployment order for one synthetic (sim) stage: everything the agent
+/// needs to rebuild the stage's [`crate::cluster::VirtualNode`] and run
+/// the exact `SimStages` transform — so a wire run is bit-identical to
+/// the in-process run and charges the same simulated milliseconds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimStageSpec {
+    pub stage: u32,
+    pub node_id: u32,
+    pub name: String,
+    pub cpu_fraction: f64,
+    pub mem_limit_mb: f64,
+    pub link_latency_ms: f64,
+    pub link_bandwidth_mbps: f64,
+    pub time_scale: f64,
+    pub page_factor: f64,
+    pub runtime_overhead_mb: f64,
+    pub nominal_ms: f64,
+}
+
+impl SimStageSpec {
+    /// One spec per CPU share — the exact mirror of
+    /// `SimStages::heterogeneous` (same node names, memory, default LAN
+    /// link, and sim parameters), so an agent chain deployed from these
+    /// specs reproduces the in-process chain bit for bit.
+    pub fn heterogeneous(cpu_shares: &[f64], nominal_ms: f64) -> Vec<SimStageSpec> {
+        cpu_shares
+            .iter()
+            .enumerate()
+            .map(|(i, &cpu)| SimStageSpec {
+                stage: i as u32,
+                node_id: i as u32,
+                name: format!("sim-{i}"),
+                cpu_fraction: cpu,
+                mem_limit_mb: 1024.0,
+                link_latency_ms: 1.0,
+                link_bandwidth_mbps: 1000.0,
+                time_scale: 1.0,
+                page_factor: 4.0,
+                runtime_overhead_mb: 0.0,
+                nominal_ms,
+            })
+            .collect()
+    }
+
+    pub fn node_spec(&self) -> crate::cluster::NodeSpec {
+        crate::cluster::NodeSpec::new(
+            &self.name,
+            self.cpu_fraction,
+            self.mem_limit_mb,
+        )
+        .with_link(crate::cluster::LinkSpec::new(
+            self.link_latency_ms,
+            self.link_bandwidth_mbps,
+        ))
+    }
+
+    pub fn sim_params(&self) -> crate::cluster::SimParams {
+        crate::cluster::SimParams {
+            time_scale: self.time_scale,
+            page_factor: self.page_factor,
+            runtime_overhead_mb: self.runtime_overhead_mb,
+        }
+    }
+
+    /// The agent-side virtual node this spec describes.
+    pub fn virtual_node(&self) -> crate::cluster::VirtualNode {
+        crate::cluster::VirtualNode::new(
+            self.node_id as usize,
+            self.node_spec(),
+            self.sim_params(),
+        )
+    }
+}
+
+/// Deployment order for one real-artifact stage: the agent loads blocks
+/// `[block_start, block_end)` of the manifest under its local
+/// `artifacts_dir` into an executor on a virtual node built from the
+/// same fields as [`SimStageSpec`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockStageSpec {
+    pub stage: u32,
+    pub node_id: u32,
+    pub name: String,
+    pub cpu_fraction: f64,
+    pub mem_limit_mb: f64,
+    pub link_latency_ms: f64,
+    pub link_bandwidth_mbps: f64,
+    pub time_scale: f64,
+    pub page_factor: f64,
+    pub runtime_overhead_mb: f64,
+    /// Agent-local artifacts directory holding `manifest.json`.
+    pub artifacts_dir: String,
+    pub block_start: u32,
+    pub block_end: u32,
+    pub batch: u32,
+    /// Working-set bytes to reserve on the agent's node.
+    pub mem_reserve: u64,
+}
+
+impl BlockStageSpec {
+    pub fn node_spec(&self) -> crate::cluster::NodeSpec {
+        crate::cluster::NodeSpec::new(
+            &self.name,
+            self.cpu_fraction,
+            self.mem_limit_mb,
+        )
+        .with_link(crate::cluster::LinkSpec::new(
+            self.link_latency_ms,
+            self.link_bandwidth_mbps,
+        ))
+    }
+
+    pub fn sim_params(&self) -> crate::cluster::SimParams {
+        crate::cluster::SimParams {
+            time_scale: self.time_scale,
+            page_factor: self.page_factor,
+            runtime_overhead_mb: self.runtime_overhead_mb,
+        }
+    }
+
+    pub fn virtual_node(&self) -> crate::cluster::VirtualNode {
+        crate::cluster::VirtualNode::new(
+            self.node_id as usize,
+            self.node_spec(),
+            self.sim_params(),
+        )
+    }
+}
+
+/// What a stage deployment ships: a synthetic stage or a real block
+/// range.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DeploySpec {
+    Sim(SimStageSpec),
+    Blocks(BlockStageSpec),
+}
+
+impl DeploySpec {
+    pub fn stage(&self) -> u32 {
+        match self {
+            DeploySpec::Sim(s) => s.stage,
+            DeploySpec::Blocks(s) => s.stage,
+        }
+    }
+
+    pub fn node_id(&self) -> u32 {
+        match self {
+            DeploySpec::Sim(s) => s.node_id,
+            DeploySpec::Blocks(s) => s.node_id,
+        }
+    }
+
+    /// Coordinator-side mirror node: reproduces the stage's link model
+    /// (the pure `LinkSpec::transfer_ms` formula) for `comm_in` /
+    /// `comm_out` accounting identical to the in-process chain.
+    pub fn virtual_node(&self) -> crate::cluster::VirtualNode {
+        match self {
+            DeploySpec::Sim(s) => s.virtual_node(),
+            DeploySpec::Blocks(s) => s.virtual_node(),
+        }
+    }
+}
+
+/// One protocol message.
+#[derive(Debug)]
+pub enum Frame {
+    Hello { version: u16 },
+    HelloAck { version: u16 },
+    DeploySim(SimStageSpec),
+    DeployBlocks(BlockStageSpec),
+    DeployAck { stage: u32 },
+    Execute { seq: u64, tensor: Tensor },
+    ExecuteOk { seq: u64, compute_ms: f64, tensor: Tensor },
+    ExecuteErr { seq: u64, message: String },
+    Shutdown,
+}
+
+impl Frame {
+    /// Short name for diagnostics ("unexpected frame ...").
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            Frame::Hello { .. } => "Hello",
+            Frame::HelloAck { .. } => "HelloAck",
+            Frame::DeploySim(_) => "DeploySim",
+            Frame::DeployBlocks(_) => "DeployBlocks",
+            Frame::DeployAck { .. } => "DeployAck",
+            Frame::Execute { .. } => "Execute",
+            Frame::ExecuteOk { .. } => "ExecuteOk",
+            Frame::ExecuteErr { .. } => "ExecuteErr",
+            Frame::Shutdown => "Shutdown",
+        }
+    }
+}
+
+// ---- little-endian scalar helpers ------------------------------------
+
+fn put_u16(buf: &mut Vec<u8>, v: u16) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) -> Result<()> {
+    anyhow::ensure!(
+        s.len() <= u16::MAX as usize,
+        "string of {} bytes too long for the wire (max {})",
+        s.len(),
+        u16::MAX
+    );
+    put_u16(buf, s.len() as u16);
+    buf.extend_from_slice(s.as_bytes());
+    Ok(())
+}
+
+/// Bounds-checked read cursor over one frame body.
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(buf: &'a [u8]) -> Cur<'a> {
+        Cur { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .with_context(|| {
+                format!(
+                    "truncated frame body: need {n} bytes at offset {} of {}",
+                    self.pos,
+                    self.buf.len()
+                )
+            })?;
+        let out = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.u16()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).context("invalid UTF-8 string on the wire")
+    }
+
+    fn done(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.pos == self.buf.len(),
+            "{} trailing bytes after frame body",
+            self.buf.len() - self.pos
+        );
+        Ok(())
+    }
+}
+
+// ---- f32 <-> bytes (LE wire order) -----------------------------------
+
+#[cfg(target_endian = "little")]
+fn f32s_as_bytes(data: &[f32]) -> &[u8] {
+    // Safety: u8 has alignment 1 and every byte pattern is valid; the
+    // slice covers exactly the f32 storage.
+    unsafe {
+        std::slice::from_raw_parts(
+            data.as_ptr().cast::<u8>(),
+            std::mem::size_of_val(data),
+        )
+    }
+}
+
+#[cfg(target_endian = "little")]
+fn encode_f32s(data: &[f32]) -> std::borrow::Cow<'_, [u8]> {
+    std::borrow::Cow::Borrowed(f32s_as_bytes(data))
+}
+
+#[cfg(not(target_endian = "little"))]
+fn encode_f32s(data: &[f32]) -> std::borrow::Cow<'_, [u8]> {
+    let mut out = Vec::with_capacity(std::mem::size_of_val(data));
+    for v in data {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    std::borrow::Cow::Owned(out)
+}
+
+/// Read `n` f32s straight into a pooled buffer.
+fn read_f32s_pooled(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
+    let mut data = BufferPool::global().take(n);
+    data.resize(n, 0.0);
+    #[cfg(target_endian = "little")]
+    {
+        let byte_len = n * std::mem::size_of::<f32>();
+        // Safety: same layout argument as `f32s_as_bytes`, mutably.
+        let bytes = unsafe {
+            std::slice::from_raw_parts_mut(data.as_mut_ptr().cast::<u8>(), byte_len)
+        };
+        r.read_exact(bytes).context("mid-frame EOF in tensor data")?;
+    }
+    #[cfg(not(target_endian = "little"))]
+    {
+        let mut b = [0u8; 4];
+        for v in data.iter_mut() {
+            r.read_exact(&mut b).context("mid-frame EOF in tensor data")?;
+            *v = f32::from_le_bytes(b);
+        }
+    }
+    Ok(data)
+}
+
+// ---- encode ----------------------------------------------------------
+
+/// Tensor meta (`ndim` + dims) appended to `buf`; returns the data byte
+/// count the frame must carry after it.
+fn put_tensor_meta(buf: &mut Vec<u8>, t: &Tensor) -> Result<usize> {
+    anyhow::ensure!(
+        !t.shape.is_empty() && t.shape.len() <= u8::MAX as usize,
+        "tensor rank {} not encodable (need 1..=255 dims)",
+        t.shape.len()
+    );
+    buf.push(t.shape.len() as u8);
+    for &d in &t.shape {
+        anyhow::ensure!(
+            d <= u32::MAX as usize,
+            "tensor dimension {d} too large for the wire"
+        );
+        put_u32(buf, d as u32);
+    }
+    Ok(std::mem::size_of_val(t.data()))
+}
+
+/// Write `head` then `tail` with a vectored write where possible; the
+/// remainder of a partial vectored write is finished with `write_all`.
+fn write_all_vectored(
+    w: &mut impl Write,
+    mut head: &[u8],
+    mut tail: &[u8],
+) -> io::Result<()> {
+    while !head.is_empty() {
+        let n = w.write_vectored(&[IoSlice::new(head), IoSlice::new(tail)])?;
+        if n == 0 {
+            return Err(io::Error::from(io::ErrorKind::WriteZero));
+        }
+        if n >= head.len() {
+            tail = &tail[n - head.len()..];
+            head = &[];
+        } else {
+            head = &head[n..];
+        }
+    }
+    w.write_all(tail)
+}
+
+/// Serialize one frame into `w`. Tensor payloads go out as a header
+/// write plus a vectored write of the tensor's view slice (no copy of
+/// the activation on little-endian targets). Counts the frame in
+/// [`crate::metrics::wire`].
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> Result<()> {
+    let t0 = Instant::now();
+    // Header: 4-byte length placeholder, kind, then the scalar body.
+    let mut head: Vec<u8> = Vec::with_capacity(64);
+    head.extend_from_slice(&[0, 0, 0, 0]);
+    let mut tensor: Option<&Tensor> = None;
+    match frame {
+        Frame::Hello { version } => {
+            head.push(KIND_HELLO);
+            put_u32(&mut head, WIRE_MAGIC);
+            put_u16(&mut head, *version);
+        }
+        Frame::HelloAck { version } => {
+            head.push(KIND_HELLO_ACK);
+            put_u16(&mut head, *version);
+        }
+        Frame::DeploySim(s) => {
+            head.push(KIND_DEPLOY_SIM);
+            put_u32(&mut head, s.stage);
+            put_u32(&mut head, s.node_id);
+            put_str(&mut head, &s.name)?;
+            for v in [
+                s.cpu_fraction,
+                s.mem_limit_mb,
+                s.link_latency_ms,
+                s.link_bandwidth_mbps,
+                s.time_scale,
+                s.page_factor,
+                s.runtime_overhead_mb,
+                s.nominal_ms,
+            ] {
+                put_f64(&mut head, v);
+            }
+        }
+        Frame::DeployBlocks(s) => {
+            head.push(KIND_DEPLOY_BLOCKS);
+            put_u32(&mut head, s.stage);
+            put_u32(&mut head, s.node_id);
+            put_str(&mut head, &s.name)?;
+            for v in [
+                s.cpu_fraction,
+                s.mem_limit_mb,
+                s.link_latency_ms,
+                s.link_bandwidth_mbps,
+                s.time_scale,
+                s.page_factor,
+                s.runtime_overhead_mb,
+            ] {
+                put_f64(&mut head, v);
+            }
+            put_str(&mut head, &s.artifacts_dir)?;
+            put_u32(&mut head, s.block_start);
+            put_u32(&mut head, s.block_end);
+            put_u32(&mut head, s.batch);
+            put_u64(&mut head, s.mem_reserve);
+        }
+        Frame::DeployAck { stage } => {
+            head.push(KIND_DEPLOY_ACK);
+            put_u32(&mut head, *stage);
+        }
+        Frame::Execute { seq, tensor: t } => {
+            head.push(KIND_EXECUTE);
+            put_u64(&mut head, *seq);
+            put_tensor_meta(&mut head, t)?;
+            tensor = Some(t);
+        }
+        Frame::ExecuteOk { seq, compute_ms, tensor: t } => {
+            head.push(KIND_EXECUTE_OK);
+            put_u64(&mut head, *seq);
+            put_f64(&mut head, *compute_ms);
+            put_tensor_meta(&mut head, t)?;
+            tensor = Some(t);
+        }
+        Frame::ExecuteErr { seq, message } => {
+            head.push(KIND_EXECUTE_ERR);
+            put_u64(&mut head, *seq);
+            put_str(&mut head, message)?;
+        }
+        Frame::Shutdown => {
+            head.push(KIND_SHUTDOWN);
+        }
+    }
+    let data = match tensor {
+        Some(t) => encode_f32s(t.data()),
+        None => std::borrow::Cow::Borrowed(&[][..]),
+    };
+    let body = head.len() - 4 + data.len();
+    anyhow::ensure!(
+        body <= MAX_FRAME_BYTES as usize,
+        "frame of {body} bytes exceeds MAX_FRAME_BYTES ({MAX_FRAME_BYTES})"
+    );
+    head[..4].copy_from_slice(&(body as u32).to_le_bytes());
+    if data.is_empty() {
+        w.write_all(&head)
+    } else {
+        write_all_vectored(w, &head, &data)
+    }
+    .with_context(|| format!("writing {} frame", frame.kind_name()))?;
+    crate::metrics::wire::count_tx(
+        (4 + body) as u64,
+        t0.elapsed().as_nanos() as u64,
+    );
+    Ok(())
+}
+
+// ---- decode ----------------------------------------------------------
+
+/// Decode the streamed body of an Execute / ExecuteOk frame: the scalar
+/// prefix and dims are read first, validated against `body_len`, and
+/// only then is the (pooled) data buffer sized and filled — a corrupt
+/// length can never drive an allocation.
+fn read_tensor_body(
+    r: &mut impl Read,
+    body_len: usize,
+    with_ms: bool,
+) -> Result<(u64, f64, Tensor)> {
+    let fixed = 8 + if with_ms { 8 } else { 0 } + 1;
+    anyhow::ensure!(
+        body_len >= fixed,
+        "tensor frame body of {body_len} bytes shorter than its {fixed}-byte prefix"
+    );
+    let mut prefix = [0u8; 17];
+    r.read_exact(&mut prefix[..fixed])
+        .context("mid-frame EOF in tensor prefix")?;
+    let mut cur = Cur::new(&prefix[..fixed]);
+    let seq = cur.u64()?;
+    let compute_ms = if with_ms { cur.f64()? } else { 0.0 };
+    let ndim = cur.u8()? as usize;
+    anyhow::ensure!(ndim >= 1, "tensor frame with zero dimensions");
+    let dims_bytes = ndim * 4;
+    anyhow::ensure!(
+        body_len >= fixed + dims_bytes,
+        "tensor frame body of {body_len} bytes truncates its {ndim} dims"
+    );
+    let mut dim_buf = vec![0u8; dims_bytes];
+    r.read_exact(&mut dim_buf)
+        .context("mid-frame EOF in tensor dims")?;
+    let mut cur = Cur::new(&dim_buf);
+    let mut shape = Vec::with_capacity(ndim);
+    let mut elems: usize = 1;
+    for _ in 0..ndim {
+        let d = cur.u32()? as usize;
+        elems = elems
+            .checked_mul(d)
+            .context("tensor dimension product overflows")?;
+        shape.push(d);
+    }
+    let expected = (fixed + dims_bytes) as u64 + (elems as u64) * 4;
+    anyhow::ensure!(
+        expected == body_len as u64,
+        "tensor frame length mismatch: body is {body_len} bytes but shape \
+         {shape:?} needs {expected}"
+    );
+    let data = read_f32s_pooled(r, elems)?;
+    let tensor = Tensor::new(shape, data)?;
+    Ok((seq, compute_ms, tensor))
+}
+
+/// Read one frame from `r`. Returns an error on malformed or truncated
+/// input (including EOF mid-frame); EOF *before* a frame starts also
+/// errors — callers treat it as the peer having gone away. Counts the
+/// frame in [`crate::metrics::wire`].
+pub fn read_frame(r: &mut impl Read) -> Result<Frame> {
+    let t0 = Instant::now();
+    let mut len4 = [0u8; 4];
+    r.read_exact(&mut len4).context("reading frame length")?;
+    let len = u32::from_le_bytes(len4);
+    anyhow::ensure!(len >= 1, "zero-length frame");
+    anyhow::ensure!(
+        len <= MAX_FRAME_BYTES,
+        "frame length {len} exceeds MAX_FRAME_BYTES ({MAX_FRAME_BYTES})"
+    );
+    let mut kind = [0u8; 1];
+    r.read_exact(&mut kind).context("reading frame kind")?;
+    let body_len = (len - 1) as usize;
+    let frame = match kind[0] {
+        KIND_EXECUTE => {
+            let (seq, _, tensor) = read_tensor_body(r, body_len, false)?;
+            Frame::Execute { seq, tensor }
+        }
+        KIND_EXECUTE_OK => {
+            let (seq, compute_ms, tensor) = read_tensor_body(r, body_len, true)?;
+            Frame::ExecuteOk { seq, compute_ms, tensor }
+        }
+        k => {
+            // Small scalar frames: read the body, then parse it fully.
+            let mut body = vec![0u8; body_len];
+            r.read_exact(&mut body).context("mid-frame EOF")?;
+            let mut cur = Cur::new(&body);
+            let frame = match k {
+                KIND_HELLO => {
+                    let magic = cur.u32()?;
+                    anyhow::ensure!(
+                        magic == WIRE_MAGIC,
+                        "bad protocol magic {magic:#010x} (want {WIRE_MAGIC:#010x})"
+                    );
+                    Frame::Hello { version: cur.u16()? }
+                }
+                KIND_HELLO_ACK => Frame::HelloAck { version: cur.u16()? },
+                KIND_DEPLOY_SIM => {
+                    let stage = cur.u32()?;
+                    let node_id = cur.u32()?;
+                    let name = cur.str()?;
+                    Frame::DeploySim(SimStageSpec {
+                        stage,
+                        node_id,
+                        name,
+                        cpu_fraction: cur.f64()?,
+                        mem_limit_mb: cur.f64()?,
+                        link_latency_ms: cur.f64()?,
+                        link_bandwidth_mbps: cur.f64()?,
+                        time_scale: cur.f64()?,
+                        page_factor: cur.f64()?,
+                        runtime_overhead_mb: cur.f64()?,
+                        nominal_ms: cur.f64()?,
+                    })
+                }
+                KIND_DEPLOY_BLOCKS => {
+                    let stage = cur.u32()?;
+                    let node_id = cur.u32()?;
+                    let name = cur.str()?;
+                    let cpu_fraction = cur.f64()?;
+                    let mem_limit_mb = cur.f64()?;
+                    let link_latency_ms = cur.f64()?;
+                    let link_bandwidth_mbps = cur.f64()?;
+                    let time_scale = cur.f64()?;
+                    let page_factor = cur.f64()?;
+                    let runtime_overhead_mb = cur.f64()?;
+                    let artifacts_dir = cur.str()?;
+                    Frame::DeployBlocks(BlockStageSpec {
+                        stage,
+                        node_id,
+                        name,
+                        cpu_fraction,
+                        mem_limit_mb,
+                        link_latency_ms,
+                        link_bandwidth_mbps,
+                        time_scale,
+                        page_factor,
+                        runtime_overhead_mb,
+                        artifacts_dir,
+                        block_start: cur.u32()?,
+                        block_end: cur.u32()?,
+                        batch: cur.u32()?,
+                        mem_reserve: cur.u64()?,
+                    })
+                }
+                KIND_DEPLOY_ACK => Frame::DeployAck { stage: cur.u32()? },
+                KIND_EXECUTE_ERR => Frame::ExecuteErr {
+                    seq: cur.u64()?,
+                    message: cur.str()?,
+                },
+                KIND_SHUTDOWN => Frame::Shutdown,
+                other => bail!("unknown frame kind {other}"),
+            };
+            cur.done()?;
+            frame
+        }
+    };
+    crate::metrics::wire::count_rx(
+        (4 + len) as u64,
+        t0.elapsed().as_nanos() as u64,
+    );
+    Ok(frame)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn roundtrip(frame: &Frame) -> Frame {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, frame).unwrap();
+        let mut slice = buf.as_slice();
+        let out = read_frame(&mut slice).unwrap();
+        assert!(slice.is_empty(), "decoder left {} bytes", slice.len());
+        out
+    }
+
+    fn assert_tensor_bits(a: &Tensor, b: &Tensor) {
+        assert_eq!(a.shape, b.shape);
+        assert_eq!(a.data().len(), b.data().len());
+        for (x, y) in a.data().iter().zip(b.data()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn scalar_frames_roundtrip() {
+        match roundtrip(&Frame::Hello { version: 7 }) {
+            Frame::Hello { version: 7 } => {}
+            f => panic!("got {f:?}"),
+        }
+        match roundtrip(&Frame::HelloAck { version: WIRE_VERSION }) {
+            Frame::HelloAck { version } => assert_eq!(version, WIRE_VERSION),
+            f => panic!("got {f:?}"),
+        }
+        match roundtrip(&Frame::DeployAck { stage: 3 }) {
+            Frame::DeployAck { stage: 3 } => {}
+            f => panic!("got {f:?}"),
+        }
+        match roundtrip(&Frame::ExecuteErr { seq: 42, message: "boom: xyz".into() }) {
+            Frame::ExecuteErr { seq, message } => {
+                assert_eq!(seq, 42);
+                assert_eq!(message, "boom: xyz");
+            }
+            f => panic!("got {f:?}"),
+        }
+        match roundtrip(&Frame::Shutdown) {
+            Frame::Shutdown => {}
+            f => panic!("got {f:?}"),
+        }
+    }
+
+    #[test]
+    fn deploy_specs_roundtrip() {
+        let sim = SimStageSpec::heterogeneous(&[1.0, 0.6, 0.4], 4.0);
+        for spec in &sim {
+            match roundtrip(&Frame::DeploySim(spec.clone())) {
+                Frame::DeploySim(back) => assert_eq!(&back, spec),
+                f => panic!("got {f:?}"),
+            }
+        }
+        let blocks = BlockStageSpec {
+            stage: 1,
+            node_id: 2,
+            name: "edge-med".into(),
+            cpu_fraction: 0.6,
+            mem_limit_mb: 512.0,
+            link_latency_ms: 1.5,
+            link_bandwidth_mbps: 800.0,
+            time_scale: 1.0,
+            page_factor: 4.0,
+            runtime_overhead_mb: 384.0,
+            artifacts_dir: "artifacts".into(),
+            block_start: 3,
+            block_end: 7,
+            batch: 4,
+            mem_reserve: 12_345_678,
+        };
+        match roundtrip(&Frame::DeployBlocks(blocks.clone())) {
+            Frame::DeployBlocks(back) => assert_eq!(back, blocks),
+            f => panic!("got {f:?}"),
+        }
+    }
+
+    #[test]
+    fn tensor_frames_roundtrip_randomized() {
+        // Random shapes, including views at non-zero base offsets,
+        // 1-row tail chunks, and single-element tensors.
+        let mut rng = Rng::new(0xC0DEC);
+        for case in 0..60 {
+            let ndim = rng.range(1, 4);
+            let shape: Vec<usize> =
+                (0..ndim).map(|_| rng.range(1, 9)).collect();
+            let n: usize = shape.iter().product();
+            let data: Vec<f32> =
+                (0..n).map(|_| rng.f32_range(-100.0, 100.0)).collect();
+            let full = Tensor::new(shape.clone(), data).unwrap();
+            // Alternate between the full tensor and a row view of it
+            // (views get non-zero buffer bases and tail chunks).
+            let t = if case % 3 == 0 && shape[0] > 1 {
+                let start = rng.below(shape[0] - 1);
+                let end = rng.range(start + 1, shape[0]);
+                full.view_rows(start..end).unwrap()
+            } else {
+                full.clone()
+            };
+            let seq = rng.next_u64();
+            match roundtrip(&Frame::Execute { seq, tensor: t.clone() }) {
+                Frame::Execute { seq: s, tensor: back } => {
+                    assert_eq!(s, seq);
+                    assert_tensor_bits(&t, &back);
+                }
+                f => panic!("got {f:?}"),
+            }
+            match roundtrip(&Frame::ExecuteOk {
+                seq,
+                compute_ms: 12.625,
+                tensor: t.clone(),
+            }) {
+                Frame::ExecuteOk { seq: s, compute_ms, tensor: back } => {
+                    assert_eq!(s, seq);
+                    assert_eq!(compute_ms, 12.625);
+                    assert_tensor_bits(&t, &back);
+                }
+                f => panic!("got {f:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn nonzero_view_base_encodes_view_contents_only() {
+        let full = Tensor::new(
+            vec![4, 3],
+            (0..12).map(|i| i as f32).collect(),
+        )
+        .unwrap();
+        let view = full.view_rows(2..4).unwrap();
+        assert_eq!(view.offset(), 6);
+        match roundtrip(&Frame::Execute { seq: 1, tensor: view.clone() }) {
+            Frame::Execute { tensor: back, .. } => {
+                assert_eq!(back.shape, vec![2, 3]);
+                assert_eq!(back.data(), &[6.0, 7.0, 8.0, 9.0, 10.0, 11.0]);
+                // The decoded tensor owns its own full buffer.
+                assert_eq!(back.offset(), 0);
+            }
+            f => panic!("got {f:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_inputs_error_not_panic() {
+        // Build one valid Execute frame, then feed every proper prefix
+        // of it: all must error (mid-frame EOF at any point), none may
+        // panic.
+        let t = Tensor::new(vec![2, 3], vec![1.0; 6]).unwrap();
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::Execute { seq: 9, tensor: t }).unwrap();
+        for cut in 0..buf.len() {
+            let mut slice = &buf[..cut];
+            assert!(
+                read_frame(&mut slice).is_err(),
+                "prefix of {cut}/{} bytes decoded",
+                buf.len()
+            );
+        }
+        // And the full frame still decodes.
+        let mut slice = buf.as_slice();
+        assert!(read_frame(&mut slice).is_ok());
+    }
+
+    #[test]
+    fn oversized_and_malformed_lengths_error() {
+        // Oversized length prefix: rejected before any allocation.
+        let mut raw = u32::MAX.to_le_bytes().to_vec();
+        raw.push(KIND_SHUTDOWN);
+        assert!(read_frame(&mut raw.as_slice()).is_err());
+        // Zero-length frame.
+        let raw = 0u32.to_le_bytes().to_vec();
+        assert!(read_frame(&mut raw.as_slice()).is_err());
+        // Unknown kind.
+        let mut raw = 1u32.to_le_bytes().to_vec();
+        raw.push(200);
+        assert!(read_frame(&mut raw.as_slice()).is_err());
+        // Declared length larger than the actual body (EOF mid-body).
+        let mut raw = 64u32.to_le_bytes().to_vec();
+        raw.push(KIND_DEPLOY_ACK);
+        raw.extend_from_slice(&3u32.to_le_bytes());
+        assert!(read_frame(&mut raw.as_slice()).is_err());
+        // Trailing garbage after a well-formed body.
+        let mut raw = 6u32.to_le_bytes().to_vec();
+        raw.push(KIND_DEPLOY_ACK);
+        raw.extend_from_slice(&3u32.to_le_bytes());
+        raw.push(0xFF);
+        assert!(read_frame(&mut raw.as_slice()).is_err());
+    }
+
+    #[test]
+    fn tensor_dim_overflow_errors() {
+        // Hand-craft an Execute frame whose dims multiply past usize:
+        // 4 dims of u32::MAX each. The decoder must reject it before
+        // sizing any buffer.
+        let ndim = 4u8;
+        let body_len = 8 + 1 + ndim as usize * 4; // seq + ndim + dims (no data)
+        let mut raw = (body_len as u32 + 1).to_le_bytes().to_vec();
+        raw.push(KIND_EXECUTE);
+        raw.extend_from_slice(&1u64.to_le_bytes());
+        raw.push(ndim);
+        for _ in 0..ndim {
+            raw.extend_from_slice(&u32::MAX.to_le_bytes());
+        }
+        let err = read_frame(&mut raw.as_slice());
+        assert!(err.is_err());
+        // A shape/length mismatch (valid dims, missing data) also errors.
+        let mut raw = (8u32 + 1 + 4 + 1).to_le_bytes().to_vec();
+        raw.push(KIND_EXECUTE);
+        raw.extend_from_slice(&1u64.to_le_bytes());
+        raw.push(1);
+        raw.extend_from_slice(&100u32.to_le_bytes());
+        raw.push(0);
+        assert!(read_frame(&mut raw.as_slice()).is_err());
+        // Zero-rank tensor frames are malformed.
+        let mut raw = (8u32 + 1).to_le_bytes().to_vec();
+        raw.push(KIND_EXECUTE);
+        raw.extend_from_slice(&1u64.to_le_bytes());
+        raw.push(0);
+        assert!(read_frame(&mut raw.as_slice()).is_err());
+    }
+
+    #[test]
+    fn hello_rejects_bad_magic() {
+        let mut raw = 7u32.to_le_bytes().to_vec();
+        raw.push(KIND_HELLO);
+        raw.extend_from_slice(&0xDEAD_BEEFu32.to_le_bytes());
+        raw.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+        assert!(read_frame(&mut raw.as_slice()).is_err());
+    }
+
+    #[test]
+    fn wire_counters_move() {
+        let before = crate::metrics::wire::snapshot();
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::Shutdown).unwrap();
+        read_frame(&mut buf.as_slice()).unwrap();
+        let delta = crate::metrics::wire::snapshot().since(&before);
+        assert!(delta.frames_tx >= 1);
+        assert!(delta.frames_rx >= 1);
+        assert!(delta.bytes_tx >= 5);
+        assert_eq!(delta.bytes_tx, delta.bytes_rx);
+    }
+}

@@ -1,0 +1,637 @@
+//! Pluggable transport layer: coordinator <-> node-agent plumbing.
+//!
+//! The pipeline engine drives stages through the [`StageExec`] seam and
+//! never cares where a stage runs. This module supplies the two ends of
+//! that seam for distributed deployments:
+//!
+//! * [`InprocTransport`] — the default: pure delegation to any local
+//!   [`StageExec`] chain, zero added copies, bit-identical to calling
+//!   the chain directly.
+//! * [`WireStages`] — each stage is hosted by a remote node agent
+//!   ([`agent::NodeAgent`], the `amp4ec node` subcommand) and driven
+//!   over a length-prefixed binary protocol ([`frame`]) on a Unix
+//!   domain socket or TCP connection.
+//!
+//! The engine runs one driver thread per stage, so `WireStages` keeps
+//! one connection per stage (agents are assigned round-robin when there
+//! are fewer agents than stages) and serializes the blocking
+//! request/response round-trip per connection — pipeline parallelism
+//! across stages is preserved exactly as in-process. A dropped
+//! connection fails the in-flight `execute` (the engine maps that to a
+//! per-batch failure) and marks the stage dead so later micro-batches
+//! fail fast instead of hanging.
+
+pub mod agent;
+pub mod frame;
+
+use std::fmt;
+use std::io::{self, Read, Write};
+use std::net::TcpStream;
+use std::os::unix::net::UnixStream;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::cluster::{SimParams, VirtualNode};
+use crate::deployer::Deployment;
+use crate::pipeline::engine::{node_comm_in, node_comm_out, StageExec};
+use crate::runtime::Tensor;
+
+use frame::{BlockStageSpec, DeploySpec, Frame, SimStageSpec, WIRE_VERSION};
+
+/// Which transport carries stage traffic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransportKind {
+    /// Stages run in the coordinator process (the default).
+    Inproc,
+    /// Stages run in node agents reached over Unix domain sockets.
+    Uds,
+    /// Stages run in node agents reached over TCP.
+    Tcp,
+}
+
+impl TransportKind {
+    pub fn parse(s: &str) -> Result<TransportKind> {
+        match s {
+            "inproc" => Ok(TransportKind::Inproc),
+            "uds" | "unix" => Ok(TransportKind::Uds),
+            "tcp" => Ok(TransportKind::Tcp),
+            other => bail!(
+                "unknown transport `{other}` (expected `inproc`, `uds`, or `tcp`)"
+            ),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportKind::Inproc => "inproc",
+            TransportKind::Uds => "uds",
+            TransportKind::Tcp => "tcp",
+        }
+    }
+}
+
+impl fmt::Display for TransportKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Where one node agent listens.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AgentAddr {
+    Uds(PathBuf),
+    Tcp(String),
+}
+
+impl AgentAddr {
+    /// Parse an address for the given transport kind, with actionable
+    /// errors (e.g. a TCP address missing its port).
+    pub fn parse(kind: TransportKind, s: &str) -> Result<AgentAddr> {
+        let s = s.trim();
+        anyhow::ensure!(!s.is_empty(), "empty agent address");
+        match kind {
+            TransportKind::Inproc => bail!(
+                "transport `inproc` takes no agent addresses; drop `agents` \
+                 or set the transport to uds/tcp"
+            ),
+            TransportKind::Uds => Ok(AgentAddr::Uds(PathBuf::from(s))),
+            TransportKind::Tcp => {
+                anyhow::ensure!(
+                    s.contains(':'),
+                    "tcp agent address `{s}` must be host:port"
+                );
+                Ok(AgentAddr::Tcp(s.to_string()))
+            }
+        }
+    }
+
+    /// One connection attempt.
+    pub fn connect(&self) -> Result<WireStream> {
+        match self {
+            AgentAddr::Uds(path) => {
+                let s = UnixStream::connect(path).with_context(|| {
+                    format!("connecting to agent at uds:{}", path.display())
+                })?;
+                Ok(WireStream::Unix(s))
+            }
+            AgentAddr::Tcp(addr) => {
+                let s = TcpStream::connect(addr.as_str())
+                    .with_context(|| format!("connecting to agent at tcp:{addr}"))?;
+                // Activation frames are latency-sensitive round-trips.
+                let _ = s.set_nodelay(true);
+                Ok(WireStream::Tcp(s))
+            }
+        }
+    }
+
+    /// Poll-connect until `timeout` elapses — agents may still be
+    /// binding their listener when the coordinator starts dialing.
+    pub fn connect_retry(&self, timeout: Duration) -> Result<WireStream> {
+        let start = Instant::now();
+        loop {
+            match self.connect() {
+                Ok(s) => return Ok(s),
+                Err(e) if start.elapsed() >= timeout => {
+                    return Err(e.context(format!(
+                        "agent at {self} not reachable within {timeout:?}"
+                    )));
+                }
+                Err(_) => std::thread::sleep(Duration::from_millis(10)),
+            }
+        }
+    }
+}
+
+impl fmt::Display for AgentAddr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AgentAddr::Uds(p) => write!(f, "uds:{}", p.display()),
+            AgentAddr::Tcp(a) => write!(f, "tcp:{a}"),
+        }
+    }
+}
+
+/// One connected socket of either flavor.
+#[derive(Debug)]
+pub enum WireStream {
+    Unix(UnixStream),
+    Tcp(TcpStream),
+}
+
+impl WireStream {
+    pub fn try_clone(&self) -> io::Result<WireStream> {
+        match self {
+            WireStream::Unix(s) => s.try_clone().map(WireStream::Unix),
+            WireStream::Tcp(s) => s.try_clone().map(WireStream::Tcp),
+        }
+    }
+
+    /// Shut down both directions; errors (already-closed peers) are
+    /// ignored — this is only ever a best-effort unblock/teardown.
+    pub fn shutdown(&self) {
+        match self {
+            WireStream::Unix(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+            WireStream::Tcp(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+        }
+    }
+}
+
+impl Read for WireStream {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            WireStream::Unix(s) => s.read(buf),
+            WireStream::Tcp(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for WireStream {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            WireStream::Unix(s) => s.write(buf),
+            WireStream::Tcp(s) => s.write(buf),
+        }
+    }
+
+    fn write_vectored(&mut self, bufs: &[io::IoSlice<'_>]) -> io::Result<usize> {
+        match self {
+            WireStream::Unix(s) => s.write_vectored(bufs),
+            WireStream::Tcp(s) => s.write_vectored(bufs),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            WireStream::Unix(s) => s.flush(),
+            WireStream::Tcp(s) => s.flush(),
+        }
+    }
+}
+
+/// A [`StageExec`] whose stages may live behind a transport. The engine
+/// only sees `StageExec`; this trait adds the introspection the server
+/// and CLI report need.
+pub trait Transport: StageExec {
+    fn kind(&self) -> TransportKind;
+    /// Human-readable endpoint hosting `stage` (e.g. `inproc`,
+    /// `uds:/tmp/a.sock`).
+    fn endpoint(&self, stage: usize) -> String;
+}
+
+/// The default transport: pure delegation to a local chain. No added
+/// copies, no added locks — bit-identical to driving `inner` directly.
+pub struct InprocTransport<S: StageExec> {
+    inner: S,
+}
+
+impl<S: StageExec> InprocTransport<S> {
+    pub fn new(inner: S) -> InprocTransport<S> {
+        InprocTransport { inner }
+    }
+
+    pub fn inner(&self) -> &S {
+        &self.inner
+    }
+}
+
+impl<S: StageExec> StageExec for InprocTransport<S> {
+    fn num_stages(&self) -> usize {
+        self.inner.num_stages()
+    }
+
+    fn node_id(&self, stage: usize) -> usize {
+        self.inner.node_id(stage)
+    }
+
+    fn backlog(&self, stage: usize) -> usize {
+        self.inner.backlog(stage)
+    }
+
+    fn comm_in(&self, stage: usize, bytes: u64) -> f64 {
+        self.inner.comm_in(stage, bytes)
+    }
+
+    fn comm_out(&self, bytes: u64) -> f64 {
+        self.inner.comm_out(bytes)
+    }
+
+    fn execute(&self, stage: usize, input: Tensor) -> Result<(Tensor, f64)> {
+        self.inner.execute(stage, input)
+    }
+}
+
+impl<S: StageExec> Transport for InprocTransport<S> {
+    fn kind(&self) -> TransportKind {
+        TransportKind::Inproc
+    }
+
+    fn endpoint(&self, _stage: usize) -> String {
+        "inproc".to_string()
+    }
+}
+
+/// One coordinator-side stage connection.
+struct StageConn {
+    stream: Mutex<WireStream>,
+    seq: AtomicU64,
+    /// Set on any protocol/socket failure: later `execute` calls fail
+    /// fast instead of writing into a broken pipe.
+    dead: AtomicBool,
+    node_id: usize,
+    endpoint: String,
+}
+
+impl StageConn {
+    fn lock(&self) -> MutexGuard<'_, WireStream> {
+        // A poisoned lock means a previous round-trip panicked; the
+        // connection is already marked dead, so the guard is safe to
+        // reuse for teardown.
+        match self.stream.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        }
+    }
+}
+
+/// Remote stage chain: stage `i` is hosted by the agent at
+/// `addrs[i % addrs.len()]`, driven over the [`frame`] protocol.
+///
+/// `comm_in`/`comm_out` run against coordinator-side *mirror* nodes
+/// built from the same specs the agents deployed, so the simulated link
+/// accounting (and its paced sleeps) is identical to the in-process
+/// chain — the wire replaces the compute hop, not the link model.
+pub struct WireStages {
+    kind: TransportKind,
+    conns: Vec<StageConn>,
+    mirrors: Vec<VirtualNode>,
+}
+
+impl WireStages {
+    /// Dial agents and deploy a synthetic (sim) chain mirroring
+    /// `SimStages::heterogeneous(cpu_shares, nominal_ms)`.
+    pub fn connect_sim(
+        addrs: &[AgentAddr],
+        cpu_shares: &[f64],
+        nominal_ms: f64,
+        timeout: Duration,
+    ) -> Result<WireStages> {
+        let specs = SimStageSpec::heterogeneous(cpu_shares, nominal_ms)
+            .into_iter()
+            .map(DeploySpec::Sim)
+            .collect();
+        WireStages::connect(addrs, specs, timeout)
+    }
+
+    /// Dial agents and deploy real block-range stages.
+    pub fn connect_blocks(
+        addrs: &[AgentAddr],
+        specs: Vec<BlockStageSpec>,
+        timeout: Duration,
+    ) -> Result<WireStages> {
+        WireStages::connect(
+            addrs,
+            specs.into_iter().map(DeploySpec::Blocks).collect(),
+            timeout,
+        )
+    }
+
+    /// Dial one connection per stage, handshake, and ship the stage's
+    /// deployment. Fails (with the agent's address in the error) if any
+    /// agent is unreachable, speaks the wrong protocol version, or
+    /// rejects its deployment.
+    pub fn connect(
+        addrs: &[AgentAddr],
+        specs: Vec<DeploySpec>,
+        timeout: Duration,
+    ) -> Result<WireStages> {
+        anyhow::ensure!(!addrs.is_empty(), "no agent addresses to connect to");
+        anyhow::ensure!(!specs.is_empty(), "no stages to deploy");
+        let kind = match &addrs[0] {
+            AgentAddr::Uds(_) => TransportKind::Uds,
+            AgentAddr::Tcp(_) => TransportKind::Tcp,
+        };
+        let mut conns = Vec::with_capacity(specs.len());
+        let mut mirrors = Vec::with_capacity(specs.len());
+        for (i, spec) in specs.into_iter().enumerate() {
+            let addr = &addrs[i % addrs.len()];
+            let mut stream = addr.connect_retry(timeout)?;
+            frame::write_frame(&mut stream, &Frame::Hello { version: WIRE_VERSION })
+                .with_context(|| format!("handshake with {addr}"))?;
+            match frame::read_frame(&mut stream)
+                .with_context(|| format!("handshake with {addr}"))?
+            {
+                Frame::HelloAck { version } if version == WIRE_VERSION => {}
+                Frame::HelloAck { version } => bail!(
+                    "agent at {addr} speaks protocol v{version}, \
+                     coordinator needs v{WIRE_VERSION}"
+                ),
+                other => bail!(
+                    "agent at {addr} answered Hello with {}",
+                    other.kind_name()
+                ),
+            }
+            let deploy = match &spec {
+                DeploySpec::Sim(s) => Frame::DeploySim(s.clone()),
+                DeploySpec::Blocks(s) => Frame::DeployBlocks(s.clone()),
+            };
+            frame::write_frame(&mut stream, &deploy)
+                .with_context(|| format!("deploying stage {i} to {addr}"))?;
+            match frame::read_frame(&mut stream)
+                .with_context(|| format!("deploying stage {i} to {addr}"))?
+            {
+                Frame::DeployAck { stage } if stage == spec.stage() => {}
+                Frame::DeployAck { stage } => bail!(
+                    "agent at {addr} acked stage {stage}, expected {}",
+                    spec.stage()
+                ),
+                Frame::ExecuteErr { message, .. } => bail!(
+                    "agent at {addr} rejected stage {i}: {message}"
+                ),
+                other => bail!(
+                    "agent at {addr} answered deploy with {}",
+                    other.kind_name()
+                ),
+            }
+            mirrors.push(spec.virtual_node());
+            conns.push(StageConn {
+                stream: Mutex::new(stream),
+                seq: AtomicU64::new(0),
+                dead: AtomicBool::new(false),
+                node_id: spec.node_id() as usize,
+                endpoint: addr.to_string(),
+            });
+        }
+        Ok(WireStages { kind, conns, mirrors })
+    }
+
+    /// True if any stage connection has failed.
+    pub fn any_dead(&self) -> bool {
+        self.conns.iter().any(|c| c.dead.load(Ordering::Relaxed))
+    }
+}
+
+impl StageExec for WireStages {
+    fn num_stages(&self) -> usize {
+        self.conns.len()
+    }
+
+    fn node_id(&self, stage: usize) -> usize {
+        self.conns[stage].node_id
+    }
+
+    fn comm_in(&self, stage: usize, bytes: u64) -> f64 {
+        let prev = stage.checked_sub(1).map(|p| &self.mirrors[p]);
+        node_comm_in(prev, &self.mirrors[stage], bytes)
+    }
+
+    fn comm_out(&self, bytes: u64) -> f64 {
+        node_comm_out(self.mirrors.last(), bytes)
+    }
+
+    fn execute(&self, stage: usize, input: Tensor) -> Result<(Tensor, f64)> {
+        let conn = &self.conns[stage];
+        if conn.dead.load(Ordering::Acquire) {
+            bail!(
+                "stage {stage} agent at {} is gone; failing batch fast",
+                conn.endpoint
+            );
+        }
+        let seq = conn.seq.fetch_add(1, Ordering::Relaxed) + 1;
+        let mut stream = conn.lock();
+        let out = Frame::Execute { seq, tensor: input };
+        if let Err(e) = frame::write_frame(&mut *stream, &out) {
+            conn.dead.store(true, Ordering::Release);
+            stream.shutdown();
+            return Err(e.context(format!(
+                "stage {stage}: sending activation to {}",
+                conn.endpoint
+            )));
+        }
+        // The activation made it onto the wire; hand its buffer back to
+        // the pool (no-op for views into a shared TensorBuf).
+        if let Frame::Execute { tensor, .. } = out {
+            tensor.recycle();
+        }
+        match frame::read_frame(&mut *stream) {
+            Ok(Frame::ExecuteOk { seq: rseq, compute_ms, tensor }) => {
+                if rseq != seq {
+                    conn.dead.store(true, Ordering::Release);
+                    stream.shutdown();
+                    bail!(
+                        "stage {stage}: agent at {} answered seq {rseq}, \
+                         expected {seq}",
+                        conn.endpoint
+                    );
+                }
+                Ok((tensor, compute_ms))
+            }
+            // A stage-level error is a per-batch failure: the
+            // connection stays healthy for subsequent micro-batches.
+            Ok(Frame::ExecuteErr { seq: rseq, message }) if rseq == seq => {
+                bail!("stage {stage} ({}): {message}", conn.endpoint)
+            }
+            Ok(other) => {
+                conn.dead.store(true, Ordering::Release);
+                stream.shutdown();
+                bail!(
+                    "stage {stage}: unexpected {} frame from {}",
+                    other.kind_name(),
+                    conn.endpoint
+                )
+            }
+            Err(e) => {
+                conn.dead.store(true, Ordering::Release);
+                stream.shutdown();
+                Err(e.context(format!(
+                    "stage {stage}: agent at {} disconnected mid-batch",
+                    conn.endpoint
+                )))
+            }
+        }
+    }
+}
+
+impl Transport for WireStages {
+    fn kind(&self) -> TransportKind {
+        self.kind
+    }
+
+    fn endpoint(&self, stage: usize) -> String {
+        self.conns[stage].endpoint.clone()
+    }
+}
+
+impl Drop for WireStages {
+    /// Tell each agent we're done (so idle agents can exit) and drop
+    /// the sockets. Dead connections are skipped.
+    fn drop(&mut self) {
+        for conn in &self.conns {
+            if conn.dead.load(Ordering::Relaxed) {
+                continue;
+            }
+            let mut stream = conn.lock();
+            let _ = frame::write_frame(&mut *stream, &Frame::Shutdown);
+            stream.shutdown();
+        }
+    }
+}
+
+/// Everything the server needs to (re)build a wire-backed stage chain
+/// when a deployment is created or replaced.
+#[derive(Debug, Clone)]
+pub struct WireConfig {
+    pub kind: TransportKind,
+    pub addrs: Vec<AgentAddr>,
+    pub params: SimParams,
+    /// Artifacts directory the *agents* load blocks from (shipped in
+    /// each deploy order; agents resolve it locally).
+    pub artifacts_dir: PathBuf,
+    /// How long to keep dialing an agent before giving up.
+    pub connect_timeout: Duration,
+}
+
+impl WireConfig {
+    pub fn new(
+        kind: TransportKind,
+        addrs: Vec<AgentAddr>,
+        params: SimParams,
+        artifacts_dir: PathBuf,
+    ) -> WireConfig {
+        WireConfig {
+            kind,
+            addrs,
+            params,
+            artifacts_dir,
+            connect_timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+/// Translate a local [`Deployment`] into per-stage deploy orders an
+/// agent can replay: same node spec, same block range, same memory
+/// reservation — so the agent-side chain is the remote twin of the
+/// in-process one.
+pub fn block_specs_for(
+    dep: &Deployment,
+    params: &SimParams,
+    artifacts_dir: &Path,
+) -> Vec<BlockStageSpec> {
+    dep.stages
+        .iter()
+        .enumerate()
+        .map(|(i, stage)| {
+            let spec = stage.node.spec();
+            BlockStageSpec {
+                stage: i as u32,
+                node_id: stage.node.id() as u32,
+                name: spec.name.clone(),
+                cpu_fraction: spec.cpu_fraction,
+                mem_limit_mb: spec.mem_limit_mb,
+                link_latency_ms: spec.link.latency_ms,
+                link_bandwidth_mbps: spec.link.bandwidth_mbps,
+                time_scale: params.time_scale,
+                page_factor: params.page_factor,
+                runtime_overhead_mb: params.runtime_overhead_mb,
+                artifacts_dir: artifacts_dir.display().to_string(),
+                block_start: stage.block_range.start as u32,
+                block_end: stage.block_range.end as u32,
+                batch: dep.batch as u32,
+                mem_reserve: stage.mem_reserved,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transport_kind_parses() {
+        assert_eq!(TransportKind::parse("inproc").unwrap(), TransportKind::Inproc);
+        assert_eq!(TransportKind::parse("uds").unwrap(), TransportKind::Uds);
+        assert_eq!(TransportKind::parse("unix").unwrap(), TransportKind::Uds);
+        assert_eq!(TransportKind::parse("tcp").unwrap(), TransportKind::Tcp);
+        let err = TransportKind::parse("carrier-pigeon").unwrap_err().to_string();
+        assert!(err.contains("inproc"), "{err}");
+    }
+
+    #[test]
+    fn agent_addr_parse_errors_are_actionable() {
+        let err = AgentAddr::parse(TransportKind::Inproc, "/tmp/a.sock")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("takes no agent addresses"), "{err}");
+        let err = AgentAddr::parse(TransportKind::Tcp, "localhost")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("host:port"), "{err}");
+        assert!(AgentAddr::parse(TransportKind::Uds, "  ").is_err());
+        assert_eq!(
+            AgentAddr::parse(TransportKind::Uds, "/tmp/a.sock").unwrap(),
+            AgentAddr::Uds(PathBuf::from("/tmp/a.sock"))
+        );
+        assert_eq!(
+            AgentAddr::parse(TransportKind::Tcp, "127.0.0.1:7070").unwrap(),
+            AgentAddr::Tcp("127.0.0.1:7070".to_string())
+        );
+    }
+
+    #[test]
+    fn connect_retry_times_out_with_address_in_error() {
+        let addr = AgentAddr::Uds(PathBuf::from("/tmp/amp4ec-no-such-agent.sock"));
+        let err = addr
+            .connect_retry(Duration::from_millis(30))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("amp4ec-no-such-agent"), "{err}");
+    }
+}

@@ -147,6 +147,18 @@ pub struct PoolStats {
     pub returns: u64,
 }
 
+impl PoolStats {
+    /// Counter movement since an earlier snapshot (saturating, so a
+    /// snapshot pair taken across unrelated resets stays non-negative).
+    pub fn since(&self, earlier: &PoolStats) -> PoolStats {
+        PoolStats {
+            hits: self.hits.saturating_sub(earlier.hits),
+            misses: self.misses.saturating_sub(earlier.misses),
+            returns: self.returns.saturating_sub(earlier.returns),
+        }
+    }
+}
+
 const MAX_POOLED: usize = 32;
 const MAX_POOLED_ELEMS: usize = 1 << 22; // 16 MiB of f32 per buffer
 

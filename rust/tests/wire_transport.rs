@@ -1,0 +1,341 @@
+//! Loopback integration tests for the pluggable transport layer.
+//!
+//! The contract under test: a stage chain driven over the wire
+//! (`WireStages` talking to `NodeAgent`s on UDS or TCP) is
+//! *bit-identical* to the in-process chain — same outputs, same
+//! simulated timing — for streaming, coalesced, and mixed-priority
+//! serve runs; and a dropped agent fails in-flight work instead of
+//! hanging it.
+
+mod common;
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use amp4ec::pipeline::engine::{
+    PersistentEngine, SimStages, StageExec,
+};
+use amp4ec::runtime::Tensor;
+use amp4ec::serving::{
+    EngineService, IngressConfig, Outcome, Priority, ServiceHandle,
+};
+use amp4ec::transport::agent::{AgentHandle, NodeAgent};
+use amp4ec::transport::{
+    AgentAddr, InprocTransport, Transport, TransportKind, WireStages,
+};
+
+use common::harness as h;
+
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Bit-exact tensor comparison: shapes equal, every element's f32 bit
+/// pattern equal (no epsilon — the wire must not perturb a single bit).
+fn assert_bits_eq(a: &Tensor, b: &Tensor, ctx: &str) {
+    assert_eq!(a.shape, b.shape, "{ctx}: shape mismatch");
+    for (i, (x, y)) in a.data().iter().zip(b.data().iter()).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{ctx}: element {i} differs: {x} vs {y}"
+        );
+    }
+}
+
+fn close_ms(a: f64, b: f64, what: &str) {
+    assert!((a - b).abs() < 1e-9, "{what}: {a} vs {b}");
+}
+
+/// Spawn `n` UDS agents on unique temp-socket paths.
+fn uds_agents(n: usize, tag: &str) -> (Vec<AgentHandle>, Vec<AgentAddr>) {
+    let dir = std::env::temp_dir();
+    let mut handles = Vec::with_capacity(n);
+    let mut addrs = Vec::with_capacity(n);
+    for i in 0..n {
+        let path =
+            dir.join(format!("amp4ec-{tag}-{}-{i}.sock", std::process::id()));
+        let agent = NodeAgent::serve_uds(&path).unwrap();
+        addrs.push(agent.addr().clone());
+        handles.push(agent);
+    }
+    (handles, addrs)
+}
+
+#[test]
+fn inproc_transport_is_pure_delegation() {
+    let t = InprocTransport::new(SimStages::heterogeneous(h::PAPER_SHARES, 2.0));
+    let reference = SimStages::heterogeneous(h::PAPER_SHARES, 2.0);
+    assert_eq!(t.kind(), TransportKind::Inproc);
+    assert_eq!(t.endpoint(0), "inproc");
+    assert_eq!(t.num_stages(), reference.num_stages());
+    let input = h::seeded_input(2, 4, 11);
+    for stage in 0..t.num_stages() {
+        assert_eq!(t.node_id(stage), reference.node_id(stage));
+        assert_eq!(t.backlog(stage), 0);
+        let (a, a_ms) = t.execute(stage, input.clone()).unwrap();
+        let (b, b_ms) = reference.execute(stage, input.clone()).unwrap();
+        assert_bits_eq(&a, &b, "inproc delegation output");
+        assert_eq!(a_ms.to_bits(), b_ms.to_bits(), "stage {stage} sim ms");
+        assert_eq!(
+            t.comm_in(stage, 4096).to_bits(),
+            reference.comm_in(stage, 4096).to_bits()
+        );
+    }
+    assert_eq!(t.comm_out(4096).to_bits(), reference.comm_out(4096).to_bits());
+}
+
+#[test]
+fn uds_loopback_matches_inproc_streaming() {
+    let (_agents, addrs) = uds_agents(3, "wt-uds");
+    let wire = Arc::new(
+        WireStages::connect_sim(&addrs, h::PAPER_SHARES, 2.0, CONNECT_TIMEOUT)
+            .unwrap(),
+    );
+    assert_eq!(wire.kind(), TransportKind::Uds);
+    for stage in 0..3 {
+        assert_eq!(wire.endpoint(stage), addrs[stage].to_string());
+    }
+    let wire_engine = h::engine(Arc::clone(&wire), 4);
+    let local_engine = h::engine(h::paper_stages(2.0), 4);
+    for seed in 0..4u64 {
+        let input = h::seeded_input(5, 3, 100 + seed);
+        let w = wire_engine.run(&input).unwrap();
+        let l = local_engine.run(&input).unwrap();
+        assert_bits_eq(&w.output, &l.output, "uds streamed output");
+        close_ms(w.timing.total_ms, l.timing.total_ms, "total_ms");
+        close_ms(w.timing.compute_ms, l.timing.compute_ms, "compute_ms");
+        close_ms(w.timing.comm_ms, l.timing.comm_ms, "comm_ms");
+        assert_eq!(w.timing.activation_bytes, l.timing.activation_bytes);
+    }
+    assert!(!wire.any_dead());
+}
+
+#[test]
+fn tcp_loopback_round_robins_stages_over_agents() {
+    // 3 stages over 2 agents: stage 2 wraps back onto the first agent,
+    // which therefore hosts two stage connections concurrently.
+    let a0 = NodeAgent::serve_tcp("127.0.0.1:0").unwrap();
+    let a1 = NodeAgent::serve_tcp("127.0.0.1:0").unwrap();
+    let addrs = vec![a0.addr().clone(), a1.addr().clone()];
+    let wire = Arc::new(
+        WireStages::connect_sim(&addrs, h::PAPER_SHARES, 2.0, CONNECT_TIMEOUT)
+            .unwrap(),
+    );
+    assert_eq!(wire.kind(), TransportKind::Tcp);
+    assert_eq!(wire.endpoint(0), wire.endpoint(2));
+    assert_ne!(wire.endpoint(0), wire.endpoint(1));
+    assert_eq!(a0.active_connections(), 2);
+    assert_eq!(a1.active_connections(), 1);
+
+    let wire_engine = h::engine(Arc::clone(&wire), 4);
+    let local_engine = h::engine(h::paper_stages(2.0), 4);
+    let input = h::seeded_input(6, 2, 7);
+    let w = wire_engine.run(&input).unwrap();
+    let l = local_engine.run(&input).unwrap();
+    assert_bits_eq(&w.output, &l.output, "tcp streamed output");
+    close_ms(w.timing.total_ms, l.timing.total_ms, "total_ms");
+}
+
+#[test]
+fn serve_runs_match_inproc_over_uds() {
+    // Coalesced, mixed-priority serve traffic through the full ingress
+    // (queue -> dispatcher -> engine) over the wire must produce the
+    // same per-request outputs as the in-process reference.
+    let (_agents, addrs) = uds_agents(3, "wt-serve");
+    let wire = Arc::new(
+        WireStages::connect_sim(&addrs, h::PAPER_SHARES, 2.0, CONNECT_TIMEOUT)
+            .unwrap(),
+    );
+    let wire_engine = Arc::new(h::engine(wire, 4));
+    let local_engine = h::engine(h::paper_stages(2.0), 4);
+
+    let inputs: Vec<Tensor> =
+        (0..9).map(|i| h::seeded_input(1, 4, 500 + i)).collect();
+    let expected: Vec<Tensor> = inputs
+        .iter()
+        .map(|i| local_engine.run(i).unwrap().output)
+        .collect();
+
+    let cfg = IngressConfig {
+        // Short admission window so requests coalesce into batches.
+        max_wait: Duration::from_millis(5),
+        ..Default::default()
+    };
+    let svc = ServiceHandle::new(
+        Arc::new(EngineService::new(Arc::clone(&wire_engine), 1, 4)),
+        cfg,
+        None,
+    );
+    let prios = [Priority::HIGH, Priority::NORMAL, Priority::BEST_EFFORT];
+    let handles: Vec<_> = inputs
+        .iter()
+        .enumerate()
+        .map(|(i, input)| {
+            svc.request(input.clone())
+                .priority(prios[i % prios.len()])
+                .tag(&format!("req-{i}"))
+                .submit()
+                .unwrap()
+        })
+        .collect();
+    for (i, handle) in handles.into_iter().enumerate() {
+        match handle.wait_timeout(Duration::from_secs(60)) {
+            Some(Outcome::Done(resp)) => {
+                assert_bits_eq(
+                    &resp.output,
+                    &expected[i],
+                    &format!("serve request {i}"),
+                );
+            }
+            Some(Outcome::Shed(reason)) => {
+                panic!("request {i} shed ({reason:?}) with no deadline set")
+            }
+            Some(Outcome::Failed(e)) => panic!("request {i} failed: {e:#}"),
+            None => panic!("request {i} still unresolved after 60s"),
+        }
+    }
+    let metrics = svc.finish();
+    assert_eq!(metrics.completed, inputs.len() as u64);
+}
+
+#[test]
+fn agent_kill_mid_stream_fails_handles_without_hanging() {
+    let (agents, addrs) = uds_agents(3, "wt-kill");
+    let wire = Arc::new(
+        WireStages::connect_sim(&addrs, h::PAPER_SHARES, 3.0, CONNECT_TIMEOUT)
+            .unwrap(),
+    );
+    let engine = h::engine(Arc::clone(&wire), 2);
+
+    // Queue a stream of batches, then sever the middle stage's agent
+    // while they are in flight.
+    let mut handles = Vec::new();
+    for seed in 0..6u64 {
+        handles.push(engine.submit(&h::seeded_input(4, 3, seed)).unwrap());
+    }
+    agents[1].kill();
+
+    // Every handle must resolve — completed batches as Ok, batches cut
+    // mid-stream as Err — within a hard bound: a watchdog thread drains
+    // the waits so a hang shows up as a recv timeout, not a stuck test.
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        let results: Vec<anyhow::Result<Tensor>> = handles
+            .into_iter()
+            .map(|handle| handle.wait().map(|run| run.output))
+            .collect();
+        let _ = tx.send(results);
+    });
+    let results = rx
+        .recv_timeout(Duration::from_secs(30))
+        .expect("batch handles hung after agent kill");
+    assert_eq!(results.len(), 6);
+    assert!(
+        results.iter().any(|r| r.is_err()),
+        "killing an agent mid-stream must fail at least one in-flight batch"
+    );
+
+    // The severed stage is marked dead: later submissions fail fast
+    // instead of writing into a broken pipe.
+    assert!(wire.any_dead());
+    let t0 = Instant::now();
+    assert!(engine.run(&h::seeded_input(2, 3, 99)).is_err());
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "dead-stage submission should fail fast"
+    );
+}
+
+#[test]
+fn two_process_node_agents_match_inproc() {
+    // The real thing: `amp4ec node` agents in child processes, dialed
+    // over UDS. Outputs must be bit-identical to in-process, and the
+    // agents (exit-on-idle by default) must exit 0 once the coordinator
+    // disconnects.
+    let bin = env!("CARGO_BIN_EXE_amp4ec");
+    let dir = std::env::temp_dir();
+    let mut children = Vec::new();
+    let mut addrs = Vec::new();
+    for i in 0..2 {
+        let sock =
+            dir.join(format!("amp4ec-2proc-{}-{i}.sock", std::process::id()));
+        let _ = std::fs::remove_file(&sock);
+        let child = std::process::Command::new(bin)
+            .arg("node")
+            .arg("--listen")
+            .arg(&sock)
+            .stdout(std::process::Stdio::null())
+            .stderr(std::process::Stdio::null())
+            .spawn()
+            .expect("spawn amp4ec node");
+        children.push(child);
+        addrs.push(AgentAddr::Uds(sock));
+    }
+
+    // Run the comparison in a closure so children are reaped on every
+    // path (a panic here would leave orphan processes behind).
+    let body = || -> anyhow::Result<()> {
+        let wire = Arc::new(WireStages::connect_sim(
+            &addrs,
+            h::PAPER_SHARES,
+            2.0,
+            Duration::from_secs(20),
+        )?);
+        let wire_engine = PersistentEngine::new(wire, h::engine_cfg(4))?;
+        let local_engine =
+            PersistentEngine::new(h::paper_stages(2.0), h::engine_cfg(4))?;
+        for seed in 0..2u64 {
+            let input = h::seeded_input(6, 3, 42 + seed);
+            let w = wire_engine.run(&input)?;
+            let l = local_engine.run(&input)?;
+            anyhow::ensure!(
+                w.output.shape == l.output.shape,
+                "shape mismatch: {:?} vs {:?}",
+                w.output.shape,
+                l.output.shape
+            );
+            for (i, (x, y)) in
+                w.output.data().iter().zip(l.output.data().iter()).enumerate()
+            {
+                anyhow::ensure!(
+                    x.to_bits() == y.to_bits(),
+                    "element {i} differs: {x} vs {y}"
+                );
+            }
+        }
+        Ok(())
+    };
+    let outcome = body();
+
+    // The coordinator (WireStages) is gone; exit-on-idle agents must
+    // notice and exit cleanly on their own.
+    for (i, child) in children.iter_mut().enumerate() {
+        let deadline = Instant::now() + Duration::from_secs(15);
+        loop {
+            match child.try_wait().expect("try_wait node child") {
+                Some(status) => {
+                    if outcome.is_ok() {
+                        assert!(
+                            status.success(),
+                            "node agent {i} exited with {status}"
+                        );
+                    }
+                    break;
+                }
+                None if Instant::now() >= deadline => {
+                    let _ = child.kill();
+                    let _ = child.wait();
+                    if outcome.is_ok() {
+                        panic!(
+                            "node agent {i} did not exit after the \
+                             coordinator disconnected"
+                        );
+                    }
+                    break;
+                }
+                None => std::thread::sleep(Duration::from_millis(50)),
+            }
+        }
+    }
+    outcome.unwrap();
+}
