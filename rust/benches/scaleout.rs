@@ -1,0 +1,214 @@
+//! Stage replication scale-out gate (ISSUE 7).
+//!
+//! A skewed 3-stage chain (1.0 / 0.25 / 1.0 CPU shares, so the middle
+//! stage is the 4x bottleneck) served by the persistent engine with the
+//! bottleneck replicated k ∈ {1, 2, 4} ways, each replica on its own
+//! fresh virtual node. The pipeline bound is the slowest *effective*
+//! stage time — max(1, 4/k, 1) ms per micro-batch — so serving
+//! throughput must scale near-linearly in k until the fan-out stops
+//! being the bottleneck. Acceptance gates: >= 1.7x at k=2 and >= 3x at
+//! k=4 over the k=1 chain, with every configuration's output
+//! bit-identical to the serial schedule (replication is a scheduling
+//! change, never a numerics change). Emits `BENCH_scaleout.json`.
+//! `cargo bench --bench scaleout`.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use amp4ec::metrics::markdown_table;
+use amp4ec::pipeline::engine::{
+    run_serial, PersistentEngine, PersistentEngineConfig, SimStages,
+};
+use amp4ec::runtime::Tensor;
+use amp4ec::util::bench::BenchSuite;
+use amp4ec::util::json::Json;
+
+fn input_off(rows: usize, cols: usize, off: f32) -> Tensor {
+    let data = (0..rows * cols)
+        .map(|i| (i as f32) * 0.125 - 4.0 + off)
+        .collect();
+    Tensor::new(vec![rows, cols], data).unwrap()
+}
+
+fn main() {
+    let mut suite = BenchSuite::new("scaleout");
+
+    // Skewed bottleneck profile: stage 1 runs at a quarter of the CPU
+    // share, so 1 ms nominal becomes 1 / 4 / 1 ms across the chain.
+    let shares = [1.0, 0.25, 1.0];
+    let nominal_ms = 1.0;
+    let n_batches = 8usize;
+    let rows_per_batch = 8usize;
+    let batches: Vec<Tensor> = (0..n_batches)
+        .map(|i| input_off(rows_per_batch, 32, i as f32))
+        .collect();
+    let total_rows = (n_batches * rows_per_batch) as f64;
+
+    // Golden outputs: the serial schedule on the unreplicated chain.
+    let serial_stages = SimStages::heterogeneous(&shares, nominal_ms);
+    let serial_outputs: Vec<Tensor> = batches
+        .iter()
+        .map(|b| run_serial(&serial_stages, b, 1).expect("serial").output)
+        .collect();
+
+    let mut table_rows = Vec::new();
+    let mut json_configs = Vec::new();
+    let mut speedup_at = BTreeMap::new();
+    let mut k1_ms = 0.0f64;
+    for k in [1usize, 2, 4] {
+        let reps = vec![1, k, 1];
+        let engine = PersistentEngine::new(
+            Arc::new(SimStages::with_replicas(&shares, nominal_ms, &reps)),
+            PersistentEngineConfig {
+                micro_batch_rows: 1,
+                initial_depth: 12,
+                adaptive: None,
+                ..Default::default()
+            },
+        )
+        .expect("scale-out engine");
+        let replica_map = engine.replica_nodes().to_vec();
+        assert_eq!(replica_map[1].len(), k, "bottleneck replica count");
+
+        // Back-to-back batches through one long-lived engine: the
+        // cross-batch stream is what replication must speed up.
+        let handles: Vec<_> = batches
+            .iter()
+            .map(|b| engine.submit(b).expect("submit"))
+            .collect();
+        for (h, want) in handles.into_iter().zip(&serial_outputs) {
+            let run = h.wait().expect("scale-out run");
+            // The ISSUE-7 bit-identity gate: every fan-out degree
+            // reassembles the serial rows exactly.
+            assert_eq!(
+                &run.output, want,
+                "k={k} output diverged from serial"
+            );
+        }
+        let sim_ms = engine.makespan_ms();
+        if k == 1 {
+            k1_ms = sim_ms;
+        }
+        let speedup = k1_ms / sim_ms;
+        speedup_at.insert(k, speedup);
+        let throughput = total_rows / (sim_ms / 1e3);
+
+        let counters = engine.replica_counters();
+        let lanes: Vec<_> =
+            counters.iter().filter(|c| c.stage == 1).collect();
+        assert_eq!(lanes.len(), k, "one counter per bottleneck lane");
+        for lane in &lanes {
+            assert!(
+                lane.micro_batches > 0,
+                "bottleneck lane {} idle at k={k}",
+                lane.replica
+            );
+        }
+
+        table_rows.push(vec![
+            format!("{k}"),
+            format!("{sim_ms:.1}"),
+            format!("{throughput:.0}"),
+            format!("{speedup:.2}x"),
+            format!(
+                "{:?}",
+                lanes.iter().map(|c| c.micro_batches).collect::<Vec<_>>()
+            ),
+        ]);
+        suite.record_value(
+            &format!("throughput k={k}"),
+            throughput,
+            "rows/s",
+        );
+        suite.record_value(&format!("speedup k={k}"), speedup, "x");
+
+        let mut cfg = BTreeMap::new();
+        cfg.insert("replicas".into(), Json::from(k));
+        cfg.insert("sim_ms".into(), Json::Num(sim_ms));
+        cfg.insert("rows_per_s".into(), Json::Num(throughput));
+        cfg.insert("speedup_vs_k1".into(), Json::Num(speedup));
+        cfg.insert(
+            "replica_map".into(),
+            Json::Arr(
+                replica_map
+                    .iter()
+                    .map(|nodes| {
+                        Json::Arr(
+                            nodes.iter().map(|&n| Json::from(n)).collect(),
+                        )
+                    })
+                    .collect(),
+            ),
+        );
+        cfg.insert(
+            "per_replica".into(),
+            Json::Arr(
+                counters
+                    .iter()
+                    .map(|c| {
+                        let mut j = BTreeMap::new();
+                        j.insert("stage".into(), Json::from(c.stage));
+                        j.insert("replica".into(), Json::from(c.replica));
+                        j.insert("node".into(), Json::from(c.node));
+                        j.insert(
+                            "occupancy_pct".into(),
+                            Json::Num(100.0 * c.occupancy(sim_ms)),
+                        );
+                        j.insert("bubble_ms".into(), Json::Num(c.bubble_ms));
+                        j.insert(
+                            "micro_batches".into(),
+                            Json::from(c.micro_batches as usize),
+                        );
+                        Json::Obj(j)
+                    })
+                    .collect(),
+            ),
+        );
+        json_configs.push(Json::Obj(cfg));
+    }
+
+    println!(
+        "{}",
+        markdown_table(
+            "Replica scale-out on the skewed bottleneck (64 rows, depth 12)",
+            &[
+                "Replicas (stage 1)",
+                "Sim total ms",
+                "Rows/s",
+                "Speedup vs k=1",
+                "Lane micro-batches",
+            ],
+            &table_rows,
+        )
+    );
+
+    // The ISSUE-7 near-linear scaling gates.
+    let s2 = speedup_at[&2];
+    let s4 = speedup_at[&4];
+    assert!(
+        s2 >= 1.7,
+        "k=2 speedup {s2:.2}x below the 1.7x scale-out gate"
+    );
+    assert!(
+        s4 >= 3.0,
+        "k=4 speedup {s4:.2}x below the 3x scale-out gate"
+    );
+
+    let mut doc = BTreeMap::new();
+    doc.insert("suite".into(), Json::Str("scaleout".into()));
+    doc.insert(
+        "cpu_shares".into(),
+        Json::Arr(shares.iter().map(|&s| Json::Num(s)).collect()),
+    );
+    doc.insert("nominal_ms".into(), Json::Num(nominal_ms));
+    doc.insert("n_batches".into(), Json::from(n_batches));
+    doc.insert("rows_per_batch".into(), Json::from(rows_per_batch));
+    doc.insert("depth".into(), Json::from(12usize));
+    doc.insert("configs".into(), Json::Arr(json_configs));
+    doc.insert("speedup_k2".into(), Json::Num(s2));
+    doc.insert("speedup_k4".into(), Json::Num(s4));
+    doc.insert("bit_identical".into(), Json::Bool(true));
+    std::fs::write("BENCH_scaleout.json", Json::Obj(doc).to_string())
+        .expect("write BENCH_scaleout.json");
+    println!("wrote BENCH_scaleout.json");
+}

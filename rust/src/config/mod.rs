@@ -43,6 +43,61 @@ impl NodeConfig {
     }
 }
 
+/// Stage replication policy (scale-out): how many data-parallel copies
+/// of hot stages the deployer may place. Extras are distributed
+/// bottleneck-first over per-stage partition costs
+/// (`partitioner::replica_counts`) and placed on fresh nodes by the
+/// scheduler's replica-set extension. CLI: `--replicas auto|k`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplicaPolicy {
+    /// No replication — every stage runs one copy (the default; the
+    /// engine degenerates bit-exactly to the single-chain schedule).
+    Off,
+    /// Use every spare online node that can afford a replica.
+    Auto,
+    /// Distribute `k - 1` extra replicas bottleneck-first (so the
+    /// hottest stage runs up to `k` copies). Always >= 2: `1` parses
+    /// to [`ReplicaPolicy::Off`].
+    Fixed(usize),
+}
+
+impl ReplicaPolicy {
+    pub fn parse(s: &str) -> Result<ReplicaPolicy> {
+        match s.trim() {
+            "auto" => Ok(ReplicaPolicy::Auto),
+            "off" => Ok(ReplicaPolicy::Off),
+            n => {
+                let k: usize = n.parse().map_err(|_| {
+                    anyhow::anyhow!(
+                        "replicas expects `auto`, `off`, or a count >= 1, \
+                         got `{s}`"
+                    )
+                })?;
+                anyhow::ensure!(k >= 1, "replica count must be >= 1, got {k}");
+                Ok(if k == 1 {
+                    ReplicaPolicy::Off
+                } else {
+                    ReplicaPolicy::Fixed(k)
+                })
+            }
+        }
+    }
+
+    /// Extra replicas to distribute bottleneck-first, given `spare`
+    /// currently-unused placeable nodes.
+    pub fn extra_budget(&self, spare: usize) -> usize {
+        match self {
+            ReplicaPolicy::Off => 0,
+            ReplicaPolicy::Auto => spare,
+            ReplicaPolicy::Fixed(k) => k.saturating_sub(1),
+        }
+    }
+
+    pub fn is_off(&self) -> bool {
+        matches!(self, ReplicaPolicy::Off)
+    }
+}
+
 /// Full framework configuration.
 #[derive(Debug, Clone)]
 pub struct AmpConfig {
@@ -109,6 +164,11 @@ pub struct AmpConfig {
     /// Also relaxes miss padding to exact row counts (short tails pack
     /// together instead of being padded). CLI: `--coalesce`.
     pub coalesce: bool,
+    /// Stage replication (scale-out): place data-parallel copies of hot
+    /// stages on spare nodes and spray micro-batches across them.
+    /// Forces the persistent engine on (replicas only exist there).
+    /// CLI: `--replicas auto|k`.
+    pub replicas: ReplicaPolicy,
     /// Result-cache entries; None disables (plain AMP4EC).
     pub cache_entries: Option<usize>,
     /// Model/deployment cache across redeployments (+Cache bandwidth=0).
@@ -154,6 +214,7 @@ impl Default for AmpConfig {
             max_pipeline_depth: 8,
             per_stage_windows: false,
             coalesce: false,
+            replicas: ReplicaPolicy::Off,
             cache_entries: None,
             model_cache: false,
             transport: TransportKind::Inproc,
@@ -286,6 +347,13 @@ impl AmpConfig {
             "max_pipeline_depth must be >= 1"
         );
         anyhow::ensure!(self.time_scale > 0.0, "time_scale must be > 0");
+        if let ReplicaPolicy::Fixed(k) = self.replicas {
+            anyhow::ensure!(
+                k >= 2,
+                "replicas = {k} is not a replicated configuration; use \
+                 `off` (or drop the key) for single-copy stages"
+            );
+        }
         match self.transport {
             TransportKind::Inproc => anyhow::ensure!(
                 self.agents.is_empty(),
@@ -390,6 +458,15 @@ impl AmpConfig {
             Json::from(self.per_stage_windows),
         );
         m.insert("coalesce".into(), Json::from(self.coalesce));
+        match self.replicas {
+            ReplicaPolicy::Off => {}
+            ReplicaPolicy::Auto => {
+                m.insert("replicas".into(), Json::Str("auto".into()));
+            }
+            ReplicaPolicy::Fixed(k) => {
+                m.insert("replicas".into(), Json::from(k));
+            }
+        }
         if let Some(c) = self.cache_entries {
             m.insert("cache_entries".into(), Json::from(c));
         }
@@ -494,6 +571,16 @@ impl AmpConfig {
                 .and_then(Json::as_bool)
                 .unwrap_or(false),
             coalesce: j.get("coalesce").and_then(Json::as_bool).unwrap_or(false),
+            replicas: match j.get("replicas") {
+                None => ReplicaPolicy::Off,
+                Some(Json::Str(s)) => ReplicaPolicy::parse(s)?,
+                Some(v) => match v.as_usize() {
+                    Some(k) => ReplicaPolicy::parse(&k.to_string())?,
+                    None => anyhow::bail!(
+                        "`replicas` must be `auto`, `off`, or a count"
+                    ),
+                },
+            },
             cache_entries: j.get("cache_entries").and_then(Json::as_usize),
             model_cache: j.get("model_cache").and_then(Json::as_bool).unwrap_or(false),
             transport: match j.get("transport").and_then(Json::as_str) {
@@ -678,6 +765,37 @@ mod tests {
         m.insert("transport".into(), Json::Str("tcp".into()));
         m.insert("agents".into(), Json::Arr(vec![Json::Num(1.0)]));
         assert!(AmpConfig::from_json(&Json::Obj(m)).is_err());
+    }
+
+    #[test]
+    fn replica_policy_parses_and_roundtrips() {
+        assert_eq!(ReplicaPolicy::parse("auto").unwrap(), ReplicaPolicy::Auto);
+        assert_eq!(ReplicaPolicy::parse("off").unwrap(), ReplicaPolicy::Off);
+        // k=1 normalizes to Off — the degenerate single-copy plan.
+        assert_eq!(ReplicaPolicy::parse("1").unwrap(), ReplicaPolicy::Off);
+        assert_eq!(
+            ReplicaPolicy::parse("4").unwrap(),
+            ReplicaPolicy::Fixed(4)
+        );
+        assert!(ReplicaPolicy::parse("0").is_err());
+        assert!(ReplicaPolicy::parse("many").is_err());
+        assert_eq!(ReplicaPolicy::Auto.extra_budget(3), 3);
+        assert_eq!(ReplicaPolicy::Fixed(4).extra_budget(99), 3);
+        assert_eq!(ReplicaPolicy::Off.extra_budget(99), 0);
+
+        // JSON: Off omits the key; auto/k round-trip.
+        let d = AmpConfig::default();
+        assert!(d.to_json().get("replicas").is_none());
+        let mut c = AmpConfig::default();
+        c.replicas = ReplicaPolicy::Auto;
+        let back = AmpConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.replicas, ReplicaPolicy::Auto);
+        c.replicas = ReplicaPolicy::Fixed(3);
+        let back = AmpConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.replicas, ReplicaPolicy::Fixed(3));
+        // Fixed(1) is rejected by validation (parse never produces it).
+        c.replicas = ReplicaPolicy::Fixed(1);
+        assert!(c.validate().is_err());
     }
 
     #[test]

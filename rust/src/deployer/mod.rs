@@ -38,6 +38,36 @@ pub struct Stage {
     pub weights_bytes: u64,
     /// Memory reserved on the node for this stage (bytes).
     pub mem_reserved: u64,
+    /// Extra data-parallel replicas of this stage (scale-out): replica
+    /// `r + 1` lives in `replicas[r]`; the fields above are replica 0.
+    /// Empty for every unreplicated deployment, so the whole pre-replica
+    /// API surface is the k=1 case.
+    pub replicas: Vec<StageReplica>,
+}
+
+/// One extra replica of a stage, fully provisioned on its own node
+/// (weights shipped, blocks loaded, working set reserved).
+pub struct StageReplica {
+    pub node: Arc<VirtualNode>,
+    pub executor: Arc<Executor>,
+    pub blocks: Vec<BlockHandle>,
+    pub mem_reserved: u64,
+}
+
+impl Stage {
+    /// Total replica count including the primary (>= 1).
+    pub fn replica_count(&self) -> usize {
+        1 + self.replicas.len()
+    }
+
+    /// Node hosting replica `r` (0 = primary).
+    pub fn replica_node(&self, r: usize) -> &Arc<VirtualNode> {
+        if r == 0 {
+            &self.node
+        } else {
+            &self.replicas[r - 1].node
+        }
+    }
 }
 
 /// A live deployment of a partition plan.
@@ -54,6 +84,15 @@ pub struct Deployment {
 impl Deployment {
     pub fn node_ids(&self) -> Vec<usize> {
         self.stages.iter().map(|s| s.node.id()).collect()
+    }
+
+    /// Replica map: `replica_node_ids()[k][r]` hosts replica `r` of stage
+    /// `k` (`[k][0]` is the primary). All-singleton for k=1 deployments.
+    pub fn replica_node_ids(&self) -> Vec<Vec<usize>> {
+        self.stages
+            .iter()
+            .map(|s| (0..s.replica_count()).map(|r| s.replica_node(r).id()).collect())
+            .collect()
     }
 }
 
@@ -106,6 +145,53 @@ impl ModelDeployer {
         weights + 2 * act
     }
 
+    /// Ship one partition's blocks to `node`: move uncached weight
+    /// payloads over the node's link and load every block into the
+    /// node's executor. Returns the handles, the stage's total weight
+    /// bytes, and the bytes actually moved (cache hits move nothing).
+    fn ship_blocks(
+        &self,
+        node: &VirtualNode,
+        executor: &Executor,
+        range: &Range<usize>,
+        batch: usize,
+    ) -> Result<(Vec<BlockHandle>, u64, u64)> {
+        let mut handles = Vec::new();
+        let mut stage_bytes = 0u64;
+        let mut transferred = 0u64;
+        for bi in range.clone() {
+            let block = &self.manifest.blocks[bi];
+            let cached = self
+                .model_cache
+                .lock()
+                .unwrap()
+                .contains(&(node.id(), bi));
+            if !(self.use_model_cache && cached) {
+                node.link().receive(block.weights_bytes);
+                transferred += block.weights_bytes;
+            }
+            self.model_cache.lock().unwrap().insert((node.id(), bi));
+            stage_bytes += block.weights_bytes;
+
+            let hlo = self.manifest.artifact_path(block, batch)?;
+            let handle = executor
+                .load_block(
+                    hlo,
+                    self.manifest.weights_path(block),
+                    block.param_count as usize,
+                    vec![
+                        batch,
+                        block.out_shape[0],
+                        block.out_shape[1],
+                        block.out_shape[2],
+                    ],
+                )
+                .with_context(|| format!("loading block {}", block.name))?;
+            handles.push(handle);
+        }
+        Ok((handles, stage_bytes, transferred))
+    }
+
     /// Deploy `plan` at `batch`, choosing a node per partition with the
     /// scheduler. Prefers distinct nodes per partition (pipelining);
     /// falls back to reuse when partitions outnumber nodes.
@@ -116,7 +202,43 @@ impl ModelDeployer {
         scheduler: &Scheduler,
         batch: usize,
     ) -> Result<Deployment> {
+        self.deploy_replicated(
+            plan,
+            cluster,
+            scheduler,
+            batch,
+            &vec![1; plan.partitions.len()],
+        )
+    }
+
+    /// Scale-out deployment: like [`ModelDeployer::deploy`] but places
+    /// `replica_counts[i]` data-parallel copies of partition `i`
+    /// (`partitioner::replica_counts` picks the counts bottleneck-first).
+    /// Extras go on *fresh* nodes chosen by the scheduler's replica-set
+    /// extension under its per-node memory guard; when fewer nodes can
+    /// afford a replica than requested, the stage runs with what was
+    /// placeable (never overcommitted — a paged-out replica would slow
+    /// the stage it exists to speed up). All-ones `replica_counts`
+    /// reproduces `deploy` exactly.
+    pub fn deploy_replicated(
+        &self,
+        plan: &Plan,
+        cluster: &Cluster,
+        scheduler: &Scheduler,
+        batch: usize,
+        replica_counts: &[usize],
+    ) -> Result<Deployment> {
         let t0 = Instant::now();
+        anyhow::ensure!(
+            replica_counts.len() == plan.partitions.len(),
+            "need one replica count per partition ({} != {})",
+            replica_counts.len(),
+            plan.partitions.len()
+        );
+        anyhow::ensure!(
+            replica_counts.iter().all(|&r| r >= 1),
+            "every partition needs >= 1 replica"
+        );
         let nodes = cluster.online_nodes();
         anyhow::ensure!(!nodes.is_empty(), "no online nodes to deploy to");
 
@@ -183,40 +305,49 @@ impl ModelDeployer {
             used.insert(node.id());
             let executor = self.executor_for(&node)?;
 
-            let mut handles = Vec::new();
-            let mut stage_bytes = 0u64;
-            for bi in part.block_range.clone() {
-                let block = &self.manifest.blocks[bi];
-                let cached = self
-                    .model_cache
-                    .lock()
-                    .unwrap()
-                    .contains(&(node.id(), bi));
-                if !(self.use_model_cache && cached) {
-                    node.link().receive(block.weights_bytes);
-                    transfer_bytes += block.weights_bytes;
-                }
-                self.model_cache.lock().unwrap().insert((node.id(), bi));
-                stage_bytes += block.weights_bytes;
+            let (handles, stage_bytes, moved) =
+                self.ship_blocks(&node, &executor, &part.block_range, batch)?;
+            transfer_bytes += moved;
+            node.mem_reserve(mem_bytes);
 
-                let hlo = self.manifest.artifact_path(block, batch)?;
-                let handle = executor
-                    .load_block(
-                        hlo,
-                        self.manifest.weights_path(block),
-                        block.param_count as usize,
-                        vec![
-                            batch,
-                            block.out_shape[0],
-                            block.out_shape[1],
-                            block.out_shape[2],
-                        ],
-                    )
-                    .with_context(|| format!("loading block {}", block.name))?;
-                handles.push(handle);
+            // Extra replicas go on fresh nodes only, under the
+            // scheduler's memory guard — no overcommit fallback.
+            let want_extra = replica_counts[i] - 1;
+            let mut replicas = Vec::with_capacity(want_extra);
+            if want_extra > 0 {
+                let fresh: Vec<_> = nodes
+                    .iter()
+                    .filter(|n| !used.contains(&n.id()))
+                    .cloned()
+                    .collect();
+                let set = scheduler.select_replica_set(&fresh, &req, want_extra);
+                if set.len() < want_extra {
+                    crate::log_warn!(
+                        "deployer",
+                        "partition {i}: placed {} of {} extra replicas \
+                         ({} fresh nodes can afford {:.1} MB)",
+                        set.len(),
+                        want_extra,
+                        set.len(),
+                        req.mem_mb
+                    );
+                }
+                for (rnode, _score) in set {
+                    used.insert(rnode.id());
+                    let rexec = self.executor_for(&rnode)?;
+                    let (rblocks, _, rmoved) =
+                        self.ship_blocks(&rnode, &rexec, &part.block_range, batch)?;
+                    transfer_bytes += rmoved;
+                    rnode.mem_reserve(mem_bytes);
+                    replicas.push(StageReplica {
+                        node: rnode,
+                        executor: rexec,
+                        blocks: rblocks,
+                        mem_reserved: mem_bytes,
+                    });
+                }
             }
 
-            node.mem_reserve(mem_bytes);
             stages.push(Stage {
                 partition_idx: i,
                 node,
@@ -225,6 +356,7 @@ impl ModelDeployer {
                 blocks: handles,
                 weights_bytes: stage_bytes,
                 mem_reserved: mem_bytes,
+                replicas,
             });
         }
 
@@ -238,12 +370,19 @@ impl ModelDeployer {
         })
     }
 
-    /// Release node memory and executor-side blocks held by a deployment.
+    /// Release node memory and executor-side blocks held by a deployment
+    /// (every replica's, not just the primaries').
     pub fn undeploy(&self, deployment: &Deployment) {
         for s in &deployment.stages {
             s.node.mem_release(s.mem_reserved);
             for b in &s.blocks {
                 s.executor.unload_block(*b);
+            }
+            for r in &s.replicas {
+                r.node.mem_release(r.mem_reserved);
+                for b in &r.blocks {
+                    r.executor.unload_block(*b);
+                }
             }
         }
     }

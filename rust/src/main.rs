@@ -9,6 +9,7 @@
 //!                    [--adaptive-depth] [--max-depth M]  # online window sizing
 //!                    [--stage-windows]  # per-stage credit windows
 //!                    [--coalesce]       # merge adjacent small miss-sets
+//!                    [--replicas auto|K]  # data-parallel copies of hot stages
 //!                    [--deadline-ms MS] # default per-request deadline (shed past it)
 //!                    [--priority-classes N]  # strict-priority ingress lanes
 //!                    [--transport inproc|uds|tcp] [--agents a,b,...]  # wire transport
@@ -83,6 +84,9 @@ fn build_config(args: &Args) -> anyhow::Result<AmpConfig> {
         args.get_usize("max-depth", cfg.max_pipeline_depth)?;
     cfg.per_stage_windows = args.flag("stage-windows");
     cfg.coalesce = args.flag("coalesce");
+    if let Some(r) = args.get("replicas") {
+        cfg.replicas = amp4ec::config::ReplicaPolicy::parse(r)?;
+    }
     cfg.priority_classes =
         args.get_usize("priority-classes", cfg.priority_classes)?;
     if let Some(ms) = args.get("deadline-ms") {
@@ -157,6 +161,31 @@ fn print_report(report: &amp4ec::server::ServeReport) {
             100.0 * c.bubble_fraction(),
             c.micro_batches
         );
+    }
+    // Scale-out: show where each stage's replicas landed and how busy
+    // each copy was (only when some stage actually runs more than one).
+    if report.replica_map.iter().any(|r| r.len() > 1) {
+        let map = report
+            .replica_map
+            .iter()
+            .enumerate()
+            .map(|(k, nodes)| format!("{k}->{nodes:?}"))
+            .collect::<Vec<_>>()
+            .join(" ");
+        println!("replica map        : {map}");
+        for c in &report.replica_counters {
+            println!(
+                "  stage {}.{} (node {}): busy {:.1} ms, bubble {:.1} ms \
+                 ({:.0}%), {} micro-batches",
+                c.stage,
+                c.replica,
+                c.node,
+                c.busy_ms,
+                c.bubble_ms,
+                100.0 * c.bubble_fraction(),
+                c.micro_batches
+            );
+        }
     }
     println!("pipeline depth     : {}", report.final_pipeline_depth);
     if !report.stage_budgets.is_empty() {

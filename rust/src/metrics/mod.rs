@@ -431,6 +431,50 @@ impl StageCounter {
     }
 }
 
+/// Per-replica occupancy counters for a replicated stage — the
+/// scale-out companion to [`StageCounter`]. A stage's aggregated
+/// counter sums its replicas, which hides per-replica skew (one starved
+/// replica behind a hot one); this type keeps each replica lane
+/// visible. All times are simulated milliseconds.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ReplicaCounter {
+    pub stage: usize,
+    /// Replica index within the stage (0 = primary).
+    pub replica: usize,
+    /// Node hosting this replica.
+    pub node: usize,
+    /// Simulated compute time this replica spent busy.
+    pub busy_ms: f64,
+    /// Idle gaps between consecutive micro-batches (excludes fill).
+    pub bubble_ms: f64,
+    /// Simulated ingress communication time.
+    pub comm_ms: f64,
+    /// Micro-batches this replica processed.
+    pub micro_batches: u64,
+}
+
+impl ReplicaCounter {
+    /// Fraction of the traversal this replica spent computing.
+    pub fn occupancy(&self, makespan_ms: f64) -> f64 {
+        if makespan_ms <= 0.0 {
+            0.0
+        } else {
+            (self.busy_ms / makespan_ms).min(1.0)
+        }
+    }
+
+    /// Fraction of the replica's active span spent idle between
+    /// micro-batches (`bubble / (busy + bubble)`).
+    pub fn bubble_fraction(&self) -> f64 {
+        let span = self.busy_ms + self.bubble_ms;
+        if span <= 0.0 {
+            0.0
+        } else {
+            self.bubble_ms / span
+        }
+    }
+}
+
 /// Feeder-side batch-coalescing counters from the persistent pipeline
 /// engine: how many transports were formed, how many of them merged
 /// multiple member batches, and how many padded micro-batches the

@@ -383,6 +383,33 @@ pub fn plan_measured_weighted(
     Ok(Plan { partitions, total_cost })
 }
 
+/// Scale-out: distribute `extra` additional replicas over stages,
+/// bottleneck-first. Every stage starts with one replica; each extra goes
+/// to the stage whose *effective* cost (`cost / replicas`) is currently
+/// largest, so a skewed profile concentrates replicas on its bottleneck
+/// while a balanced one spreads them round-robin. Costs are whatever the
+/// caller balances on (Eq. 9 partition costs from [`prefix_sums`] ranges,
+/// or measured stage milliseconds); zero budget returns all-ones — the
+/// k=1 degenerate plan.
+pub fn replica_counts(stage_costs: &[f64], extra: usize) -> Vec<usize> {
+    let mut reps = vec![1usize; stage_costs.len()];
+    if stage_costs.is_empty() {
+        return reps;
+    }
+    for _ in 0..extra {
+        let bottleneck = (0..reps.len())
+            .max_by(|&a, &b| {
+                let ea = stage_costs[a] / reps[a] as f64;
+                let eb = stage_costs[b] / reps[b] as f64;
+                // total_cmp: a NaN cost must not wedge the argmax.
+                ea.total_cmp(&eb)
+            })
+            .expect("non-empty stage list");
+        reps[bottleneck] += 1;
+    }
+    reps
+}
+
 /// Ablation: the paper's greedy algorithm under the corrected (group-aware)
 /// cost model. Returns layer sizes only (no realization needed for study).
 pub fn layer_sizes_flops_cost(manifest: &Manifest, num_partitions: usize) -> Vec<usize> {
@@ -586,6 +613,44 @@ mod tests {
                 assert_eq!(pair[0].block_range.end, pair[1].block_range.start);
             }
             assert_eq!(p.layer_sizes().iter().sum::<usize>(), 4);
+        });
+    }
+
+    #[test]
+    fn replica_counts_are_bottleneck_first() {
+        // Skewed profile: the 4x stage absorbs every extra until its
+        // effective cost drops to parity.
+        assert_eq!(replica_counts(&[1.0, 1.0, 4.0, 1.0], 0), vec![1, 1, 1, 1]);
+        assert_eq!(replica_counts(&[1.0, 1.0, 4.0, 1.0], 1), vec![1, 1, 2, 1]);
+        assert_eq!(replica_counts(&[1.0, 1.0, 4.0, 1.0], 3), vec![1, 1, 4, 1]);
+        // Balanced profile: extras spread instead of stacking.
+        let r = replica_counts(&[1.0, 1.0, 1.0], 3);
+        assert_eq!(r, vec![2, 2, 2]);
+        assert_eq!(replica_counts(&[], 5), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn property_replica_counts_conserve_budget_and_shrink_bottleneck() {
+        forall(200, 0x5CA1E, |rng: &mut Rng| {
+            let n = rng.range(1, 8);
+            let costs: Vec<f64> =
+                (0..n).map(|_| 0.5 + rng.f64() * 10.0).collect();
+            let extra = rng.below(12);
+            let reps = replica_counts(&costs, extra);
+            assert_eq!(reps.len(), n);
+            assert!(reps.iter().all(|&r| r >= 1));
+            assert_eq!(reps.iter().sum::<usize>(), n + extra);
+            if extra > 0 {
+                // The max effective cost never increases vs the k=1 plan.
+                let eff = |rs: &[usize]| {
+                    costs
+                        .iter()
+                        .zip(rs)
+                        .map(|(c, &r)| c / r as f64)
+                        .fold(f64::MIN, f64::max)
+                };
+                assert!(eff(&reps) <= eff(&vec![1; n]) + 1e-12);
+            }
         });
     }
 

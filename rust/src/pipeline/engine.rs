@@ -185,6 +185,52 @@ pub trait StageExec: Sync {
     /// Run one micro-batch on `stage`. Returns the output activation and
     /// the simulated compute ms.
     fn execute(&self, stage: usize, input: Tensor) -> Result<(Tensor, f64)>;
+
+    /// Number of replicas serving `stage` (>= 1). Replicas run the same
+    /// blocks on different nodes; the engine sprays micro-batches across
+    /// them with per-replica credit windows. Defaults to 1 — every
+    /// unreplicated implementation degenerates to the single-chain
+    /// engine bit-exactly.
+    fn replicas(&self, stage: usize) -> usize {
+        let _ = stage;
+        1
+    }
+
+    /// Node hosting replica `replica` of `stage` (for accounting).
+    /// Replica 0 must equal [`StageExec::node_id`].
+    fn replica_node_id(&self, stage: usize, replica: usize) -> usize {
+        let _ = replica;
+        self.node_id(stage)
+    }
+
+    /// Whether replica `replica` of `stage` can currently take work.
+    /// Senders route micro-batches round-robin over the alive set, so a
+    /// dead replica (e.g. a closed wire connection) fails only what was
+    /// already in flight to it. Defaults to always-alive.
+    fn replica_alive(&self, stage: usize, replica: usize) -> bool {
+        let _ = (stage, replica);
+        true
+    }
+
+    /// Ingress transfer into a specific replica of `stage`. Defaults to
+    /// the stage-level link model (exact for `replicas() == 1`).
+    fn comm_in_on(&self, stage: usize, replica: usize, bytes: u64) -> f64 {
+        let _ = replica;
+        self.comm_in(stage, bytes)
+    }
+
+    /// Run one micro-batch on a specific replica of `stage`. Defaults to
+    /// the primary path — `replicas() == 1` implementations never see
+    /// `replica > 0`.
+    fn execute_on(
+        &self,
+        stage: usize,
+        replica: usize,
+        input: Tensor,
+    ) -> Result<(Tensor, f64)> {
+        let _ = replica;
+        self.execute(stage, input)
+    }
 }
 
 /// Shared link model for node-hosted stage chains: the leader is a
@@ -250,17 +296,53 @@ impl<D: std::ops::Deref<Target = Deployment> + Sync> StageExec for DeploymentSta
     }
 
     fn execute(&self, stage: usize, input: Tensor) -> Result<(Tensor, f64)> {
-        let st = &self.dep.stages[stage];
-        let executor = Arc::clone(&st.executor);
-        let blocks = st.blocks.clone();
-        let (out, outcome) = st
-            .node
-            .execute_costed(move || executor.run_chain(blocks, input))?;
-        Ok((out, outcome.sim_ms))
+        self.execute_on(stage, 0, input)
     }
 
     fn backlog(&self, stage: usize) -> usize {
         self.dep.stages[stage].executor.queue_depth()
+    }
+
+    fn replicas(&self, stage: usize) -> usize {
+        self.dep.stages[stage].replica_count()
+    }
+
+    fn replica_node_id(&self, stage: usize, replica: usize) -> usize {
+        self.dep.stages[stage].replica_node(replica).id()
+    }
+
+    fn comm_in_on(&self, stage: usize, replica: usize, bytes: u64) -> f64 {
+        // The upstream sender is charged at its primary: which replica
+        // produced a given micro-batch is a routing detail the link
+        // model deliberately ignores (all replicas of a stage share one
+        // link class).
+        let prev = stage
+            .checked_sub(1)
+            .map(|p| &*self.dep.stages[p].node);
+        node_comm_in(
+            prev,
+            self.dep.stages[stage].replica_node(replica),
+            bytes,
+        )
+    }
+
+    fn execute_on(
+        &self,
+        stage: usize,
+        replica: usize,
+        input: Tensor,
+    ) -> Result<(Tensor, f64)> {
+        let st = &self.dep.stages[stage];
+        let (node, executor, blocks) = if replica == 0 {
+            (&st.node, &st.executor, st.blocks.clone())
+        } else {
+            let r = &st.replicas[replica - 1];
+            (&r.node, &r.executor, r.blocks.clone())
+        };
+        let executor = Arc::clone(executor);
+        let (out, outcome) =
+            node.execute_costed(move || executor.run_chain(blocks, input))?;
+        Ok((out, outcome.sim_ms))
     }
 }
 
@@ -270,38 +352,114 @@ impl<D: std::ops::Deref<Target = Deployment> + Sync> StageExec for DeploymentSta
 /// exercised, tested, and benchmarked without compiled artifacts.
 pub struct SimStages {
     nodes: Vec<Arc<VirtualNode>>,
+    /// Extra replicas per stage: `extra[k][j]` hosts replica `j + 1` of
+    /// stage `k` (the primary is `nodes[k]`). Empty for unreplicated
+    /// chains, so every pre-existing constructor is the k=1 case.
+    extra: Vec<Vec<Arc<VirtualNode>>>,
     nominal_ms: f64,
 }
 
 impl SimStages {
     pub fn new(nodes: Vec<Arc<VirtualNode>>, nominal_ms: f64) -> SimStages {
-        SimStages { nodes, nominal_ms }
+        let extra = nodes.iter().map(|_| Vec::new()).collect();
+        SimStages { nodes, extra, nominal_ms }
     }
 
     /// One stage per CPU share (e.g. `&[1.0, 0.6, 0.4]` — the paper's
     /// heterogeneous cluster), default LAN links, no paging.
     pub fn heterogeneous(cpu_shares: &[f64], nominal_ms: f64) -> SimStages {
+        SimStages::with_replicas(
+            cpu_shares,
+            nominal_ms,
+            &vec![1; cpu_shares.len()],
+        )
+    }
+
+    /// Heterogeneous chain with `replica_counts[k]` replicas of stage
+    /// `k`, each replica on its own fresh virtual node with the stage's
+    /// CPU share (distinct node ids, so replica device clocks are
+    /// independent — the scale-out speedup the critical path can then
+    /// actually model). Replica ids follow the primaries (`n ..`).
+    pub fn with_replicas(
+        cpu_shares: &[f64],
+        nominal_ms: f64,
+        replica_counts: &[usize],
+    ) -> SimStages {
+        assert_eq!(
+            cpu_shares.len(),
+            replica_counts.len(),
+            "one replica count per stage"
+        );
+        assert!(
+            replica_counts.iter().all(|&r| r >= 1),
+            "every stage needs >= 1 replica"
+        );
         let params = SimParams {
             time_scale: 1.0,
             page_factor: 4.0,
             runtime_overhead_mb: 0.0,
         };
-        let nodes = cpu_shares
+        let mk = |id: usize, cpu: f64| {
+            Arc::new(VirtualNode::new(
+                id,
+                NodeSpec::new(&format!("sim-{id}"), cpu, 1024.0),
+                params.clone(),
+            ))
+        };
+        let nodes: Vec<_> = cpu_shares
             .iter()
             .enumerate()
-            .map(|(i, &cpu)| {
-                Arc::new(VirtualNode::new(
-                    i,
-                    NodeSpec::new(&format!("sim-{i}"), cpu, 1024.0),
-                    params.clone(),
-                ))
+            .map(|(i, &cpu)| mk(i, cpu))
+            .collect();
+        let mut next_id = cpu_shares.len();
+        let extra = cpu_shares
+            .iter()
+            .enumerate()
+            .map(|(k, &cpu)| {
+                (1..replica_counts[k])
+                    .map(|_| {
+                        let n = mk(next_id, cpu);
+                        next_id += 1;
+                        n
+                    })
+                    .collect()
             })
             .collect();
-        SimStages::new(nodes, nominal_ms)
+        SimStages { nodes, extra, nominal_ms }
     }
 
     pub fn nodes(&self) -> &[Arc<VirtualNode>] {
         &self.nodes
+    }
+
+    fn node_for(&self, stage: usize, replica: usize) -> &Arc<VirtualNode> {
+        if replica == 0 {
+            &self.nodes[stage]
+        } else {
+            &self.extra[stage][replica - 1]
+        }
+    }
+
+    fn run_on(
+        &self,
+        node: &VirtualNode,
+        input: Tensor,
+    ) -> Result<(Tensor, f64)> {
+        let nominal = self.nominal_ms;
+        let (out, outcome) = node.execute_costed(move || {
+            // Row-wise elementwise transform: bit-identical under any
+            // micro-batch split (and on any replica). Output storage
+            // comes from the buffer pool (producing values is compute,
+            // not a data-plane copy); the consumed input view is
+            // recycled.
+            let mut data =
+                crate::util::pool::BufferPool::global().take(input.len());
+            data.extend(input.data().iter().map(|v| v * 1.5 + 0.25));
+            let t = Tensor::new(input.shape.clone(), data)?;
+            input.recycle();
+            Ok((t, nominal))
+        })?;
+        Ok((out, outcome.sim_ms))
     }
 }
 
@@ -324,20 +482,31 @@ impl StageExec for SimStages {
     }
 
     fn execute(&self, stage: usize, input: Tensor) -> Result<(Tensor, f64)> {
-        let nominal = self.nominal_ms;
-        let (out, outcome) = self.nodes[stage].execute_costed(move || {
-            // Row-wise elementwise transform: bit-identical under any
-            // micro-batch split. Output storage comes from the buffer
-            // pool (producing values is compute, not a data-plane copy);
-            // the consumed input view is recycled.
-            let mut data =
-                crate::util::pool::BufferPool::global().take(input.len());
-            data.extend(input.data().iter().map(|v| v * 1.5 + 0.25));
-            let t = Tensor::new(input.shape.clone(), data)?;
-            input.recycle();
-            Ok((t, nominal))
-        })?;
-        Ok((out, outcome.sim_ms))
+        self.run_on(&self.nodes[stage], input)
+    }
+
+    fn replicas(&self, stage: usize) -> usize {
+        1 + self.extra[stage].len()
+    }
+
+    fn replica_node_id(&self, stage: usize, replica: usize) -> usize {
+        self.node_for(stage, replica).id()
+    }
+
+    fn comm_in_on(&self, stage: usize, replica: usize, bytes: u64) -> f64 {
+        // Upstream sender modeled as the previous stage's primary (the
+        // sim link specs are uniform across replicas anyway).
+        let prev = stage.checked_sub(1).map(|p| &*self.nodes[p]);
+        node_comm_in(prev, self.node_for(stage, replica), bytes)
+    }
+
+    fn execute_on(
+        &self,
+        stage: usize,
+        replica: usize,
+        input: Tensor,
+    ) -> Result<(Tensor, f64)> {
+        self.run_on(self.node_for(stage, replica), input)
     }
 }
 
@@ -451,90 +620,145 @@ struct PMsg {
 /// of `W` (pinned by equivalence tests). Unequal budgets let a
 /// heterogeneous chain keep a large in-flight window through the
 /// bottleneck while early fast stages run on small ones.
+///
+/// ## Replicated stages
+///
+/// A replicated stage gets one credit **slot per replica** (slots are
+/// laid out stage-major): micro-batch `idx` of stage `k` always
+/// accounts against slot `offsets[k] + idx % reps[k]`, so each
+/// congruence class of micro-batches has its own per-replica window.
+/// The slot mapping is *static* — decoupled from which replica actually
+/// executes the chunk (the alive-set router may steer around a dead
+/// replica) — so credit accounting never races replica liveness. With
+/// every stage at one replica, slots == stages and the behaviour is
+/// bit-exactly the pre-replication windows.
 struct CreditWindows {
     txs: Vec<Sender<f64>>,
-    /// Pending narrowings per window: the next returned credit is
+    /// Pending narrowings per slot: the next returned credit is
     /// absorbed instead of re-issued.
     swallow: Vec<AtomicUsize>,
-    /// Live budget per window (target size, narrowings already
-    /// subtracted).
+    /// Live budget per slot (target size, narrowings already
+    /// subtracted). Stage-level resizes move all of a stage's slots
+    /// together, so replicas of a stage keep equal budgets.
     budgets: Vec<AtomicUsize>,
+    /// First slot of each stage.
+    offsets: Vec<usize>,
+    /// Replica count per stage.
+    reps: Vec<usize>,
 }
 
 impl CreditWindows {
-    /// Build windows seeded with `budgets[k]` zero-valued credits each;
-    /// returns the feeder-side receivers (index = stage).
+    /// Build unreplicated windows seeded with `budgets[k]` zero-valued
+    /// credits each; returns the feeder-side receivers (index = stage).
     fn new(budgets: &[usize]) -> (CreditWindows, Vec<Receiver<f64>>) {
-        let mut txs = Vec::with_capacity(budgets.len());
-        let mut rxs = Vec::with_capacity(budgets.len());
-        for &b in budgets {
-            let (tx, rx) = channel::<f64>();
-            for _ in 0..b {
-                let _ = tx.send(0.0);
+        CreditWindows::new_replicated(budgets, &vec![1; budgets.len()])
+    }
+
+    /// Build windows with `reps[k]` slots for stage `k`, each seeded
+    /// with `budgets[k]` zero-valued credits. Receivers are indexed by
+    /// *slot* (use [`CreditWindows::slot_of`]).
+    fn new_replicated(
+        budgets: &[usize],
+        reps: &[usize],
+    ) -> (CreditWindows, Vec<Receiver<f64>>) {
+        assert_eq!(budgets.len(), reps.len(), "one budget per stage");
+        let mut txs = Vec::new();
+        let mut rxs = Vec::new();
+        let mut slot_budgets = Vec::new();
+        let mut offsets = Vec::with_capacity(reps.len());
+        for (k, &r) in reps.iter().enumerate() {
+            assert!(r >= 1, "stage {k} needs >= 1 replica");
+            offsets.push(txs.len());
+            for _ in 0..r {
+                let (tx, rx) = channel::<f64>();
+                for _ in 0..budgets[k] {
+                    let _ = tx.send(0.0);
+                }
+                txs.push(tx);
+                rxs.push(rx);
+                slot_budgets.push(AtomicUsize::new(budgets[k]));
             }
-            txs.push(tx);
-            rxs.push(rx);
         }
+        let n_slots = txs.len();
         let windows = CreditWindows {
             txs,
-            swallow: budgets.iter().map(|_| AtomicUsize::new(0)).collect(),
-            budgets: budgets.iter().map(|&b| AtomicUsize::new(b)).collect(),
+            swallow: (0..n_slots).map(|_| AtomicUsize::new(0)).collect(),
+            budgets: slot_budgets,
+            offsets,
+            reps: reps.to_vec(),
         };
         (windows, rxs)
     }
 
+    /// Number of stages (not slots).
     fn n(&self) -> usize {
-        self.txs.len()
+        self.offsets.len()
     }
 
-    /// Return window `k`'s credit (value = the simulated time the slot
-    /// freed), unless a pending narrowing absorbs it.
-    fn give(&self, k: usize, value: f64) {
-        let absorbed = self.swallow[k]
+    /// Credit slot of micro-batch `idx` at stage `k`.
+    fn slot_of(&self, k: usize, idx: usize) -> usize {
+        self.offsets[k] + idx % self.reps[k]
+    }
+
+    /// Return micro-batch `idx`'s credit to stage `k`'s window (value =
+    /// the simulated time the slot freed), unless a pending narrowing
+    /// absorbs it.
+    fn give(&self, k: usize, idx: usize, value: f64) {
+        let slot = self.slot_of(k, idx);
+        let absorbed = self.swallow[slot]
             .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |s| {
                 s.checked_sub(1)
             })
             .is_ok();
         if !absorbed {
-            let _ = self.txs[k].send(value);
+            let _ = self.txs[slot].send(value);
         }
     }
 
-    /// Grow window `k` by one credit valued `now` (cancels a pending
-    /// narrowing first, so widen/narrow pairs are net zero).
+    /// Grow window `k` by one credit per replica slot, valued `now`
+    /// (cancels pending narrowings first, so widen/narrow pairs are net
+    /// zero). Replica budgets of a stage stay equal.
     fn widen(&self, k: usize, now: f64) {
-        self.budgets[k].fetch_add(1, Ordering::SeqCst);
-        let cancelled = self.swallow[k]
-            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |s| {
-                s.checked_sub(1)
-            })
-            .is_ok();
-        if !cancelled {
-            let _ = self.txs[k].send(now);
+        for slot in self.offsets[k]..self.offsets[k] + self.reps[k] {
+            self.budgets[slot].fetch_add(1, Ordering::SeqCst);
+            let cancelled = self.swallow[slot]
+                .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |s| {
+                    s.checked_sub(1)
+                })
+                .is_ok();
+            if !cancelled {
+                let _ = self.txs[slot].send(now);
+            }
         }
     }
 
-    /// Shrink window `k` by one: the next returned credit is swallowed.
+    /// Shrink window `k` by one per replica slot: the next returned
+    /// credit of each slot is swallowed.
     fn narrow(&self, k: usize) {
-        self.budgets[k].fetch_sub(1, Ordering::SeqCst);
-        self.swallow[k].fetch_add(1, Ordering::SeqCst);
+        for slot in self.offsets[k]..self.offsets[k] + self.reps[k] {
+            self.budgets[slot].fetch_sub(1, Ordering::SeqCst);
+            self.swallow[slot].fetch_add(1, Ordering::SeqCst);
+        }
+    }
+
+    /// Per-replica budget of stage `k` (slots of a stage stay equal).
+    fn stage_budget(&self, k: usize) -> usize {
+        self.budgets[self.offsets[k]].load(Ordering::SeqCst)
     }
 
     fn budgets_snapshot(&self) -> Vec<usize> {
-        self.budgets
-            .iter()
-            .map(|b| b.load(Ordering::SeqCst))
-            .collect()
+        (0..self.n()).map(|k| self.stage_budget(k)).collect()
     }
 
-    /// The delivery window (last stage's budget) — what
+    /// The delivery window (last stage's per-replica budget) — what
     /// `current_depth`/`DepthReport` track, identical to the PR-2
     /// global depth when budgets are uniform.
     fn delivery_budget(&self) -> usize {
-        self.budgets
-            .last()
-            .map(|b| b.load(Ordering::SeqCst))
-            .unwrap_or(0)
+        if self.offsets.is_empty() {
+            0
+        } else {
+            self.stage_budget(self.n() - 1)
+        }
     }
 }
 
@@ -543,10 +767,12 @@ impl CreditWindows {
 /// window credits return) without dropping messages. `at_ms` is the
 /// simulated makespan when the failure occurred, stamped once at the
 /// failing stage — downstream drivers and the collector use it as the
-/// returned credit value without touching the shared state lock.
+/// returned credit value without touching the shared state lock. `idx`
+/// carries the dead micro-batch's sequence number so its credits return
+/// to the *same replica slot* they were drawn from.
 enum PFlow {
     Item(PMsg),
-    Failed { batch: u64, error: anyhow::Error, at_ms: f64 },
+    Failed { batch: u64, idx: usize, error: anyhow::Error, at_ms: f64 },
 }
 
 /// One submitted batch riding inside a transport: where its rows live
@@ -632,6 +858,21 @@ impl EngineState {
         }
     }
 
+    /// State for a replicated chain: one critical-path lane per replica
+    /// (`replica_nodes[k][r]` hosts replica `r` of stage `k`), while
+    /// `node_ids` stays the primary map used for scheduler charging and
+    /// per-stage counter registration.
+    fn new_replicated(
+        node_ids: Arc<[usize]>,
+        replica_nodes: &[Vec<usize>],
+    ) -> EngineState {
+        EngineState {
+            cp: CriticalPath::new_replicated(replica_nodes),
+            node_ids,
+            batches: HashMap::new(),
+        }
+    }
+
     /// Register a transport before any of its micro-batches are fed, so
     /// drivers can attribute steps from the first one onward.
     fn register(
@@ -683,17 +924,46 @@ fn panic_msg(p: Box<dyn std::any::Any + Send>) -> String {
         .unwrap_or_else(|| "opaque panic payload".into())
 }
 
-/// Stage driver loop: receive, transfer in, execute, account one step on
-/// the shared clock, return this stage's window credit, forward.
-/// Failures are forwarded (never dropped) so the collector's
-/// per-transport completion count stays exact, and a *panicking* stage
-/// is caught and converted into a failure of just that transport — the
-/// drivers stay alive and unrelated in-flight batches complete.
+/// Pick which replica of `stage` should execute micro-batch `idx`.
+/// Round-robin by sequence number over the *alive* set: with every
+/// replica alive this is plain `idx % n` (matching the static credit
+/// slot), and a dead replica is steered around so only its already
+/// in-flight work fails. With one replica this is always 0.
+fn route_replica<S: StageExec + ?Sized>(
+    stages: &S,
+    stage: usize,
+    idx: usize,
+) -> usize {
+    let n = stages.replicas(stage);
+    if n == 1 {
+        return 0;
+    }
+    let alive = (0..n).filter(|&r| stages.replica_alive(stage, r)).count();
+    if alive == 0 || alive == n {
+        return idx % n;
+    }
+    let pick = idx % alive;
+    (0..n)
+        .filter(|&r| stages.replica_alive(stage, r))
+        .nth(pick)
+        .unwrap_or(idx % n)
+}
+
+/// Stage driver loop for one `(stage, replica)` pair: receive, transfer
+/// in, execute on this replica's node, account one step on the shared
+/// clock (this replica's lane), return the micro-batch's window credit,
+/// forward — routing the output to a replica of stage `k+1` (or the
+/// collector). Failures are forwarded (never dropped) so the
+/// collector's per-transport completion count stays exact, and a
+/// *panicking* stage is caught and converted into a failure of just
+/// that transport — the drivers stay alive and unrelated in-flight
+/// batches complete.
 fn drive_stage<S: StageExec + ?Sized>(
     stages: &S,
     k: usize,
+    replica: usize,
     rx: Receiver<PFlow>,
-    tx: SyncSender<PFlow>,
+    next: Vec<SyncSender<PFlow>>,
     state: &Mutex<EngineState>,
     windows: &CreditWindows,
 ) {
@@ -702,34 +972,36 @@ fn drive_stage<S: StageExec + ?Sized>(
     // window); every earlier stage returns its own at completion.
     let returns_credit = k + 1 < windows.n();
     while let Ok(flow) = rx.recv() {
-        let next = match flow {
-            PFlow::Failed { batch, error, at_ms } => {
+        let (out_idx, msg) = match flow {
+            PFlow::Failed { batch, idx, error, at_ms } => {
                 if returns_credit {
-                    windows.give(k, at_ms);
+                    windows.give(k, idx, at_ms);
                 }
-                PFlow::Failed { batch, error, at_ms }
+                (idx, PFlow::Failed { batch, idx, error, at_ms })
             }
             PFlow::Item(m) => {
                 let bytes = m.tensor.byte_len();
-                let comm_ms = stages.comm_in(k, bytes);
+                let comm_ms = stages.comm_in_on(k, replica, bytes);
                 // A panic inside a StageExec implementation must degrade
                 // to a failed transport, not a dead driver thread (which
                 // would tear the whole engine down). Accounting after a
                 // panic is best-effort by design (AssertUnwindSafe).
-                let executed = std::panic::catch_unwind(
-                    std::panic::AssertUnwindSafe(|| stages.execute(k, m.tensor)),
-                )
-                .unwrap_or_else(|p| {
-                    Err(anyhow::anyhow!(
-                        "stage implementation panicked: {}",
-                        panic_msg(p)
+                let executed =
+                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                        || stages.execute_on(k, replica, m.tensor),
                     ))
-                });
+                    .unwrap_or_else(|p| {
+                        Err(anyhow::anyhow!(
+                            "stage implementation panicked: {}",
+                            panic_msg(p)
+                        ))
+                    });
                 match executed {
                     Ok((out, compute_ms)) => {
                         let mut st = lock_state(state);
-                        let d = st.cp.step_detail(
-                            k, m.ready_ms, comm_ms, compute_ms, bytes,
+                        let d = st.cp.step_detail_on(
+                            k, replica, m.ready_ms, comm_ms, compute_ms,
+                            bytes,
                         );
                         if let Some(agg) = st.batches.get_mut(&m.batch) {
                             if m.idx == 0 {
@@ -755,38 +1027,55 @@ fn drive_stage<S: StageExec + ?Sized>(
                         }
                         drop(st);
                         if returns_credit {
-                            windows.give(k, d.done_ms);
+                            windows.give(k, m.idx, d.done_ms);
                         }
-                        PFlow::Item(PMsg {
-                            batch: m.batch,
-                            idx: m.idx,
-                            ready_ms: d.done_ms,
-                            tensor: out,
-                        })
+                        (
+                            m.idx,
+                            PFlow::Item(PMsg {
+                                batch: m.batch,
+                                idx: m.idx,
+                                ready_ms: d.done_ms,
+                                tensor: out,
+                            }),
+                        )
                     }
                     Err(e) => {
                         let now = lock_state(state).cp.makespan_ms();
                         if returns_credit {
-                            windows.give(k, now);
+                            windows.give(k, m.idx, now);
                         }
-                        PFlow::Failed {
-                            batch: m.batch,
-                            error: e.context(format!(
-                                "pipeline stage {k}, micro-batch {}",
-                                m.idx
-                            )),
-                            at_ms: now,
-                        }
+                        (
+                            m.idx,
+                            PFlow::Failed {
+                                batch: m.batch,
+                                idx: m.idx,
+                                error: e.context(format!(
+                                    "pipeline stage {k}, micro-batch {}",
+                                    m.idx
+                                )),
+                                at_ms: now,
+                            },
+                        )
                     }
                 }
             }
         };
-        if tx.send(next).is_err() {
+        // Route to the downstream replica (failures take channel 0 —
+        // they carry no tensor, so any live downstream driver works).
+        let to = if next.len() <= 1 {
+            0
+        } else {
+            match &msg {
+                PFlow::Item(_) => route_replica(stages, k + 1, out_idx),
+                PFlow::Failed { .. } => 0,
+            }
+        };
+        if next[to].send(msg).is_err() {
             break; // downstream gone
         }
     }
-    // rx disconnected: upstream finished; dropping tx cascades shutdown
-    // to the next stage.
+    // rx disconnected: upstream finished; dropping the senders cascades
+    // shutdown to the next stage.
 }
 
 /// Feed one transport's micro-batches into stage 0, spending one credit
@@ -798,16 +1087,22 @@ fn drive_stage<S: StageExec + ?Sized>(
 /// controller tell credit pressure from mere arrival spacing, and pick
 /// *which* budget to grow. Returns false when the engine is tearing
 /// down.
-fn feed_batch(
+fn feed_batch<S: StageExec + ?Sized>(
+    stages: &S,
     id: u64,
     chunks: Vec<Tensor>,
     credit_rxs: &[Receiver<f64>],
-    feed_tx: &SyncSender<PFlow>,
+    feed_txs: &[SyncSender<PFlow>],
+    windows: &CreditWindows,
     state: &Mutex<EngineState>,
 ) -> bool {
     for (idx, tensor) in chunks.into_iter().enumerate() {
         let mut ready_ms = 0.0f64;
-        for (k, credit_rx) in credit_rxs.iter().enumerate() {
+        // Micro-batch `idx` spends one credit per stage, each from its
+        // static replica slot (`slot_of`), so a replicated stage admits
+        // up to `reps[k] * budget` micro-batches at once.
+        for k in 0..windows.n() {
+            let credit_rx = &credit_rxs[windows.slot_of(k, idx)];
             let v = match credit_rx.try_recv() {
                 Ok(t) => t,
                 Err(std::sync::mpsc::TryRecvError::Empty) => {
@@ -826,7 +1121,9 @@ fn feed_batch(
             };
             ready_ms = ready_ms.max(v);
         }
-        if feed_tx
+        let to =
+            if feed_txs.len() <= 1 { 0 } else { route_replica(stages, 0, idx) };
+        if feed_txs[to]
             .send(PFlow::Item(PMsg { batch: id, idx, ready_ms, tensor }))
             .is_err()
         {
@@ -884,7 +1181,7 @@ fn collect_loop<S: StageExec + ?Sized>(
                 let completed =
                     finished.and_then(|id| st.batches.remove(&id));
                 drop(st);
-                ctrl.terminal_credit(done);
+                ctrl.terminal_credit(m.idx, done);
                 if let Some(agg) = completed {
                     // Build the controller's view only when a controller
                     // exists — the fixed-window and one-shot paths skip
@@ -923,7 +1220,7 @@ fn collect_loop<S: StageExec + ?Sized>(
                     }
                 }
             }
-            PFlow::Failed { batch, error, at_ms } => {
+            PFlow::Failed { batch, idx, error, at_ms } => {
                 let mut st = lock_state(state);
                 let mut finished = None;
                 if let Some(agg) = st.batches.get_mut(&batch) {
@@ -938,7 +1235,7 @@ fn collect_loop<S: StageExec + ?Sized>(
                 let completed =
                     finished.and_then(|id| st.batches.remove(&id));
                 drop(st);
-                ctrl.terminal_credit(at_ms);
+                ctrl.terminal_credit(idx, at_ms);
                 if let Some(agg) = completed {
                     finalize_batch(agg);
                 }
@@ -1221,6 +1518,9 @@ struct WindowCtrl {
     cooldown: u32,
     clean_batches: u32,
     stats: Arc<DepthStats>,
+    /// Buffer-pool snapshot at the last memory-pressure check, so each
+    /// observation sees only the delta since the previous one.
+    last_pool: crate::util::pool::PoolStats,
 }
 
 impl WindowCtrl {
@@ -1230,7 +1530,15 @@ impl WindowCtrl {
         windows: Arc<CreditWindows>,
         stats: Arc<DepthStats>,
     ) -> WindowCtrl {
-        WindowCtrl { cfg, per_stage, windows, cooldown: 0, clean_batches: 0, stats }
+        WindowCtrl {
+            cfg,
+            per_stage,
+            windows,
+            cooldown: 0,
+            clean_batches: 0,
+            stats,
+            last_pool: crate::util::pool::BufferPool::global().stats(),
+        }
     }
 
     /// Whether completed batches are worth observing at all.
@@ -1238,11 +1546,70 @@ impl WindowCtrl {
         self.cfg.is_some()
     }
 
-    /// Return the last window's credit at a terminal (delivery or
-    /// drained failure).
-    fn terminal_credit(&self, value: f64) {
+    /// Return micro-batch `idx`'s last-window credit at a terminal
+    /// (delivery or drained failure).
+    fn terminal_credit(&self, idx: usize, value: f64) {
         let last = self.windows.n() - 1;
-        self.windows.give(last, value);
+        self.windows.give(last, idx, value);
+    }
+
+    /// Memory-pressure signal from the shared [`BufferPool`]: true when
+    /// the allocation miss rate since the last check exceeds
+    /// `pool_miss_budget` (in-flight buffers outrunning the pool's
+    /// supply), or the bytes parked in the pool exceed
+    /// `pool_bytes_budget`. Either way the window is holding more
+    /// activation storage live than the budget allows, and shrinking it
+    /// is the lever the controller owns.
+    fn memory_pressure(&mut self, cfg: &AdaptiveDepthConfig) -> bool {
+        if cfg.pool_miss_budget.is_none() && cfg.pool_bytes_budget.is_none() {
+            return false;
+        }
+        let pool = crate::util::pool::BufferPool::global();
+        let now = pool.stats();
+        let delta = now.since(&self.last_pool);
+        self.last_pool = now;
+        let takes = delta.hits + delta.misses;
+        let miss_over = cfg.pool_miss_budget.is_some_and(|budget| {
+            takes > 0 && delta.misses as f64 / takes as f64 > budget
+        });
+        let bytes_over = cfg
+            .pool_bytes_budget
+            .is_some_and(|budget| pool.pooled_bytes() > budget);
+        miss_over || bytes_over
+    }
+
+    /// One narrowing step (shared by the bubble hysteresis and the
+    /// memory-pressure path): per-stage mode shrinks the largest budget
+    /// still above the floor (ties toward the latest stage, undoing
+    /// widen order); uniform mode shrinks every window above the floor.
+    /// Returns false when everything already sits at `min_depth`.
+    fn narrow_step(&self, cfg: &AdaptiveDepthConfig) -> bool {
+        let budgets = self.windows.budgets_snapshot();
+        if self.per_stage {
+            match (0..budgets.len())
+                .filter(|&k| budgets[k] > cfg.min_depth)
+                .max_by_key(|&k| (budgets[k], k))
+            {
+                Some(k) => {
+                    self.windows.narrow(k);
+                    true
+                }
+                None => false,
+            }
+        } else if budgets.iter().any(|&b| b > cfg.min_depth) {
+            // Per-window floor: narrowing a window already at min_depth
+            // would drive its budget to 0 and starve the feeder forever
+            // (a non-uniform seed can sit at the floor while the
+            // delivery window is above it).
+            for k in 0..self.windows.n() {
+                if budgets[k] > cfg.min_depth {
+                    self.windows.narrow(k);
+                }
+            }
+            true
+        } else {
+            false
+        }
     }
 
     /// Record the delivery budget into the depth stats after a resize.
@@ -1285,6 +1652,19 @@ impl WindowCtrl {
         let Some(cfg) = self.cfg else { return };
         if self.cooldown > 0 {
             self.cooldown -= 1;
+            return;
+        }
+        // Memory pressure dominates: while the buffer pool is missing or
+        // holding beyond its budget, shrink the window (fewer in-flight
+        // micro-batches = less live activation storage) and veto any
+        // widening this round.
+        if self.memory_pressure(&cfg) {
+            if self.narrow_step(&cfg) {
+                self.sync_stats();
+                self.stats.narrowings.fetch_add(1, Ordering::SeqCst);
+                self.cooldown = cfg.cooldown_batches;
+            }
+            self.clean_batches = 0;
             return;
         }
         let Some(bottleneck) = counters
@@ -1337,34 +1717,7 @@ impl WindowCtrl {
         } else if frac < cfg.narrow_bubble_frac {
             self.clean_batches += 1;
             if self.clean_batches >= 2 {
-                let narrowed = if self.per_stage {
-                    // Shrink the largest budget still above the floor;
-                    // ties toward the latest stage (undoing widen order).
-                    match (0..budgets.len())
-                        .filter(|&k| budgets[k] > cfg.min_depth)
-                        .max_by_key(|&k| (budgets[k], k))
-                    {
-                        Some(k) => {
-                            self.windows.narrow(k);
-                            true
-                        }
-                        None => false,
-                    }
-                } else if budgets.iter().any(|&b| b > cfg.min_depth) {
-                    // Per-window floor: narrowing a window already at
-                    // min_depth would drive its budget to 0 and starve
-                    // the feeder forever (a non-uniform seed can sit at
-                    // the floor while the delivery window is above it).
-                    for k in 0..self.windows.n() {
-                        if budgets[k] > cfg.min_depth {
-                            self.windows.narrow(k);
-                        }
-                    }
-                    true
-                } else {
-                    false
-                };
-                if narrowed {
+                if self.narrow_step(&cfg) {
                     self.sync_stats();
                     self.stats.narrowings.fetch_add(1, Ordering::SeqCst);
                     self.cooldown = cfg.cooldown_batches;
@@ -1439,9 +1792,19 @@ pub fn run_streamed<S: StageExec + ?Sized>(
     let chunks = split_rows(input, cfg.micro_batch_rows)?;
     let rows = input.shape[0];
     let node_ids: Vec<usize> = (0..n_stages).map(|k| stages.node_id(k)).collect();
+    let reps: Vec<usize> =
+        (0..n_stages).map(|k| stages.replicas(k)).collect();
+    let replica_nodes: Vec<Vec<usize>> = (0..n_stages)
+        .map(|k| {
+            (0..reps[k]).map(|r| stages.replica_node_id(k, r)).collect()
+        })
+        .collect();
 
     let (reply_tx, reply_rx) = channel::<Result<EngineRun>>();
-    let state = Mutex::new(EngineState::new(node_ids.into()));
+    let state = Mutex::new(EngineState::new_replicated(
+        node_ids.into(),
+        &replica_nodes,
+    ));
     lock_state(&state).register(
         0,
         chunks.len(),
@@ -1449,50 +1812,75 @@ pub fn run_streamed<S: StageExec + ?Sized>(
         rows,
     );
 
-    // Channel k feeds stage k; channel n_stages is the collector. The
+    // One bounded queue per (stage, replica) plus the collector's. The
     // in-flight limit is the credit windows below; the bounded queues
     // add per-stage back-pressure so a stalled stage blocks its
     // upstream driver instead of buffering unboundedly.
-    let mut senders = Vec::with_capacity(n_stages + 1);
-    let mut receivers = Vec::with_capacity(n_stages + 1);
-    for _ in 0..=n_stages {
-        let (tx, rx) = sync_channel::<PFlow>(cfg.max_in_flight);
-        senders.push(tx);
-        receivers.push(rx);
+    let mut stage_txs: Vec<Vec<SyncSender<PFlow>>> =
+        Vec::with_capacity(n_stages);
+    let mut stage_rxs: Vec<Vec<Receiver<PFlow>>> =
+        Vec::with_capacity(n_stages);
+    for &r in &reps {
+        let mut txs = Vec::with_capacity(r);
+        let mut rxs = Vec::with_capacity(r);
+        for _ in 0..r {
+            let (tx, rx) = sync_channel::<PFlow>(cfg.max_in_flight);
+            txs.push(tx);
+            rxs.push(rx);
+        }
+        stage_txs.push(txs);
+        stage_rxs.push(rxs);
     }
-    let mut senders = senders.into_iter();
-    let mut receivers = receivers.into_iter();
-    let feed_tx = senders.next().expect("feeder sender");
+    let (collect_tx, collect_rx) = sync_channel::<PFlow>(cfg.max_in_flight);
 
     // Credit-based admission: uniform per-stage windows of
     // `max_in_flight` each, which is exactly the single global window
     // (see CreditWindows). A window of 1 degenerates to the serial
     // schedule.
-    let (windows, credit_rxs) =
-        CreditWindows::new(&vec![cfg.max_in_flight; n_stages]);
+    let (windows, credit_rxs) = CreditWindows::new_replicated(
+        &vec![cfg.max_in_flight; n_stages],
+        &reps,
+    );
     let windows = Arc::new(windows);
 
     std::thread::scope(|scope| {
-        // One driver thread per stage.
-        for k in 0..n_stages {
-            let rx: Receiver<PFlow> = receivers.next().expect("stage receiver");
-            let tx: SyncSender<PFlow> = senders.next().expect("stage sender");
-            let state = &state;
-            let windows = Arc::clone(&windows);
-            scope.spawn(move || drive_stage(stages, k, rx, tx, state, &windows));
+        // One driver thread per (stage, replica).
+        for (k, rxs) in stage_rxs.into_iter().enumerate() {
+            let next: Vec<SyncSender<PFlow>> = if k + 1 < n_stages {
+                stage_txs[k + 1].clone()
+            } else {
+                vec![collect_tx.clone()]
+            };
+            for (r, rx) in rxs.into_iter().enumerate() {
+                let next = next.clone();
+                let state = &state;
+                let windows = Arc::clone(&windows);
+                scope.spawn(move || {
+                    drive_stage(stages, k, r, rx, next, state, &windows)
+                });
+            }
         }
+        // Only the feeder may hold stage-0 senders (and only drivers the
+        // rest): otherwise the shutdown cascade never reaches the
+        // collector and the scope deadlocks.
+        let feed_txs = std::mem::take(&mut stage_txs[0]);
+        drop(stage_txs);
+        drop(collect_tx);
 
         // Feeder: micro-batches are admitted as window credits free up.
         {
             let state = &state;
+            let windows = Arc::clone(&windows);
             scope.spawn(move || {
-                feed_batch(0, chunks, &credit_rxs, &feed_tx, state);
+                feed_batch(
+                    stages, 0, chunks, &credit_rxs, &feed_txs, &windows,
+                    state,
+                );
             });
         }
 
         // Collector runs inline; it exits when the last driver drops its
         // sender (after the feeder finished and the queues drained).
-        let collect_rx = receivers.next().expect("collector receiver");
         let mut ctrl = WindowCtrl::new(
             None,
             false,
@@ -1532,6 +1920,16 @@ pub struct AdaptiveDepthConfig {
     /// Batches to skip after a change so its effect is observed before
     /// the next decision.
     pub cooldown_batches: u32,
+    /// Memory-pressure budget on the shared [`crate::util::pool::BufferPool`]'s
+    /// allocation miss rate (misses / takes since the last observation,
+    /// in `(0, 1]`): while exceeded, the controller narrows instead of
+    /// widening — fewer in-flight micro-batches means less live
+    /// activation storage. `None` disables the signal.
+    pub pool_miss_budget: Option<f64>,
+    /// Memory-pressure budget on the bytes parked in the shared buffer
+    /// pool ([`crate::util::pool::BufferPool::pooled_bytes`]). `None`
+    /// disables the signal.
+    pub pool_bytes_budget: Option<u64>,
 }
 
 impl Default for AdaptiveDepthConfig {
@@ -1542,6 +1940,8 @@ impl Default for AdaptiveDepthConfig {
             widen_bubble_frac: 0.10,
             narrow_bubble_frac: 0.02,
             cooldown_batches: 1,
+            pool_miss_budget: None,
+            pool_bytes_budget: None,
         }
     }
 }
@@ -1771,10 +2171,13 @@ pub fn budgets_from_profile(
 /// which is exactly the "window under-filled" condition: saturated
 /// pipelines back-pressure the feeder and small miss-sets pile up
 /// behind it.
+#[allow(clippy::too_many_arguments)]
 fn feeder_loop(
+    stages: Arc<dyn StageExec + Send + Sync>,
     submit_rx: Receiver<SubmitMsg>,
-    feed_tx: SyncSender<PFlow>,
+    feed_txs: Vec<SyncSender<PFlow>>,
     credit_rxs: Vec<Receiver<f64>>,
+    windows: Arc<CreditWindows>,
     state: Arc<Mutex<EngineState>>,
     micro: usize,
     coalesce: bool,
@@ -1939,7 +2342,9 @@ fn feeder_loop(
             start += rows;
         }
         lock_state(&state).register(id, chunks.len(), members, padded_rows);
-        if !feed_batch(id, chunks, &credit_rxs, &feed_tx, &state) {
+        if !feed_batch(
+            &*stages, id, chunks, &credit_rxs, &feed_txs, &windows, &state,
+        ) {
             // The pipeline died under us (panic-driven cascade): fail
             // this transport and every submission still reaching the
             // queue so no waiter hangs on a reply that will never come
@@ -1967,6 +2372,9 @@ pub struct PersistentEngine {
     state: Arc<Mutex<EngineState>>,
     threads: Vec<std::thread::JoinHandle<()>>,
     node_ids: Arc<[usize]>,
+    /// `replica_nodes[k][r]` = node hosting replica `r` of stage `k`
+    /// (`replica_nodes[k][0] == node_ids[k]`).
+    replica_nodes: Vec<Vec<usize>>,
     depth_stats: Arc<DepthStats>,
     windows: Arc<CreditWindows>,
     coalesce: Arc<CoalesceCounters>,
@@ -2023,6 +2431,12 @@ impl PersistentEngine {
                 a.widen_bubble_frac,
                 a.narrow_bubble_frac
             );
+            if let Some(m) = a.pool_miss_budget {
+                anyhow::ensure!(
+                    m.is_finite() && m > 0.0 && m <= 1.0,
+                    "pool_miss_budget {m} must be a rate in (0, 1]"
+                );
+            }
         }
         if let Some(budgets) = &cfg.stage_budgets {
             anyhow::ensure!(
@@ -2049,49 +2463,86 @@ impl PersistentEngine {
         }
         let node_ids: Arc<[usize]> =
             (0..n_stages).map(|k| stages.node_id(k)).collect();
-        let state =
-            Arc::new(Mutex::new(EngineState::new(Arc::clone(&node_ids))));
+        let reps: Vec<usize> =
+            (0..n_stages).map(|k| stages.replicas(k)).collect();
+        let replica_nodes: Vec<Vec<usize>> = (0..n_stages)
+            .map(|k| {
+                (0..reps[k]).map(|r| stages.replica_node_id(k, r)).collect()
+            })
+            .collect();
+        let state = Arc::new(Mutex::new(EngineState::new_replicated(
+            Arc::clone(&node_ids),
+            &replica_nodes,
+        )));
         let cap = cfg.depth_cap();
         let seed_budgets = cfg
             .stage_budgets
             .clone()
             .unwrap_or_else(|| vec![cfg.initial_depth; n_stages]);
 
-        let mut senders = Vec::with_capacity(n_stages + 1);
-        let mut receivers = Vec::with_capacity(n_stages + 1);
-        for _ in 0..=n_stages {
-            let (tx, rx) = sync_channel::<PFlow>(cap);
-            senders.push(tx);
-            receivers.push(rx);
+        // One bounded queue per (stage, replica) plus the collector's.
+        let mut stage_txs: Vec<Vec<SyncSender<PFlow>>> =
+            Vec::with_capacity(n_stages);
+        let mut stage_rxs: Vec<Vec<Receiver<PFlow>>> =
+            Vec::with_capacity(n_stages);
+        for &r in &reps {
+            let mut txs = Vec::with_capacity(r);
+            let mut rxs = Vec::with_capacity(r);
+            for _ in 0..r {
+                let (tx, rx) = sync_channel::<PFlow>(cap);
+                txs.push(tx);
+                rxs.push(rx);
+            }
+            stage_txs.push(txs);
+            stage_rxs.push(rxs);
         }
-        let mut senders = senders.into_iter();
-        let mut receivers = receivers.into_iter();
-        let feed_tx = senders.next().expect("feeder sender");
+        let (collect_tx, collect_rx) = sync_channel::<PFlow>(cap);
 
-        let (windows, credit_rxs) = CreditWindows::new(&seed_budgets);
+        let (windows, credit_rxs) =
+            CreditWindows::new_replicated(&seed_budgets, &reps);
         let windows = Arc::new(windows);
         let depth_stats =
             Arc::new(DepthStats::new(*seed_budgets.last().expect("stages")));
         let coalesce_counters = Arc::new(CoalesceCounters::default());
 
-        let mut threads = Vec::with_capacity(n_stages + 2);
-        for k in 0..n_stages {
-            let rx = receivers.next().expect("stage receiver");
-            let tx = senders.next().expect("stage sender");
-            let stages = Arc::clone(&stages);
-            let state = Arc::clone(&state);
-            let windows = Arc::clone(&windows);
-            threads.push(
-                std::thread::Builder::new()
-                    .name(format!("pipe-stage-{k}"))
-                    .spawn(move || {
-                        drive_stage(&*stages, k, rx, tx, &state, &windows)
-                    })
-                    .context("spawning stage driver")?,
-            );
+        let n_drivers: usize = reps.iter().sum();
+        let mut threads = Vec::with_capacity(n_drivers + 2);
+        for (k, rxs) in stage_rxs.into_iter().enumerate() {
+            let next: Vec<SyncSender<PFlow>> = if k + 1 < n_stages {
+                stage_txs[k + 1].clone()
+            } else {
+                vec![collect_tx.clone()]
+            };
+            let replicated = rxs.len() > 1;
+            for (r, rx) in rxs.into_iter().enumerate() {
+                let next = next.clone();
+                let stages = Arc::clone(&stages);
+                let state = Arc::clone(&state);
+                let windows = Arc::clone(&windows);
+                let name = if replicated {
+                    format!("pipe-stage-{k}.{r}")
+                } else {
+                    format!("pipe-stage-{k}")
+                };
+                threads.push(
+                    std::thread::Builder::new()
+                        .name(name)
+                        .spawn(move || {
+                            drive_stage(
+                                &*stages, k, r, rx, next, &state, &windows,
+                            )
+                        })
+                        .context("spawning stage driver")?,
+                );
+            }
         }
+        // Only the feeder may hold stage-0 senders (and only drivers
+        // the rest), so dropping the feeder cascades shutdown stage by
+        // stage to the collector.
+        let feed_txs = std::mem::take(&mut stage_txs[0]);
+        drop(stage_txs);
+        drop(collect_tx);
         {
-            let collect_rx = receivers.next().expect("collector receiver");
             let stages = Arc::clone(&stages);
             let state = Arc::clone(&state);
             let stats = Arc::clone(&depth_stats);
@@ -2111,7 +2562,9 @@ impl PersistentEngine {
         }
         let (submit_tx, submit_rx) = sync_channel::<SubmitMsg>(cap.max(4));
         {
+            let stages = Arc::clone(&stages);
             let state = Arc::clone(&state);
+            let windows = Arc::clone(&windows);
             let counters = Arc::clone(&coalesce_counters);
             let micro = cfg.micro_batch_rows;
             let coalesce = cfg.coalesce;
@@ -2120,10 +2573,10 @@ impl PersistentEngine {
                     .name("pipe-feed".into())
                     .spawn(move || {
                         feeder_loop(
-                            submit_rx, feed_tx, credit_rxs, state, micro,
-                            coalesce, counters,
+                            stages, submit_rx, feed_txs, credit_rxs, windows,
+                            state, micro, coalesce, counters,
                         );
-                        // Dropping feed_tx cascades shutdown through the
+                        // Dropping feed_txs cascades shutdown through the
                         // stage drivers to the collector.
                     })
                     .context("spawning feeder")?,
@@ -2135,6 +2588,7 @@ impl PersistentEngine {
             state,
             threads,
             node_ids,
+            replica_nodes,
             depth_stats,
             windows,
             coalesce: coalesce_counters,
@@ -2205,6 +2659,20 @@ impl PersistentEngine {
         Arc::clone(&self.node_ids)
     }
 
+    /// Replica map: `replica_nodes()[k][r]` is the node hosting replica
+    /// `r` of stage `k` (replica 0 = the primary in [`node_ids`]).
+    ///
+    /// [`node_ids`]: PersistentEngine::node_ids
+    pub fn replica_nodes(&self) -> &[Vec<usize>] {
+        &self.replica_nodes
+    }
+
+    /// Cumulative per-replica occupancy/bubble counters across every
+    /// batch served — one entry per `(stage, replica)` lane.
+    pub fn replica_counters(&self) -> Vec<crate::metrics::ReplicaCounter> {
+        lock_state(&self.state).cp.replica_counters()
+    }
+
     /// The delivery window right now (== the configured depth unless
     /// the adaptive controller moved it; with uniform budgets this is
     /// exactly the PR-2 global credit window).
@@ -2238,7 +2706,7 @@ impl PersistentEngine {
         let (lo, hi) = self.budget_bounds.unwrap_or((1, usize::MAX));
         for (k, &t) in target.iter().enumerate().take(self.windows.n()) {
             let want = t.clamp(lo.max(1), hi);
-            let cur = self.windows.budgets[k].load(Ordering::SeqCst);
+            let cur = self.windows.stage_budget(k);
             if want > cur {
                 for _ in cur..want {
                     self.windows.widen(k, now);
@@ -2896,22 +3364,169 @@ mod tests {
         // flows through.
         w.narrow(0);
         assert_eq!(w.budgets_snapshot(), vec![1, 1]);
-        w.give(0, 7.0);
+        w.give(0, 0, 7.0);
         assert!(rxs[0].try_recv().is_err(), "swallowed credit leaked");
-        w.give(0, 9.0);
+        w.give(0, 0, 9.0);
         assert_eq!(rxs[0].try_recv().unwrap(), 9.0);
         // Widen cancels a pending narrow instead of double-counting.
         w.narrow(1);
         w.widen(1, 3.0);
         assert_eq!(w.budgets_snapshot(), vec![1, 1]);
         assert!(rxs[1].try_recv().is_ok(), "seed credit");
-        w.give(1, 5.0);
+        w.give(1, 0, 5.0);
         assert_eq!(
             rxs[1].try_recv().unwrap(),
             5.0,
             "cancelled narrow must not swallow the returned credit"
         );
         assert_eq!(w.delivery_budget(), 1);
+    }
+
+    #[test]
+    fn replicated_credit_windows_slot_by_congruence_class() {
+        // Stage 1 has two replicas: its micro-batches alternate between
+        // two independent slots, each seeded with the stage budget.
+        let (w, rxs) = CreditWindows::new_replicated(&[1, 1], &[1, 2]);
+        assert_eq!(w.n(), 2, "n() counts stages, not slots");
+        assert_eq!(rxs.len(), 3, "one receiver per slot");
+        assert_eq!(w.slot_of(0, 5), 0);
+        assert_eq!(w.slot_of(1, 4), 1);
+        assert_eq!(w.slot_of(1, 5), 2);
+        // Credits route by congruence class.
+        assert!(rxs[1].try_recv().is_ok(), "seed");
+        assert!(rxs[2].try_recv().is_ok(), "seed");
+        w.give(1, 4, 7.0); // even idx -> replica slot 0
+        assert_eq!(rxs[1].try_recv().unwrap(), 7.0);
+        assert!(rxs[2].try_recv().is_err());
+        // Stage-level resizes move every slot of the stage together.
+        w.widen(1, 3.0);
+        assert_eq!(rxs[1].try_recv().unwrap(), 3.0);
+        assert_eq!(rxs[2].try_recv().unwrap(), 3.0);
+        assert_eq!(w.budgets_snapshot(), vec![1, 2]);
+        w.narrow(1);
+        assert_eq!(w.budgets_snapshot(), vec![1, 1]);
+        assert_eq!(w.delivery_budget(), 1);
+    }
+
+    #[test]
+    fn replicated_stage_outputs_bit_identical_and_faster() {
+        // Skewed chain: stage 1 is the 4x bottleneck. Replicating it
+        // must leave outputs bit-identical (row-wise transform) while
+        // cutting the cross-batch makespan.
+        let shares = [1.0, 0.25, 1.0];
+        let t = input(8, 4);
+        let mk_engine = |reps: &[usize]| {
+            PersistentEngine::new(
+                Arc::new(SimStages::with_replicas(&shares, 1.0, reps)),
+                PersistentEngineConfig {
+                    micro_batch_rows: 1,
+                    initial_depth: 4,
+                    adaptive: None,
+                    ..Default::default()
+                },
+            )
+            .unwrap()
+        };
+        let base = mk_engine(&[1, 1, 1]);
+        let r_base = base.run(&t).unwrap();
+        let base_ms = base.makespan_ms();
+        let fanout = mk_engine(&[1, 2, 1]);
+        assert_eq!(fanout.replica_nodes()[1].len(), 2);
+        let r_fan = fanout.run(&t).unwrap();
+        let fan_ms = fanout.makespan_ms();
+        assert_eq!(r_base.output, r_fan.output, "replication changed bits");
+        assert!(
+            fan_ms < base_ms,
+            "k=2 on the bottleneck must beat k=1: {fan_ms:.2} vs \
+             {base_ms:.2}"
+        );
+        // Both bottleneck replicas saw work.
+        let rc = fanout.replica_counters();
+        let lanes: Vec<_> = rc.iter().filter(|c| c.stage == 1).collect();
+        assert_eq!(lanes.len(), 2);
+        for lane in lanes {
+            assert!(
+                lane.micro_batches > 0,
+                "replica {} of stage 1 idle",
+                lane.replica
+            );
+        }
+    }
+
+    #[test]
+    fn single_replica_engine_matches_unreplicated_constructor() {
+        // k=1 degeneracy: an all-ones replica map must reproduce the
+        // unreplicated engine bit-exactly — outputs and sim-ms both.
+        let t = input(6, 4);
+        let run_with = |stages: SimStages| {
+            let engine = PersistentEngine::new(
+                Arc::new(stages),
+                PersistentEngineConfig {
+                    micro_batch_rows: 1,
+                    initial_depth: 3,
+                    adaptive: None,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            let run = engine.run(&t).unwrap();
+            (run, engine.makespan_ms())
+        };
+        let (plain, plain_ms) =
+            run_with(SimStages::heterogeneous(&[1.0, 0.6, 0.4], 2.0));
+        let (mapped, mapped_ms) = run_with(SimStages::with_replicas(
+            &[1.0, 0.6, 0.4],
+            2.0,
+            &[1, 1, 1],
+        ));
+        assert_eq!(plain.output, mapped.output);
+        assert!((plain_ms - mapped_ms).abs() < 1e-9);
+        assert!(
+            (plain.timing.total_ms - mapped.timing.total_ms).abs() < 1e-9
+        );
+    }
+
+    #[test]
+    fn memory_pressure_narrows_window() {
+        // A zero-byte pool budget is always exceeded once anything has
+        // been recycled: the controller must narrow instead of widening,
+        // even though the skewed chain shows bottleneck bubbles.
+        let stages = Arc::new(SimStages::heterogeneous(&[1.0, 0.6, 0.4], 2.0));
+        let engine = PersistentEngine::new(
+            stages,
+            PersistentEngineConfig {
+                micro_batch_rows: 1,
+                initial_depth: 4,
+                adaptive: Some(AdaptiveDepthConfig {
+                    max_depth: 8,
+                    pool_bytes_budget: Some(0),
+                    ..AdaptiveDepthConfig::default()
+                }),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        // Park at least one buffer in the global pool so pooled_bytes()
+        // is non-zero regardless of what other tests drained.
+        crate::util::pool::BufferPool::global().give(vec![0.0f32; 256]);
+        let b = input(4, 4);
+        let mut handles = Vec::new();
+        for _ in 0..12 {
+            handles.push(engine.submit(&b).unwrap());
+        }
+        for h in handles {
+            h.wait().unwrap();
+        }
+        let report = engine.depth_report();
+        assert!(
+            report.narrowings >= 1,
+            "memory pressure never narrowed: {report:?}"
+        );
+        assert!(
+            report.max_depth <= 4,
+            "widened under memory pressure: {report:?}"
+        );
+        assert!(engine.current_depth() < 4, "{report:?}");
     }
 
     #[test]

@@ -23,7 +23,7 @@
 //! one-chunk traversal degenerates to `total = Σ comm + Σ compute`; a
 //! streamed run's makespan is the true overlapped end-to-end time.
 
-use crate::metrics::StageCounter;
+use crate::metrics::{ReplicaCounter, StageCounter};
 
 /// Timing breakdown for one pipeline traversal (serial or streamed).
 /// All fields are simulated milliseconds.
@@ -103,9 +103,12 @@ pub struct StepDetail {
 /// accounted order follows the node's actual serialization order.
 #[derive(Debug, Clone)]
 pub struct CriticalPath {
-    lanes: Vec<Lane>,
-    /// Node hosting each stage.
-    node_of: Vec<usize>,
+    /// `lanes[k][r]`: stage `k`, replica `r`. Unreplicated stages have a
+    /// single lane, so every pre-replication schedule is the `r = 0`
+    /// special case and accounts bit-identically.
+    lanes: Vec<Vec<Lane>>,
+    /// Node hosting each (stage, replica).
+    node_of: Vec<Vec<usize>>,
     /// When each distinct node's single device frees up.
     node_free: std::collections::HashMap<usize, f64>,
     makespan_ms: f64,
@@ -115,10 +118,28 @@ pub struct CriticalPath {
 
 impl CriticalPath {
     /// `node_ids[k]` is the node hosting stage `k` (duplicates allowed —
-    /// shared nodes serialize their stages).
+    /// shared nodes serialize their stages). One lane per stage.
     pub fn new(node_ids: &[usize]) -> CriticalPath {
+        let per_stage: Vec<Vec<usize>> =
+            node_ids.iter().map(|&n| vec![n]).collect();
+        Self::new_replicated(&per_stage)
+    }
+
+    /// Replicated constructor: `node_ids[k]` lists the node hosting each
+    /// replica of stage `k` (must be non-empty per stage). Replicas on
+    /// distinct nodes get independent device clocks — that independence
+    /// is exactly where data-parallel fan-out earns its speedup — while
+    /// replicas sharing a node still serialize through `node_free`.
+    pub fn new_replicated(node_ids: &[Vec<usize>]) -> CriticalPath {
+        assert!(
+            node_ids.iter().all(|reps| !reps.is_empty()),
+            "every stage needs >= 1 replica"
+        );
         CriticalPath {
-            lanes: vec![Lane::default(); node_ids.len()],
+            lanes: node_ids
+                .iter()
+                .map(|reps| vec![Lane::default(); reps.len()])
+                .collect(),
             node_of: node_ids.to_vec(),
             node_free: std::collections::HashMap::new(),
             makespan_ms: 0.0,
@@ -129,6 +150,11 @@ impl CriticalPath {
 
     pub fn n_stages(&self) -> usize {
         self.lanes.len()
+    }
+
+    /// Replica count of `stage`.
+    pub fn replicas(&self, stage: usize) -> usize {
+        self.lanes[stage].len()
     }
 
     /// Account one micro-batch through `stage`. `ready_in_ms` is the
@@ -159,9 +185,23 @@ impl CriticalPath {
         compute_ms: f64,
         bytes: u64,
     ) -> StepDetail {
-        let node = self.node_of[stage];
+        self.step_detail_on(stage, 0, ready_in_ms, comm_ms, compute_ms, bytes)
+    }
+
+    /// [`CriticalPath::step_detail`] against a specific replica lane of
+    /// `stage`. Replica 0 of an unreplicated stage is the plain path.
+    pub fn step_detail_on(
+        &mut self,
+        stage: usize,
+        replica: usize,
+        ready_in_ms: f64,
+        comm_ms: f64,
+        compute_ms: f64,
+        bytes: u64,
+    ) -> StepDetail {
+        let node = self.node_of[stage][replica];
         let node_free = self.node_free.get(&node).copied().unwrap_or(0.0);
-        let lane = &mut self.lanes[stage];
+        let lane = &mut self.lanes[stage][replica];
         let arrive = ready_in_ms + comm_ms;
         let floor = lane.free_ms.max(node_free);
         let mut bubble = 0.0;
@@ -202,14 +242,17 @@ impl CriticalPath {
     }
 
     pub fn compute_ms(&self) -> f64 {
-        self.lanes.iter().map(|l| l.busy_ms).sum()
+        self.lanes.iter().flatten().map(|l| l.busy_ms).sum()
     }
 
     pub fn comm_ms(&self) -> f64 {
-        self.lanes.iter().map(|l| l.comm_ms).sum::<f64>() + self.final_comm_ms
+        self.lanes.iter().flatten().map(|l| l.comm_ms).sum::<f64>()
+            + self.final_comm_ms
     }
 
-    /// Assemble the traversal's [`PipelineTiming`].
+    /// Assemble the traversal's [`PipelineTiming`]. Replicated stages
+    /// report one aggregate entry (summed over replicas) attributed to
+    /// the primary (replica 0) node.
     pub fn timing(&self) -> PipelineTiming {
         PipelineTiming {
             total_ms: self.makespan_ms,
@@ -219,29 +262,51 @@ impl CriticalPath {
                 .lanes
                 .iter()
                 .enumerate()
-                .map(|(k, l)| StageTiming {
+                .map(|(k, reps)| StageTiming {
                     stage: k,
-                    node: self.node_of[k],
-                    compute_ms: l.busy_ms,
-                    comm_ms: l.comm_ms,
+                    node: self.node_of[k][0],
+                    compute_ms: reps.iter().map(|l| l.busy_ms).sum(),
+                    comm_ms: reps.iter().map(|l| l.comm_ms).sum(),
                 })
                 .collect(),
             activation_bytes: self.activation_bytes,
         }
     }
 
-    /// Per-stage occupancy/bubble counters for the metrics layer.
+    /// Per-stage occupancy/bubble counters for the metrics layer
+    /// (aggregated over replicas; node is the primary's).
     pub fn counters(&self) -> Vec<StageCounter> {
         self.lanes
             .iter()
             .enumerate()
-            .map(|(k, l)| StageCounter {
+            .map(|(k, reps)| StageCounter {
                 stage: k,
-                node: self.node_of[k],
-                busy_ms: l.busy_ms,
-                bubble_ms: l.bubble_ms,
-                comm_ms: l.comm_ms,
-                micro_batches: l.micro_batches,
+                node: self.node_of[k][0],
+                busy_ms: reps.iter().map(|l| l.busy_ms).sum(),
+                bubble_ms: reps.iter().map(|l| l.bubble_ms).sum(),
+                comm_ms: reps.iter().map(|l| l.comm_ms).sum(),
+                micro_batches: reps.iter().map(|l| l.micro_batches).sum(),
+            })
+            .collect()
+    }
+
+    /// Per-replica occupancy/bubble counters — the scale-out view the
+    /// aggregated [`CriticalPath::counters`] cannot show (a starved
+    /// replica hides inside its stage's sum).
+    pub fn replica_counters(&self) -> Vec<ReplicaCounter> {
+        self.lanes
+            .iter()
+            .enumerate()
+            .flat_map(|(k, reps)| {
+                reps.iter().enumerate().map(move |(r, l)| ReplicaCounter {
+                    stage: k,
+                    replica: r,
+                    node: self.node_of[k][r],
+                    busy_ms: l.busy_ms,
+                    bubble_ms: l.bubble_ms,
+                    comm_ms: l.comm_ms,
+                    micro_batches: l.micro_batches,
+                })
             })
             .collect()
     }
@@ -346,6 +411,61 @@ mod tests {
         // Back-to-back arrival while busy: no bubble.
         let d3 = cp.step_detail(0, 0.0, 0.0, 10.0, 0);
         assert_eq!(d3.bubble_ms, 0.0);
+    }
+
+    #[test]
+    fn replica_lanes_overlap_and_aggregate() {
+        // Stage 0 has two replicas on distinct nodes: both micro-batches
+        // start at t=0 and finish at t=10 — true overlap a single lane
+        // cannot produce.
+        let mut cp = CriticalPath::new_replicated(&[vec![0, 1]]);
+        let d0 = cp.step_detail_on(0, 0, 0.0, 0.0, 10.0, 0);
+        let d1 = cp.step_detail_on(0, 1, 0.0, 0.0, 10.0, 0);
+        assert!((d0.done_ms - 10.0).abs() < 1e-9);
+        assert!((d1.done_ms - 10.0).abs() < 1e-9);
+        assert!((cp.makespan_ms() - 10.0).abs() < 1e-9);
+        assert_eq!(cp.replicas(0), 2);
+        // Aggregated counters: one stage entry summing both lanes.
+        let c = cp.counters();
+        assert_eq!(c.len(), 1);
+        assert_eq!(c[0].micro_batches, 2);
+        assert!((c[0].busy_ms - 20.0).abs() < 1e-9);
+        // Per-replica counters expose the individual lanes.
+        let rc = cp.replica_counters();
+        assert_eq!(rc.len(), 2);
+        assert_eq!((rc[0].replica, rc[1].replica), (0, 1));
+        assert_eq!((rc[0].node, rc[1].node), (0, 1));
+        assert!((rc[0].busy_ms - 10.0).abs() < 1e-9);
+        assert_eq!(rc[1].micro_batches, 1);
+    }
+
+    #[test]
+    fn replicas_sharing_a_node_still_serialize() {
+        let mut cp = CriticalPath::new_replicated(&[vec![3, 3]]);
+        let d0 = cp.step_detail_on(0, 0, 0.0, 0.0, 10.0, 0);
+        let d1 = cp.step_detail_on(0, 1, 0.0, 0.0, 10.0, 0);
+        assert!((d0.done_ms - 10.0).abs() < 1e-9);
+        assert!((d1.done_ms - 20.0).abs() < 1e-9, "same node must serialize");
+    }
+
+    #[test]
+    fn single_replica_matches_plain_constructor() {
+        let mut a = CriticalPath::new(&[0, 1]);
+        let mut b = CriticalPath::new_replicated(&[vec![0], vec![1]]);
+        for cp in [&mut a, &mut b] {
+            let r = cp.step(0, 0.0, 1.0, 10.0, 8);
+            cp.step(1, r, 2.0, 5.0, 8);
+        }
+        assert_eq!(a.makespan_ms(), b.makespan_ms());
+        assert_eq!(a.compute_ms(), b.compute_ms());
+        assert_eq!(a.comm_ms(), b.comm_ms());
+        let (ca, cb) = (a.counters(), b.counters());
+        assert_eq!(ca.len(), cb.len());
+        for (x, y) in ca.iter().zip(&cb) {
+            assert_eq!(x.busy_ms, y.busy_ms);
+            assert_eq!(x.bubble_ms, y.bubble_ms);
+            assert_eq!(x.micro_batches, y.micro_batches);
+        }
     }
 
     #[test]

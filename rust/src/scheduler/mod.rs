@@ -258,6 +258,44 @@ impl Scheduler {
         best
     }
 
+    /// Scale-out: Algorithm 1 extended from one node to a *replica set*.
+    /// Scores every candidate with the Eq. 4 weighted total exactly as
+    /// [`Scheduler::select_node`] would, then keeps the top `k` distinct
+    /// nodes. Guard clauses (overload / latency / resources / offline)
+    /// apply per candidate, so a set is only as large as the nodes that
+    /// can actually afford `req` — callers get `result.len() <= k` and
+    /// must decide whether a short set is acceptable. Each placed member
+    /// counts as one scheduling decision.
+    pub fn select_replica_set(
+        &self,
+        nodes: &[Arc<VirtualNode>],
+        req: &TaskRequirements,
+        k: usize,
+    ) -> Vec<(Arc<VirtualNode>, ScoreBreakdown)> {
+        let mut scored: Vec<(Arc<VirtualNode>, ScoreBreakdown)> = Vec::new();
+        for node in nodes {
+            match self.score_node(node, req) {
+                Ok(score) => scored.push((Arc::clone(node), score)),
+                Err(reason) => {
+                    let mut state = self.state.lock().unwrap();
+                    let key = match reason {
+                        SkipReason::Overloaded => "overloaded",
+                        SkipReason::HighLatency => "high_latency",
+                        SkipReason::InsufficientResources => "insufficient",
+                        SkipReason::Offline => "offline",
+                    };
+                    *state.skips.entry(key).or_insert(0) += 1;
+                }
+            }
+        }
+        scored.sort_by(|a, b| b.1.total.total_cmp(&a.1.total));
+        scored.truncate(k);
+        if !scored.is_empty() {
+            self.state.lock().unwrap().decisions += scored.len() as u64;
+        }
+        scored
+    }
+
     /// §V extension: Algorithm 1 with Eq. 6's *current* load replaced by
     /// the predictor's forecast (when available), so ramping nodes shed
     /// new work one period earlier.
@@ -744,6 +782,44 @@ mod tests {
             )
             .unwrap();
         assert_eq!(sel.id(), 1);
+    }
+
+    #[test]
+    fn replica_set_takes_top_k_and_respects_guards() {
+        let sched = Scheduler::new(ScoringWeights::default());
+        let nodes = vec![
+            mk_node(0, 1.0, 1024.0),
+            mk_node(1, 1.0, 1024.0),
+            mk_node(2, 1.0, 1024.0),
+        ];
+        // Node 1 is busy: Eq. 8 pushes it below the idle nodes.
+        for _ in 0..3 {
+            sched.task_started(1);
+        }
+        nodes[2].set_online(false);
+        let set = sched.select_replica_set(&nodes, &req(), 2);
+        // Offline node excluded, so only two candidates survive; the
+        // idle node must outrank the busy one.
+        assert_eq!(set.len(), 2);
+        assert_eq!(set[0].0.id(), 0);
+        assert_eq!(set[1].0.id(), 1);
+        assert!(set[0].1.total >= set[1].1.total);
+        // Asking for more replicas than placeable nodes shortens the set.
+        let set = sched.select_replica_set(&nodes, &req(), 5);
+        assert_eq!(set.len(), 2);
+    }
+
+    #[test]
+    fn replica_set_of_one_matches_select_node() {
+        // k=1 degeneracy: the set head is exactly Algorithm 1's pick.
+        let sched = Scheduler::new(ScoringWeights::default());
+        let nodes = vec![mk_node(0, 1.0, 1024.0), mk_node(1, 0.4, 256.0)];
+        sched.task_started(1);
+        let (single, s1) = sched.select_node(&nodes, &req()).unwrap();
+        let set = sched.select_replica_set(&nodes, &req(), 1);
+        assert_eq!(set.len(), 1);
+        assert_eq!(set[0].0.id(), single.id());
+        assert!((set[0].1.total - s1.total).abs() < 1e-12);
     }
 
     #[test]

@@ -86,12 +86,17 @@ impl DistributedService {
         per_stage_windows: bool,
         coalesce: bool,
         wire: Option<&transport::WireConfig>,
+        replicated: bool,
     ) -> bool {
+        // Replication forces the engine: replicas only exist in the
+        // streaming data plane (the serial schedule runs primaries only,
+        // which would silently waste every placed replica).
         pipeline_depth > 1
             || adaptive.is_some()
             || per_stage_windows
             || coalesce
             || wire.is_some()
+            || replicated
     }
 
     /// Build the persistent engine for a deployment (None when the
@@ -108,12 +113,14 @@ impl DistributedService {
         wire: Option<&transport::WireConfig>,
         carried: Option<LearnedWindows>,
     ) -> Result<Option<Arc<engine::PersistentEngine>>> {
+        let replicated = dep.stages.iter().any(|s| s.replica_count() > 1);
         if !Self::wants_engine(
             pipeline_depth,
             adaptive.as_ref(),
             per_stage_windows,
             coalesce,
             wire,
+            replicated,
         ) {
             return Ok(None);
         }
@@ -147,16 +154,20 @@ impl DistributedService {
             // the coordinator keeps link-model mirrors, so scheduling
             // and sim accounting match the in-process chain.
             Some(w) => {
-                let specs = transport::block_specs_for(
+                // One deploy-spec group per stage (one spec per replica,
+                // one agent connection per spec) — singleton groups are
+                // byte-identical to the old per-stage connect.
+                let groups = transport::block_spec_groups_for(
                     dep,
                     &w.params,
                     &w.artifacts_dir,
                 );
-                let stages = Arc::new(transport::WireStages::connect_blocks(
-                    &w.addrs,
-                    specs,
-                    w.connect_timeout,
-                )?);
+                let stages =
+                    Arc::new(transport::WireStages::connect_replicated(
+                        &w.addrs,
+                        groups,
+                        w.connect_timeout,
+                    )?);
                 engine::PersistentEngine::new(stages, cfg)?
             }
             None => {
@@ -470,6 +481,12 @@ pub struct ServeReport {
     /// Wire-transport frame/byte/codec counters during this run (None
     /// on the in-process transport).
     pub wire: Option<crate::metrics::wire::WireStats>,
+    /// Replica map: `replica_map[k]` lists the nodes hosting stage `k`'s
+    /// replicas, primary first (all singletons when replication is off).
+    pub replica_map: Vec<Vec<usize>>,
+    /// Per-(stage, replica) occupancy/bubble counters from the engine's
+    /// critical path (empty when no engine ran).
+    pub replica_counters: Vec<crate::metrics::ReplicaCounter>,
 }
 
 /// The leader.
@@ -559,17 +576,46 @@ impl EdgeServer {
             None => partitioner::plan(&manifest, n_parts)?,
         };
 
+        // Scale-out: distribute the policy's extra-replica budget over
+        // stages bottleneck-first on the plan's per-partition costs, so
+        // a skewed profile concentrates copies on its hottest stage.
+        let replica_counts = if config.replicas.is_off() {
+            vec![1; plan.partitions.len()]
+        } else {
+            let spare = cluster
+                .online_count()
+                .saturating_sub(plan.partitions.len());
+            let costs: Vec<f64> =
+                plan.partitions.iter().map(|p| p.cost as f64).collect();
+            partitioner::replica_counts(
+                &costs,
+                config.replicas.extra_budget(spare),
+            )
+        };
+
         let mut deployer = ModelDeployer::new(Arc::clone(&manifest));
         deployer.use_model_cache = config.model_cache;
         let deployer = Arc::new(deployer);
         if config.model_cache {
             // Warm deployment: ship once so the measured run reuses the
-            // node-local model cache (the +Cache configuration).
-            let warm = deployer.deploy(&plan, &cluster, &scheduler, config.batch)?;
+            // node-local model cache (the +Cache configuration). Warm
+            // the replica placements too — their nodes cache as well.
+            let warm = deployer.deploy_replicated(
+                &plan,
+                &cluster,
+                &scheduler,
+                config.batch,
+                &replica_counts,
+            )?;
             deployer.undeploy(&warm);
         }
-        let deployment =
-            Arc::new(deployer.deploy(&plan, &cluster, &scheduler, config.batch)?);
+        let deployment = Arc::new(deployer.deploy_replicated(
+            &plan,
+            &cluster,
+            &scheduler,
+            config.batch,
+            &replica_counts,
+        )?);
 
         let pipeline_depth = config.pipeline_depth.max(1);
         let adaptive = config.adaptive_depth.then(|| {
@@ -690,6 +736,14 @@ impl EdgeServer {
         let dep = Arc::clone(&*self.service.deployment.read().unwrap());
         let (final_depth, depth_report) = self.service.depth_status();
         let (stage_budgets, coalesce_stats) = self.service.window_status();
+        // The engine is authoritative for the replica map (wire chains
+        // replicate at the connection layer); a serial run reports the
+        // deployment's placement.
+        let (replica_map, replica_counters) =
+            match &*self.service.engine.lock().unwrap() {
+                Some(e) => (e.replica_nodes().to_vec(), e.replica_counters()),
+                None => (dep.replica_node_ids(), Vec::new()),
+            };
         let snapshot = self.monitor.latest();
         Ok(ServeReport {
             metrics,
@@ -725,6 +779,8 @@ impl EdgeServer {
             data_plane,
             pool_stats,
             wire,
+            replica_map,
+            replica_counters,
         })
     }
 
@@ -737,11 +793,28 @@ impl EdgeServer {
             .min(self.manifest.blocks.len())
             .max(1);
         let plan = partitioner::plan(&self.manifest, n)?;
-        let new_dep = Arc::new(self.deployer.deploy(
+        // Re-derive the replica budget for the *new* topology: the node
+        // that just left may have hosted a replica.
+        let replica_counts = if self.config.replicas.is_off() {
+            vec![1; plan.partitions.len()]
+        } else {
+            let spare = self
+                .cluster
+                .online_count()
+                .saturating_sub(plan.partitions.len());
+            let costs: Vec<f64> =
+                plan.partitions.iter().map(|p| p.cost as f64).collect();
+            partitioner::replica_counts(
+                &costs,
+                self.config.replicas.extra_budget(spare),
+            )
+        };
+        let new_dep = Arc::new(self.deployer.deploy_replicated(
             &plan,
             &self.cluster,
             &self.scheduler,
             self.config.batch,
+            &replica_counts,
         )?);
         let old = match self.service.replace_deployment(Arc::clone(&new_dep)) {
             Ok(old) => old,

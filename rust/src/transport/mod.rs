@@ -12,25 +12,31 @@
 //!   over a length-prefixed binary protocol ([`frame`]) on a Unix
 //!   domain socket or TCP connection.
 //!
-//! The engine runs one driver thread per stage, so `WireStages` keeps
-//! one connection per stage (agents are assigned round-robin when there
-//! are fewer agents than stages) and serializes the blocking
-//! request/response round-trip per connection — pipeline parallelism
-//! across stages is preserved exactly as in-process. A dropped
-//! connection fails the in-flight `execute` (the engine maps that to a
-//! per-batch failure) and marks the stage dead so later micro-batches
-//! fail fast instead of hanging.
+//! The engine runs one driver thread per (stage, replica), so
+//! `WireStages` keeps one connection per *replica* (agents are assigned
+//! round-robin when there are fewer agents than connections). Each
+//! connection pipelines: the writer lock is held only while a frame
+//! goes onto the wire, and a dedicated reader thread matches replies to
+//! callers by sequence number — concurrent `execute_on` calls on one
+//! connection overlap on the socket instead of serializing a full
+//! round-trip under one lock. A dropped connection fails everything in
+//! flight on it (the engine maps those to per-batch failures) and marks
+//! that replica dead so later micro-batches route around it or fail
+//! fast instead of hanging.
 
 pub mod agent;
 pub mod frame;
 
+use std::collections::HashMap;
 use std::fmt;
 use std::io::{self, Read, Write};
 use std::net::TcpStream;
 use std::os::unix::net::UnixStream;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Mutex, MutexGuard};
+use std::sync::mpsc::{self, SyncSender};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
@@ -266,6 +272,33 @@ impl<S: StageExec> StageExec for InprocTransport<S> {
     fn execute(&self, stage: usize, input: Tensor) -> Result<(Tensor, f64)> {
         self.inner.execute(stage, input)
     }
+
+    // Replica methods forward too — relying on the trait defaults here
+    // would hide an inner chain's replication behind the wrapper.
+    fn replicas(&self, stage: usize) -> usize {
+        self.inner.replicas(stage)
+    }
+
+    fn replica_node_id(&self, stage: usize, replica: usize) -> usize {
+        self.inner.replica_node_id(stage, replica)
+    }
+
+    fn replica_alive(&self, stage: usize, replica: usize) -> bool {
+        self.inner.replica_alive(stage, replica)
+    }
+
+    fn comm_in_on(&self, stage: usize, replica: usize, bytes: u64) -> f64 {
+        self.inner.comm_in_on(stage, replica, bytes)
+    }
+
+    fn execute_on(
+        &self,
+        stage: usize,
+        replica: usize,
+        input: Tensor,
+    ) -> Result<(Tensor, f64)> {
+        self.inner.execute_on(stage, replica, input)
+    }
 }
 
 impl<S: StageExec> Transport for InprocTransport<S> {
@@ -278,31 +311,233 @@ impl<S: StageExec> Transport for InprocTransport<S> {
     }
 }
 
-/// One coordinator-side stage connection.
-struct StageConn {
-    stream: Mutex<WireStream>,
-    seq: AtomicU64,
-    /// Set on any protocol/socket failure: later `execute` calls fail
-    /// fast instead of writing into a broken pipe.
-    dead: AtomicBool,
-    node_id: usize,
-    endpoint: String,
+/// Reply slots for requests in flight on one connection, keyed by seq.
+type PendingMap = Mutex<HashMap<u64, SyncSender<Result<(Tensor, f64)>>>>;
+
+fn pending_lock(
+    p: &PendingMap,
+) -> MutexGuard<'_, HashMap<u64, SyncSender<Result<(Tensor, f64)>>>> {
+    // Holders only insert/remove; a poisoned map is still consistent
+    // enough to drain during teardown.
+    match p.lock() {
+        Ok(g) => g,
+        Err(e) => e.into_inner(),
+    }
 }
 
-impl StageConn {
-    fn lock(&self) -> MutexGuard<'_, WireStream> {
-        // A poisoned lock means a previous round-trip panicked; the
+/// Mark a connection dead and fail every request still in flight on it.
+/// `dead` is flipped *before* the drain: a sender that inserts its slot
+/// after the drain is guaranteed to observe the flag (the pending-map
+/// mutex orders the two) and reclaims the slot instead of waiting on a
+/// reply that will never come.
+fn fail_conn(dead: &AtomicBool, pending: &PendingMap, why: &str) {
+    dead.store(true, Ordering::Release);
+    for (_, tx) in pending_lock(pending).drain() {
+        let _ = tx.send(Err(anyhow::anyhow!("{why}")));
+    }
+}
+
+/// Per-connection reply pump: reads frames off the socket and routes
+/// each to the caller waiting on its seq. A stage-level `ExecuteErr`
+/// fails only that batch (the connection stays healthy); any protocol
+/// violation or socket error kills the connection and fails everything
+/// still in flight.
+fn reader_loop(
+    mut stream: WireStream,
+    pending: Arc<PendingMap>,
+    dead: Arc<AtomicBool>,
+    stage: usize,
+    endpoint: String,
+) {
+    loop {
+        match frame::read_frame(&mut stream) {
+            Ok(Frame::ExecuteOk { seq, compute_ms, tensor }) => {
+                match pending_lock(&pending).remove(&seq) {
+                    Some(tx) => {
+                        let _ = tx.send(Ok((tensor, compute_ms)));
+                    }
+                    None => {
+                        tensor.recycle();
+                        fail_conn(
+                            &dead,
+                            &pending,
+                            &format!(
+                                "stage {stage}: agent at {endpoint} answered \
+                                 unknown seq {seq}"
+                            ),
+                        );
+                        stream.shutdown();
+                        return;
+                    }
+                }
+            }
+            Ok(Frame::ExecuteErr { seq, message }) => {
+                match pending_lock(&pending).remove(&seq) {
+                    Some(tx) => {
+                        let _ = tx.send(Err(anyhow::anyhow!(
+                            "stage {stage} ({endpoint}): {message}"
+                        )));
+                    }
+                    None => {
+                        fail_conn(
+                            &dead,
+                            &pending,
+                            &format!(
+                                "stage {stage}: agent at {endpoint} errored \
+                                 unknown seq {seq}"
+                            ),
+                        );
+                        stream.shutdown();
+                        return;
+                    }
+                }
+            }
+            Ok(other) => {
+                fail_conn(
+                    &dead,
+                    &pending,
+                    &format!(
+                        "stage {stage}: unexpected {} frame from {endpoint}",
+                        other.kind_name()
+                    ),
+                );
+                stream.shutdown();
+                return;
+            }
+            Err(e) => {
+                fail_conn(
+                    &dead,
+                    &pending,
+                    &format!(
+                        "stage {stage}: agent at {endpoint} disconnected \
+                         mid-batch: {e:#}"
+                    ),
+                );
+                stream.shutdown();
+                return;
+            }
+        }
+    }
+}
+
+/// One coordinator-side replica connection.
+///
+/// The writer lock is held only while a frame is being written; replies
+/// are matched to callers by seq via the [`reader_loop`] thread, so
+/// concurrent `execute_on` calls pipeline on the socket instead of
+/// serializing a full round-trip under one lock.
+struct ReplicaConn {
+    writer: Mutex<WireStream>,
+    pending: Arc<PendingMap>,
+    seq: AtomicU64,
+    /// Set on any protocol/socket failure: later calls fail fast and
+    /// every in-flight request is failed by [`fail_conn`].
+    dead: Arc<AtomicBool>,
+    node_id: usize,
+    endpoint: String,
+    reader: Option<JoinHandle<()>>,
+}
+
+impl ReplicaConn {
+    fn start(
+        stream: WireStream,
+        spec: &DeploySpec,
+        stage: usize,
+        replica: usize,
+        endpoint: String,
+    ) -> Result<ReplicaConn> {
+        let reader_stream = stream.try_clone().with_context(|| {
+            format!("cloning stage {stage} connection to {endpoint}")
+        })?;
+        let pending: Arc<PendingMap> = Arc::new(Mutex::new(HashMap::new()));
+        let dead = Arc::new(AtomicBool::new(false));
+        let reader = {
+            let pending = Arc::clone(&pending);
+            let dead = Arc::clone(&dead);
+            let endpoint = endpoint.clone();
+            std::thread::Builder::new()
+                .name(format!("wire-read-{stage}.{replica}"))
+                .spawn(move || {
+                    reader_loop(reader_stream, pending, dead, stage, endpoint)
+                })
+                .context("spawning wire reader thread")?
+        };
+        Ok(ReplicaConn {
+            writer: Mutex::new(stream),
+            pending,
+            seq: AtomicU64::new(0),
+            dead,
+            node_id: spec.node_id() as usize,
+            endpoint,
+            reader: Some(reader),
+        })
+    }
+
+    fn writer_lock(&self) -> MutexGuard<'_, WireStream> {
+        // A poisoned lock means a previous write panicked; the
         // connection is already marked dead, so the guard is safe to
         // reuse for teardown.
-        match self.stream.lock() {
+        match self.writer.lock() {
             Ok(g) => g,
             Err(p) => p.into_inner(),
         }
     }
 }
 
-/// Remote stage chain: stage `i` is hosted by the agent at
-/// `addrs[i % addrs.len()]`, driven over the [`frame`] protocol.
+/// Handshake with the agent at `addr` and ship one stage's deployment.
+/// Fails (with the agent's address in the error) if the agent is
+/// unreachable, speaks the wrong protocol version, or rejects the
+/// deployment.
+fn dial_stage(
+    addr: &AgentAddr,
+    spec: &DeploySpec,
+    stage: usize,
+    timeout: Duration,
+) -> Result<WireStream> {
+    let mut stream = addr.connect_retry(timeout)?;
+    frame::write_frame(&mut stream, &Frame::Hello { version: WIRE_VERSION })
+        .with_context(|| format!("handshake with {addr}"))?;
+    match frame::read_frame(&mut stream)
+        .with_context(|| format!("handshake with {addr}"))?
+    {
+        Frame::HelloAck { version } if version == WIRE_VERSION => {}
+        Frame::HelloAck { version } => bail!(
+            "agent at {addr} speaks protocol v{version}, \
+             coordinator needs v{WIRE_VERSION}"
+        ),
+        other => bail!(
+            "agent at {addr} answered Hello with {}",
+            other.kind_name()
+        ),
+    }
+    let deploy = match spec {
+        DeploySpec::Sim(s) => Frame::DeploySim(s.clone()),
+        DeploySpec::Blocks(s) => Frame::DeployBlocks(s.clone()),
+    };
+    frame::write_frame(&mut stream, &deploy)
+        .with_context(|| format!("deploying stage {stage} to {addr}"))?;
+    match frame::read_frame(&mut stream)
+        .with_context(|| format!("deploying stage {stage} to {addr}"))?
+    {
+        Frame::DeployAck { stage: acked } if acked == spec.stage() => {}
+        Frame::DeployAck { stage: acked } => bail!(
+            "agent at {addr} acked stage {acked}, expected {}",
+            spec.stage()
+        ),
+        Frame::ExecuteErr { message, .. } => bail!(
+            "agent at {addr} rejected stage {stage}: {message}"
+        ),
+        other => bail!(
+            "agent at {addr} answered deploy with {}",
+            other.kind_name()
+        ),
+    }
+    Ok(stream)
+}
+
+/// Remote stage chain: each (stage, replica) is hosted by its own agent
+/// connection (assigned round-robin over `addrs` in flattened order),
+/// driven over the [`frame`] protocol.
 ///
 /// `comm_in`/`comm_out` run against coordinator-side *mirror* nodes
 /// built from the same specs the agents deployed, so the simulated link
@@ -310,7 +545,8 @@ impl StageConn {
 /// chain — the wire replaces the compute hop, not the link model.
 pub struct WireStages {
     kind: TransportKind,
-    conns: Vec<StageConn>,
+    /// `conns[stage][replica]`; replica 0 is the stage's primary.
+    conns: Vec<Vec<ReplicaConn>>,
     mirrors: Vec<VirtualNode>,
 }
 
@@ -323,11 +559,49 @@ impl WireStages {
         nominal_ms: f64,
         timeout: Duration,
     ) -> Result<WireStages> {
-        let specs = SimStageSpec::heterogeneous(cpu_shares, nominal_ms)
-            .into_iter()
-            .map(DeploySpec::Sim)
-            .collect();
-        WireStages::connect(addrs, specs, timeout)
+        WireStages::connect_sim_replicated(
+            addrs,
+            cpu_shares,
+            nominal_ms,
+            &vec![1; cpu_shares.len()],
+            timeout,
+        )
+    }
+
+    /// Replicated sim chain: stage `k` gets `replicas[k]` connections,
+    /// each hosting the same transform on its own fresh virtual node
+    /// (primaries keep node ids `0..n`, extras take sequential ids from
+    /// `n` — the wire twin of `SimStages::with_replicas`).
+    pub fn connect_sim_replicated(
+        addrs: &[AgentAddr],
+        cpu_shares: &[f64],
+        nominal_ms: f64,
+        replicas: &[usize],
+        timeout: Duration,
+    ) -> Result<WireStages> {
+        anyhow::ensure!(
+            replicas.len() == cpu_shares.len(),
+            "need one replica count per stage ({} != {})",
+            replicas.len(),
+            cpu_shares.len()
+        );
+        let primaries = SimStageSpec::heterogeneous(cpu_shares, nominal_ms);
+        let mut next_id = primaries.len() as u32;
+        let mut specs = Vec::with_capacity(primaries.len());
+        for (p, &r) in primaries.into_iter().zip(replicas) {
+            anyhow::ensure!(r >= 1, "stage {} needs >= 1 replica", p.stage);
+            let mut group = Vec::with_capacity(r);
+            for _ in 1..r {
+                let mut extra = p.clone();
+                extra.node_id = next_id;
+                extra.name = format!("sim-{next_id}");
+                next_id += 1;
+                group.push(DeploySpec::Sim(extra));
+            }
+            group.insert(0, DeploySpec::Sim(p));
+            specs.push(group);
+        }
+        WireStages::connect_replicated(addrs, specs, timeout)
     }
 
     /// Dial agents and deploy real block-range stages.
@@ -343,78 +617,72 @@ impl WireStages {
         )
     }
 
-    /// Dial one connection per stage, handshake, and ship the stage's
-    /// deployment. Fails (with the agent's address in the error) if any
-    /// agent is unreachable, speaks the wrong protocol version, or
-    /// rejects its deployment.
+    /// Dial one connection per stage (no replication), handshake, and
+    /// ship each stage's deployment.
     pub fn connect(
         addrs: &[AgentAddr],
         specs: Vec<DeploySpec>,
         timeout: Duration,
     ) -> Result<WireStages> {
+        WireStages::connect_replicated(
+            addrs,
+            specs.into_iter().map(|s| vec![s]).collect(),
+            timeout,
+        )
+    }
+
+    /// Dial one connection per (stage, replica) — `specs[k]` lists the
+    /// per-replica deployments for stage `k`, replica 0 first — and
+    /// start each connection's reply reader.
+    pub fn connect_replicated(
+        addrs: &[AgentAddr],
+        specs: Vec<Vec<DeploySpec>>,
+        timeout: Duration,
+    ) -> Result<WireStages> {
         anyhow::ensure!(!addrs.is_empty(), "no agent addresses to connect to");
         anyhow::ensure!(!specs.is_empty(), "no stages to deploy");
+        anyhow::ensure!(
+            specs.iter().all(|g| !g.is_empty()),
+            "every stage needs at least one replica spec"
+        );
         let kind = match &addrs[0] {
             AgentAddr::Uds(_) => TransportKind::Uds,
             AgentAddr::Tcp(_) => TransportKind::Tcp,
         };
         let mut conns = Vec::with_capacity(specs.len());
         let mut mirrors = Vec::with_capacity(specs.len());
-        for (i, spec) in specs.into_iter().enumerate() {
-            let addr = &addrs[i % addrs.len()];
-            let mut stream = addr.connect_retry(timeout)?;
-            frame::write_frame(&mut stream, &Frame::Hello { version: WIRE_VERSION })
-                .with_context(|| format!("handshake with {addr}"))?;
-            match frame::read_frame(&mut stream)
-                .with_context(|| format!("handshake with {addr}"))?
-            {
-                Frame::HelloAck { version } if version == WIRE_VERSION => {}
-                Frame::HelloAck { version } => bail!(
-                    "agent at {addr} speaks protocol v{version}, \
-                     coordinator needs v{WIRE_VERSION}"
-                ),
-                other => bail!(
-                    "agent at {addr} answered Hello with {}",
-                    other.kind_name()
-                ),
+        let mut dialed = 0usize;
+        for (i, group) in specs.into_iter().enumerate() {
+            mirrors.push(group[0].virtual_node());
+            let mut stage_conns = Vec::with_capacity(group.len());
+            for (r, spec) in group.into_iter().enumerate() {
+                let addr = &addrs[dialed % addrs.len()];
+                dialed += 1;
+                let stream = dial_stage(addr, &spec, i, timeout)?;
+                stage_conns.push(ReplicaConn::start(
+                    stream,
+                    &spec,
+                    i,
+                    r,
+                    addr.to_string(),
+                )?);
             }
-            let deploy = match &spec {
-                DeploySpec::Sim(s) => Frame::DeploySim(s.clone()),
-                DeploySpec::Blocks(s) => Frame::DeployBlocks(s.clone()),
-            };
-            frame::write_frame(&mut stream, &deploy)
-                .with_context(|| format!("deploying stage {i} to {addr}"))?;
-            match frame::read_frame(&mut stream)
-                .with_context(|| format!("deploying stage {i} to {addr}"))?
-            {
-                Frame::DeployAck { stage } if stage == spec.stage() => {}
-                Frame::DeployAck { stage } => bail!(
-                    "agent at {addr} acked stage {stage}, expected {}",
-                    spec.stage()
-                ),
-                Frame::ExecuteErr { message, .. } => bail!(
-                    "agent at {addr} rejected stage {i}: {message}"
-                ),
-                other => bail!(
-                    "agent at {addr} answered deploy with {}",
-                    other.kind_name()
-                ),
-            }
-            mirrors.push(spec.virtual_node());
-            conns.push(StageConn {
-                stream: Mutex::new(stream),
-                seq: AtomicU64::new(0),
-                dead: AtomicBool::new(false),
-                node_id: spec.node_id() as usize,
-                endpoint: addr.to_string(),
-            });
+            conns.push(stage_conns);
         }
         Ok(WireStages { kind, conns, mirrors })
     }
 
-    /// True if any stage connection has failed.
+    /// True if any replica connection has failed.
     pub fn any_dead(&self) -> bool {
-        self.conns.iter().any(|c| c.dead.load(Ordering::Relaxed))
+        self.conns
+            .iter()
+            .flatten()
+            .any(|c| c.dead.load(Ordering::Relaxed))
+    }
+
+    /// Endpoints hosting each replica of `stage` (replica 0 first).
+    pub fn replica_endpoints(&self, stage: usize) -> Vec<String> {
+        self.conns[stage].iter().map(|c| c.endpoint.clone()).collect()
     }
 }
 
@@ -424,7 +692,7 @@ impl StageExec for WireStages {
     }
 
     fn node_id(&self, stage: usize) -> usize {
-        self.conns[stage].node_id
+        self.conns[stage][0].node_id
     }
 
     fn comm_in(&self, stage: usize, bytes: u64) -> f64 {
@@ -436,65 +704,79 @@ impl StageExec for WireStages {
         node_comm_out(self.mirrors.last(), bytes)
     }
 
+    fn replicas(&self, stage: usize) -> usize {
+        self.conns[stage].len()
+    }
+
+    fn replica_node_id(&self, stage: usize, replica: usize) -> usize {
+        self.conns[stage][replica].node_id
+    }
+
+    fn replica_alive(&self, stage: usize, replica: usize) -> bool {
+        !self.conns[stage][replica].dead.load(Ordering::Relaxed)
+    }
+
     fn execute(&self, stage: usize, input: Tensor) -> Result<(Tensor, f64)> {
-        let conn = &self.conns[stage];
+        self.execute_on(stage, 0, input)
+    }
+
+    fn execute_on(
+        &self,
+        stage: usize,
+        replica: usize,
+        input: Tensor,
+    ) -> Result<(Tensor, f64)> {
+        let conn = &self.conns[stage][replica];
         if conn.dead.load(Ordering::Acquire) {
             bail!(
-                "stage {stage} agent at {} is gone; failing batch fast",
+                "stage {stage} replica {replica} agent at {} is gone; \
+                 failing batch fast",
                 conn.endpoint
             );
         }
         let seq = conn.seq.fetch_add(1, Ordering::Relaxed) + 1;
-        let mut stream = conn.lock();
-        let out = Frame::Execute { seq, tensor: input };
-        if let Err(e) = frame::write_frame(&mut *stream, &out) {
-            conn.dead.store(true, Ordering::Release);
-            stream.shutdown();
-            return Err(e.context(format!(
-                "stage {stage}: sending activation to {}",
+        let (tx, rx) = mpsc::sync_channel(1);
+        pending_lock(&conn.pending).insert(seq, tx);
+        // The reader may have died between the liveness check and the
+        // insert. It drains `pending` after flipping `dead`, so either
+        // it failed our slot (the reply is waiting in `rx`) or we
+        // inserted after the drain — in which case the flag is visible
+        // now and we must reclaim the slot ourselves.
+        if conn.dead.load(Ordering::Acquire)
+            && pending_lock(&conn.pending).remove(&seq).is_some()
+        {
+            bail!(
+                "stage {stage} replica {replica} agent at {} is gone; \
+                 failing batch fast",
                 conn.endpoint
-            )));
+            );
+        }
+        let out = Frame::Execute { seq, tensor: input };
+        {
+            let mut stream = conn.writer_lock();
+            if let Err(e) = frame::write_frame(&mut *stream, &out) {
+                pending_lock(&conn.pending).remove(&seq);
+                conn.dead.store(true, Ordering::Release);
+                stream.shutdown();
+                return Err(e.context(format!(
+                    "stage {stage}: sending activation to {}",
+                    conn.endpoint
+                )));
+            }
         }
         // The activation made it onto the wire; hand its buffer back to
         // the pool (no-op for views into a shared TensorBuf).
         if let Frame::Execute { tensor, .. } = out {
             tensor.recycle();
         }
-        match frame::read_frame(&mut *stream) {
-            Ok(Frame::ExecuteOk { seq: rseq, compute_ms, tensor }) => {
-                if rseq != seq {
-                    conn.dead.store(true, Ordering::Release);
-                    stream.shutdown();
-                    bail!(
-                        "stage {stage}: agent at {} answered seq {rseq}, \
-                         expected {seq}",
-                        conn.endpoint
-                    );
-                }
-                Ok((tensor, compute_ms))
-            }
-            // A stage-level error is a per-batch failure: the
-            // connection stays healthy for subsequent micro-batches.
-            Ok(Frame::ExecuteErr { seq: rseq, message }) if rseq == seq => {
-                bail!("stage {stage} ({}): {message}", conn.endpoint)
-            }
-            Ok(other) => {
-                conn.dead.store(true, Ordering::Release);
-                stream.shutdown();
-                bail!(
-                    "stage {stage}: unexpected {} frame from {}",
-                    other.kind_name(),
-                    conn.endpoint
-                )
-            }
-            Err(e) => {
-                conn.dead.store(true, Ordering::Release);
-                stream.shutdown();
-                Err(e.context(format!(
-                    "stage {stage}: agent at {} disconnected mid-batch",
-                    conn.endpoint
-                )))
-            }
+        // The reader routes our reply (or the connection's death) here.
+        match rx.recv() {
+            Ok(res) => res,
+            Err(_) => bail!(
+                "stage {stage} replica {replica}: agent at {} disconnected \
+                 mid-batch",
+                conn.endpoint
+            ),
         }
     }
 }
@@ -505,21 +787,28 @@ impl Transport for WireStages {
     }
 
     fn endpoint(&self, stage: usize) -> String {
-        self.conns[stage].endpoint.clone()
+        self.conns[stage][0].endpoint.clone()
     }
 }
 
 impl Drop for WireStages {
-    /// Tell each agent we're done (so idle agents can exit) and drop
-    /// the sockets. Dead connections are skipped.
+    /// Tell each agent we're done (so idle agents can exit), drop the
+    /// sockets, and reap the reader threads. Dead connections skip the
+    /// goodbye but still get their reader joined.
     fn drop(&mut self) {
-        for conn in &self.conns {
-            if conn.dead.load(Ordering::Relaxed) {
-                continue;
+        for group in &mut self.conns {
+            for conn in group.iter_mut() {
+                {
+                    let mut stream = conn.writer_lock();
+                    if !conn.dead.load(Ordering::Relaxed) {
+                        let _ = frame::write_frame(&mut *stream, &Frame::Shutdown);
+                    }
+                    stream.shutdown();
+                }
+                if let Some(reader) = conn.reader.take() {
+                    let _ = reader.join();
+                }
             }
-            let mut stream = conn.lock();
-            let _ = frame::write_frame(&mut *stream, &Frame::Shutdown);
-            stream.shutdown();
         }
     }
 }
@@ -568,26 +857,67 @@ pub fn block_specs_for(
         .iter()
         .enumerate()
         .map(|(i, stage)| {
-            let spec = stage.node.spec();
-            BlockStageSpec {
-                stage: i as u32,
-                node_id: stage.node.id() as u32,
-                name: spec.name.clone(),
-                cpu_fraction: spec.cpu_fraction,
-                mem_limit_mb: spec.mem_limit_mb,
-                link_latency_ms: spec.link.latency_ms,
-                link_bandwidth_mbps: spec.link.bandwidth_mbps,
-                time_scale: params.time_scale,
-                page_factor: params.page_factor,
-                runtime_overhead_mb: params.runtime_overhead_mb,
-                artifacts_dir: artifacts_dir.display().to_string(),
-                block_start: stage.block_range.start as u32,
-                block_end: stage.block_range.end as u32,
-                batch: dep.batch as u32,
-                mem_reserve: stage.mem_reserved,
-            }
+            block_spec(i, &stage.node, stage, dep, params, artifacts_dir)
         })
         .collect()
+}
+
+/// Per-stage deploy-spec *groups* for a (possibly replicated)
+/// deployment: group `k` carries one `DeploySpec::Blocks` per replica
+/// of stage `k`, primary first, each on its own node. With singleton
+/// stages this is exactly [`block_specs_for`] wrapped per stage — feed
+/// the result to [`WireStages::connect_replicated`].
+pub fn block_spec_groups_for(
+    dep: &Deployment,
+    params: &SimParams,
+    artifacts_dir: &Path,
+) -> Vec<Vec<DeploySpec>> {
+    dep.stages
+        .iter()
+        .enumerate()
+        .map(|(i, stage)| {
+            (0..stage.replica_count())
+                .map(|r| {
+                    DeploySpec::Blocks(block_spec(
+                        i,
+                        stage.replica_node(r),
+                        stage,
+                        dep,
+                        params,
+                        artifacts_dir,
+                    ))
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn block_spec(
+    stage_idx: usize,
+    node: &crate::cluster::VirtualNode,
+    stage: &crate::deployer::Stage,
+    dep: &Deployment,
+    params: &SimParams,
+    artifacts_dir: &Path,
+) -> BlockStageSpec {
+    let spec = node.spec();
+    BlockStageSpec {
+        stage: stage_idx as u32,
+        node_id: node.id() as u32,
+        name: spec.name.clone(),
+        cpu_fraction: spec.cpu_fraction,
+        mem_limit_mb: spec.mem_limit_mb,
+        link_latency_ms: spec.link.latency_ms,
+        link_bandwidth_mbps: spec.link.bandwidth_mbps,
+        time_scale: params.time_scale,
+        page_factor: params.page_factor,
+        runtime_overhead_mb: params.runtime_overhead_mb,
+        artifacts_dir: artifacts_dir.display().to_string(),
+        block_start: stage.block_range.start as u32,
+        block_end: stage.block_range.end as u32,
+        batch: dep.batch as u32,
+        mem_reserve: stage.mem_reserved,
+    }
 }
 
 #[cfg(test)]

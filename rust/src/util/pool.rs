@@ -244,6 +244,18 @@ impl BufferPool {
     pub fn pooled(&self) -> usize {
         self.buffers.lock().unwrap().len()
     }
+
+    /// Total bytes of f32 capacity currently held by the pool — the
+    /// memory-pressure signal the engine's window controller watches
+    /// (a wide window inflates pooled storage on small-memory nodes).
+    pub fn pooled_bytes(&self) -> u64 {
+        self.buffers
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|b| (b.capacity() * std::mem::size_of::<f32>()) as u64)
+            .sum()
+    }
 }
 
 #[cfg(test)]
@@ -324,6 +336,20 @@ mod tests {
         // Zero-capacity buffers are not worth pooling.
         pool.give(Vec::new());
         assert_eq!(pool.pooled(), 0);
+    }
+
+    #[test]
+    fn buffer_pool_reports_pooled_bytes() {
+        let pool = BufferPool::new();
+        assert_eq!(pool.pooled_bytes(), 0);
+        pool.give(Vec::with_capacity(16));
+        pool.give(Vec::with_capacity(48));
+        // Capacity is a lower bound, so pooled_bytes is at least the
+        // requested capacities.
+        assert!(pool.pooled_bytes() >= (16 + 48) * 4);
+        let _ = pool.take(16);
+        let _ = pool.take(16);
+        assert_eq!(pool.pooled_bytes(), 0);
     }
 
     #[test]

@@ -1,0 +1,289 @@
+//! Replica scale-out integration tests (ISSUE 7).
+//!
+//! The engine sprays micro-batches of a replicated stage across its
+//! replicas and the sequence-numbered collector reassembles rows in
+//! request order — so replication must be a pure scheduling change.
+//! These tests attack exactly that boundary: a property test delays one
+//! replica lane by an adversarial wall-clock backlog (its deliveries
+//! arrive arbitrarily late and out of order) and requires bit-identical
+//! reassembly, and a fault test kills one replica mid-run and requires
+//! that only the batches with work in flight to it fail while the
+//! surviving replicas keep serving.
+
+mod common;
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use amp4ec::pipeline::engine::{
+    run_serial, PersistentEngine, PersistentEngineConfig, SimStages,
+    StageExec,
+};
+use amp4ec::runtime::Tensor;
+use amp4ec::util::check::forall;
+use common::harness as h;
+
+/// Replica-aware fault wrapper (the harness [`common::harness::FaultStages`]
+/// predates replication and deliberately erases the replica surface, so
+/// it cannot target one lane). Forwards the full [`StageExec`] replica
+/// API to the inner chain and injects, per `(stage, replica)` lane:
+///
+/// * an adversarial wall-clock delay — a backlog that reorders that
+///   lane's deliveries against its siblings without touching sim time;
+/// * a kill switch — after `kill_after` executions the lane errors
+///   forever and reports itself dead, so the alive-set router steers new
+///   work around it and only in-flight work fails.
+struct ReplicaFaults {
+    inner: SimStages,
+    delay: Option<(usize, usize, Duration)>,
+    doomed: Option<(usize, usize)>,
+    kill_after: usize,
+    doomed_execs: AtomicUsize,
+    killed: AtomicBool,
+}
+
+impl ReplicaFaults {
+    fn new(inner: SimStages) -> ReplicaFaults {
+        ReplicaFaults {
+            inner,
+            delay: None,
+            doomed: None,
+            kill_after: 0,
+            doomed_execs: AtomicUsize::new(0),
+            killed: AtomicBool::new(false),
+        }
+    }
+
+    /// Sleep `backlog` of wall clock before every execution on the lane.
+    fn delay_on(mut self, stage: usize, replica: usize, backlog: Duration) -> Self {
+        self.delay = Some((stage, replica, backlog));
+        self
+    }
+
+    /// Kill the lane after `kill_after` successful executions on it.
+    fn kill_on(mut self, stage: usize, replica: usize, kill_after: usize) -> Self {
+        self.doomed = Some((stage, replica));
+        self.kill_after = kill_after;
+        self
+    }
+}
+
+impl StageExec for ReplicaFaults {
+    fn num_stages(&self) -> usize {
+        self.inner.num_stages()
+    }
+
+    fn node_id(&self, stage: usize) -> usize {
+        self.inner.node_id(stage)
+    }
+
+    fn comm_in(&self, stage: usize, bytes: u64) -> f64 {
+        self.inner.comm_in(stage, bytes)
+    }
+
+    fn comm_out(&self, bytes: u64) -> f64 {
+        self.inner.comm_out(bytes)
+    }
+
+    fn execute(&self, stage: usize, input: Tensor) -> anyhow::Result<(Tensor, f64)> {
+        self.execute_on(stage, 0, input)
+    }
+
+    fn replicas(&self, stage: usize) -> usize {
+        self.inner.replicas(stage)
+    }
+
+    fn replica_node_id(&self, stage: usize, replica: usize) -> usize {
+        self.inner.replica_node_id(stage, replica)
+    }
+
+    fn replica_alive(&self, stage: usize, replica: usize) -> bool {
+        if self.doomed == Some((stage, replica)) {
+            !self.killed.load(Ordering::SeqCst)
+        } else {
+            self.inner.replica_alive(stage, replica)
+        }
+    }
+
+    fn comm_in_on(&self, stage: usize, replica: usize, bytes: u64) -> f64 {
+        self.inner.comm_in_on(stage, replica, bytes)
+    }
+
+    fn execute_on(
+        &self,
+        stage: usize,
+        replica: usize,
+        input: Tensor,
+    ) -> anyhow::Result<(Tensor, f64)> {
+        if let Some((s, r, backlog)) = self.delay {
+            if (s, r) == (stage, replica) {
+                std::thread::sleep(backlog);
+            }
+        }
+        if self.doomed == Some((stage, replica)) {
+            let n = self.doomed_execs.fetch_add(1, Ordering::SeqCst);
+            if n >= self.kill_after {
+                self.killed.store(true, Ordering::SeqCst);
+                anyhow::bail!(
+                    "injected replica death: stage {stage} replica {replica}"
+                );
+            }
+        }
+        self.inner.execute_on(stage, replica, input)
+    }
+}
+
+fn engine_over(
+    stages: ReplicaFaults,
+    depth: usize,
+) -> PersistentEngine {
+    PersistentEngine::new(
+        Arc::new(stages),
+        PersistentEngineConfig {
+            micro_batch_rows: 1,
+            initial_depth: depth,
+            adaptive: None,
+            ..Default::default()
+        },
+    )
+    .unwrap()
+}
+
+#[test]
+fn property_reassembly_bit_identical_under_adversarial_replica_delays() {
+    // One replica lane of the bottleneck stage runs with a random
+    // wall-clock backlog, so its micro-batches overtake / fall behind
+    // their siblings in real delivery order. The collector reassembles
+    // by sequence number, so every case must reproduce the serial
+    // output bit-for-bit — any row swap, loss, or duplication fails.
+    forall(6, 0x5CA1E0, |rng| {
+        let rows = rng.range(5, 13);
+        let reps = rng.range(2, 3); // 2 or 3 replicas of the bottleneck
+        let lagging = rng.below(reps);
+        let backlog = Duration::from_millis(rng.range(1, 5) as u64);
+        let shares = [1.0, 0.25, 1.0];
+        let t = h::seeded_input(rows, 4, rng.next_u64());
+
+        let golden = run_serial(&SimStages::heterogeneous(&shares, 1.0), &t, 1)
+            .unwrap()
+            .output;
+
+        let stages = ReplicaFaults::new(SimStages::with_replicas(
+            &shares,
+            1.0,
+            &[1, reps, 1],
+        ))
+        .delay_on(1, lagging, backlog);
+        let engine = engine_over(stages, 4);
+        // Two interleaved batches so late lane-`lagging` deliveries of
+        // the first can land amid the second's.
+        let a = engine.submit(&t).unwrap();
+        let b = engine.submit(&t).unwrap();
+        let out_a = a.wait().unwrap();
+        let out_b = b.wait().unwrap();
+        assert_eq!(out_a.output, golden, "batch A reassembly diverged");
+        assert_eq!(out_b.output, golden, "batch B reassembly diverged");
+
+        // Conservation: exactly `rows` micro-batches per batch crossed
+        // the replicated stage, spread over its lanes.
+        let crossed: u64 = engine
+            .replica_counters()
+            .iter()
+            .filter(|c| c.stage == 1)
+            .map(|c| c.micro_batches)
+            .sum();
+        assert_eq!(crossed, 2 * rows as u64, "lost or duplicated micro-batches");
+    });
+}
+
+#[test]
+fn replica_death_fails_only_in_flight_batches() {
+    // Stage 1 runs two replicas; replica 1 dies on its first execution.
+    // The batch with work in flight to it must fail (with the injected
+    // error surfaced), a concurrently submitted single-row batch that
+    // routes to replica 0 must complete, and after the death the
+    // surviving replica must keep serving whole batches bit-identically.
+    let shares = [1.0, 0.25, 1.0];
+    let stages = ReplicaFaults::new(SimStages::with_replicas(
+        &shares,
+        1.0,
+        &[1, 2, 1],
+    ))
+    .kill_on(1, 1, 0);
+    let engine = engine_over(stages, 4);
+
+    let doomed_input = h::seeded_input(4, 4, 7);
+    let single_row = h::seeded_input(1, 4, 8);
+    let golden_doomed =
+        run_serial(&SimStages::heterogeneous(&shares, 1.0), &doomed_input, 1)
+            .unwrap()
+            .output;
+    let golden_single =
+        run_serial(&SimStages::heterogeneous(&shares, 1.0), &single_row, 1)
+            .unwrap()
+            .output;
+
+    // Batch A routes its odd micro-batches to the doomed replica; batch
+    // B's only micro-batch (sequence 0) routes to replica 0 whether or
+    // not the death has been noticed yet.
+    let a = engine.submit(&doomed_input).unwrap();
+    let b = engine.submit(&single_row).unwrap();
+    let err = match a.wait() {
+        Ok(_) => panic!("batch on the dead replica must fail"),
+        Err(e) => e,
+    };
+    assert!(
+        format!("{err:#}").contains("injected replica death"),
+        "wrong failure surfaced: {err:#}"
+    );
+    assert_eq!(
+        b.wait().unwrap().output,
+        golden_single,
+        "concurrent batch on the surviving replica diverged"
+    );
+
+    // k-1 replicas keep serving: the alive-set router steers everything
+    // to replica 0 now, so the same input that just failed completes.
+    for _ in 0..2 {
+        let run = engine.submit(&doomed_input).unwrap().wait().unwrap();
+        assert_eq!(run.output, golden_doomed, "post-death output diverged");
+    }
+    let counters = engine.replica_counters();
+    let survivor = counters
+        .iter()
+        .find(|c| c.stage == 1 && c.replica == 0)
+        .expect("stage-1 primary counter");
+    assert!(
+        survivor.micro_batches >= 9,
+        "survivor should have absorbed the steered work: {survivor:?}"
+    );
+}
+
+#[test]
+fn delayed_lane_still_shares_work() {
+    // A lagging replica slows its lane but must not be starved by the
+    // router: static round-robin keeps both lanes fed, which is what the
+    // per-replica credit windows account for.
+    let shares = [1.0, 0.5];
+    let stages = ReplicaFaults::new(SimStages::with_replicas(
+        &shares,
+        1.0,
+        &[1, 2],
+    ))
+    .delay_on(1, 1, Duration::from_millis(2));
+    let engine = engine_over(stages, 4);
+    let t = h::seeded_input(8, 4, 9);
+    let golden = run_serial(&SimStages::heterogeneous(&shares, 1.0), &t, 1)
+        .unwrap()
+        .output;
+    let run = engine.run(&t).unwrap();
+    assert_eq!(run.output, golden);
+    for c in engine.replica_counters().iter().filter(|c| c.stage == 1) {
+        assert!(
+            c.micro_batches >= 2,
+            "lane {} starved despite round-robin: {c:?}",
+            c.replica
+        );
+    }
+}
