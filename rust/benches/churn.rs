@@ -1,0 +1,351 @@
+//! Self-healing churn gate (ISSUE 8): serving under a seeded node-kill
+//! schedule. `cargo bench --bench churn`.
+//!
+//! A skewed 3-stage chain (1.0 / 0.25 / 1.0 CPU shares) with the
+//! bottleneck replicated 2 ways streams 24 batches through the
+//! persistent engine while a kill schedule takes one bottleneck replica
+//! down mid-run (it serves a fixed number of micro-batches, then dies
+//! with work in flight — the sim twin of a node dropping off the
+//! network). Three configurations:
+//!
+//! - **clean**: no kill — the latency/makespan baseline.
+//! - **heal**: kill with replay on — the driver re-runs the dead
+//!   replica's in-flight micro-batches on the survivor. Gates: every
+//!   handle resolves, zero failed batches, all outputs bit-identical to
+//!   the serial schedule, >= 1 replay, p99 and makespan degradation
+//!   bounded (the lost replica halves the bottleneck fan-out, so ~2x is
+//!   physics; the gates allow slack on top, not hangs or failures).
+//! - **fail-fast**: the same schedule with replay off — pins today's
+//!   behaviour: the doomed batch fails, everything else resolves.
+//!
+//! Emits `BENCH_churn.json`.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use amp4ec::metrics::markdown_table;
+use amp4ec::pipeline::engine::{
+    run_serial, PersistentEngine, PersistentEngineConfig, SimStages,
+    StageExec,
+};
+use amp4ec::runtime::Tensor;
+use amp4ec::util::bench::BenchSuite;
+use amp4ec::util::json::Json;
+
+/// Kill schedule over one target replica: serve `fuse` micro-batches,
+/// then fail every execute routed to it (the node is gone). Mirrors the
+/// test harness's kill switch, inlined here because benches cannot link
+/// the test-only crate.
+struct KillSchedule {
+    inner: SimStages,
+    stage: usize,
+    replica: usize,
+    dead: AtomicBool,
+    /// Executes remaining before the kill (`usize::MAX` = never).
+    fuse: AtomicUsize,
+}
+
+impl KillSchedule {
+    fn new(inner: SimStages, stage: usize, replica: usize, fuse: usize) -> KillSchedule {
+        KillSchedule {
+            inner,
+            stage,
+            replica,
+            dead: AtomicBool::new(false),
+            fuse: AtomicUsize::new(fuse),
+        }
+    }
+
+    fn gate(&self, stage: usize, replica: usize) -> anyhow::Result<()> {
+        if stage != self.stage || replica != self.replica {
+            return Ok(());
+        }
+        if self.dead.load(Ordering::SeqCst) {
+            anyhow::bail!("stage {stage} replica {replica} node is gone");
+        }
+        let armed = self.fuse.fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| {
+            (n != usize::MAX).then(|| n.saturating_sub(1))
+        });
+        if armed == Ok(0) {
+            self.dead.store(true, Ordering::SeqCst);
+            anyhow::bail!("stage {stage} replica {replica} node died mid-stream");
+        }
+        Ok(())
+    }
+}
+
+impl StageExec for KillSchedule {
+    fn num_stages(&self) -> usize {
+        self.inner.num_stages()
+    }
+    fn node_id(&self, stage: usize) -> usize {
+        self.inner.node_id(stage)
+    }
+    fn backlog(&self, stage: usize) -> usize {
+        self.inner.backlog(stage)
+    }
+    fn comm_in(&self, stage: usize, bytes: u64) -> f64 {
+        self.inner.comm_in(stage, bytes)
+    }
+    fn comm_out(&self, bytes: u64) -> f64 {
+        self.inner.comm_out(bytes)
+    }
+    fn replicas(&self, stage: usize) -> usize {
+        self.inner.replicas(stage)
+    }
+    fn replica_node_id(&self, stage: usize, replica: usize) -> usize {
+        self.inner.replica_node_id(stage, replica)
+    }
+    fn replica_alive(&self, stage: usize, replica: usize) -> bool {
+        !(stage == self.stage
+            && replica == self.replica
+            && self.dead.load(Ordering::SeqCst))
+            && self.inner.replica_alive(stage, replica)
+    }
+    fn comm_in_on(&self, stage: usize, replica: usize, bytes: u64) -> f64 {
+        self.inner.comm_in_on(stage, replica, bytes)
+    }
+    fn execute(&self, stage: usize, input: Tensor) -> anyhow::Result<(Tensor, f64)> {
+        self.gate(stage, 0)?;
+        self.inner.execute(stage, input)
+    }
+    fn execute_on(
+        &self,
+        stage: usize,
+        replica: usize,
+        input: Tensor,
+    ) -> anyhow::Result<(Tensor, f64)> {
+        self.gate(stage, replica)?;
+        self.inner.execute_on(stage, replica, input)
+    }
+}
+
+fn input_off(rows: usize, cols: usize, off: f32) -> Tensor {
+    let data = (0..rows * cols)
+        .map(|i| (i as f32) * 0.125 - 4.0 + off)
+        .collect();
+    Tensor::new(vec![rows, cols], data).unwrap()
+}
+
+fn p99(lat_ms: &[f64]) -> f64 {
+    let mut sorted = lat_ms.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((sorted.len() as f64 * 0.99).ceil() as usize)
+        .saturating_sub(1)
+        .min(sorted.len() - 1);
+    sorted[idx]
+}
+
+struct RunResult {
+    makespan_ms: f64,
+    p99_ms: f64,
+    completed: usize,
+    failed: usize,
+    replays_attempted: u64,
+    replays_succeeded: u64,
+}
+
+/// Stream `batches` through one engine; kill schedule optional. Every
+/// handle is waited on — a hang here hangs the bench, which IS the
+/// zero-hung-handles gate.
+fn run_config(
+    shares: &[f64],
+    batches: &[Tensor],
+    goldens: &[Tensor],
+    schedule: Option<usize>,
+    replay: bool,
+) -> RunResult {
+    let sim = SimStages::with_replicas(shares, 1.0, &[1, 2, 1]);
+    let stages = KillSchedule::new(sim, 1, 1, schedule.unwrap_or(usize::MAX));
+    let engine = PersistentEngine::new(
+        Arc::new(stages),
+        PersistentEngineConfig {
+            micro_batch_rows: 1,
+            initial_depth: 12,
+            adaptive: None,
+            replay,
+            ..Default::default()
+        },
+    )
+    .expect("churn engine");
+
+    let submits: Vec<(Instant, _)> = batches
+        .iter()
+        .map(|b| (Instant::now(), engine.submit(b).expect("submit")))
+        .collect();
+    let mut lat_ms = Vec::new();
+    let mut completed = 0usize;
+    let mut failed = 0usize;
+    for ((t0, handle), want) in submits.into_iter().zip(goldens) {
+        match handle.wait() {
+            Ok(run) => {
+                lat_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+                assert_eq!(
+                    &run.output, want,
+                    "non-shed output diverged from the serial schedule"
+                );
+                completed += 1;
+            }
+            Err(_) => failed += 1,
+        }
+    }
+    let replays = engine.replay_stats();
+    RunResult {
+        makespan_ms: engine.makespan_ms(),
+        p99_ms: if lat_ms.is_empty() { 0.0 } else { p99(&lat_ms) },
+        completed,
+        failed,
+        replays_attempted: replays.attempted,
+        replays_succeeded: replays.succeeded,
+    }
+}
+
+fn main() {
+    let mut suite = BenchSuite::new("churn");
+
+    let shares = [1.0f64, 0.25, 1.0];
+    let n_batches = 24usize;
+    let rows_per_batch = 8usize;
+    // The seeded kill schedule: the doomed replica serves 30 of its
+    // ~96 micro-batches, then dies with work in flight (~batch 8 of 24).
+    let kill_after = 30usize;
+
+    let batches: Vec<Tensor> = (0..n_batches)
+        .map(|i| input_off(rows_per_batch, 32, i as f32))
+        .collect();
+    let serial = SimStages::heterogeneous(&shares, 1.0);
+    let goldens: Vec<Tensor> = batches
+        .iter()
+        .map(|b| run_serial(&serial, b, 1).expect("serial").output)
+        .collect();
+
+    let clean = run_config(&shares, &batches, &goldens, None, true);
+    let heal = run_config(&shares, &batches, &goldens, Some(kill_after), true);
+    let fail_fast =
+        run_config(&shares, &batches, &goldens, Some(kill_after), false);
+
+    let p99_ratio = heal.p99_ms / clean.p99_ms.max(1e-9);
+    let makespan_ratio = heal.makespan_ms / clean.makespan_ms.max(1e-9);
+
+    println!(
+        "{}",
+        markdown_table(
+            "Serving under the seeded node-kill schedule (24 batches, k=2 bottleneck)",
+            &["Config", "Completed", "Failed", "Makespan ms", "p99 ms", "Replays"],
+            &[
+                vec![
+                    "clean".into(),
+                    format!("{}", clean.completed),
+                    format!("{}", clean.failed),
+                    format!("{:.1}", clean.makespan_ms),
+                    format!("{:.1}", clean.p99_ms),
+                    "0".into(),
+                ],
+                vec![
+                    "heal (replay on)".into(),
+                    format!("{}", heal.completed),
+                    format!("{}", heal.failed),
+                    format!("{:.1}", heal.makespan_ms),
+                    format!("{:.1}", heal.p99_ms),
+                    format!("{}/{}", heal.replays_succeeded, heal.replays_attempted),
+                ],
+                vec![
+                    "fail-fast (replay off)".into(),
+                    format!("{}", fail_fast.completed),
+                    format!("{}", fail_fast.failed),
+                    format!("{:.1}", fail_fast.makespan_ms),
+                    format!("{:.1}", fail_fast.p99_ms),
+                    "0".into(),
+                ],
+            ],
+        )
+    );
+
+    suite.record_value("clean p99", clean.p99_ms, "ms");
+    suite.record_value("heal p99", heal.p99_ms, "ms");
+    suite.record_value("p99 degradation", p99_ratio, "x");
+    suite.record_value("makespan degradation", makespan_ratio, "x");
+    suite.record_value(
+        "replays succeeded",
+        heal.replays_succeeded as f64,
+        "batches",
+    );
+
+    // --- The ISSUE-8 churn gates. -----------------------------------
+    // Healing on: the kill is invisible to callers. Every handle
+    // resolved (the waits above returned), nothing failed, outputs were
+    // bit-identical (asserted per batch), and the recovery actually
+    // exercised the replay path.
+    assert_eq!(clean.completed, n_batches, "clean run must complete");
+    assert_eq!(clean.failed, 0);
+    assert_eq!(
+        heal.completed, n_batches,
+        "healed run dropped batches ({} failed)",
+        heal.failed
+    );
+    assert_eq!(heal.failed, 0, "healed run must not surface the kill");
+    assert!(
+        heal.replays_succeeded >= 1,
+        "kill schedule guarantees at least one replay"
+    );
+    // Losing one of two bottleneck replicas halves the fan-out: ~2x
+    // degradation is physics. Gate with slack — bounded, not unbounded.
+    assert!(
+        makespan_ratio <= 3.0,
+        "makespan degraded {makespan_ratio:.2}x (> 3x bound)"
+    );
+    assert!(
+        p99_ratio <= 4.0,
+        "p99 degraded {p99_ratio:.2}x (> 4x bound)"
+    );
+    // Healing off: the same schedule reproduces today's fail-fast
+    // behaviour — the doomed batch errors, the rest still resolve.
+    assert!(
+        fail_fast.failed >= 1,
+        "fail-fast pin: the kill must surface with replay off"
+    );
+    assert_eq!(
+        fail_fast.completed + fail_fast.failed,
+        n_batches,
+        "fail-fast run hung handles"
+    );
+    assert_eq!(fail_fast.replays_attempted, 0, "replay must stay opt-in");
+
+    let run_json = |r: &RunResult| {
+        let mut j = BTreeMap::new();
+        j.insert("completed".into(), Json::from(r.completed));
+        j.insert("failed".into(), Json::from(r.failed));
+        j.insert("makespan_ms".into(), Json::Num(r.makespan_ms));
+        j.insert("p99_ms".into(), Json::Num(r.p99_ms));
+        j.insert(
+            "replays_attempted".into(),
+            Json::from(r.replays_attempted as usize),
+        );
+        j.insert(
+            "replays_succeeded".into(),
+            Json::from(r.replays_succeeded as usize),
+        );
+        Json::Obj(j)
+    };
+    let mut doc = BTreeMap::new();
+    doc.insert("suite".into(), Json::Str("churn".into()));
+    doc.insert(
+        "cpu_shares".into(),
+        Json::Arr(shares.iter().map(|&s| Json::Num(s)).collect()),
+    );
+    doc.insert("n_batches".into(), Json::from(n_batches));
+    doc.insert("rows_per_batch".into(), Json::from(rows_per_batch));
+    doc.insert("kill_after_micro_batches".into(), Json::from(kill_after));
+    doc.insert("clean".into(), run_json(&clean));
+    doc.insert("heal".into(), run_json(&heal));
+    doc.insert("fail_fast".into(), run_json(&fail_fast));
+    doc.insert("p99_degradation".into(), Json::Num(p99_ratio));
+    doc.insert("makespan_degradation".into(), Json::Num(makespan_ratio));
+    doc.insert("bit_identical".into(), Json::Bool(true));
+    doc.insert("hung_handles".into(), Json::from(0usize));
+    std::fs::write("BENCH_churn.json", Json::Obj(doc).to_string())
+        .expect("write BENCH_churn.json");
+    println!("wrote BENCH_churn.json");
+}

@@ -96,6 +96,7 @@ fn main() {
         monitor::MonitorConfig {
             sample_interval: std::time::Duration::from_millis(1000),
             history_len: 64,
+            ..monitor::MonitorConfig::default()
         },
     );
     std::thread::sleep(std::time::Duration::from_millis(2500));

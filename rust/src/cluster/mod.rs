@@ -27,7 +27,7 @@ pub mod energy;
 pub mod link;
 pub mod node;
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, RwLock};
 
 pub use energy::{EnergyMeter, EnergyReading, PowerModel};
@@ -70,6 +70,11 @@ pub struct Cluster {
     params: SimParams,
     nodes: RwLock<Vec<Arc<VirtualNode>>>,
     next_id: AtomicUsize,
+    /// Bumped on every membership *change* (add, offline, re-admission).
+    /// Watchers compare epochs instead of online counts: an equal-count
+    /// leave+join changes membership without changing the count, and
+    /// only the epoch sees it.
+    epoch: AtomicU64,
 }
 
 impl Cluster {
@@ -78,6 +83,7 @@ impl Cluster {
             params,
             nodes: RwLock::new(Vec::new()),
             next_id: AtomicUsize::new(0),
+            epoch: AtomicU64::new(0),
         }
     }
 
@@ -90,6 +96,7 @@ impl Cluster {
         let id = self.next_id.fetch_add(1, Ordering::SeqCst);
         let node = Arc::new(VirtualNode::new(id, spec, self.params.clone()));
         self.nodes.write().unwrap().push(node);
+        self.epoch.fetch_add(1, Ordering::SeqCst);
         id
     }
 
@@ -99,11 +106,40 @@ impl Cluster {
         let nodes = self.nodes.read().unwrap();
         match nodes.iter().find(|n| n.id() == id) {
             Some(n) => {
-                n.set_online(false);
+                if n.is_online() {
+                    n.set_online(false);
+                    self.epoch.fetch_add(1, Ordering::SeqCst);
+                }
                 true
             }
             None => false,
         }
+    }
+
+    /// Warm re-admission: bring a previously removed node back online
+    /// (the "device returns" event). The node keeps its id, loaded
+    /// blocks, and working set, so the next heal/retune can hand it a
+    /// replica without a cold deploy. Returns false if the id is
+    /// unknown; re-admitting an already-online node is a no-op.
+    pub fn readmit_node(&self, id: NodeId) -> bool {
+        let nodes = self.nodes.read().unwrap();
+        match nodes.iter().find(|n| n.id() == id) {
+            Some(n) => {
+                if !n.is_online() {
+                    n.set_online(true);
+                    self.epoch.fetch_add(1, Ordering::SeqCst);
+                }
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Membership epoch: increments on every add, offline transition,
+    /// and re-admission. Equal epochs guarantee an unchanged member
+    /// set; an equal *online count* does not.
+    pub fn membership_epoch(&self) -> u64 {
+        self.epoch.load(Ordering::SeqCst)
     }
 
     pub fn get(&self, id: NodeId) -> Option<Arc<VirtualNode>> {
@@ -184,6 +220,47 @@ mod tests {
         // removed node still reachable for bookkeeping
         assert!(c.get(a).is_some());
         assert!(!c.get(a).unwrap().is_online());
+    }
+
+    #[test]
+    fn membership_epoch_sees_equal_count_leave_plus_join() {
+        // The auto-rebalance watchdog regression: a simultaneous
+        // leave+join keeps online_count() constant but changes the
+        // member set — only the epoch notices.
+        let c = Cluster::new(SimParams::default());
+        let a = c.add_node(NodeSpec::new("a", 1.0, 1024.0));
+        c.add_node(NodeSpec::new("b", 0.5, 512.0));
+        let count_before = c.online_count();
+        let epoch_before = c.membership_epoch();
+        assert!(c.remove_node(a));
+        c.add_node(NodeSpec::new("c", 0.5, 512.0));
+        assert_eq!(c.online_count(), count_before, "count is blind");
+        assert!(
+            c.membership_epoch() > epoch_before,
+            "epoch must advance on an equal-count membership change"
+        );
+        // Idempotent transitions don't churn the epoch.
+        let e = c.membership_epoch();
+        assert!(c.remove_node(a)); // already offline
+        assert_eq!(c.membership_epoch(), e);
+    }
+
+    #[test]
+    fn readmit_restores_node_and_bumps_epoch() {
+        let c = Cluster::new(SimParams::default());
+        let a = c.add_node(NodeSpec::new("a", 1.0, 1024.0));
+        c.remove_node(a);
+        assert_eq!(c.online_count(), 0);
+        let e = c.membership_epoch();
+        assert!(c.readmit_node(a));
+        assert_eq!(c.online_count(), 1);
+        assert!(c.get(a).unwrap().is_online());
+        assert!(c.membership_epoch() > e);
+        // Re-admitting an online node is a no-op; unknown ids are false.
+        let e2 = c.membership_epoch();
+        assert!(c.readmit_node(a));
+        assert_eq!(c.membership_epoch(), e2);
+        assert!(!c.readmit_node(99));
     }
 
     #[test]

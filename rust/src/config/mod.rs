@@ -187,6 +187,17 @@ pub struct AmpConfig {
     pub runtime_overhead_mb: f64,
     /// Monitor sampling interval.
     pub monitor_interval_ms: u64,
+    /// Consecutive missed monitor samples before a node is declared
+    /// dead (liveness detection latency = `miss_threshold *
+    /// monitor_interval_ms`). CLI: `--miss-threshold`.
+    pub miss_threshold: u32,
+    /// Self-healing serving: watch the monitor's liveness feed and heal
+    /// on node death — re-place the dead replica's stage when every
+    /// affected stage keeps a surviving replica, full re-partition
+    /// otherwise — and let in-flight micro-batches replay through
+    /// surviving replicas instead of failing the batch. Off = today's
+    /// fail-fast behavior. CLI: `--heal`.
+    pub heal: bool,
 }
 
 impl Default for AmpConfig {
@@ -223,6 +234,8 @@ impl Default for AmpConfig {
             page_factor: 4.0,
             runtime_overhead_mb: 384.0,
             monitor_interval_ms: 100,
+            miss_threshold: 3,
+            heal: false,
         }
     }
 }
@@ -324,6 +337,7 @@ impl AmpConfig {
         crate::monitor::MonitorConfig {
             sample_interval: Duration::from_millis(self.monitor_interval_ms),
             history_len: 4096,
+            miss_threshold: self.miss_threshold.max(1),
         }
     }
 
@@ -347,6 +361,10 @@ impl AmpConfig {
             "max_pipeline_depth must be >= 1"
         );
         anyhow::ensure!(self.time_scale > 0.0, "time_scale must be > 0");
+        anyhow::ensure!(
+            self.miss_threshold >= 1,
+            "miss_threshold must be >= 1 (misses before a node is dead)"
+        );
         if let ReplicaPolicy::Fixed(k) = self.replicas {
             anyhow::ensure!(
                 k >= 2,
@@ -493,6 +511,11 @@ impl AmpConfig {
             "monitor_interval_ms".into(),
             Json::from(self.monitor_interval_ms as usize),
         );
+        m.insert(
+            "miss_threshold".into(),
+            Json::from(self.miss_threshold as usize),
+        );
+        m.insert("heal".into(), Json::from(self.heal));
         Json::Obj(m)
     }
 
@@ -606,6 +629,9 @@ impl AmpConfig {
                 "monitor_interval_ms",
                 d.monitor_interval_ms as usize,
             ) as u64,
+            miss_threshold: get_u("miss_threshold", d.miss_threshold as usize)
+                as u32,
+            heal: j.get("heal").and_then(Json::as_bool).unwrap_or(false),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -652,8 +678,12 @@ mod tests {
         c.coalesce = true;
         c.priority_classes = 4;
         c.default_deadline_ms = Some(250.0);
+        c.heal = true;
+        c.miss_threshold = 5;
         let j = c.to_json();
         let back = AmpConfig::from_json(&j).unwrap();
+        assert!(back.heal);
+        assert_eq!(back.miss_threshold, 5);
         assert_eq!(back.priority_classes, 4);
         assert_eq!(back.default_deadline_ms, Some(250.0));
         assert_eq!(back.batch, 8);
@@ -708,6 +738,18 @@ mod tests {
         let mut c = AmpConfig::default();
         c.default_deadline_ms = Some(-5.0);
         assert!(c.validate().is_err());
+        let mut c = AmpConfig::default();
+        c.miss_threshold = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn monitor_config_carries_miss_threshold() {
+        let mut c = AmpConfig::default();
+        c.miss_threshold = 7;
+        assert_eq!(c.monitor_config().miss_threshold, 7);
+        // Defaults stay fail-fast: healing is opt-in.
+        assert!(!AmpConfig::default().heal);
     }
 
     #[test]

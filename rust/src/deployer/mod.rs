@@ -370,6 +370,136 @@ impl ModelDeployer {
         })
     }
 
+    /// Heal ladder step 1 (ISSUE 8): rebuild a deployment around dead
+    /// nodes *without re-partitioning* — every stage keeps its block
+    /// range and its surviving placements (the model cache makes the
+    /// re-ship near-free), and each replica slot lost to a dead node is
+    /// re-placed on a fresh online node by the scheduler's replica-set
+    /// extension (no overcommit: a degraded replica count beats a paging
+    /// replica). The first surviving replica is promoted to primary when
+    /// the primary died. Errors when some stage has no surviving replica
+    /// — the caller falls back to a full re-partition. The old
+    /// deployment stays live until the caller swaps engines and
+    /// undeploys it, the same transient double-reservation a rebalance
+    /// makes.
+    pub fn heal_replace(
+        &self,
+        old: &Deployment,
+        dead: &HashSet<usize>,
+        cluster: &Cluster,
+        scheduler: &Scheduler,
+    ) -> Result<Deployment> {
+        let t0 = Instant::now();
+        let batch = old.batch;
+        let nodes = cluster.online_nodes();
+        anyhow::ensure!(!nodes.is_empty(), "no online nodes to heal onto");
+        let alive =
+            |n: &Arc<VirtualNode>| n.is_online() && !dead.contains(&n.id());
+
+        // Surviving replica placements per stage; a stage with none
+        // cannot be healed by re-placement alone.
+        let mut survivors: Vec<Vec<Arc<VirtualNode>>> = Vec::new();
+        for (k, s) in old.stages.iter().enumerate() {
+            let alive_nodes: Vec<Arc<VirtualNode>> = (0..s.replica_count())
+                .map(|r| Arc::clone(s.replica_node(r)))
+                .filter(|n| alive(n))
+                .collect();
+            anyhow::ensure!(
+                !alive_nodes.is_empty(),
+                "stage {k} has no surviving replica; re-partition required"
+            );
+            survivors.push(alive_nodes);
+        }
+        let mut used: HashSet<usize> = survivors
+            .iter()
+            .flat_map(|v| v.iter().map(|n| n.id()))
+            .collect();
+
+        let mut stages = Vec::with_capacity(old.stages.len());
+        let mut transfer_bytes = 0u64;
+        for (s, alive_nodes) in old.stages.iter().zip(survivors) {
+            let mem_bytes = self.stage_mem_bytes(&s.block_range, batch);
+            let req = TaskRequirements {
+                cpu: 0.1,
+                mem_mb: mem_bytes as f64 / (1024.0 * 1024.0),
+                priority: 0,
+            };
+            // Re-place each slot lost to a dead node on a fresh node.
+            let lost = s.replica_count() - alive_nodes.len();
+            let mut placements = alive_nodes;
+            if lost > 0 {
+                let fresh: Vec<_> = nodes
+                    .iter()
+                    .filter(|n| !used.contains(&n.id()) && alive(n))
+                    .cloned()
+                    .collect();
+                let set = scheduler.select_replica_set(&fresh, &req, lost);
+                if set.len() < lost {
+                    crate::log_warn!(
+                        "deployer",
+                        "heal: stage {}: re-placed {} of {} lost replicas \
+                         ({} fresh nodes can afford {:.1} MB)",
+                        s.partition_idx,
+                        set.len(),
+                        lost,
+                        fresh.len(),
+                        req.mem_mb
+                    );
+                }
+                for (rnode, _score) in set {
+                    used.insert(rnode.id());
+                    placements.push(rnode);
+                }
+            }
+
+            // Ship (model-cache hits move zero bytes) and reserve on
+            // every placement; the first is the — possibly promoted —
+            // primary.
+            let mut shipped = Vec::with_capacity(placements.len());
+            for node in &placements {
+                let executor = self.executor_for(node)?;
+                let (blocks, stage_bytes, moved) =
+                    self.ship_blocks(node, &executor, &s.block_range, batch)?;
+                transfer_bytes += moved;
+                node.mem_reserve(mem_bytes);
+                shipped.push((
+                    Arc::clone(node),
+                    executor,
+                    blocks,
+                    stage_bytes,
+                ));
+            }
+            let (node, executor, blocks, weights_bytes) = shipped.remove(0);
+            let replicas = shipped
+                .into_iter()
+                .map(|(node, executor, blocks, _)| StageReplica {
+                    node,
+                    executor,
+                    blocks,
+                    mem_reserved: mem_bytes,
+                })
+                .collect();
+            stages.push(Stage {
+                partition_idx: s.partition_idx,
+                node,
+                executor,
+                block_range: s.block_range.clone(),
+                blocks,
+                weights_bytes,
+                mem_reserved: mem_bytes,
+                replicas,
+            });
+        }
+
+        Ok(Deployment {
+            batch,
+            stages,
+            transfer_bytes,
+            deploy_ms: t0.elapsed().as_secs_f64() * 1e3,
+            out_shape: old.out_shape.clone(),
+        })
+    }
+
     /// Release node memory and executor-side blocks held by a deployment
     /// (every replica's, not just the primaries').
     pub fn undeploy(&self, deployment: &Deployment) {

@@ -11,6 +11,7 @@
 //!                    [--coalesce]       # merge adjacent small miss-sets
 //!                    [--replicas auto|K]  # data-parallel copies of hot stages
 //!                    [--deadline-ms MS] # default per-request deadline (shed past it)
+//!                    [--heal] [--miss-threshold N]  # self-heal under node churn
 //!                    [--priority-classes N]  # strict-priority ingress lanes
 //!                    [--transport inproc|uds|tcp] [--agents a,b,...]  # wire transport
 //! amp4ec node        --listen ADDR      # node agent (socket path or host:port)
@@ -87,6 +88,9 @@ fn build_config(args: &Args) -> anyhow::Result<AmpConfig> {
     if let Some(r) = args.get("replicas") {
         cfg.replicas = amp4ec::config::ReplicaPolicy::parse(r)?;
     }
+    cfg.heal = args.flag("heal");
+    cfg.miss_threshold =
+        args.get_usize("miss-threshold", cfg.miss_threshold as usize)? as u32;
     cfg.priority_classes =
         args.get_usize("priority-classes", cfg.priority_classes)?;
     if let Some(ms) = args.get("deadline-ms") {
@@ -236,14 +240,36 @@ fn print_report(report: &amp4ec::server::ServeReport) {
             w.decode_ns as f64 / 1e6
         );
     }
+    // Self-healing: only on a run that actually saw churn.
+    let ch = &report.churn;
+    if ch.any() {
+        println!(
+            "node churn         : {} died / {} returned; heals: {} replica \
+             re-placements, {} re-partitions",
+            ch.nodes_died,
+            ch.nodes_returned,
+            ch.heals_replaced,
+            ch.heals_repartitioned
+        );
+        println!(
+            "micro-batch replays: {} succeeded / {} attempted",
+            ch.replays_succeeded, ch.replays_attempted
+        );
+    }
 }
 
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let cfg = build_config(args)?;
+    let heal = cfg.heal;
+    let interval =
+        std::time::Duration::from_millis(cfg.monitor_interval_ms.max(1));
     let requests = args.get_usize("requests", 32)?;
     let distinct = args.get_usize("distinct", requests)?;
-    let server = EdgeServer::start(cfg)?;
+    let server = std::sync::Arc::new(EdgeServer::start(cfg)?);
     println!("deployed over nodes: {:?}", server.service().deployment_nodes());
+    // Self-healing serving: watch the monitor's liveness feed and walk
+    // the heal ladder on node death. Held for the duration of the run.
+    let _watchdog = heal.then(|| server.start_heal_watchdog(interval));
     let report = server.serve_workload(requests, distinct, Arrival::Closed, 0)?;
     print_report(&report);
     Ok(())

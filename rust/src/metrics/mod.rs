@@ -492,6 +492,36 @@ pub struct CoalesceStats {
     pub saved_micro_batches: u64,
 }
 
+/// Self-healing counters for a serving run under node churn (ISSUE 8):
+/// what the liveness feed observed and how the heal ladder responded.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ChurnStats {
+    /// Nodes the monitor declared dead (>= miss_threshold consecutive
+    /// missed samples).
+    pub nodes_died: u64,
+    /// Dead nodes later observed back online (warm re-admission).
+    pub nodes_returned: u64,
+    /// Heals resolved by re-placing only the dead replicas' stages
+    /// (every affected stage kept a surviving replica).
+    pub heals_replaced: u64,
+    /// Heals that fell back to a full re-partition (some stage lost its
+    /// only copy).
+    pub heals_repartitioned: u64,
+    /// In-flight micro-batches the engine re-ran on a surviving replica
+    /// after a stage execution failed.
+    pub replays_attempted: u64,
+    /// Replays that produced the micro-batch's output (the batch kept
+    /// streaming instead of failing).
+    pub replays_succeeded: u64,
+}
+
+impl ChurnStats {
+    /// True when any churn or heal activity was recorded.
+    pub fn any(&self) -> bool {
+        *self != ChurnStats::default()
+    }
+}
+
 /// Thread-safe accumulator merging [`StageCounter`]s across traversals
 /// (the per-deployment view a serving run reports).
 #[derive(Default)]

@@ -10,14 +10,23 @@
 //! The monitor also measures its own cost: §IV-E claims monitoring adds
 //! <= 1% CPU — [`MonitorHandle::overhead_cpu_pct`] reports the sampler
 //! thread's busy fraction so the scalability bench can verify that claim.
+//!
+//! **Liveness** (ISSUE 8): beyond the point-in-time `online` flags, the
+//! sampler counts *consecutive* offline samples per node. A node past
+//! [`MonitorConfig::miss_threshold`] misses is declared dead — the
+//! liveness epoch bumps and a [`NodeEvent::Died`] lands on the event
+//! feed; a dead node sampling online again is declared returned
+//! ([`NodeEvent::Returned`], epoch bump). The serving layer's heal
+//! watchdog keys off [`MonitorHandle::liveness_epoch`] instead of
+//! polling flags, so an equal-count leave+join is never invisible.
 
-use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::collections::{BTreeSet, HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
-use crate::cluster::{Cluster, NodeSnapshot};
+use crate::cluster::{Cluster, NodeId, NodeSnapshot};
 
 /// One timestamped cluster-wide sample.
 #[derive(Debug, Clone)]
@@ -61,20 +70,67 @@ pub struct MonitorConfig {
     pub sample_interval: Duration,
     /// Max snapshots retained (ring buffer).
     pub history_len: usize,
+    /// Consecutive offline samples before a node is declared *dead*
+    /// (heartbeat misses). One flaky sample is not a death; the
+    /// threshold trades detection latency (`miss_threshold *
+    /// sample_interval`) against false positives.
+    pub miss_threshold: u32,
 }
 
 impl Default for MonitorConfig {
     fn default() -> Self {
         // Paper: 1 Hz sampling, 100 ms aggregation window. We default to
         // 10 Hz so short benchmark runs still collect useful history.
-        MonitorConfig { sample_interval: Duration::from_millis(100), history_len: 4096 }
+        MonitorConfig {
+            sample_interval: Duration::from_millis(100),
+            history_len: 4096,
+            miss_threshold: 3,
+        }
     }
+}
+
+/// A liveness transition observed by the sampler.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum NodeEvent {
+    /// The node missed `miss_threshold` consecutive samples.
+    Died { node: NodeId, t_ms: f64 },
+    /// A previously-dead node sampled online again (warm re-admission).
+    Returned { node: NodeId, t_ms: f64 },
+}
+
+impl NodeEvent {
+    pub fn node(&self) -> NodeId {
+        match *self {
+            NodeEvent::Died { node, .. } | NodeEvent::Returned { node, .. } => node,
+        }
+    }
+}
+
+/// Bound on the pending event feed: a reader that never drains still
+/// leaves the sampler O(1); the epoch counter is the lossless signal.
+const MAX_PENDING_EVENTS: usize = 1024;
+
+#[derive(Default)]
+struct Liveness {
+    /// Consecutive offline samples per node.
+    misses: HashMap<NodeId, u32>,
+    /// Nodes currently declared dead.
+    dead: BTreeSet<NodeId>,
+    /// Undelivered transitions (oldest first, bounded).
+    events: VecDeque<NodeEvent>,
 }
 
 struct Shared {
     history: Mutex<VecDeque<ClusterSnapshot>>,
     busy: Mutex<SelfCost>,
-    stop: AtomicBool,
+    liveness: Mutex<Liveness>,
+    /// Bumped on every death/return declaration; watchers poll this.
+    liveness_epoch: AtomicU64,
+    /// Interruptible stop: `stop()` flips the flag and notifies, so a
+    /// sampler mid-wait wakes immediately instead of finishing its
+    /// interval.
+    stop: Mutex<bool>,
+    stop_cv: Condvar,
 }
 
 #[derive(Default)]
@@ -89,19 +145,87 @@ pub struct MonitorHandle {
     thread: Option<thread::JoinHandle<()>>,
 }
 
+/// Fold one sample into the liveness state: offline nodes accumulate
+/// consecutive misses and cross into `dead` at the threshold; online
+/// nodes reset their counter and resurrect out of `dead`. Returns how
+/// many transitions were declared (the epoch delta).
+fn observe_liveness(
+    lv: &mut Liveness,
+    snapshot: &ClusterSnapshot,
+    miss_threshold: u32,
+) -> u64 {
+    let mut transitions = 0;
+    for n in &snapshot.nodes {
+        if n.online {
+            lv.misses.insert(n.id, 0);
+            if lv.dead.remove(&n.id) {
+                lv.events.push_back(NodeEvent::Returned {
+                    node: n.id,
+                    t_ms: snapshot.t_ms,
+                });
+                transitions += 1;
+            }
+        } else {
+            let misses = lv.misses.entry(n.id).or_insert(0);
+            *misses = misses.saturating_add(1);
+            if *misses >= miss_threshold && lv.dead.insert(n.id) {
+                lv.events.push_back(NodeEvent::Died {
+                    node: n.id,
+                    t_ms: snapshot.t_ms,
+                });
+                transitions += 1;
+            }
+        }
+    }
+    while lv.events.len() > MAX_PENDING_EVENTS {
+        lv.events.pop_front();
+    }
+    transitions
+}
+
 /// Spawn the sampling thread over `cluster`.
 pub fn spawn(cluster: Arc<Cluster>, config: MonitorConfig) -> MonitorHandle {
     let shared = Arc::new(Shared {
         history: Mutex::new(VecDeque::with_capacity(config.history_len)),
         busy: Mutex::new(SelfCost { busy_ms: 0.0, wall_start: Some(Instant::now()) }),
-        stop: AtomicBool::new(false),
+        liveness: Mutex::new(Liveness::default()),
+        liveness_epoch: AtomicU64::new(0),
+        stop: Mutex::new(false),
+        stop_cv: Condvar::new(),
     });
     let worker_shared = Arc::clone(&shared);
     let start = Instant::now();
+    let miss_threshold = config.miss_threshold.max(1);
     let thread = thread::Builder::new()
         .name("amp4ec-monitor".into())
         .spawn(move || {
-            while !worker_shared.stop.load(Ordering::SeqCst) {
+            // Deadline-based tick: each sample is due one interval after
+            // the *previous deadline*, not one interval after the sample
+            // finished — so the effective rate stays pinned at the
+            // configured one instead of drifting low by the per-sample
+            // cost.
+            let mut next = Instant::now();
+            loop {
+                // Interruptible wait until the deadline: stop() flips
+                // the flag and notifies, so teardown never blocks a
+                // full interval behind a sleeping sampler.
+                {
+                    let mut stopped = worker_shared.stop.lock().unwrap();
+                    loop {
+                        if *stopped {
+                            return;
+                        }
+                        let now = Instant::now();
+                        if now >= next {
+                            break;
+                        }
+                        let (guard, _) = worker_shared
+                            .stop_cv
+                            .wait_timeout(stopped, next - now)
+                            .unwrap();
+                        stopped = guard;
+                    }
+                }
                 let t0 = Instant::now();
                 let snapshot = ClusterSnapshot {
                     t_ms: start.elapsed().as_secs_f64() * 1e3,
@@ -112,6 +236,16 @@ pub fn spawn(cluster: Arc<Cluster>, config: MonitorConfig) -> MonitorHandle {
                         .collect(),
                 };
                 {
+                    let mut lv = worker_shared.liveness.lock().unwrap();
+                    let transitions =
+                        observe_liveness(&mut lv, &snapshot, miss_threshold);
+                    if transitions > 0 {
+                        worker_shared
+                            .liveness_epoch
+                            .fetch_add(transitions, Ordering::SeqCst);
+                    }
+                }
+                {
                     let mut hist = worker_shared.history.lock().unwrap();
                     if hist.len() == config.history_len {
                         hist.pop_front();
@@ -120,7 +254,13 @@ pub fn spawn(cluster: Arc<Cluster>, config: MonitorConfig) -> MonitorHandle {
                 }
                 let spent = t0.elapsed().as_secs_f64() * 1e3;
                 worker_shared.busy.lock().unwrap().busy_ms += spent;
-                thread::sleep(config.sample_interval);
+                next += config.sample_interval;
+                let now = Instant::now();
+                if next < now {
+                    // A sample overran whole intervals: skip ahead
+                    // rather than bursting to catch up.
+                    next = now;
+                }
             }
         })
         .expect("spawn monitor thread");
@@ -159,13 +299,34 @@ impl MonitorHandle {
         }
     }
 
+    /// Liveness epoch: bumped once per death/return declaration.
+    /// Watchers poll this and react to changes — cheaper and more
+    /// complete than diffing snapshots (an equal-count leave+join moves
+    /// the epoch twice).
+    pub fn liveness_epoch(&self) -> u64 {
+        self.shared.liveness_epoch.load(Ordering::SeqCst)
+    }
+
+    /// Nodes currently declared dead (>= `miss_threshold` consecutive
+    /// missed samples, not yet seen back online).
+    pub fn dead_nodes(&self) -> Vec<NodeId> {
+        self.shared.liveness.lock().unwrap().dead.iter().copied().collect()
+    }
+
+    /// Drain the pending liveness transitions (oldest first). Each event
+    /// is delivered to exactly one drainer.
+    pub fn drain_events(&self) -> Vec<NodeEvent> {
+        self.shared.liveness.lock().unwrap().events.drain(..).collect()
+    }
+
     pub fn stop(mut self) -> Vec<ClusterSnapshot> {
         self.stop_inner();
         self.history()
     }
 
     fn stop_inner(&mut self) {
-        self.shared.stop.store(true, Ordering::SeqCst);
+        *self.shared.stop.lock().unwrap() = true;
+        self.shared.stop_cv.notify_all();
         if let Some(t) = self.thread.take() {
             let _ = t.join();
         }
@@ -196,7 +357,11 @@ mod tests {
         let c = cluster_with(2);
         let m = spawn(
             Arc::clone(&c),
-            MonitorConfig { sample_interval: Duration::from_millis(5), history_len: 100 },
+            MonitorConfig {
+                sample_interval: Duration::from_millis(5),
+                history_len: 100,
+                ..MonitorConfig::default()
+            },
         );
         thread::sleep(Duration::from_millis(60));
         assert!(m.samples_taken() >= 3);
@@ -211,7 +376,11 @@ mod tests {
         let id = c.all_nodes()[0].id();
         let m = spawn(
             Arc::clone(&c),
-            MonitorConfig { sample_interval: Duration::from_millis(5), history_len: 100 },
+            MonitorConfig {
+                sample_interval: Duration::from_millis(5),
+                history_len: 100,
+                ..MonitorConfig::default()
+            },
         );
         thread::sleep(Duration::from_millis(20));
         c.remove_node(id);
@@ -226,7 +395,11 @@ mod tests {
         let c = cluster_with(1);
         let m = spawn(
             Arc::clone(&c),
-            MonitorConfig { sample_interval: Duration::from_millis(1), history_len: 5 },
+            MonitorConfig {
+                sample_interval: Duration::from_millis(1),
+                history_len: 5,
+                ..MonitorConfig::default()
+            },
         );
         thread::sleep(Duration::from_millis(50));
         assert!(m.samples_taken() <= 5);
@@ -242,7 +415,11 @@ mod tests {
         let c = cluster_with(3);
         let m = spawn(
             Arc::clone(&c),
-            MonitorConfig { sample_interval: Duration::from_millis(100), history_len: 100 },
+            MonitorConfig {
+                sample_interval: Duration::from_millis(100),
+                history_len: 100,
+                ..MonitorConfig::default()
+            },
         );
         thread::sleep(Duration::from_millis(250));
         // The paper claims <= 1% CPU for 1 Hz; at 10 Hz over 3 nodes we
@@ -255,11 +432,149 @@ mod tests {
         let c = cluster_with(1);
         let m = spawn(
             Arc::clone(&c),
-            MonitorConfig { sample_interval: Duration::from_millis(5), history_len: 100 },
+            MonitorConfig {
+                sample_interval: Duration::from_millis(5),
+                history_len: 100,
+                ..MonitorConfig::default()
+            },
         );
         thread::sleep(Duration::from_millis(20));
         let h = m.stop();
         assert!(!h.is_empty());
+    }
+
+    #[test]
+    fn sample_rate_pinned_by_deadline_tick() {
+        // The ISSUE-8 rate-drift regression: the sampler must hit the
+        // configured rate (deadline tick), not interval-plus-sample-cost.
+        // With the old post-cost sleep the count was only guaranteed to
+        // be wall / (interval + cost); the deadline tick guarantees
+        // close to wall / interval.
+        let c = cluster_with(2);
+        let interval = Duration::from_millis(10);
+        let m = spawn(
+            Arc::clone(&c),
+            MonitorConfig {
+                sample_interval: interval,
+                history_len: 1000,
+                ..MonitorConfig::default()
+            },
+        );
+        thread::sleep(Duration::from_millis(205));
+        let taken = m.samples_taken();
+        // 205 ms / 10 ms = ~20 deadlines; allow generous scheduler slop
+        // but fail on systematic drift (the old behaviour loses one tick
+        // for every interval's worth of accumulated sample cost).
+        assert!(taken >= 12, "sampler drifted: {taken} samples in 205 ms");
+        drop(m);
+    }
+
+    #[test]
+    fn stop_is_prompt_even_mid_interval() {
+        // With a multi-second interval the old stop()/Drop joined a
+        // sleeping thread for up to the whole interval. The condvar wait
+        // must wake immediately.
+        let c = cluster_with(1);
+        let m = spawn(
+            Arc::clone(&c),
+            MonitorConfig {
+                sample_interval: Duration::from_secs(30),
+                history_len: 10,
+                ..MonitorConfig::default()
+            },
+        );
+        // Let the first sample land so the thread is parked in its wait.
+        thread::sleep(Duration::from_millis(30));
+        let t0 = Instant::now();
+        let h = m.stop();
+        assert!(
+            t0.elapsed() < Duration::from_millis(500),
+            "stop blocked {:?} behind a sleeping sampler",
+            t0.elapsed()
+        );
+        assert!(!h.is_empty());
+    }
+
+    #[test]
+    fn death_declared_after_miss_threshold_and_return_observed() {
+        let c = cluster_with(2);
+        let id = c.all_nodes()[0].id();
+        let m = spawn(
+            Arc::clone(&c),
+            MonitorConfig {
+                sample_interval: Duration::from_millis(3),
+                history_len: 1000,
+                miss_threshold: 3,
+            },
+        );
+        thread::sleep(Duration::from_millis(20));
+        assert_eq!(m.liveness_epoch(), 0);
+        assert!(m.dead_nodes().is_empty());
+
+        c.remove_node(id);
+        // 3 consecutive misses at 3 ms apiece: well within 100 ms.
+        let deadline = Instant::now() + Duration::from_millis(1000);
+        while m.dead_nodes().is_empty() && Instant::now() < deadline {
+            thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(m.dead_nodes(), vec![id]);
+        assert_eq!(m.liveness_epoch(), 1);
+        let events = m.drain_events();
+        assert!(
+            matches!(events.as_slice(), [NodeEvent::Died { node, .. }] if *node == id),
+            "expected one Died event, got {events:?}"
+        );
+
+        // Warm return: the node resurrects out of the dead set.
+        c.readmit_node(id);
+        let deadline = Instant::now() + Duration::from_millis(1000);
+        while !m.dead_nodes().is_empty() && Instant::now() < deadline {
+            thread::sleep(Duration::from_millis(5));
+        }
+        assert!(m.dead_nodes().is_empty());
+        assert_eq!(m.liveness_epoch(), 2);
+        let events = m.drain_events();
+        assert!(
+            matches!(events.as_slice(), [NodeEvent::Returned { node, .. }] if *node == id),
+            "expected one Returned event, got {events:?}"
+        );
+        assert!(m.drain_events().is_empty(), "events drain exactly once");
+    }
+
+    #[test]
+    fn misses_below_threshold_are_not_death() {
+        // A huge threshold: the node stays merely offline, never dead.
+        let c = cluster_with(1);
+        let id = c.all_nodes()[0].id();
+        let m = spawn(
+            Arc::clone(&c),
+            MonitorConfig {
+                sample_interval: Duration::from_millis(2),
+                history_len: 1000,
+                miss_threshold: 100_000,
+            },
+        );
+        c.remove_node(id);
+        thread::sleep(Duration::from_millis(40));
+        assert!(m.dead_nodes().is_empty());
+        assert_eq!(m.liveness_epoch(), 0);
+        assert!(m.drain_events().is_empty());
+    }
+
+    #[test]
+    fn observe_liveness_counts_transitions() {
+        // Unit-level: threshold crossing, no double-death, resurrection.
+        let mk = |online: bool| ClusterSnapshot {
+            t_ms: 1.0,
+            nodes: vec![NodeSnapshot { online, ..cluster_with(1).all_nodes()[0].snapshot() }],
+        };
+        let mut lv = Liveness::default();
+        assert_eq!(observe_liveness(&mut lv, &mk(false), 2), 0);
+        assert_eq!(observe_liveness(&mut lv, &mk(false), 2), 1);
+        assert_eq!(observe_liveness(&mut lv, &mk(false), 2), 0); // already dead
+        assert_eq!(observe_liveness(&mut lv, &mk(true), 2), 1); // returned
+        assert_eq!(observe_liveness(&mut lv, &mk(true), 2), 0);
+        assert_eq!(lv.events.len(), 2);
     }
 
     #[test]

@@ -597,11 +597,16 @@ fn concat_rows_owned(chunks: Vec<Tensor>) -> Result<Tensor> {
 /// One micro-batch moving through the stage queues. `batch` tags which
 /// admitted *transport* the rows belong to (always 0 for one-shot
 /// runs); `ready_ms` is the simulated time it left the previous stage.
+/// `deadline` is the transport's most lenient member deadline (None
+/// when any member has none): a failed execution is only worth
+/// replaying on a surviving replica while some member can still use
+/// the output.
 struct PMsg {
     batch: u64,
     idx: usize,
     ready_ms: f64,
     tensor: Tensor,
+    deadline: Option<std::time::Instant>,
 }
 
 /// Per-stage credit windows (the tentpole of ISSUE 3). Window `k`
@@ -924,6 +929,53 @@ fn panic_msg(p: Box<dyn std::any::Any + Send>) -> String {
         .unwrap_or_else(|| "opaque panic payload".into())
 }
 
+/// In-flight replay counters (ISSUE 8): micro-batches re-run on a
+/// surviving replica after a stage execution failed mid-stream.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ReplayStats {
+    /// Replay executions attempted (one per surviving replica tried).
+    pub attempted: u64,
+    /// Replays that produced the micro-batch's output — the batch kept
+    /// streaming instead of failing.
+    pub succeeded: u64,
+}
+
+/// Per-engine healing context shared by every stage driver: whether
+/// micro-batch replay is on, plus the counters the serving report
+/// surfaces. Replay off (the default) preserves the pre-ISSUE-8
+/// fail-fast behaviour bit for bit.
+#[derive(Default)]
+struct HealCtx {
+    replay: bool,
+    attempted: AtomicU64,
+    succeeded: AtomicU64,
+}
+
+impl HealCtx {
+    fn new(replay: bool) -> HealCtx {
+        HealCtx { replay, ..HealCtx::default() }
+    }
+
+    fn stats(&self) -> ReplayStats {
+        ReplayStats {
+            attempted: self.attempted.load(Ordering::Relaxed),
+            succeeded: self.succeeded.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Cloneable view onto one engine's replay counters (see
+/// [`PersistentEngine::replay_probe`]): outlives the engine, so a
+/// deployment swap can read the final drained counts after teardown.
+#[derive(Clone)]
+pub struct ReplayProbe(Arc<HealCtx>);
+
+impl ReplayProbe {
+    pub fn stats(&self) -> ReplayStats {
+        self.0.stats()
+    }
+}
+
 /// Pick which replica of `stage` should execute micro-batch `idx`.
 /// Round-robin by sequence number over the *alive* set: with every
 /// replica alive this is plain `idx % n` (matching the static credit
@@ -966,6 +1018,7 @@ fn drive_stage<S: StageExec + ?Sized>(
     next: Vec<SyncSender<PFlow>>,
     state: &Mutex<EngineState>,
     windows: &CreditWindows,
+    heal: &HealCtx,
 ) {
     // The last window's credit is returned by the collector at delivery
     // (that is what makes uniform budgets degenerate to the global
@@ -981,12 +1034,20 @@ fn drive_stage<S: StageExec + ?Sized>(
             }
             PFlow::Item(m) => {
                 let bytes = m.tensor.byte_len();
-                let comm_ms = stages.comm_in_on(k, replica, bytes);
+                let mut comm_ms = stages.comm_in_on(k, replica, bytes);
+                // Replay insurance (ISSUE 8): retain a zero-copy clone
+                // of the stage input — an Arc view, so this is a
+                // refcount bump, not a row copy. The stage-k input *is*
+                // the last completed stage boundary, so a surviving
+                // replica can recompute this micro-batch from it.
+                let retained = (heal.replay && stages.replicas(k) > 1)
+                    .then(|| m.tensor.clone());
                 // A panic inside a StageExec implementation must degrade
                 // to a failed transport, not a dead driver thread (which
                 // would tear the whole engine down). Accounting after a
                 // panic is best-effort by design (AssertUnwindSafe).
-                let executed =
+                let mut exec_replica = replica;
+                let mut executed =
                     std::panic::catch_unwind(std::panic::AssertUnwindSafe(
                         || stages.execute_on(k, replica, m.tensor),
                     ))
@@ -996,12 +1057,52 @@ fn drive_stage<S: StageExec + ?Sized>(
                             panic_msg(p)
                         ))
                     });
+                if executed.is_err() {
+                    if let Some(input) = retained {
+                        // Replay is pointless once even the most lenient
+                        // member's deadline has passed — shed (fail) as
+                        // before instead of burning a surviving replica.
+                        let worth_it = m
+                            .deadline
+                            .is_none_or(|d| std::time::Instant::now() < d);
+                        let n = stages.replicas(k);
+                        for r2 in (0..n).filter(|&r2| {
+                            worth_it
+                                && r2 != replica
+                                && stages.replica_alive(k, r2)
+                        }) {
+                            heal.attempted.fetch_add(1, Ordering::Relaxed);
+                            // The resend over the surviving replica's
+                            // link is real work: charge its ingress on
+                            // top of the wasted first hop.
+                            comm_ms += stages.comm_in_on(k, r2, bytes);
+                            let retry = std::panic::catch_unwind(
+                                std::panic::AssertUnwindSafe(|| {
+                                    stages.execute_on(k, r2, input.clone())
+                                }),
+                            )
+                            .unwrap_or_else(|p| {
+                                Err(anyhow::anyhow!(
+                                    "stage implementation panicked: {}",
+                                    panic_msg(p)
+                                ))
+                            });
+                            if retry.is_ok() {
+                                heal.succeeded
+                                    .fetch_add(1, Ordering::Relaxed);
+                                exec_replica = r2;
+                                executed = retry;
+                                break;
+                            }
+                        }
+                    }
+                }
                 match executed {
                     Ok((out, compute_ms)) => {
                         let mut st = lock_state(state);
                         let d = st.cp.step_detail_on(
-                            k, replica, m.ready_ms, comm_ms, compute_ms,
-                            bytes,
+                            k, exec_replica, m.ready_ms, comm_ms,
+                            compute_ms, bytes,
                         );
                         if let Some(agg) = st.batches.get_mut(&m.batch) {
                             if m.idx == 0 {
@@ -1036,6 +1137,7 @@ fn drive_stage<S: StageExec + ?Sized>(
                                 idx: m.idx,
                                 ready_ms: d.done_ms,
                                 tensor: out,
+                                deadline: m.deadline,
                             }),
                         )
                     }
@@ -1091,6 +1193,7 @@ fn feed_batch<S: StageExec + ?Sized>(
     stages: &S,
     id: u64,
     chunks: Vec<Tensor>,
+    deadline: Option<std::time::Instant>,
     credit_rxs: &[Receiver<f64>],
     feed_txs: &[SyncSender<PFlow>],
     windows: &CreditWindows,
@@ -1124,7 +1227,13 @@ fn feed_batch<S: StageExec + ?Sized>(
         let to =
             if feed_txs.len() <= 1 { 0 } else { route_replica(stages, 0, idx) };
         if feed_txs[to]
-            .send(PFlow::Item(PMsg { batch: id, idx, ready_ms, tensor }))
+            .send(PFlow::Item(PMsg {
+                batch: id,
+                idx,
+                ready_ms,
+                tensor,
+                deadline,
+            }))
             .is_err()
         {
             return false;
@@ -1843,6 +1952,11 @@ pub fn run_streamed<S: StageExec + ?Sized>(
     );
     let windows = Arc::new(windows);
 
+    // One-shot runs keep the pre-ISSUE-8 fail-fast semantics: replay
+    // only exists in the persistent engine (where the serving layer
+    // turns it on).
+    let heal = Arc::new(HealCtx::new(false));
+
     std::thread::scope(|scope| {
         // One driver thread per (stage, replica).
         for (k, rxs) in stage_rxs.into_iter().enumerate() {
@@ -1855,8 +1969,11 @@ pub fn run_streamed<S: StageExec + ?Sized>(
                 let next = next.clone();
                 let state = &state;
                 let windows = Arc::clone(&windows);
+                let heal = Arc::clone(&heal);
                 scope.spawn(move || {
-                    drive_stage(stages, k, r, rx, next, state, &windows)
+                    drive_stage(
+                        stages, k, r, rx, next, state, &windows, &heal,
+                    )
                 });
             }
         }
@@ -1873,8 +1990,8 @@ pub fn run_streamed<S: StageExec + ?Sized>(
             let windows = Arc::clone(&windows);
             scope.spawn(move || {
                 feed_batch(
-                    stages, 0, chunks, &credit_rxs, &feed_txs, &windows,
-                    state,
+                    stages, 0, chunks, None, &credit_rxs, &feed_txs,
+                    &windows, state,
                 );
             });
         }
@@ -1972,6 +2089,13 @@ pub struct PersistentEngineConfig {
     pub coalesce: bool,
     /// Enable the adaptive window controller.
     pub adaptive: Option<AdaptiveDepthConfig>,
+    /// In-flight replay (ISSUE 8): when a stage execution fails on a
+    /// replicated stage, re-run the micro-batch from its retained stage
+    /// input on a surviving replica instead of failing the whole
+    /// transport (skipped once the transport's most lenient member
+    /// deadline has passed). Off (the default) preserves fail-fast
+    /// behaviour bit for bit.
+    pub replay: bool,
 }
 
 impl Default for PersistentEngineConfig {
@@ -1983,6 +2107,7 @@ impl Default for PersistentEngineConfig {
             per_stage: false,
             coalesce: false,
             adaptive: None,
+            replay: false,
         }
     }
 }
@@ -2266,6 +2391,16 @@ fn feeder_loop(
         let id = next_id;
         next_id += 1;
         let n_members = group.len();
+        // Transport deadline for in-flight replay: the most *lenient*
+        // member deadline — replay is pointless only once no member can
+        // use the output. None (replay always worthwhile) when any
+        // member is deadline-free.
+        let transport_deadline =
+            if group.iter().all(|s| s.deadline.is_some()) {
+                group.iter().filter_map(|s| s.deadline).max()
+            } else {
+                None
+            };
         let mut replies = Vec::with_capacity(n_members);
         let mut tensors = Vec::with_capacity(n_members);
         for s in group {
@@ -2343,7 +2478,8 @@ fn feeder_loop(
         }
         lock_state(&state).register(id, chunks.len(), members, padded_rows);
         if !feed_batch(
-            &*stages, id, chunks, &credit_rxs, &feed_txs, &windows, &state,
+            &*stages, id, chunks, transport_deadline, &credit_rxs,
+            &feed_txs, &windows, &state,
         ) {
             // The pipeline died under us (panic-driven cascade): fail
             // this transport and every submission still reaching the
@@ -2378,6 +2514,8 @@ pub struct PersistentEngine {
     depth_stats: Arc<DepthStats>,
     windows: Arc<CreditWindows>,
     coalesce: Arc<CoalesceCounters>,
+    /// Replay switch + counters shared with every stage driver.
+    heal: Arc<HealCtx>,
     /// `[min_depth, max_depth]` of the adaptive controller, if one is
     /// active — [`PersistentEngine::reshape_budgets`] clamps external
     /// targets into it so a live retune can never fight the controller
@@ -2504,6 +2642,7 @@ impl PersistentEngine {
         let depth_stats =
             Arc::new(DepthStats::new(*seed_budgets.last().expect("stages")));
         let coalesce_counters = Arc::new(CoalesceCounters::default());
+        let heal = Arc::new(HealCtx::new(cfg.replay));
 
         let n_drivers: usize = reps.iter().sum();
         let mut threads = Vec::with_capacity(n_drivers + 2);
@@ -2519,6 +2658,7 @@ impl PersistentEngine {
                 let stages = Arc::clone(&stages);
                 let state = Arc::clone(&state);
                 let windows = Arc::clone(&windows);
+                let heal = Arc::clone(&heal);
                 let name = if replicated {
                     format!("pipe-stage-{k}.{r}")
                 } else {
@@ -2530,6 +2670,7 @@ impl PersistentEngine {
                         .spawn(move || {
                             drive_stage(
                                 &*stages, k, r, rx, next, &state, &windows,
+                                &heal,
                             )
                         })
                         .context("spawning stage driver")?,
@@ -2592,6 +2733,7 @@ impl PersistentEngine {
             depth_stats,
             windows,
             coalesce: coalesce_counters,
+            heal,
             budget_bounds: cfg.adaptive.map(|a| (a.min_depth, a.max_depth)),
         })
     }
@@ -2719,6 +2861,21 @@ impl PersistentEngine {
         }
         // Keep the reported depth (== delivery budget) in sync.
         self.depth_stats.set_depth(self.windows.delivery_budget());
+    }
+
+    /// In-flight replay counters since startup (all zero unless
+    /// [`PersistentEngineConfig::replay`] is on and a stage failed
+    /// mid-stream).
+    pub fn replay_stats(&self) -> ReplayStats {
+        self.heal.stats()
+    }
+
+    /// Cloneable handle onto this engine's replay counters that stays
+    /// readable after the engine itself is torn down — a deployment
+    /// swap reads the drained engine's final counts through it *after*
+    /// the drop joins the driver threads.
+    pub fn replay_probe(&self) -> ReplayProbe {
+        ReplayProbe(Arc::clone(&self.heal))
     }
 
     /// Feeder-side coalescing counters since startup.

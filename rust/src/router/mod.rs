@@ -99,4 +99,14 @@ pub trait InferenceService: Send + Sync {
 
     /// A stable id namespacing cache keys.
     fn model_id(&self) -> u64;
+
+    /// How many times the ingress should *resubmit* a batch whose
+    /// submission failed with a non-deadline error before failing its
+    /// requests. Zero (the default) preserves fail-fast semantics;
+    /// self-healing services return a small budget so a batch that
+    /// raced a node death and the subsequent heal swap gets served by
+    /// the rebuilt stage chain instead of surfacing the transient.
+    fn failure_retries(&self) -> usize {
+        0
+    }
 }

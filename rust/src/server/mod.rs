@@ -8,6 +8,8 @@
 //! rides the same request-level path). This is the end-to-end
 //! composition the examples and the table benches drive.
 
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
 use anyhow::{Context, Result};
@@ -16,8 +18,8 @@ use crate::cluster::Cluster;
 use crate::config::AmpConfig;
 use crate::deployer::{Deployment, ModelDeployer};
 use crate::manifest::Manifest;
-use crate::metrics::{RunMetrics, StageCounter};
-use crate::monitor::{self, ClusterSnapshot, MonitorHandle};
+use crate::metrics::{ChurnStats, RunMetrics, StageCounter};
+use crate::monitor::{self, ClusterSnapshot, MonitorHandle, NodeEvent};
 use crate::partitioner::{self, Plan};
 use crate::pipeline::engine;
 use crate::router::{BatchMeta, InferenceService, Submission};
@@ -66,6 +68,22 @@ pub struct DistributedService {
     /// Accumulated per-stage occupancy/bubble counters (streamed and
     /// serial runs alike). Arc so completion closures can merge into it.
     stage_counters: Arc<crate::metrics::StageCounterSet>,
+    /// Self-healing serving (`AmpConfig::heal`): the engine replays
+    /// failed micro-batches on surviving replicas, and the ingress gets
+    /// a failure-retry budget to ride out a heal swap.
+    heal: bool,
+    /// Replay counters carried over from engines already torn down by
+    /// deployment swaps; the live engine's counters ride on top (see
+    /// [`DistributedService::replay_stats`]).
+    replay_base: ReplayBase,
+}
+
+/// Replay counts folded in from drained engines (a heal rebuilds the
+/// engine, which would otherwise reset the run's replay accounting).
+#[derive(Default)]
+struct ReplayBase {
+    attempted: AtomicU64,
+    succeeded: AtomicU64,
 }
 
 /// What a previous engine learned, for an engine-aware rebalance: the
@@ -111,6 +129,7 @@ impl DistributedService {
         per_stage_windows: bool,
         coalesce: bool,
         wire: Option<&transport::WireConfig>,
+        replay: bool,
         carried: Option<LearnedWindows>,
     ) -> Result<Option<Arc<engine::PersistentEngine>>> {
         let replicated = dep.stages.iter().any(|s| s.replica_count() > 1);
@@ -147,6 +166,7 @@ impl DistributedService {
             per_stage: per_stage_windows,
             coalesce,
             adaptive,
+            replay,
         };
         let built = match wire {
             // Wire mode: the stage chain is the remote twin of `dep` —
@@ -201,6 +221,7 @@ impl DistributedService {
             self.per_stage_windows,
             self.coalesce,
             self.wire.as_ref(),
+            self.heal,
             carried,
         )?;
         // Swap both under the deployment write lock. Acquiring it waits
@@ -219,9 +240,36 @@ impl DistributedService {
         };
         // Last reference: dropping joins the old engine's threads after
         // its queues drain, so in-flight batches complete against the old
-        // deployment before the caller undeploys it.
+        // deployment before the caller undeploys it. The probe outlives
+        // the engine, so replays performed *during* that final drain
+        // still land in the accumulated base.
+        let probe = old_engine.as_ref().map(|e| e.replay_probe());
         drop(old_engine);
+        if let Some(p) = probe {
+            let s = p.stats();
+            self.replay_base.attempted.fetch_add(s.attempted, Ordering::Relaxed);
+            self.replay_base.succeeded.fetch_add(s.succeeded, Ordering::Relaxed);
+        }
         Ok(old_dep)
+    }
+
+    /// In-flight replay counters since startup, accumulated across
+    /// deployment swaps (a heal rebuilds the engine; the drained
+    /// engine's counts fold into the base — see `replay_base`).
+    pub fn replay_stats(&self) -> engine::ReplayStats {
+        let live = self
+            .engine
+            .lock()
+            .unwrap()
+            .as_ref()
+            .map(|e| e.replay_stats())
+            .unwrap_or_default();
+        engine::ReplayStats {
+            attempted: self.replay_base.attempted.load(Ordering::Relaxed)
+                + live.attempted,
+            succeeded: self.replay_base.succeeded.load(Ordering::Relaxed)
+                + live.succeeded,
+        }
     }
 
     /// Accumulated per-stage engine counters since startup.
@@ -445,6 +493,15 @@ impl InferenceService for DistributedService {
     fn model_id(&self) -> u64 {
         0xD157
     }
+
+    /// Ingress-side retry budget: with healing on, a batch that failed
+    /// mid-churn (its stage chain lost a node between the death and the
+    /// heal swap) is worth resubmitting — the healed engine serves it.
+    /// Without healing a failure is terminal, so retrying would only
+    /// double the latency of a lost cause; keep the fail-fast default.
+    fn failure_retries(&self) -> usize {
+        if self.heal { 2 } else { 0 }
+    }
 }
 
 /// Everything a serving run produces, for the table harnesses.
@@ -487,6 +544,47 @@ pub struct ServeReport {
     /// Per-(stage, replica) occupancy/bubble counters from the engine's
     /// critical path (empty when no engine ran).
     pub replica_counters: Vec<crate::metrics::ReplicaCounter>,
+    /// Node-churn accounting: deaths/returns seen by the heal watchdog,
+    /// heals performed, and engine micro-batch replays (accumulated
+    /// across deployment swaps). All zero on a churn-free run.
+    pub churn: ChurnStats,
+}
+
+/// What one [`EdgeServer::heal`] invocation did.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum HealAction {
+    /// Dead replicas were re-placed in place; the partition plan (and
+    /// the learned engine windows) survived.
+    Replaced,
+    /// Full re-partition over the surviving topology — some stage had
+    /// lost every replica. Carries the new partition layer sizes.
+    Repartitioned(Vec<usize>),
+}
+
+/// Atomic churn counters accumulated by the heal watchdog; snapshotted
+/// into [`ChurnStats`] for reports (replay counts merged in from the
+/// service, which owns that accounting).
+#[derive(Default)]
+struct ChurnCounters {
+    nodes_died: AtomicU64,
+    nodes_returned: AtomicU64,
+    heals_replaced: AtomicU64,
+    heals_repartitioned: AtomicU64,
+}
+
+impl ChurnCounters {
+    fn stats(&self) -> ChurnStats {
+        ChurnStats {
+            nodes_died: self.nodes_died.load(Ordering::Relaxed),
+            nodes_returned: self.nodes_returned.load(Ordering::Relaxed),
+            heals_replaced: self.heals_replaced.load(Ordering::Relaxed),
+            heals_repartitioned: self
+                .heals_repartitioned
+                .load(Ordering::Relaxed),
+            replays_attempted: 0,
+            replays_succeeded: 0,
+        }
+    }
 }
 
 /// The leader.
@@ -501,6 +599,8 @@ pub struct EdgeServer {
     pub cache: Option<Arc<ResultCache>>,
     service: Arc<DistributedService>,
     plan: std::sync::Mutex<Plan>,
+    /// Churn counters shared with the heal watchdog thread.
+    churn: Arc<ChurnCounters>,
     /// Lazily-built long-lived ingress for the one-request convenience
     /// paths ([`single_request`], [`EdgeServer::golden_check`]): one
     /// worker, no batch-fill wait, no cache, no default deadline —
@@ -640,6 +740,7 @@ impl EdgeServer {
             config.per_stage_windows,
             config.coalesce,
             wire.as_ref(),
+            config.heal,
             None,
         )?;
         let service = Arc::new(DistributedService {
@@ -652,6 +753,8 @@ impl EdgeServer {
             wire,
             engine: Mutex::new(pipeline_engine),
             stage_counters: Arc::new(crate::metrics::StageCounterSet::new()),
+            heal: config.heal,
+            replay_base: ReplayBase::default(),
         });
 
         let cache = config.cache_entries.map(|n| Arc::new(ResultCache::new(n)));
@@ -665,6 +768,7 @@ impl EdgeServer {
             cache,
             service,
             plan: std::sync::Mutex::new(plan),
+            churn: Arc::new(ChurnCounters::default()),
             one_shot: std::sync::OnceLock::new(),
         })
     }
@@ -781,27 +885,37 @@ impl EdgeServer {
             wire,
             replica_map,
             replica_counters,
+            churn: self.churn_stats(),
         })
+    }
+
+    /// Node-churn + replay accounting since startup: watchdog-observed
+    /// deaths/returns, heals performed, and engine micro-batch replays
+    /// (accumulated across deployment swaps).
+    pub fn churn_stats(&self) -> ChurnStats {
+        let mut s = self.churn.stats();
+        let replay = self.service.replay_stats();
+        s.replays_attempted = replay.attempted;
+        s.replays_succeeded = replay.succeeded;
+        s
     }
 
     /// Handle a topology change: re-plan and redeploy over the current
     /// online nodes. Returns the new partition layer sizes.
     pub fn rebalance(&self) -> Result<Vec<usize>> {
-        let n = self
-            .cluster
-            .online_count()
-            .min(self.manifest.blocks.len())
-            .max(1);
+        // Snapshot the topology *once*: reading online_count() again for
+        // the replica budget let a node leave (or return) between the
+        // two reads, sizing the plan for N nodes and the budget for a
+        // different N — deploy then over- or under-places replicas.
+        let online = self.cluster.online_count();
+        let n = online.min(self.manifest.blocks.len()).max(1);
         let plan = partitioner::plan(&self.manifest, n)?;
         // Re-derive the replica budget for the *new* topology: the node
         // that just left may have hosted a replica.
         let replica_counts = if self.config.replicas.is_off() {
             vec![1; plan.partitions.len()]
         } else {
-            let spare = self
-                .cluster
-                .online_count()
-                .saturating_sub(plan.partitions.len());
+            let spare = online.saturating_sub(plan.partitions.len());
             let costs: Vec<f64> =
                 plan.partitions.iter().map(|p| p.cost as f64).collect();
             partitioner::replica_counts(
@@ -832,8 +946,8 @@ impl EdgeServer {
     }
 
     /// §V extension "dynamic partitioning ... adapt to runtime changes":
-    /// spawn a watchdog that rebalances automatically whenever the online
-    /// node count changes. Dropping the handle stops it.
+    /// spawn a watchdog that rebalances automatically whenever cluster
+    /// *membership* changes. Dropping the handle stops it.
     pub fn start_auto_rebalance(
         self: &Arc<Self>,
         interval: std::time::Duration,
@@ -843,19 +957,24 @@ impl EdgeServer {
         let stop_t = Arc::clone(&stop);
         // Baseline captured *before* the thread spawns: a topology change
         // racing thread startup must still be detected.
-        let baseline = self.cluster.online_count();
+        let baseline = self.cluster.membership_epoch();
         let thread = std::thread::Builder::new()
             .name("amp4ec-rebalance".into())
             .spawn(move || {
                 let mut last = baseline;
                 while !stop_t.load(std::sync::atomic::Ordering::SeqCst) {
                     std::thread::sleep(interval);
-                    let now = server.cluster.online_count();
-                    if now != last && now > 0 {
+                    // Membership epoch, not online_count(): an
+                    // equal-count leave+join (or a leave and a join
+                    // landing inside one poll interval) keeps the count
+                    // identical while the membership — and therefore the
+                    // right placement — changed underneath it.
+                    let now = server.cluster.membership_epoch();
+                    if now != last && server.cluster.online_count() > 0 {
                         match server.rebalance() {
                             Ok(sizes) => crate::log_info!(
                                 "rebalance",
-                                "topology {last} -> {now} nodes; new plan {sizes:?}"
+                                "membership epoch {last} -> {now}; new plan {sizes:?}"
                             ),
                             Err(e) => crate::log_warn!(
                                 "rebalance",
@@ -867,6 +986,130 @@ impl EdgeServer {
                 }
             })
             .expect("spawn rebalance watchdog");
+        AutoRebalanceHandle { stop, thread: Some(thread) }
+    }
+
+    /// One rung of the heal ladder (self-healing serving): given the
+    /// nodes the monitor declared dead, first try the cheap delta —
+    /// keep the partition plan and re-place only the dead replicas'
+    /// slots ([`ModelDeployer::heal_replace`]; the model cache makes the
+    /// surviving re-ship near-free and the learned engine windows carry
+    /// over) — and fall back to a full re-partition only when some
+    /// stage lost every replica. Counters land in
+    /// [`EdgeServer::churn_stats`].
+    pub fn heal(&self, dead: &HashSet<usize>) -> Result<HealAction> {
+        let old = Arc::clone(&*self.service.deployment.read().unwrap());
+        match self
+            .deployer
+            .heal_replace(&old, dead, &self.cluster, &self.scheduler)
+        {
+            Ok(new_dep) => {
+                let new_dep = Arc::new(new_dep);
+                let old = match self
+                    .service
+                    .replace_deployment(Arc::clone(&new_dep))
+                {
+                    Ok(old) => old,
+                    Err(e) => {
+                        // The swap never happened: release the freshly
+                        // loaded blocks instead of leaking them.
+                        self.deployer.undeploy(&new_dep);
+                        return Err(e);
+                    }
+                };
+                self.deployer.undeploy(&old);
+                self.churn.heals_replaced.fetch_add(1, Ordering::Relaxed);
+                Ok(HealAction::Replaced)
+            }
+            Err(e) => {
+                crate::log_info!(
+                    "heal",
+                    "replica re-placement not possible ({e:#}); \
+                     falling back to re-partition"
+                );
+                let sizes = self.rebalance()?;
+                self.churn
+                    .heals_repartitioned
+                    .fetch_add(1, Ordering::Relaxed);
+                Ok(HealAction::Repartitioned(sizes))
+            }
+        }
+    }
+
+    /// Spawn the self-healing watchdog: drains the monitor's liveness
+    /// transitions every `interval` and walks the heal ladder for each
+    /// batch of deaths ([`EdgeServer::heal`]); a `Returned` node is
+    /// re-admitted to the spare pool (warm re-admission — its model
+    /// cache still holds whatever was shipped before it left). Dropping
+    /// the handle stops the thread. Liveness detection latency is
+    /// `miss_threshold * monitor_interval_ms` plus up to one `interval`.
+    pub fn start_heal_watchdog(
+        self: &Arc<Self>,
+        interval: std::time::Duration,
+    ) -> AutoRebalanceHandle {
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let server = Arc::clone(self);
+        let stop_t = Arc::clone(&stop);
+        let thread = std::thread::Builder::new()
+            .name("amp4ec-heal".into())
+            .spawn(move || {
+                while !stop_t.load(std::sync::atomic::Ordering::SeqCst) {
+                    std::thread::sleep(interval);
+                    let events = server.monitor.drain_events();
+                    if events.is_empty() {
+                        continue;
+                    }
+                    let mut died: HashSet<usize> = HashSet::new();
+                    for ev in events {
+                        match ev {
+                            NodeEvent::Died { node, .. } => {
+                                died.insert(node);
+                                server
+                                    .churn
+                                    .nodes_died
+                                    .fetch_add(1, Ordering::Relaxed);
+                            }
+                            NodeEvent::Returned { node, .. } => {
+                                // Warm re-admission: make sure the
+                                // cluster sees the node as spare
+                                // capacity again (idempotent when
+                                // whoever revived it already did).
+                                server.cluster.readmit_node(node);
+                                server
+                                    .churn
+                                    .nodes_returned
+                                    .fetch_add(1, Ordering::Relaxed);
+                                died.remove(&node);
+                            }
+                        }
+                    }
+                    if died.is_empty() {
+                        continue;
+                    }
+                    // Fold in anything still dead from earlier rounds —
+                    // a heal that failed last tick retries here with the
+                    // full dead set.
+                    died.extend(server.monitor.dead_nodes());
+                    match server.heal(&died) {
+                        Ok(HealAction::Replaced) => crate::log_info!(
+                            "heal",
+                            "replaced dead replicas of {died:?} in place"
+                        ),
+                        Ok(HealAction::Repartitioned(sizes)) => {
+                            crate::log_info!(
+                                "heal",
+                                "re-partitioned around {died:?}; \
+                                 new plan {sizes:?}"
+                            )
+                        }
+                        Err(e) => crate::log_warn!(
+                            "heal",
+                            "failed after losing {died:?}: {e:#}"
+                        ),
+                    }
+                }
+            })
+            .expect("spawn heal watchdog");
         AutoRebalanceHandle { stop, thread: Some(thread) }
     }
 

@@ -966,10 +966,41 @@ fn process_batch(
             }
         },
     };
-    let result = match service.submit_batch_meta(stacked, meta) {
+    // Self-healing ingress: with a failure-retry budget
+    // ([`InferenceService::failure_retries`]) a submission that fails
+    // with a transient — e.g. the stage chain lost a node and the heal
+    // swap landed between this batch's submission and its completion —
+    // is resubmitted against the healed service instead of failing its
+    // requests. A deadline shed is never retried (the deadline stays
+    // blown either way). The retry input is a zero-copy clone of the
+    // stacked batch (`Tensor` rows are Arc views), so a non-zero budget
+    // costs nothing on the happy path.
+    let retries = service.failure_retries();
+    let mut spare = (retries > 0).then(|| stacked.clone());
+    let submit = |input: Tensor| match service.submit_batch_meta(input, meta)
+    {
         Submission::Pending(wait) => wait(),
         Submission::Inline(t) => service.infer_batch_meta(&t, meta),
     };
+    let mut result = submit(stacked);
+    let mut attempt = 0;
+    while attempt < retries
+        && result.as_ref().err().is_some_and(|e| {
+            e.downcast_ref::<crate::pipeline::engine::DeadlineShed>()
+                .is_none()
+        })
+    {
+        attempt += 1;
+        // Brief linear backoff: the heal needs a moment to rebuild the
+        // stage chain; resubmitting instantly would race the swap.
+        std::thread::sleep(Duration::from_millis(10 * attempt as u64));
+        let input = if attempt < retries {
+            spare.clone().expect("retry batch clone")
+        } else {
+            spare.take().expect("retry batch clone")
+        };
+        result = submit(input);
+    }
     match result {
         Ok((output, compute_ms, comm_ms)) => {
             let row_len: usize = output.shape.iter().skip(1).product();
@@ -1244,6 +1275,82 @@ mod tests {
         let m = h.finish();
         assert_eq!(m.completed, 0);
         assert_eq!(m.failed, 4);
+    }
+
+    /// A service that fails its first `flaky` batch calls then recovers
+    /// — the shape of a node death healed a moment later.
+    struct FlakyThenHealed {
+        flaky: std::sync::atomic::AtomicUsize,
+        retries: usize,
+    }
+
+    impl InferenceService for FlakyThenHealed {
+        fn infer_batch(&self, batch: &Tensor) -> Result<(Tensor, f64, f64)> {
+            use std::sync::atomic::Ordering;
+            if self
+                .flaky
+                .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| {
+                    n.checked_sub(1)
+                })
+                .is_ok()
+            {
+                anyhow::bail!("stage chain lost a node");
+            }
+            let data = batch.data().iter().map(|v| v * 2.0).collect();
+            Ok((Tensor::new(batch.shape.clone(), data)?, 1.0, 0.1))
+        }
+        fn batch_size(&self) -> usize {
+            4
+        }
+        fn model_id(&self) -> u64 {
+            8
+        }
+        fn failure_retries(&self) -> usize {
+            self.retries
+        }
+    }
+
+    #[test]
+    fn failure_retries_ride_out_a_transient() {
+        let h = ServiceHandle::new(
+            Arc::new(FlakyThenHealed {
+                flaky: std::sync::atomic::AtomicUsize::new(1),
+                retries: 2,
+            }),
+            IngressConfig::default(),
+            None,
+        );
+        let rs: Vec<_> =
+            (0..4).map(|i| h.submit(req(i as f32)).unwrap()).collect();
+        for (i, r) in rs.into_iter().enumerate() {
+            let out = r.wait_output().expect("retried batch completes");
+            assert_eq!(out.data(), &vec![i as f32 * 2.0; 4][..]);
+        }
+        let m = h.finish();
+        assert_eq!(m.completed, 4);
+        assert_eq!(m.failed, 0);
+    }
+
+    #[test]
+    fn zero_retry_budget_stays_fail_fast() {
+        let h = ServiceHandle::new(
+            Arc::new(FlakyThenHealed {
+                flaky: std::sync::atomic::AtomicUsize::new(1),
+                retries: 0,
+            }),
+            IngressConfig::default(),
+            None,
+        );
+        // One request = one batch: the single flaky call must surface.
+        let r = h.submit(req(1.0)).unwrap();
+        match r.wait() {
+            Outcome::Failed(e) => {
+                assert!(format!("{e:#}").contains("lost a node"))
+            }
+            other => panic!("expected fail-fast failure, got {other:?}"),
+        }
+        let m = h.finish();
+        assert_eq!(m.failed, 1);
     }
 
     #[test]

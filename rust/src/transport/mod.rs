@@ -435,17 +435,23 @@ struct ReplicaConn {
     dead: Arc<AtomicBool>,
     node_id: usize,
     endpoint: String,
+    /// Where this replica's agent listens and what was shipped to it —
+    /// retained so [`WireStages::reconnect_dead`] can re-dial a
+    /// returned agent and replay the identical deployment.
+    addr: AgentAddr,
+    spec: DeploySpec,
     reader: Option<JoinHandle<()>>,
 }
 
 impl ReplicaConn {
     fn start(
         stream: WireStream,
-        spec: &DeploySpec,
+        spec: DeploySpec,
         stage: usize,
         replica: usize,
-        endpoint: String,
+        addr: AgentAddr,
     ) -> Result<ReplicaConn> {
+        let endpoint = addr.to_string();
         let reader_stream = stream.try_clone().with_context(|| {
             format!("cloning stage {stage} connection to {endpoint}")
         })?;
@@ -469,6 +475,8 @@ impl ReplicaConn {
             dead,
             node_id: spec.node_id() as usize,
             endpoint,
+            addr,
+            spec,
             reader: Some(reader),
         })
     }
@@ -661,10 +669,10 @@ impl WireStages {
                 let stream = dial_stage(addr, &spec, i, timeout)?;
                 stage_conns.push(ReplicaConn::start(
                     stream,
-                    &spec,
+                    spec,
                     i,
                     r,
-                    addr.to_string(),
+                    addr.clone(),
                 )?);
             }
             conns.push(stage_conns);
@@ -683,6 +691,53 @@ impl WireStages {
     /// Endpoints hosting each replica of `stage` (replica 0 first).
     pub fn replica_endpoints(&self, stage: usize) -> Vec<String> {
         self.conns[stage].iter().map(|c| c.endpoint.clone()).collect()
+    }
+
+    /// Warm re-admission over the wire: re-dial every dead replica
+    /// connection — an agent coming back is how a returned node
+    /// re-enters the serving chain — and re-ship its original
+    /// deployment, so a restarted agent hosts the identical stage.
+    /// Returns how many connections were revived; an agent still
+    /// unreachable leaves its connection dead (with a warning) so the
+    /// caller can try again later.
+    pub fn reconnect_dead(&mut self, timeout: Duration) -> usize {
+        let mut revived = 0;
+        for (k, group) in self.conns.iter_mut().enumerate() {
+            for (r, conn) in group.iter_mut().enumerate() {
+                if !conn.dead.load(Ordering::Acquire) {
+                    continue;
+                }
+                let fresh = dial_stage(&conn.addr, &conn.spec, k, timeout)
+                    .and_then(|stream| {
+                        ReplicaConn::start(
+                            stream,
+                            conn.spec.clone(),
+                            k,
+                            r,
+                            conn.addr.clone(),
+                        )
+                    });
+                match fresh {
+                    Ok(fresh) => {
+                        let mut old = std::mem::replace(conn, fresh);
+                        // The dead connection's reader already returned
+                        // (it flips `dead` on its way out); joining just
+                        // reaps the thread.
+                        old.writer_lock().shutdown();
+                        if let Some(reader) = old.reader.take() {
+                            let _ = reader.join();
+                        }
+                        revived += 1;
+                    }
+                    Err(e) => crate::log_warn!(
+                        "wire",
+                        "stage {k} replica {r}: reconnect to {} failed: {e:#}",
+                        conn.endpoint
+                    ),
+                }
+            }
+        }
+        revived
     }
 }
 

@@ -1,0 +1,377 @@
+//! Self-healing serving under node churn (ISSUE 8).
+//!
+//! Engine level: a replica of a replicated stage dies mid-stream with
+//! micro-batches in flight. With replay on, the driver re-runs the
+//! failed micro-batches on surviving replicas and the batch completes
+//! bit-identically to the serial schedule; with replay off, the same
+//! kill schedule reproduces the pre-heal fail-fast behaviour (pinned
+//! here so healing stays strictly opt-in).
+//!
+//! Server level (artifact-gated): the heal watchdog consumes the
+//! monitor's liveness feed and walks the heal ladder — replica
+//! re-placement when every stage keeps a survivor, full re-partition
+//! when one does not — while the serving ingress retries batches that
+//! raced the swap. Every response handle must resolve either way.
+
+mod common;
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use amp4ec::config::AmpConfig;
+use amp4ec::pipeline::engine::{
+    run_serial, PersistentEngine, PersistentEngineConfig, SimStages,
+};
+use amp4ec::server::EdgeServer;
+use amp4ec::workload::Arrival;
+use common::harness as h;
+use common::harness::KillSwitchStages;
+
+/// Shares for the engine-level chain: stage 1 is the bottleneck and the
+/// one that gets replicated.
+const SHARES: &[f64] = &[1.0, 0.25, 1.0];
+
+fn replay_engine(
+    stages: KillSwitchStages<SimStages>,
+    depth: usize,
+    replay: bool,
+) -> PersistentEngine {
+    PersistentEngine::new(
+        Arc::new(stages),
+        PersistentEngineConfig {
+            micro_batch_rows: 1,
+            initial_depth: depth,
+            replay,
+            ..Default::default()
+        },
+    )
+    .unwrap()
+}
+
+fn golden(rows: usize, seed: u64) -> (amp4ec::runtime::Tensor, amp4ec::runtime::Tensor) {
+    let t = h::seeded_input(rows, 4, seed);
+    let g = run_serial(&SimStages::heterogeneous(SHARES, 1.0), &t, 1)
+        .unwrap()
+        .output;
+    (t, g)
+}
+
+#[test]
+fn replay_recovers_killed_replica_mid_stream() {
+    // Replica 1 of stage 1 serves two micro-batches, then dies with
+    // work in flight. The driver must replay the failed micro-batches
+    // on the surviving replica: the batch completes, bit-identical to
+    // the serial schedule, with no re-partition and no failed handle.
+    let stages = KillSwitchStages::new(SimStages::with_replicas(
+        SHARES,
+        1.0,
+        &[1, 2, 1],
+    ));
+    stages.kill_after(1, 1, 2);
+    let engine = replay_engine(stages, 4, true);
+    let (t, want) = golden(8, 0xC0FFEE);
+
+    let run = engine.submit(&t).unwrap().wait().expect("replayed batch");
+    assert_eq!(run.output, want, "replayed output diverged from serial");
+    let replays = engine.replay_stats();
+    assert!(
+        replays.succeeded >= 1,
+        "the kill schedule guarantees at least one replay: {replays:?}"
+    );
+    assert!(replays.attempted >= replays.succeeded);
+
+    // The survivor keeps serving whole batches after the death.
+    let again = engine.submit(&t).unwrap().wait().unwrap();
+    assert_eq!(again.output, want, "post-death output diverged");
+}
+
+#[test]
+fn replay_off_reproduces_fail_fast() {
+    // The same kill schedule with healing off must fail the doomed
+    // batch — today's behaviour, pinned so replay stays opt-in.
+    let stages = KillSwitchStages::new(SimStages::with_replicas(
+        SHARES,
+        1.0,
+        &[1, 2, 1],
+    ));
+    stages.kill_after(1, 1, 2);
+    let engine = replay_engine(stages, 4, false);
+    let (t, want) = golden(8, 0xC0FFEE);
+
+    let err = match engine.submit(&t).unwrap().wait() {
+        Ok(_) => panic!("fail-fast batch must surface the node death"),
+        Err(e) => e,
+    };
+    assert!(
+        format!("{err:#}").contains("died mid-stream"),
+        "wrong failure surfaced: {err:#}"
+    );
+    assert_eq!(engine.replay_stats(), Default::default());
+
+    // Fail-fast still steers *new* work around the dead replica.
+    let again = engine.submit(&t).unwrap().wait().unwrap();
+    assert_eq!(again.output, want);
+}
+
+#[test]
+fn revived_replica_rejoins_routing() {
+    // Warm re-admission at the engine layer: a killed replica that
+    // comes back re-enters the alive set and takes micro-batches again.
+    let stages = Arc::new(KillSwitchStages::new(SimStages::with_replicas(
+        SHARES,
+        1.0,
+        &[1, 2, 1],
+    )));
+    let engine = PersistentEngine::new(
+        Arc::clone(&stages),
+        PersistentEngineConfig {
+            micro_batch_rows: 1,
+            initial_depth: 4,
+            replay: true,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let (t, want) = golden(8, 0xBEEF);
+
+    stages.kill(1, 1);
+    let run = engine.submit(&t).unwrap().wait().unwrap();
+    assert_eq!(run.output, want);
+    let doomed_before = engine
+        .replica_counters()
+        .iter()
+        .find(|c| c.stage == 1 && c.replica == 1)
+        .map(|c| c.micro_batches)
+        .unwrap_or(0);
+
+    stages.revive(1, 1);
+    let run = engine.submit(&t).unwrap().wait().unwrap();
+    assert_eq!(run.output, want, "post-revival output diverged");
+    let doomed_after = engine
+        .replica_counters()
+        .iter()
+        .find(|c| c.stage == 1 && c.replica == 1)
+        .map(|c| c.micro_batches)
+        .unwrap_or(0);
+    assert!(
+        doomed_after > doomed_before,
+        "revived lane took no work ({doomed_before} -> {doomed_after})"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Server-level heal ladder (artifact-gated).
+// ---------------------------------------------------------------------
+
+fn heal_config() -> AmpConfig {
+    let mut cfg = AmpConfig::paper_cluster(&common::artifacts_dir());
+    cfg.monitor_interval_ms = 10;
+    cfg.miss_threshold = 2;
+    cfg.heal = true;
+    cfg.model_cache = true; // heals re-ship from the node-local cache
+    cfg
+}
+
+/// Poll `cond` until it holds or the deadline passes.
+fn wait_for(what: &str, mut cond: impl FnMut() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+#[test]
+fn heal_replaces_dead_replica_without_repartition() {
+    require_artifacts!();
+    // Four nodes, three partitions: the spare node hosts the hot
+    // stage's extra replica. Killing it must heal by re-placement —
+    // the partition plan (3 stages) survives untouched.
+    let mut cfg = heal_config();
+    cfg.nodes
+        .push(amp4ec::config::NodeConfig::new("edge-spare", 1.0, 1024.0));
+    cfg.num_partitions = Some(3); // 4th node stays spare -> hosts the replica
+    cfg.replicas = amp4ec::config::ReplicaPolicy::parse("auto").unwrap();
+    let server = Arc::new(EdgeServer::start(cfg).unwrap());
+    let _watchdog = server.start_heal_watchdog(Duration::from_millis(10));
+    assert_eq!(server.plan().partitions.len(), 3);
+
+    // The replica-only victim: online but not hosting any primary.
+    let primaries = server.service().deployment_nodes();
+    let victim = server
+        .cluster
+        .online_nodes()
+        .iter()
+        .map(|n| n.id())
+        .find(|id| !primaries.contains(id))
+        .expect("one node hosts only the extra replica");
+    server.cluster.remove_node(victim);
+
+    wait_for("replica re-placement heal", || {
+        server.churn_stats().heals_replaced >= 1
+    });
+    assert_eq!(
+        server.plan().partitions.len(),
+        3,
+        "replica heal must not re-partition"
+    );
+    let report = server.serve_workload(8, 8, Arrival::Closed, 11).unwrap();
+    assert_eq!(report.metrics.completed, 8);
+    assert_eq!(report.metrics.failed, 0);
+    assert!(report.churn.nodes_died >= 1);
+    assert!(report.churn.heals_replaced >= 1);
+    assert_eq!(report.churn.heals_repartitioned, 0);
+}
+
+#[test]
+fn heal_repartitions_when_stage_loses_every_replica() {
+    require_artifacts!();
+    // Three nodes, three unreplicated stages: losing any node leaves
+    // its stage with no surviving replica, so the ladder must fall back
+    // to a full re-partition over the two survivors.
+    let server = Arc::new(EdgeServer::start(heal_config()).unwrap());
+    let _watchdog = server.start_heal_watchdog(Duration::from_millis(10));
+    assert_eq!(server.plan().partitions.len(), 3);
+
+    let victim = server.cluster.online_nodes().last().unwrap().id();
+    server.cluster.remove_node(victim);
+
+    wait_for("re-partition heal", || {
+        server.churn_stats().heals_repartitioned >= 1
+    });
+    wait_for("2-node plan", || server.plan().partitions.len() == 2);
+    let report = server.serve_workload(8, 8, Arrival::Closed, 12).unwrap();
+    assert_eq!(report.metrics.completed, 8);
+    assert_eq!(report.metrics.failed, 0);
+    assert!(report.churn.nodes_died >= 1);
+    assert!(report.churn.heals_repartitioned >= 1);
+}
+
+#[test]
+fn returned_node_is_readmitted_and_counted() {
+    require_artifacts!();
+    let server = Arc::new(EdgeServer::start(heal_config()).unwrap());
+    let _watchdog = server.start_heal_watchdog(Duration::from_millis(10));
+
+    let victim = server.cluster.online_nodes().last().unwrap().id();
+    server.cluster.remove_node(victim);
+    wait_for("death observed", || server.churn_stats().nodes_died >= 1);
+
+    // Warm return: the node resurfaces; the monitor notices and the
+    // watchdog counts it back into the spare pool.
+    server.cluster.readmit_node(victim);
+    wait_for("return observed", || {
+        server.churn_stats().nodes_returned >= 1
+    });
+    // The returned node is spare capacity again: a rebalance plans over
+    // all three nodes.
+    let sizes = server.rebalance().unwrap();
+    assert_eq!(sizes.len(), 3, "returned node must be plannable: {sizes:?}");
+    let report = server.serve_workload(4, 4, Arrival::Closed, 13).unwrap();
+    assert_eq!(report.metrics.completed, 4);
+}
+
+#[test]
+fn kill_during_rebalance_converges() {
+    require_artifacts!();
+    // Two deaths in quick succession: the second lands while the heal
+    // of the first is (likely) still deploying. The ladder must keep
+    // converging — the watchdog folds the monitor's full dead set into
+    // every retry — and serving must resume on the final topology.
+    let server = Arc::new(EdgeServer::start(heal_config()).unwrap());
+    let _watchdog = server.start_heal_watchdog(Duration::from_millis(10));
+
+    let victims: Vec<usize> = server
+        .cluster
+        .online_nodes()
+        .iter()
+        .skip(1)
+        .map(|n| n.id())
+        .collect();
+    server.cluster.remove_node(victims[0]);
+    server.cluster.remove_node(victims[1]);
+
+    wait_for("1-node plan", || server.plan().partitions.len() == 1);
+    let report = server.serve_workload(4, 4, Arrival::Closed, 14).unwrap();
+    assert_eq!(report.metrics.completed, 4);
+    assert_eq!(report.metrics.failed, 0);
+    assert!(report.churn.nodes_died >= 2);
+}
+
+#[test]
+fn auto_rebalance_sees_equal_count_membership_swap() {
+    require_artifacts!();
+    // Regression (ISSUE 8 satellite): the watchdog used to compare
+    // online_count() snapshots, so a leave+join that nets out to the
+    // same count — one node swapped for another — was invisible and the
+    // deployment kept targeting the departed node forever. The
+    // membership epoch bumps on both transitions, so the swap must now
+    // trigger a rebalance onto the joined node.
+    let mut cfg = heal_config();
+    cfg.heal = false; // isolate the auto-rebalance path
+    let server = Arc::new(EdgeServer::start(cfg).unwrap());
+    let _watchdog =
+        server.start_auto_rebalance(Duration::from_millis(20));
+
+    let victim = server.cluster.online_nodes().last().unwrap().id();
+    // Back-to-back swap, far faster than one watchdog interval: the
+    // online count is 3 before and after.
+    let joined = server
+        .cluster
+        .add_node(amp4ec::cluster::NodeSpec::new("edge-swap", 1.0, 1024.0));
+    server.cluster.remove_node(victim);
+    assert_eq!(server.cluster.online_count(), 3);
+
+    wait_for("rebalance onto the joined node", || {
+        server.service().deployment_nodes().contains(&joined)
+    });
+    let nodes = server.service().deployment_nodes();
+    assert!(
+        !nodes.contains(&victim),
+        "departed node still hosts a stage: {nodes:?}"
+    );
+    let report = server.serve_workload(4, 4, Arrival::Closed, 15).unwrap();
+    assert_eq!(report.metrics.completed, 4);
+}
+
+#[test]
+fn serving_rides_through_mid_run_node_loss() {
+    require_artifacts!();
+    // The end-to-end acceptance shape: a node dies *while* a workload
+    // streams. Every response handle must resolve (no hung requests);
+    // with the heal ladder plus ingress retries the run finishes, and
+    // anything that could not be saved is an accounted failure or shed,
+    // never a hang.
+    let server = Arc::new(EdgeServer::start(heal_config()).unwrap());
+    let _watchdog = server.start_heal_watchdog(Duration::from_millis(10));
+    let n = 24;
+
+    let victim = server.cluster.online_nodes().last().unwrap().id();
+    let killer = {
+        let server = Arc::clone(&server);
+        std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            server.cluster.remove_node(victim);
+        })
+    };
+    let report = server.serve_workload(n, n, Arrival::Closed, 16).unwrap();
+    killer.join().unwrap();
+
+    // Zero hung handles: everything is accounted as completed, failed,
+    // or shed (serve_workload only returns once every handle resolved —
+    // the counts must reconcile).
+    let m = &report.metrics;
+    assert_eq!(
+        m.completed + m.failed + m.total_shed(),
+        n as u64,
+        "requests unaccounted for"
+    );
+    // The heal landed: the run saw the death and kept serving.
+    wait_for("heal after mid-run death", || {
+        let s = server.churn_stats();
+        s.heals_replaced + s.heals_repartitioned >= 1
+    });
+    let after = server.serve_workload(8, 8, Arrival::Closed, 17).unwrap();
+    assert_eq!(after.metrics.completed, 8);
+    assert_eq!(after.metrics.failed, 0);
+}

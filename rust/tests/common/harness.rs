@@ -130,6 +130,22 @@ impl<S: StageExec> FaultStages<S> {
     }
 }
 
+impl<S: StageExec> FaultStages<S> {
+    fn trip_sentinels(&self, stage: usize, input: &Tensor) -> anyhow::Result<()> {
+        if let Some((s, v)) = self.fail_at {
+            if stage == s && input.data().first() == Some(&v) {
+                anyhow::bail!("injected failure at stage {stage}");
+            }
+        }
+        if let Some((s, v)) = self.panic_at {
+            if stage == s && input.data().first() == Some(&v) {
+                panic!("injected panic at stage {stage}");
+            }
+        }
+        Ok(())
+    }
+}
+
 impl<S: StageExec> StageExec for FaultStages<S> {
     fn num_stages(&self) -> usize {
         self.inner.num_stages()
@@ -151,18 +167,164 @@ impl<S: StageExec> StageExec for FaultStages<S> {
         self.backlog[stage].load(Ordering::SeqCst)
     }
 
+    // Replica surface: delegate rather than inherit the trait defaults.
+    // The defaults collapse everything onto the primary (replicas()==1,
+    // execute_on -> execute), which silently un-replicates a replicated
+    // inner chain — faults would then never reach replica > 0.
+    fn replicas(&self, stage: usize) -> usize {
+        self.inner.replicas(stage)
+    }
+
+    fn replica_node_id(&self, stage: usize, replica: usize) -> usize {
+        self.inner.replica_node_id(stage, replica)
+    }
+
+    fn replica_alive(&self, stage: usize, replica: usize) -> bool {
+        self.inner.replica_alive(stage, replica)
+    }
+
+    fn comm_in_on(&self, stage: usize, replica: usize, bytes: u64) -> f64 {
+        self.inner.comm_in_on(stage, replica, bytes)
+    }
+
     fn execute(&self, stage: usize, input: Tensor) -> anyhow::Result<(Tensor, f64)> {
-        if let Some((s, v)) = self.fail_at {
-            if stage == s && input.data().first() == Some(&v) {
-                anyhow::bail!("injected failure at stage {stage}");
-            }
-        }
-        if let Some((s, v)) = self.panic_at {
-            if stage == s && input.data().first() == Some(&v) {
-                panic!("injected panic at stage {stage}");
-            }
-        }
+        self.trip_sentinels(stage, &input)?;
         self.inner.execute(stage, input)
+    }
+
+    fn execute_on(
+        &self,
+        stage: usize,
+        replica: usize,
+        input: Tensor,
+    ) -> anyhow::Result<(Tensor, f64)> {
+        self.trip_sentinels(stage, &input)?;
+        self.inner.execute_on(stage, replica, input)
+    }
+}
+
+/// Node-churn wrapper around any [`StageExec`]: a per-(stage, replica)
+/// kill switch. A killed replica reports not-alive and errors every
+/// execute routed to it — the sim twin of a node dropping out
+/// mid-stream — until [`KillSwitchStages::revive`] flips it back (warm
+/// re-admission). `kill_after` arms a countdown instead: the replica
+/// serves N calls and dies *on* call N+1, so a micro-batch is exactly
+/// mid-flight when the lights go out.
+pub struct KillSwitchStages<S: StageExec> {
+    inner: S,
+    dead: Vec<Vec<std::sync::atomic::AtomicBool>>,
+    /// Calls remaining before auto-kill (`usize::MAX` = never).
+    fuse: Vec<Vec<AtomicUsize>>,
+}
+
+impl<S: StageExec> KillSwitchStages<S> {
+    pub fn new(inner: S) -> KillSwitchStages<S> {
+        let shape: Vec<usize> =
+            (0..inner.num_stages()).map(|k| inner.replicas(k)).collect();
+        KillSwitchStages {
+            dead: shape
+                .iter()
+                .map(|&r| {
+                    (0..r)
+                        .map(|_| std::sync::atomic::AtomicBool::new(false))
+                        .collect()
+                })
+                .collect(),
+            fuse: shape
+                .iter()
+                .map(|&r| (0..r).map(|_| AtomicUsize::new(usize::MAX)).collect())
+                .collect(),
+            inner,
+        }
+    }
+
+    /// Kill `replica` of `stage` now: in-flight and future executes on
+    /// it fail, and the alive set stops routing to it.
+    pub fn kill(&self, stage: usize, replica: usize) {
+        self.dead[stage][replica].store(true, Ordering::SeqCst);
+    }
+
+    /// Bring a killed replica back (warm re-admission).
+    pub fn revive(&self, stage: usize, replica: usize) {
+        self.dead[stage][replica].store(false, Ordering::SeqCst);
+        self.fuse[stage][replica].store(usize::MAX, Ordering::SeqCst);
+    }
+
+    /// Let `replica` of `stage` serve `calls` executes, then die on the
+    /// next one (which fails — that micro-batch was on the node).
+    pub fn kill_after(&self, stage: usize, replica: usize, calls: usize) {
+        self.fuse[stage][replica].store(calls, Ordering::SeqCst);
+    }
+
+    fn gate(&self, stage: usize, replica: usize) -> anyhow::Result<()> {
+        if self.dead[stage][replica].load(Ordering::SeqCst) {
+            anyhow::bail!("stage {stage} replica {replica} node is gone");
+        }
+        let armed = self.fuse[stage][replica]
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| {
+                (n != usize::MAX).then(|| n.saturating_sub(1))
+            });
+        if armed == Ok(0) {
+            self.dead[stage][replica].store(true, Ordering::SeqCst);
+            anyhow::bail!(
+                "stage {stage} replica {replica} node died mid-stream"
+            );
+        }
+        Ok(())
+    }
+}
+
+impl<S: StageExec> StageExec for KillSwitchStages<S> {
+    fn num_stages(&self) -> usize {
+        self.inner.num_stages()
+    }
+
+    fn node_id(&self, stage: usize) -> usize {
+        self.inner.node_id(stage)
+    }
+
+    fn comm_in(&self, stage: usize, bytes: u64) -> f64 {
+        self.inner.comm_in(stage, bytes)
+    }
+
+    fn comm_out(&self, bytes: u64) -> f64 {
+        self.inner.comm_out(bytes)
+    }
+
+    fn backlog(&self, stage: usize) -> usize {
+        self.inner.backlog(stage)
+    }
+
+    fn replicas(&self, stage: usize) -> usize {
+        self.inner.replicas(stage)
+    }
+
+    fn replica_node_id(&self, stage: usize, replica: usize) -> usize {
+        self.inner.replica_node_id(stage, replica)
+    }
+
+    fn replica_alive(&self, stage: usize, replica: usize) -> bool {
+        !self.dead[stage][replica].load(Ordering::SeqCst)
+            && self.inner.replica_alive(stage, replica)
+    }
+
+    fn comm_in_on(&self, stage: usize, replica: usize, bytes: u64) -> f64 {
+        self.inner.comm_in_on(stage, replica, bytes)
+    }
+
+    fn execute(&self, stage: usize, input: Tensor) -> anyhow::Result<(Tensor, f64)> {
+        self.gate(stage, 0)?;
+        self.inner.execute(stage, input)
+    }
+
+    fn execute_on(
+        &self,
+        stage: usize,
+        replica: usize,
+        input: Tensor,
+    ) -> anyhow::Result<(Tensor, f64)> {
+        self.gate(stage, replica)?;
+        self.inner.execute_on(stage, replica, input)
     }
 }
 
