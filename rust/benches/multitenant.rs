@@ -1,0 +1,493 @@
+//! Multi-tenant serving gate (ISSUE 9): co-deployment packing, WFQ
+//! isolation under a bursty flood, and the single-tenant bit-identity
+//! pin. `cargo bench --bench multitenant`.
+//!
+//! Four sections, each with hard asserts:
+//!
+//! - **Isolation**: one model's ingress with tenant weights 4:1. The
+//!   victim tenant sends paced triples while the flooding tenant drives
+//!   a `Bursty` (on-off) arrival through the same ingress. Gates: the
+//!   victim's p99 stays within 2x its run-alone p99, nothing is shed,
+//!   and every request from both tenants completes.
+//! - **Weight cap**: a fully backlogged two-tenant queue is drained
+//!   through a recording service; the flooder's share of the contested
+//!   window must sit near its 1/5 weight share.
+//! - **Packing**: two models (separate deployers, one synthetic
+//!   manifest each) place onto one shared 3-node cluster. Gates: no
+//!   overcommitted placement, every node's paging penalty stays 1.0
+//!   with both models resident, and releasing both returns every node
+//!   to its baseline working set. The two models then *serve*
+//!   concurrently through independent ingresses.
+//! - **Bit-identity**: the same engine chain served with no tenant
+//!   table and with a trivial one-tenant table produces outputs
+//!   bit-identical to the serial schedule — the PR-8 path is unchanged.
+//!
+//! Emits `BENCH_multitenant.json`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use amp4ec::cluster::{Cluster, NodeSpec, SimParams};
+use amp4ec::deployer::ModelDeployer;
+use amp4ec::manifest::Manifest;
+use amp4ec::metrics::markdown_table;
+use amp4ec::pipeline::engine::{
+    run_serial, PersistentEngine, PersistentEngineConfig, SimStages,
+};
+use amp4ec::router::InferenceService;
+use amp4ec::runtime::Tensor;
+use amp4ec::scheduler::{Scheduler, ScoringWeights};
+use amp4ec::serving::{EngineService, IngressConfig, ServiceHandle};
+use amp4ec::util::bench::BenchSuite;
+use amp4ec::util::json::Json;
+use amp4ec::workload::{feed_with, Arrival, InputPool, RequestSpec};
+
+/// Identity service with a fixed service time; records the tenant tag
+/// (the input's fill value) per dispatch, in dispatch order.
+struct PacedService {
+    service: Duration,
+    seen: Arc<Mutex<Vec<usize>>>,
+}
+
+impl PacedService {
+    fn new(service_ms: u64) -> PacedService {
+        PacedService {
+            service: Duration::from_millis(service_ms),
+            seen: Arc::new(Mutex::new(Vec::new())),
+        }
+    }
+}
+
+impl InferenceService for PacedService {
+    fn infer_batch(&self, batch: &Tensor) -> anyhow::Result<(Tensor, f64, f64)> {
+        thread::sleep(self.service);
+        self.seen.lock().unwrap().push(batch.data()[0] as usize);
+        Ok((batch.clone(), 0.0, 0.0))
+    }
+    fn batch_size(&self) -> usize {
+        1
+    }
+    fn model_id(&self) -> u64 {
+        0xB16B
+    }
+}
+
+/// A `[1, 4]` row whose fill value tags the submitting tenant.
+fn tagged(tenant: usize) -> Tensor {
+    Tensor::new(vec![1, 4], vec![tenant as f32; 4]).unwrap()
+}
+
+fn p99(lat_ms: &[f64]) -> f64 {
+    let mut sorted = lat_ms.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((sorted.len() as f64 * 0.99).ceil() as usize)
+        .saturating_sub(1)
+        .min(sorted.len() - 1);
+    sorted[idx]
+}
+
+/// The victim tenant's closed-loop client: every `tick` it submits a
+/// triple back-to-back, waits all three out, and records each request's
+/// latency (from the triple's submission). Returns latencies in ms.
+fn run_victim(
+    handle: &ServiceHandle,
+    ticks: usize,
+    tick: Duration,
+) -> Vec<f64> {
+    let start = Instant::now();
+    let mut lat_ms = Vec::with_capacity(ticks * 3);
+    for i in 0..ticks {
+        let target = tick * i as u32;
+        let elapsed = start.elapsed();
+        if elapsed < target {
+            thread::sleep(target - elapsed);
+        }
+        let t0 = Instant::now();
+        let pending: Vec<_> = (0..3)
+            .map(|_| {
+                handle.request(tagged(0)).submit().expect("victim submit")
+            })
+            .collect();
+        for p in pending {
+            p.wait_output().expect("victim request failed");
+            lat_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+    }
+    lat_ms
+}
+
+/// A fresh paced ingress with the bench's 4:1 tenant weight table.
+fn isolation_handle(
+    service_ms: u64,
+) -> (ServiceHandle, Arc<Mutex<Vec<usize>>>) {
+    let svc = PacedService::new(service_ms);
+    let seen = Arc::clone(&svc.seen);
+    let handle = ServiceHandle::new(
+        Arc::new(svc),
+        IngressConfig {
+            workers: 1,
+            max_wait: Duration::ZERO,
+            capacity: 1024,
+            tenant_weights: vec![4.0, 1.0],
+            ..IngressConfig::default()
+        },
+        None,
+    );
+    (handle, seen)
+}
+
+/// Synthetic 3-block manifest: ~15 MB of weights per block, tiny
+/// activations. `place()` never touches artifacts, so the file names
+/// are never opened.
+fn packing_manifest() -> Manifest {
+    let text = r#"{
+        "model": "packbench", "input_hw": 8, "input_channels": 4,
+        "num_classes": 10, "batch_sizes": [1], "total_params": 300,
+        "blocks": [
+            {"index": 0, "name": "a", "in_shape": [8,8,4],
+             "out_shape": [8,8,8], "param_count": 100,
+             "weights_file": "b0.bin", "weights_bytes": 15728640,
+             "artifacts": {"1": "b0.hlo.txt"},
+             "layers": [
+                {"name":"a.conv","type":"Conv2d","params":288,
+                 "k_h":3,"k_w":3,"c_in":4,"c_out":8,"groups":1,"stride":1}
+             ]},
+            {"index": 1, "name": "b", "in_shape": [8,8,8],
+             "out_shape": [8,8,8], "param_count": 100,
+             "weights_file": "b1.bin", "weights_bytes": 15728640,
+             "artifacts": {"1": "b1.hlo.txt"},
+             "layers": [
+                {"name":"b.conv","type":"Conv2d","params":576,
+                 "k_h":3,"k_w":3,"c_in":8,"c_out":8,"groups":1,"stride":1}
+             ]},
+            {"index": 2, "name": "classifier", "in_shape": [8,8,8],
+             "out_shape": [1,1,10], "param_count": 100,
+             "weights_file": "b2.bin", "weights_bytes": 15728640,
+             "artifacts": {"1": "b2.hlo.txt"},
+             "layers": [
+                {"name":"c.fc","type":"Linear","params":90,
+                 "n_in":8,"n_out":10}
+             ]}
+        ]
+    }"#;
+    Manifest::parse(text, Path::new("/nonexistent")).expect("bench manifest")
+}
+
+fn input_off(rows: usize, cols: usize, off: f32) -> Tensor {
+    let data = (0..rows * cols)
+        .map(|i| (i as f32) * 0.125 - 4.0 + off)
+        .collect();
+    Tensor::new(vec![rows, cols], data).unwrap()
+}
+
+fn main() {
+    let mut suite = BenchSuite::new("multitenant");
+
+    // --- Section 1: victim isolation under a bursty flood. ------------
+    let service_ms = 5u64;
+    let ticks = 30usize;
+    let tick = Duration::from_millis(20);
+    let flood_requests = 300usize;
+
+    let (alone_handle, _) = isolation_handle(service_ms);
+    let alone_lat = run_victim(&alone_handle, ticks, tick);
+    let alone_metrics = alone_handle.finish();
+    assert_eq!(alone_metrics.completed, (ticks * 3) as u64);
+    let p99_alone = p99(&alone_lat);
+
+    let (flood_handle, _) = isolation_handle(service_ms);
+    let (flood_lat, flood_sent) = thread::scope(|s| {
+        let flooder = s.spawn(|| {
+            feed_with(
+                &flood_handle,
+                &InputPool::new(&[1, 4], 1, 77),
+                flood_requests,
+                Arrival::Bursty {
+                    base_rps: 50.0,
+                    burst_rps: 1200.0,
+                    on_ms: 150.0,
+                    off_ms: 100.0,
+                },
+                11,
+                |_| RequestSpec::default().with_tenant(1),
+            )
+        });
+        let lat = run_victim(&flood_handle, ticks, tick);
+        (lat, flooder.join().expect("flooder thread"))
+    });
+    let flood_metrics = flood_handle.finish();
+    let p99_flood = p99(&flood_lat);
+    let p99_ratio = p99_flood / p99_alone.max(1e-9);
+
+    assert_eq!(flood_sent, flood_requests, "flooder must submit everything");
+    assert_eq!(
+        flood_metrics.tenant_completed(0),
+        (ticks * 3) as u64,
+        "victim requests lost under flood"
+    );
+    assert_eq!(
+        flood_metrics.tenant_completed(1),
+        flood_requests as u64,
+        "flooder requests lost"
+    );
+    assert_eq!(
+        flood_metrics.tenant_shed(0) + flood_metrics.tenant_shed(1),
+        0,
+        "no deadlines in play: nothing sheds"
+    );
+    assert!(
+        p99_ratio <= 2.0,
+        "victim p99 degraded {p99_ratio:.2}x under flood \
+         ({p99_flood:.1} ms vs {p99_alone:.1} ms alone; > 2x bound)"
+    );
+
+    // --- Section 2: flooder capped near its weight share. -------------
+    let (cap_handle, cap_seen) = isolation_handle(2);
+    let mut pending = Vec::new();
+    for _ in 0..40 {
+        for t in 0..2usize {
+            pending.push(
+                cap_handle
+                    .request(tagged(t))
+                    .tenant(t)
+                    .submit()
+                    .expect("cap submit"),
+            );
+        }
+    }
+    for p in pending {
+        p.wait_output().expect("cap request failed");
+    }
+    let cap_metrics = cap_handle.finish();
+    assert_eq!(cap_metrics.completed, 80);
+    let order = cap_seen.lock().unwrap().clone();
+    // Both tenants stay backlogged through the first 40 dispatches (the
+    // victim's 40 drain at ~50); the flooder's share there must track
+    // its 1/5 weight share, +-0.1 absorbing startup skew.
+    let flooder_share =
+        order[..40].iter().filter(|&&t| t == 1).count() as f64 / 40.0;
+    assert!(
+        (flooder_share - 0.2).abs() <= 0.1,
+        "flooder took {flooder_share} of the contested window, want ~0.2"
+    );
+
+    // --- Section 3: two models pack onto one shared cluster. ----------
+    let cluster = Cluster::new(SimParams::default());
+    for i in 0..3 {
+        cluster.add_node(NodeSpec::new(&format!("edge{i}"), 1.0, 512.0));
+    }
+    let scheduler = Scheduler::new(ScoringWeights::default());
+    let nodes = cluster.online_nodes();
+    let baseline_ws: Vec<f64> =
+        nodes.iter().map(|n| n.mem_working_set_mb()).collect();
+
+    let deployer_a = ModelDeployer::new(Arc::new(packing_manifest()));
+    let deployer_b = ModelDeployer::new(Arc::new(packing_manifest()));
+    let plan_a = amp4ec::partitioner::plan(deployer_a.manifest(), 3)
+        .expect("plan model A");
+    let plan_b = amp4ec::partitioner::plan(deployer_b.manifest(), 3)
+        .expect("plan model B");
+    let ones_a = vec![1usize; plan_a.partitions.len()];
+    let ones_b = vec![1usize; plan_b.partitions.len()];
+    let place_a = deployer_a
+        .place(&plan_a, &cluster, &scheduler, 1, &ones_a)
+        .expect("place model A");
+    let place_b = deployer_b
+        .place(&plan_b, &cluster, &scheduler, 1, &ones_b)
+        .expect("place model B");
+
+    let overcommitted = place_a
+        .iter()
+        .chain(place_b.iter())
+        .filter(|p| p.overcommitted)
+        .count();
+    assert_eq!(overcommitted, 0, "co-deployment must not overcommit");
+    let worst_penalty = nodes
+        .iter()
+        .map(|n| n.mem_penalty())
+        .fold(1.0_f64, f64::max);
+    assert_eq!(
+        worst_penalty, 1.0,
+        "paging penalty with both models resident"
+    );
+    let packed_mb: f64 = nodes
+        .iter()
+        .zip(&baseline_ws)
+        .map(|(n, base)| n.mem_working_set_mb() - base)
+        .sum();
+    assert!(
+        packed_mb > 80.0,
+        "both models' reservations must be live ({packed_mb:.0} MB)"
+    );
+    deployer_a.release_placement(&place_a);
+    deployer_b.release_placement(&place_b);
+    for (n, base) in nodes.iter().zip(&baseline_ws) {
+        assert!(
+            (n.mem_working_set_mb() - base).abs() < 1e-6,
+            "release must restore the baseline working set"
+        );
+    }
+
+    // Both "models" also *serve* concurrently: two independent paced
+    // services drain interleaved closed-loop feeds at the same time.
+    let (serve_a, _) = isolation_handle(2);
+    let (serve_b, _) = isolation_handle(2);
+    let t0 = Instant::now();
+    let (sent_a, sent_b) = thread::scope(|s| {
+        let feeder_b = s.spawn(|| {
+            feed_with(
+                &serve_b,
+                &InputPool::new(&[1, 4], 2, 5),
+                40,
+                Arrival::Closed,
+                6,
+                |_| RequestSpec::default(),
+            )
+        });
+        let sent_a = feed_with(
+            &serve_a,
+            &InputPool::new(&[1, 4], 2, 4),
+            40,
+            Arrival::Closed,
+            5,
+            |_| RequestSpec::default(),
+        );
+        (sent_a, feeder_b.join().expect("model B feeder"))
+    });
+    let serve_elapsed_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let ma = serve_a.finish();
+    let mb = serve_b.finish();
+    assert_eq!((sent_a, sent_b), (40, 40));
+    assert_eq!(ma.completed, 40, "model A dropped requests");
+    assert_eq!(mb.completed, 40, "model B dropped requests");
+
+    // --- Section 4: single-tenant runs are bit-identical to PR-8. -----
+    let shares = [1.0f64, 0.6, 0.4];
+    let serial = SimStages::heterogeneous(&shares, 1.0);
+    let inputs: Vec<Tensor> =
+        (0..8).map(|i| input_off(1, 8, i as f32)).collect();
+    let goldens: Vec<Tensor> = inputs
+        .iter()
+        .map(|b| run_serial(&serial, b, 1).expect("serial").output)
+        .collect();
+    let mut ident_runs = Vec::new();
+    for weights in [Vec::new(), vec![1.0]] {
+        let engine = PersistentEngine::new(
+            Arc::new(SimStages::heterogeneous(&shares, 1.0)),
+            PersistentEngineConfig {
+                micro_batch_rows: 1,
+                initial_depth: 4,
+                adaptive: None,
+                ..Default::default()
+            },
+        )
+        .expect("identity engine");
+        let handle = ServiceHandle::new(
+            Arc::new(EngineService::new(Arc::new(engine), 1, 4)),
+            IngressConfig {
+                workers: 1,
+                tenant_weights: weights,
+                ..IngressConfig::default()
+            },
+            None,
+        );
+        let outs: Vec<Tensor> = inputs
+            .iter()
+            .map(|b| {
+                handle
+                    .submit(b.clone())
+                    .expect("identity submit")
+                    .wait_output()
+                    .expect("identity output")
+            })
+            .collect();
+        let m = handle.finish();
+        assert_eq!(m.completed, inputs.len() as u64);
+        for (out, want) in outs.iter().zip(&goldens) {
+            assert_eq!(
+                out, want,
+                "single-tenant serving diverged from the serial schedule"
+            );
+        }
+        ident_runs.push(outs);
+    }
+    assert_eq!(
+        ident_runs[0], ident_runs[1],
+        "empty and trivial tenant tables must serve identical bytes"
+    );
+
+    // --- Report + JSON. -----------------------------------------------
+    println!(
+        "{}",
+        markdown_table(
+            "Multi-tenant serving (weights 4:1, 5 ms service, bursty flood)",
+            &["Gate", "Value", "Bound"],
+            &[
+                vec![
+                    "victim p99 alone".into(),
+                    format!("{p99_alone:.1} ms"),
+                    "-".into(),
+                ],
+                vec![
+                    "victim p99 under flood".into(),
+                    format!("{p99_flood:.1} ms"),
+                    "<= 2x alone".into(),
+                ],
+                vec![
+                    "flooder contested share".into(),
+                    format!("{flooder_share:.2}"),
+                    "0.2 +- 0.1".into(),
+                ],
+                vec![
+                    "co-deploy overcommits".into(),
+                    format!("{overcommitted}"),
+                    "0".into(),
+                ],
+                vec![
+                    "worst paging penalty".into(),
+                    format!("{worst_penalty:.2}"),
+                    "1.0".into(),
+                ],
+                vec![
+                    "two-model concurrent serve".into(),
+                    format!("{serve_elapsed_ms:.0} ms for 2x40"),
+                    "both complete".into(),
+                ],
+            ],
+        )
+    );
+
+    suite.record_value("victim p99 alone", p99_alone, "ms");
+    suite.record_value("victim p99 flooded", p99_flood, "ms");
+    suite.record_value("victim p99 ratio", p99_ratio, "x");
+    suite.record_value("flooder contested share", flooder_share, "share");
+    suite.record_value("co-deploy packed", packed_mb, "MB");
+
+    let mut doc = BTreeMap::new();
+    doc.insert("suite".into(), Json::Str("multitenant".into()));
+    doc.insert("service_ms".into(), Json::from(service_ms as usize));
+    doc.insert(
+        "tenant_weights".into(),
+        Json::Arr(vec![Json::Num(4.0), Json::Num(1.0)]),
+    );
+    doc.insert("victim_requests".into(), Json::from(ticks * 3));
+    doc.insert("flood_requests".into(), Json::from(flood_requests));
+    doc.insert("p99_alone_ms".into(), Json::Num(p99_alone));
+    doc.insert("p99_flood_ms".into(), Json::Num(p99_flood));
+    doc.insert("p99_ratio".into(), Json::Num(p99_ratio));
+    doc.insert("flooder_contested_share".into(), Json::Num(flooder_share));
+    doc.insert("overcommitted_placements".into(), Json::from(overcommitted));
+    doc.insert("worst_mem_penalty".into(), Json::Num(worst_penalty));
+    doc.insert("packed_mb".into(), Json::Num(packed_mb));
+    doc.insert(
+        "concurrent_serve_elapsed_ms".into(),
+        Json::Num(serve_elapsed_ms),
+    );
+    doc.insert("bit_identical".into(), Json::Bool(true));
+    std::fs::write("BENCH_multitenant.json", Json::Obj(doc).to_string())
+        .expect("write BENCH_multitenant.json");
+    println!("wrote BENCH_multitenant.json");
+}

@@ -43,6 +43,41 @@ impl NodeConfig {
     }
 }
 
+/// One serving tenant: a name (what requests and CLI flags refer to)
+/// and a WFQ weight (its share of each priority lane's capacity,
+/// relative to the other tenants' weights). Zero weight is legal —
+/// the tenant is deprioritized to the DRR quantum floor, never starved.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantConfig {
+    pub name: String,
+    pub weight: f64,
+}
+
+impl TenantConfig {
+    pub fn new(name: &str, weight: f64) -> TenantConfig {
+        TenantConfig { name: name.to_string(), weight }
+    }
+
+    /// Parse a CLI tenant list: `name=weight,name=weight,...`.
+    pub fn parse_list(s: &str) -> Result<Vec<TenantConfig>> {
+        s.split(',')
+            .filter(|p| !p.trim().is_empty())
+            .map(|pair| {
+                let (name, w) = pair.split_once('=').ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "tenant `{pair}` is not name=weight (e.g. \
+                         --tenants gold=3,free=1)"
+                    )
+                })?;
+                let weight: f64 = w.trim().parse().map_err(|_| {
+                    anyhow::anyhow!("tenant `{pair}` has a non-numeric weight")
+                })?;
+                Ok(TenantConfig::new(name.trim(), weight))
+            })
+            .collect()
+    }
+}
+
 /// Stage replication policy (scale-out): how many data-parallel copies
 /// of hot stages the deployer may place. Extras are distributed
 /// bottleneck-first over per-stage partition costs
@@ -134,6 +169,14 @@ pub struct AmpConfig {
     /// set their own; requests that cannot meet it are shed instead of
     /// served late. None = no default deadline. CLI: `--deadline-ms`.
     pub default_deadline_ms: Option<f64>,
+    /// Serving ingress: named tenants with WFQ weights. Within each
+    /// priority class the ingress serves tenants deficit-weighted
+    /// round-robin by these weights; a flooding tenant is capped near
+    /// its weight share. Empty (the default) or a single entry means
+    /// one implicit tenant and plain FIFO within each class — the
+    /// pre-multitenant behavior, bit for bit. CLI:
+    /// `--tenants name=weight,...`.
+    pub tenants: Vec<TenantConfig>,
     /// Streaming pipeline engine: micro-batches kept in flight per
     /// admitted batch. 1 = serial `pipeline::run`; >1 makes the router
     /// admit `batch * pipeline_depth`-row super-batches that the
@@ -220,6 +263,7 @@ impl Default for AmpConfig {
             workers: 4,
             priority_classes: 3,
             default_deadline_ms: None,
+            tenants: Vec::new(),
             pipeline_depth: 1,
             adaptive_depth: false,
             max_pipeline_depth: 8,
@@ -330,7 +374,24 @@ impl AmpConfig {
             default_deadline: self
                 .default_deadline_ms
                 .map(|ms| Duration::from_secs_f64(ms.max(0.0) / 1e3)),
+            tenant_weights: self.tenant_weights(),
         }
+    }
+
+    /// The tenant WFQ weight vector (tenant id = index into `tenants`).
+    /// Empty when no tenants are configured — the ingress then runs one
+    /// implicit tenant with plain FIFO lanes.
+    pub fn tenant_weights(&self) -> Vec<f64> {
+        self.tenants.iter().map(|t| t.weight).collect()
+    }
+
+    /// Named tenant table for resolving request tenant names to ids.
+    pub fn tenant_table(&self) -> crate::tenancy::TenantTable {
+        crate::tenancy::TenantTable::new(
+            self.tenants.iter().map(|t| t.name.clone()).collect(),
+            self.tenant_weights(),
+        )
+        .expect("names and weights come from the same vec")
     }
 
     pub fn monitor_config(&self) -> crate::monitor::MonitorConfig {
@@ -353,6 +414,31 @@ impl AmpConfig {
             anyhow::ensure!(
                 ms.is_finite() && ms > 0.0,
                 "default_deadline_ms must be a positive number"
+            );
+        }
+        if !self.tenants.is_empty() {
+            let mut seen = std::collections::HashSet::new();
+            for t in &self.tenants {
+                anyhow::ensure!(
+                    !t.name.trim().is_empty(),
+                    "tenant names must be non-empty"
+                );
+                anyhow::ensure!(
+                    seen.insert(t.name.as_str()),
+                    "duplicate tenant name '{}'",
+                    t.name
+                );
+                anyhow::ensure!(
+                    t.weight.is_finite() && t.weight >= 0.0,
+                    "tenant '{}' weight must be a finite number >= 0, \
+                     got {}",
+                    t.name,
+                    t.weight
+                );
+            }
+            anyhow::ensure!(
+                self.tenants.iter().map(|t| t.weight).sum::<f64>() > 0.0,
+                "tenant weights must not all be zero (no share to divide)"
             );
         }
         anyhow::ensure!(self.pipeline_depth >= 1, "pipeline_depth must be >= 1");
@@ -464,6 +550,22 @@ impl AmpConfig {
         );
         if let Some(ms) = self.default_deadline_ms {
             m.insert("default_deadline_ms".into(), Json::Num(ms));
+        }
+        if !self.tenants.is_empty() {
+            m.insert(
+                "tenants".into(),
+                Json::Arr(
+                    self.tenants
+                        .iter()
+                        .map(|t| {
+                            let mut tm = BTreeMap::new();
+                            tm.insert("name".into(), Json::from(t.name.as_str()));
+                            tm.insert("weight".into(), Json::Num(t.weight));
+                            Json::Obj(tm)
+                        })
+                        .collect(),
+                ),
+            );
         }
         m.insert("pipeline_depth".into(), Json::from(self.pipeline_depth));
         m.insert("adaptive_depth".into(), Json::from(self.adaptive_depth));
@@ -583,6 +685,21 @@ impl AmpConfig {
             default_deadline_ms: j
                 .get("default_deadline_ms")
                 .and_then(Json::as_f64),
+            tenants: match j.get("tenants") {
+                Some(Json::Arr(arr)) => arr
+                    .iter()
+                    .map(|tj| {
+                        Ok(TenantConfig {
+                            name: tj.req_str("name")?.to_string(),
+                            weight: tj.req_f64("weight")?,
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?,
+                Some(_) => anyhow::bail!(
+                    "`tenants` must be an array of {{name, weight}} objects"
+                ),
+                None => Vec::new(),
+            },
             pipeline_depth: get_u("pipeline_depth", d.pipeline_depth),
             adaptive_depth: j
                 .get("adaptive_depth")
@@ -852,6 +969,64 @@ mod tests {
         assert_eq!(ing.default_deadline, Some(Duration::from_millis(100)));
         c.default_deadline_ms = None;
         assert_eq!(c.ingress_config().default_deadline, None);
+    }
+
+    #[test]
+    fn tenant_config_roundtrips_and_validates() {
+        // Default: no tenants key, empty weights, trivial table.
+        let d = AmpConfig::default();
+        assert!(d.to_json().get("tenants").is_none());
+        assert!(d.tenant_weights().is_empty());
+        assert!(d.tenant_table().is_trivial());
+
+        let mut c = AmpConfig::default();
+        c.tenants = vec![
+            TenantConfig::new("gold", 3.0),
+            TenantConfig::new("free", 1.0),
+        ];
+        c.validate().unwrap();
+        let back = AmpConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.tenants, c.tenants);
+        assert_eq!(back.tenant_weights(), vec![3.0, 1.0]);
+        assert_eq!(back.tenant_table().resolve("free"), Some(1));
+        assert_eq!(back.ingress_config().tenant_weights, vec![3.0, 1.0]);
+
+        // Rejections: empty name, duplicate, negative / non-finite /
+        // all-zero weights.
+        let mut c = AmpConfig::default();
+        c.tenants = vec![TenantConfig::new("", 1.0)];
+        assert!(c.validate().is_err());
+        c.tenants = vec![
+            TenantConfig::new("a", 1.0),
+            TenantConfig::new("a", 2.0),
+        ];
+        assert!(c.validate().is_err());
+        c.tenants = vec![TenantConfig::new("a", -1.0)];
+        assert!(c.validate().is_err());
+        c.tenants = vec![TenantConfig::new("a", f64::NAN)];
+        assert!(c.validate().is_err());
+        c.tenants = vec![
+            TenantConfig::new("a", 0.0),
+            TenantConfig::new("b", 0.0),
+        ];
+        assert!(c.validate().is_err());
+        // Zero weight is fine as long as someone has a share.
+        c.tenants = vec![
+            TenantConfig::new("a", 1.0),
+            TenantConfig::new("b", 0.0),
+        ];
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn tenant_cli_list_parses() {
+        let ts = TenantConfig::parse_list("gold=3,free=1").unwrap();
+        assert_eq!(ts.len(), 2);
+        assert_eq!(ts[0], TenantConfig::new("gold", 3.0));
+        assert_eq!(ts[1], TenantConfig::new("free", 1.0));
+        assert!(TenantConfig::parse_list("gold").is_err());
+        assert!(TenantConfig::parse_list("gold=shiny").is_err());
+        assert!(TenantConfig::parse_list("").unwrap().is_empty());
     }
 
     #[test]

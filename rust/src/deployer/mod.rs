@@ -12,6 +12,13 @@
 //! deployment half of AMP4EC+Cache (the paper's bandwidth column dropping
 //! from 100 MB to 0). `undeploy` releases memory; `redeploy_on_change`
 //! re-plans after a node joins or leaves (§I's two motivating scenarios).
+//!
+//! Deployment is split into two halves (ISSUE 9): [`ModelDeployer::place`]
+//! does node selection plus memory reservation alone — the artifact-free
+//! step multi-model co-deployment packing plans and validates against a
+//! shared cluster — and the ship half moves weights onto the chosen
+//! nodes. `deploy_replicated` composes both and rolls the placement back
+//! if shipping fails.
 
 use std::collections::{HashMap, HashSet};
 use std::ops::Range;
@@ -68,6 +75,24 @@ impl Stage {
             &self.replicas[r - 1].node
         }
     }
+}
+
+/// A stage's chosen placement before any bytes move: the nodes that
+/// will host each replica (`nodes[0]` is the primary), with their
+/// working-set memory already reserved. Produced by
+/// [`ModelDeployer::place`]; consumed by the ship half of
+/// [`ModelDeployer::deploy_replicated`] or released unused via
+/// [`ModelDeployer::release_placement`].
+pub struct StagePlacement {
+    pub partition_idx: usize,
+    pub block_range: Range<usize>,
+    /// Working-set bytes reserved on every node in `nodes`.
+    pub mem_bytes: u64,
+    /// Chosen replica hosts; index 0 is the primary.
+    pub nodes: Vec<Arc<VirtualNode>>,
+    /// True when the primary landed via the last-resort overcommit
+    /// fallback (its node's working set now exceeds its limit).
+    pub overcommitted: bool,
 }
 
 /// A live deployment of a partition plan.
@@ -229,6 +254,53 @@ impl ModelDeployer {
         replica_counts: &[usize],
     ) -> Result<Deployment> {
         let t0 = Instant::now();
+        let placements =
+            self.place(plan, cluster, scheduler, batch, replica_counts)?;
+        let mut stages = Vec::with_capacity(placements.len());
+        match self.ship_placements(&placements, batch, &mut stages) {
+            Ok(transfer_bytes) => Ok(Deployment {
+                batch,
+                stages,
+                transfer_bytes,
+                deploy_ms: t0.elapsed().as_secs_f64() * 1e3,
+                out_shape: vec![batch, self.manifest.num_classes],
+            }),
+            Err(e) => {
+                // Roll back so a failed deploy holds nothing: unload
+                // the stages that did ship, then release every memory
+                // reservation the placement made.
+                for s in &stages {
+                    for b in &s.blocks {
+                        s.executor.unload_block(*b);
+                    }
+                    for r in &s.replicas {
+                        for b in &r.blocks {
+                            r.executor.unload_block(*b);
+                        }
+                    }
+                }
+                self.release_placement(&placements);
+                Err(e)
+            }
+        }
+    }
+
+    /// The selection half of a deployment: choose the hosting nodes for
+    /// every partition (and its extra replicas) and reserve their
+    /// working-set memory, moving **zero bytes** and touching no
+    /// executor. The scheduler's scoring reads live node state — load,
+    /// *remaining* memory, stability — so placing a second model on a
+    /// cluster automatically packs around whatever earlier deployments
+    /// already reserved. Release an unused placement with
+    /// [`ModelDeployer::release_placement`].
+    pub fn place(
+        &self,
+        plan: &Plan,
+        cluster: &Cluster,
+        scheduler: &Scheduler,
+        batch: usize,
+        replica_counts: &[usize],
+    ) -> Result<Vec<StagePlacement>> {
         anyhow::ensure!(
             replica_counts.len() == plan.partitions.len(),
             "need one replica count per partition ({} != {})",
@@ -242,9 +314,8 @@ impl ModelDeployer {
         let nodes = cluster.online_nodes();
         anyhow::ensure!(!nodes.is_empty(), "no online nodes to deploy to");
 
-        let mut stages = Vec::with_capacity(plan.partitions.len());
+        let mut placements = Vec::with_capacity(plan.partitions.len());
         let mut used: HashSet<usize> = HashSet::new();
-        let mut transfer_bytes = 0u64;
 
         for (i, part) in plan.partitions.iter().enumerate() {
             let mem_bytes = self.stage_mem_bytes(&part.block_range, batch);
@@ -260,60 +331,47 @@ impl ModelDeployer {
                 .cloned()
                 .collect();
             let candidates = if fresh.is_empty() { nodes.clone() } else { fresh };
+            let picked = scheduler
+                .select_node(&candidates, &req)
+                .or_else(|| scheduler.select_node(&nodes, &req));
             // Last resort: overcommit the least-loaded online node. A
             // cgroup doesn't refuse an oversized working set — it pages;
             // our memory model charges the same penalty (DESIGN.md).
-            let overcommit = || {
-                nodes
-                    .iter()
-                    .filter(|n| n.is_online())
-                    .min_by(|a, b| {
-                        a.current_load()
-                            .partial_cmp(&b.current_load())
-                            .unwrap()
-                    })
-                    .cloned()
-                    .map(|n| {
-                        crate::log_warn!(
-                            "deployer",
-                            "overcommitting partition {i} ({:.1} MB) onto {}",
-                            req.mem_mb,
-                            n.name()
-                        );
-                        let score = scheduler
-                            .score_node(&n, &TaskRequirements::default())
-                            .unwrap_or(crate::scheduler::ScoreBreakdown {
-                                resource: 0.0,
-                                load: 0.0,
-                                performance: 0.0,
-                                balance: 0.0,
-                                total: 0.0,
-                            });
-                        (n, score)
-                    })
+            let (node, overcommitted) = match picked {
+                Some((node, _score)) => (node, false),
+                None => {
+                    let node = nodes
+                        .iter()
+                        .filter(|n| n.is_online())
+                        .min_by(|a, b| {
+                            a.current_load()
+                                .partial_cmp(&b.current_load())
+                                .unwrap()
+                        })
+                        .cloned()
+                        .ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "no online node for partition {i} \
+                                 (need {:.1} MB)",
+                                req.mem_mb
+                            )
+                        })?;
+                    crate::log_warn!(
+                        "deployer",
+                        "overcommitting partition {i} ({:.1} MB) onto {}",
+                        req.mem_mb,
+                        node.name()
+                    );
+                    (node, true)
+                }
             };
-            let (node, _score) = scheduler
-                .select_node(&candidates, &req)
-                .or_else(|| scheduler.select_node(&nodes, &req))
-                .or_else(overcommit)
-                .ok_or_else(|| {
-                    anyhow::anyhow!(
-                        "no online node for partition {i} (need {:.1} MB)",
-                        req.mem_mb
-                    )
-                })?;
             used.insert(node.id());
-            let executor = self.executor_for(&node)?;
-
-            let (handles, stage_bytes, moved) =
-                self.ship_blocks(&node, &executor, &part.block_range, batch)?;
-            transfer_bytes += moved;
             node.mem_reserve(mem_bytes);
+            let mut chosen = vec![node];
 
             // Extra replicas go on fresh nodes only, under the
             // scheduler's memory guard — no overcommit fallback.
             let want_extra = replica_counts[i] - 1;
-            let mut replicas = Vec::with_capacity(want_extra);
             if want_extra > 0 {
                 let fresh: Vec<_> = nodes
                     .iter()
@@ -334,40 +392,101 @@ impl ModelDeployer {
                 }
                 for (rnode, _score) in set {
                     used.insert(rnode.id());
-                    let rexec = self.executor_for(&rnode)?;
-                    let (rblocks, _, rmoved) =
-                        self.ship_blocks(&rnode, &rexec, &part.block_range, batch)?;
-                    transfer_bytes += rmoved;
                     rnode.mem_reserve(mem_bytes);
-                    replicas.push(StageReplica {
-                        node: rnode,
-                        executor: rexec,
-                        blocks: rblocks,
-                        mem_reserved: mem_bytes,
-                    });
+                    chosen.push(rnode);
                 }
             }
 
-            stages.push(Stage {
+            placements.push(StagePlacement {
                 partition_idx: i,
+                block_range: part.block_range.clone(),
+                mem_bytes,
+                nodes: chosen,
+                overcommitted,
+            });
+        }
+        Ok(placements)
+    }
+
+    /// Release the node memory a [`ModelDeployer::place`] call reserved
+    /// without shipping anything — the undo for a placement that was
+    /// probed (packing feasibility) or abandoned (ship failure).
+    pub fn release_placement(&self, placements: &[StagePlacement]) {
+        for p in placements {
+            for node in &p.nodes {
+                node.mem_release(p.mem_bytes);
+            }
+        }
+    }
+
+    /// The ship half of a deployment: move weights to every placed node
+    /// and load blocks into its executor, appending fully provisioned
+    /// stages to `stages` as they complete. On error the partially
+    /// shipped placement's blocks are unloaded before returning; the
+    /// caller rolls back `stages` and the memory reservations.
+    fn ship_placements(
+        &self,
+        placements: &[StagePlacement],
+        batch: usize,
+        stages: &mut Vec<Stage>,
+    ) -> Result<u64> {
+        let mut transfer_bytes = 0u64;
+        for p in placements {
+            let mut shipped = Vec::with_capacity(p.nodes.len());
+            let mut err = None;
+            for node in &p.nodes {
+                let r = self.executor_for(node).and_then(|executor| {
+                    self.ship_blocks(node, &executor, &p.block_range, batch)
+                        .map(|(blocks, bytes, moved)| {
+                            (executor, blocks, bytes, moved)
+                        })
+                });
+                match r {
+                    Ok((executor, blocks, stage_bytes, moved)) => {
+                        transfer_bytes += moved;
+                        shipped.push((
+                            Arc::clone(node),
+                            executor,
+                            blocks,
+                            stage_bytes,
+                        ));
+                    }
+                    Err(e) => {
+                        err = Some(e);
+                        break;
+                    }
+                }
+            }
+            if let Some(e) = err {
+                for (_node, executor, blocks, _bytes) in &shipped {
+                    for b in blocks {
+                        executor.unload_block(*b);
+                    }
+                }
+                return Err(e);
+            }
+            let (node, executor, blocks, weights_bytes) = shipped.remove(0);
+            let replicas = shipped
+                .into_iter()
+                .map(|(node, executor, blocks, _bytes)| StageReplica {
+                    node,
+                    executor,
+                    blocks,
+                    mem_reserved: p.mem_bytes,
+                })
+                .collect();
+            stages.push(Stage {
+                partition_idx: p.partition_idx,
                 node,
                 executor,
-                block_range: part.block_range.clone(),
-                blocks: handles,
-                weights_bytes: stage_bytes,
-                mem_reserved: mem_bytes,
+                block_range: p.block_range.clone(),
+                blocks,
+                weights_bytes,
+                mem_reserved: p.mem_bytes,
                 replicas,
             });
         }
-
-        let out_shape = vec![batch, self.manifest.num_classes];
-        Ok(Deployment {
-            batch,
-            stages,
-            transfer_bytes,
-            deploy_ms: t0.elapsed().as_secs_f64() * 1e3,
-            out_shape,
-        })
+        Ok(transfer_bytes)
     }
 
     /// Heal ladder step 1 (ISSUE 8): rebuild a deployment around dead

@@ -48,6 +48,7 @@ pub mod runtime;
 pub mod scheduler;
 pub mod server;
 pub mod serving;
+pub mod tenancy;
 pub mod transport;
 pub mod util;
 pub mod workload;

@@ -13,6 +13,7 @@
 //!                    [--deadline-ms MS] # default per-request deadline (shed past it)
 //!                    [--heal] [--miss-threshold N]  # self-heal under node churn
 //!                    [--priority-classes N]  # strict-priority ingress lanes
+//!                    [--tenants name=w,...]  # per-tenant WFQ weights
 //!                    [--transport inproc|uds|tcp] [--agents a,b,...]  # wire transport
 //! amp4ec node        --listen ADDR      # node agent (socket path or host:port)
 //!                    [--transport uds|tcp] [--stay]  # --stay: don't exit when idle
@@ -93,6 +94,9 @@ fn build_config(args: &Args) -> anyhow::Result<AmpConfig> {
         args.get_usize("miss-threshold", cfg.miss_threshold as usize)? as u32;
     cfg.priority_classes =
         args.get_usize("priority-classes", cfg.priority_classes)?;
+    if let Some(t) = args.get("tenants") {
+        cfg.tenants = amp4ec::config::TenantConfig::parse_list(t)?;
+    }
     if let Some(ms) = args.get("deadline-ms") {
         cfg.default_deadline_ms = Some(
             ms.parse()
@@ -150,6 +154,27 @@ fn print_report(report: &amp4ec::server::ServeReport) {
             lat.p99(),
             deadline
         );
+    }
+    // Per-tenant breakdown (only when a weight table routed traffic to
+    // more than the implicit tenant 0).
+    if m.tenants.iter().any(|t| t.tenant != 0) {
+        for t in &m.tenants {
+            if t.completed + t.failed + t.shed() == 0 {
+                continue;
+            }
+            let lat = t.latency_summary();
+            println!(
+                "tenant {} class {:<12}: {} ok / {} failed / {} shed, \
+                 p50/p99 {:.2}/{:.2} ms",
+                t.tenant,
+                amp4ec::serving::class_name(t.class),
+                t.completed,
+                t.failed,
+                t.shed(),
+                lat.p50(),
+                lat.p99()
+            );
+        }
     }
     println!("deploy transfer    : {:.2} MB", report.deploy_transfer_bytes as f64 / 1e6);
     println!("monitor overhead   : {:.3}% CPU", report.monitor_overhead_pct);

@@ -165,6 +165,10 @@ pub struct RunMetrics {
     /// Per-priority-class breakdown (index = class; empty when the run
     /// never recorded class-tagged requests).
     pub classes: Vec<ClassMetrics>,
+    /// Per-(tenant, class) breakdown, sorted by (tenant, class); empty
+    /// when the run never recorded tenant-tagged requests. Single-tenant
+    /// runs land everything under tenant 0.
+    pub tenants: Vec<TenantClassMetrics>,
 }
 
 /// Per-priority-class serving metrics: latency distribution, shed
@@ -189,6 +193,42 @@ pub struct ClassMetrics {
 }
 
 impl ClassMetrics {
+    pub fn latency_summary(&self) -> Summary {
+        let mut s = Summary::new();
+        s.extend(&self.latency);
+        s
+    }
+
+    /// All sheds (expired + predicted-miss).
+    pub fn shed(&self) -> u64 {
+        self.shed_expired + self.shed_predicted
+    }
+}
+
+/// Per-(tenant, priority-class) serving metrics — the WFQ ingress's
+/// isolation evidence: each tenant's latency distribution, completions,
+/// and shed counts within each class of the run's traffic.
+#[derive(Debug, Default, Clone)]
+pub struct TenantClassMetrics {
+    pub tenant: usize,
+    pub class: usize,
+    /// End-to-end per-request latency, ms.
+    pub latency: Vec<f64>,
+    pub completed: u64,
+    pub failed: u64,
+    pub cache_hits: u64,
+    /// Requests shed because their deadline had already passed.
+    pub shed_expired: u64,
+    /// Requests shed because the service-time estimate said the
+    /// deadline could not be met.
+    pub shed_predicted: u64,
+    /// Completed requests that carried a deadline.
+    pub deadline_total: u64,
+    /// Of those, how many finished within it.
+    pub deadline_met: u64,
+}
+
+impl TenantClassMetrics {
     pub fn latency_summary(&self) -> Summary {
         let mut s = Summary::new();
         s.extend(&self.latency);
@@ -240,6 +280,44 @@ impl RunMetrics {
     /// Total requests shed across all classes.
     pub fn total_shed(&self) -> u64 {
         self.classes.iter().map(ClassMetrics::shed).sum()
+    }
+
+    /// Metrics for one (tenant, class) pair, if any were recorded.
+    pub fn tenant_class(
+        &self,
+        tenant: usize,
+        class: usize,
+    ) -> Option<&TenantClassMetrics> {
+        self.tenants
+            .iter()
+            .find(|t| t.tenant == tenant && t.class == class)
+    }
+
+    /// One tenant's latency distribution merged across classes.
+    pub fn tenant_latency_summary(&self, tenant: usize) -> Summary {
+        let mut s = Summary::new();
+        for t in self.tenants.iter().filter(|t| t.tenant == tenant) {
+            s.extend(&t.latency);
+        }
+        s
+    }
+
+    /// One tenant's completions across classes.
+    pub fn tenant_completed(&self, tenant: usize) -> u64 {
+        self.tenants
+            .iter()
+            .filter(|t| t.tenant == tenant)
+            .map(|t| t.completed)
+            .sum()
+    }
+
+    /// One tenant's sheds (expired + predicted) across classes.
+    pub fn tenant_shed(&self, tenant: usize) -> u64 {
+        self.tenants
+            .iter()
+            .filter(|t| t.tenant == tenant)
+            .map(TenantClassMetrics::shed)
+            .sum()
     }
 
     /// Stability score: fraction of requests within 2x median latency,
@@ -315,6 +393,33 @@ impl MetricsCollector {
         cache_hit: bool,
         deadline_met: Option<bool>,
     ) {
+        self.record_request_tenant(
+            crate::tenancy::DEFAULT_TENANT,
+            class,
+            latency_ms,
+            compute_ms,
+            comm_ms,
+            sched_ms,
+            cache_hit,
+            deadline_met,
+        );
+    }
+
+    /// [`MetricsCollector::record_request_class`] plus the per-tenant
+    /// breakdown, still one lock acquisition. Single-tenant callers use
+    /// the class-only name, which lands under tenant 0.
+    #[allow(clippy::too_many_arguments)]
+    pub fn record_request_tenant(
+        &self,
+        tenant: usize,
+        class: usize,
+        latency_ms: f64,
+        compute_ms: f64,
+        comm_ms: f64,
+        sched_ms: f64,
+        cache_hit: bool,
+        deadline_met: Option<bool>,
+    ) {
         let mut m = self.inner.lock().unwrap();
         m.latency.push(latency_ms);
         m.compute.push(compute_ms);
@@ -336,6 +441,18 @@ impl MetricsCollector {
                 c.deadline_met += 1;
             }
         }
+        let t = tenant_slot(&mut m.tenants, tenant, class);
+        t.latency.push(latency_ms);
+        t.completed += 1;
+        if cache_hit {
+            t.cache_hits += 1;
+        }
+        if let Some(met) = deadline_met {
+            t.deadline_total += 1;
+            if met {
+                t.deadline_met += 1;
+            }
+        }
     }
 
     pub fn record_failure(&self) {
@@ -343,20 +460,37 @@ impl MetricsCollector {
     }
 
     pub fn record_failure_class(&self, class: usize) {
+        self.record_failure_tenant(crate::tenancy::DEFAULT_TENANT, class);
+    }
+
+    pub fn record_failure_tenant(&self, tenant: usize, class: usize) {
         let mut m = self.inner.lock().unwrap();
         m.failed += 1;
         class_slot(&mut m.classes, class).failed += 1;
+        tenant_slot(&mut m.tenants, tenant, class).failed += 1;
     }
 
     /// A request shed by the ingress (deadline expired or predicted to
     /// miss). Sheds are neither completions nor failures.
     pub fn record_shed(&self, class: usize, expired: bool) {
+        self.record_shed_tenant(crate::tenancy::DEFAULT_TENANT, class, expired);
+    }
+
+    pub fn record_shed_tenant(&self, tenant: usize, class: usize, expired: bool) {
         let mut m = self.inner.lock().unwrap();
-        let c = class_slot(&mut m.classes, class);
+        {
+            let c = class_slot(&mut m.classes, class);
+            if expired {
+                c.shed_expired += 1;
+            } else {
+                c.shed_predicted += 1;
+            }
+        }
+        let t = tenant_slot(&mut m.tenants, tenant, class);
         if expired {
-            c.shed_expired += 1;
+            t.shed_expired += 1;
         } else {
-            c.shed_predicted += 1;
+            t.shed_predicted += 1;
         }
     }
 
@@ -386,6 +520,30 @@ fn class_slot(classes: &mut Vec<ClassMetrics>, class: usize) -> &mut ClassMetric
         classes.push(ClassMetrics { class: c, ..ClassMetrics::default() });
     }
     &mut classes[class]
+}
+
+/// Find-or-insert into the (tenant, class)-sorted tenant breakdown.
+/// Unlike classes, tenant pairs are sparse — only observed combinations
+/// get a slot.
+fn tenant_slot(
+    tenants: &mut Vec<TenantClassMetrics>,
+    tenant: usize,
+    class: usize,
+) -> &mut TenantClassMetrics {
+    let pos = tenants
+        .binary_search_by_key(&(tenant, class), |t| (t.tenant, t.class))
+        .unwrap_or_else(|insert_at| {
+            tenants.insert(
+                insert_at,
+                TenantClassMetrics {
+                    tenant,
+                    class,
+                    ..TenantClassMetrics::default()
+                },
+            );
+            insert_at
+        });
+    &mut tenants[pos]
 }
 
 /// Per-pipeline-stage occupancy counters produced by the streaming
@@ -697,6 +855,46 @@ mod tests {
         assert_eq!(be.shed_predicted, 1);
         assert_eq!(be.shed(), 2);
         assert!(m.class(3).is_none());
+    }
+
+    #[test]
+    fn per_tenant_accounting() {
+        let c = MetricsCollector::new();
+        c.start_run();
+        // Tenant 1 traffic in two classes; tenant 0 in one.
+        c.record_request_tenant(1, 0, 5.0, 4.0, 0.5, 0.1, false, Some(true));
+        c.record_request_tenant(1, 2, 9.0, 4.0, 0.5, 0.1, true, None);
+        c.record_request_tenant(0, 0, 7.0, 4.0, 0.5, 0.1, false, None);
+        c.record_failure_tenant(1, 2);
+        c.record_shed_tenant(1, 2, true);
+        c.record_shed_tenant(0, 0, false);
+        let m = c.finish();
+        // Aggregate and per-class views still count everything.
+        assert_eq!(m.completed, 3);
+        assert_eq!(m.class(0).unwrap().completed, 2);
+        assert_eq!(m.total_shed(), 2);
+        // Tenant slots are sparse and (tenant, class)-sorted.
+        let pairs: Vec<(usize, usize)> =
+            m.tenants.iter().map(|t| (t.tenant, t.class)).collect();
+        assert_eq!(pairs, vec![(0, 0), (1, 0), (1, 2)]);
+        let t10 = m.tenant_class(1, 0).unwrap();
+        assert_eq!(t10.completed, 1);
+        assert_eq!(t10.deadline_met, 1);
+        let t12 = m.tenant_class(1, 2).unwrap();
+        assert_eq!(t12.failed, 1);
+        assert_eq!(t12.cache_hits, 1);
+        assert_eq!(t12.shed_expired, 1);
+        assert_eq!(m.tenant_completed(1), 2);
+        assert_eq!(m.tenant_shed(1), 1);
+        assert_eq!(m.tenant_shed(0), 1);
+        assert!((m.tenant_latency_summary(1).mean() - 7.0).abs() < 1e-9);
+        // The class-only names land under tenant 0.
+        let c2 = MetricsCollector::new();
+        c2.record_request_class(0, 5.0, 4.0, 0.5, 0.1, false, None);
+        c2.record_shed(1, false);
+        let m2 = c2.finish();
+        assert_eq!(m2.tenant_class(0, 0).unwrap().completed, 1);
+        assert_eq!(m2.tenant_class(0, 1).unwrap().shed_predicted, 1);
     }
 
     #[test]

@@ -835,6 +835,11 @@ struct BatchAgg {
     /// whole-output delivery (single member) or an explicit error
     /// (coalesced members).
     expected_rows: usize,
+    /// Wall-clock instant the transport was registered (feeder handoff).
+    /// The collector folds registration-to-last-delivery into the
+    /// engine's service-time EWMA, which the feeder's deadline-aware
+    /// coalescing guard consults.
+    fed_at: std::time::Instant,
 }
 
 impl BatchAgg {
@@ -852,6 +857,9 @@ struct EngineState {
     cp: CriticalPath,
     node_ids: Arc<[usize]>,
     batches: HashMap<u64, BatchAgg>,
+    /// EWMA of wall-clock transport service time (registration to last
+    /// delivery), ms. `None` until the first transport completes.
+    service_ewma_ms: Option<f64>,
 }
 
 impl EngineState {
@@ -860,6 +868,7 @@ impl EngineState {
             cp: CriticalPath::new(&node_ids),
             node_ids,
             batches: HashMap::new(),
+            service_ewma_ms: None,
         }
     }
 
@@ -875,6 +884,7 @@ impl EngineState {
             cp: CriticalPath::new_replicated(replica_nodes),
             node_ids,
             batches: HashMap::new(),
+            service_ewma_ms: None,
         }
     }
 
@@ -908,6 +918,7 @@ impl EngineState {
                 error: None,
                 members,
                 expected_rows,
+                fed_at: std::time::Instant::now(),
             },
         );
     }
@@ -1289,6 +1300,20 @@ fn collect_loop<S: StageExec + ?Sized>(
                 }
                 let completed =
                     finished.and_then(|id| st.batches.remove(&id));
+                if let Some(agg) = &completed {
+                    if agg.error.is_none() {
+                        // Fold the transport's wall-clock service time
+                        // (registration to last delivery) into the EWMA
+                        // the feeder's deadline-aware coalescing guard
+                        // reads. Failed transports are noise, not a
+                        // service-time signal.
+                        let ms = agg.fed_at.elapsed().as_secs_f64() * 1e3;
+                        st.service_ewma_ms = Some(match st.service_ewma_ms {
+                            Some(e) => 0.7 * e + 0.3 * ms,
+                            None => ms,
+                        });
+                    }
+                }
                 drop(st);
                 ctrl.terminal_credit(m.idx, done);
                 if let Some(agg) = completed {
@@ -2206,6 +2231,29 @@ struct CoalesceCounters {
 /// fate) and the per-delivery reassembly work.
 const MAX_COALESCE_MEMBERS: usize = 8;
 
+/// Deadline-aware batch formation (ISSUE 9): the feeder skips
+/// coalescing entirely when the head submission's remaining slack is
+/// below this multiple of the EWMA transport service estimate — a
+/// tight-deadline submission must not grow into a larger transport
+/// whose extra micro-batches it then waits on.
+const COALESCE_SLACK_FACTOR: f64 = 2.0;
+
+/// True when `deadline` leaves less than [`COALESCE_SLACK_FACTOR`] x
+/// `est_ms` of slack at `now`. Deadline-free heads and a cold estimate
+/// (`est_ms == None`) never veto, so coalescing-off runs and warm-up
+/// behave exactly as before.
+fn coalesce_too_tight(
+    deadline: Option<std::time::Instant>,
+    est_ms: Option<f64>,
+    now: std::time::Instant,
+) -> bool {
+    let (Some(d), Some(est)) = (deadline, est_ms) else {
+        return false;
+    };
+    let slack_ms = d.saturating_duration_since(now).as_secs_f64() * 1e3;
+    slack_ms < COALESCE_SLACK_FACTOR * est
+}
+
 /// Micro-batches needed for `rows` rows at `micro` rows per chunk.
 fn chunks_for(rows: usize, micro: usize) -> usize {
     rows.div_ceil(micro)
@@ -2346,8 +2394,17 @@ fn feeder_loop(
             }
         }
         let cls = first.class;
+        let head_deadline = first.deadline;
         let mut group = vec![first];
-        if coalesce {
+        // Deadline-aware formation: a head with little slack left rides
+        // alone (smallest possible transport) instead of merging.
+        if coalesce
+            && !coalesce_too_tight(
+                head_deadline,
+                lock_state(&state).service_ewma_ms,
+                std::time::Instant::now(),
+            )
+        {
             // Scan remaining pending submissions in arrival order,
             // merging same-class neighbours; stop at the first
             // same-class candidate that doesn't merge (the old
@@ -2894,6 +2951,13 @@ impl PersistentEngine {
         }
     }
 
+    /// EWMA of observed registration-to-last-delivery transport service
+    /// time, ms (`None` until the first transport completes). The
+    /// feeder's deadline-aware coalescing guard consults this.
+    pub fn service_estimate_ms(&self) -> Option<f64> {
+        lock_state(&self.state).service_ewma_ms
+    }
+
     /// The adaptive controller's trajectory so far.
     pub fn depth_report(&self) -> DepthReport {
         self.depth_stats.report()
@@ -2931,6 +2995,24 @@ mod tests {
     fn input(rows: usize, cols: usize) -> Tensor {
         let data = (0..rows * cols).map(|i| i as f32 * 0.5 - 3.0).collect();
         Tensor::new(vec![rows, cols], data).unwrap()
+    }
+
+    #[test]
+    fn coalesce_slack_guard_vetoes_only_tight_deadlines() {
+        use std::time::Duration;
+        let now = std::time::Instant::now();
+        // No deadline, or a cold service estimate: never veto.
+        assert!(!coalesce_too_tight(None, Some(5.0), now));
+        let soon = now + Duration::from_millis(5);
+        assert!(!coalesce_too_tight(Some(soon), None, now));
+        // Slack (5 ms) below 2x the 5 ms estimate: veto coalescing.
+        assert!(coalesce_too_tight(Some(soon), Some(5.0), now));
+        // Generous slack (50 ms >= 2 * 5 ms): coalescing stays on.
+        let late = now + Duration::from_millis(50);
+        assert!(!coalesce_too_tight(Some(late), Some(5.0), now));
+        // An already-expired deadline has zero slack: veto.
+        let past = now + Duration::from_millis(1);
+        assert!(coalesce_too_tight(Some(now), Some(1.0), past));
     }
 
     #[test]

@@ -64,13 +64,48 @@ pub fn run(
 /// cache-warm replay of a pooled workload) re-assemble as a single view
 /// over their span. Everything else copies once into a pooled buffer
 /// (counted in [`crate::metrics::data_plane`]).
+///
+/// Inputs of the *same rank but different sizes* are stacked by padding
+/// every row to their elementwise-maximum superset shape: each ragged
+/// input embeds stride-aligned at the origin of a zero-filled superset
+/// row, and [`crop_row`] is the exact inverse. Identical-shape batches
+/// never take this path, so uniform workloads are unchanged bit for
+/// bit. Rank mismatches remain an error.
 pub fn stack_batch(inputs: &[&Tensor], batch: usize) -> Result<Tensor> {
     anyhow::ensure!(!inputs.is_empty(), "empty batch");
     anyhow::ensure!(inputs.len() <= batch, "batch overflow");
     let per = &inputs[0].shape;
-    anyhow::ensure!(per[0] == 1, "stack_batch expects [1, ...] inputs");
+    let mut sup = per.clone();
+    let mut uniform = true;
     for t in inputs {
-        anyhow::ensure!(t.shape == *per, "mismatched input shapes in batch");
+        anyhow::ensure!(
+            t.shape.len() == per.len() && t.shape[0] == 1,
+            "stack_batch expects same-rank [1, ...] inputs"
+        );
+        uniform &= t.shape == *per;
+        for (s, d) in sup.iter_mut().zip(&t.shape) {
+            *s = (*s).max(*d);
+        }
+    }
+    if !uniform {
+        let row_len: usize = sup.iter().skip(1).product();
+        let mut shape = sup.clone();
+        shape[0] = batch;
+        let mut data =
+            crate::util::pool::BufferPool::global().take(batch * row_len);
+        data.resize(batch * row_len, 0.0);
+        let mut copied = 0usize;
+        for (i, t) in inputs.iter().enumerate() {
+            embed_block(
+                t.data(),
+                &t.shape[1..],
+                &mut data[i * row_len..(i + 1) * row_len],
+                &sup[1..],
+            );
+            copied += t.data().len();
+        }
+        crate::metrics::data_plane::count_copy((copied * 4) as u64);
+        return Tensor::new(shape, data);
     }
     let row_len: usize = per.iter().skip(1).product();
     let mut shape = per.clone();
@@ -99,6 +134,84 @@ pub fn stack_batch(inputs: &[&Tensor], batch: usize) -> Result<Tensor> {
     crate::metrics::data_plane::count_copy((data.len() * 4) as u64);
     data.resize(batch * row_len, 0.0);
     Tensor::new(shape, data)
+}
+
+/// Copy a dense block of shape `src_dims` into the origin corner of a
+/// dense block of shape `dst_dims` (same rank, `src <= dst` per dim),
+/// keeping every trailing destination stride — the layout [`crop_row`]
+/// inverts exactly.
+fn embed_block(
+    src: &[f32],
+    src_dims: &[usize],
+    dst: &mut [f32],
+    dst_dims: &[usize],
+) {
+    if src_dims == dst_dims {
+        dst[..src.len()].copy_from_slice(src);
+        return;
+    }
+    let ss: usize = src_dims[1..].iter().product();
+    let ds: usize = dst_dims[1..].iter().product();
+    for i in 0..src_dims[0] {
+        embed_block(
+            &src[i * ss..(i + 1) * ss],
+            &src_dims[1..],
+            &mut dst[i * ds..(i + 1) * ds],
+            &dst_dims[1..],
+        );
+    }
+}
+
+/// Inverse of [`embed_block`]: copy the origin block of shape
+/// `dst_dims` back out of a superset block of shape `src_dims`.
+fn extract_block(
+    src: &[f32],
+    src_dims: &[usize],
+    dst: &mut [f32],
+    dst_dims: &[usize],
+) {
+    if src_dims == dst_dims {
+        dst.copy_from_slice(&src[..dst.len()]);
+        return;
+    }
+    let ss: usize = src_dims[1..].iter().product();
+    let ds: usize = dst_dims[1..].iter().product();
+    for i in 0..dst_dims[0] {
+        extract_block(
+            &src[i * ss..(i + 1) * ss],
+            &src_dims[1..],
+            &mut dst[i * ds..(i + 1) * ds],
+            &dst_dims[1..],
+        );
+    }
+}
+
+/// Crop a (possibly superset-padded) `[1, ...]` row back to `shape` —
+/// the exact inverse of [`stack_batch`]'s pad-to-superset path: bit-
+/// identical originals come back out. Zero-copy when the row already
+/// has `shape`; otherwise one stride-aligned copy of the origin block.
+pub fn crop_row(row: &Tensor, shape: &[usize]) -> Result<Tensor> {
+    anyhow::ensure!(
+        shape.len() == row.shape.len()
+            && shape.first() == Some(&1)
+            && row.shape[0] == 1,
+        "crop_row needs same-rank [1, ...] shapes"
+    );
+    anyhow::ensure!(
+        shape.iter().zip(&row.shape).all(|(d, s)| d <= s),
+        "crop shape {shape:?} exceeds row shape {:?}",
+        row.shape
+    );
+    if row.shape == shape {
+        crate::metrics::data_plane::count_view(row.byte_len());
+        return Ok(row.clone());
+    }
+    let n: usize = shape.iter().product();
+    let mut data = crate::util::pool::BufferPool::global().take(n);
+    data.resize(n, 0.0);
+    extract_block(row.data(), &row.shape[1..], &mut data, &shape[1..]);
+    crate::metrics::data_plane::count_copy((n * 4) as u64);
+    Tensor::new(shape.to_vec(), data)
 }
 
 /// Split a `[batch, ...]` output back into the first `n` per-request
@@ -133,11 +246,49 @@ mod tests {
     #[test]
     fn stack_rejects_mismatches() {
         let a = Tensor::new(vec![1, 2], vec![1.0, 2.0]).unwrap();
-        let c = Tensor::new(vec![1, 3], vec![1.0, 2.0, 3.0]).unwrap();
-        assert!(stack_batch(&[&a, &c], 4).is_err());
+        // Rank mismatches still error; size mismatches now pad instead.
+        let r3 = Tensor::new(vec![1, 2, 1], vec![1.0, 2.0]).unwrap();
+        assert!(stack_batch(&[&a, &r3], 4).is_err());
         assert!(stack_batch(&[], 4).is_err());
         let batch2 = Tensor::new(vec![2, 2], vec![0.0; 4]).unwrap();
         assert!(stack_batch(&[&batch2], 4).is_err());
+        assert!(stack_batch(&[&a, &batch2], 4).is_err());
         assert!(split_batch(&batch2, 3).is_err());
+    }
+
+    #[test]
+    fn ragged_stack_pads_to_superset_and_crops_back() {
+        let a = Tensor::new(
+            vec![1, 2, 3],
+            vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+        )
+        .unwrap();
+        let b = Tensor::new(
+            vec![1, 3, 2],
+            vec![-1.0, -2.0, -3.0, -4.0, -5.0, -6.0],
+        )
+        .unwrap();
+        let batch = stack_batch(&[&a, &b], 3).unwrap();
+        assert_eq!(batch.shape, vec![3, 3, 3]);
+        let rows = split_batch(&batch, 2).unwrap();
+        // a's 2x3 block sits at the origin of a zeroed 3x3 row.
+        assert_eq!(
+            rows[0].data(),
+            &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 0.0, 0.0, 0.0][..]
+        );
+        // b's 3x2 block lands stride-aligned: two values per 3-wide row.
+        assert_eq!(
+            rows[1].data(),
+            &[-1.0, -2.0, 0.0, -3.0, -4.0, 0.0, -5.0, -6.0, 0.0][..]
+        );
+        // crop_row is the exact inverse: bit-identical originals.
+        assert_eq!(crop_row(&rows[0], &[1, 2, 3]).unwrap(), a);
+        assert_eq!(crop_row(&rows[1], &[1, 3, 2]).unwrap(), b);
+        // Cropping a row to its own shape is a zero-copy view.
+        let same = crop_row(&rows[0], &[1, 3, 3]).unwrap();
+        assert!(std::sync::Arc::ptr_eq(same.buf(), batch.buf()));
+        // A crop larger than the row, or of a different rank, errors.
+        assert!(crop_row(&rows[0], &[1, 4, 3]).is_err());
+        assert!(crop_row(&rows[0], &[1, 9]).is_err());
     }
 }

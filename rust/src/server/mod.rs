@@ -7,6 +7,15 @@
 //! serve loop to [`single_request`] and [`EdgeServer::golden_check`],
 //! rides the same request-level path). This is the end-to-end
 //! composition the examples and the table benches drive.
+//!
+//! Multi-model co-deployment (ISSUE 9): [`EdgeServer::deploy_model`]
+//! packs additional models onto the *same* cluster — each entry gets
+//! its own manifest, partition plan, deployer, and service, but node
+//! selection goes through the shared scheduler, whose scoring reads
+//! each node's **remaining** memory, so a second model packs around
+//! whatever co-resident deployments already reserved. Healing is
+//! deployment-scoped: a deployment is healed only when it actually
+//! lost a node, so one model's churn never redeploys another.
 
 use std::collections::HashSet;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -96,6 +105,18 @@ struct LearnedWindows {
 impl DistributedService {
     pub fn deployment_nodes(&self) -> Vec<usize> {
         self.deployment.read().unwrap().node_ids()
+    }
+
+    /// Every node hosting *any* replica of the live deployment — the
+    /// set the deployment-scoped heal intersects with the dead set.
+    pub fn all_deployment_nodes(&self) -> HashSet<usize> {
+        self.deployment
+            .read()
+            .unwrap()
+            .replica_node_ids()
+            .into_iter()
+            .flatten()
+            .collect()
     }
 
     fn wants_engine(
@@ -506,6 +527,12 @@ impl InferenceService for DistributedService {
 
 /// Everything a serving run produces, for the table harnesses.
 pub struct ServeReport {
+    /// Which co-deployed model this report covers: `"primary"` for the
+    /// server's own deployment; registry entries report under their
+    /// [`EdgeServer::deploy_model`] name. Together with the per-tenant
+    /// breakdown inside `metrics`, results key by (model, tenant,
+    /// class).
+    pub model: String,
     pub metrics: RunMetrics,
     pub monitor_overhead_pct: f64,
     pub mean_stability: f64,
@@ -587,6 +614,45 @@ impl ChurnCounters {
     }
 }
 
+/// One co-deployed model: its own manifest, partition plan, deployer,
+/// and distributed service, sharing the server's cluster, scheduler,
+/// and monitor with every co-resident entry. Created by
+/// [`EdgeServer::deploy_model`]; placement packs under each node's
+/// memory budget as *already reserved* by earlier deployments, because
+/// the shared scheduler scores nodes on remaining memory.
+pub struct ModelEntry {
+    pub name: String,
+    pub config: AmpConfig,
+    pub manifest: Arc<Manifest>,
+    pub deployer: Arc<ModelDeployer>,
+    service: Arc<DistributedService>,
+    plan: Mutex<Plan>,
+}
+
+impl ModelEntry {
+    pub fn service(&self) -> Arc<DistributedService> {
+        Arc::clone(&self.service)
+    }
+
+    /// Current partition plan (clone; plans are small).
+    pub fn plan(&self) -> Plan {
+        self.plan.lock().unwrap().clone()
+    }
+
+    /// Every node hosting any replica of this model's live deployment.
+    pub fn node_set(&self) -> HashSet<usize> {
+        self.service.all_deployment_nodes()
+    }
+
+    /// A fresh request-level ingress over this model, with the per-
+    /// tenant WFQ weights from its own config. Co-deployed models do
+    /// not share the server's result cache — a cache hit for model A
+    /// must never answer model B.
+    pub fn handle(&self) -> ServiceHandle {
+        ServiceHandle::new(self.service(), self.config.ingress_config(), None)
+    }
+}
+
 /// The leader.
 pub struct EdgeServer {
     pub config: AmpConfig,
@@ -599,6 +665,9 @@ pub struct EdgeServer {
     pub cache: Option<Arc<ResultCache>>,
     service: Arc<DistributedService>,
     plan: std::sync::Mutex<Plan>,
+    /// Named co-deployed models packed onto this server's cluster
+    /// alongside the primary deployment (ISSUE 9).
+    models: crate::tenancy::ModelRegistry<ModelEntry>,
     /// Churn counters shared with the heal watchdog thread.
     churn: Arc<ChurnCounters>,
     /// Lazily-built long-lived ingress for the one-request convenience
@@ -768,6 +837,7 @@ impl EdgeServer {
             cache,
             service,
             plan: std::sync::Mutex::new(plan),
+            models: crate::tenancy::ModelRegistry::new(),
             churn: Arc::new(ChurnCounters::default()),
             one_shot: std::sync::OnceLock::new(),
         })
@@ -780,6 +850,141 @@ impl EdgeServer {
 
     pub fn service(&self) -> Arc<DistributedService> {
         Arc::clone(&self.service)
+    }
+
+    /// Co-deploy another model onto this server's cluster under `name`
+    /// (ISSUE 9). The entry gets its own manifest, plan, deployer, and
+    /// engine, but placement runs through the **shared** scheduler —
+    /// its scoring reads each node's remaining memory, so the new
+    /// model's stages pack around whatever the primary deployment and
+    /// earlier entries already reserved (the PR-7 `mem_reserve` guard).
+    /// A duplicate name is an error; nothing is leaked on failure.
+    pub fn deploy_model(
+        &self,
+        name: &str,
+        config: AmpConfig,
+    ) -> Result<Arc<ModelEntry>> {
+        config.validate()?;
+        let manifest = Arc::new(
+            Manifest::load(&config.artifacts_dir)
+                .with_context(|| format!("loading manifest for '{name}'"))?,
+        );
+        anyhow::ensure!(
+            manifest.batch_sizes.contains(&config.batch),
+            "model '{name}': batch {} not in manifest batch sizes {:?}",
+            config.batch,
+            manifest.batch_sizes
+        );
+        let online = self.cluster.online_count();
+        let n_parts = config
+            .num_partitions
+            .unwrap_or(online)
+            .min(manifest.blocks.len())
+            .max(1);
+        let plan = partitioner::plan(&manifest, n_parts)?;
+        let replica_counts = if config.replicas.is_off() {
+            vec![1; plan.partitions.len()]
+        } else {
+            let spare = online.saturating_sub(plan.partitions.len());
+            let costs: Vec<f64> =
+                plan.partitions.iter().map(|p| p.cost as f64).collect();
+            partitioner::replica_counts(
+                &costs,
+                config.replicas.extra_budget(spare),
+            )
+        };
+        let mut deployer = ModelDeployer::new(Arc::clone(&manifest));
+        deployer.use_model_cache = config.model_cache;
+        let deployer = Arc::new(deployer);
+        let deployment = Arc::new(deployer.deploy_replicated(
+            &plan,
+            &self.cluster,
+            &self.scheduler,
+            config.batch,
+            &replica_counts,
+        )?);
+        let pipeline_depth = config.pipeline_depth.max(1);
+        let adaptive = config.adaptive_depth.then(|| {
+            engine::AdaptiveDepthConfig {
+                max_depth: config.max_pipeline_depth.max(pipeline_depth),
+                ..engine::AdaptiveDepthConfig::default()
+            }
+        });
+        // Co-deployed entries run in-process; the wire transport stays
+        // the primary deployment's concern.
+        let pipeline_engine = match DistributedService::build_engine(
+            &deployment,
+            pipeline_depth,
+            adaptive,
+            config.per_stage_windows,
+            config.coalesce,
+            None,
+            config.heal,
+            None,
+        ) {
+            Ok(e) => e,
+            Err(e) => {
+                deployer.undeploy(&deployment);
+                return Err(e);
+            }
+        };
+        let service = Arc::new(DistributedService {
+            deployment: RwLock::new(deployment),
+            scheduler: Arc::clone(&self.scheduler),
+            pipeline_depth,
+            adaptive,
+            per_stage_windows: config.per_stage_windows,
+            coalesce: config.coalesce,
+            wire: None,
+            engine: Mutex::new(pipeline_engine),
+            stage_counters: Arc::new(crate::metrics::StageCounterSet::new()),
+            heal: config.heal,
+            replay_base: ReplayBase::default(),
+        });
+        let entry = Arc::new(ModelEntry {
+            name: name.to_string(),
+            config,
+            manifest,
+            deployer,
+            service,
+            plan: Mutex::new(plan),
+        });
+        if let Err(e) = self.models.insert(name, Arc::clone(&entry)) {
+            // Duplicate name: release everything just deployed.
+            let dep = Arc::clone(&*entry.service.deployment.read().unwrap());
+            entry.deployer.undeploy(&dep);
+            return Err(e);
+        }
+        Ok(entry)
+    }
+
+    /// Remove the model deployed under `name`, releasing its node
+    /// memory and executor blocks. In-flight requests holding the
+    /// entry's `Arc` drain against it first — the registry drops its
+    /// reference, not the deployment.
+    pub fn undeploy_model(&self, name: &str) -> Result<()> {
+        let entry = self.models.remove(name).ok_or_else(|| {
+            anyhow::anyhow!("no model deployed under '{name}'")
+        })?;
+        let dep = Arc::clone(&*entry.service.deployment.read().unwrap());
+        entry.deployer.undeploy(&dep);
+        Ok(())
+    }
+
+    /// Registry entry for `name`, if deployed.
+    pub fn model(&self, name: &str) -> Option<Arc<ModelEntry>> {
+        self.models.get(name)
+    }
+
+    /// A fresh serving ingress over the model deployed under `name`.
+    pub fn model_handle(&self, name: &str) -> Option<ServiceHandle> {
+        self.models.get(name).map(|e| e.handle())
+    }
+
+    /// Names of every co-deployed model (the primary deployment is not
+    /// a registry entry).
+    pub fn model_names(&self) -> Vec<String> {
+        self.models.names()
     }
 
     /// Input tensor shape for a single request (batch dim = 1).
@@ -850,6 +1055,7 @@ impl EdgeServer {
             };
         let snapshot = self.monitor.latest();
         Ok(ServeReport {
+            model: "primary".to_string(),
             metrics,
             monitor_overhead_pct: self.monitor.overhead_cpu_pct(),
             mean_stability: snapshot
@@ -1036,6 +1242,112 @@ impl EdgeServer {
         }
     }
 
+    /// Deployment-scoped heal across the co-deployment registry: walk
+    /// the models and heal only those that actually lost a replica to
+    /// `dead`, so one model's churn never redeploys a co-resident
+    /// model. Counters land in the same [`EdgeServer::churn_stats`].
+    pub fn heal_models(&self, dead: &HashSet<usize>) {
+        for (name, entry) in self.models.entries() {
+            if entry.node_set().is_disjoint(dead) {
+                continue;
+            }
+            match self.heal_model(&entry, dead) {
+                Ok(action) => crate::log_info!(
+                    "heal",
+                    "model '{name}': {action:?} after losing {dead:?}"
+                ),
+                Err(e) => crate::log_warn!(
+                    "heal",
+                    "model '{name}' heal failed: {e:#}"
+                ),
+            }
+        }
+    }
+
+    /// The heal ladder for one registry entry: replica re-placement
+    /// first, full re-partition over the surviving topology as the
+    /// fallback — the per-model twin of [`EdgeServer::heal`].
+    fn heal_model(
+        &self,
+        entry: &ModelEntry,
+        dead: &HashSet<usize>,
+    ) -> Result<HealAction> {
+        let old = Arc::clone(&*entry.service.deployment.read().unwrap());
+        match entry.deployer.heal_replace(
+            &old,
+            dead,
+            &self.cluster,
+            &self.scheduler,
+        ) {
+            Ok(new_dep) => {
+                let new_dep = Arc::new(new_dep);
+                let old = match entry
+                    .service
+                    .replace_deployment(Arc::clone(&new_dep))
+                {
+                    Ok(old) => old,
+                    Err(e) => {
+                        entry.deployer.undeploy(&new_dep);
+                        return Err(e);
+                    }
+                };
+                entry.deployer.undeploy(&old);
+                self.churn.heals_replaced.fetch_add(1, Ordering::Relaxed);
+                Ok(HealAction::Replaced)
+            }
+            Err(e) => {
+                crate::log_info!(
+                    "heal",
+                    "model '{}': replica re-placement not possible \
+                     ({e:#}); falling back to re-partition",
+                    entry.name
+                );
+                let online = self.cluster.online_count();
+                let n = online.min(entry.manifest.blocks.len()).max(1);
+                let plan = partitioner::plan(&entry.manifest, n)?;
+                let replica_counts = if entry.config.replicas.is_off() {
+                    vec![1; plan.partitions.len()]
+                } else {
+                    let spare =
+                        online.saturating_sub(plan.partitions.len());
+                    let costs: Vec<f64> = plan
+                        .partitions
+                        .iter()
+                        .map(|p| p.cost as f64)
+                        .collect();
+                    partitioner::replica_counts(
+                        &costs,
+                        entry.config.replicas.extra_budget(spare),
+                    )
+                };
+                let new_dep = Arc::new(entry.deployer.deploy_replicated(
+                    &plan,
+                    &self.cluster,
+                    &self.scheduler,
+                    entry.config.batch,
+                    &replica_counts,
+                )?);
+                let old = match entry
+                    .service
+                    .replace_deployment(Arc::clone(&new_dep))
+                {
+                    Ok(old) => old,
+                    Err(e) => {
+                        entry.deployer.undeploy(&new_dep);
+                        return Err(e);
+                    }
+                };
+                entry.deployer.undeploy(&old);
+                let sizes = plan.layer_sizes();
+                *entry.plan.lock().unwrap() = plan;
+                self.churn
+                    .heals_repartitioned
+                    .fetch_add(1, Ordering::Relaxed);
+                Ok(HealAction::Repartitioned(sizes))
+            }
+        }
+    }
+
     /// Spawn the self-healing watchdog: drains the monitor's liveness
     /// transitions every `interval` and walks the heal ladder for each
     /// batch of deaths ([`EdgeServer::heal`]); a `Returned` node is
@@ -1090,23 +1402,35 @@ impl EdgeServer {
                     // a heal that failed last tick retries here with the
                     // full dead set.
                     died.extend(server.monitor.dead_nodes());
-                    match server.heal(&died) {
-                        Ok(HealAction::Replaced) => crate::log_info!(
-                            "heal",
-                            "replaced dead replicas of {died:?} in place"
-                        ),
-                        Ok(HealAction::Repartitioned(sizes)) => {
-                            crate::log_info!(
+                    // Deployment-scoped (ISSUE 9): the primary heals
+                    // only when it actually lost a replica — a death
+                    // that hit only a co-deployed model (or a spare)
+                    // must not redeploy it.
+                    let primary_hit = !server
+                        .service
+                        .all_deployment_nodes()
+                        .is_disjoint(&died);
+                    if primary_hit {
+                        match server.heal(&died) {
+                            Ok(HealAction::Replaced) => crate::log_info!(
                                 "heal",
-                                "re-partitioned around {died:?}; \
-                                 new plan {sizes:?}"
-                            )
+                                "replaced dead replicas of {died:?} \
+                                 in place"
+                            ),
+                            Ok(HealAction::Repartitioned(sizes)) => {
+                                crate::log_info!(
+                                    "heal",
+                                    "re-partitioned around {died:?}; \
+                                     new plan {sizes:?}"
+                                )
+                            }
+                            Err(e) => crate::log_warn!(
+                                "heal",
+                                "failed after losing {died:?}: {e:#}"
+                            ),
                         }
-                        Err(e) => crate::log_warn!(
-                            "heal",
-                            "failed after losing {died:?}: {e:#}"
-                        ),
                     }
+                    server.heal_models(&died);
                 }
             })
             .expect("spawn heal watchdog");

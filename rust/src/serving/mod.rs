@@ -32,9 +32,18 @@
 //! `padded_rows`, submit through `submit_batch_meta` — so default-class
 //! no-deadline traffic produces **bit-identical outputs** to the
 //! pre-redesign path (pinned by equivalence tests). Priority changes
-//! only *order*: lanes are strict-priority, FIFO within a class, and a
-//! worker slot is acquired *before* the next batch is popped so the
-//! priority decision happens as late as possible.
+//! only *order*: lanes are strict-priority, and a worker slot is
+//! acquired *before* the next batch is popped so the priority decision
+//! happens as late as possible.
+//!
+//! **Multi-tenant WFQ** (ISSUE 9): when [`IngressConfig`] carries two
+//! or more tenant weights, each priority lane holds one FIFO per
+//! tenant and dequeues across them deficit-weighted round-robin
+//! ([`crate::tenancy::DrrScheduler`]) — a flooding tenant is capped
+//! near its weight share of the lane instead of starving everyone
+//! queued behind it. With zero or one tenants configured each lane is a
+//! single plain FIFO and the dequeue path never consults the DRR state:
+//! within-class order is bit-identical to the single-tenant ingress.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -208,11 +217,20 @@ pub struct RequestBuilder<'a> {
     priority: Priority,
     deadline: Option<Duration>,
     tag: Option<String>,
+    tenant: usize,
 }
 
 impl RequestBuilder<'_> {
     pub fn priority(mut self, p: Priority) -> Self {
         self.priority = p;
+        self
+    }
+
+    /// The submitting tenant (index into the configured weight table;
+    /// clamps to the last tenant). Default 0 — the only tenant that
+    /// exists when no weight table is configured.
+    pub fn tenant(mut self, tenant: usize) -> Self {
+        self.tenant = tenant;
         self
     }
 
@@ -248,13 +266,14 @@ impl RequestBuilder<'_> {
     pub fn submit(self) -> Result<ResponseHandle> {
         let cfg = &self.handle.cfg;
         let class = (self.priority.class()).min(cfg.classes.max(1) - 1);
+        let tenant = self.tenant.min(cfg.tenant_weights.len().max(1) - 1);
         let deadline = self
             .deadline
             .or(cfg.default_deadline)
             .map(|d| Instant::now() + d);
         let (reply, rx) = channel();
         if let Some(d) = deadline {
-            if self.handle.shed_doomed(&self.input, class, d) {
+            if self.handle.shed_doomed(&self.input, class, tenant, d) {
                 let _ = reply.send(Outcome::Shed(ShedReason::PredictedMiss));
                 return Ok(ResponseHandle { rx });
             }
@@ -262,6 +281,7 @@ impl RequestBuilder<'_> {
         let req = QueuedRequest {
             input: self.input,
             class,
+            tenant,
             deadline,
             tag: self.tag,
             enqueued: Instant::now(),
@@ -296,6 +316,10 @@ pub struct IngressConfig {
     /// Deadline applied to requests that don't set their own (CLI
     /// `--deadline-ms`).
     pub default_deadline: Option<Duration>,
+    /// Tenant WFQ weights (tenant id = index). Empty or a single entry
+    /// means one implicit tenant and plain FIFO within each class — the
+    /// single-tenant fast path.
+    pub tenant_weights: Vec<f64>,
 }
 
 impl Default for IngressConfig {
@@ -306,6 +330,7 @@ impl Default for IngressConfig {
             workers: 4,
             classes: 3,
             default_deadline: None,
+            tenant_weights: Vec::new(),
         }
     }
 }
@@ -313,6 +338,7 @@ impl Default for IngressConfig {
 struct QueuedRequest {
     input: Tensor,
     class: usize,
+    tenant: usize,
     deadline: Option<Instant>,
     #[allow(dead_code)]
     tag: Option<String>,
@@ -320,9 +346,55 @@ struct QueuedRequest {
     reply: Sender<Outcome>,
 }
 
+/// One priority class's queue: a FIFO per tenant plus the DRR state
+/// that arbitrates across them. With a single tenant the DRR is never
+/// consulted — the lane *is* a plain FIFO, structurally identical to
+/// the pre-multitenant ingress.
+struct Lane {
+    queues: Vec<std::collections::VecDeque<QueuedRequest>>,
+    drr: crate::tenancy::DrrScheduler,
+}
+
+impl Lane {
+    fn new(tenant_weights: &[f64]) -> Lane {
+        let weights: &[f64] = if tenant_weights.len() <= 1 {
+            &[1.0]
+        } else {
+            tenant_weights
+        };
+        Lane {
+            queues: weights
+                .iter()
+                .map(|_| std::collections::VecDeque::new())
+                .collect(),
+            drr: crate::tenancy::DrrScheduler::new(weights),
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.queues.iter().map(|q| q.len()).sum()
+    }
+
+    fn push(&mut self, req: QueuedRequest) {
+        let t = req.tenant.min(self.queues.len() - 1);
+        self.queues[t].push_back(req);
+    }
+
+    fn pop(&mut self) -> Option<QueuedRequest> {
+        let Lane { queues, drr } = self;
+        if queues.len() == 1 {
+            // Single tenant: plain FIFO, no DRR state touched.
+            return queues[0].pop_front();
+        }
+        let t = drr.pick(|t| queues[t].len())?;
+        queues[t].pop_front()
+    }
+}
+
 struct QueueState {
-    /// One FIFO lane per priority class; dequeue scans lanes in order.
-    lanes: Vec<std::collections::VecDeque<QueuedRequest>>,
+    /// One lane per priority class; dequeue scans lanes in order
+    /// (strict priority) and WFQs across tenants within a lane.
+    lanes: Vec<Lane>,
     len: usize,
     closed: bool,
 }
@@ -350,11 +422,15 @@ pub struct IngressQueue {
 }
 
 impl IngressQueue {
-    fn new(capacity: usize, classes: usize) -> IngressQueue {
+    fn new(
+        capacity: usize,
+        classes: usize,
+        tenant_weights: &[f64],
+    ) -> IngressQueue {
         IngressQueue {
             state: Mutex::new(QueueState {
                 lanes: (0..classes.max(1))
-                    .map(|_| std::collections::VecDeque::new())
+                    .map(|_| Lane::new(tenant_weights))
                     .collect(),
                 len: 0,
                 closed: false,
@@ -378,7 +454,7 @@ impl IngressQueue {
             }
             if st.len < self.capacity {
                 let lane = req.class.min(st.lanes.len() - 1);
-                st.lanes[lane].push_back(req);
+                st.lanes[lane].push(req);
                 st.len += 1;
                 self.arrived.notify_one();
                 return true;
@@ -389,7 +465,7 @@ impl IngressQueue {
 
     fn take(st: &mut QueueState) -> Option<QueuedRequest> {
         for lane in st.lanes.iter_mut() {
-            if let Some(r) = lane.pop_front() {
+            if let Some(r) = lane.pop() {
                 st.len -= 1;
                 return Some(r);
             }
@@ -555,6 +631,7 @@ impl ServiceHandle {
         let queue = Arc::new(IngressQueue::new(
             cfg.capacity,
             cfg.classes.max(1),
+            &cfg.tenant_weights,
         ));
         let metrics = Arc::new(MetricsCollector::new());
         metrics.start_run();
@@ -588,7 +665,13 @@ impl ServiceHandle {
     /// met given the warm service-time estimate scaled by the batch
     /// waves of same-or-higher-class traffic already queued, and the
     /// answer is not already cached. Records the shed when it fires.
-    fn shed_doomed(&self, input: &Tensor, class: usize, d: Instant) -> bool {
+    fn shed_doomed(
+        &self,
+        input: &Tensor,
+        class: usize,
+        tenant: usize,
+        d: Instant,
+    ) -> bool {
         let Some(est) = self.queue.estimate_ms() else {
             return false; // cold estimate never sheds
         };
@@ -611,7 +694,7 @@ impl ServiceHandle {
             return false;
         }
         self.queue.shed_predicted.fetch_add(1, Ordering::Relaxed);
-        self.metrics.record_shed(class, false);
+        self.metrics.record_shed_tenant(tenant, class, false);
         true
     }
 
@@ -623,6 +706,7 @@ impl ServiceHandle {
             priority: Priority::default(),
             deadline: None,
             tag: None,
+            tenant: crate::tenancy::DEFAULT_TENANT,
         }
     }
 
@@ -846,7 +930,7 @@ fn admit_or_shed(
         let now = Instant::now();
         if now >= d {
             queue.shed_expired.fetch_add(1, Ordering::Relaxed);
-            metrics.record_shed(req.class, true);
+            metrics.record_shed_tenant(req.tenant, req.class, true);
             let _ = req.reply.send(Outcome::Shed(ShedReason::DeadlineExpired));
             return;
         }
@@ -859,7 +943,7 @@ fn admit_or_shed(
             };
             if slack_ms < est && !cached() {
                 queue.shed_predicted.fetch_add(1, Ordering::Relaxed);
-                metrics.record_shed(req.class, false);
+                metrics.record_shed_tenant(req.tenant, req.class, false);
                 let _ =
                     req.reply.send(Outcome::Shed(ShedReason::PredictedMiss));
                 return;
@@ -902,8 +986,9 @@ fn process_batch(
                         let sched =
                             (dispatched - r.enqueued).as_secs_f64() * 1e3;
                         let met = deadline_met(r.deadline);
-                        metrics.record_request_class(
-                            r.class, latency, 0.0, 0.0, sched, true, met,
+                        metrics.record_request_tenant(
+                            r.tenant, r.class, latency, 0.0, 0.0, sched,
+                            true, met,
                         );
                         // Zero-copy: the response wraps the cached row's
                         // shared buffer directly.
@@ -1024,8 +1109,9 @@ fn process_batch(
                 let latency = r.enqueued.elapsed().as_secs_f64() * 1e3;
                 let sched = (dispatched - r.enqueued).as_secs_f64() * 1e3;
                 let met = deadline_met(r.deadline);
-                metrics.record_request_class(
-                    r.class, latency, compute_ms, comm_ms, sched, false, met,
+                metrics.record_request_tenant(
+                    r.tenant, r.class, latency, compute_ms, comm_ms, sched,
+                    false, met,
                 );
                 if let Some(c) = cache {
                     // The cache's one deliberate copy: a cached row owns
@@ -1066,7 +1152,7 @@ fn process_batch(
                 for &i in &misses {
                     let r = &batch[i];
                     queue.shed_expired.fetch_add(1, Ordering::Relaxed);
-                    metrics.record_shed(r.class, true);
+                    metrics.record_shed_tenant(r.tenant, r.class, true);
                     let _ = r
                         .reply
                         .send(Outcome::Shed(ShedReason::DeadlineExpired));
@@ -1091,7 +1177,7 @@ fn fail_requests(
     let msg = format!("{error:#}");
     for &i in misses {
         let r = &batch[i];
-        metrics.record_failure_class(r.class);
+        metrics.record_failure_tenant(r.tenant, r.class);
         let _ = r
             .reply
             .send(Outcome::Failed(anyhow::anyhow!("{msg}")));
@@ -1606,6 +1692,7 @@ mod tests {
         let rejected = QueuedRequest {
             input: req(1.0),
             class: 0,
+            tenant: 0,
             deadline: None,
             tag: None,
             enqueued: Instant::now(),
@@ -1653,6 +1740,97 @@ mod tests {
         assert_eq!(ok.wait_output().unwrap().data(), &[2.0; 4][..]);
         let m = h.finish();
         assert_eq!(m.completed, 1);
+    }
+
+    fn queued(v: f32, class: usize, tenant: usize) -> QueuedRequest {
+        let (reply, _rx) = channel();
+        QueuedRequest {
+            input: req(v),
+            class,
+            tenant,
+            deadline: None,
+            tag: None,
+            enqueued: Instant::now(),
+            reply,
+        }
+    }
+
+    #[test]
+    fn wfq_lane_interleaves_tenants_within_a_class() {
+        // Equal weights, both tenants backlogged in one class: the lane
+        // must alternate between them instead of draining tenant 0
+        // first (which plain FIFO arrival order would do here).
+        let q = IngressQueue::new(64, 2, &[1.0, 1.0]);
+        for i in 0..4 {
+            assert!(q.push(queued(i as f32, 0, 0)));
+        }
+        for i in 0..4 {
+            assert!(q.push(queued(10.0 + i as f32, 0, 1)));
+        }
+        let mut tenants = Vec::new();
+        let mut st = q.state.lock().unwrap();
+        while let Some(r) = IngressQueue::take(&mut st) {
+            tenants.push(r.tenant);
+        }
+        drop(st);
+        assert_eq!(tenants.len(), 8);
+        assert_eq!(
+            tenants,
+            vec![0, 1, 0, 1, 0, 1, 0, 1],
+            "equal-weight DRR must alternate tenants"
+        );
+        // Strict priority still wins across classes: a class-0 arrival
+        // from any tenant jumps a class-1 backlog.
+        let q = IngressQueue::new(64, 2, &[1.0, 1.0]);
+        assert!(q.push(queued(1.0, 1, 0)));
+        assert!(q.push(queued(2.0, 0, 1)));
+        let mut st = q.state.lock().unwrap();
+        assert_eq!(IngressQueue::take(&mut st).unwrap().class, 0);
+        assert_eq!(IngressQueue::take(&mut st).unwrap().class, 1);
+    }
+
+    #[test]
+    fn single_tenant_lane_is_plain_fifo() {
+        // No weight table: one queue per lane, arrival order preserved
+        // exactly (the PR-8 degeneracy guarantee, structurally).
+        let q = IngressQueue::new(64, 1, &[]);
+        for i in 0..6 {
+            assert!(q.push(queued(i as f32, 0, 0)));
+        }
+        let mut st = q.state.lock().unwrap();
+        assert_eq!(st.lanes[0].queues.len(), 1);
+        let mut order = Vec::new();
+        while let Some(r) = IngressQueue::take(&mut st) {
+            order.push(r.input.data()[0]);
+        }
+        assert_eq!(order, vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn per_tenant_metrics_are_recorded() {
+        let h = ServiceHandle::new(
+            Arc::new(Doubler { batch: 2 }),
+            IngressConfig {
+                tenant_weights: vec![2.0, 1.0],
+                ..IngressConfig::default()
+            },
+            None,
+        );
+        let a = h.request(req(1.0)).tenant(0).submit().unwrap();
+        let b = h.request(req(2.0)).tenant(1).submit().unwrap();
+        // Out-of-range tenants clamp to the last configured one.
+        let c = h.request(req(3.0)).tenant(99).submit().unwrap();
+        for r in [a, b, c] {
+            r.wait_output().unwrap();
+        }
+        let m = h.finish();
+        assert_eq!(m.completed, 3);
+        assert_eq!(m.tenant_completed(0), 1);
+        assert_eq!(m.tenant_completed(1), 2);
+        let t1 = m
+            .tenant_class(1, Priority::NORMAL.class())
+            .expect("tenant 1 metrics");
+        assert_eq!(t1.completed, 2);
     }
 
     #[test]

@@ -1,0 +1,337 @@
+//! Multi-tenant serving primitives (ISSUE 9).
+//!
+//! Two small, independently testable pieces the serving stack composes:
+//!
+//! * [`DrrScheduler`] — deficit-weighted round-robin across tenant
+//!   queues. The ingress keeps strict-priority dequeue across classes
+//!   and runs DRR across tenants *within* a class, so a flooding tenant
+//!   is capped near its configured weight share instead of starving
+//!   everyone behind it. A zero-weight tenant still gets a small quantum
+//!   floor ([`MIN_QUANTUM`]) — deprioritized, never starved.
+//! * [`ModelRegistry`] — the named co-deployment table behind
+//!   `EdgeServer::deploy_model` / `undeploy_model`: models packed onto
+//!   one shared cluster, each entry healed and rebalanced independently.
+//!
+//! Degeneracy guarantee: with a single tenant (or none configured) the
+//! ingress bypasses DRR entirely — within-class order is the plain FIFO
+//! the PR-8 path used, bit for bit.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+/// The tenant every request belongs to unless it says otherwise — also
+/// the only tenant that exists when no weight table is configured.
+pub const DEFAULT_TENANT: usize = 0;
+
+/// Quantum floor as a fraction of the heaviest tenant's quantum: a
+/// zero-weight tenant accrues at least this much credit per round, so
+/// it is served at most ~`1/MIN_QUANTUM` rounds apart while backlogged
+/// (deprioritized, never starved).
+pub const MIN_QUANTUM: f64 = 0.05;
+
+/// Named tenants and their WFQ weights — the config-level table the
+/// CLI resolves `name=weight` pairs into and the ingress consumes as a
+/// bare weight vector (tenant id = index).
+#[derive(Debug, Clone, Default)]
+pub struct TenantTable {
+    names: Vec<String>,
+    weights: Vec<f64>,
+}
+
+impl TenantTable {
+    pub fn new(names: Vec<String>, weights: Vec<f64>) -> Result<TenantTable> {
+        anyhow::ensure!(
+            names.len() == weights.len(),
+            "tenant table needs one weight per name ({} != {})",
+            names.len(),
+            weights.len()
+        );
+        Ok(TenantTable { names, weights })
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    /// True when WFQ would change nothing: zero or one tenant. The
+    /// ingress uses this to stay on the plain-FIFO fast path.
+    pub fn is_trivial(&self) -> bool {
+        self.names.len() <= 1
+    }
+
+    /// Tenant id for `name` (ids are table indices).
+    pub fn resolve(&self, name: &str) -> Option<usize> {
+        self.names.iter().position(|n| n == name)
+    }
+
+    pub fn name(&self, tenant: usize) -> Option<&str> {
+        self.names.get(tenant).map(String::as_str)
+    }
+
+    pub fn weight(&self, tenant: usize) -> f64 {
+        self.weights.get(tenant).copied().unwrap_or(0.0)
+    }
+
+    pub fn weights(&self) -> &[f64] {
+        &self.weights
+    }
+}
+
+/// Deficit-weighted round-robin picker over `n` tenant queues.
+///
+/// Each tenant's quantum is its weight normalized by the heaviest
+/// weight, floored at [`MIN_QUANTUM`]. A round visits tenants in index
+/// order; a visited tenant accrues its quantum and is served once per
+/// whole unit of deficit. Serving does not advance the cursor, so a
+/// tenant with accumulated deficit may take consecutive slots (bounded
+/// by `1 + quantum` — DRR's usual per-round burst). A tenant whose
+/// queue has drained loses its deficit: credit never accumulates while
+/// there is nothing to spend it on, which is what keeps long-idle
+/// tenants from bursting unboundedly when they return.
+#[derive(Debug)]
+pub struct DrrScheduler {
+    quanta: Vec<f64>,
+    deficit: Vec<f64>,
+    cursor: usize,
+    /// Whether the tenant at `cursor` received its quantum for the
+    /// current visit (a visit may span several `pick` calls while the
+    /// tenant spends banked deficit; it must be refilled exactly once).
+    refilled: bool,
+}
+
+impl DrrScheduler {
+    pub fn new(weights: &[f64]) -> DrrScheduler {
+        let max = weights.iter().cloned().fold(0.0_f64, f64::max);
+        let quanta: Vec<f64> = if max > 0.0 && max.is_finite() {
+            weights.iter().map(|w| (w / max).max(MIN_QUANTUM)).collect()
+        } else {
+            // All-zero (or empty) weights: plain round-robin.
+            vec![1.0; weights.len()]
+        };
+        DrrScheduler {
+            deficit: vec![0.0; quanta.len()],
+            quanta,
+            cursor: 0,
+            refilled: false,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.quanta.len()
+    }
+
+    fn advance(&mut self) {
+        self.cursor = (self.cursor + 1) % self.quanta.len();
+        self.refilled = false;
+    }
+
+    /// Pick the next tenant to serve, given each tenant's current queue
+    /// length. Returns `None` only when every queue is empty. Bounded:
+    /// with the [`MIN_QUANTUM`] floor every backlogged tenant crosses a
+    /// whole unit of deficit within `ceil(1 / MIN_QUANTUM)` rounds.
+    pub fn pick(&mut self, len_of: impl Fn(usize) -> usize) -> Option<usize> {
+        let n = self.quanta.len();
+        if n == 0 || (0..n).all(|t| len_of(t) == 0) {
+            return None;
+        }
+        let rounds = (1.0 / MIN_QUANTUM).ceil() as usize + 1;
+        for _ in 0..n * rounds {
+            let t = self.cursor;
+            if len_of(t) == 0 {
+                self.deficit[t] = 0.0;
+                self.advance();
+                continue;
+            }
+            if !self.refilled {
+                self.deficit[t] += self.quanta[t];
+                self.refilled = true;
+            }
+            if self.deficit[t] >= 1.0 {
+                self.deficit[t] -= 1.0;
+                return Some(t);
+            }
+            self.advance();
+        }
+        // Unreachable with the floor in place; serve somebody anyway.
+        (0..n).find(|&t| len_of(t) > 0)
+    }
+}
+
+/// Named co-deployment registry: the table of models currently sharing
+/// one cluster. Thread-safe; entries are `Arc`s so a deployment stays
+/// usable while being removed from the table (in-flight requests drain
+/// against the entry, not the registry).
+pub struct ModelRegistry<T> {
+    entries: Mutex<BTreeMap<String, Arc<T>>>,
+}
+
+impl<T> Default for ModelRegistry<T> {
+    fn default() -> Self {
+        ModelRegistry { entries: Mutex::new(BTreeMap::new()) }
+    }
+}
+
+impl<T> ModelRegistry<T> {
+    pub fn new() -> ModelRegistry<T> {
+        ModelRegistry::default()
+    }
+
+    /// Register a deployment under `name`. A duplicate name is an error
+    /// — silently replacing a live deployment would leak its node
+    /// memory reservations.
+    pub fn insert(&self, name: &str, entry: Arc<T>) -> Result<()> {
+        let mut map = self.entries.lock().unwrap();
+        anyhow::ensure!(
+            !map.contains_key(name),
+            "model '{name}' is already deployed (undeploy it first)"
+        );
+        map.insert(name.to_string(), entry);
+        Ok(())
+    }
+
+    /// Remove and return the entry for `name` (callers release its
+    /// cluster resources).
+    pub fn remove(&self, name: &str) -> Option<Arc<T>> {
+        self.entries.lock().unwrap().remove(name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<Arc<T>> {
+        self.entries.lock().unwrap().get(name).cloned()
+    }
+
+    /// Snapshot of every (name, entry) pair, name-ordered — the heal
+    /// watchdog walks this without holding the registry lock across
+    /// heals.
+    pub fn entries(&self) -> Vec<(String, Arc<T>)> {
+        self.entries
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), Arc::clone(v)))
+            .collect()
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.entries.lock().unwrap().keys().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.lock().unwrap().is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Serve `total` picks from always-backlogged queues and count per
+    /// tenant.
+    fn shares(weights: &[f64], total: usize) -> Vec<usize> {
+        let mut drr = DrrScheduler::new(weights);
+        let mut counts = vec![0usize; weights.len()];
+        for _ in 0..total {
+            let t = drr.pick(|_| 1).expect("backlogged queues always serve");
+            counts[t] += 1;
+        }
+        counts
+    }
+
+    #[test]
+    fn drr_shares_track_weights() {
+        let counts = shares(&[3.0, 1.0], 400);
+        let share0 = counts[0] as f64 / 400.0;
+        assert!(
+            (share0 - 0.75).abs() < 0.1,
+            "tenant 0 share {share0} far from weight share 0.75"
+        );
+    }
+
+    #[test]
+    fn drr_three_way_shares() {
+        let counts = shares(&[2.0, 1.0, 1.0], 800);
+        for (t, want) in [(0, 0.5), (1, 0.25), (2, 0.25)] {
+            let got = counts[t] as f64 / 800.0;
+            assert!(
+                (got - want).abs() < 0.1,
+                "tenant {t} share {got} far from {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_weight_tenant_never_starves() {
+        let counts = shares(&[1.0, 0.0], 200);
+        assert!(counts[1] >= 1, "zero-weight tenant starved: {counts:?}");
+        // ... but stays near the quantum floor, not an equal share.
+        assert!(
+            counts[1] <= 30,
+            "zero-weight tenant got {} of 200 picks",
+            counts[1]
+        );
+    }
+
+    #[test]
+    fn empty_queues_return_none_and_reset_deficit() {
+        let mut drr = DrrScheduler::new(&[1.0, 1.0]);
+        assert_eq!(drr.pick(|_| 0), None);
+        // A tenant that drained loses its banked credit: serve tenant 0
+        // alone for a while, then bring tenant 1 back — it must not
+        // burst ahead of its weight share.
+        for _ in 0..50 {
+            assert_eq!(drr.pick(|t| usize::from(t == 0)), Some(0));
+        }
+        let mut one = 0;
+        for _ in 0..20 {
+            if drr.pick(|_| 1) == Some(1) {
+                one += 1;
+            }
+        }
+        assert!((8..=12).contains(&one), "equal weights drifted: {one}");
+    }
+
+    #[test]
+    fn single_tenant_is_plain_fifo_order() {
+        let mut drr = DrrScheduler::new(&[1.0]);
+        for _ in 0..10 {
+            assert_eq!(drr.pick(|_| 3), Some(0));
+        }
+    }
+
+    #[test]
+    fn tenant_table_resolves_names() {
+        let t = TenantTable::new(
+            vec!["gold".into(), "free".into()],
+            vec![3.0, 1.0],
+        )
+        .unwrap();
+        assert_eq!(t.resolve("free"), Some(1));
+        assert_eq!(t.resolve("nobody"), None);
+        assert_eq!(t.weight(0), 3.0);
+        assert!(!t.is_trivial());
+        assert!(TenantTable::default().is_trivial());
+        assert!(TenantTable::new(vec!["a".into()], vec![]).is_err());
+    }
+
+    #[test]
+    fn registry_rejects_duplicates_and_removes() {
+        let reg: ModelRegistry<u32> = ModelRegistry::new();
+        reg.insert("m1", Arc::new(1)).unwrap();
+        assert!(reg.insert("m1", Arc::new(2)).is_err());
+        reg.insert("m0", Arc::new(0)).unwrap();
+        assert_eq!(reg.names(), vec!["m0".to_string(), "m1".to_string()]);
+        assert_eq!(*reg.get("m1").unwrap(), 1);
+        assert_eq!(reg.remove("m1").map(|e| *e), Some(1));
+        assert!(reg.get("m1").is_none());
+        assert_eq!(reg.len(), 1);
+    }
+}

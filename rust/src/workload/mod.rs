@@ -56,24 +56,75 @@ pub enum Arrival {
     Closed,
     /// Poisson arrivals with the given mean rate (requests/second).
     Poisson { rate_rps: f64 },
+    /// On-off (MMPP-style) bursts: Poisson at `burst_rps` for `on_ms`,
+    /// then at `base_rps` for `off_ms`, repeating. `base_rps` may be 0
+    /// (silent between bursts). This is the flooding-tenant shape the
+    /// multitenant bench uses to expose scheduler fairness.
+    Bursty {
+        base_rps: f64,
+        burst_rps: f64,
+        on_ms: f64,
+        off_ms: f64,
+    },
+    /// A diurnal rate envelope: Poisson whose rate follows a cosine
+    /// between `peak_rps` (at phase 0) and `trough_rps` (at half
+    /// period) over `period_ms` — a whole "day" compressed into one
+    /// run.
+    Diurnal {
+        peak_rps: f64,
+        trough_rps: f64,
+        period_ms: f64,
+    },
 }
 
-/// Per-request serving context a workload assigns: priority class plus
-/// an optional relative deadline. [`RequestSpec::default`] is plain
-/// default-class no-deadline traffic.
+impl Arrival {
+    /// Instantaneous arrival rate (requests/second) at virtual time
+    /// `t_ms` into the run; `None` for the closed loop. The feeders
+    /// draw one exponential gap per request from this rate, so
+    /// `Poisson` consumes the seeded RNG exactly as it always has.
+    pub fn rate_at(&self, t_ms: f64) -> Option<f64> {
+        match *self {
+            Arrival::Closed => None,
+            Arrival::Poisson { rate_rps } => Some(rate_rps),
+            Arrival::Bursty { base_rps, burst_rps, on_ms, off_ms } => {
+                let period = (on_ms + off_ms).max(1e-9);
+                let phase = t_ms.rem_euclid(period);
+                Some(if phase < on_ms { burst_rps } else { base_rps })
+            }
+            Arrival::Diurnal { peak_rps, trough_rps, period_ms } => {
+                let period = period_ms.max(1e-9);
+                let phase = t_ms.rem_euclid(period) / period;
+                let mid = (peak_rps + trough_rps) / 2.0;
+                let amp = (peak_rps - trough_rps) / 2.0;
+                Some(mid + amp * (phase * std::f64::consts::TAU).cos())
+            }
+        }
+    }
+}
+
+/// Per-request serving context a workload assigns: priority class, the
+/// submitting tenant, plus an optional relative deadline.
+/// [`RequestSpec::default`] is plain default-class tenant-0 no-deadline
+/// traffic.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct RequestSpec {
     pub priority: Priority,
     pub deadline: Option<Duration>,
+    pub tenant: usize,
 }
 
 impl RequestSpec {
     pub fn new(priority: Priority) -> RequestSpec {
-        RequestSpec { priority, deadline: None }
+        RequestSpec { priority, deadline: None, tenant: 0 }
     }
 
     pub fn with_deadline(mut self, d: Duration) -> RequestSpec {
         self.deadline = Some(d);
+        self
+    }
+
+    pub fn with_tenant(mut self, tenant: usize) -> RequestSpec {
+        self.tenant = tenant;
         self
     }
 }
@@ -106,13 +157,21 @@ pub fn feed_with(
 ) -> usize {
     let mut rng = Rng::new(seed);
     let mut sent = 0;
+    // Virtual time drives the time-varying envelopes: it advances by the
+    // drawn gaps, not wall clock, so the process is deterministic under
+    // a seeded RNG even when submission itself blocks on backpressure.
+    let mut t_ms = 0.0;
     for i in 0..n {
-        if let Arrival::Poisson { rate_rps } = arrival {
-            let gap_s = rng.exp(1.0 / rate_rps.max(1e-9));
+        if let Some(rate) = arrival.rate_at(t_ms) {
+            let gap_s = rng.exp(1.0 / rate.max(1e-9));
+            t_ms += gap_s * 1e3;
             std::thread::sleep(Duration::from_secs_f64(gap_s));
         }
         let s = spec(i);
-        let mut req = handle.request(pool.get(i).clone()).priority(s.priority);
+        let mut req = handle
+            .request(pool.get(i).clone())
+            .priority(s.priority)
+            .tenant(s.tenant);
         if let Some(d) = s.deadline {
             req = req.deadline(d);
         }
@@ -188,6 +247,64 @@ mod tests {
         assert_eq!(sent, 5);
         let m = h.finish();
         assert_eq!(m.completed, 5);
+    }
+
+    #[test]
+    fn bursty_and_diurnal_rate_envelopes() {
+        let b = Arrival::Bursty {
+            base_rps: 10.0,
+            burst_rps: 1000.0,
+            on_ms: 50.0,
+            off_ms: 150.0,
+        };
+        assert_eq!(b.rate_at(0.0), Some(1000.0));
+        assert_eq!(b.rate_at(49.0), Some(1000.0));
+        assert_eq!(b.rate_at(60.0), Some(10.0));
+        // Periodic: one full cycle later, back in the burst.
+        assert_eq!(b.rate_at(210.0), Some(1000.0));
+
+        let d = Arrival::Diurnal {
+            peak_rps: 100.0,
+            trough_rps: 20.0,
+            period_ms: 1000.0,
+        };
+        assert!((d.rate_at(0.0).unwrap() - 100.0).abs() < 1e-9);
+        assert!((d.rate_at(500.0).unwrap() - 20.0).abs() < 1e-9);
+        // Quarter period sits at the midpoint of the envelope.
+        assert!((d.rate_at(250.0).unwrap() - 60.0).abs() < 1e-9);
+        assert!((d.rate_at(1000.0).unwrap() - 100.0).abs() < 1e-9);
+
+        // Closed loop has no rate; Poisson's is constant.
+        assert_eq!(Arrival::Closed.rate_at(123.0), None);
+        assert_eq!(
+            Arrival::Poisson { rate_rps: 5.0 }.rate_at(9.9),
+            Some(5.0)
+        );
+    }
+
+    #[test]
+    fn feed_bursty_completes_and_tags_tenants() {
+        let pool = InputPool::new(&[1, 2], 2, 1);
+        let h = handle();
+        let sent = feed_with(
+            &h,
+            &pool,
+            6,
+            Arrival::Bursty {
+                base_rps: 0.0,
+                burst_rps: 2000.0,
+                on_ms: 5.0,
+                off_ms: 0.0,
+            },
+            7,
+            |i| RequestSpec::default().with_tenant(i % 2),
+        );
+        assert_eq!(sent, 6);
+        let m = h.finish();
+        assert_eq!(m.completed, 6);
+        // No weight table on the handle: every request clamps to the
+        // single implicit tenant.
+        assert_eq!(m.tenant_completed(0), 6);
     }
 
     #[test]
