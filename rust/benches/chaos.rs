@@ -1,0 +1,395 @@
+//! Chaos gate + straggler-hedging bench (ISSUE 10).
+//!
+//! Three acceptance gates, all asserted (a regression fails the bench,
+//! not just a number drifting):
+//!
+//! 1. **Degeneracy pin** — a clean wire run (no proxy, no deadline) is
+//!    bit-identical to the in-process chain, same sim makespan.
+//! 2. **Chaos gate** — the same workload through a seeded byte-level
+//!    fault proxy (adversarial fragmentation + random delays on one
+//!    stage's link, execute deadline armed) completes with zero hangs
+//!    and bit-identical outputs: benign chaos must be invisible.
+//! 3. **Hedging gate** — with one replica lane of the bottleneck stage
+//!    turned into a straggler, hedging-on p99 batch latency must be at
+//!    most `HEDGE_P99_BOUND_X` of hedging-off p99, outputs still
+//!    bit-identical to the serial reference.
+//!
+//! Emits `BENCH_chaos.json`. `cargo bench --bench chaos`.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use amp4ec::pipeline::engine::{
+    run_serial, HedgeConfig, PersistentEngine, PersistentEngineConfig,
+    SimStages, StageExec,
+};
+use amp4ec::runtime::Tensor;
+use amp4ec::transport::agent::NodeAgent;
+use amp4ec::transport::chaos::{ChaosProxy, ConnPlans, FaultPlan};
+use amp4ec::transport::WireStages;
+use amp4ec::util::bench::BenchSuite;
+use amp4ec::util::json::Json;
+
+const SHARES: &[f64] = &[1.0, 0.6, 0.4];
+const NOMINAL_MS: f64 = 1.0;
+const COLS: usize = 8;
+const ROWS_PER_BATCH: usize = 5;
+const N_BATCHES: usize = 10;
+const DEPTH: usize = 4;
+/// Hard no-hang gate for the chaotic run's total wall time.
+const CHAOS_WALL_BOUND_MS: f64 = 30_000.0;
+
+/// Hedging workload: the bottleneck stage runs two replicas, one of
+/// which stalls `STRAGGLER_LAG_MS` of wall clock per execution once
+/// armed.
+const HEDGE_SHARES: &[f64] = &[1.0, 0.25, 1.0];
+const STRAGGLER_LAG_MS: u64 = 150;
+const HEDGE_WARMUP_BATCHES: usize = 4;
+const HEDGE_MEASURED_BATCHES: usize = 24;
+/// Stated acceptance bound: hedging-on p99 / hedging-off p99.
+const HEDGE_P99_BOUND_X: f64 = 0.5;
+
+fn batches() -> Vec<Tensor> {
+    (0..N_BATCHES)
+        .map(|b| {
+            let data = (0..ROWS_PER_BATCH * COLS)
+                .map(|i| (i as f32) * 0.0625 - 2.0 + b as f32)
+                .collect();
+            Tensor::new(vec![ROWS_PER_BATCH, COLS], data).unwrap()
+        })
+        .collect()
+}
+
+fn engine_cfg(hedge: Option<HedgeConfig>) -> PersistentEngineConfig {
+    PersistentEngineConfig {
+        micro_batch_rows: 1,
+        initial_depth: DEPTH,
+        adaptive: None,
+        hedge,
+        ..Default::default()
+    }
+}
+
+/// Stream every batch through `engine`; returns (outputs, wall ms,
+/// final sim makespan).
+fn drive(engine: &PersistentEngine, inputs: &[Tensor]) -> (Vec<Tensor>, f64, f64) {
+    let t0 = Instant::now();
+    let handles: Vec<_> = inputs
+        .iter()
+        .map(|b| engine.submit(b).expect("submit"))
+        .collect();
+    let outputs: Vec<Tensor> = handles
+        .into_iter()
+        .map(|h| h.wait().expect("batch").output)
+        .collect();
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    (outputs, wall_ms, engine.makespan_ms())
+}
+
+fn percentile(samples: &[f64], q: f64) -> f64 {
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx]
+}
+
+/// Replica-aware straggler wrapper: once armed, every execution on one
+/// lane stalls for `lag` of wall clock (correct but slow).
+struct LaggyStages {
+    inner: SimStages,
+    lane: (usize, usize),
+    lag: Duration,
+    armed: Arc<AtomicBool>,
+}
+
+impl LaggyStages {
+    fn bottleneck_pair(armed: Arc<AtomicBool>) -> LaggyStages {
+        LaggyStages {
+            inner: SimStages::with_replicas(HEDGE_SHARES, NOMINAL_MS, &[1, 2, 1]),
+            lane: (1, 0),
+            lag: Duration::from_millis(STRAGGLER_LAG_MS),
+            armed,
+        }
+    }
+}
+
+impl StageExec for LaggyStages {
+    fn num_stages(&self) -> usize {
+        self.inner.num_stages()
+    }
+
+    fn node_id(&self, stage: usize) -> usize {
+        self.inner.node_id(stage)
+    }
+
+    fn comm_in(&self, stage: usize, bytes: u64) -> f64 {
+        self.inner.comm_in(stage, bytes)
+    }
+
+    fn comm_out(&self, bytes: u64) -> f64 {
+        self.inner.comm_out(bytes)
+    }
+
+    fn execute(&self, stage: usize, input: Tensor) -> anyhow::Result<(Tensor, f64)> {
+        self.execute_on(stage, 0, input)
+    }
+
+    fn replicas(&self, stage: usize) -> usize {
+        self.inner.replicas(stage)
+    }
+
+    fn replica_node_id(&self, stage: usize, replica: usize) -> usize {
+        self.inner.replica_node_id(stage, replica)
+    }
+
+    fn comm_in_on(&self, stage: usize, replica: usize, bytes: u64) -> f64 {
+        self.inner.comm_in_on(stage, replica, bytes)
+    }
+
+    fn execute_on(
+        &self,
+        stage: usize,
+        replica: usize,
+        input: Tensor,
+    ) -> anyhow::Result<(Tensor, f64)> {
+        if (stage, replica) == self.lane && self.armed.load(Ordering::SeqCst) {
+            std::thread::sleep(self.lag);
+        }
+        self.inner.execute_on(stage, replica, input)
+    }
+}
+
+/// One hedging run: warm up on the healthy chain, arm the straggler,
+/// then measure per-batch latency on sequential submissions. Returns
+/// (post-arming latencies ms, hedge stats).
+fn hedged_run(
+    hedge: Option<HedgeConfig>,
+    inputs: &[Tensor],
+    golden: &[Tensor],
+) -> (Vec<f64>, amp4ec::pipeline::engine::HedgeStats) {
+    let armed = Arc::new(AtomicBool::new(false));
+    let engine = PersistentEngine::new(
+        Arc::new(LaggyStages::bottleneck_pair(Arc::clone(&armed))),
+        engine_cfg(hedge),
+    )
+    .expect("hedging engine");
+    for i in 0..HEDGE_WARMUP_BATCHES {
+        let run = engine.submit(&inputs[i]).expect("submit").wait().expect("warmup");
+        assert_eq!(run.output, golden[i], "warmup output diverged");
+    }
+    armed.store(true, Ordering::SeqCst);
+    let mut latencies = Vec::with_capacity(HEDGE_MEASURED_BATCHES);
+    for i in 0..HEDGE_MEASURED_BATCHES {
+        let j = HEDGE_WARMUP_BATCHES + i;
+        let t0 = Instant::now();
+        let run = engine.submit(&inputs[j]).expect("submit").wait().expect("batch");
+        latencies.push(t0.elapsed().as_secs_f64() * 1e3);
+        assert_eq!(run.output, golden[j], "straggler-era output diverged");
+    }
+    (latencies, engine.hedge_stats())
+}
+
+fn main() {
+    let mut suite = BenchSuite::new("chaos");
+    let inputs = batches();
+
+    // ---- in-process reference -----------------------------------------
+    let inproc_engine = PersistentEngine::new(
+        Arc::new(SimStages::heterogeneous(SHARES, NOMINAL_MS)),
+        engine_cfg(None),
+    )
+    .expect("inproc engine");
+    let (inproc_out, inproc_wall_ms, inproc_sim_ms) =
+        drive(&inproc_engine, &inputs);
+    drop(inproc_engine);
+
+    // ---- degeneracy pin: clean wire, no proxy, no deadline ------------
+    let dir = std::env::temp_dir();
+    let agents: Vec<_> = (0..SHARES.len())
+        .map(|i| {
+            let path = dir.join(format!(
+                "amp4ec-bench-chaos-clean-{}-{i}.sock",
+                std::process::id()
+            ));
+            NodeAgent::serve_uds(&path).expect("serve agent")
+        })
+        .collect();
+    let addrs: Vec<_> = agents.iter().map(|a| a.addr().clone()).collect();
+    let clean_engine = PersistentEngine::new(
+        Arc::new(
+            WireStages::connect_sim(
+                &addrs,
+                SHARES,
+                NOMINAL_MS,
+                Duration::from_secs(10),
+            )
+            .expect("connect clean"),
+        ),
+        engine_cfg(None),
+    )
+    .expect("clean wire engine");
+    let (clean_out, clean_wall_ms, clean_sim_ms) =
+        drive(&clean_engine, &inputs);
+    drop(clean_engine);
+    drop(agents);
+    assert_eq!(
+        clean_out, inproc_out,
+        "degeneracy pin: clean wire must be bit-identical to in-process"
+    );
+    assert!(
+        (clean_sim_ms - inproc_sim_ms).abs() < 1e-6,
+        "degeneracy pin: sim accounting diverged ({clean_sim_ms} vs \
+         {inproc_sim_ms})"
+    );
+
+    // ---- chaos gate: fragmentation + jitter on one stage's link -------
+    let agents: Vec<_> = (0..SHARES.len())
+        .map(|i| {
+            let path = dir.join(format!(
+                "amp4ec-bench-chaos-dirty-{}-{i}.sock",
+                std::process::id()
+            ));
+            NodeAgent::serve_uds(&path).expect("serve agent")
+        })
+        .collect();
+    let proxy = ChaosProxy::start_uds(
+        dir.join(format!("amp4ec-bench-chaos-{}-proxy.sock", std::process::id())),
+        agents[1].addr().clone(),
+        vec![ConnPlans {
+            to_upstream: FaultPlan::clean(0xBE)
+                .with_fragmentation(8)
+                .with_delays(0.25, 0.0, 1.5),
+            to_client: FaultPlan::clean(0xEF)
+                .with_fragmentation(8)
+                .with_delays(0.25, 0.0, 1.5),
+        }],
+    )
+    .expect("chaos proxy");
+    let wired = vec![
+        agents[0].addr().clone(),
+        proxy.addr().clone(),
+        agents[2].addr().clone(),
+    ];
+    let chaotic_wire = Arc::new(
+        WireStages::connect_sim(
+            &wired,
+            SHARES,
+            NOMINAL_MS,
+            Duration::from_secs(10),
+        )
+        .expect("connect through chaos")
+        .with_execute_timeout(Some(Duration::from_secs(5))),
+    );
+    let chaotic_engine =
+        PersistentEngine::new(Arc::clone(&chaotic_wire), engine_cfg(None))
+            .expect("chaotic wire engine");
+    let (chaotic_out, chaotic_wall_ms, chaotic_sim_ms) =
+        drive(&chaotic_engine, &inputs);
+    drop(chaotic_engine);
+    assert_eq!(
+        chaotic_out, inproc_out,
+        "chaos gate: benign chaos must not perturb a single output bit"
+    );
+    assert!(
+        (chaotic_sim_ms - inproc_sim_ms).abs() < 1e-6,
+        "chaos gate: sim accounting diverged ({chaotic_sim_ms} vs \
+         {inproc_sim_ms})"
+    );
+    assert!(
+        !chaotic_wire.any_dead(),
+        "chaos gate: benign chaos must not kill a replica"
+    );
+    assert!(
+        chaotic_wall_ms < CHAOS_WALL_BOUND_MS,
+        "chaos gate: run took {chaotic_wall_ms:.0} ms (no-hang bound \
+         {CHAOS_WALL_BOUND_MS:.0} ms)"
+    );
+    proxy.stop();
+    drop(agents);
+    let chaos_overhead_x = chaotic_wall_ms / clean_wall_ms;
+
+    // ---- hedging gate: one straggler lane, p99 off vs on --------------
+    let n_hedge = HEDGE_WARMUP_BATCHES + HEDGE_MEASURED_BATCHES;
+    let hedge_inputs: Vec<Tensor> = (0..n_hedge)
+        .map(|b| {
+            let data = (0..4 * 4)
+                .map(|i| (i as f32) * 0.125 - 1.0 + b as f32)
+                .collect();
+            Tensor::new(vec![4, 4], data).unwrap()
+        })
+        .collect();
+    let reference = SimStages::heterogeneous(HEDGE_SHARES, NOMINAL_MS);
+    let golden: Vec<Tensor> = hedge_inputs
+        .iter()
+        .map(|t| run_serial(&reference, t, 1).expect("serial").output)
+        .collect();
+
+    let (off_lat, off_stats) = hedged_run(None, &hedge_inputs, &golden);
+    assert_eq!(off_stats.issued, 0, "hedging off must never issue");
+    let (on_lat, on_stats) = hedged_run(
+        Some(HedgeConfig { factor: 3.0, min_ms: 5.0, min_samples: 4 }),
+        &hedge_inputs,
+        &golden,
+    );
+    assert!(
+        on_stats.issued > 0 && on_stats.wins > 0,
+        "straggler lane must trigger winning hedges: {on_stats:?}"
+    );
+
+    let p99_off = percentile(&off_lat, 0.99);
+    let p99_on = percentile(&on_lat, 0.99);
+    let p50_off = percentile(&off_lat, 0.50);
+    let p50_on = percentile(&on_lat, 0.50);
+    assert!(
+        p99_on <= HEDGE_P99_BOUND_X * p99_off,
+        "hedging gate: p99 {p99_on:.1} ms vs off {p99_off:.1} ms exceeds \
+         the {HEDGE_P99_BOUND_X}x bound"
+    );
+
+    suite.record_value("inproc wall", inproc_wall_ms, "ms");
+    suite.record_value("clean wire wall", clean_wall_ms, "ms");
+    suite.record_value("chaotic wire wall", chaotic_wall_ms, "ms");
+    suite.record_value("chaos overhead", (chaos_overhead_x - 1.0) * 100.0, "%");
+    suite.record_value("straggler p50 off", p50_off, "ms");
+    suite.record_value("straggler p99 off", p99_off, "ms");
+    suite.record_value("straggler p50 hedged", p50_on, "ms");
+    suite.record_value("straggler p99 hedged", p99_on, "ms");
+    suite.record_value("hedge p99 ratio", p99_on / p99_off, "x");
+    suite.record_value("hedges issued", on_stats.issued as f64, "");
+    suite.record_value("hedge wins", on_stats.wins as f64, "");
+    suite.record_value("hedge wasted", on_stats.wasted as f64, "");
+
+    let mut doc = BTreeMap::new();
+    doc.insert("suite".into(), Json::Str("chaos".into()));
+    doc.insert(
+        "cpu_shares".into(),
+        Json::Arr(SHARES.iter().map(|&s| Json::Num(s)).collect()),
+    );
+    doc.insert("nominal_ms".into(), Json::Num(NOMINAL_MS));
+    doc.insert("rows_per_batch".into(), Json::from(ROWS_PER_BATCH));
+    doc.insert("n_batches".into(), Json::from(N_BATCHES));
+    doc.insert("depth".into(), Json::from(DEPTH));
+    doc.insert("inproc_wall_ms".into(), Json::Num(inproc_wall_ms));
+    doc.insert("clean_wall_ms".into(), Json::Num(clean_wall_ms));
+    doc.insert("chaotic_wall_ms".into(), Json::Num(chaotic_wall_ms));
+    doc.insert("chaos_overhead_x".into(), Json::Num(chaos_overhead_x));
+    doc.insert("chaos_wall_bound_ms".into(), Json::Num(CHAOS_WALL_BOUND_MS));
+    doc.insert(
+        "straggler_lag_ms".into(),
+        Json::from(STRAGGLER_LAG_MS as usize),
+    );
+    doc.insert("p50_off_ms".into(), Json::Num(p50_off));
+    doc.insert("p99_off_ms".into(), Json::Num(p99_off));
+    doc.insert("p50_hedged_ms".into(), Json::Num(p50_on));
+    doc.insert("p99_hedged_ms".into(), Json::Num(p99_on));
+    doc.insert("hedge_p99_ratio".into(), Json::Num(p99_on / p99_off));
+    doc.insert("hedge_p99_bound_x".into(), Json::Num(HEDGE_P99_BOUND_X));
+    doc.insert("hedges_issued".into(), Json::from(on_stats.issued as usize));
+    doc.insert("hedge_wins".into(), Json::from(on_stats.wins as usize));
+    doc.insert("hedge_wasted".into(), Json::from(on_stats.wasted as usize));
+    std::fs::write("BENCH_chaos.json", Json::Obj(doc).to_string())
+        .expect("write BENCH_chaos.json");
+    println!("wrote BENCH_chaos.json");
+}

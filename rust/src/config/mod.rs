@@ -241,6 +241,17 @@ pub struct AmpConfig {
     /// surviving replicas instead of failing the batch. Off = today's
     /// fail-fast behavior. CLI: `--heal`.
     pub heal: bool,
+    /// Per-execute round-trip deadline on wire transports, ms: a
+    /// replica that does not answer an Execute within this budget is
+    /// marked suspect (its connection is failed so that micro-batch can
+    /// replay/heal) instead of hanging the driver. `None` = wait
+    /// forever (the pre-ISSUE-10 behavior). CLI: `--wire-timeout-ms`.
+    pub wire_execute_timeout_ms: Option<f64>,
+    /// Straggler hedging (ISSUE 10): re-issue a micro-batch on a
+    /// surviving sibling replica when the primary runs past the
+    /// stage's armed latency threshold; first completion wins. Off =
+    /// bit-identical unhedged execution. CLI: `--hedge`.
+    pub hedge: bool,
 }
 
 impl Default for AmpConfig {
@@ -280,6 +291,8 @@ impl Default for AmpConfig {
             monitor_interval_ms: 100,
             miss_threshold: 3,
             heal: false,
+            wire_execute_timeout_ms: None,
+            hedge: false,
         }
     }
 }
@@ -451,6 +464,13 @@ impl AmpConfig {
             self.miss_threshold >= 1,
             "miss_threshold must be >= 1 (misses before a node is dead)"
         );
+        if let Some(t) = self.wire_execute_timeout_ms {
+            anyhow::ensure!(
+                t.is_finite() && t > 0.0,
+                "wire_execute_timeout_ms = {t} must be a positive number \
+                 of milliseconds (drop the key to wait forever)"
+            );
+        }
         if let ReplicaPolicy::Fixed(k) = self.replicas {
             anyhow::ensure!(
                 k >= 2,
@@ -618,6 +638,10 @@ impl AmpConfig {
             Json::from(self.miss_threshold as usize),
         );
         m.insert("heal".into(), Json::from(self.heal));
+        if let Some(t) = self.wire_execute_timeout_ms {
+            m.insert("wire_execute_timeout_ms".into(), Json::Num(t));
+        }
+        m.insert("hedge".into(), Json::from(self.hedge));
         Json::Obj(m)
     }
 
@@ -749,6 +773,10 @@ impl AmpConfig {
             miss_threshold: get_u("miss_threshold", d.miss_threshold as usize)
                 as u32,
             heal: j.get("heal").and_then(Json::as_bool).unwrap_or(false),
+            wire_execute_timeout_ms: j
+                .get("wire_execute_timeout_ms")
+                .and_then(Json::as_f64),
+            hedge: j.get("hedge").and_then(Json::as_bool).unwrap_or(false),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -797,9 +825,13 @@ mod tests {
         c.default_deadline_ms = Some(250.0);
         c.heal = true;
         c.miss_threshold = 5;
+        c.wire_execute_timeout_ms = Some(750.0);
+        c.hedge = true;
         let j = c.to_json();
         let back = AmpConfig::from_json(&j).unwrap();
         assert!(back.heal);
+        assert_eq!(back.wire_execute_timeout_ms, Some(750.0));
+        assert!(back.hedge);
         assert_eq!(back.miss_threshold, 5);
         assert_eq!(back.priority_classes, 4);
         assert_eq!(back.default_deadline_ms, Some(250.0));
@@ -857,6 +889,12 @@ mod tests {
         assert!(c.validate().is_err());
         let mut c = AmpConfig::default();
         c.miss_threshold = 0;
+        assert!(c.validate().is_err());
+        let mut c = AmpConfig::default();
+        c.wire_execute_timeout_ms = Some(0.0);
+        assert!(c.validate().is_err());
+        let mut c = AmpConfig::default();
+        c.wire_execute_timeout_ms = Some(f64::NAN);
         assert!(c.validate().is_err());
     }
 

@@ -15,8 +15,11 @@
 //!                    [--priority-classes N]  # strict-priority ingress lanes
 //!                    [--tenants name=w,...]  # per-tenant WFQ weights
 //!                    [--transport inproc|uds|tcp] [--agents a,b,...]  # wire transport
+//!                    [--wire-timeout-ms MS]  # per-execute agent deadline
+//!                    [--hedge]          # re-issue straggler micro-batches
 //! amp4ec node        --listen ADDR      # node agent (socket path or host:port)
 //!                    [--transport uds|tcp] [--stay]  # --stay: don't exit when idle
+//!                    [--idle-timeout-ms MS]  # stalled-coordinator give-up
 //! amp4ec golden      [--artifacts DIR]
 //! amp4ec config      [--out FILE]       # write a default config file
 //! amp4ec serve-cfg   --config FILE [--requests N]
@@ -103,6 +106,12 @@ fn build_config(args: &Args) -> anyhow::Result<AmpConfig> {
                 .map_err(|_| anyhow::anyhow!("--deadline-ms expects a number, got `{ms}`"))?,
         );
     }
+    if let Some(ms) = args.get("wire-timeout-ms") {
+        cfg.wire_execute_timeout_ms = Some(ms.parse().map_err(|_| {
+            anyhow::anyhow!("--wire-timeout-ms expects a number, got `{ms}`")
+        })?);
+    }
+    cfg.hedge = args.flag("hedge");
     if let Some(t) = args.get("transport") {
         cfg.transport = amp4ec::transport::TransportKind::parse(t)?;
     }
@@ -264,6 +273,12 @@ fn print_report(report: &amp4ec::server::ServeReport) {
             w.encode_ns as f64 / 1e6,
             w.decode_ns as f64 / 1e6
         );
+        if w.hedges > 0 {
+            println!(
+                "straggler hedging  : {} issued, {} won, {} wasted",
+                w.hedges, w.hedge_wins, w.hedge_wasted
+            );
+        }
     }
     // Self-healing: only on a run that actually saw churn.
     let ch = &report.churn;
@@ -363,6 +378,14 @@ fn cmd_node(args: &Args) -> anyhow::Result<()> {
         _ => NodeAgent::serve_uds(listen)?,
     };
     handle.exit_when_idle(!args.flag("stay"));
+    // How long a non-`--stay` agent tolerates a silent (stalled, not
+    // disconnected) coordinator before giving up the connection.
+    if let Some(ms) = args.get("idle-timeout-ms") {
+        let ms: u64 = ms.parse().map_err(|_| {
+            anyhow::anyhow!("--idle-timeout-ms expects a number, got `{ms}`")
+        })?;
+        handle.set_idle_timeout(std::time::Duration::from_millis(ms.max(1)));
+    }
     println!("node agent listening on {}", handle.addr());
     handle.join();
     Ok(())

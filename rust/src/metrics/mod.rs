@@ -80,13 +80,16 @@ pub mod wire {
     static FRAMES_RX: AtomicU64 = AtomicU64::new(0);
     static BYTES_RX: AtomicU64 = AtomicU64::new(0);
     static DECODE_NS: AtomicU64 = AtomicU64::new(0);
+    static HEDGES: AtomicU64 = AtomicU64::new(0);
+    static HEDGE_WINS: AtomicU64 = AtomicU64::new(0);
+    static HEDGE_WASTED: AtomicU64 = AtomicU64::new(0);
 
     /// Point-in-time view of the process-global wire counters.
     #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
     pub struct WireStats {
         /// Frames written to a wire stream.
         pub frames_tx: u64,
-        /// Bytes written (length prefix + kind + payload).
+        /// Bytes written (length prefix + CRC + kind + payload).
         pub bytes_tx: u64,
         /// Nanoseconds spent encoding + writing frames.
         pub encode_ns: u64,
@@ -96,6 +99,14 @@ pub mod wire {
         pub bytes_rx: u64,
         /// Nanoseconds spent reading + decoding frames.
         pub decode_ns: u64,
+        /// Straggler hedges issued (a micro-batch re-sent to a second
+        /// replica after blowing its EWMA-derived threshold).
+        pub hedges: u64,
+        /// Hedges whose re-issue finished first (the hedge paid off).
+        pub hedge_wins: u64,
+        /// Hedged executions whose result was discarded (the other
+        /// copy won) — the redundancy cost of hedging.
+        pub hedge_wasted: u64,
     }
 
     impl WireStats {
@@ -108,6 +119,9 @@ pub mod wire {
                 frames_rx: self.frames_rx - earlier.frames_rx,
                 bytes_rx: self.bytes_rx - earlier.bytes_rx,
                 decode_ns: self.decode_ns - earlier.decode_ns,
+                hedges: self.hedges - earlier.hedges,
+                hedge_wins: self.hedge_wins - earlier.hedge_wins,
+                hedge_wasted: self.hedge_wasted - earlier.hedge_wasted,
             }
         }
     }
@@ -126,6 +140,21 @@ pub mod wire {
         DECODE_NS.fetch_add(ns, Ordering::Relaxed);
     }
 
+    /// Record one straggler hedge being issued.
+    pub fn count_hedge_issued() {
+        HEDGES.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a hedge that finished first.
+    pub fn count_hedge_win() {
+        HEDGE_WINS.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a hedged execution whose result was discarded.
+    pub fn count_hedge_wasted() {
+        HEDGE_WASTED.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn snapshot() -> WireStats {
         WireStats {
             frames_tx: FRAMES_TX.load(Ordering::Relaxed),
@@ -134,6 +163,9 @@ pub mod wire {
             frames_rx: FRAMES_RX.load(Ordering::Relaxed),
             bytes_rx: BYTES_RX.load(Ordering::Relaxed),
             decode_ns: DECODE_NS.load(Ordering::Relaxed),
+            hedges: HEDGES.load(Ordering::Relaxed),
+            hedge_wins: HEDGE_WINS.load(Ordering::Relaxed),
+            hedge_wasted: HEDGE_WASTED.load(Ordering::Relaxed),
         }
     }
 }

@@ -987,6 +987,254 @@ impl ReplayProbe {
     }
 }
 
+/// Straggler-hedging policy (ISSUE 10): when an armed stage's
+/// micro-batch runs past `max(factor * EWMA_k, min_ms)` wall
+/// milliseconds, the driver re-issues it on a surviving sibling replica
+/// and takes whichever execution finishes first. Off by default —
+/// [`PersistentEngineConfig::hedge`] is `None` — which keeps the
+/// execute path bit-identical to the unhedged engine.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HedgeConfig {
+    /// Hedge threshold as a multiple of the stage's execute-latency
+    /// EWMA: a micro-batch is a straggler once it runs `factor` times
+    /// longer than the stage's typical execution.
+    pub factor: f64,
+    /// Floor on the threshold, ms — keeps sub-millisecond stages from
+    /// hedging on scheduler noise.
+    pub min_ms: f64,
+    /// Successful executions a stage must complete before its EWMA is
+    /// trusted enough to arm hedging (cold stages never hedge).
+    pub min_samples: u64,
+}
+
+impl Default for HedgeConfig {
+    fn default() -> Self {
+        HedgeConfig { factor: 4.0, min_ms: 2.0, min_samples: 8 }
+    }
+}
+
+/// Hedging counters surfaced by [`PersistentEngine::hedge_stats`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct HedgeStats {
+    /// Hedge executions issued (primary ran past its threshold).
+    pub issued: u64,
+    /// Hedges whose result was used (the primary was still pending or
+    /// had failed when the hedge completed).
+    pub wins: u64,
+    /// Hedges whose result was discarded (the primary delivered first
+    /// or the hedge itself failed) — pure duplicated work.
+    pub wasted: u64,
+}
+
+/// Per-engine hedging state shared by every stage driver: the policy,
+/// a per-stage execute-latency EWMA (f64 bits in an `AtomicU64`; the
+/// read-modify-write race between sibling drivers only blurs a
+/// statistic), and the counters. Mirrored into [`crate::metrics::wire`]
+/// so serving reports surface hedging without new plumbing.
+struct HedgeCtx {
+    cfg: HedgeConfig,
+    ewma_bits: Vec<AtomicU64>,
+    samples: Vec<AtomicU64>,
+    issued: AtomicU64,
+    wins: AtomicU64,
+    wasted: AtomicU64,
+}
+
+impl HedgeCtx {
+    fn new(cfg: HedgeConfig, n_stages: usize) -> HedgeCtx {
+        HedgeCtx {
+            cfg,
+            ewma_bits: (0..n_stages).map(|_| AtomicU64::new(0)).collect(),
+            samples: (0..n_stages).map(|_| AtomicU64::new(0)).collect(),
+            issued: AtomicU64::new(0),
+            wins: AtomicU64::new(0),
+            wasted: AtomicU64::new(0),
+        }
+    }
+
+    /// Fold one successful execute's wall time into the stage EWMA.
+    fn observe(&self, k: usize, ms: f64) {
+        let n = self.samples[k].fetch_add(1, Ordering::Relaxed);
+        let next = if n == 0 {
+            ms
+        } else {
+            let prev = f64::from_bits(self.ewma_bits[k].load(Ordering::Relaxed));
+            0.8 * prev + 0.2 * ms
+        };
+        self.ewma_bits[k].store(next.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Hedge threshold for stage `k`, or `None` while the stage is
+    /// still warming up (fewer than `min_samples` completions).
+    fn threshold_ms(&self, k: usize) -> Option<f64> {
+        if self.samples[k].load(Ordering::Relaxed) < self.cfg.min_samples {
+            return None;
+        }
+        let ewma = f64::from_bits(self.ewma_bits[k].load(Ordering::Relaxed));
+        Some((self.cfg.factor * ewma).max(self.cfg.min_ms))
+    }
+
+    fn stats(&self) -> HedgeStats {
+        HedgeStats {
+            issued: self.issued.load(Ordering::Relaxed),
+            wins: self.wins.load(Ordering::Relaxed),
+            wasted: self.wasted.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// What a hedging driver thread carries: the shared policy state plus
+/// an owned handle on the stage chain, because a hedged primary runs on
+/// a *spawned* (non-scoped) thread — a primary hung inside a broken
+/// transport must be abandonable, and a scoped thread would block scope
+/// exit for exactly as long as the hang we are hedging against.
+struct HedgeRt {
+    stages: Arc<dyn StageExec + Send + Sync>,
+    ctx: Arc<HedgeCtx>,
+}
+
+/// One stage execution with the driver's panic guard: a panic inside a
+/// `StageExec` implementation degrades to a failed micro-batch, never a
+/// dead driver thread.
+fn exec_guarded<S: StageExec + ?Sized>(
+    stages: &S,
+    k: usize,
+    replica: usize,
+    input: Tensor,
+) -> Result<(Tensor, f64)> {
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        stages.execute_on(k, replica, input)
+    }))
+    .unwrap_or_else(|p| {
+        Err(anyhow::anyhow!("stage implementation panicked: {}", panic_msg(p)))
+    })
+}
+
+/// Execute micro-batch input on `(k, replica)`, hedging onto a sibling
+/// replica if the primary runs past the armed threshold. Returns the
+/// replica whose output was used and the result. `hedge: None` (or a
+/// cold/unreplicated stage) is the plain guarded execute — bit-identical
+/// to the unhedged engine. On a hedge the sibling's ingress transfer is
+/// real duplicated work, charged into `comm_ms`.
+fn execute_hedged<S: StageExec + ?Sized>(
+    stages: &S,
+    k: usize,
+    replica: usize,
+    input: Tensor,
+    comm_ms: &mut f64,
+    hedge: Option<&HedgeRt>,
+) -> (usize, Result<(Tensor, f64)>) {
+    let Some(rt) = hedge else {
+        return (replica, exec_guarded(stages, k, replica, input));
+    };
+    let spare = (0..stages.replicas(k))
+        .find(|&r2| r2 != replica && stages.replica_alive(k, r2));
+    let (Some(threshold_ms), Some(r2)) = (rt.ctx.threshold_ms(k), spare) else {
+        // Warming up, or no surviving sibling to hedge onto: run
+        // directly, feeding the EWMA so the stage can arm.
+        let t0 = std::time::Instant::now();
+        let res = exec_guarded(stages, k, replica, input);
+        if res.is_ok() {
+            rt.ctx.observe(k, t0.elapsed().as_secs_f64() * 1e3);
+        }
+        return (replica, res);
+    };
+
+    let bytes = input.byte_len();
+    let backup = input.clone(); // Arc view: refcount bump, not a row copy
+    let (tx, rx) = channel();
+    let primary_stages = Arc::clone(&rt.stages);
+    let t0 = std::time::Instant::now();
+    let spawned = std::thread::Builder::new()
+        .name(format!("pipe-hedge-{k}.{replica}"))
+        .spawn(move || {
+            // The orphaned case: if the driver already took the hedge's
+            // result and dropped `rx`, this send fails and the output is
+            // simply dropped here.
+            let _ = tx.send(exec_guarded(&*primary_stages, k, replica, input));
+        });
+    if spawned.is_err() {
+        // Could not get a thread — degrade to the unhedged execute.
+        let res = exec_guarded(stages, k, replica, backup);
+        if res.is_ok() {
+            rt.ctx.observe(k, t0.elapsed().as_secs_f64() * 1e3);
+        }
+        return (replica, res);
+    }
+
+    match rx.recv_timeout(std::time::Duration::from_secs_f64(threshold_ms / 1e3)) {
+        Ok(res) => {
+            if res.is_ok() {
+                rt.ctx.observe(k, t0.elapsed().as_secs_f64() * 1e3);
+            }
+            (replica, res)
+        }
+        Err(_) => {
+            // Primary is a straggler (or its thread died): re-issue on
+            // the sibling, first completion wins.
+            rt.ctx.issued.fetch_add(1, Ordering::Relaxed);
+            crate::metrics::wire::count_hedge_issued();
+            *comm_ms += stages.comm_in_on(k, r2, bytes);
+            let hedged = exec_guarded(stages, k, r2, backup);
+            match rx.try_recv() {
+                Ok(primary) if primary.is_ok() => {
+                    // Primary landed while the hedge ran: keep it (its
+                    // accounting lane is already the routed one) and
+                    // write the duplicate off as waste.
+                    rt.ctx.wasted.fetch_add(1, Ordering::Relaxed);
+                    crate::metrics::wire::count_hedge_wasted();
+                    rt.ctx.observe(k, t0.elapsed().as_secs_f64() * 1e3);
+                    (replica, primary)
+                }
+                Ok(_primary_err) => {
+                    // Primary failed outright; the hedge is all we have.
+                    if hedged.is_ok() {
+                        rt.ctx.wins.fetch_add(1, Ordering::Relaxed);
+                        crate::metrics::wire::count_hedge_win();
+                    } else {
+                        rt.ctx.wasted.fetch_add(1, Ordering::Relaxed);
+                        crate::metrics::wire::count_hedge_wasted();
+                    }
+                    (r2, hedged)
+                }
+                Err(_) if hedged.is_ok() => {
+                    // Primary still pending: the hedge wins and the
+                    // orphaned primary thread discards its late result.
+                    rt.ctx.wins.fetch_add(1, Ordering::Relaxed);
+                    crate::metrics::wire::count_hedge_win();
+                    (r2, hedged)
+                }
+                Err(std::sync::mpsc::TryRecvError::Empty) => {
+                    // Hedge failed with the primary still in flight:
+                    // wait the primary out (a wire-transport primary is
+                    // bounded by its execute deadline).
+                    rt.ctx.wasted.fetch_add(1, Ordering::Relaxed);
+                    crate::metrics::wire::count_hedge_wasted();
+                    match rx.recv() {
+                        Ok(primary) => {
+                            if primary.is_ok() {
+                                rt.ctx.observe(
+                                    k,
+                                    t0.elapsed().as_secs_f64() * 1e3,
+                                );
+                            }
+                            (replica, primary)
+                        }
+                        Err(_) => (r2, hedged),
+                    }
+                }
+                Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                    // Primary thread gone without a result; report the
+                    // hedge's failure.
+                    rt.ctx.wasted.fetch_add(1, Ordering::Relaxed);
+                    crate::metrics::wire::count_hedge_wasted();
+                    (r2, hedged)
+                }
+            }
+        }
+    }
+}
+
 /// Pick which replica of `stage` should execute micro-batch `idx`.
 /// Round-robin by sequence number over the *alive* set: with every
 /// replica alive this is plain `idx % n` (matching the static credit
@@ -1030,6 +1278,7 @@ fn drive_stage<S: StageExec + ?Sized>(
     state: &Mutex<EngineState>,
     windows: &CreditWindows,
     heal: &HealCtx,
+    hedge: Option<&HedgeRt>,
 ) {
     // The last window's credit is returned by the collector at delivery
     // (that is what makes uniform budgets degenerate to the global
@@ -1057,17 +1306,9 @@ fn drive_stage<S: StageExec + ?Sized>(
                 // to a failed transport, not a dead driver thread (which
                 // would tear the whole engine down). Accounting after a
                 // panic is best-effort by design (AssertUnwindSafe).
-                let mut exec_replica = replica;
-                let mut executed =
-                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(
-                        || stages.execute_on(k, replica, m.tensor),
-                    ))
-                    .unwrap_or_else(|p| {
-                        Err(anyhow::anyhow!(
-                            "stage implementation panicked: {}",
-                            panic_msg(p)
-                        ))
-                    });
+                let (mut exec_replica, mut executed) = execute_hedged(
+                    stages, k, replica, m.tensor, &mut comm_ms, hedge,
+                );
                 if executed.is_err() {
                     if let Some(input) = retained {
                         // Replay is pointless once even the most lenient
@@ -1087,17 +1328,8 @@ fn drive_stage<S: StageExec + ?Sized>(
                             // link is real work: charge its ingress on
                             // top of the wasted first hop.
                             comm_ms += stages.comm_in_on(k, r2, bytes);
-                            let retry = std::panic::catch_unwind(
-                                std::panic::AssertUnwindSafe(|| {
-                                    stages.execute_on(k, r2, input.clone())
-                                }),
-                            )
-                            .unwrap_or_else(|p| {
-                                Err(anyhow::anyhow!(
-                                    "stage implementation panicked: {}",
-                                    panic_msg(p)
-                                ))
-                            });
+                            let retry =
+                                exec_guarded(stages, k, r2, input.clone());
                             if retry.is_ok() {
                                 heal.succeeded
                                     .fetch_add(1, Ordering::Relaxed);
@@ -1998,6 +2230,7 @@ pub fn run_streamed<S: StageExec + ?Sized>(
                 scope.spawn(move || {
                     drive_stage(
                         stages, k, r, rx, next, state, &windows, &heal,
+                        None,
                     )
                 });
             }
@@ -2121,6 +2354,12 @@ pub struct PersistentEngineConfig {
     /// deadline has passed). Off (the default) preserves fail-fast
     /// behaviour bit for bit.
     pub replay: bool,
+    /// Straggler hedging (ISSUE 10): on a replicated stage, a
+    /// micro-batch running past the stage's armed [`HedgeConfig`]
+    /// threshold is re-issued on a surviving sibling replica and the
+    /// first completion wins. `None` (the default) keeps the execute
+    /// path bit-identical to the unhedged engine.
+    pub hedge: Option<HedgeConfig>,
 }
 
 impl Default for PersistentEngineConfig {
@@ -2133,6 +2372,7 @@ impl Default for PersistentEngineConfig {
             coalesce: false,
             adaptive: None,
             replay: false,
+            hedge: None,
         }
     }
 }
@@ -2573,6 +2813,8 @@ pub struct PersistentEngine {
     coalesce: Arc<CoalesceCounters>,
     /// Replay switch + counters shared with every stage driver.
     heal: Arc<HealCtx>,
+    /// Hedging policy + counters, present when straggler hedging is on.
+    hedge_ctx: Option<Arc<HedgeCtx>>,
     /// `[min_depth, max_depth]` of the adaptive controller, if one is
     /// active — [`PersistentEngine::reshape_budgets`] clamps external
     /// targets into it so a live retune can never fight the controller
@@ -2656,6 +2898,22 @@ impl PersistentEngine {
                 );
             }
         }
+        if let Some(h) = &cfg.hedge {
+            anyhow::ensure!(
+                h.factor.is_finite() && h.factor >= 1.0,
+                "hedge factor {} must be finite and >= 1",
+                h.factor
+            );
+            anyhow::ensure!(
+                h.min_ms.is_finite() && h.min_ms >= 0.0,
+                "hedge min_ms {} must be finite and >= 0",
+                h.min_ms
+            );
+            anyhow::ensure!(
+                h.min_samples >= 1,
+                "hedge min_samples must be >= 1"
+            );
+        }
         let node_ids: Arc<[usize]> =
             (0..n_stages).map(|k| stages.node_id(k)).collect();
         let reps: Vec<usize> =
@@ -2700,6 +2958,8 @@ impl PersistentEngine {
             Arc::new(DepthStats::new(*seed_budgets.last().expect("stages")));
         let coalesce_counters = Arc::new(CoalesceCounters::default());
         let heal = Arc::new(HealCtx::new(cfg.replay));
+        let hedge_ctx =
+            cfg.hedge.map(|h| Arc::new(HedgeCtx::new(h, n_stages)));
 
         let n_drivers: usize = reps.iter().sum();
         let mut threads = Vec::with_capacity(n_drivers + 2);
@@ -2716,6 +2976,10 @@ impl PersistentEngine {
                 let state = Arc::clone(&state);
                 let windows = Arc::clone(&windows);
                 let heal = Arc::clone(&heal);
+                let hedge = hedge_ctx.as_ref().map(|ctx| HedgeRt {
+                    stages: Arc::clone(&stages),
+                    ctx: Arc::clone(ctx),
+                });
                 let name = if replicated {
                     format!("pipe-stage-{k}.{r}")
                 } else {
@@ -2727,7 +2991,7 @@ impl PersistentEngine {
                         .spawn(move || {
                             drive_stage(
                                 &*stages, k, r, rx, next, &state, &windows,
-                                &heal,
+                                &heal, hedge.as_ref(),
                             )
                         })
                         .context("spawning stage driver")?,
@@ -2791,6 +3055,7 @@ impl PersistentEngine {
             windows,
             coalesce: coalesce_counters,
             heal,
+            hedge_ctx,
             budget_bounds: cfg.adaptive.map(|a| (a.min_depth, a.max_depth)),
         })
     }
@@ -2933,6 +3198,15 @@ impl PersistentEngine {
     /// the drop joins the driver threads.
     pub fn replay_probe(&self) -> ReplayProbe {
         ReplayProbe(Arc::clone(&self.heal))
+    }
+
+    /// Straggler-hedging counters since startup (all zero when hedging
+    /// is off).
+    pub fn hedge_stats(&self) -> HedgeStats {
+        self.hedge_ctx
+            .as_ref()
+            .map(|c| c.stats())
+            .unwrap_or_default()
     }
 
     /// Feeder-side coalescing counters since startup.

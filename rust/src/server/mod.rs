@@ -81,6 +81,10 @@ pub struct DistributedService {
     /// failed micro-batches on surviving replicas, and the ingress gets
     /// a failure-retry budget to ride out a heal swap.
     heal: bool,
+    /// Straggler hedging (`AmpConfig::hedge`): a replicated stage's
+    /// micro-batch that runs past its armed latency threshold is
+    /// re-issued on a surviving sibling replica, first completion wins.
+    hedge: bool,
     /// Replay counters carried over from engines already torn down by
     /// deployment swaps; the live engine's counters ride on top (see
     /// [`DistributedService::replay_stats`]).
@@ -151,6 +155,7 @@ impl DistributedService {
         coalesce: bool,
         wire: Option<&transport::WireConfig>,
         replay: bool,
+        hedge: bool,
         carried: Option<LearnedWindows>,
     ) -> Result<Option<Arc<engine::PersistentEngine>>> {
         let replicated = dep.stages.iter().any(|s| s.replica_count() > 1);
@@ -188,6 +193,7 @@ impl DistributedService {
             coalesce,
             adaptive,
             replay,
+            hedge: hedge.then(engine::HedgeConfig::default),
         };
         let built = match wire {
             // Wire mode: the stage chain is the remote twin of `dep` —
@@ -204,11 +210,14 @@ impl DistributedService {
                     &w.artifacts_dir,
                 );
                 let stages =
-                    Arc::new(transport::WireStages::connect_replicated(
-                        &w.addrs,
-                        groups,
-                        w.connect_timeout,
-                    )?);
+                    Arc::new(
+                        transport::WireStages::connect_replicated(
+                            &w.addrs,
+                            groups,
+                            w.connect_timeout,
+                        )?
+                        .with_execute_timeout(w.execute_timeout),
+                    );
                 engine::PersistentEngine::new(stages, cfg)?
             }
             None => {
@@ -243,6 +252,7 @@ impl DistributedService {
             self.coalesce,
             self.wire.as_ref(),
             self.heal,
+            self.hedge,
             carried,
         )?;
         // Swap both under the deployment write lock. Acquiring it waits
@@ -795,12 +805,18 @@ impl EdgeServer {
         });
         let wire = match config.transport {
             TransportKind::Inproc => None,
-            kind => Some(transport::WireConfig::new(
-                kind,
-                config.agent_addrs()?,
-                config.sim_params(),
-                config.artifacts_dir.clone(),
-            )),
+            kind => {
+                let mut w = transport::WireConfig::new(
+                    kind,
+                    config.agent_addrs()?,
+                    config.sim_params(),
+                    config.artifacts_dir.clone(),
+                );
+                w.execute_timeout = config
+                    .wire_execute_timeout_ms
+                    .map(|t| std::time::Duration::from_secs_f64(t / 1e3));
+                Some(w)
+            }
         };
         let pipeline_engine = DistributedService::build_engine(
             &deployment,
@@ -810,6 +826,7 @@ impl EdgeServer {
             config.coalesce,
             wire.as_ref(),
             config.heal,
+            config.hedge,
             None,
         )?;
         let service = Arc::new(DistributedService {
@@ -823,6 +840,7 @@ impl EdgeServer {
             engine: Mutex::new(pipeline_engine),
             stage_counters: Arc::new(crate::metrics::StageCounterSet::new()),
             heal: config.heal,
+            hedge: config.hedge,
             replay_base: ReplayBase::default(),
         });
 
@@ -920,6 +938,7 @@ impl EdgeServer {
             config.coalesce,
             None,
             config.heal,
+            config.hedge,
             None,
         ) {
             Ok(e) => e,
@@ -939,6 +958,7 @@ impl EdgeServer {
             engine: Mutex::new(pipeline_engine),
             stage_counters: Arc::new(crate::metrics::StageCounterSet::new()),
             heal: config.heal,
+            hedge: config.hedge,
             replay_base: ReplayBase::default(),
         });
         let entry = Arc::new(ModelEntry {

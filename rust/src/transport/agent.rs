@@ -15,14 +15,14 @@
 //! connection and the last one closes — i.e. when the coordinator goes
 //! away, the agent goes away.
 
-use std::io::Write as _;
+use std::io::{Read, Write as _};
 use std::net::TcpListener;
 use std::os::unix::net::UnixListener;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -150,6 +150,12 @@ impl Listener {
 struct Shared {
     stop: AtomicBool,
     exit_when_idle: AtomicBool,
+    /// In exit-on-idle mode, a connection that has received nothing for
+    /// this long is dropped — the escape hatch for a coordinator that
+    /// stalled or vanished without closing its socket, which would
+    /// otherwise park the handler in `read` forever and leak the agent
+    /// process.
+    idle_timeout_ms: AtomicU64,
     /// Currently open connections.
     active: AtomicUsize,
     /// Connections accepted over the agent's lifetime.
@@ -159,6 +165,11 @@ struct Shared {
     conns: Mutex<Vec<WireStream>>,
     handlers: Mutex<Vec<JoinHandle<()>>>,
 }
+
+/// Default idle timeout: generous enough that a paused-but-healthy
+/// coordinator (GC, debugger, long rebalance) never loses its agents,
+/// small enough that leaked agents reap themselves.
+const DEFAULT_IDLE_TIMEOUT_MS: u64 = 120_000;
 
 /// Decrements `active` when a handler exits, however it exits.
 struct ActiveGuard(Arc<Shared>);
@@ -221,6 +232,7 @@ impl AgentHandle {
         let shared = Arc::new(Shared {
             stop: AtomicBool::new(false),
             exit_when_idle: AtomicBool::new(false),
+            idle_timeout_ms: AtomicU64::new(DEFAULT_IDLE_TIMEOUT_MS),
             active: AtomicUsize::new(0),
             served: AtomicUsize::new(0),
             conns: Mutex::new(Vec::new()),
@@ -245,6 +257,16 @@ impl AgentHandle {
     /// coordinator goes away" mode `amp4ec node` runs in.
     pub fn exit_when_idle(&self, on: bool) {
         self.shared.exit_when_idle.store(on, Ordering::SeqCst);
+    }
+
+    /// In exit-on-idle mode, drop a connection that has received
+    /// nothing for `timeout` — how long a stalled or vanished
+    /// coordinator can hold this agent alive. Long-lived `--stay`
+    /// agents (exit-on-idle off) are unaffected.
+    pub fn set_idle_timeout(&self, timeout: Duration) {
+        self.shared
+            .idle_timeout_ms
+            .store(timeout.as_millis().max(1) as u64, Ordering::SeqCst);
     }
 
     /// Open connections right now.
@@ -342,7 +364,62 @@ fn send(stream: &mut WireStream, frame: &Frame) -> bool {
     frame::write_frame(stream, frame).is_ok() && stream.flush().is_ok()
 }
 
+/// How often a parked handler wakes to check the stop flag and the
+/// idle deadline (the socket's read timeout).
+const READ_TICK: Duration = Duration::from_millis(250);
+
+/// `Read` adapter that retries timed-out reads while watching the stop
+/// flag and — in exit-on-idle mode — an idle deadline. Retrying at the
+/// `read()` level (not around `read_exact`) preserves partial-frame
+/// progress, so a slow-but-alive coordinator never desyncs the stream.
+struct PatientReader<'a> {
+    stream: &'a mut WireStream,
+    shared: &'a Shared,
+    last_rx: &'a mut Instant,
+}
+
+impl Read for PatientReader<'_> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        loop {
+            match self.stream.read(buf) {
+                Ok(n) => {
+                    if n > 0 {
+                        *self.last_rx = Instant::now();
+                    }
+                    return Ok(n);
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    if self.shared.stop.load(Ordering::SeqCst) {
+                        return Err(e);
+                    }
+                    if self.shared.exit_when_idle.load(Ordering::SeqCst) {
+                        let idle = Duration::from_millis(
+                            self.shared.idle_timeout_ms.load(Ordering::SeqCst),
+                        );
+                        if self.last_rx.elapsed() >= idle {
+                            return Err(std::io::Error::new(
+                                std::io::ErrorKind::TimedOut,
+                                "connection idle past the agent's idle timeout",
+                            ));
+                        }
+                    }
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+}
+
 fn handle_conn(mut stream: WireStream, shared: &Shared) {
+    // Bounded reads: the handler wakes every READ_TICK to notice
+    // `stop` and the idle deadline even with no bytes arriving — a
+    // stalled coordinator can no longer park this thread (and the
+    // whole agent process) in `read` forever.
+    let _ = stream.set_read_timeout(Some(READ_TICK));
+    let mut last_rx = Instant::now();
     let mut hosted: Option<HostedStage> = None;
     loop {
         if shared.stop.load(Ordering::SeqCst) {
@@ -350,9 +427,16 @@ fn handle_conn(mut stream: WireStream, shared: &Shared) {
         }
         // EOF or a malformed frame both end the connection; the
         // coordinator side surfaces its own error for in-flight work.
-        let frame = match frame::read_frame(&mut stream) {
-            Ok(f) => f,
-            Err(_) => break,
+        let frame = {
+            let mut patient = PatientReader {
+                stream: &mut stream,
+                shared,
+                last_rx: &mut last_rx,
+            };
+            match frame::read_frame(&mut patient) {
+                Ok(f) => f,
+                Err(_) => break,
+            }
         };
         match frame {
             Frame::Hello { version } => {

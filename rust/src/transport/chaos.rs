@@ -1,0 +1,639 @@
+//! Seeded, deterministic fault injection for the wire transport.
+//!
+//! Two entry points, both driven by a [`FaultPlan`] — a per-direction
+//! byte-offset schedule of faults derived from a seed:
+//!
+//! * [`ChaosStream`] wraps any `Read + Write` byte stream (a
+//!   [`WireStream`], an in-memory buffer) and applies the plan inline:
+//!   adversarial read/write fragmentation, injected delays, a one-shot
+//!   stall, single-bit corruption at scheduled byte offsets, and a
+//!   scheduled disconnect (every later op fails with
+//!   `ConnectionReset`). Unit tests drive the frame codec through it
+//!   directly.
+//! * [`ChaosProxy`] is a real man-in-the-middle for two-process runs: it
+//!   listens on its own UDS/TCP address, forwards each accepted
+//!   connection to an upstream agent, and runs each direction's bytes
+//!   through its own `FaultPlan`. Point a coordinator at the proxy
+//!   instead of the agent and the whole stack — codec, reader threads,
+//!   execute deadlines, heal ladder — sees gray failures on a
+//!   reproducible schedule.
+//!
+//! Faults are scheduled by *byte offset* in the direction's stream, not
+//! by wall clock, so a given (seed, schedule) corrupts the same byte of
+//! the same frame on every run. Delay/stall sleeps are interruptible by
+//! the proxy's stop flag so teardown never waits out a stall.
+
+use std::collections::VecDeque;
+use std::io::{self, Read, Write};
+use std::net::TcpListener;
+use std::os::unix::net::UnixListener;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::util::rng::Rng;
+
+use super::{AgentAddr, WireStream};
+
+/// One direction's seeded fault schedule. Build with [`FaultPlan::clean`]
+/// and layer faults on with the `with_*` builders; a clean plan passes
+/// bytes through untouched (and unfragmented), so the degenerate proxy
+/// is a plain relay.
+#[derive(Debug)]
+pub struct FaultPlan {
+    rng: Rng,
+    /// Per-op probability of an injected delay.
+    delay_chance: f64,
+    delay_ms: (f64, f64),
+    /// Max bytes one op may move (0 = unlimited). Each op draws a fresh
+    /// size in `1..=max`, modelling adversarial short reads/writes.
+    max_chunk: usize,
+    /// Byte offsets to corrupt (one random bit each), ascending.
+    corrupt_at: Vec<u64>,
+    corrupt_i: usize,
+    /// One-shot stall: when the stream reaches this offset, sleep.
+    stall_at: Option<u64>,
+    stall_ms: u64,
+    stalled: bool,
+    /// Sever the direction once this offset is reached.
+    disconnect_at: Option<u64>,
+    severed: bool,
+    pos: u64,
+    /// Early-out for sleeps (set by the proxy's stop flag).
+    abort: Option<Arc<AtomicBool>>,
+}
+
+impl FaultPlan {
+    /// A no-fault plan: bytes pass through verbatim in full-size ops.
+    pub fn clean(seed: u64) -> FaultPlan {
+        FaultPlan {
+            rng: Rng::new(seed),
+            delay_chance: 0.0,
+            delay_ms: (0.0, 0.0),
+            max_chunk: 0,
+            corrupt_at: Vec::new(),
+            corrupt_i: 0,
+            stall_at: None,
+            stall_ms: 0,
+            stalled: false,
+            disconnect_at: None,
+            severed: false,
+            pos: 0,
+            abort: None,
+        }
+    }
+
+    /// Inject a `lo_ms..hi_ms` sleep before an op with probability
+    /// `chance`.
+    pub fn with_delays(mut self, chance: f64, lo_ms: f64, hi_ms: f64) -> FaultPlan {
+        self.delay_chance = chance;
+        self.delay_ms = (lo_ms, hi_ms);
+        self
+    }
+
+    /// Fragment the stream: each op moves at most a fresh `1..=max`
+    /// bytes.
+    pub fn with_fragmentation(mut self, max: usize) -> FaultPlan {
+        self.max_chunk = max;
+        self
+    }
+
+    /// Flip one random bit in the byte at each listed stream offset.
+    pub fn with_corruption_at(mut self, mut offsets: Vec<u64>) -> FaultPlan {
+        offsets.sort_unstable();
+        self.corrupt_at = offsets;
+        self
+    }
+
+    /// Sleep `ms` once, when the stream reaches `offset` — a
+    /// stalled-but-connected link.
+    pub fn with_stall_at(mut self, offset: u64, ms: u64) -> FaultPlan {
+        self.stall_at = Some(offset);
+        self.stall_ms = ms;
+        self
+    }
+
+    /// Sever the direction once `offset` bytes have passed.
+    pub fn with_disconnect_at(mut self, offset: u64) -> FaultPlan {
+        self.disconnect_at = Some(offset);
+        self
+    }
+
+    fn with_abort(mut self, abort: Arc<AtomicBool>) -> FaultPlan {
+        self.abort = Some(abort);
+        self
+    }
+
+    /// Gate one I/O op that wants to move up to `len` bytes: runs
+    /// scheduled delays/stalls, severs at the disconnect offset, and
+    /// returns how many bytes the op may move.
+    pub fn admit(&mut self, len: usize) -> io::Result<usize> {
+        if len == 0 {
+            return Ok(0);
+        }
+        if self.severed {
+            return Err(io::ErrorKind::ConnectionReset.into());
+        }
+        if let Some(at) = self.disconnect_at {
+            if self.pos >= at {
+                self.severed = true;
+                return Err(io::ErrorKind::ConnectionReset.into());
+            }
+        }
+        if let Some(at) = self.stall_at {
+            if !self.stalled && self.pos >= at {
+                self.stalled = true;
+                let ms = self.stall_ms;
+                self.sleep_ms(ms as f64);
+            }
+        }
+        if self.delay_chance > 0.0 && self.rng.chance(self.delay_chance) {
+            let (lo, hi) = self.delay_ms;
+            let ms = lo + (hi - lo) * self.rng.f64();
+            self.sleep_ms(ms);
+        }
+        let mut cap = len;
+        if self.max_chunk > 0 {
+            cap = cap.min(self.rng.range(1, self.max_chunk));
+        }
+        if let Some(at) = self.disconnect_at {
+            // Never move bytes past the scheduled cut (at > pos here).
+            cap = cap.min((at - self.pos) as usize);
+        }
+        Ok(cap.max(1).min(len))
+    }
+
+    /// Account `chunk` as moved: applies scheduled bit corruption in
+    /// place and advances the stream offset.
+    pub fn commit(&mut self, chunk: &mut [u8]) {
+        let start = self.pos;
+        let end = start + chunk.len() as u64;
+        while self.corrupt_i < self.corrupt_at.len() {
+            let at = self.corrupt_at[self.corrupt_i];
+            if at < start {
+                self.corrupt_i += 1;
+                continue;
+            }
+            if at >= end {
+                break;
+            }
+            let bit = (self.rng.next_u64() % 8) as u8;
+            chunk[(at - start) as usize] ^= 1u8 << bit;
+            self.corrupt_i += 1;
+        }
+        self.pos = end;
+    }
+
+    /// Bytes moved through this direction so far.
+    pub fn offset(&self) -> u64 {
+        self.pos
+    }
+
+    /// Interruptible sleep: 10 ms slices, early-out on the abort flag.
+    fn sleep_ms(&self, ms: f64) {
+        let deadline =
+            std::time::Instant::now() + Duration::from_secs_f64(ms.max(0.0) / 1000.0);
+        loop {
+            if let Some(abort) = &self.abort {
+                if abort.load(Ordering::SeqCst) {
+                    return;
+                }
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return;
+            }
+            std::thread::sleep((deadline - now).min(Duration::from_millis(10)));
+        }
+    }
+}
+
+/// A byte stream with a [`FaultPlan`] on each direction.
+pub struct ChaosStream<S> {
+    inner: S,
+    read_plan: FaultPlan,
+    write_plan: FaultPlan,
+}
+
+impl<S> ChaosStream<S> {
+    pub fn new(inner: S, read_plan: FaultPlan, write_plan: FaultPlan) -> ChaosStream<S> {
+        ChaosStream { inner, read_plan, write_plan }
+    }
+
+    pub fn into_inner(self) -> S {
+        self.inner
+    }
+}
+
+impl<S: Read> Read for ChaosStream<S> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        let cap = self.read_plan.admit(buf.len())?;
+        if cap == 0 {
+            return Ok(0);
+        }
+        let n = self.inner.read(&mut buf[..cap])?;
+        self.read_plan.commit(&mut buf[..n]);
+        Ok(n)
+    }
+}
+
+impl<S: Write> Write for ChaosStream<S> {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        let cap = self.write_plan.admit(buf.len())?;
+        if cap == 0 {
+            return Ok(0);
+        }
+        // Corruption must hit the wire, so mutate a scratch copy and
+        // push all of it; reporting `cap` keeps the caller's view of
+        // progress consistent with the plan's offset accounting.
+        let mut scratch = buf[..cap].to_vec();
+        self.write_plan.commit(&mut scratch);
+        self.inner.write_all(&scratch)?;
+        Ok(cap)
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+/// The fault plans for one proxied connection: one per direction.
+#[derive(Debug)]
+pub struct ConnPlans {
+    /// Applied to coordinator -> agent bytes.
+    pub to_upstream: FaultPlan,
+    /// Applied to agent -> coordinator bytes.
+    pub to_client: FaultPlan,
+}
+
+impl ConnPlans {
+    /// A plain relay for this connection.
+    pub fn clean(seed: u64) -> ConnPlans {
+        ConnPlans {
+            to_upstream: FaultPlan::clean(seed),
+            to_client: FaultPlan::clean(seed.wrapping_add(1)),
+        }
+    }
+}
+
+enum ProxyListener {
+    Unix(UnixListener),
+    Tcp(TcpListener),
+}
+
+impl ProxyListener {
+    fn accept(&self) -> io::Result<WireStream> {
+        match self {
+            ProxyListener::Unix(l) => {
+                let (s, _) = l.accept()?;
+                s.set_nonblocking(false)?;
+                Ok(WireStream::Unix(s))
+            }
+            ProxyListener::Tcp(l) => {
+                let (s, _) = l.accept()?;
+                s.set_nonblocking(false)?;
+                let _ = s.set_nodelay(true);
+                Ok(WireStream::Tcp(s))
+            }
+        }
+    }
+}
+
+/// A chaos man-in-the-middle: accepts coordinator connections on its
+/// own address and relays each to `upstream`, running every byte
+/// through the connection's [`ConnPlans`]. The nth accepted connection
+/// consumes `plans[n]`; connections beyond the supplied list relay
+/// cleanly. Dropping (or [`ChaosProxy::stop`]ping) the proxy severs all
+/// relayed connections and joins its threads — stalls never outlive
+/// the proxy.
+pub struct ChaosProxy {
+    addr: AgentAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    pumps: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    conns: Arc<Mutex<Vec<WireStream>>>,
+    uds_path: Option<PathBuf>,
+}
+
+impl ChaosProxy {
+    /// Listen on a Unix socket at `path` (replacing any stale file).
+    pub fn start_uds(
+        path: impl AsRef<Path>,
+        upstream: AgentAddr,
+        plans: Vec<ConnPlans>,
+    ) -> Result<ChaosProxy> {
+        let path = path.as_ref().to_path_buf();
+        let _ = std::fs::remove_file(&path);
+        let listener = UnixListener::bind(&path)
+            .with_context(|| format!("binding chaos proxy at uds:{}", path.display()))?;
+        listener.set_nonblocking(true)?;
+        ChaosProxy::spawn(
+            ProxyListener::Unix(listener),
+            AgentAddr::Uds(path.clone()),
+            Some(path),
+            upstream,
+            plans,
+        )
+    }
+
+    /// Listen on a TCP address; `host:0` picks a free port (see
+    /// [`ChaosProxy::addr`] for the bound address).
+    pub fn start_tcp(
+        listen: &str,
+        upstream: AgentAddr,
+        plans: Vec<ConnPlans>,
+    ) -> Result<ChaosProxy> {
+        let listener = TcpListener::bind(listen)
+            .with_context(|| format!("binding chaos proxy at tcp:{listen}"))?;
+        let bound = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        ChaosProxy::spawn(
+            ProxyListener::Tcp(listener),
+            AgentAddr::Tcp(bound.to_string()),
+            None,
+            upstream,
+            plans,
+        )
+    }
+
+    fn spawn(
+        listener: ProxyListener,
+        addr: AgentAddr,
+        uds_path: Option<PathBuf>,
+        upstream: AgentAddr,
+        plans: Vec<ConnPlans>,
+    ) -> Result<ChaosProxy> {
+        let stop = Arc::new(AtomicBool::new(false));
+        let pumps: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let conns: Arc<Mutex<Vec<WireStream>>> = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let stop = Arc::clone(&stop);
+            let pumps = Arc::clone(&pumps);
+            let conns = Arc::clone(&conns);
+            let mut queue: VecDeque<ConnPlans> = plans.into();
+            let mut accepted = 0u64;
+            std::thread::Builder::new()
+                .name("amp4ec-chaos-accept".to_string())
+                .spawn(move || loop {
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    match listener.accept() {
+                        Ok(client) => {
+                            accepted += 1;
+                            let plan = queue
+                                .pop_front()
+                                .unwrap_or_else(|| ConnPlans::clean(accepted));
+                            if let Err(e) = relay(
+                                client,
+                                &upstream,
+                                plan,
+                                &stop,
+                                &pumps,
+                                &conns,
+                            ) {
+                                crate::log_warn!(
+                                    "chaos",
+                                    "relay to {upstream} failed: {e:#}"
+                                );
+                            }
+                        }
+                        Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(5));
+                        }
+                        Err(_) => {
+                            if stop.load(Ordering::SeqCst) {
+                                break;
+                            }
+                            std::thread::sleep(Duration::from_millis(5));
+                        }
+                    }
+                })
+                .context("spawning chaos proxy accept thread")?
+        };
+        Ok(ChaosProxy {
+            addr,
+            stop,
+            accept: Some(accept),
+            pumps,
+            conns,
+            uds_path,
+        })
+    }
+
+    /// Where the proxy listens — hand this to the coordinator in place
+    /// of the agent's own address.
+    pub fn addr(&self) -> &AgentAddr {
+        &self.addr
+    }
+
+    /// Sever every relayed connection and join all proxy threads.
+    pub fn stop(mut self) {
+        self.stop_inner();
+    }
+
+    fn stop_inner(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        for conn in self.conns.lock().unwrap().iter() {
+            conn.shutdown();
+        }
+        if let Some(t) = self.accept.take() {
+            let _ = t.join();
+        }
+        let pumps = std::mem::take(&mut *self.pumps.lock().unwrap());
+        for t in pumps {
+            let _ = t.join();
+        }
+        if let Some(path) = self.uds_path.take() {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+impl Drop for ChaosProxy {
+    fn drop(&mut self) {
+        if self.accept.is_some() {
+            self.stop_inner();
+        }
+    }
+}
+
+/// Wire one accepted client to the upstream agent: two pump threads,
+/// one per direction, each with its own plan.
+fn relay(
+    client: WireStream,
+    upstream: &AgentAddr,
+    plan: ConnPlans,
+    stop: &Arc<AtomicBool>,
+    pumps: &Mutex<Vec<JoinHandle<()>>>,
+    conns: &Mutex<Vec<WireStream>>,
+) -> Result<()> {
+    let agent = upstream.connect_retry(Duration::from_secs(5))?;
+    // Short read timeouts keep pumps responsive to the stop flag.
+    let _ = client.set_read_timeout(Some(Duration::from_millis(50)));
+    let _ = agent.set_read_timeout(Some(Duration::from_millis(50)));
+    let c2 = client.try_clone().context("cloning client stream")?;
+    let a2 = agent.try_clone().context("cloning agent stream")?;
+    {
+        let mut held = conns.lock().unwrap();
+        held.push(client.try_clone().context("cloning client stream")?);
+        held.push(agent.try_clone().context("cloning agent stream")?);
+    }
+    let mut held = pumps.lock().unwrap();
+    let up_plan = plan.to_upstream.with_abort(Arc::clone(stop));
+    let down_plan = plan.to_client.with_abort(Arc::clone(stop));
+    let up_stop = Arc::clone(stop);
+    let down_stop = Arc::clone(stop);
+    held.push(
+        std::thread::Builder::new()
+            .name("amp4ec-chaos-up".to_string())
+            .spawn(move || pump(client, a2, up_plan, up_stop))
+            .context("spawning chaos pump")?,
+    );
+    held.push(
+        std::thread::Builder::new()
+            .name("amp4ec-chaos-down".to_string())
+            .spawn(move || pump(agent, c2, down_plan, down_stop))
+            .context("spawning chaos pump")?,
+    );
+    Ok(())
+}
+
+/// Forward bytes `from -> to` through `plan` until EOF, a scheduled
+/// disconnect, a socket error, or the stop flag. Exiting severs both
+/// streams so the peer direction (and the real endpoints) observe the
+/// failure instead of hanging.
+fn pump(
+    mut from: WireStream,
+    mut to: WireStream,
+    mut plan: FaultPlan,
+    stop: Arc<AtomicBool>,
+) {
+    let mut buf = vec![0u8; 16 * 1024];
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let cap = match plan.admit(buf.len()) {
+            Ok(c) => c,
+            Err(_) => break,
+        };
+        let n = match from.read(&mut buf[..cap]) {
+            Ok(0) => break,
+            Ok(n) => n,
+            Err(e)
+                if e.kind() == io::ErrorKind::WouldBlock
+                    || e.kind() == io::ErrorKind::TimedOut =>
+            {
+                continue;
+            }
+            Err(_) => break,
+        };
+        plan.commit(&mut buf[..n]);
+        if to.write_all(&buf[..n]).is_err() {
+            break;
+        }
+        let _ = to.flush();
+    }
+    from.shutdown();
+    to.shutdown();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::frame::{self, Frame};
+    use super::*;
+    use crate::runtime::Tensor;
+
+    fn tensor() -> Tensor {
+        Tensor::new(vec![4, 8], (0..32).map(|i| i as f32 * 0.5 - 3.0).collect())
+            .unwrap()
+    }
+
+    #[test]
+    fn clean_plan_is_transparent() {
+        let mut buf = Vec::new();
+        let mut w = ChaosStream::new(
+            &mut buf,
+            FaultPlan::clean(1),
+            FaultPlan::clean(2),
+        );
+        frame::write_frame(&mut w, &Frame::Execute { seq: 5, tensor: tensor() })
+            .unwrap();
+        let mut clean = Vec::new();
+        frame::write_frame(&mut clean, &Frame::Execute { seq: 5, tensor: tensor() })
+            .unwrap();
+        assert_eq!(buf, clean);
+    }
+
+    #[test]
+    fn fragmentation_and_delays_preserve_bits() {
+        let t = tensor();
+        let mut wire = Vec::new();
+        let mut w = ChaosStream::new(
+            &mut wire,
+            FaultPlan::clean(0),
+            FaultPlan::clean(7).with_fragmentation(5),
+        );
+        frame::write_frame(&mut w, &Frame::ExecuteOk {
+            seq: 9,
+            compute_ms: 1.25,
+            tensor: t.clone(),
+        })
+        .unwrap();
+        let mut r = ChaosStream::new(
+            wire.as_slice(),
+            FaultPlan::clean(11).with_fragmentation(3).with_delays(0.2, 0.0, 0.2),
+            FaultPlan::clean(0),
+        );
+        match frame::read_frame(&mut r).unwrap() {
+            Frame::ExecuteOk { seq, compute_ms, tensor: back } => {
+                assert_eq!(seq, 9);
+                assert_eq!(compute_ms, 1.25);
+                assert_eq!(back.shape, t.shape);
+                for (x, y) in back.data().iter().zip(t.data()) {
+                    assert_eq!(x.to_bits(), y.to_bits());
+                }
+            }
+            f => panic!("got {f:?}"),
+        }
+    }
+
+    #[test]
+    fn scheduled_corruption_is_caught_by_crc() {
+        let mut wire = Vec::new();
+        frame::write_frame(&mut wire, &Frame::Execute { seq: 3, tensor: tensor() })
+            .unwrap();
+        // Corrupt a byte inside the tensor payload (past the 9-byte
+        // header), under fragmentation, and decode: must error cleanly.
+        let mut r = ChaosStream::new(
+            wire.as_slice(),
+            FaultPlan::clean(21)
+                .with_fragmentation(7)
+                .with_corruption_at(vec![wire.len() as u64 - 5]),
+            FaultPlan::clean(0),
+        );
+        let err = frame::read_frame(&mut r);
+        assert!(err.is_err(), "corrupted frame decoded: {err:?}");
+    }
+
+    #[test]
+    fn scheduled_disconnect_severs_mid_frame() {
+        let mut wire = Vec::new();
+        frame::write_frame(&mut wire, &Frame::Execute { seq: 4, tensor: tensor() })
+            .unwrap();
+        let mut r = ChaosStream::new(
+            wire.as_slice(),
+            FaultPlan::clean(31).with_disconnect_at(wire.len() as u64 / 2),
+            FaultPlan::clean(0),
+        );
+        assert!(frame::read_frame(&mut r).is_err());
+        // Every later op keeps failing.
+        let mut byte = [0u8; 1];
+        assert!(r.read(&mut byte).is_err());
+    }
+}

@@ -1,17 +1,21 @@
 //! Length-prefixed binary wire protocol for coordinator <-> node-agent
 //! traffic.
 //!
-//! Every message is one frame: `[len: u32 LE][kind: u8][payload]`,
-//! where `len` counts the kind byte plus the payload. Activation frames
-//! ([`Frame::Execute`] / [`Frame::ExecuteOk`]) carry a tensor as
+//! Every message is one frame:
+//! `[len: u32 LE][crc: u32 LE][kind: u8][payload]`, where `len` counts
+//! the kind byte plus the payload and `crc` is a CRC32 (IEEE) over the
+//! same kind+payload bytes. Activation frames ([`Frame::Execute`] /
+//! [`Frame::ExecuteOk`]) carry a tensor as
 //! `[ndim: u8][dims: u32 x ndim][f32 LE x product]`; encoding writes
 //! the header and the tensor's `data()` slice (an offset/len view of
 //! its shared `TensorBuf`) with one vectored write — no re-marshal of
 //! the activation — and decoding lands the rows directly into a buffer
-//! from the global [`BufferPool`]. Malformed input (truncated header,
-//! oversized length, mid-frame EOF, dimension overflow) always returns
-//! an error, never panics, and never allocates proportionally to an
-//! unvalidated length.
+//! from the global [`BufferPool`], folding the CRC incrementally as
+//! bytes stream in so integrity checking never buffers the frame twice.
+//! Malformed input (truncated header, oversized length, mid-frame EOF,
+//! dimension overflow, CRC mismatch) always returns an error, never
+//! panics, never delivers corrupted tensor bytes, and never allocates
+//! proportionally to an unvalidated length.
 //!
 //! All frame traffic is counted in [`crate::metrics::wire`].
 
@@ -27,7 +31,8 @@ use crate::util::pool::BufferPool;
 /// stray non-protocol peer on the first frame.
 pub const WIRE_MAGIC: u32 = 0xA4EC_0001;
 /// Protocol version negotiated in the Hello/HelloAck handshake.
-pub const WIRE_VERSION: u16 = 1;
+/// Version 2 added the per-frame CRC32 header field.
+pub const WIRE_VERSION: u16 = 2;
 /// Hard ceiling on one frame's `len` (kind + payload). 256 MiB covers
 /// any realistic activation micro-batch while bounding what a corrupt
 /// length prefix can make the decoder read.
@@ -42,6 +47,51 @@ const KIND_EXECUTE: u8 = 6;
 const KIND_EXECUTE_OK: u8 = 7;
 const KIND_EXECUTE_ERR: u8 = 8;
 const KIND_SHUTDOWN: u8 = 9;
+
+// ---- CRC32 (IEEE 802.3 / zlib polynomial) ----------------------------
+//
+// Table-driven, built at compile time so the integrity check costs one
+// lookup + xor per byte with no runtime init and no dependency.
+
+const fn build_crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC32_TABLE: [u32; 256] = build_crc32_table();
+
+/// Initial CRC32 state; feed bytes with [`crc32_update`] and close with
+/// [`crc32_finish`].
+pub const CRC32_INIT: u32 = 0xFFFF_FFFF;
+
+/// Fold `bytes` into a running CRC32 state.
+pub fn crc32_update(mut state: u32, bytes: &[u8]) -> u32 {
+    for &b in bytes {
+        state = CRC32_TABLE[((state ^ b as u32) & 0xFF) as usize] ^ (state >> 8);
+    }
+    state
+}
+
+/// Finalize a CRC32 state into the checksum carried on the wire.
+pub fn crc32_finish(state: u32) -> u32 {
+    state ^ 0xFFFF_FFFF
+}
+
+/// One-shot CRC32 of `bytes`.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    crc32_finish(crc32_update(CRC32_INIT, bytes))
+}
 
 /// Deployment order for one synthetic (sim) stage: everything the agent
 /// needs to rebuild the stage's [`crate::cluster::VirtualNode`] and run
@@ -359,8 +409,9 @@ fn encode_f32s(data: &[f32]) -> std::borrow::Cow<'_, [u8]> {
     std::borrow::Cow::Owned(out)
 }
 
-/// Read `n` f32s straight into a pooled buffer.
-fn read_f32s_pooled(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
+/// Read `n` f32s straight into a pooled buffer, folding the wire bytes
+/// into the running frame CRC.
+fn read_f32s_pooled(r: &mut impl Read, n: usize, crc: &mut u32) -> Result<Vec<f32>> {
     let mut data = BufferPool::global().take(n);
     data.resize(n, 0.0);
     #[cfg(target_endian = "little")]
@@ -371,12 +422,14 @@ fn read_f32s_pooled(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
             std::slice::from_raw_parts_mut(data.as_mut_ptr().cast::<u8>(), byte_len)
         };
         r.read_exact(bytes).context("mid-frame EOF in tensor data")?;
+        *crc = crc32_update(*crc, bytes);
     }
     #[cfg(not(target_endian = "little"))]
     {
         let mut b = [0u8; 4];
         for v in data.iter_mut() {
             r.read_exact(&mut b).context("mid-frame EOF in tensor data")?;
+            *crc = crc32_update(*crc, &b);
             *v = f32::from_le_bytes(b);
         }
     }
@@ -432,9 +485,10 @@ fn write_all_vectored(
 /// [`crate::metrics::wire`].
 pub fn write_frame(w: &mut impl Write, frame: &Frame) -> Result<()> {
     let t0 = Instant::now();
-    // Header: 4-byte length placeholder, kind, then the scalar body.
+    // Header: 4-byte length + 4-byte CRC placeholders, kind, then the
+    // scalar body.
     let mut head: Vec<u8> = Vec::with_capacity(64);
-    head.extend_from_slice(&[0, 0, 0, 0]);
+    head.extend_from_slice(&[0; 8]);
     let mut tensor: Option<&Tensor> = None;
     match frame {
         Frame::Hello { version } => {
@@ -516,12 +570,17 @@ pub fn write_frame(w: &mut impl Write, frame: &Frame) -> Result<()> {
         Some(t) => encode_f32s(t.data()),
         None => std::borrow::Cow::Borrowed(&[][..]),
     };
-    let body = head.len() - 4 + data.len();
+    let body = head.len() - 8 + data.len();
     anyhow::ensure!(
         body <= MAX_FRAME_BYTES as usize,
         "frame of {body} bytes exceeds MAX_FRAME_BYTES ({MAX_FRAME_BYTES})"
     );
+    let crc = crc32_finish(crc32_update(
+        crc32_update(CRC32_INIT, &head[8..]),
+        &data,
+    ));
     head[..4].copy_from_slice(&(body as u32).to_le_bytes());
+    head[4..8].copy_from_slice(&crc.to_le_bytes());
     if data.is_empty() {
         w.write_all(&head)
     } else {
@@ -529,7 +588,7 @@ pub fn write_frame(w: &mut impl Write, frame: &Frame) -> Result<()> {
     }
     .with_context(|| format!("writing {} frame", frame.kind_name()))?;
     crate::metrics::wire::count_tx(
-        (4 + body) as u64,
+        (8 + body) as u64,
         t0.elapsed().as_nanos() as u64,
     );
     Ok(())
@@ -545,6 +604,8 @@ fn read_tensor_body(
     r: &mut impl Read,
     body_len: usize,
     with_ms: bool,
+    mut crc: u32,
+    want_crc: u32,
 ) -> Result<(u64, f64, Tensor)> {
     let fixed = 8 + if with_ms { 8 } else { 0 } + 1;
     anyhow::ensure!(
@@ -554,6 +615,7 @@ fn read_tensor_body(
     let mut prefix = [0u8; 17];
     r.read_exact(&mut prefix[..fixed])
         .context("mid-frame EOF in tensor prefix")?;
+    crc = crc32_update(crc, &prefix[..fixed]);
     let mut cur = Cur::new(&prefix[..fixed]);
     let seq = cur.u64()?;
     let compute_ms = if with_ms { cur.f64()? } else { 0.0 };
@@ -567,6 +629,7 @@ fn read_tensor_body(
     let mut dim_buf = vec![0u8; dims_bytes];
     r.read_exact(&mut dim_buf)
         .context("mid-frame EOF in tensor dims")?;
+    crc = crc32_update(crc, &dim_buf);
     let mut cur = Cur::new(&dim_buf);
     let mut shape = Vec::with_capacity(ndim);
     let mut elems: usize = 1;
@@ -583,7 +646,13 @@ fn read_tensor_body(
         "tensor frame length mismatch: body is {body_len} bytes but shape \
          {shape:?} needs {expected}"
     );
-    let data = read_f32s_pooled(r, elems)?;
+    let data = read_f32s_pooled(r, elems, &mut crc)?;
+    let got = crc32_finish(crc);
+    anyhow::ensure!(
+        got == want_crc,
+        "tensor frame CRC mismatch: computed {got:#010x}, header says \
+         {want_crc:#010x}"
+    );
     let tensor = Tensor::new(shape, data)?;
     Ok((seq, compute_ms, tensor))
 }
@@ -602,22 +671,35 @@ pub fn read_frame(r: &mut impl Read) -> Result<Frame> {
         len <= MAX_FRAME_BYTES,
         "frame length {len} exceeds MAX_FRAME_BYTES ({MAX_FRAME_BYTES})"
     );
+    let mut crc4 = [0u8; 4];
+    r.read_exact(&mut crc4).context("reading frame CRC")?;
+    let want_crc = u32::from_le_bytes(crc4);
     let mut kind = [0u8; 1];
     r.read_exact(&mut kind).context("reading frame kind")?;
+    let crc0 = crc32_update(CRC32_INIT, &kind);
     let body_len = (len - 1) as usize;
     let frame = match kind[0] {
         KIND_EXECUTE => {
-            let (seq, _, tensor) = read_tensor_body(r, body_len, false)?;
+            let (seq, _, tensor) =
+                read_tensor_body(r, body_len, false, crc0, want_crc)?;
             Frame::Execute { seq, tensor }
         }
         KIND_EXECUTE_OK => {
-            let (seq, compute_ms, tensor) = read_tensor_body(r, body_len, true)?;
+            let (seq, compute_ms, tensor) =
+                read_tensor_body(r, body_len, true, crc0, want_crc)?;
             Frame::ExecuteOk { seq, compute_ms, tensor }
         }
         k => {
-            // Small scalar frames: read the body, then parse it fully.
+            // Small scalar frames: read the body, check its CRC, then
+            // parse it fully.
             let mut body = vec![0u8; body_len];
             r.read_exact(&mut body).context("mid-frame EOF")?;
+            let got = crc32_finish(crc32_update(crc0, &body));
+            anyhow::ensure!(
+                got == want_crc,
+                "frame CRC mismatch: computed {got:#010x}, header says \
+                 {want_crc:#010x}"
+            );
             let mut cur = Cur::new(&body);
             let frame = match k {
                 KIND_HELLO => {
@@ -690,7 +772,7 @@ pub fn read_frame(r: &mut impl Read) -> Result<Frame> {
         }
     };
     crate::metrics::wire::count_rx(
-        (4 + len) as u64,
+        (8 + len) as u64,
         t0.elapsed().as_nanos() as u64,
     );
     Ok(frame)
@@ -708,6 +790,16 @@ mod tests {
         let out = read_frame(&mut slice).unwrap();
         assert!(slice.is_empty(), "decoder left {} bytes", slice.len());
         out
+    }
+
+    /// Hand-craft a raw v2 frame (`len` + correct CRC + kind + body).
+    fn raw_frame(kind: u8, body: &[u8]) -> Vec<u8> {
+        let crc = crc32_finish(crc32_update(crc32_update(CRC32_INIT, &[kind]), body));
+        let mut raw = ((1 + body.len()) as u32).to_le_bytes().to_vec();
+        raw.extend_from_slice(&crc.to_le_bytes());
+        raw.push(kind);
+        raw.extend_from_slice(body);
+        raw
     }
 
     fn assert_tensor_bits(a: &Tensor, b: &Tensor) {
@@ -867,25 +959,26 @@ mod tests {
     fn oversized_and_malformed_lengths_error() {
         // Oversized length prefix: rejected before any allocation.
         let mut raw = u32::MAX.to_le_bytes().to_vec();
+        raw.extend_from_slice(&0u32.to_le_bytes());
         raw.push(KIND_SHUTDOWN);
         assert!(read_frame(&mut raw.as_slice()).is_err());
         // Zero-length frame.
         let raw = 0u32.to_le_bytes().to_vec();
         assert!(read_frame(&mut raw.as_slice()).is_err());
-        // Unknown kind.
-        let mut raw = 1u32.to_le_bytes().to_vec();
-        raw.push(200);
+        // Unknown kind (with a correct CRC so the kind check is what
+        // fires).
+        let raw = raw_frame(200, &[]);
         assert!(read_frame(&mut raw.as_slice()).is_err());
         // Declared length larger than the actual body (EOF mid-body).
         let mut raw = 64u32.to_le_bytes().to_vec();
+        raw.extend_from_slice(&0u32.to_le_bytes());
         raw.push(KIND_DEPLOY_ACK);
         raw.extend_from_slice(&3u32.to_le_bytes());
         assert!(read_frame(&mut raw.as_slice()).is_err());
         // Trailing garbage after a well-formed body.
-        let mut raw = 6u32.to_le_bytes().to_vec();
-        raw.push(KIND_DEPLOY_ACK);
-        raw.extend_from_slice(&3u32.to_le_bytes());
-        raw.push(0xFF);
+        let mut body = 3u32.to_le_bytes().to_vec();
+        body.push(0xFF);
+        let raw = raw_frame(KIND_DEPLOY_ACK, &body);
         assert!(read_frame(&mut raw.as_slice()).is_err());
     }
 
@@ -894,39 +987,32 @@ mod tests {
         // Hand-craft an Execute frame whose dims multiply past usize:
         // 4 dims of u32::MAX each. The decoder must reject it before
         // sizing any buffer.
-        let ndim = 4u8;
-        let body_len = 8 + 1 + ndim as usize * 4; // seq + ndim + dims (no data)
-        let mut raw = (body_len as u32 + 1).to_le_bytes().to_vec();
-        raw.push(KIND_EXECUTE);
-        raw.extend_from_slice(&1u64.to_le_bytes());
-        raw.push(ndim);
-        for _ in 0..ndim {
-            raw.extend_from_slice(&u32::MAX.to_le_bytes());
+        let mut body = 1u64.to_le_bytes().to_vec();
+        body.push(4);
+        for _ in 0..4 {
+            body.extend_from_slice(&u32::MAX.to_le_bytes());
         }
-        let err = read_frame(&mut raw.as_slice());
-        assert!(err.is_err());
+        let raw = raw_frame(KIND_EXECUTE, &body);
+        assert!(read_frame(&mut raw.as_slice()).is_err());
         // A shape/length mismatch (valid dims, missing data) also errors.
-        let mut raw = (8u32 + 1 + 4 + 1).to_le_bytes().to_vec();
-        raw.push(KIND_EXECUTE);
-        raw.extend_from_slice(&1u64.to_le_bytes());
-        raw.push(1);
-        raw.extend_from_slice(&100u32.to_le_bytes());
-        raw.push(0);
+        let mut body = 1u64.to_le_bytes().to_vec();
+        body.push(1);
+        body.extend_from_slice(&100u32.to_le_bytes());
+        body.push(0);
+        let raw = raw_frame(KIND_EXECUTE, &body);
         assert!(read_frame(&mut raw.as_slice()).is_err());
         // Zero-rank tensor frames are malformed.
-        let mut raw = (8u32 + 1).to_le_bytes().to_vec();
-        raw.push(KIND_EXECUTE);
-        raw.extend_from_slice(&1u64.to_le_bytes());
-        raw.push(0);
+        let mut body = 1u64.to_le_bytes().to_vec();
+        body.push(0);
+        let raw = raw_frame(KIND_EXECUTE, &body);
         assert!(read_frame(&mut raw.as_slice()).is_err());
     }
 
     #[test]
     fn hello_rejects_bad_magic() {
-        let mut raw = 7u32.to_le_bytes().to_vec();
-        raw.push(KIND_HELLO);
-        raw.extend_from_slice(&0xDEAD_BEEFu32.to_le_bytes());
-        raw.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+        let mut body = 0xDEAD_BEEFu32.to_le_bytes().to_vec();
+        body.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+        let raw = raw_frame(KIND_HELLO, &body);
         assert!(read_frame(&mut raw.as_slice()).is_err());
     }
 
@@ -939,7 +1025,160 @@ mod tests {
         let delta = crate::metrics::wire::snapshot().since(&before);
         assert!(delta.frames_tx >= 1);
         assert!(delta.frames_rx >= 1);
-        assert!(delta.bytes_tx >= 5);
+        assert!(delta.bytes_tx >= 9);
         assert_eq!(delta.bytes_tx, delta.bytes_rx);
+    }
+
+    #[test]
+    fn crc_known_vector() {
+        // The standard CRC32 (IEEE) check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        // Incremental folding matches the one-shot result.
+        let s = crc32_update(CRC32_INIT, b"1234");
+        let s = crc32_update(s, b"56789");
+        assert_eq!(crc32_finish(s), 0xCBF4_3926);
+    }
+
+    /// Reader that hands back bytes in a fixed schedule of chunk sizes
+    /// (cycling), modelling adversarial short reads from the kernel.
+    struct ChunkedReader<'a> {
+        buf: &'a [u8],
+        pos: usize,
+        chunks: Vec<usize>,
+        i: usize,
+    }
+
+    impl Read for ChunkedReader<'_> {
+        fn read(&mut self, out: &mut [u8]) -> io::Result<usize> {
+            let remaining = self.buf.len() - self.pos;
+            if remaining == 0 {
+                return Ok(0);
+            }
+            let want = self.chunks[self.i % self.chunks.len()].max(1);
+            self.i += 1;
+            let n = want.min(out.len()).min(remaining);
+            out[..n].copy_from_slice(&self.buf[self.pos..self.pos + n]);
+            self.pos += n;
+            Ok(n)
+        }
+    }
+
+    /// Writer that accepts at most a scheduled number of bytes per
+    /// call, modelling adversarial partial writes (including partial
+    /// vectored writes through `write_all_vectored`).
+    struct TrickleWriter {
+        out: Vec<u8>,
+        caps: Vec<usize>,
+        i: usize,
+    }
+
+    impl Write for TrickleWriter {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            let cap = self.caps[self.i % self.caps.len()].max(1);
+            self.i += 1;
+            let n = cap.min(buf.len());
+            self.out.extend_from_slice(&buf[..n]);
+            Ok(n)
+        }
+
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn fragmented_reads_reassemble_bit_identically() {
+        // A stream of mixed frames, re-read under adversarial
+        // fragmentation schedules: 1-byte reads, tiny primes, and a
+        // split at every byte boundary. Every schedule must reassemble
+        // the exact same frames.
+        let t = Tensor::new(vec![3, 5], (0..15).map(|i| i as f32 * 1.25).collect())
+            .unwrap();
+        let frames = vec![
+            Frame::Hello { version: WIRE_VERSION },
+            Frame::Execute { seq: 11, tensor: t.clone() },
+            Frame::ExecuteOk { seq: 11, compute_ms: 3.5, tensor: t.clone() },
+            Frame::ExecuteErr { seq: 12, message: "slow".into() },
+            Frame::Shutdown,
+        ];
+        let mut buf = Vec::new();
+        for f in &frames {
+            write_frame(&mut buf, f).unwrap();
+        }
+        let mut schedules: Vec<Vec<usize>> =
+            vec![vec![1], vec![2], vec![3, 1, 7], vec![13, 5, 2, 1]];
+        for cut in 1..buf.len() {
+            schedules.push(vec![cut, usize::MAX]);
+        }
+        for chunks in schedules {
+            let mut r = ChunkedReader { buf: &buf, pos: 0, chunks, i: 0 };
+            for want in &frames {
+                let got = read_frame(&mut r).unwrap();
+                assert_eq!(got.kind_name(), want.kind_name());
+                match (&got, want) {
+                    (
+                        Frame::Execute { seq: gs, tensor: gt },
+                        Frame::Execute { seq: ws, tensor: wt },
+                    ) => {
+                        assert_eq!(gs, ws);
+                        assert_tensor_bits(gt, wt);
+                    }
+                    (
+                        Frame::ExecuteOk { seq: gs, compute_ms: gm, tensor: gt },
+                        Frame::ExecuteOk { seq: ws, compute_ms: wm, tensor: wt },
+                    ) => {
+                        assert_eq!(gs, ws);
+                        assert_eq!(gm, wm);
+                        assert_tensor_bits(gt, wt);
+                    }
+                    _ => {}
+                }
+            }
+            assert_eq!(r.pos, buf.len(), "bytes left after last frame");
+        }
+    }
+
+    #[test]
+    fn partial_writes_encode_identically() {
+        let t = Tensor::new(vec![4, 3], (0..12).map(|i| i as f32).collect())
+            .unwrap();
+        let frame = Frame::ExecuteOk { seq: 99, compute_ms: 1.5, tensor: t };
+        let mut clean = Vec::new();
+        write_frame(&mut clean, &frame).unwrap();
+        for caps in [vec![1], vec![3, 1], vec![7, 2, 5], vec![64, 1]] {
+            let mut w = TrickleWriter { out: Vec::new(), caps, i: 0 };
+            write_frame(&mut w, &frame).unwrap();
+            assert_eq!(w.out, clean, "partial-write bytes diverge");
+        }
+    }
+
+    #[test]
+    fn single_bit_flips_always_detected() {
+        // Flip every bit of every byte of several encoded frames; the
+        // reader must error on each (CRC mismatch, length violation, or
+        // EOF) — never panic, never return a frame.
+        let t = Tensor::new(vec![2, 4], (0..8).map(|i| i as f32 - 3.5).collect())
+            .unwrap();
+        let frames = vec![
+            Frame::Shutdown,
+            Frame::DeployAck { stage: 3 },
+            Frame::Execute { seq: 7, tensor: t.clone() },
+            Frame::ExecuteOk { seq: 7, compute_ms: 2.25, tensor: t },
+        ];
+        for f in &frames {
+            let mut buf = Vec::new();
+            write_frame(&mut buf, f).unwrap();
+            for byte in 0..buf.len() {
+                for bit in 0..8 {
+                    let mut corrupt = buf.clone();
+                    corrupt[byte] ^= 1 << bit;
+                    assert!(
+                        read_frame(&mut corrupt.as_slice()).is_err(),
+                        "{}: flip of byte {byte} bit {bit} decoded",
+                        f.kind_name()
+                    );
+                }
+            }
+        }
     }
 }

@@ -25,6 +25,7 @@
 //! fast instead of hanging.
 
 pub mod agent;
+pub mod chaos;
 pub mod frame;
 
 use std::collections::HashMap;
@@ -136,8 +137,15 @@ impl AgentAddr {
 
     /// Poll-connect until `timeout` elapses — agents may still be
     /// binding their listener when the coordinator starts dialing.
+    ///
+    /// Retries use jittered exponential backoff (5 ms doubling to a
+    /// 200 ms cap, scaled by a deterministic per-address jitter) so a
+    /// heal pass re-dialing many agents doesn't hammer them in
+    /// lockstep, while the schedule stays reproducible for tests.
     pub fn connect_retry(&self, timeout: Duration) -> Result<WireStream> {
         let start = Instant::now();
+        let mut rng = crate::util::rng::Rng::new(addr_seed(&self.to_string()));
+        let mut backoff_ms = 5.0f64;
         loop {
             match self.connect() {
                 Ok(s) => return Ok(s),
@@ -146,10 +154,27 @@ impl AgentAddr {
                         "agent at {self} not reachable within {timeout:?}"
                     )));
                 }
-                Err(_) => std::thread::sleep(Duration::from_millis(10)),
+                Err(_) => {
+                    let jittered = backoff_ms * (0.5 + rng.f64());
+                    let remaining = timeout.saturating_sub(start.elapsed());
+                    std::thread::sleep(
+                        Duration::from_secs_f64(jittered / 1000.0).min(remaining),
+                    );
+                    backoff_ms = (backoff_ms * 2.0).min(200.0);
+                }
             }
         }
     }
+}
+
+/// FNV-1a over the address text: a stable per-address backoff seed.
+fn addr_seed(addr: &str) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for b in addr.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
 }
 
 impl fmt::Display for AgentAddr {
@@ -173,6 +198,17 @@ impl WireStream {
         match self {
             WireStream::Unix(s) => s.try_clone().map(WireStream::Unix),
             WireStream::Tcp(s) => s.try_clone().map(WireStream::Tcp),
+        }
+    }
+
+    /// Bound how long one `read` call may block (None = block forever).
+    /// Reads that hit the bound fail with `WouldBlock`/`TimedOut`;
+    /// callers that poll (the agent's connection handlers) retry at the
+    /// `read()` level so `read_exact`'s progress is preserved.
+    pub fn set_read_timeout(&self, dur: Option<Duration>) -> io::Result<()> {
+        match self {
+            WireStream::Unix(s) => s.set_read_timeout(dur),
+            WireStream::Tcp(s) => s.set_read_timeout(dur),
         }
     }
 
@@ -556,6 +592,13 @@ pub struct WireStages {
     /// `conns[stage][replica]`; replica 0 is the stage's primary.
     conns: Vec<Vec<ReplicaConn>>,
     mirrors: Vec<VirtualNode>,
+    /// Per-execute round-trip deadline. None (the default) blocks
+    /// forever — bit-identical to the pre-deadline wire behavior. With
+    /// a budget set, a round-trip that exceeds it marks the replica
+    /// suspect (dead + socket severed) and fails that micro-batch so
+    /// the engine can retry or route around it instead of hanging on a
+    /// stalled-but-connected agent.
+    execute_timeout: Option<Duration>,
 }
 
 impl WireStages {
@@ -677,7 +720,19 @@ impl WireStages {
             }
             conns.push(stage_conns);
         }
-        Ok(WireStages { kind, conns, mirrors })
+        Ok(WireStages { kind, conns, mirrors, execute_timeout: None })
+    }
+
+    /// Builder: bound every execute round-trip by `timeout` (None keeps
+    /// the unbounded default).
+    pub fn with_execute_timeout(mut self, timeout: Option<Duration>) -> WireStages {
+        self.execute_timeout = timeout;
+        self
+    }
+
+    /// The configured per-execute deadline, if any.
+    pub fn execute_timeout(&self) -> Option<Duration> {
+        self.execute_timeout
     }
 
     /// True if any replica connection has failed.
@@ -701,40 +756,70 @@ impl WireStages {
     /// unreachable leaves its connection dead (with a warning) so the
     /// caller can try again later.
     pub fn reconnect_dead(&mut self, timeout: Duration) -> usize {
-        let mut revived = 0;
-        for (k, group) in self.conns.iter_mut().enumerate() {
-            for (r, conn) in group.iter_mut().enumerate() {
-                if !conn.dead.load(Ordering::Acquire) {
-                    continue;
-                }
-                let fresh = dial_stage(&conn.addr, &conn.spec, k, timeout)
-                    .and_then(|stream| {
-                        ReplicaConn::start(
-                            stream,
-                            conn.spec.clone(),
-                            k,
-                            r,
-                            conn.addr.clone(),
+        let dead_idx: Vec<(usize, usize)> = self
+            .conns
+            .iter()
+            .enumerate()
+            .flat_map(|(k, g)| {
+                g.iter().enumerate().filter_map(move |(r, c)| {
+                    c.dead.load(Ordering::Acquire).then_some((k, r))
+                })
+            })
+            .collect();
+        if dead_idx.is_empty() {
+            return 0;
+        }
+        // Dial every dead agent concurrently: N dead agents cost the
+        // heal watchdog one connect timeout, not N stacked timeouts.
+        let fresh: Vec<Result<ReplicaConn>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = dead_idx
+                .iter()
+                .map(|&(k, r)| {
+                    let conn = &self.conns[k][r];
+                    scope.spawn(move || {
+                        dial_stage(&conn.addr, &conn.spec, k, timeout).and_then(
+                            |stream| {
+                                ReplicaConn::start(
+                                    stream,
+                                    conn.spec.clone(),
+                                    k,
+                                    r,
+                                    conn.addr.clone(),
+                                )
+                            },
                         )
-                    });
-                match fresh {
-                    Ok(fresh) => {
-                        let mut old = std::mem::replace(conn, fresh);
-                        // The dead connection's reader already returned
-                        // (it flips `dead` on its way out); joining just
-                        // reaps the thread.
-                        old.writer_lock().shutdown();
-                        if let Some(reader) = old.reader.take() {
-                            let _ = reader.join();
-                        }
-                        revived += 1;
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join().unwrap_or_else(|_| {
+                        Err(anyhow::anyhow!("reconnect dial thread panicked"))
+                    })
+                })
+                .collect()
+        });
+        let mut revived = 0;
+        for (&(k, r), fresh) in dead_idx.iter().zip(fresh) {
+            let conn = &mut self.conns[k][r];
+            match fresh {
+                Ok(fresh) => {
+                    let mut old = std::mem::replace(conn, fresh);
+                    // The dead connection's reader already returned
+                    // (it flips `dead` on its way out); joining just
+                    // reaps the thread.
+                    old.writer_lock().shutdown();
+                    if let Some(reader) = old.reader.take() {
+                        let _ = reader.join();
                     }
-                    Err(e) => crate::log_warn!(
-                        "wire",
-                        "stage {k} replica {r}: reconnect to {} failed: {e:#}",
-                        conn.endpoint
-                    ),
+                    revived += 1;
                 }
+                Err(e) => crate::log_warn!(
+                    "wire",
+                    "stage {k} replica {r}: reconnect to {} failed: {e:#}",
+                    conn.endpoint
+                ),
             }
         }
         revived
@@ -825,9 +910,51 @@ impl StageExec for WireStages {
             tensor.recycle();
         }
         // The reader routes our reply (or the connection's death) here.
-        match rx.recv() {
+        let Some(deadline) = self.execute_timeout else {
+            return match rx.recv() {
+                Ok(res) => res,
+                Err(_) => bail!(
+                    "stage {stage} replica {replica}: agent at {} disconnected \
+                     mid-batch",
+                    conn.endpoint
+                ),
+            };
+        };
+        match rx.recv_timeout(deadline) {
             Ok(res) => res,
-            Err(_) => bail!(
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                // The round-trip blew its budget: a stalled-but-connected
+                // agent. Reclaim our slot, mark the replica suspect, and
+                // sever the socket so the reader fails everything else
+                // in flight (reconnect_dead / the heal ladder can revive
+                // it later).
+                let had_slot = pending_lock(&conn.pending).remove(&seq).is_some();
+                if !had_slot {
+                    // The reply raced the deadline: the reader already
+                    // claimed our slot, so the result is (or is about to
+                    // be) in the channel. Take it instead of killing a
+                    // healthy connection.
+                    if let Ok(res) = rx.recv_timeout(Duration::from_millis(50)) {
+                        return res;
+                    }
+                }
+                fail_conn(
+                    &conn.dead,
+                    &conn.pending,
+                    &format!(
+                        "stage {stage}: agent at {} exceeded the {deadline:?} \
+                         execute deadline",
+                        conn.endpoint
+                    ),
+                );
+                conn.writer_lock().shutdown();
+                bail!(
+                    "stage {stage} replica {replica}: no reply from {} within \
+                     {deadline:?}; marking replica suspect",
+                    conn.endpoint
+                )
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => bail!(
                 "stage {stage} replica {replica}: agent at {} disconnected \
                  mid-batch",
                 conn.endpoint
@@ -880,6 +1007,9 @@ pub struct WireConfig {
     pub artifacts_dir: PathBuf,
     /// How long to keep dialing an agent before giving up.
     pub connect_timeout: Duration,
+    /// Per-execute round-trip deadline applied to every rebuilt chain
+    /// (None = wait forever, the pre-deadline behavior).
+    pub execute_timeout: Option<Duration>,
 }
 
 impl WireConfig {
@@ -895,6 +1025,7 @@ impl WireConfig {
             params,
             artifacts_dir,
             connect_timeout: Duration::from_secs(10),
+            execute_timeout: None,
         }
     }
 }

@@ -1,0 +1,512 @@
+//! Chaos-hardening integration tests (ISSUE 10).
+//!
+//! A seeded byte-level fault proxy ([`ChaosProxy`]) sits between the
+//! coordinator and one agent and injects fragmentation, delays,
+//! corruption, and mid-frame disconnects. The contract under test:
+//! under *benign* chaos (reordered chunk boundaries, jitter) the wire
+//! chain stays bit-identical to the in-process chain; under *hostile*
+//! chaos (corruption, stalls, severs) every batch handle resolves —
+//! Ok bit-identical or Err, never a hang, never silently wrong bytes.
+//! Alongside: the agent-side stalled-client regression, the
+//! per-execute deadline, concurrent dead-replica redial, and engine
+//! straggler hedging.
+
+mod common;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use amp4ec::pipeline::engine::{
+    run_serial, HedgeConfig, PersistentEngine, PersistentEngineConfig,
+    SimStages, StageExec,
+};
+use amp4ec::runtime::Tensor;
+use amp4ec::transport::agent::{AgentHandle, NodeAgent};
+use amp4ec::transport::chaos::{ChaosProxy, ConnPlans, FaultPlan};
+use amp4ec::transport::{AgentAddr, TransportKind, WireStages};
+
+use common::harness as h;
+
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Bit-exact tensor comparison (no epsilon — chaos that only touches
+/// delivery must not perturb a single bit).
+fn assert_bits_eq(a: &Tensor, b: &Tensor, ctx: &str) {
+    assert_eq!(a.shape, b.shape, "{ctx}: shape mismatch");
+    for (i, (x, y)) in a.data().iter().zip(b.data().iter()).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{ctx}: element {i} differs: {x} vs {y}"
+        );
+    }
+}
+
+fn close_ms(a: f64, b: f64, what: &str) {
+    assert!((a - b).abs() < 1e-9, "{what}: {a} vs {b}");
+}
+
+/// Spawn `n` UDS agents on unique temp-socket paths.
+fn uds_agents(n: usize, tag: &str) -> (Vec<AgentHandle>, Vec<AgentAddr>) {
+    let dir = std::env::temp_dir();
+    let mut handles = Vec::with_capacity(n);
+    let mut addrs = Vec::with_capacity(n);
+    for i in 0..n {
+        let path =
+            dir.join(format!("amp4ec-{tag}-{}-{i}.sock", std::process::id()));
+        let agent = NodeAgent::serve_uds(&path).unwrap();
+        addrs.push(agent.addr().clone());
+        handles.push(agent);
+    }
+    (handles, addrs)
+}
+
+fn proxy_sock(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir()
+        .join(format!("amp4ec-{tag}-{}-proxy.sock", std::process::id()))
+}
+
+/// Regression: a client that connects, sends a partial frame, and then
+/// goes silent forever must not pin an exit-on-idle agent. Before the
+/// idle deadline existed, the agent's handler blocked in `read_exact`
+/// on the half-frame and `active_connections` never fell back to zero,
+/// so the accept loop span forever and a coordinator crash leaked the
+/// agent process.
+#[test]
+fn stalled_client_cannot_pin_idle_agent() {
+    let path = proxy_sock("chaos-stall-client");
+    let agent = NodeAgent::serve_uds(&path).unwrap();
+    agent.exit_when_idle(true);
+    agent.set_idle_timeout(Duration::from_millis(300));
+
+    // A raw client: half a frame header, then silence. Held open for
+    // the whole test so only the idle deadline can free the handler.
+    let client = std::os::unix::net::UnixStream::connect(&path).unwrap();
+    use std::io::Write;
+    (&client).write_all(&[0x2a, 0x00, 0x00]).unwrap();
+
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        agent.join();
+        let _ = tx.send(());
+    });
+    rx.recv_timeout(Duration::from_secs(10)).expect(
+        "agent did not exit: a stalled client pinned the idle handler",
+    );
+    drop(client);
+}
+
+/// A stalled-but-connected agent (every reply delayed ~1s by the
+/// proxy) must trip the per-execute deadline: the micro-batch fails
+/// within the budget, the replica is marked suspect, and the healthy
+/// stages keep serving.
+#[test]
+fn execute_deadline_marks_stalled_replica_suspect() {
+    let (_agents, addrs) = uds_agents(3, "chaos-deadline");
+    let proxy = ChaosProxy::start_uds(
+        proxy_sock("chaos-deadline"),
+        addrs[1].clone(),
+        vec![ConnPlans {
+            to_upstream: FaultPlan::clean(0xD1),
+            to_client: FaultPlan::clean(0xD2).with_delays(1.0, 900.0, 1100.0),
+        }],
+    )
+    .unwrap();
+    let wired = vec![addrs[0].clone(), proxy.addr().clone(), addrs[2].clone()];
+    let wire =
+        WireStages::connect_sim(&wired, h::PAPER_SHARES, 2.0, CONNECT_TIMEOUT)
+            .unwrap()
+            .with_execute_timeout(Some(Duration::from_millis(250)));
+
+    let input = h::seeded_input(2, 3, 5);
+    let reference = SimStages::heterogeneous(h::PAPER_SHARES, 2.0);
+
+    // Healthy stage first: the deadline must not perturb fast paths.
+    let (out0, ms0) = wire.execute_on(0, 0, input.clone()).unwrap();
+    let (ref0, ref_ms0) = reference.execute(0, input.clone()).unwrap();
+    assert_bits_eq(&out0, &ref0, "stage 0 under a deadline");
+    assert_eq!(ms0.to_bits(), ref_ms0.to_bits());
+
+    // The stalled stage: fails within the budget (plus slack), marked
+    // suspect — not a hang, not a 1s wait per micro-batch forever.
+    let t0 = Instant::now();
+    let err = wire
+        .execute_on(1, 0, input.clone())
+        .expect_err("stalled replica must blow the execute deadline");
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "deadline took {:?} to fire",
+        t0.elapsed()
+    );
+    assert!(
+        format!("{err:#}").contains("suspect"),
+        "wrong failure surfaced: {err:#}"
+    );
+    assert!(wire.any_dead(), "deadline breach must mark the replica dead");
+    assert!(!wire.replica_alive(1, 0));
+
+    // Unaffected stages still serve after the breach.
+    let (out2, _) = wire.execute_on(2, 0, input.clone()).unwrap();
+    let (ref2, _) = reference.execute(2, input).unwrap();
+    assert_bits_eq(&out2, &ref2, "stage 2 after the breach");
+    proxy.stop();
+}
+
+/// Benign chaos — adversarial fragmentation plus small random delays
+/// in both directions on one stage's connection — must be invisible:
+/// outputs and simulated timing bit-identical to the in-process chain,
+/// zero hangs, no replica marked dead.
+#[test]
+fn fragmented_jittery_link_is_bit_transparent_uds() {
+    let (_agents, addrs) = uds_agents(3, "chaos-benign");
+    let proxy = ChaosProxy::start_uds(
+        proxy_sock("chaos-benign"),
+        addrs[1].clone(),
+        vec![ConnPlans {
+            to_upstream: FaultPlan::clean(0xB1)
+                .with_fragmentation(9)
+                .with_delays(0.2, 0.0, 2.0),
+            to_client: FaultPlan::clean(0xB2)
+                .with_fragmentation(9)
+                .with_delays(0.2, 0.0, 2.0),
+        }],
+    )
+    .unwrap();
+    let wired = vec![addrs[0].clone(), proxy.addr().clone(), addrs[2].clone()];
+    let wire = Arc::new(
+        WireStages::connect_sim(&wired, h::PAPER_SHARES, 2.0, CONNECT_TIMEOUT)
+            .unwrap(),
+    );
+    assert_eq!(wire.kind(), TransportKind::Uds);
+
+    // Watchdog: the chaotic runs happen on a worker thread so a hang
+    // surfaces as a recv timeout instead of a stuck test binary.
+    let chaotic = Arc::clone(&wire);
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        let engine = h::engine(chaotic, 4);
+        let runs: Vec<_> = (0..3u64)
+            .map(|seed| {
+                engine.run(&h::seeded_input(5, 3, 900 + seed)).unwrap()
+            })
+            .collect();
+        let _ = tx.send(runs);
+    });
+    let runs = rx
+        .recv_timeout(Duration::from_secs(60))
+        .expect("benign chaos must not hang the wire engine");
+
+    let local = h::engine(h::paper_stages(2.0), 4);
+    for (seed, w) in runs.iter().enumerate() {
+        let l = local.run(&h::seeded_input(5, 3, 900 + seed as u64)).unwrap();
+        assert_bits_eq(&w.output, &l.output, "fragmented uds output");
+        close_ms(w.timing.total_ms, l.timing.total_ms, "total_ms");
+        close_ms(w.timing.compute_ms, l.timing.compute_ms, "compute_ms");
+        close_ms(w.timing.comm_ms, l.timing.comm_ms, "comm_ms");
+    }
+    assert!(!wire.any_dead(), "benign chaos must not kill a replica");
+    proxy.stop();
+}
+
+/// Same transparency contract over TCP (Nagle, kernel buffering, and
+/// the proxy's re-chunking all in play).
+#[test]
+fn fragmented_jittery_link_is_bit_transparent_tcp() {
+    let a0 = NodeAgent::serve_tcp("127.0.0.1:0").unwrap();
+    let a1 = NodeAgent::serve_tcp("127.0.0.1:0").unwrap();
+    let a2 = NodeAgent::serve_tcp("127.0.0.1:0").unwrap();
+    let proxy = ChaosProxy::start_tcp(
+        "127.0.0.1:0",
+        a1.addr().clone(),
+        vec![ConnPlans {
+            to_upstream: FaultPlan::clean(0xC1).with_fragmentation(7),
+            to_client: FaultPlan::clean(0xC2)
+                .with_fragmentation(7)
+                .with_delays(0.15, 0.0, 2.0),
+        }],
+    )
+    .unwrap();
+    let wired =
+        vec![a0.addr().clone(), proxy.addr().clone(), a2.addr().clone()];
+    let wire = Arc::new(
+        WireStages::connect_sim(&wired, h::PAPER_SHARES, 2.0, CONNECT_TIMEOUT)
+            .unwrap(),
+    );
+    assert_eq!(wire.kind(), TransportKind::Tcp);
+
+    let chaotic = Arc::clone(&wire);
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        let engine = h::engine(chaotic, 4);
+        let run = engine.run(&h::seeded_input(6, 2, 77)).unwrap();
+        let _ = tx.send(run);
+    });
+    let w = rx
+        .recv_timeout(Duration::from_secs(60))
+        .expect("benign chaos must not hang the tcp wire engine");
+    let l = h::engine(h::paper_stages(2.0), 4)
+        .run(&h::seeded_input(6, 2, 77))
+        .unwrap();
+    assert_bits_eq(&w.output, &l.output, "fragmented tcp output");
+    close_ms(w.timing.total_ms, l.timing.total_ms, "total_ms");
+    assert!(!wire.any_dead());
+    proxy.stop();
+}
+
+/// Hostile chaos: scheduled bit-flips on the coordinator->agent stream
+/// well past the handshake. The CRC layer must turn corruption into a
+/// connection error — every handle resolves (no hangs), whatever
+/// completes is bit-identical, at least one batch fails, and the
+/// poisoned replica is marked dead. Silently wrong output anywhere is
+/// the one unacceptable outcome. The execute deadline backstops the
+/// one corruption CRC cannot catch promptly: a flipped *length* byte
+/// that leaves the agent waiting for a frame that never finishes.
+#[test]
+fn scheduled_corruption_fails_batches_never_corrupts_outputs() {
+    let (_agents, addrs) = uds_agents(3, "chaos-corrupt");
+    let proxy = ChaosProxy::start_uds(
+        proxy_sock("chaos-corrupt"),
+        addrs[1].clone(),
+        vec![ConnPlans {
+            to_upstream: FaultPlan::clean(0xE1)
+                .with_corruption_at(vec![900, 1400]),
+            to_client: FaultPlan::clean(0xE2),
+        }],
+    )
+    .unwrap();
+    let wired = vec![addrs[0].clone(), proxy.addr().clone(), addrs[2].clone()];
+    let wire = Arc::new(
+        WireStages::connect_sim(&wired, h::PAPER_SHARES, 2.0, CONNECT_TIMEOUT)
+            .unwrap()
+            .with_execute_timeout(Some(Duration::from_secs(2))),
+    );
+
+    let engine = h::engine(Arc::clone(&wire), 2);
+    let inputs: Vec<Tensor> =
+        (0..6u64).map(|seed| h::seeded_input(5, 3, 300 + seed)).collect();
+    let handles: Vec<_> =
+        inputs.iter().map(|t| engine.submit(t).unwrap()).collect();
+
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        let results: Vec<anyhow::Result<Tensor>> = handles
+            .into_iter()
+            .map(|handle| handle.wait().map(|run| run.output))
+            .collect();
+        let _ = tx.send(results);
+    });
+    let results = rx
+        .recv_timeout(Duration::from_secs(30))
+        .expect("batch handles hung after stream corruption");
+    assert_eq!(results.len(), 6);
+    assert!(
+        results.iter().any(|r| r.is_err()),
+        "scheduled corruption must fail at least one batch"
+    );
+
+    let local = h::engine(h::paper_stages(2.0), 2);
+    for (i, r) in results.iter().enumerate() {
+        if let Ok(out) = r {
+            let golden = local.run(&inputs[i]).unwrap();
+            assert_bits_eq(
+                out,
+                &golden.output,
+                &format!("batch {i} completed across a corrupting link"),
+            );
+        }
+    }
+    assert!(wire.any_dead(), "the corrupted connection must be marked dead");
+    proxy.stop();
+}
+
+/// `reconnect_dead` dials every dead replica concurrently: with two
+/// unreachable agents and an 800 ms per-dial budget, the whole sweep
+/// must finish in about one budget, not two (the serial sweep's lower
+/// bound).
+#[test]
+fn reconnect_dead_dials_replicas_concurrently() {
+    let (agents, addrs) = uds_agents(2, "chaos-redial");
+    let mut wire =
+        WireStages::connect_sim(&addrs, &[1.0, 0.6], 2.0, CONNECT_TIMEOUT)
+            .unwrap()
+            .with_execute_timeout(Some(Duration::from_secs(1)));
+
+    // Kill and reap both agents (removes their socket files, so each
+    // redial fails immediately and retries until its budget expires).
+    for agent in &agents {
+        agent.kill();
+    }
+    drop(agents);
+
+    // Force both connections to notice: the reader threads see EOF and
+    // mark the replicas dead; a nudge execute bounds the wait.
+    let input = h::seeded_input(1, 3, 1);
+    for stage in 0..2 {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while wire.replica_alive(stage, 0) {
+            let _ = wire.execute_on(stage, 0, input.clone());
+            assert!(
+                Instant::now() < deadline,
+                "stage {stage} never noticed its agent died"
+            );
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    }
+
+    let budget = Duration::from_millis(800);
+    let t0 = Instant::now();
+    let revived = wire.reconnect_dead(budget);
+    let elapsed = t0.elapsed();
+    assert_eq!(revived, 0, "agents are gone; nothing should revive");
+    assert!(
+        elapsed >= Duration::from_millis(700),
+        "both dials should run their budget: {elapsed:?}"
+    );
+    assert!(
+        elapsed < Duration::from_millis(1450),
+        "dials ran serially: {elapsed:?} for two 800 ms budgets"
+    );
+    assert!(wire.any_dead());
+}
+
+/// Replica-aware straggler wrapper: once armed, every execution on one
+/// lane stalls for `lag` of wall clock (the result is still correct —
+/// a straggler, not a fault).
+struct LaggyStages {
+    inner: SimStages,
+    lane: (usize, usize),
+    lag: Duration,
+    armed: Arc<AtomicBool>,
+}
+
+impl StageExec for LaggyStages {
+    fn num_stages(&self) -> usize {
+        self.inner.num_stages()
+    }
+
+    fn node_id(&self, stage: usize) -> usize {
+        self.inner.node_id(stage)
+    }
+
+    fn comm_in(&self, stage: usize, bytes: u64) -> f64 {
+        self.inner.comm_in(stage, bytes)
+    }
+
+    fn comm_out(&self, bytes: u64) -> f64 {
+        self.inner.comm_out(bytes)
+    }
+
+    fn execute(&self, stage: usize, input: Tensor) -> anyhow::Result<(Tensor, f64)> {
+        self.execute_on(stage, 0, input)
+    }
+
+    fn replicas(&self, stage: usize) -> usize {
+        self.inner.replicas(stage)
+    }
+
+    fn replica_node_id(&self, stage: usize, replica: usize) -> usize {
+        self.inner.replica_node_id(stage, replica)
+    }
+
+    fn comm_in_on(&self, stage: usize, replica: usize, bytes: u64) -> f64 {
+        self.inner.comm_in_on(stage, replica, bytes)
+    }
+
+    fn execute_on(
+        &self,
+        stage: usize,
+        replica: usize,
+        input: Tensor,
+    ) -> anyhow::Result<(Tensor, f64)> {
+        if (stage, replica) == self.lane && self.armed.load(Ordering::SeqCst) {
+            std::thread::sleep(self.lag);
+        }
+        self.inner.execute_on(stage, replica, input)
+    }
+}
+
+/// Straggler hedging: after the per-stage latency estimate warms up,
+/// one lane of the replicated stage turns into a straggler (correct
+/// but slow). The engine must reissue its micro-batches to the healthy
+/// sibling, count wins, and keep outputs bit-identical to the serial
+/// reference — first-completion-wins is a pure scheduling change.
+#[test]
+fn hedging_reissues_straggler_micro_batches() {
+    let shares = [1.0, 0.25, 1.0];
+    let armed = Arc::new(AtomicBool::new(false));
+    let stages = LaggyStages {
+        inner: SimStages::with_replicas(&shares, 1.0, &[1, 2, 1]),
+        lane: (1, 0),
+        lag: Duration::from_millis(250),
+        armed: Arc::clone(&armed),
+    };
+    let engine = PersistentEngine::new(
+        Arc::new(stages),
+        PersistentEngineConfig {
+            micro_batch_rows: 1,
+            initial_depth: 4,
+            adaptive: None,
+            // min_ms floors the threshold well above scheduler jitter
+            // on a loaded CI box, while the 250 ms straggler still
+            // overshoots it 5x.
+            hedge: Some(HedgeConfig {
+                factor: 3.0,
+                min_ms: 50.0,
+                min_samples: 2,
+            }),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    let input = h::seeded_input(6, 4, 0xAB);
+    let golden = run_serial(&SimStages::heterogeneous(&shares, 1.0), &input, 1)
+        .unwrap()
+        .output;
+
+    // Warm the estimator on the healthy chain.
+    for _ in 0..2 {
+        let run = engine.submit(&input).unwrap().wait().unwrap();
+        assert_bits_eq(&run.output, &golden, "warmup batch");
+    }
+    assert_eq!(engine.hedge_stats().issued, 0, "no hedges on a healthy chain");
+
+    // Arm the straggler and drive more batches through, with a
+    // watchdog so a deadlocked hedge path cannot stick the test.
+    armed.store(true, Ordering::SeqCst);
+    let (tx, rx) = mpsc::channel();
+    let handles: Vec<_> =
+        (0..3).map(|_| engine.submit(&input).unwrap()).collect();
+    std::thread::spawn(move || {
+        let outs: Vec<anyhow::Result<Tensor>> = handles
+            .into_iter()
+            .map(|hdl| hdl.wait().map(|run| run.output))
+            .collect();
+        let _ = tx.send(outs);
+    });
+    let outs = rx
+        .recv_timeout(Duration::from_secs(60))
+        .expect("hedged batches hung");
+    for (i, out) in outs.into_iter().enumerate() {
+        let out = out.unwrap_or_else(|e| {
+            panic!("hedged batch {i} failed: {e:#}")
+        });
+        assert_bits_eq(&out, &golden, &format!("hedged batch {i}"));
+    }
+
+    let stats = engine.hedge_stats();
+    assert!(
+        stats.issued >= 1,
+        "straggler lane must trigger at least one hedge: {stats:?}"
+    );
+    assert!(
+        stats.wins >= 1,
+        "the healthy sibling should win at least once: {stats:?}"
+    );
+    assert_eq!(
+        stats.issued,
+        stats.wins + stats.wasted,
+        "every hedge resolves as a win or a waste: {stats:?}"
+    );
+}
